@@ -1,0 +1,88 @@
+//! `cargo bench --bench paper_tables` — regenerates the paper's analytic
+//! tables (Table 1 FLOPs, Table 2 simulated ms/step) and micro-benchmarks
+//! the L3 substrates on the hot path: routing mirror, gate softmax, data
+//! pipeline, simulator, and the metric sinks.
+//!
+//! criterion is unavailable offline; this uses the in-tree harness
+//! (`m6t::util::bench`) with calibrated iteration counts.
+
+use m6t::cluster::{simulate_step, table2_hardware};
+use m6t::config::{paper, CapacityMode, Routing};
+use m6t::data::{AttributeSpace, Batcher, Generator, Split};
+use m6t::experiments::{table1, table2};
+use m6t::moe::router::softmax_gates;
+use m6t::moe::{route, RouterSpec};
+use m6t::util::bench::{bench, bench_slow};
+use m6t::util::rng::Rng;
+
+fn main() {
+    println!("== paper tables (analytic) ==\n");
+    print!("{}", table1::run(None).render());
+    print!("{}", table2::run().render());
+    print!("{}", table2::comparison().render());
+
+    println!("\n== L3 micro-benchmarks ==\n");
+    let mut results = Vec::new();
+
+    // routing mirror at paper-base geometry: T=1024, E=32, C=40
+    let tokens = 1024;
+    let experts = 32;
+    let mut rng = Rng::new(1);
+    let logits: Vec<f32> = (0..tokens * experts).map(|_| rng.normal() as f32).collect();
+    let gates1 = softmax_gates(&logits, tokens, experts, 1);
+    let gates2 = softmax_gates(&logits, tokens, experts, 2);
+    for (name, gates, routing) in [
+        ("route/top1/T1024xE32", &gates1, Routing::TopK(1)),
+        ("route/top2/T1024xE32", &gates1, Routing::TopK(2)),
+        ("route/top4/T1024xE32", &gates1, Routing::TopK(4)),
+        ("route/2top1/T1024xE32", &gates2, Routing::Prototype(2)),
+        ("route/4top1/T1024xE32", &gates2, Routing::Prototype(4)),
+    ] {
+        let spec = RouterSpec { routing, num_experts: experts, capacity: 40 };
+        results.push(bench(name, || {
+            std::hint::black_box(route(gates, tokens, &spec));
+        }));
+    }
+
+    results.push(bench("softmax_gates/T1024xE32", || {
+        std::hint::black_box(softmax_gates(&logits, tokens, experts, 1));
+    }));
+
+    // synthetic corpus generator + batcher
+    let space = AttributeSpace::new(32, 2048, 7);
+    let gen = Generator::new(space, 16, 48, 7);
+    let mut idx = 0u64;
+    results.push(bench("corpus/example", || {
+        idx += 1;
+        std::hint::black_box(gen.example(Split::Train, idx));
+    }));
+    let space2 = AttributeSpace::new(32, 2048, 7);
+    let mut batcher = Batcher::new(Generator::new(space2, 16, 48, 7), Split::Train, 8);
+    results.push(bench("corpus/batch8", || {
+        std::hint::black_box(batcher.next_batch());
+    }));
+
+    // cluster simulator over all Table-2 cells
+    let hw = table2_hardware();
+    let ten_b = paper::ten_b();
+    results.push(bench("cluster/simulate_step/10B", || {
+        std::hint::black_box(simulate_step(
+            &ten_b,
+            Routing::Prototype(2),
+            CapacityMode::Times1,
+            &hw,
+        ));
+    }));
+
+    // scaling-law fit on a 200-point curve
+    let steps: Vec<f64> = (1..200).map(|i| i as f64 * 5.0).collect();
+    let losses: Vec<f64> = steps.iter().map(|&s| 2.0 + 5.0 * s.powf(-0.4)).collect();
+    results.push(bench_slow("scaling/fit_power_law/200pts", || {
+        std::hint::black_box(m6t::scaling::fit_power_law(&steps, &losses));
+    }));
+
+    println!();
+    for r in &results {
+        println!("{}", r.report());
+    }
+}

@@ -1,0 +1,88 @@
+//! What-if explorer for the cluster simulator: sweep worker counts,
+//! capacity factors, and routing strategies at paper scale and print the
+//! simulated step-time breakdowns — the tool you would use to plan a
+//! 480-GPU run like the paper's §4 before buying the GPUs.
+//!
+//! ```bash
+//! cargo run --release --example cluster_whatif -- [model]   # base|10B|100B|250B|1T
+//! ```
+
+use anyhow::Result;
+use m6t::cluster::{simulate_step, table2_hardware};
+use m6t::config::{paper, CapacityMode, Routing};
+use m6t::util::table::{f1, Table};
+
+fn main() -> Result<()> {
+    let model = std::env::args().nth(1).unwrap_or_else(|| "1T".to_string());
+    let cfg = paper::by_name(&model)
+        .ok_or_else(|| anyhow::anyhow!("unknown preset {model:?} (base|10B|100B|250B|1T)"))?;
+    let hw = table2_hardware();
+
+    println!(
+        "model {} — {:.1}B params on {} workers\n",
+        cfg.name,
+        cfg.param_count() as f64 / 1e9,
+        cfg.workers
+    );
+
+    let mut t = Table::new(
+        format!("simulated step breakdown ({model}, capacity 1x)"),
+        &["strategy", "gate", "a2a", "expert", "disp/comb", "allreduce", "total ms"],
+    );
+    for r in [
+        Routing::TopK(1),
+        Routing::TopK(2),
+        Routing::TopK(4),
+        Routing::Prototype(2),
+        Routing::Prototype(4),
+    ] {
+        let s = simulate_step(&cfg, r, CapacityMode::Times1, &hw);
+        t.row(vec![
+            r.name(),
+            f1(s.gating_ms),
+            f1(s.a2a_ms),
+            f1(s.expert_ms),
+            f1(s.dispatch_combine_ms),
+            f1(s.allreduce_ms),
+            f1(s.total_ms()),
+        ]);
+    }
+    print!("{}", t.render());
+
+    // capacity-factor sweep: the paper's gamma=1.25 buffer vs alternatives
+    let mut c = Table::new(
+        "capacity-factor sweep (top-2, capacity kx)",
+        &["gamma", "expert ms", "a2a ms", "total ms"],
+    );
+    for gamma in [1.0, 1.25, 1.5, 2.0] {
+        let mut cfg2 = cfg.clone();
+        cfg2.capacity_factor = gamma;
+        let s = simulate_step(&cfg2, Routing::TopK(2), CapacityMode::TimesK, &hw);
+        c.row(vec![
+            format!("{gamma:.2}"),
+            f1(s.expert_ms),
+            f1(s.a2a_ms),
+            f1(s.total_ms()),
+        ]);
+    }
+    print!("{}", c.render());
+
+    // worker scaling: how step time moves from 8 to 480 workers
+    let mut w = Table::new(
+        "worker scaling (2top1, capacity 1x)",
+        &["workers", "a2a ms", "allreduce ms", "total ms"],
+    );
+    for workers in [8usize, 16, 64, 128, 240, 480] {
+        let mut cfg3 = cfg.clone();
+        cfg3.workers = workers;
+        let s = simulate_step(&cfg3, Routing::Prototype(2), CapacityMode::Times1, &hw);
+        w.row(vec![
+            workers.to_string(),
+            f1(s.a2a_ms),
+            f1(s.allreduce_ms),
+            f1(s.total_ms()),
+        ]);
+    }
+    print!("{}", w.render());
+    Ok(())
+}

@@ -1,0 +1,51 @@
+//! Quickstart: load a variant, train briefly, evaluate, inspect balance.
+//!
+//! ```bash
+//! make artifacts && cargo run --release --example quickstart
+//! ```
+
+use anyhow::Result;
+use m6t::coordinator::{TrainOptions, Trainer};
+use m6t::runtime::{Engine, Manifest};
+
+fn main() -> Result<()> {
+    // 1. the artifact manifest: every variant python lowered for us
+    let manifest = Manifest::load("artifacts")?;
+    println!("{} runnable variants", manifest.variants.len());
+
+    // 2. a PJRT CPU engine + one compiled variant
+    let engine = Engine::cpu()?;
+    let info = manifest.variant("base-sim")?;
+    println!(
+        "base-sim: {:.1}M params, {} experts, routing {}, capacity {}",
+        info.param_count as f64 / 1e6,
+        info.config.num_experts,
+        info.config.routing.name(),
+        info.capacity,
+    );
+    let runtime = engine.load(info)?;
+    println!("compiled in {:.1}s on {}", runtime.compile_seconds, engine.platform());
+
+    // 3. train 30 steps on the synthetic multimodal corpus
+    let opts = TrainOptions { steps: 30, verbose: false, ..Default::default() };
+    let trainer = Trainer::new(&engine, runtime, opts);
+    let (outcome, state) = trainer.train()?;
+    println!(
+        "loss {:.4} -> {:.4} over {} steps",
+        outcome.log.records.first().map(|r| r.loss).unwrap_or(f64::NAN),
+        outcome.log.tail_loss(5),
+        outcome.log.records.len()
+    );
+
+    // 4. held-out PPL (the paper's downstream metric) + expert balance
+    let ppl = trainer.eval_ppl(&state, 8)?;
+    println!("eval PPL: {ppl:.2}");
+    if let Some(last) = outcome.log.last() {
+        println!(
+            "per-layer load c_v: {:?}",
+            last.cv_per_layer.iter().map(|c| format!("{c:.2}")).collect::<Vec<_>>()
+        );
+        println!("dropped tokens last step: {}", last.dropped);
+    }
+    Ok(())
+}

@@ -1,0 +1,5 @@
+"""Build-time python package: JAX model (L2) + Pallas kernels (L1) + AOT lowering.
+
+Never imported at runtime -- `make artifacts` lowers everything to HLO text
+that the rust coordinator loads via PJRT.
+"""

@@ -1,0 +1,182 @@
+"""AOT lowering: JAX (L2+L1) -> HLO text artifacts + manifest for rust (L3).
+
+For every variant in :data:`compile.config.VARIANTS` this emits
+
+    artifacts/<variant>/init.hlo.txt   seed -> flat train state
+    artifacts/<variant>/step.hlo.txt   (state..., step, patches, tokens)
+                                        -> (state'..., loss, aux, gnorm,
+                                            load, dropped)
+    artifacts/<variant>/eval.hlo.txt   (params..., patches, tokens)
+                                        -> (sum_nll, token_count)
+
+plus a single ``artifacts/manifest.json`` describing the flat buffer
+orders, shapes, and dtypes so the coordinator can wire device buffers
+without ever reconstructing the pytree.
+
+HLO *text* (not serialized HloModuleProto) is the interchange format: jax
+>= 0.5 emits protos with 64-bit instruction ids that the xla crate's
+xla_extension 0.5.1 rejects; the text parser reassigns ids and round-trips
+cleanly (see /opt/xla-example/README.md).
+
+Usage:  python -m compile.aot [--out DIR] [--variant NAME ...] [--force]
+"""
+
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import hashlib
+import json
+import os
+import sys
+import time
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from . import config as cfglib
+from . import train
+
+
+def to_hlo_text(lowered) -> str:
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def _leaf_specs(tree) -> list[dict]:
+    """Flatten a pytree of ShapeDtypeStruct/arrays into manifest entries."""
+    leaves_with_paths = jax.tree_util.tree_flatten_with_path(tree)[0]
+    out = []
+    for path, leaf in leaves_with_paths:
+        name = "/".join(
+            str(getattr(p, "key", getattr(p, "idx", getattr(p, "name", p))))
+            for p in path
+        )
+        out.append(
+            {
+                "name": name,
+                "shape": list(leaf.shape),
+                "dtype": jnp.dtype(leaf.dtype).name,
+            }
+        )
+    return out
+
+
+def _eval_state(fn, *args):
+    """jax.eval_shape wrapper returning the abstract output pytree."""
+    return jax.eval_shape(fn, *args)
+
+
+def lower_variant(cfg: cfglib.ModelConfig, out_dir: str) -> dict:
+    """Lower init/step/eval for one config; returns its manifest entry."""
+    os.makedirs(out_dir, exist_ok=True)
+    patches_spec, tokens_spec = train.batch_specs(cfg)
+    seed_spec = jax.ShapeDtypeStruct((), jnp.int32)
+    step_spec = jax.ShapeDtypeStruct((), jnp.int32)
+
+    init = train.init_fn(cfg)
+    state_abs = _eval_state(init, seed_spec)  # (params, opt)
+    params_abs, opt_abs = state_abs
+    n_params = len(jax.tree_util.tree_leaves(params_abs))
+    n_opt = len(jax.tree_util.tree_leaves(opt_abs))
+
+    t0 = time.time()
+    init_hlo = to_hlo_text(jax.jit(init).lower(seed_spec))
+
+    step_fn = train.train_step_fn(cfg)
+    step_hlo = to_hlo_text(
+        jax.jit(step_fn).lower(params_abs, opt_abs, step_spec, patches_spec, tokens_spec)
+    )
+
+    eval_fn = train.eval_step_fn(cfg)
+    eval_hlo = to_hlo_text(jax.jit(eval_fn).lower(params_abs, patches_spec, tokens_spec))
+    lower_s = time.time() - t0
+
+    files = {"init": "init.hlo.txt", "step": "step.hlo.txt", "eval": "eval.hlo.txt"}
+    for key, fname in files.items():
+        text = {"init": init_hlo, "step": step_hlo, "eval": eval_hlo}[key]
+        with open(os.path.join(out_dir, fname), "w") as f:
+            f.write(text)
+
+    entry = {
+        "config": dataclasses.asdict(cfg),
+        "files": files,
+        "n_params": n_params,
+        "n_opt": n_opt,
+        "n_state": n_params + n_opt,
+        "param_count": cfg.param_count(),
+        "capacity": cfg.capacity,
+        "state_leaves": _leaf_specs(state_abs),
+        # step extra inputs after the state: step scalar, patches, tokens
+        "step_inputs": _leaf_specs((step_spec, patches_spec, tokens_spec)),
+        # step extra outputs after the new state
+        "step_outputs": [
+            {"name": "loss", "shape": [], "dtype": "float32"},
+            {"name": "aux_loss", "shape": [], "dtype": "float32"},
+            {"name": "grad_norm", "shape": [], "dtype": "float32"},
+            {"name": "load", "shape": [cfg.layers, cfg.num_experts], "dtype": "float32"},
+            {"name": "dropped", "shape": [cfg.layers], "dtype": "float32"},
+        ],
+        "eval_outputs": [
+            {"name": "sum_nll", "shape": [], "dtype": "float32"},
+            {"name": "token_count", "shape": [], "dtype": "float32"},
+        ],
+        "lower_seconds": round(lower_s, 2),
+    }
+    return entry
+
+
+def _config_fingerprint(cfg: cfglib.ModelConfig) -> str:
+    return hashlib.sha256(cfg.to_json().encode()).hexdigest()[:16]
+
+
+def main(argv=None) -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out", default="../artifacts")
+    ap.add_argument("--variant", action="append", default=None,
+                    help="lower only these variants (default: all)")
+    ap.add_argument("--force", action="store_true",
+                    help="re-lower even if the fingerprint matches")
+    args = ap.parse_args(argv)
+
+    os.makedirs(args.out, exist_ok=True)
+    manifest_path = os.path.join(args.out, "manifest.json")
+    manifest = {"variants": {}}
+    if os.path.exists(manifest_path):
+        with open(manifest_path) as f:
+            try:
+                manifest = json.load(f)
+            except json.JSONDecodeError:
+                manifest = {"variants": {}}
+
+    names = args.variant or sorted(cfglib.VARIANTS)
+    for name in names:
+        cfg = cfglib.get(name)
+        fp = _config_fingerprint(cfg)
+        prev = manifest["variants"].get(name)
+        out_dir = os.path.join(args.out, name)
+        complete = prev is not None and all(
+            os.path.exists(os.path.join(out_dir, f))
+            for f in prev.get("files", {}).values()
+        )
+        if complete and prev.get("fingerprint") == fp and not args.force:
+            print(f"[aot] {name}: up to date")
+            continue
+        print(f"[aot] lowering {name} ...", flush=True)
+        entry = lower_variant(cfg, out_dir)
+        entry["fingerprint"] = fp
+        manifest["variants"][name] = entry
+        with open(manifest_path, "w") as f:
+            json.dump(manifest, f, indent=1)
+        print(f"[aot] {name}: done in {entry['lower_seconds']}s "
+              f"({entry['param_count']/1e6:.1f}M params)")
+
+    print(f"[aot] manifest at {manifest_path} ({len(manifest['variants'])} variants)")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,281 @@
+"""Model / experiment configuration for the M6-T reproduction.
+
+One :class:`ModelConfig` fully determines a lowered HLO variant: the
+transformer shape, the MoE routing strategy (top-k vs k-top-1 expert
+prototyping), the expert-capacity policy, the optimizer, and the batch
+geometry.  ``VARIANTS`` is the registry that ``aot.py`` lowers and that the
+rust coordinator addresses by name; pytest sweeps the same registry so the
+artifacts rust loads are exactly the configurations that were tested.
+
+Paper reference: Table 5 (hyperparameters), Sec. 2 (capacity, Eq. 2),
+Sec. 3.3 (expert prototyping, Eq. 3), Sec. 4 (1T recipe).  The ``*-sim``
+configs are downscaled twins of the paper's base/10B rows that train in
+seconds-to-minutes on a single CPU core; DESIGN.md §2 documents the
+substitution.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import json
+import math
+from typing import Dict, Optional, Tuple
+
+PAD_ID = 0
+BOS_ID = 1
+EOS_ID = 2
+
+
+@dataclasses.dataclass(frozen=True)
+class Routing:
+    """Routing strategy for every MoE layer.
+
+    ``kind`` is one of:
+      * ``"topk"``       — GShard-style top-k over all ``num_experts``
+                           (k sequential argmax rounds; Sec. 3.2).
+      * ``"prototype"``  — k top-1 expert prototyping (Sec. 3.3, Eq. 3):
+                           experts are split into ``k`` prototypes of
+                           ``num_experts // k`` experts, one top-1 router
+                           per prototype, outputs summed.
+    ``k`` is the number of activated experts per token in both cases.
+    """
+
+    kind: str = "topk"
+    k: int = 1
+
+    def __post_init__(self) -> None:
+        if self.kind not in ("topk", "prototype"):
+            raise ValueError(f"unknown routing kind {self.kind!r}")
+        if self.k < 1:
+            raise ValueError("k must be >= 1")
+
+    @property
+    def name(self) -> str:
+        if self.kind == "topk":
+            return f"top{self.k}"
+        return f"{self.k}top1"
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelConfig:
+    """Everything needed to build + lower one experiment variant."""
+
+    name: str = "base-sim"
+    # --- transformer geometry -------------------------------------------
+    vocab_size: int = 2048
+    hidden: int = 128           # M in the paper's notation
+    intermediate: int = 512     # I
+    layers: int = 4
+    heads: int = 4
+    head_dim: int = 32
+    patch_dim: int = 32         # synthetic ResNet-patch feature width
+    # --- MoE --------------------------------------------------------------
+    num_experts: int = 16       # E (N in Sec. 2)
+    routing: Routing = dataclasses.field(default_factory=Routing)
+    capacity_factor: float = 1.25   # gamma in Eq. 2
+    capacity_mode: str = "k"        # "k" => C = k*T/N*gamma ; "1" => C = T/N*gamma
+    aux_loss_coef: float = 0.0      # 0 disables the balancing loss (Sec. 3.1)
+    moe_attention: bool = False     # Sec. 3.4
+    attn_num_experts: int = 8       # experts for Q/K/V/O MoE when enabled
+    # --- batch geometry ----------------------------------------------------
+    # Downscale note (DESIGN.md §2): the sim twins use batch=4 and a short
+    # warmup/larger lr so that 150-300-step runs on one CPU core land in the
+    # differentiated regime the paper reaches after thousands of GPU steps.
+    batch: int = 4              # B (per-"GPU" in the paper; single host here)
+    patches: int = 16           # P image patches per example (paper: 4x4)
+    text_len: int = 48          # L
+    # --- optimization -------------------------------------------------------
+    optimizer: str = "adamw"    # "adamw" | "adafactor" (paper 1T recipe)
+    lr: float = 1e-3            # paper uses 8e-5 at hidden=1024; scaled up for the tiny twins
+    warmup: int = 50            # paper: 500
+    weight_decay: float = 0.01
+    grad_clip: float = 1.0
+    init_std: float = 0.02      # BERT init; 0.002 for the 1T recipe
+    dropout: float = 0.0        # paper uses 0.1; off by default for clean curves
+    # --- lowering -------------------------------------------------------------
+    scan_layers: bool = True    # scan over stacked layer params vs unroll
+
+    # ------------------------------------------------------------------ helpers
+    @property
+    def seq_len(self) -> int:
+        """Total sequence length S = patches + text."""
+        return self.patches + self.text_len
+
+    @property
+    def tokens_per_batch(self) -> int:
+        """T in the paper's notation (Eq. 2)."""
+        return self.batch * self.seq_len
+
+    @property
+    def capacity(self) -> int:
+        """Per-expert capacity C (Eq. 2) under the configured policy.
+
+        ``capacity_mode == "k"`` is the paper's "Capacity kx": C scales
+        with the number of activated experts.  ``"1"`` is "Capacity 1x":
+        every strategy gets the top-1 budget, equalizing FLOPs (Table 1).
+        """
+        k_eff = self.routing.k if self.capacity_mode == "k" else 1
+        c = k_eff * self.tokens_per_batch / self.num_experts * self.capacity_factor
+        return max(1, int(math.ceil(c)))
+
+    @property
+    def prototypes(self) -> int:
+        """Z: number of parallel routers (1 for top-k)."""
+        return self.routing.k if self.routing.kind == "prototype" else 1
+
+    @property
+    def experts_per_prototype(self) -> int:
+        """F = E / Z."""
+        z = self.prototypes
+        if self.num_experts % z:
+            raise ValueError(
+                f"num_experts={self.num_experts} not divisible by prototypes={z}"
+            )
+        return self.num_experts // z
+
+    @property
+    def rounds(self) -> int:
+        """Sequential argmax rounds per router (k for top-k, 1 for prototyping)."""
+        return self.routing.k if self.routing.kind == "topk" else 1
+
+    def param_count(self) -> int:
+        """Exact parameter count of the model this config builds."""
+        m, i, e = self.hidden, self.intermediate, self.num_experts
+        embed = self.vocab_size * m + self.patch_dim * m + self.seq_len * m
+        attn_dense = 4 * m * (self.heads * self.head_dim)
+        if self.moe_attention:
+            # 4 MoE projections, each attn_num_experts experts of (M x H) or
+            # (H x M), plus one router per projection.
+            h = self.heads * self.head_dim
+            attn = 4 * self.attn_num_experts * m * h + 4 * m * self.attn_num_experts
+        else:
+            attn = attn_dense
+        moe_ffn = e * (m * i + i * m) + m * e  # experts + router
+        ln = 2 * 2 * m  # two LNs per layer (scale+bias)
+        per_layer = attn + moe_ffn + ln
+        final_ln = 2 * m
+        return embed + self.layers * per_layer + final_ln
+
+    def with_(self, **kw) -> "ModelConfig":
+        return dataclasses.replace(self, **kw)
+
+    def to_json(self) -> str:
+        d = dataclasses.asdict(self)
+        return json.dumps(d, indent=2)
+
+
+# --------------------------------------------------------------------------- #
+# Variant registry: every artifact the rust coordinator can load.
+# --------------------------------------------------------------------------- #
+
+def _base(**kw) -> ModelConfig:
+    return ModelConfig(**kw)
+
+
+def _routing_grid(base: ModelConfig, caps: Tuple[str, ...] = ("k", "1")) -> Dict[str, ModelConfig]:
+    """All five strategies of Tables 1/3 x capacity policies."""
+    out: Dict[str, ModelConfig] = {}
+    strategies = [
+        Routing("topk", 1),
+        Routing("topk", 2),
+        Routing("topk", 4),
+        Routing("prototype", 2),
+        Routing("prototype", 4),
+    ]
+    for cap in caps:
+        for r in strategies:
+            if r.kind == "topk" and r.k == 1 and cap == "1":
+                continue  # top-1 at capacity 1x == top-1 at capacity kx
+            name = f"{base.name}-{r.name}-cap{cap}"
+            out[name] = base.with_(name=name, routing=r, capacity_mode=cap)
+    return out
+
+
+def build_variants() -> Dict[str, ModelConfig]:
+    v: Dict[str, ModelConfig] = {}
+
+    # ---- base-sim: downscaled twin of the paper's "base" (Table 5 col 1).
+    base = _base(name="base-sim")
+    v[base.name] = base
+    v.update(_routing_grid(base))
+
+    # Fig 1: base-sim with the auxiliary balancing loss on.
+    aux = base.with_(name="base-sim-aux", aux_loss_coef=1e-2)
+    v[aux.name] = aux
+
+    # Fig 4 (left): MoE attention, shallow.
+    mattn = base.with_(name="base-sim-moeattn", moe_attention=True)
+    v[mattn.name] = mattn
+    v[mattn.name + "-2top1"] = mattn.with_(
+        name=mattn.name + "-2top1", routing=Routing("prototype", 2)
+    )
+    # Fig 4 (right): deeper model, fewer experts (paper: 4x layers, 8 experts).
+    deep = base.with_(
+        name="deep-sim", layers=8, num_experts=8, attn_num_experts=4
+    )
+    v[deep.name] = deep
+    v[deep.name + "-moeattn"] = deep.with_(name=deep.name + "-moeattn", moe_attention=True)
+    v[deep.name + "-moeattn-2top1"] = deep.with_(
+        name=deep.name + "-moeattn-2top1",
+        moe_attention=True,
+        routing=Routing("prototype", 2),
+    )
+
+    # ---- large-sim: twin of the "10B" row (2x layers, 4x experts vs base-sim).
+    # Used for Fig 5 / Table 4: the claim is that the k-top-1 advantage grows
+    # with scale, so large-sim only needs capacity-1x variants.
+    large = base.with_(name="large-sim", layers=6, num_experts=32, capacity_mode="1")
+    v[large.name] = large
+    for r in (Routing("topk", 2), Routing("prototype", 2), Routing("prototype", 4)):
+        name = f"large-sim-{r.name}-cap1"
+        v[name] = large.with_(name=name, routing=r)
+
+    # ---- xlarge-sim: third scale point for Fig 5/6 trend (more experts).
+    xl = base.with_(name="xlarge-sim", layers=6, num_experts=64, capacity_mode="1")
+    v[xl.name] = xl
+    v["xlarge-sim-2top1-cap1"] = xl.with_(
+        name="xlarge-sim-2top1-cap1", routing=Routing("prototype", 2)
+    )
+
+    # ---- e2e-100m: the end-to-end validation model (~100M params).
+    e2e = _base(
+        name="e2e-100m",
+        batch=8,
+        hidden=256,
+        intermediate=1024,
+        layers=6,
+        heads=8,
+        head_dim=32,
+        num_experts=32,
+        routing=Routing("prototype", 2),
+        capacity_mode="k",
+    )
+    v[e2e.name] = e2e
+
+    # ---- 1T recipe demo (Sec. 4): Adafactor + reduced init; tiny geometry,
+    # the point is the *stability recipe*, not the scale.
+    recipe = base.with_(
+        name="recipe-1t",
+        optimizer="adafactor",
+        lr=5e-3,
+        init_std=0.002,
+        routing=Routing("prototype", 2),
+    )
+    v[recipe.name] = recipe
+    # the divergent counter-example: default lr 1e-2 + default init
+    v["recipe-1t-divergent"] = recipe.with_(
+        name="recipe-1t-divergent", lr=1e-2, init_std=0.02
+    )
+    return v
+
+
+VARIANTS: Dict[str, ModelConfig] = build_variants()
+
+
+def get(name: str) -> ModelConfig:
+    try:
+        return VARIANTS[name]
+    except KeyError:
+        raise KeyError(
+            f"unknown variant {name!r}; known: {sorted(VARIANTS)}"
+        ) from None

@@ -1,0 +1,2 @@
+"""Layer-1 Pallas kernels (interpret mode) + pure-jnp reference oracles."""
+from . import moe_ffn, ref, routing  # noqa: F401

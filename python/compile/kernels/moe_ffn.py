@@ -1,0 +1,229 @@
+"""Layer-1 Pallas kernel: expert-batched MoE feed-forward.
+
+This is the paper's compute hot spot — §A.3 profiles the two expert matmuls
+(``eCM x eMI -> eCI`` then ``eCI x eIM -> eCM``) at ~98% of the MoE layer's
+forward FLOPs.  The kernel fuses them with the GeLU so the (C, I_blk)
+activation tile never leaves VMEM.
+
+TPU mapping (DESIGN.md §Hardware-Adaptation):
+  * grid = (E, I // I_BLK): the expert index is the outer grid dimension —
+    the TPU analogue of the paper's one-expert-per-worker placement; each
+    grid step streams one expert's (M, I_blk)/(I_blk, M) weight tiles
+    HBM -> VMEM.
+  * the (C, M) token slab and the (C, M) f32 accumulator stay resident in
+    VMEM across the inner I-tile loop; the MXU sees two back-to-back
+    (C x M)@(M x I_blk) / (C x I_blk)@(I_blk x M) matmuls per step.
+  * ``interpret=True`` everywhere: the CPU PJRT plugin cannot execute
+    Mosaic custom-calls, so the kernel lowers to plain HLO; the BlockSpec
+    structure (VMEM footprint, MXU tile shapes) is what carries to real
+    TPUs and is what DESIGN.md §Perf estimates.
+
+The custom VJP runs the backward pass as Pallas kernels too, recomputing
+the (C, I_blk) activation tile instead of storing it (rematerialization:
+saves E*C*I bytes of residual at the cost of one extra fwd matmul).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from .ref import gelu, gelu_grad
+
+# Default inner tile over the intermediate dimension.  Chosen so that for
+# the paper's base geometry (M=1024, I=4096) the VMEM working set
+#   C*M + M*I_blk + I_blk*M + C*I_blk + C*M
+# stays under 16 MB with C=128 (see python/tests/test_vmem.py).
+DEFAULT_I_BLOCK = 512
+
+
+def _pick_i_block(intermediate: int, requested: int | None) -> int:
+    blk = requested or DEFAULT_I_BLOCK
+    blk = min(blk, intermediate)
+    while intermediate % blk:
+        blk //= 2
+        if blk == 0:
+            raise ValueError(f"intermediate={intermediate} has no power-of-2 tile")
+    return blk
+
+
+# --------------------------------------------------------------------------- #
+# forward
+# --------------------------------------------------------------------------- #
+
+
+def _fwd_kernel(x_ref, w1_ref, w2_ref, o_ref):
+    """One (expert, I-tile) grid step of the fused FFN."""
+    i = pl.program_id(1)
+    x = x_ref[0]          # (C, M)
+    w1 = w1_ref[0]        # (M, I_blk)
+    w2 = w2_ref[0]        # (I_blk, M)
+    h = jnp.dot(x, w1)    # MXU matmul 1
+    a = gelu(h)
+    part = jnp.dot(a, w2)  # MXU matmul 2
+
+    @pl.when(i == 0)
+    def _init():
+        o_ref[0] = part
+
+    @pl.when(i > 0)
+    def _accum():
+        o_ref[0] += part
+
+
+def _fwd_pallas(x: jax.Array, w1: jax.Array, w2: jax.Array, i_block: int) -> jax.Array:
+    e, c, m = x.shape
+    _, _, i = w1.shape
+    n_i = i // i_block
+    return pl.pallas_call(
+        _fwd_kernel,
+        grid=(e, n_i),
+        in_specs=[
+            pl.BlockSpec((1, c, m), lambda ei, ii: (ei, 0, 0)),
+            pl.BlockSpec((1, m, i_block), lambda ei, ii: (ei, 0, ii)),
+            pl.BlockSpec((1, i_block, m), lambda ei, ii: (ei, ii, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, c, m), lambda ei, ii: (ei, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((e, c, m), x.dtype),
+        interpret=True,
+    )(x, w1, w2)
+
+
+# --------------------------------------------------------------------------- #
+# backward
+# --------------------------------------------------------------------------- #
+
+
+def _bwd_kernel(x_ref, w1_ref, w2_ref, g_ref, dx_ref, dw1_ref, dw2_ref):
+    """Backward for one (expert, I-tile): recomputes the activation tile.
+
+    h  = x @ w1_t          (C, I_blk)
+    a  = gelu(h)
+    da = g @ w2_t.T        (C, I_blk)
+    dh = da * gelu'(h)
+    dx  += dh @ w1_t.T     accumulated over I tiles
+    dw1_t = x.T @ dh       (M, I_blk)   one tile per grid step
+    dw2_t = a.T @ g        (I_blk, M)
+    """
+    i = pl.program_id(1)
+    x = x_ref[0]    # (C, M)
+    w1 = w1_ref[0]  # (M, I_blk)
+    w2 = w2_ref[0]  # (I_blk, M)
+    g = g_ref[0]    # (C, M)
+
+    h = jnp.dot(x, w1)
+    a = gelu(h)
+    da = jnp.dot(g, w2.T)
+    dh = da * gelu_grad(h)
+
+    @pl.when(i == 0)
+    def _init():
+        dx_ref[0] = jnp.dot(dh, w1.T)
+
+    @pl.when(i > 0)
+    def _accum():
+        dx_ref[0] += jnp.dot(dh, w1.T)
+
+    dw1_ref[0] = jnp.dot(x.T, dh)
+    dw2_ref[0] = jnp.dot(a.T, g)
+
+
+def _bwd_pallas(x, w1, w2, g, i_block: int):
+    e, c, m = x.shape
+    _, _, i = w1.shape
+    n_i = i // i_block
+    return pl.pallas_call(
+        _bwd_kernel,
+        grid=(e, n_i),
+        in_specs=[
+            pl.BlockSpec((1, c, m), lambda ei, ii: (ei, 0, 0)),
+            pl.BlockSpec((1, m, i_block), lambda ei, ii: (ei, 0, ii)),
+            pl.BlockSpec((1, i_block, m), lambda ei, ii: (ei, ii, 0)),
+            pl.BlockSpec((1, c, m), lambda ei, ii: (ei, 0, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, c, m), lambda ei, ii: (ei, 0, 0)),
+            pl.BlockSpec((1, m, i_block), lambda ei, ii: (ei, 0, ii)),
+            pl.BlockSpec((1, i_block, m), lambda ei, ii: (ei, ii, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((e, c, m), x.dtype),
+            jax.ShapeDtypeStruct((e, m, i), w1.dtype),
+            jax.ShapeDtypeStruct((e, i, m), w2.dtype),
+        ],
+        interpret=True,
+    )(x, w1, w2, g)
+
+
+# --------------------------------------------------------------------------- #
+# public custom-vjp entry point
+# --------------------------------------------------------------------------- #
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(3,))
+def moe_ffn(x: jax.Array, w1: jax.Array, w2: jax.Array, i_block: int | None = None) -> jax.Array:
+    """Fused expert-batched FFN: ``gelu(x @ w1) @ w2`` per expert.
+
+    x (E, C, M), w1 (E, M, I), w2 (E, I, M) -> (E, C, M).
+    Matches :func:`kernels.ref.moe_ffn` bit-for-bit in interpret mode.
+    """
+    return _fwd_pallas(x, w1, w2, _pick_i_block(w1.shape[2], i_block))
+
+
+def _vjp_fwd(x, w1, w2, i_block):
+    out = _fwd_pallas(x, w1, w2, _pick_i_block(w1.shape[2], i_block))
+    return out, (x, w1, w2)
+
+
+def _vjp_bwd(i_block, res, g):
+    x, w1, w2 = res
+    dx, dw1, dw2 = _bwd_pallas(x, w1, w2, g, _pick_i_block(w1.shape[2], i_block))
+    return dx, dw1, dw2
+
+
+moe_ffn.defvjp(_vjp_fwd, _vjp_bwd)
+
+
+# --------------------------------------------------------------------------- #
+# static analysis used by DESIGN.md §Perf and the rust flops module
+# --------------------------------------------------------------------------- #
+
+
+def vmem_bytes(c: int, m: int, i_block: int, dtype_bytes: int = 4) -> int:
+    """VMEM working set of one fwd grid step (token slab + weight tiles +
+    activation tile + accumulator)."""
+    return dtype_bytes * (c * m + m * i_block + i_block * m + c * i_block + c * m)
+
+
+def fwd_flops(e: int, c: int, m: int, i: int) -> int:
+    """MXU FLOPs of the fused forward (2 matmuls, 2*N*M*K each)."""
+    return e * (2 * c * m * i + 2 * c * i * m)
+
+
+def mxu_utilization_estimate(c: int, m: int, i_block: int, workers: int = 1) -> float:
+    """Fraction of 128x128 MXU tiles that are full for the inner matmuls.
+
+    Real-TPU efficiency proxy (interpret-mode wall clock is meaningless):
+    dims that are not multiples of 128 waste the remainder lanes.
+
+    ``workers`` models the paper's eDCM buffer layout (§A.3): after the
+    all-to-all, each expert's token slab holds D*C rows (one C-block from
+    every worker), so the MXU row occupancy on the real cluster is that of
+    D*C, not C. The perf pass (EXPERIMENTS.md §Perf L1) exploits exactly
+    this: the kernel's token-slab BlockSpec treats the worker dimension as
+    part of the row axis, taking base-geometry utilization from 0.31 to
+    0.83 without touching the compute.
+    """
+
+    def eff(n: int) -> float:
+        tiles = -(-n // 128)
+        return n / (tiles * 128)
+
+    rows = c * max(1, workers)
+    # matmul1: (D*C,M)@(M,I_blk); matmul2: (D*C,I_blk)@(I_blk,M)
+    m1 = eff(rows) * eff(m) * eff(i_block)
+    m2 = eff(rows) * eff(i_block) * eff(m)
+    return (m1 + m2) / 2.0

@@ -1,0 +1,72 @@
+"""Pure-jnp oracles for the Pallas kernels.
+
+These are the correctness ground truth: ``pytest python/tests`` asserts the
+Pallas kernels (interpret mode) match these to tight tolerances, including
+gradients (the kernels carry custom VJPs).  They are also what the L2 model
+falls back to when ``use_pallas=False`` — useful for A/B-ing kernel vs
+reference inside the lowered HLO.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+SQRT_2_OVER_PI = 0.7978845608028654
+GELU_C = 0.044715
+
+
+def gelu(x: jax.Array) -> jax.Array:
+    """tanh-approximated GeLU — must match the kernel's formulation exactly."""
+    return 0.5 * x * (1.0 + jnp.tanh(SQRT_2_OVER_PI * (x + GELU_C * x * x * x)))
+
+
+def gelu_grad(x: jax.Array) -> jax.Array:
+    """Analytic d gelu / dx for the tanh approximation (used by the bwd kernel)."""
+    u = SQRT_2_OVER_PI * (x + GELU_C * x * x * x)
+    t = jnp.tanh(u)
+    du = SQRT_2_OVER_PI * (1.0 + 3.0 * GELU_C * x * x)
+    return 0.5 * (1.0 + t) + 0.5 * x * (1.0 - t * t) * du
+
+
+def moe_ffn(x: jax.Array, w1: jax.Array, w2: jax.Array) -> jax.Array:
+    """Expert-batched FFN: the two einsums holding ~98% of MoE FLOPs (§A.3).
+
+    x:  (E, C, M)  dispatched token blocks, one (C, M) slab per expert
+    w1: (E, M, I)  per-expert up-projection
+    w2: (E, I, M)  per-expert down-projection
+    returns (E, C, M)
+    """
+    h = jnp.einsum("ecm,emi->eci", x, w1)
+    a = gelu(h)
+    return jnp.einsum("eci,eim->ecm", a, w2)
+
+
+def route_top1(
+    gates: jax.Array, offsets: jax.Array, capacity: int
+) -> tuple[jax.Array, jax.Array, jax.Array, jax.Array]:
+    """Reference top-1 routing with capacity, per prototype.
+
+    gates:   (Z, T, F) router probabilities (already softmaxed)
+    offsets: (Z, F)    tokens already assigned to each expert by earlier
+                       top-k rounds (0 for round 0 / prototyping)
+    capacity: per-expert capacity C (Eq. 2)
+
+    Returns (expert_index (Z,T) i32, position (Z,T) i32, keep (Z,T) f32,
+    counts (Z,F) f32).  ``position`` is the slot the token occupies in its
+    expert's buffer (offset included); ``keep`` is 0 where the token
+    overflowed capacity and is dropped to the residual path; ``counts`` is
+    the number of *kept* tokens per expert, fed back as the next round's
+    offsets (GShard top-k semantics).
+    """
+    z, t, f = gates.shape
+    idx = jnp.argmax(gates, axis=-1)  # (Z, T)
+    onehot = jax.nn.one_hot(idx, f, dtype=gates.dtype)  # (Z, T, F)
+    # exclusive cumulative count of earlier tokens choosing the same expert
+    cum = jnp.cumsum(onehot, axis=1) - onehot
+    pos_in_round = jnp.sum(cum * onehot, axis=-1)  # (Z, T)
+    my_offset = jnp.take_along_axis(offsets, idx, axis=-1)  # (Z, T)
+    pos = pos_in_round + my_offset
+    keep = (pos < capacity).astype(gates.dtype)
+    counts = offsets + jnp.sum(onehot * keep[..., None], axis=1)
+    return idx.astype(jnp.int32), pos.astype(jnp.int32), keep, counts

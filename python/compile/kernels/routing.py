@@ -1,0 +1,102 @@
+"""Layer-1 Pallas kernel: prototype-parallel top-1 routing with capacity.
+
+Implements the integer half of the paper's Figure-8 ``prototype_gating``:
+argmax expert selection, the exclusive token-position cumsum, and the
+capacity cut (Eq. 2).  The *differentiable* half (softmax over router
+logits, gate values, the combine tensor, the auxiliary balancing loss)
+stays in plain jnp in ``compile/moe.py`` so gradients flow to the router
+weights; this kernel's outputs are routing *decisions* and carry zero
+cotangent (custom_vjp below).
+
+The grid iterates over prototypes: the paper's core efficiency argument
+(§3.3) is that top-k's looping argmax serializes k rounds, while k top-1
+prototyping runs k *independent* routers.  Here that is literal — each
+prototype is one grid program with no cross-program dependency, whereas
+top-k calls this kernel k times sequentially with updated offsets
+(see ``moe.py::route``), mirroring the Table-2 speed asymmetry.
+
+TPU mapping: per grid step the (T, F) gate block lives in VMEM; argmax and
+one-hot run on the VPU; the cumsum over T is the standard prefix-sum
+ladder.  interpret=True as required for CPU PJRT execution.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _route_kernel(gates_ref, offsets_ref, idx_ref, pos_ref, keep_ref, counts_ref, *, capacity: int):
+    gates = gates_ref[0]      # (T, F)
+    offsets = offsets_ref[0]  # (F,)
+    t, f = gates.shape
+
+    idx = jnp.argmax(gates, axis=-1)                       # (T,)
+    onehot = jax.nn.one_hot(idx, f, dtype=gates.dtype)     # (T, F)
+    # exclusive cumsum: how many earlier tokens chose the same expert
+    cum = jnp.cumsum(onehot, axis=0) - onehot
+    pos_in_round = jnp.sum(cum * onehot, axis=-1)          # (T,)
+    my_offset = jnp.sum(onehot * offsets[None, :], axis=-1)
+    pos = pos_in_round + my_offset
+    keep = (pos < capacity).astype(gates.dtype)
+
+    idx_ref[0] = idx.astype(jnp.int32)
+    pos_ref[0] = pos.astype(jnp.int32)
+    keep_ref[0] = keep
+    counts_ref[0] = offsets + jnp.sum(onehot * keep[:, None], axis=0)
+
+
+def _route_pallas(gates: jax.Array, offsets: jax.Array, capacity: int):
+    z, t, f = gates.shape
+    kern = functools.partial(_route_kernel, capacity=capacity)
+    return pl.pallas_call(
+        kern,
+        grid=(z,),
+        in_specs=[
+            pl.BlockSpec((1, t, f), lambda zi: (zi, 0, 0)),
+            pl.BlockSpec((1, f), lambda zi: (zi, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, t), lambda zi: (zi, 0)),
+            pl.BlockSpec((1, t), lambda zi: (zi, 0)),
+            pl.BlockSpec((1, t), lambda zi: (zi, 0)),
+            pl.BlockSpec((1, f), lambda zi: (zi, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((z, t), jnp.int32),
+            jax.ShapeDtypeStruct((z, t), jnp.int32),
+            jax.ShapeDtypeStruct((z, t), gates.dtype),
+            jax.ShapeDtypeStruct((z, f), gates.dtype),
+        ],
+        interpret=True,
+    )(gates, offsets)
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(2,))
+def route_top1(gates: jax.Array, offsets: jax.Array, capacity: int):
+    """Top-1 routing decisions per prototype, with capacity.
+
+    gates (Z, T, F) softmaxed router probabilities; offsets (Z, F) tokens
+    already committed per expert by earlier top-k rounds.
+
+    Returns ``(expert_index i32 (Z,T), position i32 (Z,T), keep f32 (Z,T),
+    counts f32 (Z,F))``.  Decisions are non-differentiable: the VJP returns
+    zero cotangents (gradients reach the router through the gate values
+    assembled in moe.py, exactly as in GShard/Switch).
+    """
+    return _route_pallas(gates, offsets, capacity)
+
+
+def _route_fwd(gates, offsets, capacity):
+    return _route_pallas(gates, offsets, capacity), (gates, offsets)
+
+
+def _route_bwd(capacity, res, _g):
+    gates, offsets = res
+    return jnp.zeros_like(gates), jnp.zeros_like(offsets)
+
+
+route_top1.defvjp(_route_fwd, _route_bwd)

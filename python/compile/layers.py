@@ -1,0 +1,100 @@
+"""Layer-2 transformer building blocks (plain jnp; the MoE parts live in
+``moe.py`` and call the Pallas kernels).
+
+The model follows the paper's §A.1 setup: image patch features and text
+embeddings are concatenated into one sequence; a prefix-LM mask lets the
+patch prefix attend bidirectionally while text is causal (image-captioning
+teacher forcing); the FFN of every transformer block is an MoE layer.
+"""
+
+from __future__ import annotations
+
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .config import ModelConfig
+from .moe import RoutingResult, moe_linear_layer
+
+
+def layer_norm(x: jax.Array, scale: jax.Array, bias: jax.Array, eps: float = 1e-5) -> jax.Array:
+    mu = jnp.mean(x, axis=-1, keepdims=True)
+    var = jnp.mean(jnp.square(x - mu), axis=-1, keepdims=True)
+    return (x - mu) * jax.lax.rsqrt(var + eps) * scale + bias
+
+
+def prefix_lm_mask(patches: int, seq_len: int, dtype=jnp.float32) -> jax.Array:
+    """(S, S) additive mask: patch prefix bidirectional, text causal.
+
+    Position i may attend j iff j <= i (causal) or j < patches (everyone
+    sees the whole image).  Returns 0 where allowed, -1e9 where masked.
+    """
+    i = jnp.arange(seq_len)[:, None]
+    j = jnp.arange(seq_len)[None, :]
+    allowed = (j <= i) | (j < patches)
+    return jnp.where(allowed, 0.0, -1e9).astype(dtype)
+
+
+def _heads_split(x: jax.Array, heads: int) -> jax.Array:
+    b, s, _ = x.shape
+    return x.reshape(b, s, heads, -1).transpose(0, 2, 1, 3)  # (B, H, S, D)
+
+
+def _heads_merge(x: jax.Array) -> jax.Array:
+    b, h, s, d = x.shape
+    return x.transpose(0, 2, 1, 3).reshape(b, s, h * d)
+
+
+def attention_core(q: jax.Array, k: jax.Array, v: jax.Array, mask: jax.Array,
+                   heads: int) -> jax.Array:
+    """Scaled dot-product attention over already-projected q/k/v (B,S,HD)."""
+    qh, kh, vh = (_heads_split(t, heads) for t in (q, k, v))
+    d = qh.shape[-1]
+    scores = jnp.einsum("bhid,bhjd->bhij", qh, kh) / jnp.sqrt(jnp.asarray(d, qh.dtype))
+    scores = scores + mask[None, None, :, :]
+    probs = jax.nn.softmax(scores, axis=-1)
+    out = jnp.einsum("bhij,bhjd->bhid", probs, vh)
+    return _heads_merge(out)
+
+
+def dense_attention(x: jax.Array, p: Dict[str, jax.Array], mask: jax.Array,
+                    cfg: ModelConfig) -> jax.Array:
+    """Standard multi-head attention with dense Q/K/V/O projections."""
+    q = x @ p["wq"]
+    k = x @ p["wk"]
+    v = x @ p["wv"]
+    o = attention_core(q, k, v, mask, cfg.heads)
+    return o @ p["wo"]
+
+
+def moe_attention(x: jax.Array, p: Dict[str, jax.Array], mask: jax.Array,
+                  cfg: ModelConfig) -> Tuple[jax.Array, jax.Array]:
+    """MoE attention (§3.4): Q/K/V/O projections each replaced by an MoE of
+    one-layer linear experts, sharing the routing strategy of the config.
+
+    Returns (output (B,S,M), summed aux loss of the four routers).
+    """
+    b, s, m = x.shape
+    flat = x.reshape(b * s, m)
+    aux = jnp.zeros((), x.dtype)
+
+    def proj(name: str) -> jax.Array:
+        nonlocal aux
+        out, r = moe_linear_layer(flat, p[f"router_{name}"], p[f"w{name}"], cfg)
+        aux = aux + r.aux_loss
+        return out.reshape(b, s, -1)
+
+    q, k, v = proj("q"), proj("k"), proj("v")
+    o = attention_core(q, k, v, mask, cfg.heads)
+    oh = o.reshape(b * s, -1)
+    out, r = moe_linear_layer(oh, p["router_o"], p["wo"], cfg)
+    aux = aux + r.aux_loss
+    return out.reshape(b, s, m), aux
+
+
+def dropout(x: jax.Array, rate: float, key: Optional[jax.Array]) -> jax.Array:
+    if rate <= 0.0 or key is None:
+        return x
+    keep = jax.random.bernoulli(key, 1.0 - rate, x.shape)
+    return jnp.where(keep, x / (1.0 - rate), 0.0)

@@ -1,0 +1,224 @@
+"""Layer-2 model: the M6-style multimodal MoE transformer (paper §A.1).
+
+Decoder-style transformer over ``[patch features ; text tokens]`` with a
+prefix-LM mask, MoE FFN in every block (optionally MoE attention, §3.4),
+trained with teacher-forced image captioning.  The forward pass also
+returns per-layer expert compute loads and dropped-token counts so the
+rust coordinator can track the paper's c_v balance metric (Fig. 1) without
+ever re-running the gate on the host.
+
+Layer parameters are stacked on a leading ``layers`` axis and consumed by
+``lax.scan`` (``cfg.scan_layers=False`` unrolls instead — the L2 perf
+ablation in EXPERIMENTS.md §Perf).
+"""
+
+from __future__ import annotations
+
+from typing import Dict, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .config import PAD_ID, ModelConfig
+from .layers import (
+    dense_attention,
+    dropout,
+    layer_norm,
+    moe_attention,
+    prefix_lm_mask,
+)
+from .moe import moe_ffn_layer
+
+Params = Dict
+
+
+class ForwardResult(NamedTuple):
+    loss: jax.Array        # mean NLL over real text tokens
+    aux_loss: jax.Array    # summed balancing loss over layers (and attn MoE)
+    sum_nll: jax.Array     # total NLL (for exact PPL aggregation)
+    token_count: jax.Array
+    load: jax.Array        # (layers, E) kept tokens per expert
+    dropped: jax.Array     # (layers,) overflowed tokens
+
+
+# --------------------------------------------------------------------------- #
+# init
+# --------------------------------------------------------------------------- #
+
+
+def _trunc_normal(key, shape, std, dtype=jnp.float32):
+    """BERT-style initializer: normal(0, std) clipped at 2 sigma.
+
+    Implemented via Box-Muller over uniforms instead of
+    ``jax.random.truncated_normal`` because the latter lowers to the ``erf``
+    /``erf-inv`` HLO opcodes, which the xla_extension 0.5.1 text parser the
+    rust runtime links against does not know. Clipping (vs re-sampling)
+    changes the tail mass by <5%, irrelevant for an initializer. The paper's
+    1T recipe (§4) reduces std by 10x.
+    """
+    k1, k2 = jax.random.split(key)
+    shape = tuple(shape)
+    u1 = jax.random.uniform(k1, shape, dtype, minval=1e-7, maxval=1.0)
+    u2 = jax.random.uniform(k2, shape, dtype)
+    z = jnp.sqrt(-2.0 * jnp.log(u1)) * jnp.cos(2.0 * jnp.pi * u2)
+    return std * jnp.clip(z, -2.0, 2.0)
+
+
+def init_params(cfg: ModelConfig, key: jax.Array) -> Params:
+    m, i, e = cfg.hidden, cfg.intermediate, cfg.num_experts
+    h = cfg.heads * cfg.head_dim
+    z, f = cfg.prototypes, cfg.experts_per_prototype
+    lyr = cfg.layers
+    std = cfg.init_std
+
+    keys = iter(jax.random.split(key, 32))
+
+    def tn(shape, s=std):
+        return _trunc_normal(next(keys), shape, s)
+
+    if cfg.moe_attention:
+        ea = cfg.attn_num_experts
+        za = cfg.prototypes if cfg.routing.kind == "prototype" else 1
+        if ea % za:
+            raise ValueError(f"attn_num_experts={ea} not divisible by Z={za}")
+        fa = ea // za
+        attn = {
+            "router_q": tn((lyr, m, za, fa)),
+            "router_k": tn((lyr, m, za, fa)),
+            "router_v": tn((lyr, m, za, fa)),
+            "router_o": tn((lyr, h, za, fa)),
+            "wq": tn((lyr, ea, m, h)),
+            "wk": tn((lyr, ea, m, h)),
+            "wv": tn((lyr, ea, m, h)),
+            "wo": tn((lyr, ea, h, m)),
+        }
+    else:
+        attn = {
+            "wq": tn((lyr, m, h)),
+            "wk": tn((lyr, m, h)),
+            "wv": tn((lyr, m, h)),
+            "wo": tn((lyr, h, m)),
+        }
+
+    return {
+        "tok_embed": tn((cfg.vocab_size, m)),
+        "patch_proj": tn((cfg.patch_dim, m)),
+        "pos_embed": tn((cfg.seq_len, m)),
+        "layers": {
+            "ln1_scale": jnp.ones((lyr, m)),
+            "ln1_bias": jnp.zeros((lyr, m)),
+            "ln2_scale": jnp.ones((lyr, m)),
+            "ln2_bias": jnp.zeros((lyr, m)),
+            "attn": attn,
+            "router": tn((lyr, m, z, f)),
+            "w1": tn((lyr, e, m, i)),
+            "w2": tn((lyr, e, i, m)),
+        },
+        "ln_f_scale": jnp.ones((m,)),
+        "ln_f_bias": jnp.zeros((m,)),
+    }
+
+
+# --------------------------------------------------------------------------- #
+# forward
+# --------------------------------------------------------------------------- #
+
+
+def _block(x: jax.Array, lp: Params, mask: jax.Array, cfg: ModelConfig,
+           drop_key: Optional[jax.Array]) -> Tuple[jax.Array, Tuple[jax.Array, jax.Array, jax.Array]]:
+    """One transformer block; returns (x, (aux, load, dropped))."""
+    b, s, m = x.shape
+    aux = jnp.zeros((), x.dtype)
+
+    h = layer_norm(x, lp["ln1_scale"], lp["ln1_bias"])
+    if cfg.moe_attention:
+        a, attn_aux = moe_attention(h, lp["attn"], mask, cfg)
+        aux = aux + attn_aux
+    else:
+        a = dense_attention(h, lp["attn"], mask, cfg)
+    if drop_key is not None:
+        k1, k2, drop_key = jax.random.split(drop_key, 3)
+        a = dropout(a, cfg.dropout, k1)
+    x = x + a
+
+    h = layer_norm(x, lp["ln2_scale"], lp["ln2_bias"])
+    flat = h.reshape(b * s, m)
+    out, r = moe_ffn_layer(flat, lp["router"], lp["w1"], lp["w2"], cfg)
+    out = out.reshape(b, s, m)
+    if drop_key is not None:
+        out = dropout(out, cfg.dropout, k2)
+    x = x + out
+    return x, (aux + r.aux_loss, r.load, r.dropped)
+
+
+def forward(params: Params, patches: jax.Array, tokens: jax.Array,
+            cfg: ModelConfig, *, rng: Optional[jax.Array] = None) -> ForwardResult:
+    """Teacher-forced captioning forward pass.
+
+    patches: (B, P, patch_dim) f32 synthetic ResNet features
+    tokens:  (B, L) i32, tokens[:, 0] == BOS; PAD-padded tail
+    """
+    b = tokens.shape[0]
+    tok_emb = params["tok_embed"][tokens]                      # (B, L, M)
+    patch_emb = patches @ params["patch_proj"]                 # (B, P, M)
+    x = jnp.concatenate([patch_emb, tok_emb], axis=1)
+    x = x + params["pos_embed"][None, :, :]
+    mask = prefix_lm_mask(cfg.patches, cfg.seq_len, x.dtype)
+
+    lp = params["layers"]
+    if cfg.scan_layers:
+        keys = (
+            jax.random.split(rng, cfg.layers) if rng is not None else None
+        )
+
+        def body(carry, xs):
+            layer_params, key = xs
+            y, stats = _block(carry, layer_params, mask, cfg, key)
+            return y, stats
+
+        xs = (lp, keys) if keys is not None else (lp, jnp.zeros((cfg.layers, 0)))
+        if keys is None:
+            def body(carry, xs):  # noqa: F811 — no-dropout variant
+                layer_params, _ = xs
+                y, stats = _block(carry, layer_params, mask, cfg, None)
+                return y, stats
+
+        x, (aux, load, dropped) = jax.lax.scan(body, x, xs)
+        aux = jnp.sum(aux)
+    else:
+        auxes, loads, droppeds = [], [], []
+        for l in range(cfg.layers):
+            layer_params = jax.tree_util.tree_map(lambda t: t[l], lp)
+            key = jax.random.fold_in(rng, l) if rng is not None else None
+            x, (a, ld, dr) = _block(x, layer_params, mask, cfg, key)
+            auxes.append(a)
+            loads.append(ld)
+            droppeds.append(dr)
+        aux = jnp.sum(jnp.stack(auxes))
+        load = jnp.stack(loads)
+        dropped = jnp.stack(droppeds)
+
+    x = layer_norm(x, params["ln_f_scale"], params["ln_f_bias"])
+    # text positions only; logits tied to the token embedding
+    text_x = x[:, cfg.patches :, :]                            # (B, L, M)
+    logits = text_x @ params["tok_embed"].T                    # (B, L, V)
+
+    # next-token targets: shift left, PAD at the end (ignored by the mask)
+    targets = jnp.concatenate(
+        [tokens[:, 1:], jnp.full((b, 1), PAD_ID, tokens.dtype)], axis=1
+    )
+    mask_t = (targets != PAD_ID).astype(x.dtype)
+    logp = jax.nn.log_softmax(logits, axis=-1)
+    nll = -jnp.take_along_axis(logp, targets[..., None], axis=-1)[..., 0]
+    sum_nll = jnp.sum(nll * mask_t)
+    count = jnp.sum(mask_t)
+    loss = sum_nll / jnp.maximum(count, 1.0)
+    return ForwardResult(loss, aux, sum_nll, count, load, dropped)
+
+
+def loss_fn(params: Params, patches: jax.Array, tokens: jax.Array,
+            cfg: ModelConfig, rng: Optional[jax.Array] = None):
+    """Scalar training objective + stats, for jax.grad."""
+    r = forward(params, patches, tokens, cfg, rng=rng)
+    total = r.loss + cfg.aux_loss_coef * r.aux_loss
+    return total, r

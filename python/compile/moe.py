@@ -1,0 +1,174 @@
+"""Layer-2 MoE machinery: gating, dispatch/combine, auxiliary loss.
+
+Implements both routing families behind one interface (paper §3.2/§3.3):
+
+* **top-k** — one router over all E experts, k *sequential* argmax rounds
+  (the "looping argmax" the paper identifies as the efficiency problem,
+  Table 2).  Gate values of the k selections are renormalized to sum to 1
+  (Eq. 1).
+* **k top-1 expert prototyping** — experts reshaped to (Z=k, F=E/k), one
+  router per prototype, a single *parallel* routing round; prototype
+  outputs are summed without cross-prototype renormalization (Eq. 3).
+
+The integer routing decisions come from the Pallas kernel
+(:mod:`kernels.routing`); the differentiable parts (softmax gates, combine
+tensor, auxiliary balancing loss of Fig. 8) are assembled here so router
+weights receive gradients exactly as in GShard/Switch.
+
+Dispatch/combine use the paper's one-hot einsum formulation (Fig. 7):
+``dispatch (T,Z,F,C)`` scatters token slabs to per-expert buffers,
+``combine`` gathers them back scaled by the gate probability.  Overflowed
+tokens (``keep == 0``) take the residual path implicitly: they simply do
+not appear in any expert buffer, so the MoE layer contributes zero and the
+transformer's residual connection carries them through (§2).
+"""
+
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from .config import ModelConfig
+from .kernels import moe_ffn as moe_ffn_kernel
+from .kernels import ref as kref
+from .kernels.routing import route_top1
+
+
+class RoutingResult(NamedTuple):
+    """Everything a MoE layer needs after gating."""
+
+    combine: jax.Array        # (T, Z, F, C) float: gate * onehot(expert) * onehot(slot)
+    dispatch: jax.Array       # (T, Z, F, C) float 0/1, stop-gradient
+    aux_loss: jax.Array       # scalar, mesh-tf density * density_proxy form
+    load: jax.Array           # (E,) kept tokens per expert (compute load, Fig. 1)
+    dropped: jax.Array        # scalar, tokens that overflowed capacity
+
+
+def route(x: jax.Array, router_w: jax.Array, *, prototypes: int, rounds: int,
+          capacity: int, renormalize: bool) -> RoutingResult:
+    """Route ``T`` tokens through ``Z = prototypes`` routers.
+
+    x: (T, M) token representations; router_w: (M, Z, F) gating weights.
+
+    ``rounds > 1`` reproduces GShard top-k: each round masks the experts
+    already chosen and re-runs the top-1 kernel with updated per-expert
+    offsets so capacity slots are shared across rounds.  ``prototypes > 1``
+    with ``rounds == 1`` is expert prototyping.
+    """
+    t, m = x.shape
+    _, z, f = router_w.shape
+    dtype = x.dtype
+
+    logits = jnp.einsum("tm,mzf->ztf", x, router_w)
+    raw_gates = jax.nn.softmax(logits, axis=-1)  # (Z, T, F)
+
+    offsets = jnp.zeros((z, f), dtype)
+    avail = jnp.ones((z, t, f), dtype)  # 1 where the expert is still selectable
+    sel_gate, sel_onehot_e, sel_onehot_c, sel_keep = [], [], [], []
+    for _ in range(rounds):
+        # masking instead of -inf keeps the value lookup on raw_gates exact
+        idx, pos, keep, counts = route_top1(raw_gates * avail, offsets, capacity)
+        onehot_e = jax.nn.one_hot(idx, f, dtype=dtype)           # (Z, T, F)
+        onehot_c = jax.nn.one_hot(pos, capacity, dtype=dtype)    # (Z, T, C)
+        gate = jnp.sum(raw_gates * onehot_e, axis=-1)            # (Z, T)
+        sel_gate.append(gate)
+        sel_onehot_e.append(jax.lax.stop_gradient(onehot_e))
+        sel_onehot_c.append(jax.lax.stop_gradient(onehot_c))
+        sel_keep.append(keep)
+        offsets = counts
+        avail = avail * (1.0 - onehot_e)
+
+    gates = jnp.stack(sel_gate)          # (R, Z, T)
+    keeps = jnp.stack(sel_keep)          # (R, Z, T)
+    if renormalize and rounds > 1:
+        denom = jnp.sum(gates, axis=0, keepdims=True) + 1e-9
+        gates = gates / denom
+
+    # combine tensor: sum over rounds of p * onehot(expert) x onehot(slot)
+    oe = jnp.stack(sel_onehot_e)         # (R, Z, T, F)
+    oc = jnp.stack(sel_onehot_c)         # (R, Z, T, C)
+    w = gates * keeps                    # (R, Z, T)
+    combine = jnp.einsum("rzt,rztf,rztc->tzfc", w, oe, oc)
+    dispatch = jax.lax.stop_gradient((combine > 0).astype(dtype))
+
+    # auxiliary balancing loss (Fig. 8 / mesh-tf): first-round assignment
+    # density x mean gate probability, scaled by F^2, averaged over Z.
+    density = jnp.mean(oe[0], axis=1)          # (Z, F) fraction assigned
+    density_proxy = jnp.mean(raw_gates, axis=1)  # (Z, F) mean prob
+    aux = jnp.mean(jnp.sum(density * density_proxy, axis=-1)) * f
+
+    # effective compute load: kept (real) tokens per expert — padding slots
+    # are excluded, matching the paper's c_v definition (§3.1).
+    load = jnp.einsum("rzt,rztf->zf", keeps, oe).reshape(-1)  # (E,)
+    dropped = rounds * z * t - jnp.sum(keeps)
+    return RoutingResult(combine, dispatch, aux, load, dropped)
+
+
+def route_cfg(x: jax.Array, router_w: jax.Array, cfg: ModelConfig) -> RoutingResult:
+    """Routing with geometry taken from a :class:`ModelConfig` (FFN MoE)."""
+    return route(
+        x,
+        router_w,
+        prototypes=cfg.prototypes,
+        rounds=cfg.rounds,
+        capacity=cfg.capacity,
+        renormalize=cfg.routing.kind == "topk",
+    )
+
+
+def moe_ffn_layer(x: jax.Array, router_w: jax.Array, w1: jax.Array, w2: jax.Array,
+                  cfg: ModelConfig, use_pallas: bool = True) -> tuple[jax.Array, RoutingResult]:
+    """Full MoE FFN layer over flattened tokens.
+
+    x: (T, M); router_w: (M, Z, F); w1: (E, M, I); w2: (E, I, M).
+    Returns (output (T, M), routing stats).
+    """
+    t, m = x.shape
+    e = w1.shape[0]
+    r = route_cfg(x, router_w, cfg)
+    z, f = router_w.shape[1], router_w.shape[2]
+    c = cfg.capacity
+    # dispatch: one (C, M) slab per expert (paper Fig. 7 dispatch einsum)
+    slabs = jnp.einsum("tzfc,tm->zfcm", r.dispatch, x).reshape(e, c, m)
+    if use_pallas:
+        out_slabs = moe_ffn_kernel.moe_ffn(slabs, w1, w2, None)
+    else:
+        out_slabs = kref.moe_ffn(slabs, w1, w2)
+    out = jnp.einsum("tzfc,zfcm->tm", r.combine, out_slabs.reshape(z, f, c, m))
+    return out, r
+
+
+def moe_linear_layer(x: jax.Array, router_w: jax.Array, w: jax.Array,
+                     cfg: ModelConfig) -> tuple[jax.Array, RoutingResult]:
+    """MoE over a single linear projection (MoE attention, §3.4).
+
+    Each expert is a one-layer linear map (M -> H) "viewed as a one-layer
+    FFN without non-linear activation" (paper).  x: (T, M); router_w:
+    (M, Z, F); w: (E, M, H).  Capacity follows the same Eq.-2 policy.
+    """
+    t, m = x.shape
+    e, _, h = w.shape
+    z, f = router_w.shape[1], router_w.shape[2]
+    r = route(
+        x,
+        router_w,
+        prototypes=z,
+        rounds=cfg.rounds if cfg.routing.kind == "topk" else 1,
+        capacity=_attn_capacity(cfg, t, e),
+        renormalize=cfg.routing.kind == "topk",
+    )
+    c = _attn_capacity(cfg, t, e)
+    slabs = jnp.einsum("tzfc,tm->zfcm", r.dispatch, x).reshape(e, c, m)
+    out_slabs = jnp.einsum("ecm,emh->ech", slabs, w)
+    out = jnp.einsum("tzfc,zfch->th", r.combine, out_slabs.reshape(z, f, c, h))
+    return out, r
+
+
+def _attn_capacity(cfg: ModelConfig, t: int, e: int) -> int:
+    """Eq.-2 capacity for the attention MoE (its own expert count)."""
+    k_eff = cfg.routing.k if cfg.capacity_mode == "k" else 1
+    import math
+
+    return max(1, int(math.ceil(k_eff * t / e * cfg.capacity_factor)))

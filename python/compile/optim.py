@@ -1,0 +1,163 @@
+"""Layer-2 optimizers: AdamW (paper Table 5) and Adafactor (the 1T recipe,
+§4 — chosen by the paper for its sublinear memory cost).
+
+Both operate on the parameter pytree and are lowered *inside* the train
+step HLO so the rust coordinator never touches optimizer math: one call to
+the compiled step advances parameters, moments, and the warmup schedule.
+"""
+
+from __future__ import annotations
+
+from typing import Dict, NamedTuple, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .config import ModelConfig
+
+Params = Dict
+
+
+def lr_schedule(cfg: ModelConfig, step: jax.Array) -> jax.Array:
+    """Linear warmup to cfg.lr over cfg.warmup steps, then constant
+    (paper §A.2: warmup 500)."""
+    s = step.astype(jnp.float32)
+    warm = jnp.minimum(1.0, (s + 1.0) / float(max(1, cfg.warmup)))
+    return cfg.lr * warm
+
+
+def global_norm(tree) -> jax.Array:
+    leaves = jax.tree_util.tree_leaves(tree)
+    return jnp.sqrt(sum(jnp.sum(jnp.square(g)) for g in leaves))
+
+
+def clip_by_global_norm(grads, max_norm: float) -> Tuple[Params, jax.Array]:
+    gnorm = global_norm(grads)
+    scale = jnp.minimum(1.0, max_norm / (gnorm + 1e-6))
+    return jax.tree_util.tree_map(lambda g: g * scale, grads), gnorm
+
+
+# --------------------------------------------------------------------------- #
+# AdamW
+# --------------------------------------------------------------------------- #
+
+
+class AdamWState(NamedTuple):
+    m: Params
+    v: Params
+
+
+def adamw_init(params: Params) -> AdamWState:
+    zeros = lambda: jax.tree_util.tree_map(jnp.zeros_like, params)
+    return AdamWState(m=zeros(), v=zeros())
+
+
+def adamw_update(cfg: ModelConfig, params: Params, grads: Params,
+                 state: AdamWState, step: jax.Array,
+                 b1: float = 0.9, b2: float = 0.999, eps: float = 1e-8):
+    lr = lr_schedule(cfg, step)
+    t = step.astype(jnp.float32) + 1.0
+    bc1 = 1.0 - jnp.power(b1, t)
+    bc2 = 1.0 - jnp.power(b2, t)
+
+    new_m = jax.tree_util.tree_map(lambda m, g: b1 * m + (1 - b1) * g, state.m, grads)
+    new_v = jax.tree_util.tree_map(lambda v, g: b2 * v + (1 - b2) * g * g, state.v, grads)
+
+    def upd(p, m, v):
+        mh = m / bc1
+        vh = v / bc2
+        return p - lr * (mh / (jnp.sqrt(vh) + eps) + cfg.weight_decay * p)
+
+    new_p = jax.tree_util.tree_map(upd, params, new_m, new_v)
+    return new_p, AdamWState(new_m, new_v)
+
+
+# --------------------------------------------------------------------------- #
+# Adafactor (Shazeer & Stern 2018), as used by the paper's 1T recipe
+# --------------------------------------------------------------------------- #
+
+
+class AdafactorState(NamedTuple):
+    # one entry per leaf: for ndim>=2 leaves, (v_row, v_col); else (v, dummy)
+    v_row: Params
+    v_col: Params
+
+
+def _is_factored(x: jax.Array) -> bool:
+    return x.ndim >= 2
+
+
+def adafactor_init(params: Params) -> AdafactorState:
+    def row(p):
+        return jnp.zeros(p.shape[:-1], p.dtype) if _is_factored(p) else jnp.zeros_like(p)
+
+    def col(p):
+        return (
+            jnp.zeros(p.shape[:-2] + p.shape[-1:], p.dtype)
+            if _is_factored(p)
+            else jnp.zeros((1,), p.dtype)
+        )
+
+    return AdafactorState(
+        v_row=jax.tree_util.tree_map(row, params),
+        v_col=jax.tree_util.tree_map(col, params),
+    )
+
+
+def adafactor_update(cfg: ModelConfig, params: Params, grads: Params,
+                     state: AdafactorState, step: jax.Array,
+                     eps1: float = 1e-30, clip_threshold: float = 1.0):
+    lr = lr_schedule(cfg, step)
+    t = step.astype(jnp.float32) + 1.0
+    # beta2 schedule from the paper: 1 - t^-0.8
+    beta2 = 1.0 - jnp.power(t, -0.8)
+
+    def upd(p, g, vr, vc):
+        g2 = g * g + eps1
+        if _is_factored(p):
+            new_vr = beta2 * vr + (1 - beta2) * jnp.mean(g2, axis=-1)
+            new_vc = beta2 * vc + (1 - beta2) * jnp.mean(g2, axis=-2)
+            # factored second-moment estimate: v ~ outer(vr, vc) / mean(vr)
+            r = new_vr / jnp.mean(new_vr, axis=-1, keepdims=True)
+            denom = jnp.sqrt(r)[..., :, None] * jnp.sqrt(new_vc)[..., None, :]
+            u = g / denom
+        else:
+            new_vr = beta2 * vr + (1 - beta2) * g2
+            new_vc = vc
+            u = g / jnp.sqrt(new_vr)
+        # update clipping by RMS (d = 1.0)
+        rms_u = jnp.sqrt(jnp.mean(jnp.square(u)) + 1e-12)
+        u = u / jnp.maximum(1.0, rms_u / clip_threshold)
+        new_p = p - lr * u - lr * cfg.weight_decay * p
+        return new_p, new_vr, new_vc
+
+    flat_p, tree = jax.tree_util.tree_flatten(params)
+    flat_g = jax.tree_util.tree_leaves(grads)
+    flat_vr = jax.tree_util.tree_leaves(state.v_row)
+    flat_vc = jax.tree_util.tree_leaves(state.v_col)
+    out = [upd(p, g, vr, vc) for p, g, vr, vc in zip(flat_p, flat_g, flat_vr, flat_vc)]
+    new_p = jax.tree_util.tree_unflatten(tree, [o[0] for o in out])
+    new_vr = jax.tree_util.tree_unflatten(tree, [o[1] for o in out])
+    new_vc = jax.tree_util.tree_unflatten(tree, [o[2] for o in out])
+    return new_p, AdafactorState(new_vr, new_vc)
+
+
+# --------------------------------------------------------------------------- #
+# dispatch
+# --------------------------------------------------------------------------- #
+
+
+def opt_init(cfg: ModelConfig, params: Params):
+    if cfg.optimizer == "adamw":
+        return adamw_init(params)
+    if cfg.optimizer == "adafactor":
+        return adafactor_init(params)
+    raise ValueError(f"unknown optimizer {cfg.optimizer!r}")
+
+
+def opt_update(cfg: ModelConfig, params, grads, state, step):
+    if cfg.optimizer == "adamw":
+        return adamw_update(cfg, params, grads, state, step)
+    if cfg.optimizer == "adafactor":
+        return adafactor_update(cfg, params, grads, state, step)
+    raise ValueError(f"unknown optimizer {cfg.optimizer!r}")

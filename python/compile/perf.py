@@ -1,0 +1,111 @@
+"""L1/L2 performance analysis (EXPERIMENTS.md §Perf).
+
+L1: interpret-mode wall clock is NOT a TPU proxy, so the kernel is
+assessed structurally — VMEM working set and MXU-tile utilization of the
+fused expert-FFN grid step at every paper geometry, across candidate
+I-tile sizes. The chosen default must fit 16 MB VMEM everywhere and keep
+tile utilization at the roofline the geometry allows.
+
+L2: lowered-HLO statistics for the scan-vs-unroll ablation and the XLA
+cost analysis (flops / bytes accessed) of the step module.
+
+Usage: python -m compile.perf [--variant base-sim]
+"""
+
+from __future__ import annotations
+
+import argparse
+
+import jax
+import jax.numpy as jnp
+
+from . import config as cfglib
+from . import train
+from .kernels import moe_ffn as K
+
+
+def l1_table() -> list[dict]:
+    """VMEM + MXU estimates for the paper's Table-5 geometries."""
+    rows = []
+    # (name, M, I, C at k=1, workers D) — Table 5 rows
+    geoms = [
+        ("base", 1024, 4096, 1024 * 1.25 / 32, 8),
+        ("10B", 1024, 4096, 1024 * 1.25 / 128, 16),
+        ("100B", 1024, 4096, 1024 * 1.25 / 512, 128),
+        ("1T", 1024, 21248, 1024 * 1.25 / 960, 480),
+    ]
+    for name, m, i, c, d in geoms:
+        c = max(1, int(c))
+        for i_block in [256, 512, 1024, 2048]:
+            if i % i_block and i_block < i:
+                # non-dividing tiles are skipped by the kernel's picker
+                continue
+            blk = min(i_block, i)
+            rows.append(
+                {
+                    "geometry": name,
+                    "M": m,
+                    "I": i,
+                    "C": c,
+                    "i_block": blk,
+                    "vmem_mb": K.vmem_bytes(c * d, m, blk) / 1e6,
+                    "mxu_util_d1": K.mxu_utilization_estimate(c, m, blk),
+                    "mxu_util_cluster": K.mxu_utilization_estimate(c, m, blk, workers=d),
+                    "fits_vmem": K.vmem_bytes(c * d, m, blk) <= 16 * 1024 * 1024,
+                }
+            )
+    return rows
+
+
+def l2_stats(variant: str) -> dict:
+    """HLO size + cost analysis for scan vs unroll of one variant."""
+    cfg = cfglib.get(variant)
+    out = {}
+    for mode, scan in [("scan", True), ("unroll", False)]:
+        c = cfg.with_(name=f"{cfg.name}-{mode}", scan_layers=scan)
+        patches, tokens = train.batch_specs(c)
+        params_abs = jax.eval_shape(
+            train.init_fn(c), jax.ShapeDtypeStruct((), jnp.int32)
+        )[0]
+        lowered = jax.jit(train.eval_step_fn(c)).lower(params_abs, patches, tokens)
+        text = lowered.compiler_ir("stablehlo")
+        compiled = lowered.compile()
+        cost = compiled.cost_analysis()
+        if isinstance(cost, list):
+            cost = cost[0]
+        out[mode] = {
+            "stablehlo_chars": len(str(text)),
+            "flops": float(cost.get("flops", float("nan"))),
+            "bytes_accessed": float(cost.get("bytes accessed", float("nan"))),
+        }
+    return out
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--variant", default="base-sim")
+    args = ap.parse_args()
+
+    print("== L1: fused expert-FFN kernel, paper geometries ==")
+    print(f"{'geom':>6} {'M':>6} {'I':>6} {'C':>4} {'I_blk':>6} {'VMEM MB':>8} "
+          f"{'MXU@D=1':>8} {'MXU@D':>6} fits")
+    for r in l1_table():
+        print(
+            f"{r['geometry']:>6} {r['M']:>6} {r['I']:>6} {r['C']:>4} "
+            f"{r['i_block']:>6} {r['vmem_mb']:>8.2f} {r['mxu_util_d1']:>8.2f} "
+            f"{r['mxu_util_cluster']:>6.2f} {r['fits_vmem']}"
+        )
+
+    print(f"\n== L2: scan vs unroll ({args.variant}) ==")
+    stats = l2_stats(args.variant)
+    for mode, s in stats.items():
+        print(
+            f"{mode:>7}: stablehlo {s['stablehlo_chars']/1e3:.0f}k chars, "
+            f"flops {s['flops']/1e9:.2f}G, bytes {s['bytes_accessed']/1e6:.1f}M"
+        )
+    ratio = stats["unroll"]["stablehlo_chars"] / stats["scan"]["stablehlo_chars"]
+    print(f"unroll/scan HLO-size ratio: {ratio:.2f}x")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,70 @@
+"""Layer-2 entry points lowered to HLO: init / train_step / eval_step.
+
+These three functions are what ``aot.py`` lowers per variant and what the
+rust coordinator executes.  Their flattened argument/result orders are
+recorded in the artifact manifest; the train state (params + optimizer
+moments) round-trips as opaque device buffers on the rust side.
+"""
+
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .config import ModelConfig
+from .model import forward, init_params, loss_fn
+from .optim import clip_by_global_norm, opt_init, opt_update
+
+
+def init_fn(cfg: ModelConfig):
+    """seed (i32 scalar) -> flat train state (params..., opt moments...)."""
+
+    def init(seed: jax.Array):
+        key = jax.random.PRNGKey(seed)
+        params = init_params(cfg, key)
+        opt = opt_init(cfg, params)
+        return params, opt
+
+    return init
+
+
+def train_step_fn(cfg: ModelConfig):
+    """(params, opt, step i32, patches, tokens) ->
+    (params', opt', loss, aux, gnorm, load (layers,E), dropped (layers,))."""
+
+    def step_fn(params, opt, step, patches, tokens):
+        rng = jax.random.PRNGKey(step) if cfg.dropout > 0 else None
+
+        def objective(p):
+            total, r = loss_fn(p, patches, tokens, cfg, rng)
+            return total, r
+
+        (total, r), grads = jax.value_and_grad(objective, has_aux=True)(params)
+        if cfg.grad_clip > 0:
+            grads, gnorm = clip_by_global_norm(grads, cfg.grad_clip)
+        else:
+            from .optim import global_norm
+
+            gnorm = global_norm(grads)
+        new_params, new_opt = opt_update(cfg, params, grads, opt, step)
+        return new_params, new_opt, r.loss, r.aux_loss, gnorm, r.load, r.dropped
+
+    return step_fn
+
+
+def eval_step_fn(cfg: ModelConfig):
+    """(params, patches, tokens) -> (sum_nll, token_count) for exact PPL."""
+
+    def ev(params, patches, tokens):
+        r = forward(params, patches, tokens, cfg, rng=None)
+        return r.sum_nll, r.token_count
+
+    return ev
+
+
+def batch_specs(cfg: ModelConfig) -> Tuple[jax.ShapeDtypeStruct, jax.ShapeDtypeStruct]:
+    patches = jax.ShapeDtypeStruct((cfg.batch, cfg.patches, cfg.patch_dim), jnp.float32)
+    tokens = jax.ShapeDtypeStruct((cfg.batch, cfg.text_len), jnp.int32)
+    return patches, tokens

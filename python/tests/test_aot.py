@@ -1,0 +1,125 @@
+"""AOT lowering: HLO-text generation, manifest consistency, parser-
+compatibility guards (the rust runtime links xla_extension 0.5.1 whose HLO
+text parser predates several opcodes — anything we emit must stay inside
+its vocabulary)."""
+
+import json
+import os
+import re
+
+import jax
+import jax.numpy as jnp
+import pytest
+
+from compile import aot, train
+from compile.config import ModelConfig, get
+
+jax.config.update("jax_platform_name", "cpu")
+
+# HLO opcodes known to be ABSENT from the 0.5.1 text parser. If a model
+# change starts emitting one of these, the rust side will fail at load —
+# catch it here instead.
+FORBIDDEN_OPCODES = [" erf(", " erf-inv(", " topk(", " stochastic-convert("]
+
+
+def tiny():
+    return ModelConfig(
+        name="tiny-aot",
+        vocab_size=64,
+        hidden=16,
+        intermediate=32,
+        layers=1,
+        heads=2,
+        head_dim=8,
+        patch_dim=8,
+        num_experts=4,
+        batch=2,
+        patches=2,
+        text_len=8,
+    )
+
+
+class TestLowering:
+    def test_hlo_text_is_parseable_shape(self):
+        cfg = tiny()
+        patches, tokens = train.batch_specs(cfg)
+        lowered = jax.jit(train.eval_step_fn(cfg)).lower(
+            jax.eval_shape(train.init_fn(cfg), jax.ShapeDtypeStruct((), jnp.int32))[0],
+            patches,
+            tokens,
+        )
+        text = aot.to_hlo_text(lowered)
+        assert text.startswith("HloModule")
+        assert "ENTRY" in text
+
+    def test_no_forbidden_opcodes_in_tiny_modules(self):
+        cfg = tiny()
+        entry = aot.lower_variant(cfg, "/tmp/m6t-aot-test")
+        for fname in entry["files"].values():
+            text = open(os.path.join("/tmp/m6t-aot-test", fname)).read()
+            for op in FORBIDDEN_OPCODES:
+                assert op not in text, f"{fname} contains parser-unknown {op!r}"
+
+    def test_manifest_entry_consistency(self):
+        cfg = tiny()
+        entry = aot.lower_variant(cfg, "/tmp/m6t-aot-test")
+        assert entry["n_state"] == entry["n_params"] + entry["n_opt"]
+        assert len(entry["state_leaves"]) == entry["n_state"]
+        assert entry["param_count"] == cfg.param_count()
+        # leaf element count must equal the true param count for params
+        n = sum(
+            int(jnp.prod(jnp.array(l["shape"] or [1])))
+            for l in entry["state_leaves"][: entry["n_params"]]
+        )
+        assert n == cfg.param_count()
+
+    def test_step_io_contract(self):
+        cfg = tiny()
+        entry = aot.lower_variant(cfg, "/tmp/m6t-aot-test")
+        names = [o["name"] for o in entry["step_outputs"]]
+        assert names == ["loss", "aux_loss", "grad_norm", "load", "dropped"]
+        assert entry["step_outputs"][3]["shape"] == [cfg.layers, cfg.num_experts]
+        # step extra inputs: scalar step, patches, tokens
+        shapes = [tuple(i["shape"]) for i in entry["step_inputs"]]
+        assert shapes == [
+            (),
+            (cfg.batch, cfg.patches, cfg.patch_dim),
+            (cfg.batch, cfg.text_len),
+        ]
+
+
+@pytest.mark.skipif(
+    not os.path.exists("../artifacts/manifest.json"),
+    reason="run `make artifacts` first",
+)
+class TestRealManifest:
+    def manifest(self):
+        with open("../artifacts/manifest.json") as f:
+            return json.load(f)
+
+    def test_all_registry_variants_present(self):
+        from compile.config import VARIANTS
+
+        m = self.manifest()
+        missing = set(VARIANTS) - set(m["variants"])
+        assert not missing, f"artifacts stale, missing {missing}"
+
+    def test_files_exist_and_nonempty(self):
+        m = self.manifest()
+        for name, v in m["variants"].items():
+            for fname in v["files"].values():
+                path = os.path.join("../artifacts", name, fname)
+                assert os.path.getsize(path) > 1000, path
+
+    def test_param_counts_match_configs(self):
+        m = self.manifest()
+        for name, v in m["variants"].items():
+            assert v["param_count"] == get(name).param_count(), name
+
+    def test_no_forbidden_opcodes_anywhere(self):
+        m = self.manifest()
+        for name, v in m["variants"].items():
+            for fname in v["files"].values():
+                text = open(os.path.join("../artifacts", name, fname)).read()
+                for op in FORBIDDEN_OPCODES:
+                    assert op not in text, f"{name}/{fname} has {op!r}"

@@ -1,0 +1,211 @@
+"""L1 correctness: Pallas kernels vs pure-jnp oracles.
+
+The CORE correctness signal of the compile path: the fused MoE FFN kernel
+(forward + custom VJP) and the prototype routing kernel must match ref.py
+to tight tolerances over a hypothesis-driven sweep of shapes and seeds.
+"""
+
+import hypothesis
+import hypothesis.strategies as st
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile.kernels import moe_ffn as K
+from compile.kernels import ref
+from compile.kernels.routing import route_top1
+
+jax.config.update("jax_platform_name", "cpu")
+
+SETTINGS = dict(max_examples=20, deadline=None,
+                suppress_health_check=[hypothesis.HealthCheck.too_slow])
+
+
+def rand(key, *shape, scale=0.5):
+    return scale * jax.random.normal(key, shape)
+
+
+# --------------------------------------------------------------------------- #
+# moe_ffn forward
+# --------------------------------------------------------------------------- #
+
+
+@hypothesis.settings(**SETTINGS)
+@hypothesis.given(
+    e=st.integers(1, 6),
+    c=st.integers(1, 24),
+    m=st.sampled_from([8, 16, 48]),
+    i=st.sampled_from([16, 32, 64]),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_moe_ffn_fwd_matches_ref(e, c, m, i, seed):
+    ks = jax.random.split(jax.random.PRNGKey(seed), 3)
+    x = rand(ks[0], e, c, m)
+    w1 = rand(ks[1], e, m, i, scale=0.2)
+    w2 = rand(ks[2], e, i, m, scale=0.2)
+    got = K.moe_ffn(x, w1, w2, None)
+    want = ref.moe_ffn(x, w1, w2)
+    np.testing.assert_allclose(got, want, rtol=2e-5, atol=2e-5)
+
+
+@pytest.mark.parametrize("i_block", [8, 16, 32, 64])
+def test_moe_ffn_i_block_invariance(i_block):
+    """Any valid intermediate tile size gives the same result."""
+    ks = jax.random.split(jax.random.PRNGKey(0), 3)
+    x = rand(ks[0], 3, 8, 16)
+    w1 = rand(ks[1], 3, 16, 64, scale=0.2)
+    w2 = rand(ks[2], 3, 64, 16, scale=0.2)
+    base = ref.moe_ffn(x, w1, w2)
+    got = K.moe_ffn(x, w1, w2, i_block)
+    np.testing.assert_allclose(got, base, rtol=2e-5, atol=2e-5)
+
+
+def test_pick_i_block_handles_odd_sizes():
+    # any positive intermediate gets a dividing tile (worst case 1)
+    for i in [24, 7, 100, 21248]:
+        blk = K._pick_i_block(i, None)
+        assert blk >= 1 and i % blk == 0
+    # an explicit non-dividing request degrades to a divisor
+    assert 24 % K._pick_i_block(24, 5) == 0
+
+
+def test_pick_i_block_divides():
+    for i in [16, 64, 256, 512, 4096, 21248]:
+        blk = K._pick_i_block(i, None)
+        assert i % blk == 0, (i, blk)
+
+
+# --------------------------------------------------------------------------- #
+# moe_ffn backward (custom VJP with Pallas bwd kernels)
+# --------------------------------------------------------------------------- #
+
+
+@hypothesis.settings(**SETTINGS)
+@hypothesis.given(
+    e=st.integers(1, 4),
+    c=st.integers(1, 12),
+    m=st.sampled_from([8, 16]),
+    i=st.sampled_from([16, 32]),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_moe_ffn_grads_match_ref(e, c, m, i, seed):
+    ks = jax.random.split(jax.random.PRNGKey(seed), 3)
+    x = rand(ks[0], e, c, m)
+    w1 = rand(ks[1], e, m, i, scale=0.2)
+    w2 = rand(ks[2], e, i, m, scale=0.2)
+
+    def loss_k(x, w1, w2):
+        return jnp.sum(jnp.tanh(K.moe_ffn(x, w1, w2, None)))
+
+    def loss_r(x, w1, w2):
+        return jnp.sum(jnp.tanh(ref.moe_ffn(x, w1, w2)))
+
+    gk = jax.grad(loss_k, argnums=(0, 1, 2))(x, w1, w2)
+    gr = jax.grad(loss_r, argnums=(0, 1, 2))(x, w1, w2)
+    for a, b in zip(gk, gr):
+        np.testing.assert_allclose(a, b, rtol=5e-4, atol=1e-5)
+
+
+def test_gelu_grad_is_analytic_derivative():
+    x = jnp.linspace(-4, 4, 101)
+    auto = jax.vmap(jax.grad(lambda t: ref.gelu(t)))(x)
+    np.testing.assert_allclose(ref.gelu_grad(x), auto, rtol=1e-5, atol=1e-6)
+
+
+# --------------------------------------------------------------------------- #
+# routing kernel
+# --------------------------------------------------------------------------- #
+
+
+@hypothesis.settings(**SETTINGS)
+@hypothesis.given(
+    z=st.integers(1, 4),
+    t=st.integers(1, 64),
+    f=st.integers(1, 16),
+    capacity=st.integers(1, 32),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_routing_matches_ref(z, t, f, capacity, seed):
+    key = jax.random.PRNGKey(seed)
+    gates = jax.nn.softmax(jax.random.normal(key, (z, t, f)), axis=-1)
+    offsets = jnp.zeros((z, f))
+    got = route_top1(gates, offsets, capacity)
+    want = ref.route_top1(gates, offsets, capacity)
+    for g, w in zip(got, want):
+        np.testing.assert_array_equal(np.asarray(g), np.asarray(w))
+
+
+@hypothesis.settings(**SETTINGS)
+@hypothesis.given(
+    t=st.integers(1, 48),
+    f=st.integers(2, 8),
+    capacity=st.integers(1, 16),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_routing_invariants(t, f, capacity, seed):
+    """Capacity is never exceeded; positions are unique per expert; keep
+    accounting matches counts."""
+    key = jax.random.PRNGKey(seed)
+    gates = jax.nn.softmax(jax.random.normal(key, (1, t, f)), axis=-1)
+    idx, pos, keep, counts = (
+        np.asarray(a) for a in route_top1(gates, jnp.zeros((1, f)), capacity)
+    )
+    assert counts.max() <= capacity
+    kept_positions = {}
+    for ti in range(t):
+        if keep[0, ti] > 0:
+            assert pos[0, ti] < capacity
+            slot = (idx[0, ti], pos[0, ti])
+            assert slot not in kept_positions, "duplicate capacity slot"
+            kept_positions[slot] = ti
+    assert counts.sum() == keep.sum()
+
+
+def test_routing_offsets_shift_positions():
+    gates = jnp.broadcast_to(
+        jnp.array([[0.9, 0.1]]), (1, 4, 2)
+    )  # all tokens pick expert 0
+    off = jnp.array([[3.0, 0.0]])
+    idx, pos, keep, counts = route_top1(gates, off, 5)
+    np.testing.assert_array_equal(np.asarray(pos[0]), [3, 4, 5, 6])
+    np.testing.assert_array_equal(np.asarray(keep[0]), [1, 1, 0, 0])
+    assert counts[0, 0] == 5  # 3 offset + 2 kept
+
+
+def test_routing_zero_gradient():
+    """Routing decisions carry zero cotangent; gate-path gradients flow."""
+    key = jax.random.PRNGKey(1)
+    logits = jax.random.normal(key, (2, 8, 4))
+    off = jnp.zeros((2, 4))
+
+    def f(lg):
+        gates = jax.nn.softmax(lg, -1)
+        idx, pos, keep, counts = route_top1(gates, off, 3)
+        return jnp.sum(gates * keep[..., None])
+
+    g = jax.grad(f)(logits)
+    assert np.isfinite(np.asarray(g)).all()
+    assert np.abs(np.asarray(g)).sum() > 0
+
+
+# --------------------------------------------------------------------------- #
+# static analysis helpers (used by DESIGN.md §Perf)
+# --------------------------------------------------------------------------- #
+
+
+def test_vmem_budget_paper_geometry():
+    """The default tiling must fit the paper's base geometry in 16MB VMEM."""
+    c = 40  # base capacity
+    bytes_ = K.vmem_bytes(c, 1024, K.DEFAULT_I_BLOCK)
+    assert bytes_ < 16 * 1024 * 1024, bytes_
+
+
+def test_mxu_estimate_bounds():
+    assert 0.0 < K.mxu_utilization_estimate(40, 1024, 512) <= 1.0
+    # aligned shapes hit 100%
+    assert K.mxu_utilization_estimate(128, 1024, 512) == 1.0
+
+
+def test_fwd_flops_formula():
+    assert K.fwd_flops(2, 3, 4, 5) == 2 * (2 * 3 * 4 * 5 + 2 * 3 * 5 * 4)

@@ -1,0 +1,238 @@
+"""L2 model + optimizer tests: shapes, masking, loss behaviour, training
+dynamics on the smallest configs."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import model, optim, train
+from compile.config import BOS_ID, PAD_ID, ModelConfig, Routing, get
+
+jax.config.update("jax_platform_name", "cpu")
+
+
+def tiny(**kw) -> ModelConfig:
+    base = dict(
+        name="tiny",
+        vocab_size=64,
+        hidden=16,
+        intermediate=32,
+        layers=2,
+        heads=2,
+        head_dim=8,
+        patch_dim=8,
+        num_experts=4,
+        batch=2,
+        patches=2,
+        text_len=8,
+        warmup=2,
+        lr=1e-2,
+    )
+    base.update(kw)
+    return ModelConfig(**base)
+
+
+def batch_for(cfg, seed=0):
+    rng = np.random.RandomState(seed)
+    patches = rng.randn(cfg.batch, cfg.patches, cfg.patch_dim).astype(np.float32)
+    tokens = rng.randint(3, cfg.vocab_size, (cfg.batch, cfg.text_len)).astype(np.int32)
+    tokens[:, 0] = BOS_ID
+    return patches, tokens
+
+
+class TestForward:
+    def test_loss_near_log_vocab_at_init(self):
+        cfg = tiny()
+        params = model.init_params(cfg, jax.random.PRNGKey(0))
+        p, t = batch_for(cfg)
+        r = model.forward(params, p, t, cfg)
+        assert abs(float(r.loss) - np.log(cfg.vocab_size)) < 1.0
+
+    def test_pad_targets_ignored(self):
+        cfg = tiny()
+        params = model.init_params(cfg, jax.random.PRNGKey(0))
+        p, t = batch_for(cfg)
+        t_padded = t.copy()
+        t_padded[:, -3:] = PAD_ID
+        r = model.forward(params, p, t_padded, cfg)
+        # 8 positions; targets are tokens[1:]+PAD: with 3 trailing PADs,
+        # positions predicting PAD are masked
+        assert float(r.token_count) < cfg.batch * cfg.text_len
+
+    def test_load_and_dropped_shapes(self):
+        cfg = tiny()
+        params = model.init_params(cfg, jax.random.PRNGKey(0))
+        p, t = batch_for(cfg)
+        r = model.forward(params, p, t, cfg)
+        assert r.load.shape == (cfg.layers, cfg.num_experts)
+        assert r.dropped.shape == (cfg.layers,)
+        kept_plus_dropped = float(r.load.sum() + r.dropped.sum())
+        assert kept_plus_dropped == cfg.layers * cfg.tokens_per_batch
+
+    def test_scan_and_unroll_agree(self):
+        cfg_s = tiny(scan_layers=True)
+        cfg_u = tiny(scan_layers=False)
+        params = model.init_params(cfg_s, jax.random.PRNGKey(0))
+        p, t = batch_for(cfg_s)
+        rs = model.forward(params, p, t, cfg_s)
+        ru = model.forward(params, p, t, cfg_u)
+        np.testing.assert_allclose(float(rs.loss), float(ru.loss), rtol=1e-5)
+        np.testing.assert_allclose(rs.load, ru.load)
+
+    def test_prefix_mask_blocks_future_text(self):
+        """Changing a later text token must not affect earlier predictions."""
+        cfg = tiny()
+        params = model.init_params(cfg, jax.random.PRNGKey(0))
+        p, t = batch_for(cfg)
+        t2 = t.copy()
+        t2[:, -1] = (t2[:, -1] % 60) + 3  # change the last input token
+
+        def nll_at(tok, pos):
+            r = model.forward(params, p, tok, cfg)
+            return r  # loss aggregates; compare sum over early positions
+
+        # compare per-position nll by masking targets after pos
+        # simpler: loss over the first half must be identical
+        t_half = t.copy()
+        t_half[:, 5:] = PAD_ID
+        t2_half = t2.copy()
+        t2_half[:, 5:] = PAD_ID
+        r1 = model.forward(params, p, t_half, cfg)
+        r2 = model.forward(params, p, t2_half, cfg)
+        np.testing.assert_allclose(float(r1.loss), float(r2.loss), rtol=1e-6)
+
+    def test_patches_influence_predictions(self):
+        cfg = tiny()
+        params = model.init_params(cfg, jax.random.PRNGKey(0))
+        p, t = batch_for(cfg)
+        r1 = model.forward(params, p, t, cfg)
+        r2 = model.forward(params, p + 1.0, t, cfg)
+        assert not np.allclose(float(r1.loss), float(r2.loss))
+
+    def test_moe_attention_traces(self):
+        cfg = tiny(moe_attention=True, attn_num_experts=4)
+        params = model.init_params(cfg, jax.random.PRNGKey(0))
+        p, t = batch_for(cfg)
+        r = model.forward(params, p, t, cfg)
+        assert np.isfinite(float(r.loss))
+
+    def test_prototype_routing_traces(self):
+        cfg = tiny(routing=Routing("prototype", 2))
+        params = model.init_params(cfg, jax.random.PRNGKey(0))
+        p, t = batch_for(cfg)
+        r = model.forward(params, p, t, cfg)
+        assert np.isfinite(float(r.loss))
+
+    def test_init_std_scales_weights(self):
+        cfg_big = tiny(init_std=0.02)
+        cfg_small = tiny(init_std=0.002)
+        pb = model.init_params(cfg_big, jax.random.PRNGKey(0))
+        ps = model.init_params(cfg_small, jax.random.PRNGKey(0))
+        rb = float(jnp.std(pb["tok_embed"]))
+        rs = float(jnp.std(ps["tok_embed"]))
+        assert abs(rb / rs - 10.0) < 0.5
+
+
+class TestOptim:
+    def test_lr_warmup(self):
+        cfg = tiny(warmup=10, lr=1e-2)
+        lr0 = float(optim.lr_schedule(cfg, jnp.int32(0)))
+        lr5 = float(optim.lr_schedule(cfg, jnp.int32(4)))
+        lr20 = float(optim.lr_schedule(cfg, jnp.int32(20)))
+        assert lr0 < lr5 < lr20
+        assert abs(lr20 - 1e-2) < 1e-9
+
+    def test_clip_by_global_norm(self):
+        g = {"a": jnp.ones((4,)) * 10.0}
+        clipped, norm = optim.clip_by_global_norm(g, 1.0)
+        assert abs(float(norm) - 20.0) < 1e-5
+        assert float(optim.global_norm(clipped)) <= 1.0 + 1e-5
+
+    @pytest.mark.parametrize("opt_name", ["adamw", "adafactor"])
+    def test_loss_decreases(self, opt_name):
+        cfg = tiny(optimizer=opt_name, lr=1e-2 if opt_name == "adamw" else 5e-2)
+        step_fn = jax.jit(train.train_step_fn(cfg))
+        params, opt = train.init_fn(cfg)(jnp.int32(0))
+        p, t = batch_for(cfg)
+        losses = []
+        for i in range(30):
+            params, opt, loss, *_ = step_fn(params, opt, jnp.int32(i), p, t)
+            losses.append(float(loss))
+        assert losses[-1] < losses[0] - 0.5, losses[::10]
+
+    def test_adafactor_state_is_sublinear(self):
+        """The paper's reason for Adafactor at 1T: factored second moments."""
+        cfg = tiny(optimizer="adafactor")
+        params, opt = train.init_fn(cfg)(jnp.int32(0))
+        n_params = sum(x.size for x in jax.tree_util.tree_leaves(params))
+        n_opt = sum(x.size for x in jax.tree_util.tree_leaves(opt))
+        assert n_opt < 0.2 * n_params, (n_opt, n_params)
+
+    def test_adamw_state_is_2x(self):
+        cfg = tiny(optimizer="adamw")
+        params, opt = train.init_fn(cfg)(jnp.int32(0))
+        n_params = sum(x.size for x in jax.tree_util.tree_leaves(params))
+        n_opt = sum(x.size for x in jax.tree_util.tree_leaves(opt))
+        assert n_opt == 2 * n_params
+
+
+class TestTrainStep:
+    def test_train_step_outputs(self):
+        cfg = tiny()
+        step_fn = jax.jit(train.train_step_fn(cfg))
+        params, opt = train.init_fn(cfg)(jnp.int32(0))
+        p, t = batch_for(cfg)
+        out = step_fn(params, opt, jnp.int32(0), p, t)
+        new_params, new_opt, loss, aux, gnorm, load, dropped = out
+        assert load.shape == (cfg.layers, cfg.num_experts)
+        assert dropped.shape == (cfg.layers,)
+        assert float(gnorm) > 0
+        # params actually moved
+        delta = jax.tree_util.tree_map(
+            lambda a, b: float(jnp.abs(a - b).max()), params, new_params
+        )
+        assert max(jax.tree_util.tree_leaves(delta)) > 0
+
+    def test_eval_step_matches_forward(self):
+        cfg = tiny()
+        params, _ = train.init_fn(cfg)(jnp.int32(0))
+        p, t = batch_for(cfg)
+        nll, cnt = train.eval_step_fn(cfg)(params, p, t)
+        r = model.forward(params, p, t, cfg)
+        np.testing.assert_allclose(float(nll), float(r.sum_nll), rtol=1e-6)
+        assert float(cnt) == float(r.token_count)
+
+    def test_determinism(self):
+        cfg = tiny()
+        step_fn = jax.jit(train.train_step_fn(cfg))
+        p, t = batch_for(cfg)
+        outs = []
+        for _ in range(2):
+            params, opt = train.init_fn(cfg)(jnp.int32(7))
+            out = step_fn(params, opt, jnp.int32(0), p, t)
+            outs.append(float(out[2]))
+        assert outs[0] == outs[1]
+
+
+class TestRegistry:
+    def test_all_variants_constructible(self):
+        from compile.config import VARIANTS
+
+        assert len(VARIANTS) >= 20
+        for name, cfg in VARIANTS.items():
+            assert cfg.num_experts % cfg.prototypes == 0, name
+            assert cfg.capacity >= 1
+            assert cfg.param_count() > 0
+
+    def test_e2e_config_is_about_100m(self):
+        cfg = get("e2e-100m")
+        assert 80e6 < cfg.param_count() < 130e6
+
+    def test_recipe_configs(self):
+        good = get("recipe-1t")
+        bad = get("recipe-1t-divergent")
+        assert good.optimizer == "adafactor"
+        assert good.init_std == 0.002
+        assert bad.lr > good.lr
+        assert bad.init_std == 0.02

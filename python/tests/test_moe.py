@@ -1,0 +1,192 @@
+"""L2 MoE machinery: dispatch/combine algebra, capacity semantics, aux
+loss, top-k vs prototyping equivalences."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import moe
+from compile.config import ModelConfig, Routing
+
+jax.config.update("jax_platform_name", "cpu")
+
+
+def cfg_with(**kw) -> ModelConfig:
+    base = dict(
+        name="t",
+        vocab_size=64,
+        hidden=16,
+        intermediate=32,
+        layers=1,
+        heads=2,
+        head_dim=8,
+        patch_dim=8,
+        num_experts=4,
+        batch=2,
+        patches=2,
+        text_len=6,
+    )
+    base.update(kw)
+    return ModelConfig(**base)
+
+
+def tokens_and_router(cfg, seed=0):
+    key = jax.random.PRNGKey(seed)
+    t = cfg.tokens_per_batch
+    x = jax.random.normal(key, (t, cfg.hidden))
+    rw = 0.1 * jax.random.normal(
+        jax.random.fold_in(key, 1),
+        (cfg.hidden, cfg.prototypes, cfg.experts_per_prototype),
+    )
+    return x, rw
+
+
+class TestRoute:
+    def test_combine_dispatch_shapes(self):
+        cfg = cfg_with()
+        x, rw = tokens_and_router(cfg)
+        r = moe.route_cfg(x, rw, cfg)
+        t, z, f, c = r.combine.shape
+        assert (t, z, f) == (cfg.tokens_per_batch, 1, 4)
+        assert c == cfg.capacity
+        assert r.dispatch.shape == r.combine.shape
+        assert r.load.shape == (cfg.num_experts,)
+
+    def test_dispatch_is_indicator_of_combine(self):
+        cfg = cfg_with()
+        x, rw = tokens_and_router(cfg)
+        r = moe.route_cfg(x, rw, cfg)
+        np.testing.assert_array_equal(
+            np.asarray(r.dispatch) > 0, np.asarray(r.combine) > 0
+        )
+        assert set(np.unique(np.asarray(r.dispatch))) <= {0.0, 1.0}
+
+    def test_top1_each_kept_token_one_slot(self):
+        cfg = cfg_with()
+        x, rw = tokens_and_router(cfg)
+        r = moe.route_cfg(x, rw, cfg)
+        per_token = np.asarray(r.dispatch).reshape(x.shape[0], -1).sum(-1)
+        assert set(np.unique(per_token)) <= {0.0, 1.0}
+
+    def test_topk_two_slots_when_capacity_ample(self):
+        cfg = cfg_with(routing=Routing("topk", 2), capacity_factor=8.0)
+        x, rw = tokens_and_router(cfg)
+        r = moe.route_cfg(x, rw, cfg)
+        per_token = np.asarray(r.dispatch).reshape(x.shape[0], -1).sum(-1)
+        np.testing.assert_array_equal(per_token, 2.0)
+        assert float(r.dropped) == 0.0
+
+    def test_topk_gates_renormalized(self):
+        cfg = cfg_with(routing=Routing("topk", 2), capacity_factor=8.0)
+        x, rw = tokens_and_router(cfg)
+        r = moe.route_cfg(x, rw, cfg)
+        sums = np.asarray(r.combine).reshape(x.shape[0], -1).sum(-1)
+        np.testing.assert_allclose(sums, 1.0, rtol=1e-4)
+
+    def test_prototype_one_expert_per_group(self):
+        cfg = cfg_with(routing=Routing("prototype", 2), capacity_factor=8.0)
+        x, rw = tokens_and_router(cfg)
+        r = moe.route_cfg(x, rw, cfg)
+        d = np.asarray(r.dispatch)  # (T, 2, 2, C)
+        per_group = d.sum(axis=(2, 3))
+        np.testing.assert_array_equal(per_group, 1.0)
+
+    def test_load_excludes_padding(self):
+        """Paper §3.1: padding slots don't count as compute load."""
+        cfg = cfg_with()
+        x, rw = tokens_and_router(cfg)
+        r = moe.route_cfg(x, rw, cfg)
+        kept = float(np.asarray(r.load).sum())
+        assert kept + float(r.dropped) == cfg.tokens_per_batch
+
+    def test_tiny_capacity_drops(self):
+        cfg = cfg_with(capacity_factor=0.01)
+        assert cfg.capacity == 1
+        x, rw = tokens_and_router(cfg)
+        r = moe.route_cfg(x, rw, cfg)
+        assert float(r.dropped) > 0
+        assert np.asarray(r.load).max() <= 1
+
+    def test_aux_loss_near_one_when_balanced(self):
+        """The mesh-tf aux loss is ~1 for uniform assignment."""
+        cfg = cfg_with(num_experts=4, capacity_factor=8.0)
+        t = cfg.tokens_per_batch
+        # craft logits that spread tokens uniformly round-robin
+        logits = jnp.eye(4)[jnp.arange(t) % 4] * 10.0
+        gates = jax.nn.softmax(logits, -1)[None]
+        # route() consumes x/router; call the internals via route with a
+        # one-hot-ish router: simpler to check density math directly
+        density = jnp.mean(jax.nn.one_hot(jnp.argmax(gates, -1), 4), axis=1)
+        proxy = jnp.mean(gates, axis=1)
+        aux = jnp.mean(jnp.sum(density * proxy, -1)) * 4
+        assert 0.9 < float(aux) < 1.1
+
+    def test_gradients_flow_to_router(self):
+        cfg = cfg_with()
+        x, rw = tokens_and_router(cfg)
+
+        def f(rw):
+            r = moe.route_cfg(x, rw, cfg)
+            return jnp.sum(r.combine)
+
+        g = jax.grad(f)(rw)
+        assert float(jnp.abs(g).sum()) > 0
+
+
+class TestMoeFfnLayer:
+    def test_output_shape_and_residual_zero_for_dropped(self):
+        cfg = cfg_with(capacity_factor=0.01)  # capacity 1: most tokens drop
+        x, rw = tokens_and_router(cfg)
+        key = jax.random.PRNGKey(3)
+        w1 = 0.1 * jax.random.normal(key, (4, 16, 32))
+        w2 = 0.1 * jax.random.normal(jax.random.fold_in(key, 1), (4, 32, 16))
+        out, r = moe.moe_ffn_layer(x, rw, w1, w2, cfg)
+        assert out.shape == x.shape
+        # dropped tokens contribute exactly zero (residual path carries them)
+        d = np.asarray(r.dispatch).reshape(x.shape[0], -1).sum(-1)
+        dropped_rows = np.asarray(out)[d == 0]
+        np.testing.assert_allclose(dropped_rows, 0.0, atol=1e-6)
+
+    def test_pallas_and_ref_paths_agree(self):
+        cfg = cfg_with(capacity_factor=4.0)
+        x, rw = tokens_and_router(cfg)
+        key = jax.random.PRNGKey(4)
+        w1 = 0.1 * jax.random.normal(key, (4, 16, 32))
+        w2 = 0.1 * jax.random.normal(jax.random.fold_in(key, 1), (4, 32, 16))
+        a, _ = moe.moe_ffn_layer(x, rw, w1, w2, cfg, use_pallas=True)
+        b, _ = moe.moe_ffn_layer(x, rw, w1, w2, cfg, use_pallas=False)
+        np.testing.assert_allclose(a, b, rtol=2e-5, atol=2e-5)
+
+    def test_equal_experts_topk_equals_sum_of_gated(self):
+        """With ample capacity the layer output equals the explicit sum of
+        gated expert FFNs — the defining property of Eq. 1/3."""
+        cfg = cfg_with(routing=Routing("prototype", 2), capacity_factor=16.0)
+        x, rw = tokens_and_router(cfg)
+        key = jax.random.PRNGKey(5)
+        w1 = 0.1 * jax.random.normal(key, (4, 16, 32))
+        w2 = 0.1 * jax.random.normal(jax.random.fold_in(key, 1), (4, 32, 16))
+        out, r = moe.moe_ffn_layer(x, rw, w1, w2, cfg)
+
+        # manual: for each token, for each prototype, the argmax expert's
+        # FFN output weighted by its gate
+        from compile.kernels import ref
+
+        logits = jnp.einsum("tm,mzf->ztf", x, rw)
+        gates = jax.nn.softmax(logits, -1)  # (2, T, 2)
+        want = jnp.zeros_like(x)
+        for z in range(2):
+            idx = jnp.argmax(gates[z], -1)  # (T,)
+            for t in range(x.shape[0]):
+                e = z * 2 + int(idx[t])
+                h = ref.gelu(x[t] @ w1[e])
+                want = want.at[t].add(gates[z, t, idx[t]] * (h @ w2[e]))
+        np.testing.assert_allclose(out, want, rtol=1e-4, atol=1e-5)
+
+
+class TestCapacitySemantics:
+    @pytest.mark.parametrize("k,mode,expect_rel", [(2, "k", 2), (4, "k", 4), (2, "1", 1), (4, "1", 1)])
+    def test_eq2(self, k, mode, expect_rel):
+        base = cfg_with().capacity
+        c = cfg_with(routing=Routing("topk", k), capacity_mode=mode).capacity
+        assert c == expect_rel * base

@@ -1,0 +1,48 @@
+//! Smoke test for the AOT bridge: a tiny stateful two-output HLO module
+//! (see /tmp is not used — the module ships with the repo test artifacts).
+//! Kept as a binary so `make smoke` can verify the PJRT + untuple patch
+//! wiring without the full artifact set. The real coverage lives in
+//! rust/tests/.
+
+use anyhow::Result;
+
+fn main() -> Result<()> {
+    let client = xla::PjRtClient::cpu().map_err(|e| anyhow::anyhow!("{e}"))?;
+    println!(
+        "platform={} devices={}",
+        client.platform_name(),
+        client.device_count()
+    );
+    // Build fn(w, x) = (w + 0.5x, sum((w + 0.5x) * x)) directly with the
+    // XlaBuilder — no python needed for the smoke path.
+    let b = xla::XlaBuilder::new("smoke");
+    let shape = xla::ArrayShape::new::<f32>(vec![4]);
+    let w = b.parameter_s(0, &xla::Shape::Array(shape.clone()), "w").map_err(err)?;
+    let x = b.parameter_s(1, &xla::Shape::Array(shape), "x").map_err(err)?;
+    let half = b.c0(0.5f32).map_err(err)?;
+    let nw = (w + (x.clone() * half).map_err(err)?).map_err(err)?;
+    let loss = (nw.clone() * x).map_err(err)?.reduce_sum(&[0], false).map_err(err)?;
+    let comp = b.build(&b.tuple(&[nw, loss]).map_err(err)?).map_err(err)?;
+    let exe = client.compile(&comp).map_err(err)?;
+
+    let w0 = xla::Literal::vec1(&[0f32, 0., 0., 0.]);
+    let x0 = xla::Literal::vec1(&[1f32, 2., 3., 4.]);
+    let out = exe.execute::<xla::Literal>(&[w0, x0.clone()]).map_err(err)?;
+    assert_eq!(out[0].len(), 2, "untuple_result patch must flatten outputs");
+    let loss1 = out[0][1].to_literal_sync().map_err(err)?.to_vec::<f32>().map_err(err)?[0];
+    // feed the state buffer back without a host round-trip
+    let xb = client.buffer_from_host_literal(None, &x0).map_err(err)?;
+    let mut bufs = out.into_iter().next().unwrap();
+    let _ = bufs.pop();
+    let wb = bufs.pop().unwrap();
+    let out2 = exe.execute_b::<xla::PjRtBuffer>(&[wb, xb]).map_err(err)?;
+    let loss2 = out2[0][1].to_literal_sync().map_err(err)?.to_vec::<f32>().map_err(err)?[0];
+    assert_eq!(loss1, 15.0);
+    assert_eq!(loss2, 30.0);
+    println!("SMOKE OK: untupled outputs + device-resident state");
+    Ok(())
+}
+
+fn err(e: xla::Error) -> anyhow::Error {
+    anyhow::anyhow!("{e}")
+}

@@ -1,0 +1,266 @@
+//! Cluster simulator: a discrete cost model of the paper's Whale testbed
+//! (single-GPU V100-32GB workers on 100 Gb RDMA), standing in for the
+//! 8..480-GPU clusters we do not have (DESIGN.md §2).
+//!
+//! The model reproduces the *mechanisms* that create the paper's systems
+//! numbers:
+//!  * expert compute scales with capacity C (padding included) — Table 1;
+//!  * the top-k router serializes k argmax/cumsum rounds, each paying a
+//!    fixed framework dispatch cost, while k top-1 prototyping routes all
+//!    prototypes in one parallel round — the Table-2 asymmetry;
+//!  * all-to-all dispatch/combine moves O(ECM) bytes per layer per
+//!    direction (§A.3), twice more on the backward pass;
+//!  * dense (non-expert) gradients are data-parallel all-reduced; expert
+//!    gradients stay sharded.
+//!
+//! One free constant (per-layer framework overhead) is calibrated from a
+//! single anchor cell of Table 2 (Base/top-2 = 218.2 ms/step); everything
+//! else is predicted. `tests` assert the calibrated model lands within
+//! tolerance of the paper's other known cells.
+
+use crate::config::{CapacityMode, ModelConfig, Routing};
+use crate::flops::forward_flops;
+
+/// Hardware + framework constants of one simulated worker.
+#[derive(Debug, Clone)]
+pub struct HardwareModel {
+    /// effective matmul throughput, FLOP/s (V100 mixed precision under TF:
+    /// ~30% of the 125 TFLOP/s tensor-core peak)
+    pub flops_eff: f64,
+    /// HBM bandwidth, bytes/s (V100: 900 GB/s)
+    pub mem_bw: f64,
+    /// per-worker RDMA bandwidth, bytes/s (100 Gb/s)
+    pub net_bw: f64,
+    /// all-to-all per-hop latency, seconds
+    pub a2a_latency: f64,
+    /// cost of one serialized routing round (argmax+cumsum+masking kernel
+    /// chain dispatch under TF1), seconds
+    pub routing_round: f64,
+    /// extra cost per additional prototype in the parallel router
+    pub proto_overhead: f64,
+    /// fixed per-layer framework overhead (einsum/transpose scheduling),
+    /// seconds — the calibrated constant
+    pub framework_layer: f64,
+    /// fixed per-step overhead (session run, input pipeline), seconds
+    pub framework_step: f64,
+}
+
+impl HardwareModel {
+    /// V100-32GB + TF1.15/Whale defaults, pre-calibration.
+    pub fn v100() -> Self {
+        Self {
+            flops_eff: 37.5e12,
+            mem_bw: 900e9,
+            net_bw: 12.5e9,
+            a2a_latency: 30e-6,
+            routing_round: 1.5e-3,
+            proto_overhead: 0.5e-3,
+            framework_layer: 25e-3,
+            framework_step: 10e-3,
+        }
+    }
+
+    /// Calibrate `framework_layer` so that `cfg` under `routing`/`mode`
+    /// predicts exactly `target_ms` — one-point anchor calibration.
+    pub fn calibrated_to(
+        mut self,
+        cfg: &ModelConfig,
+        routing: Routing,
+        mode: CapacityMode,
+        target_ms: f64,
+    ) -> Self {
+        self.framework_layer = 0.0;
+        let base = simulate_step(cfg, routing, mode, &self).total_ms();
+        let residual_ms = target_ms - base;
+        self.framework_layer = (residual_ms / cfg.layers as f64 / 1e3).max(0.0);
+        self
+    }
+}
+
+/// Per-phase timing of one simulated training step (milliseconds).
+#[derive(Debug, Clone, Default)]
+pub struct StepTime {
+    pub attention_ms: f64,
+    pub gating_ms: f64,
+    pub dispatch_combine_ms: f64,
+    pub expert_ms: f64,
+    pub a2a_ms: f64,
+    pub head_ms: f64,
+    pub allreduce_ms: f64,
+    pub optimizer_ms: f64,
+    pub framework_ms: f64,
+}
+
+impl StepTime {
+    pub fn total_ms(&self) -> f64 {
+        self.attention_ms
+            + self.gating_ms
+            + self.dispatch_combine_ms
+            + self.expert_ms
+            + self.a2a_ms
+            + self.head_ms
+            + self.allreduce_ms
+            + self.optimizer_ms
+            + self.framework_ms
+    }
+}
+
+/// Simulate one training step of `cfg` with the given routing strategy.
+pub fn simulate_step(
+    cfg: &ModelConfig,
+    routing: Routing,
+    mode: CapacityMode,
+    hw: &HardwareModel,
+) -> StepTime {
+    let f = forward_flops(cfg, routing, mode);
+    let l = cfg.layers as f64;
+    let d = cfg.workers.max(1) as f64;
+    // forward + backward ~ 3x forward FLOPs for matmul-dominated graphs
+    let fb = 3.0;
+    let ms = |flops: f64| flops / hw.flops_eff * 1e3;
+
+    let mut t = StepTime::default();
+    t.attention_ms = ms(f.attention) * fb;
+    t.expert_ms = ms(f.expert_ffn) * fb;
+    t.dispatch_combine_ms = ms(f.dispatch_combine) * fb;
+    t.head_ms = ms(f.embed_head) * fb;
+
+    // routing: gate einsum FLOPs + the serialized rounds (fwd only — the
+    // backward of argmax/cumsum is folded into the round constant)
+    let rounds = routing.rounds() as f64;
+    let protos = routing.prototypes() as f64;
+    t.gating_ms =
+        ms(f.gating) * fb + l * (rounds * hw.routing_round + (protos - 1.0) * hw.proto_overhead) * 1e3;
+
+    // all-to-all: dispatch + combine on forward, their transposes on
+    // backward => 4 transfers per MoE layer
+    let a2a_one = f.a2a_bytes_per_layer / hw.net_bw + hw.a2a_latency * (d - 1.0).max(0.0);
+    t.a2a_ms = l * 4.0 * a2a_one * 1e3;
+
+    // data-parallel all-reduce of dense (non-expert) gradients:
+    // ring all-reduce moves 2 x bytes x (D-1)/D
+    let dense_params = dense_param_count(cfg) as f64;
+    let ar_bytes = 2.0 * dense_params * 4.0 * (d - 1.0) / d.max(1.0);
+    t.allreduce_ms = ar_bytes / hw.net_bw * 1e3;
+
+    // optimizer update: memory-bound pass over the worker's parameter shard
+    // (experts sharded E/D per worker + full dense replica); AdamW touches
+    // p, g, m, v read + p, m, v write ~ 28 bytes/param
+    let expert_params = (cfg.param_count() - dense_param_count(cfg)) as f64 / d;
+    let shard = dense_params + expert_params;
+    let opt_bytes_per_param = if cfg.optimizer == "adafactor" { 12.0 } else { 28.0 };
+    t.optimizer_ms = shard * opt_bytes_per_param / hw.mem_bw * 1e3;
+
+    t.framework_ms = (l * hw.framework_layer + hw.framework_step) * 1e3;
+    t
+}
+
+/// Parameters replicated on every worker (everything but the experts).
+pub fn dense_param_count(cfg: &ModelConfig) -> u64 {
+    let m = cfg.hidden as u64;
+    let h = (cfg.heads * cfg.head_dim) as u64;
+    let embed =
+        cfg.vocab_size as u64 * m + cfg.patch_dim as u64 * m + cfg.seq_len() as u64 * m;
+    let attn = if cfg.moe_attention { 0 } else { 4 * m * h };
+    let router = m * cfg.num_experts as u64;
+    let ln = 4 * m;
+    embed + cfg.layers as u64 * (attn + router + ln) + 2 * m
+}
+
+/// The calibrated Table-2 simulator: anchors on Base/top-2 = 218.2 ms.
+pub fn table2_hardware() -> HardwareModel {
+    let base = crate::config::paper::base();
+    HardwareModel::v100().calibrated_to(
+        &base,
+        Routing::TopK(2),
+        CapacityMode::Times1,
+        218.2,
+    )
+}
+
+/// Steps/second at paper scale — drives the Fig-6 wall-clock axis.
+pub fn steps_per_second(cfg: &ModelConfig, routing: Routing, mode: CapacityMode) -> f64 {
+    let hw = table2_hardware();
+    1e3 / simulate_step(cfg, routing, mode, &hw).total_ms()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::paper;
+
+    fn predict(cfg: &ModelConfig, r: Routing) -> f64 {
+        let hw = table2_hardware();
+        simulate_step(cfg, r, CapacityMode::Times1, &hw).total_ms()
+    }
+
+    #[test]
+    fn anchor_reproduces_exactly() {
+        let ms = predict(&paper::base(), Routing::TopK(2));
+        assert!((ms - 218.2).abs() < 0.5, "anchor {ms}");
+    }
+
+    #[test]
+    fn table2_known_cells_within_tolerance() {
+        // paper Table 2 (capacity 1x): Base 2top1=220.1, 4top1=225.3;
+        // 10B: top2=493.0, 2top1=466.9, 4top1=473.9
+        let base = paper::base();
+        let ten = paper::ten_b();
+        let cells = [
+            (&base, Routing::Prototype(2), 220.1),
+            (&base, Routing::Prototype(4), 225.3),
+            (&ten, Routing::TopK(2), 493.0),
+            (&ten, Routing::Prototype(2), 466.9),
+            (&ten, Routing::Prototype(4), 473.9),
+        ];
+        for (cfg, r, want) in cells {
+            let got = predict(cfg, r);
+            let rel = (got - want).abs() / want;
+            assert!(
+                rel < 0.15,
+                "{}/{}: predicted {got:.1} vs paper {want} (rel {rel:.2})",
+                cfg.name,
+                r.name()
+            );
+        }
+    }
+
+    #[test]
+    fn topk_slows_with_k_prototyping_does_not() {
+        let base = paper::base();
+        let t1 = predict(&base, Routing::TopK(1));
+        let t2 = predict(&base, Routing::TopK(2));
+        let t4 = predict(&base, Routing::TopK(4));
+        let p2 = predict(&base, Routing::Prototype(2));
+        let p4 = predict(&base, Routing::Prototype(4));
+        assert!(t4 > t2 && t2 > t1, "topk must serialize: {t1} {t2} {t4}");
+        // the paper's claim: k top-1 stays near top-1 while top-k grows
+        assert!((p4 - t1) < (t4 - t1) * 0.5, "p4 {p4} t4 {t4} t1 {t1}");
+        assert!(p4 - p2 < t4 - t2, "prototype k-scaling must be flatter");
+    }
+
+    #[test]
+    fn capacity_kx_costs_more() {
+        let base = paper::base();
+        let hw = table2_hardware();
+        let limited = simulate_step(&base, Routing::TopK(4), CapacityMode::Times1, &hw);
+        let full = simulate_step(&base, Routing::TopK(4), CapacityMode::TimesK, &hw);
+        assert!(full.total_ms() > limited.total_ms() * 1.2);
+        assert!(full.expert_ms > limited.expert_ms * 3.5); // ~4x capacity
+    }
+
+    #[test]
+    fn one_t_step_time_is_minutes_scale_sane() {
+        // 1T on 480 workers: the simulator should produce a finite,
+        // plausible step time (paper trained 30k steps in days)
+        let ms = predict(&paper::one_t(), Routing::Prototype(2));
+        assert!((200.0..60_000.0).contains(&ms), "1T step {ms} ms");
+    }
+
+    #[test]
+    fn dense_params_exclude_experts() {
+        let base = paper::base();
+        let dense = dense_param_count(&base);
+        assert!(dense < base.param_count() / 10, "experts dominate: {dense}");
+    }
+}

@@ -1,0 +1,360 @@
+//! Experiment configuration: the rust-side mirror of
+//! `python/compile/config.py` plus the *paper-scale* presets (Table 5) used
+//! by the analytical FLOPs model and the cluster simulator.
+//!
+//! Two kinds of configs coexist:
+//!  * **runnable variants** — loaded from `artifacts/manifest.json`; their
+//!    geometry comes from the python registry that lowered the HLO.
+//!  * **paper presets** — base/10B/100B/1T at the paper's true scale; never
+//!    executed, only analyzed (Tables 1-2, Fig 6).
+
+use crate::util::json::Value;
+
+/// Routing strategy (paper §3.2/§3.3).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum Routing {
+    /// GShard-style top-k over all experts: k sequential argmax rounds.
+    TopK(u32),
+    /// k top-1 expert prototyping: k parallel routers over E/k experts each.
+    Prototype(u32),
+}
+
+impl Routing {
+    /// Activated experts per token.
+    pub fn k(&self) -> u32 {
+        match self {
+            Routing::TopK(k) | Routing::Prototype(k) => *k,
+        }
+    }
+    /// Sequential argmax rounds (the paper's efficiency problem, Table 2).
+    pub fn rounds(&self) -> u32 {
+        match self {
+            Routing::TopK(k) => *k,
+            Routing::Prototype(_) => 1,
+        }
+    }
+    /// Parallel routers.
+    pub fn prototypes(&self) -> u32 {
+        match self {
+            Routing::TopK(_) => 1,
+            Routing::Prototype(k) => *k,
+        }
+    }
+    pub fn name(&self) -> String {
+        match self {
+            Routing::TopK(k) => format!("top{k}"),
+            Routing::Prototype(k) => format!("{k}top1"),
+        }
+    }
+    pub fn parse(s: &str) -> Option<Routing> {
+        if let Some(k) = s.strip_prefix("top") {
+            return k.parse().ok().map(Routing::TopK);
+        }
+        if let Some(k) = s.strip_suffix("top1") {
+            return k.parse().ok().map(Routing::Prototype);
+        }
+        None
+    }
+}
+
+/// Capacity policy: the paper's "Capacity kx" vs "Capacity 1x" (Table 1/3).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum CapacityMode {
+    TimesK,
+    Times1,
+}
+
+impl CapacityMode {
+    pub fn parse(s: &str) -> Option<Self> {
+        match s {
+            "k" => Some(CapacityMode::TimesK),
+            "1" => Some(CapacityMode::Times1),
+            _ => None,
+        }
+    }
+    pub fn name(&self) -> &'static str {
+        match self {
+            CapacityMode::TimesK => "kx",
+            CapacityMode::Times1 => "1x",
+        }
+    }
+}
+
+/// Full model/experiment geometry. Field names follow the paper's notation
+/// table (§A.3): M hidden, I intermediate, E experts, C capacity, T tokens.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ModelConfig {
+    pub name: String,
+    pub vocab_size: usize,
+    pub hidden: usize,       // M
+    pub intermediate: usize, // I
+    pub layers: usize,
+    pub heads: usize,
+    pub head_dim: usize,
+    pub patch_dim: usize,
+    pub num_experts: usize, // E
+    pub routing: Routing,
+    pub capacity_factor: f64, // gamma
+    pub capacity_mode: CapacityMode,
+    pub aux_loss_coef: f64,
+    pub moe_attention: bool,
+    pub attn_num_experts: usize,
+    pub batch: usize,   // B per worker
+    pub patches: usize, // P
+    pub text_len: usize,
+    pub optimizer: String,
+    pub lr: f64,
+    pub warmup: usize,
+    pub init_std: f64,
+    /// number of workers the paper ran this row on (Table 5); used only by
+    /// the cluster simulator.
+    pub workers: usize,
+}
+
+impl ModelConfig {
+    pub fn seq_len(&self) -> usize {
+        self.patches + self.text_len
+    }
+    /// Tokens per worker per step (T in Eq. 2).
+    pub fn tokens_per_batch(&self) -> usize {
+        self.batch * self.seq_len()
+    }
+    /// Per-expert capacity C (Eq. 2) under the configured policy.
+    pub fn capacity(&self) -> usize {
+        let k_eff = match self.capacity_mode {
+            CapacityMode::TimesK => self.routing.k() as f64,
+            CapacityMode::Times1 => 1.0,
+        };
+        let c = k_eff * self.tokens_per_batch() as f64 / self.num_experts as f64
+            * self.capacity_factor;
+        (c.ceil() as usize).max(1)
+    }
+    /// Capacity with an explicit override of routing/capacity-mode — used by
+    /// the FLOPs/simulator sweeps so one preset covers all five strategies.
+    pub fn capacity_for(&self, routing: Routing, mode: CapacityMode) -> usize {
+        let k_eff = match mode {
+            CapacityMode::TimesK => routing.k() as f64,
+            CapacityMode::Times1 => 1.0,
+        };
+        let c = k_eff * self.tokens_per_batch() as f64 / self.num_experts as f64
+            * self.capacity_factor;
+        (c.ceil() as usize).max(1)
+    }
+    /// Exact parameter count — mirrors `ModelConfig.param_count()` in python
+    /// (asserted equal in the integration tests via the manifest).
+    pub fn param_count(&self) -> u64 {
+        let m = self.hidden as u64;
+        let i = self.intermediate as u64;
+        let e = self.num_experts as u64;
+        let h = (self.heads * self.head_dim) as u64;
+        let embed = self.vocab_size as u64 * m
+            + self.patch_dim as u64 * m
+            + self.seq_len() as u64 * m;
+        let attn = if self.moe_attention {
+            let ea = self.attn_num_experts as u64;
+            4 * ea * m * h + 4 * m * ea
+        } else {
+            4 * m * h
+        };
+        let moe_ffn = e * (m * i + i * m) + m * e;
+        let ln = 2 * 2 * m;
+        let per_layer = attn + moe_ffn + ln;
+        embed + self.layers as u64 * per_layer + 2 * m
+    }
+
+    /// Parse the `config` object embedded in the artifact manifest.
+    pub fn from_manifest(v: &Value) -> anyhow::Result<ModelConfig> {
+        let g = |k: &str| -> anyhow::Result<&Value> {
+            v.get(k).ok_or_else(|| anyhow::anyhow!("manifest config missing {k:?}"))
+        };
+        let routing = g("routing")?;
+        let kind = routing
+            .get("kind")
+            .and_then(|x| x.as_str())
+            .ok_or_else(|| anyhow::anyhow!("bad routing.kind"))?;
+        let k = routing.get("k").and_then(|x| x.as_i64()).unwrap_or(1) as u32;
+        let routing = match kind {
+            "topk" => Routing::TopK(k),
+            "prototype" => Routing::Prototype(k),
+            other => anyhow::bail!("unknown routing kind {other:?}"),
+        };
+        let cap_mode = match g("capacity_mode")?.as_str() {
+            Some("k") => CapacityMode::TimesK,
+            Some("1") => CapacityMode::Times1,
+            other => anyhow::bail!("unknown capacity mode {other:?}"),
+        };
+        let usize_of = |k: &str| -> anyhow::Result<usize> {
+            g(k)?.as_usize().ok_or_else(|| anyhow::anyhow!("{k} not a usize"))
+        };
+        let f64_of = |k: &str| -> anyhow::Result<f64> {
+            g(k)?.as_f64().ok_or_else(|| anyhow::anyhow!("{k} not a number"))
+        };
+        Ok(ModelConfig {
+            name: g("name")?.as_str().unwrap_or("?").to_string(),
+            vocab_size: usize_of("vocab_size")?,
+            hidden: usize_of("hidden")?,
+            intermediate: usize_of("intermediate")?,
+            layers: usize_of("layers")?,
+            heads: usize_of("heads")?,
+            head_dim: usize_of("head_dim")?,
+            patch_dim: usize_of("patch_dim")?,
+            num_experts: usize_of("num_experts")?,
+            routing,
+            capacity_factor: f64_of("capacity_factor")?,
+            capacity_mode: cap_mode,
+            aux_loss_coef: f64_of("aux_loss_coef")?,
+            moe_attention: g("moe_attention")?.as_bool().unwrap_or(false),
+            attn_num_experts: usize_of("attn_num_experts")?,
+            batch: usize_of("batch")?,
+            patches: usize_of("patches")?,
+            text_len: usize_of("text_len")?,
+            optimizer: g("optimizer")?.as_str().unwrap_or("adamw").to_string(),
+            lr: f64_of("lr")?,
+            warmup: usize_of("warmup")?,
+            init_std: f64_of("init_std")?,
+            workers: 1,
+        })
+    }
+}
+
+/// Paper-scale presets from Table 5. These drive Tables 1-2 and Fig 6.
+pub mod paper {
+    use super::*;
+
+    fn common(name: &str) -> ModelConfig {
+        ModelConfig {
+            name: name.to_string(),
+            vocab_size: 21128, // BERT-Chinese vocab (§A.2)
+            hidden: 1024,
+            intermediate: 4096,
+            layers: 5,
+            heads: 16,
+            head_dim: 64,
+            patch_dim: 2048, // ResNet feature width stand-in
+            num_experts: 32,
+            routing: Routing::TopK(1),
+            capacity_factor: 1.25,
+            capacity_mode: CapacityMode::TimesK,
+            aux_loss_coef: 0.0,
+            moe_attention: false,
+            attn_num_experts: 8,
+            batch: 8,     // per GPU (§A.2)
+            patches: 16,  // 4x4 patches (§A.1)
+            text_len: 112, // text shorter than 128 words (§A.1)
+            optimizer: "adamw".into(),
+            lr: 8e-5,
+            warmup: 500,
+            init_std: 0.02,
+            workers: 8,
+        }
+    }
+
+    /// "Base": 1.4B params, 8 GPUs.
+    pub fn base() -> ModelConfig {
+        common("base")
+    }
+
+    /// "10B": 10.8B params, 16 GPUs.
+    pub fn ten_b() -> ModelConfig {
+        let mut c = common("10B");
+        c.layers = 10;
+        c.num_experts = 128;
+        c.workers = 16;
+        c
+    }
+
+    /// "100B": 103.2B params, 128 GPUs.
+    pub fn hundred_b() -> ModelConfig {
+        let mut c = common("100B");
+        c.layers = 24;
+        c.num_experts = 512;
+        c.workers = 128;
+        c
+    }
+
+    /// Interpolated 250B row of Fig 6 (same depth as 100B, more experts).
+    pub fn two_fifty_b() -> ModelConfig {
+        let mut c = common("250B");
+        c.layers = 24;
+        c.num_experts = 1280;
+        c.workers = 240;
+        c
+    }
+
+    /// "1T": 1002.7B params, 480 GPUs, Adafactor + reduced init (§4).
+    pub fn one_t() -> ModelConfig {
+        let mut c = common("1T");
+        c.layers = 24;
+        c.intermediate = 21248;
+        c.num_experts = 960;
+        c.workers = 480;
+        c.optimizer = "adafactor".into();
+        c.lr = 5e-3;
+        c.init_std = 0.002;
+        c
+    }
+
+    pub fn all() -> Vec<ModelConfig> {
+        vec![base(), ten_b(), hundred_b(), two_fifty_b(), one_t()]
+    }
+
+    pub fn by_name(name: &str) -> Option<ModelConfig> {
+        all().into_iter().find(|c| c.name == name)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn routing_accessors() {
+        assert_eq!(Routing::TopK(2).rounds(), 2);
+        assert_eq!(Routing::TopK(2).prototypes(), 1);
+        assert_eq!(Routing::Prototype(4).rounds(), 1);
+        assert_eq!(Routing::Prototype(4).prototypes(), 4);
+        assert_eq!(Routing::parse("top2"), Some(Routing::TopK(2)));
+        assert_eq!(Routing::parse("4top1"), Some(Routing::Prototype(4)));
+        assert_eq!(Routing::parse("bogus"), None);
+    }
+
+    #[test]
+    fn capacity_eq2() {
+        let mut c = paper::base();
+        // T = 8 * 128 = 1024 tokens, E = 32: C = k*T/E*1.25
+        assert_eq!(c.tokens_per_batch(), 1024);
+        assert_eq!(c.capacity(), 40); // k=1
+        c.routing = Routing::TopK(4);
+        assert_eq!(c.capacity(), 160); // k=4 at capacity kx
+        c.capacity_mode = CapacityMode::Times1;
+        assert_eq!(c.capacity(), 40); // limited capacity
+        // prototyping shares the same Eq.-2 formula
+        assert_eq!(
+            c.capacity_for(Routing::Prototype(4), CapacityMode::TimesK),
+            160
+        );
+    }
+
+    #[test]
+    fn paper_param_counts_match_table5() {
+        // Table 5 reports 1.4B / 10.8B / 103.2B / 1002.7B; our accounting
+        // (which includes routers/LN/embeddings) must land within 5%.
+        let tol = |got: u64, want: f64| {
+            let rel = (got as f64 - want).abs() / want;
+            assert!(rel < 0.05, "got {got}, want ~{want}, rel {rel}");
+        };
+        tol(paper::base().param_count(), 1.4e9);
+        tol(paper::ten_b().param_count(), 10.8e9);
+        tol(paper::hundred_b().param_count(), 103.2e9);
+        tol(paper::one_t().param_count(), 1002.7e9);
+    }
+
+    #[test]
+    fn one_t_uses_paper_recipe() {
+        let c = paper::one_t();
+        assert_eq!(c.optimizer, "adafactor");
+        assert!((c.lr - 5e-3).abs() < 1e-12);
+        assert!((c.init_std - 0.002).abs() < 1e-12);
+        assert_eq!(c.workers, 480);
+    }
+}

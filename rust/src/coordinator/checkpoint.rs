@@ -1,0 +1,132 @@
+//! Checkpointing: the device-resident train state serialized to a simple
+//! self-describing binary format (magic + leaf table + f32 data, little
+//! endian). No external serialization crates are available offline.
+
+use std::fs;
+use std::io::{Read, Write};
+use std::path::Path;
+
+use anyhow::{bail, Context, Result};
+
+use crate::runtime::manifest::VariantInfo;
+
+const MAGIC: &[u8; 8] = b"M6TCKPT1";
+
+/// Host-side checkpoint: leaf arrays in manifest order + the step counter.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Checkpoint {
+    pub variant: String,
+    pub step: i64,
+    pub leaves: Vec<Vec<f32>>,
+}
+
+impl Checkpoint {
+    pub fn save(&self, path: impl AsRef<Path>) -> Result<()> {
+        if let Some(parent) = path.as_ref().parent() {
+            fs::create_dir_all(parent)?;
+        }
+        let mut f = fs::File::create(&path)
+            .with_context(|| format!("creating checkpoint {:?}", path.as_ref()))?;
+        f.write_all(MAGIC)?;
+        f.write_all(&self.step.to_le_bytes())?;
+        let name = self.variant.as_bytes();
+        f.write_all(&(name.len() as u32).to_le_bytes())?;
+        f.write_all(name)?;
+        f.write_all(&(self.leaves.len() as u32).to_le_bytes())?;
+        for leaf in &self.leaves {
+            f.write_all(&(leaf.len() as u64).to_le_bytes())?;
+            // SAFETY-free alternative: stream the f32s as LE bytes
+            let mut buf = Vec::with_capacity(leaf.len() * 4);
+            for v in leaf {
+                buf.extend_from_slice(&v.to_le_bytes());
+            }
+            f.write_all(&buf)?;
+        }
+        Ok(())
+    }
+
+    pub fn load(path: impl AsRef<Path>) -> Result<Checkpoint> {
+        let mut f = fs::File::open(&path)
+            .with_context(|| format!("opening checkpoint {:?}", path.as_ref()))?;
+        let mut magic = [0u8; 8];
+        f.read_exact(&mut magic)?;
+        if &magic != MAGIC {
+            bail!("bad checkpoint magic {magic:?}");
+        }
+        let mut b8 = [0u8; 8];
+        f.read_exact(&mut b8)?;
+        let step = i64::from_le_bytes(b8);
+        let mut b4 = [0u8; 4];
+        f.read_exact(&mut b4)?;
+        let name_len = u32::from_le_bytes(b4) as usize;
+        if name_len > 4096 {
+            bail!("unreasonable variant-name length {name_len}");
+        }
+        let mut name = vec![0u8; name_len];
+        f.read_exact(&mut name)?;
+        let variant = String::from_utf8(name).context("checkpoint variant name not utf-8")?;
+        f.read_exact(&mut b4)?;
+        let n_leaves = u32::from_le_bytes(b4) as usize;
+        let mut leaves = Vec::with_capacity(n_leaves);
+        for _ in 0..n_leaves {
+            f.read_exact(&mut b8)?;
+            let n = u64::from_le_bytes(b8) as usize;
+            let mut raw = vec![0u8; n * 4];
+            f.read_exact(&mut raw)?;
+            let leaf = raw
+                .chunks_exact(4)
+                .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+                .collect();
+            leaves.push(leaf);
+        }
+        Ok(Checkpoint { variant, step, leaves })
+    }
+
+    /// Validate leaf count/sizes against a variant manifest.
+    pub fn validate(&self, info: &VariantInfo) -> Result<()> {
+        if self.variant != info.name {
+            bail!("checkpoint is for {:?}, not {:?}", self.variant, info.name);
+        }
+        if self.leaves.len() != info.n_state {
+            bail!("checkpoint has {} leaves, manifest wants {}", self.leaves.len(), info.n_state);
+        }
+        for (leaf, spec) in self.leaves.iter().zip(&info.state_leaves) {
+            if leaf.len() != spec.elements() {
+                bail!(
+                    "leaf {:?}: {} elements vs spec {}",
+                    spec.name,
+                    leaf.len(),
+                    spec.elements()
+                );
+            }
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn roundtrip() {
+        let ck = Checkpoint {
+            variant: "base-sim".into(),
+            step: 123,
+            leaves: vec![vec![1.0, -2.5, 3.25], vec![0.0; 7]],
+        };
+        let path = std::env::temp_dir().join("m6t-ckpt-test.bin");
+        ck.save(&path).unwrap();
+        let back = Checkpoint::load(&path).unwrap();
+        assert_eq!(back, ck);
+        let _ = fs::remove_file(path);
+    }
+
+    #[test]
+    fn rejects_bad_magic() {
+        let path = std::env::temp_dir().join("m6t-ckpt-bad.bin");
+        fs::write(&path, b"NOTMAGIC rest").unwrap();
+        assert!(Checkpoint::load(&path).is_err());
+        let _ = fs::remove_file(path);
+    }
+}

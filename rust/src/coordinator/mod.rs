@@ -1,0 +1,171 @@
+//! The training coordinator — L3's orchestration core.
+//!
+//! Owns the step loop over the compiled PJRT train step, the synthetic
+//! data pipeline, metric collection (loss curves, per-layer c_v, drops),
+//! periodic paired evaluation (identical eval batches across strategies),
+//! and checkpointing. Every figure/table driver in `experiments` is built
+//! on [`Trainer`].
+
+pub mod checkpoint;
+
+use std::time::Instant;
+
+use anyhow::Result;
+
+use crate::data::{Batcher, Split};
+use crate::metrics::RunLog;
+use crate::runtime::{Engine, TrainState, VariantRuntime};
+
+pub use checkpoint::Checkpoint;
+
+/// Options for one training run.
+#[derive(Debug, Clone)]
+pub struct TrainOptions {
+    pub steps: i64,
+    pub seed: u64,
+    pub log_every: i64,
+    /// evaluate every N steps (0 = only at the end)
+    pub eval_every: i64,
+    pub eval_batches: usize,
+    /// optional JSONL metrics directory
+    pub metrics_dir: Option<String>,
+    /// print progress lines
+    pub verbose: bool,
+}
+
+impl Default for TrainOptions {
+    fn default() -> Self {
+        Self {
+            steps: 200,
+            seed: 42,
+            log_every: 1,
+            eval_every: 0,
+            eval_batches: 8,
+            metrics_dir: None,
+            verbose: true,
+        }
+    }
+}
+
+/// Result of a run: the step log plus (step, eval-PPL) points.
+pub struct TrainOutcome {
+    pub log: RunLog,
+    pub evals: Vec<(i64, f64)>,
+    pub final_state_step: i64,
+}
+
+/// Drives one variant end to end.
+pub struct Trainer<'e> {
+    pub runtime: VariantRuntime,
+    pub opts: TrainOptions,
+    _engine: &'e Engine,
+}
+
+impl<'e> Trainer<'e> {
+    pub fn new(engine: &'e Engine, runtime: VariantRuntime, opts: TrainOptions) -> Self {
+        Self { runtime, opts, _engine: engine }
+    }
+
+    /// Teacher-forced PPL over `n` fixed eval batches (cursor reset so all
+    /// strategies see identical data — paired comparison, Table 3/4).
+    pub fn eval_ppl(&self, state: &TrainState, n: usize) -> Result<f64> {
+        let cfg = &self.runtime.info.config;
+        let mut batcher = Batcher::for_config(cfg, Split::Eval, self.opts.seed);
+        batcher.seek(0);
+        let mut sum_nll = 0.0;
+        let mut count = 0.0;
+        for _ in 0..n {
+            let batch = batcher.next_batch();
+            let (nll, c) = self.runtime.eval(state, &batch)?;
+            sum_nll += nll;
+            count += c;
+        }
+        Ok((sum_nll / count.max(1.0)).exp())
+    }
+
+    /// Run `steps` training steps from a fresh init; returns the outcome
+    /// and the final state (for checkpointing / further eval).
+    pub fn train(&self) -> Result<(TrainOutcome, TrainState)> {
+        let state = self.runtime.init_state(self.opts.seed as i32)?;
+        self.train_from(state)
+    }
+
+    /// Continue training from an existing state.
+    pub fn train_from(&self, mut state: TrainState) -> Result<(TrainOutcome, TrainState)> {
+        let info = &self.runtime.info;
+        let mut log = RunLog::new(info.name.clone());
+        if let Some(dir) = &self.opts.metrics_dir {
+            log = log.with_sink(dir)?;
+        }
+        let mut batcher = Batcher::for_config(&info.config, Split::Train, self.opts.seed);
+        // resume-aware: skip the batches already consumed
+        batcher.seek(state.step as u64 * info.config.batch as u64);
+
+        let mut evals = Vec::new();
+        let start_step = state.step;
+        let end_step = start_step + self.opts.steps;
+        while state.step < end_step {
+            let batch = batcher.next_batch();
+            let t0 = Instant::now();
+            let (next, stats) = self.runtime.step(state, &batch)?;
+            state = next;
+            let ms = t0.elapsed().as_secs_f64() * 1e3;
+            let step_now = state.step - 1;
+            if step_now % self.opts.log_every == 0 {
+                log.push(step_now, &stats, ms)?;
+            }
+            if self.opts.verbose && step_now % 50 == 0 {
+                eprintln!(
+                    "[{}] step {:>5} loss {:.4} aux {:.3} gnorm {:.2} drop {:>5.0} {:.0} ms",
+                    info.name,
+                    step_now,
+                    stats.loss,
+                    stats.aux_loss,
+                    stats.grad_norm,
+                    stats.total_dropped(),
+                    ms
+                );
+            }
+            if self.opts.eval_every > 0
+                && step_now > start_step
+                && step_now % self.opts.eval_every == 0
+            {
+                let ppl = self.eval_ppl(&state, self.opts.eval_batches)?;
+                if self.opts.verbose {
+                    eprintln!("[{}] step {:>5} eval PPL {:.3}", info.name, step_now, ppl);
+                }
+                evals.push((step_now, ppl));
+            }
+        }
+        let ppl = self.eval_ppl(&state, self.opts.eval_batches)?;
+        evals.push((state.step, ppl));
+        if self.opts.verbose {
+            eprintln!(
+                "[{}] done: {} steps, final loss {:.4}, eval PPL {:.3}",
+                info.name,
+                state.step - start_step,
+                log.tail_loss(20),
+                ppl
+            );
+        }
+        Ok((
+            TrainOutcome { log, evals, final_state_step: state.step },
+            state,
+        ))
+    }
+
+    /// Snapshot the state into a host checkpoint.
+    pub fn snapshot(&self, state: &TrainState) -> Result<Checkpoint> {
+        Ok(Checkpoint {
+            variant: self.runtime.info.name.clone(),
+            step: state.step,
+            leaves: self.runtime.state_to_host(state)?,
+        })
+    }
+
+    /// Restore a checkpoint into device buffers.
+    pub fn restore(&self, ck: &Checkpoint) -> Result<TrainState> {
+        ck.validate(&self.runtime.info)?;
+        self.runtime.state_from_host(&ck.leaves, ck.step)
+    }
+}

@@ -1,0 +1,185 @@
+//! Latent attribute space for the synthetic multimodal corpus.
+//!
+//! An "image" is a bag of product attributes (category, color, material,
+//! ...). Each attribute value owns a fixed random feature direction (its
+//! "visual appearance") and a short token span (its "name"); captions
+//! mention attribute values, so a model that reads patch features can
+//! predict caption tokens far better than a unimodal LM — the learnable
+//! cross-modal signal that stands in for M6-Corpus.
+
+use crate::util::rng::Rng;
+
+/// Number of reserved token ids: PAD=0, BOS=1, EOS=2 — must match
+/// `python/compile/config.py`.
+pub const PAD_ID: i32 = 0;
+pub const BOS_ID: i32 = 1;
+pub const EOS_ID: i32 = 2;
+/// Function words occupy [3, FUNC_END); content tokens start there.
+pub const FUNC_START: i32 = 3;
+pub const FUNC_WORDS: i32 = 61;
+pub const CONTENT_START: i32 = FUNC_START + FUNC_WORDS; // 64
+
+#[derive(Debug, Clone)]
+pub struct Attribute {
+    pub name: &'static str,
+    /// token span length per value (1..=3 subwords, like real product terms)
+    pub values: usize,
+}
+
+/// The fixed attribute schema. Sizes chosen so the number of combinations
+/// (~10^7) dwarfs the training budget: the eval split measures
+/// generalization, not memorization.
+pub fn schema() -> Vec<Attribute> {
+    vec![
+        Attribute { name: "category", values: 24 },
+        Attribute { name: "color", values: 16 },
+        Attribute { name: "material", values: 12 },
+        Attribute { name: "style", values: 12 },
+        Attribute { name: "size", values: 6 },
+        Attribute { name: "brand", values: 32 },
+    ]
+}
+
+/// Deterministic embedding + token-name tables for every attribute value.
+pub struct AttributeSpace {
+    pub attrs: Vec<Attribute>,
+    /// per (attr, value): unit-ish feature direction of length `patch_dim`
+    features: Vec<Vec<f32>>,
+    /// per (attr, value): 1-3 content-token ids naming the value
+    names: Vec<Vec<i32>>,
+    offsets: Vec<usize>,
+    pub patch_dim: usize,
+    pub vocab_size: i32,
+}
+
+impl AttributeSpace {
+    pub fn new(patch_dim: usize, vocab_size: i32, seed: u64) -> Self {
+        let attrs = schema();
+        let mut rng = Rng::new(seed).fold_in(0xA77);
+        let total: usize = attrs.iter().map(|a| a.values).sum();
+        let mut offsets = Vec::with_capacity(attrs.len());
+        let mut acc = 0;
+        for a in &attrs {
+            offsets.push(acc);
+            acc += a.values;
+        }
+        let scale = 1.0 / (patch_dim as f64).sqrt();
+        let features = (0..total)
+            .map(|_| {
+                (0..patch_dim)
+                    .map(|_| (rng.normal() * scale) as f32)
+                    .collect()
+            })
+            .collect();
+        let content_span = vocab_size - CONTENT_START;
+        assert!(content_span > 3 * total as i32, "vocab too small for schema");
+        let mut names = Vec::with_capacity(total);
+        for _ in 0..total {
+            let len = 1 + rng.below(3) as usize;
+            let toks = (0..len)
+                .map(|_| CONTENT_START + rng.below(content_span as u64) as i32)
+                .collect();
+            names.push(toks);
+        }
+        Self { attrs, features, names, offsets, patch_dim, vocab_size }
+    }
+
+    fn flat(&self, attr: usize, value: usize) -> usize {
+        debug_assert!(value < self.attrs[attr].values);
+        self.offsets[attr] + value
+    }
+
+    /// Visual feature direction of an attribute value.
+    pub fn feature(&self, attr: usize, value: usize) -> &[f32] {
+        &self.features[self.flat(attr, value)]
+    }
+
+    /// Token span naming an attribute value.
+    pub fn name_tokens(&self, attr: usize, value: usize) -> &[i32] {
+        &self.names[self.flat(attr, value)]
+    }
+
+    /// Sample a latent product: one value per attribute.
+    pub fn sample_latent(&self, rng: &mut Rng) -> Vec<usize> {
+        // Zipf-skewed: common categories/brands dominate, like a real
+        // e-commerce corpus — this also produces *naturally imbalanced*
+        // token distributions for the routing study.
+        self.attrs
+            .iter()
+            .map(|a| rng.zipf(a.values, 1.1))
+            .collect()
+    }
+
+    /// Stable 64-bit hash of a latent combination (for the train/eval split).
+    pub fn latent_hash(&self, latent: &[usize]) -> u64 {
+        let mut h = 0xcbf29ce484222325u64;
+        for (i, v) in latent.iter().enumerate() {
+            h ^= (*v as u64).wrapping_add((i as u64) << 32).wrapping_add(1);
+            h = h.wrapping_mul(0x100000001b3);
+        }
+        h
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn space() -> AttributeSpace {
+        AttributeSpace::new(32, 2048, 42)
+    }
+
+    #[test]
+    fn deterministic_tables() {
+        let a = space();
+        let b = space();
+        assert_eq!(a.feature(0, 3), b.feature(0, 3));
+        assert_eq!(a.name_tokens(2, 5), b.name_tokens(2, 5));
+    }
+
+    #[test]
+    fn names_are_content_tokens() {
+        let s = space();
+        for (ai, a) in s.attrs.iter().enumerate() {
+            for v in 0..a.values {
+                for &t in s.name_tokens(ai, v) {
+                    assert!(t >= CONTENT_START && t < s.vocab_size);
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn features_roughly_unit() {
+        let s = space();
+        let f = s.feature(1, 0);
+        let norm: f32 = f.iter().map(|x| x * x).sum::<f32>().sqrt();
+        assert!((0.4..2.5).contains(&norm), "norm {norm}");
+    }
+
+    #[test]
+    fn latents_in_range_and_skewed() {
+        let s = space();
+        let mut rng = Rng::new(7);
+        let mut first_val_hits = 0;
+        for _ in 0..2000 {
+            let l = s.sample_latent(&mut rng);
+            assert_eq!(l.len(), s.attrs.len());
+            for (i, v) in l.iter().enumerate() {
+                assert!(*v < s.attrs[i].values);
+            }
+            if l[0] == 0 {
+                first_val_hits += 1;
+            }
+        }
+        // zipf: value 0 of a 24-way attribute should be far above uniform 1/24
+        assert!(first_val_hits > 2000 / 24 * 2, "hits {first_val_hits}");
+    }
+
+    #[test]
+    fn hash_distinguishes_latents() {
+        let s = space();
+        assert_ne!(s.latent_hash(&[0, 0, 0, 0, 0, 0]), s.latent_hash(&[1, 0, 0, 0, 0, 0]));
+        assert_eq!(s.latent_hash(&[3, 1, 2, 0, 4, 5]), s.latent_hash(&[3, 1, 2, 0, 4, 5]));
+    }
+}

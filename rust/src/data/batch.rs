@@ -1,0 +1,125 @@
+//! Batcher: packs examples into the fixed-shape host buffers the PJRT
+//! train step consumes. Kept xla-free so the data pipeline unit-tests run
+//! without a PJRT client; `runtime::literals` does the Literal conversion.
+
+use super::corpus::{Generator, Split};
+use crate::config::ModelConfig;
+
+/// One fixed-shape batch in host memory.
+#[derive(Debug, Clone)]
+pub struct Batch {
+    pub batch: usize,
+    pub patches: usize,
+    pub patch_dim: usize,
+    pub text_len: usize,
+    /// (B, P, D) row-major
+    pub patch_features: Vec<f32>,
+    /// (B, L) row-major
+    pub tokens: Vec<i32>,
+}
+
+impl Batch {
+    pub fn patch_shape(&self) -> [usize; 3] {
+        [self.batch, self.patches, self.patch_dim]
+    }
+    pub fn token_shape(&self) -> [usize; 2] {
+        [self.batch, self.text_len]
+    }
+}
+
+/// Streams deterministic batches for a split; `cursor` advances example
+/// indices so every batch is fresh data (one epoch over the synthetic
+/// corpus is effectively infinite).
+pub struct Batcher {
+    gen: Generator,
+    split: Split,
+    cursor: u64,
+    batch: usize,
+}
+
+impl Batcher {
+    pub fn new(gen: Generator, split: Split, batch: usize) -> Self {
+        Self { gen, split, cursor: 0, batch }
+    }
+
+    pub fn for_config(cfg: &ModelConfig, split: Split, seed: u64) -> Self {
+        let space = super::attrs::AttributeSpace::new(cfg.patch_dim, cfg.vocab_size as i32, seed);
+        let gen = Generator::new(space, cfg.patches, cfg.text_len, seed);
+        Self::new(gen, split, cfg.batch)
+    }
+
+    /// Reset to a fixed position — used to make eval batches identical
+    /// across strategies so PPL comparisons are paired.
+    pub fn seek(&mut self, cursor: u64) {
+        self.cursor = cursor;
+    }
+
+    pub fn next_batch(&mut self) -> Batch {
+        let b = self.batch;
+        let p = self.gen.patches;
+        let d = self.gen.space.patch_dim;
+        let l = self.gen.text_len;
+        let mut patch_features = Vec::with_capacity(b * p * d);
+        let mut tokens = Vec::with_capacity(b * l);
+        for _ in 0..b {
+            let ex = self.gen.example(self.split, self.cursor);
+            self.cursor += 1;
+            patch_features.extend_from_slice(&ex.patch_features);
+            tokens.extend_from_slice(&ex.tokens);
+        }
+        Batch {
+            batch: b,
+            patches: p,
+            patch_dim: d,
+            text_len: l,
+            patch_features,
+            tokens,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::attrs::AttributeSpace;
+
+    fn batcher(split: Split) -> Batcher {
+        let space = AttributeSpace::new(32, 2048, 1);
+        Batcher::new(Generator::new(space, 8, 24, 1), split, 4)
+    }
+
+    #[test]
+    fn shapes() {
+        let mut b = batcher(Split::Train);
+        let batch = b.next_batch();
+        assert_eq!(batch.patch_features.len(), 4 * 8 * 32);
+        assert_eq!(batch.tokens.len(), 4 * 24);
+        assert_eq!(batch.patch_shape(), [4, 8, 32]);
+        assert_eq!(batch.token_shape(), [4, 24]);
+    }
+
+    #[test]
+    fn advances() {
+        let mut b = batcher(Split::Train);
+        let b1 = b.next_batch();
+        let b2 = b.next_batch();
+        assert_ne!(b1.tokens, b2.tokens);
+    }
+
+    #[test]
+    fn seek_replays() {
+        let mut b = batcher(Split::Eval);
+        let b1 = b.next_batch();
+        b.seek(0);
+        let b2 = b.next_batch();
+        assert_eq!(b1.tokens, b2.tokens);
+        assert_eq!(b1.patch_features, b2.patch_features);
+    }
+
+    #[test]
+    fn train_and_eval_streams_differ() {
+        let mut tr = batcher(Split::Train);
+        let mut ev = batcher(Split::Eval);
+        assert_ne!(tr.next_batch().tokens, ev.next_batch().tokens);
+    }
+}

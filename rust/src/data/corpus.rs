@@ -1,0 +1,229 @@
+//! Example generator: latent product → (patch features, caption tokens).
+//!
+//! Captions follow a stochastic template grammar over the attribute names
+//! (function word · attribute phrase · ...), giving both a cross-modal
+//! signal (content tokens are determined by the latents visible in the
+//! patches) and a unimodal one (function-word bigrams). The train/eval
+//! split is by latent-combination hash, so eval examples are unseen
+//! products — the synthetic analogue of zero-shot E-commerce IC PPL.
+
+use super::attrs::{AttributeSpace, BOS_ID, EOS_ID, FUNC_START, FUNC_WORDS, PAD_ID};
+use crate::util::rng::Rng;
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Split {
+    Train,
+    Eval,
+}
+
+/// One (image, caption) pair, already tokenized / featurized.
+#[derive(Debug, Clone)]
+pub struct Example {
+    pub latent: Vec<usize>,
+    /// (patches, patch_dim) row-major
+    pub patch_features: Vec<f32>,
+    /// BOS-prefixed, EOS-terminated, PAD-padded to `text_len`
+    pub tokens: Vec<i32>,
+}
+
+/// Deterministic corpus generator.
+pub struct Generator {
+    pub space: AttributeSpace,
+    pub patches: usize,
+    pub text_len: usize,
+    /// per-mille of latent combinations held out for eval (by hash)
+    pub eval_per_mille: u64,
+    noise: f32,
+    seed: u64,
+}
+
+impl Generator {
+    pub fn new(space: AttributeSpace, patches: usize, text_len: usize, seed: u64) -> Self {
+        Self { space, patches, text_len, eval_per_mille: 50, noise: 0.25, seed }
+    }
+
+    pub fn split_of(&self, latent: &[usize]) -> Split {
+        if self.space.latent_hash(latent) % 1000 < self.eval_per_mille {
+            Split::Eval
+        } else {
+            Split::Train
+        }
+    }
+
+    /// Generate the `idx`-th example of a split. Indices are stable across
+    /// runs and processes — the rust twin of a seeded tf.data pipeline.
+    pub fn example(&self, split: Split, idx: u64) -> Example {
+        let tag = match split {
+            Split::Train => 0x7124u64,
+            Split::Eval => 0xEDA1u64,
+        };
+        let mut rng = Rng::new(self.seed).fold_in(tag).fold_in(idx);
+        // rejection-sample a latent in the right split (eval is 5%, so the
+        // expected number of draws is small and deterministic given idx)
+        let latent = loop {
+            let l = self.space.sample_latent(&mut rng);
+            if self.split_of(&l) == split {
+                break l;
+            }
+        };
+        let patch_features = self.render_patches(&latent, &mut rng);
+        let tokens = self.render_caption(&latent, &mut rng);
+        Example { latent, patch_features, tokens }
+    }
+
+    /// Patches: each shows one (possibly repeated) attribute's feature
+    /// direction plus Gaussian pixel noise — a stand-in for frozen ResNet
+    /// features of a product photo.
+    fn render_patches(&self, latent: &[usize], rng: &mut Rng) -> Vec<f32> {
+        let d = self.space.patch_dim;
+        let mut out = vec![0f32; self.patches * d];
+        for p in 0..self.patches {
+            let attr = rng.below(latent.len() as u64) as usize;
+            let f = self.space.feature(attr, latent[attr]);
+            let row = &mut out[p * d..(p + 1) * d];
+            for (o, v) in row.iter_mut().zip(f) {
+                *o = v + self.noise * rng.normal() as f32;
+            }
+        }
+        out
+    }
+
+    /// Caption: BOS, then attribute phrases in a shuffled order, each
+    /// introduced by a function word, then EOS + PAD fill.
+    fn render_caption(&self, latent: &[usize], rng: &mut Rng) -> Vec<i32> {
+        let mut toks = Vec::with_capacity(self.text_len);
+        toks.push(BOS_ID);
+        let mut order: Vec<usize> = (0..latent.len()).collect();
+        rng.shuffle(&mut order);
+        // mention 3..=all attributes
+        let mentions = 3 + rng.below((latent.len() - 2) as u64) as usize;
+        for &attr in order.iter().take(mentions) {
+            if toks.len() + 4 >= self.text_len {
+                break;
+            }
+            // function word biased by the attribute id → learnable bigrams
+            let fw = FUNC_START
+                + ((attr as i32 * 7 + rng.below(5) as i32) % FUNC_WORDS);
+            toks.push(fw);
+            for &t in self.space.name_tokens(attr, latent[attr]) {
+                if toks.len() + 2 >= self.text_len {
+                    break;
+                }
+                toks.push(t);
+            }
+        }
+        toks.push(EOS_ID);
+        while toks.len() < self.text_len {
+            toks.push(PAD_ID);
+        }
+        toks.truncate(self.text_len);
+        toks
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::attrs::CONTENT_START;
+
+    fn gen() -> Generator {
+        Generator::new(AttributeSpace::new(32, 2048, 42), 16, 48, 42)
+    }
+
+    #[test]
+    fn examples_are_deterministic() {
+        let g = gen();
+        let a = g.example(Split::Train, 17);
+        let b = g.example(Split::Train, 17);
+        assert_eq!(a.tokens, b.tokens);
+        assert_eq!(a.patch_features, b.patch_features);
+        assert_eq!(a.latent, b.latent);
+    }
+
+    #[test]
+    fn different_indices_differ() {
+        let g = gen();
+        let a = g.example(Split::Train, 1);
+        let b = g.example(Split::Train, 2);
+        assert_ne!(a.tokens, b.tokens);
+    }
+
+    #[test]
+    fn splits_are_disjoint_by_hash() {
+        let g = gen();
+        for i in 0..50 {
+            let tr = g.example(Split::Train, i);
+            assert_eq!(g.split_of(&tr.latent), Split::Train);
+            let ev = g.example(Split::Eval, i);
+            assert_eq!(g.split_of(&ev.latent), Split::Eval);
+        }
+    }
+
+    #[test]
+    fn caption_structure() {
+        let g = gen();
+        for i in 0..30 {
+            let e = g.example(Split::Train, i);
+            assert_eq!(e.tokens.len(), 48);
+            assert_eq!(e.tokens[0], BOS_ID);
+            assert!(e.tokens.contains(&EOS_ID));
+            // after EOS only PAD
+            let eos = e.tokens.iter().position(|&t| t == EOS_ID).unwrap();
+            assert!(e.tokens[eos + 1..].iter().all(|&t| t == PAD_ID));
+            // all tokens in vocab
+            assert!(e.tokens.iter().all(|&t| (0..2048).contains(&t)));
+        }
+    }
+
+    #[test]
+    fn caption_mentions_latent_names() {
+        let g = gen();
+        let e = g.example(Split::Train, 5);
+        // at least one attribute's name span appears verbatim
+        let found = (0..e.latent.len()).any(|a| {
+            let span = g.space.name_tokens(a, e.latent[a]);
+            e.tokens
+                .windows(span.len())
+                .any(|w| w == span)
+        });
+        assert!(found, "caption should mention visible attributes");
+    }
+
+    #[test]
+    fn patches_correlate_with_latent() {
+        // mean dot-product of patches with true attribute features should
+        // exceed that with random other features
+        let g = gen();
+        let e = g.example(Split::Train, 9);
+        let d = g.space.patch_dim;
+        let dot = |a: &[f32], b: &[f32]| a.iter().zip(b).map(|(x, y)| x * y).sum::<f32>();
+        let mut true_score = 0f32;
+        let mut alt_score = 0f32;
+        for p in 0..g.patches {
+            let row = &e.patch_features[p * d..(p + 1) * d];
+            for (attr, &v) in e.latent.iter().enumerate() {
+                true_score += dot(row, g.space.feature(attr, v));
+                let alt = (v + 1) % g.space.attrs[attr].values;
+                alt_score += dot(row, g.space.feature(attr, alt));
+            }
+        }
+        assert!(true_score > alt_score, "true {true_score} vs alt {alt_score}");
+    }
+
+    #[test]
+    fn eval_fraction_is_about_5_percent() {
+        let g = gen();
+        let mut rng = Rng::new(123);
+        let eval = (0..4000)
+            .filter(|_| g.split_of(&g.space.sample_latent(&mut rng)) == Split::Eval)
+            .count();
+        assert!((100..300).contains(&eval), "eval count {eval}");
+    }
+
+    #[test]
+    fn content_tokens_present() {
+        let g = gen();
+        let e = g.example(Split::Train, 3);
+        assert!(e.tokens.iter().any(|&t| t >= CONTENT_START));
+    }
+}

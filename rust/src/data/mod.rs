@@ -1,0 +1,21 @@
+//! Synthetic M6-Corpus substitute (DESIGN.md §2).
+//!
+//! The paper pretrains on proprietary image-text pairs (M6-Corpus) and
+//! evaluates zero-shot captioning PPL on E-commerce IC. We replace both
+//! with a generative process that preserves what the routing study needs:
+//! a *learnable* cross-modal signal (captions are a stochastic function of
+//! the image latents, so PPL falls with training and better models win)
+//! plus local language structure (attribute phrases with function words).
+//!
+//! Pipeline: [`attrs::AttributeSpace`] defines latent product attributes →
+//! [`corpus::Generator`] emits (patch-features, caption) pairs, split
+//! deterministically into train/eval by hashing the latent combination →
+//! [`batch::Batcher`] packs fixed-shape batches for the PJRT train step.
+
+pub mod attrs;
+pub mod batch;
+pub mod corpus;
+
+pub use attrs::AttributeSpace;
+pub use batch::{Batch, Batcher};
+pub use corpus::{Example, Generator, Split};

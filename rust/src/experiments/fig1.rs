@@ -1,0 +1,61 @@
+//! Figure 1 — development of per-layer compute-load c_v with and without
+//! the auxiliary balancing loss, plus the training log-pplx curves.
+//!
+//! The paper's finding: the aux loss drives every layer's c_v to ~0.3
+//! quickly, but that balance does *not* buy better pplx — the unbalanced
+//! baseline matches or beats it. Trains the base-sim twin both ways and
+//! emits the c_v series straight from the train step's load outputs.
+
+use anyhow::Result;
+
+use super::runner::Runner;
+use crate::util::table::{f3, f2, Table};
+
+pub struct Fig1Output {
+    pub series: Table,
+    pub summary: Table,
+}
+
+pub fn run(runner: &Runner, steps: i64) -> Result<Fig1Output> {
+    let base = runner.run("base-sim", steps)?;
+    let aux = runner.run("base-sim-aux", steps)?;
+
+    let layers = base.cv.first().map(|(_, row)| row.len()).unwrap_or(0);
+    let mut header = vec!["step".to_string(), "run".to_string()];
+    header.extend((0..layers).map(|l| format!("cv_layer{l}")));
+    header.push("loss".into());
+    let header_refs: Vec<&str> = header.iter().map(|s| s.as_str()).collect();
+    let mut series = Table::new("Fig 1 — c_v per layer over training", &header_refs);
+
+    for run in [&base, &aux] {
+        for ((step, cvs), &(_, loss)) in run.cv.iter().zip(run.curve.iter()) {
+            if step % 10 != 0 {
+                continue; // thin the series for readability; CSV keeps cadence
+            }
+            let mut row = vec![step.to_string(), run.variant.clone()];
+            row.extend(cvs.iter().map(|&c| f3(c)));
+            row.push(f2(loss));
+            series.row(row);
+        }
+    }
+
+    let mut summary = Table::new(
+        "Fig 1 — balance vs quality (paper: aux pplx 2.694 vs baseline 2.645)",
+        &["run", "tail c_v (mean over layers)", "final loss", "final PPL"],
+    );
+    for run in [&base, &aux] {
+        let tail_cv: f64 = {
+            let tail: Vec<&Vec<f64>> =
+                run.cv.iter().rev().take(20).map(|(_, r)| r).collect();
+            let n = (tail.len() * layers).max(1);
+            tail.iter().flat_map(|r| r.iter()).sum::<f64>() / n as f64
+        };
+        summary.row(vec![
+            run.variant.clone(),
+            f3(tail_cv),
+            f3(run.final_loss()),
+            f2(run.final_ppl),
+        ]);
+    }
+    Ok(Fig1Output { series, summary })
+}

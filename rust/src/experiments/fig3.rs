@@ -1,0 +1,76 @@
+//! Figure 3 — model convergence under different top-k setups.
+//! Left: top-k routing, k in {1,2,4}, capacity kx and 1x.
+//! Right: k top-1 expert prototyping, same grid.
+//!
+//! The paper's shape: k>1 beats k=1 even at capacity 1x; the top-2 -> top-4
+//! gain is much smaller than top-1 -> top-2 (diminishing returns); k top-1
+//! at capacity 1x loses part of its advantage at small scale (§3.3).
+
+use anyhow::Result;
+
+use super::runner::{CachedRun, Runner};
+use crate::util::table::{f2, f3, Table};
+
+pub fn left_variants() -> Vec<&'static str> {
+    vec![
+        "base-sim",
+        "base-sim-top2-capk",
+        "base-sim-top4-capk",
+        "base-sim-top2-cap1",
+        "base-sim-top4-cap1",
+    ]
+}
+
+pub fn right_variants() -> Vec<&'static str> {
+    vec![
+        "base-sim",
+        "base-sim-2top1-capk",
+        "base-sim-4top1-capk",
+        "base-sim-2top1-cap1",
+        "base-sim-4top1-cap1",
+    ]
+}
+
+pub struct Fig3Output {
+    pub curves: Table,
+    pub summary: Table,
+    pub runs: Vec<CachedRun>,
+}
+
+pub fn run(runner: &Runner, steps: i64, side: &str) -> Result<Fig3Output> {
+    let variants = match side {
+        "left" => left_variants(),
+        "right" => right_variants(),
+        other => anyhow::bail!("side must be left|right, got {other:?}"),
+    };
+    let mut runs = Vec::new();
+    for v in &variants {
+        runs.push(runner.run(v, steps)?);
+    }
+
+    let mut curves = Table::new(
+        format!("Fig 3 ({side}) — training loss curves"),
+        &["step", "variant", "loss"],
+    );
+    for run in &runs {
+        for &(step, loss) in &run.curve {
+            if step % 5 == 0 {
+                curves.row(vec![step.to_string(), run.variant.clone(), f3(loss)]);
+            }
+        }
+    }
+
+    let mut summary = Table::new(
+        format!("Fig 3 ({side}) — convergence summary"),
+        &["variant", "final loss", "eval PPL", "dropped/step"],
+    );
+    for run in &runs {
+        summary.row(vec![
+            run.variant.clone(),
+            f3(run.final_loss()),
+            f2(run.final_ppl),
+            f2(run.dropped_per_step),
+        ]);
+    }
+    Ok(Fig3Output { curves, summary, runs })
+}

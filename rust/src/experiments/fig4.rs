@@ -1,0 +1,63 @@
+//! Figure 4 — MoE attention (§3.4). Left: shallow models — MoE attention
+//! hurts and can diverge; k top-1 prototyping mitigates. Right: deeper
+//! models with fewer experts — MoE attention trains but still trails the
+//! plain-MoE baseline.
+
+use anyhow::Result;
+
+use super::runner::Runner;
+use crate::util::table::{f2, f3, Table};
+
+pub struct Fig4Output {
+    pub curves: Table,
+    pub summary: Table,
+}
+
+pub fn shallow_variants() -> Vec<&'static str> {
+    vec!["base-sim", "base-sim-moeattn", "base-sim-moeattn-2top1"]
+}
+
+pub fn deep_variants() -> Vec<&'static str> {
+    vec!["deep-sim", "deep-sim-moeattn", "deep-sim-moeattn-2top1"]
+}
+
+pub fn run(runner: &Runner, steps: i64, side: &str) -> Result<Fig4Output> {
+    let variants = match side {
+        "left" | "shallow" => shallow_variants(),
+        "right" | "deep" => deep_variants(),
+        other => anyhow::bail!("side must be left|right, got {other:?}"),
+    };
+    let mut runs = Vec::new();
+    for v in &variants {
+        runs.push(runner.run(v, steps)?);
+    }
+
+    let mut curves = Table::new(
+        format!("Fig 4 ({side}) — MoE attention loss curves"),
+        &["step", "variant", "loss"],
+    );
+    for run in &runs {
+        for &(step, loss) in &run.curve {
+            if step % 5 == 0 {
+                curves.row(vec![step.to_string(), run.variant.clone(), f3(loss)]);
+            }
+        }
+    }
+    let mut summary = Table::new(
+        format!("Fig 4 ({side}) — summary"),
+        &["variant", "final loss", "eval PPL", "diverged"],
+    );
+    for run in &runs {
+        let diverged = run
+            .curve
+            .iter()
+            .any(|&(_, l)| !l.is_finite() || l > 12.0);
+        summary.row(vec![
+            run.variant.clone(),
+            f3(run.final_loss()),
+            f2(run.final_ppl),
+            diverged.to_string(),
+        ]);
+    }
+    Ok(Fig4Output { curves, summary })
+}

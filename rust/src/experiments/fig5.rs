@@ -1,0 +1,69 @@
+//! Figure 5 — routing strategies at larger scale (paper: 10B and 100B).
+//!
+//! Substitution (DESIGN.md §2): the scale axis is expert count at fixed
+//! hidden size — large-sim (2x layers, 2x experts of base-sim) and
+//! xlarge-sim (4x experts) are the runnable twins of the 10B/100B rows.
+//! The paper's claim under test: the k top-1 advantage *grows* with scale.
+
+use anyhow::Result;
+
+use super::runner::Runner;
+use crate::util::table::{f2, f3, Table};
+
+pub struct Fig5Output {
+    pub curves: Table,
+    pub summary: Table,
+    /// (scale label, baseline final loss, 2top1 final loss)
+    pub advantage: Vec<(String, f64, f64)>,
+}
+
+pub fn run(runner: &Runner, steps: i64) -> Result<Fig5Output> {
+    // scale twins: (label, baseline top-1 variant, prototyped variants)
+    let grid: Vec<(&str, &str, Vec<&str>)> = vec![
+        ("base", "base-sim", vec!["base-sim-2top1-cap1", "base-sim-4top1-cap1"]),
+        ("large(10B-twin)", "large-sim", vec!["large-sim-2top1-cap1", "large-sim-4top1-cap1"]),
+        ("xlarge(100B-twin)", "xlarge-sim", vec!["xlarge-sim-2top1-cap1"]),
+    ];
+
+    let mut curves = Table::new(
+        "Fig 5 — loss curves across scale twins",
+        &["step", "scale", "variant", "loss"],
+    );
+    let mut summary = Table::new(
+        "Fig 5 — prototyping advantage grows with scale",
+        &["scale", "variant", "final loss", "eval PPL", "Δloss vs top-1"],
+    );
+    let mut advantage = Vec::new();
+
+    for (label, baseline, protos) in grid {
+        let base_run = runner.run(baseline, steps)?;
+        for &(step, loss) in base_run.curve.iter().filter(|&&(s, _)| s % 5 == 0) {
+            curves.row(vec![step.to_string(), label.into(), base_run.variant.clone(), f3(loss)]);
+        }
+        summary.row(vec![
+            label.into(),
+            base_run.variant.clone(),
+            f3(base_run.final_loss()),
+            f2(base_run.final_ppl),
+            "0.000".into(),
+        ]);
+        let mut best_proto = f64::INFINITY;
+        for p in protos {
+            let run = runner.run(p, steps)?;
+            for &(step, loss) in run.curve.iter().filter(|&&(s, _)| s % 5 == 0) {
+                curves.row(vec![step.to_string(), label.into(), run.variant.clone(), f3(loss)]);
+            }
+            let delta = run.final_loss() - base_run.final_loss();
+            summary.row(vec![
+                label.into(),
+                run.variant.clone(),
+                f3(run.final_loss()),
+                f2(run.final_ppl),
+                format!("{delta:+.3}"),
+            ]);
+            best_proto = best_proto.min(run.final_loss());
+        }
+        advantage.push((label.to_string(), base_run.final_loss(), best_proto));
+    }
+    Ok(Fig5Output { curves, summary, advantage })
+}

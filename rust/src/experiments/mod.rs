@@ -1,0 +1,16 @@
+//! Experiment drivers — one per table/figure of the paper's evaluation
+//! (DESIGN.md §3 maps each to its modules). All drivers print the same
+//! rows/series the paper reports and drop machine-readable CSVs under
+//! `results/`.
+
+pub mod fig1;
+pub mod fig3;
+pub mod fig4;
+pub mod fig5;
+pub mod fig6;
+pub mod runner;
+pub mod table1;
+pub mod table2;
+pub mod table34;
+
+pub use runner::{CachedRun, Runner};

@@ -1,0 +1,234 @@
+//! Cached experiment runner: trains a variant once and persists the loss
+//! curve / c_v series / eval points to `results/runs/*.json`; figure and
+//! table drivers share runs (e.g. Fig 3 curves and Table 3 PPLs come from
+//! the same training).
+
+use std::fs;
+use std::path::{Path, PathBuf};
+
+use anyhow::{anyhow, Context, Result};
+
+use crate::coordinator::{TrainOptions, Trainer};
+use crate::runtime::{Engine, Manifest};
+use crate::util::json::{self, arr, num, obj, s, Value};
+
+/// The persisted essence of one training run.
+#[derive(Debug, Clone)]
+pub struct CachedRun {
+    pub variant: String,
+    pub steps: i64,
+    pub seed: u64,
+    /// (step, loss)
+    pub curve: Vec<(i64, f64)>,
+    /// (step, per-layer c_v)
+    pub cv: Vec<(i64, Vec<f64>)>,
+    /// (step, eval PPL)
+    pub evals: Vec<(i64, f64)>,
+    pub final_ppl: f64,
+    pub mean_ms: f64,
+    pub dropped_per_step: f64,
+}
+
+impl CachedRun {
+    pub fn final_loss(&self) -> f64 {
+        let tail: Vec<f64> = self
+            .curve
+            .iter()
+            .rev()
+            .take(20)
+            .map(|&(_, l)| l)
+            .collect();
+        tail.iter().sum::<f64>() / tail.len().max(1) as f64
+    }
+
+    fn to_json(&self) -> Value {
+        obj(vec![
+            ("variant", s(self.variant.clone())),
+            ("steps", num(self.steps as f64)),
+            ("seed", num(self.seed as f64)),
+            (
+                "curve",
+                arr(self
+                    .curve
+                    .iter()
+                    .map(|&(st, l)| arr(vec![num(st as f64), num(l)]))
+                    .collect()),
+            ),
+            (
+                "cv",
+                arr(self
+                    .cv
+                    .iter()
+                    .map(|(st, row)| {
+                        arr(vec![
+                            num(*st as f64),
+                            arr(row.iter().map(|&x| num(x)).collect()),
+                        ])
+                    })
+                    .collect()),
+            ),
+            (
+                "evals",
+                arr(self
+                    .evals
+                    .iter()
+                    .map(|&(st, p)| arr(vec![num(st as f64), num(p)]))
+                    .collect()),
+            ),
+            ("final_ppl", num(self.final_ppl)),
+            ("mean_ms", num(self.mean_ms)),
+            ("dropped_per_step", num(self.dropped_per_step)),
+        ])
+    }
+
+    fn from_json(v: &Value) -> Result<CachedRun> {
+        let pair = |x: &Value| -> Result<(i64, f64)> {
+            let a = x.as_array().ok_or_else(|| anyhow!("bad pair"))?;
+            Ok((a[0].as_i64().unwrap_or(0), a[1].as_f64().unwrap_or(f64::NAN)))
+        };
+        let curve = v
+            .req("curve")
+            .map_err(|e| anyhow!("{e}"))?
+            .as_array()
+            .ok_or_else(|| anyhow!("curve not array"))?
+            .iter()
+            .map(pair)
+            .collect::<Result<Vec<_>>>()?;
+        let cv = v
+            .req("cv")
+            .map_err(|e| anyhow!("{e}"))?
+            .as_array()
+            .ok_or_else(|| anyhow!("cv not array"))?
+            .iter()
+            .map(|x| {
+                let a = x.as_array().ok_or_else(|| anyhow!("bad cv row"))?;
+                let step = a[0].as_i64().unwrap_or(0);
+                let row = a[1]
+                    .as_array()
+                    .ok_or_else(|| anyhow!("bad cv vec"))?
+                    .iter()
+                    .map(|y| y.as_f64().unwrap_or(f64::NAN))
+                    .collect();
+                Ok((step, row))
+            })
+            .collect::<Result<Vec<_>>>()?;
+        let evals = v
+            .req("evals")
+            .map_err(|e| anyhow!("{e}"))?
+            .as_array()
+            .ok_or_else(|| anyhow!("evals not array"))?
+            .iter()
+            .map(pair)
+            .collect::<Result<Vec<_>>>()?;
+        Ok(CachedRun {
+            variant: v.req("variant").map_err(|e| anyhow!("{e}"))?.as_str().unwrap_or("?").into(),
+            steps: v.req("steps").map_err(|e| anyhow!("{e}"))?.as_i64().unwrap_or(0),
+            seed: v.req("seed").map_err(|e| anyhow!("{e}"))?.as_i64().unwrap_or(0) as u64,
+            curve,
+            cv,
+            evals,
+            final_ppl: v.req("final_ppl").map_err(|e| anyhow!("{e}"))?.as_f64().unwrap_or(f64::NAN),
+            mean_ms: v.req("mean_ms").map_err(|e| anyhow!("{e}"))?.as_f64().unwrap_or(f64::NAN),
+            dropped_per_step: v
+                .get("dropped_per_step")
+                .and_then(|x| x.as_f64())
+                .unwrap_or(f64::NAN),
+        })
+    }
+}
+
+/// Runner with a file-backed cache.
+pub struct Runner<'e> {
+    pub engine: &'e Engine,
+    pub manifest: &'e Manifest,
+    pub results_dir: PathBuf,
+    pub steps: i64,
+    pub seed: u64,
+    pub force: bool,
+    pub verbose: bool,
+}
+
+impl<'e> Runner<'e> {
+    pub fn new(engine: &'e Engine, manifest: &'e Manifest, results_dir: impl AsRef<Path>) -> Self {
+        Self {
+            engine,
+            manifest,
+            results_dir: results_dir.as_ref().to_path_buf(),
+            steps: 200,
+            seed: 42,
+            force: false,
+            verbose: true,
+        }
+    }
+
+    fn cache_path(&self, variant: &str, steps: i64) -> PathBuf {
+        self.results_dir
+            .join("runs")
+            .join(format!("{variant}-s{steps}-seed{}.json", self.seed))
+    }
+
+    /// Train (or load from cache) one variant for `steps` steps.
+    pub fn run(&self, variant: &str, steps: i64) -> Result<CachedRun> {
+        let path = self.cache_path(variant, steps);
+        if !self.force {
+            if let Ok(text) = fs::read_to_string(&path) {
+                if let Ok(doc) = json::parse(&text) {
+                    if let Ok(run) = CachedRun::from_json(&doc) {
+                        if self.verbose {
+                            eprintln!("[runner] {variant}: cached ({} steps)", run.steps);
+                        }
+                        return Ok(run);
+                    }
+                }
+            }
+        }
+        let info = self.manifest.variant(variant)?;
+        if self.verbose {
+            eprintln!(
+                "[runner] {variant}: training {steps} steps ({:.1}M params, C={})",
+                info.param_count as f64 / 1e6,
+                info.capacity
+            );
+        }
+        let runtime = self.engine.load(info)?;
+        let opts = TrainOptions {
+            steps,
+            seed: self.seed,
+            eval_every: (steps / 4).max(1),
+            eval_batches: 8,
+            verbose: self.verbose,
+            ..Default::default()
+        };
+        let trainer = Trainer::new(self.engine, runtime, opts);
+        let (outcome, _state) = trainer.train()?;
+
+        let n = outcome.log.records.len().max(1) as f64;
+        let run = CachedRun {
+            variant: variant.to_string(),
+            steps,
+            seed: self.seed,
+            curve: outcome.log.loss_curve(),
+            cv: outcome
+                .log
+                .records
+                .iter()
+                .map(|r| (r.step, r.cv_per_layer.clone()))
+                .collect(),
+            evals: outcome.evals.clone(),
+            final_ppl: outcome.evals.last().map(|&(_, p)| p).unwrap_or(f64::NAN),
+            mean_ms: outcome.log.records.iter().map(|r| r.ms_per_step).sum::<f64>() / n,
+            dropped_per_step: outcome.log.records.iter().map(|r| r.dropped).sum::<f64>() / n,
+        };
+        if let Some(parent) = path.parent() {
+            fs::create_dir_all(parent)?;
+        }
+        fs::write(&path, json::write(&run.to_json()))
+            .with_context(|| format!("writing cache {path:?}"))?;
+        Ok(run)
+    }
+
+    /// Run with the runner's default step budget.
+    pub fn run_default(&self, variant: &str) -> Result<CachedRun> {
+        self.run(variant, self.steps)
+    }
+}

@@ -1,0 +1,51 @@
+//! Table 1 — FLOPs of models with different top-k routing strategies,
+//! under "Capacity kx" and "Capacity 1x". Pure analytics (flops module)
+//! at the paper's base scale; the pytest suite cross-checks the same
+//! formulas against `jax.stage.cost_analysis` on the runnable twins.
+
+use crate::config::{paper, CapacityMode, ModelConfig};
+use crate::flops::{table1_row, table_strategies};
+use crate::util::table::{f1, Table};
+
+pub fn run(cfg: Option<ModelConfig>) -> Table {
+    let cfg = cfg.unwrap_or_else(paper::base);
+    let names: Vec<String> = table_strategies().iter().map(|r| r.name()).collect();
+    let mut header = vec!["capacity".to_string()];
+    header.extend(names);
+    let header_refs: Vec<&str> = header.iter().map(|s| s.as_str()).collect();
+
+    let mut t = Table::new(
+        format!("Table 1 — per-GPU forward GFLOPs ({})", cfg.name),
+        &header_refs,
+    );
+    for (label, mode) in [("kx", CapacityMode::TimesK), ("1x", CapacityMode::Times1)] {
+        let mut row = vec![format!("Capacity {label}")];
+        for (_r, gflops) in table1_row(&cfg, mode) {
+            row.push(f1(gflops));
+        }
+        t.row(row);
+    }
+    t
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn shape_holds() {
+        let t = run(None);
+        assert_eq!(t.rows.len(), 2);
+        // row 0 (kx): strictly increasing in k for top-k columns 1..=3
+        let kx: Vec<f64> = t.rows[0][1..].iter().map(|s| s.parse().unwrap()).collect();
+        assert!(kx[1] > kx[0] && kx[2] > kx[1]);
+        // prototyping == top-k at equal k (columns: top1 top2 top4 2top1 4top1)
+        assert!((kx[3] - kx[1]).abs() < 0.1);
+        assert!((kx[4] - kx[2]).abs() < 0.1);
+        // row 1 (1x): all equal
+        let x1: Vec<f64> = t.rows[1][1..].iter().map(|s| s.parse().unwrap()).collect();
+        for v in &x1 {
+            assert!((v - x1[0]).abs() < 0.1);
+        }
+    }
+}

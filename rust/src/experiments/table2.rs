@@ -1,0 +1,95 @@
+//! Table 2 — training speed (ms/step) per routing strategy, "Base" and
+//! "10B" rows at capacity 1x. Produced by the calibrated cluster simulator
+//! (DESIGN.md §2: the 8/16-GPU Whale testbed is simulated); the measured
+//! single-host wall-clock of the runnable twins is reported as a secondary
+//! series by the bench harness.
+
+use crate::cluster::{simulate_step, table2_hardware};
+use crate::config::{paper, CapacityMode};
+use crate::flops::table_strategies;
+use crate::util::table::{f1, Table};
+
+/// Known cells from the paper, for side-by-side printing.
+pub fn paper_cells() -> Vec<(&'static str, &'static str, f64)> {
+    vec![
+        ("Base", "top2", 218.2),
+        ("Base", "2top1", 220.1),
+        ("Base", "4top1", 225.3),
+        ("10B", "top2", 493.0),
+        ("10B", "2top1", 466.9),
+        ("10B", "4top1", 473.9),
+    ]
+}
+
+pub fn run() -> Table {
+    let hw = table2_hardware();
+    let strategies = table_strategies();
+    let mut header = vec!["model".to_string()];
+    header.extend(strategies.iter().map(|r| r.name()));
+    let header_refs: Vec<&str> = header.iter().map(|s| s.as_str()).collect();
+    let mut t = Table::new(
+        "Table 2 — simulated ms/step (capacity 1x, calibrated to Base/top2)",
+        &header_refs,
+    );
+    for cfg in [paper::base(), paper::ten_b()] {
+        let label = if cfg.name == "base" { "Base" } else { "10B" };
+        let mut row = vec![label.to_string()];
+        for r in &strategies {
+            let ms = simulate_step(&cfg, *r, CapacityMode::Times1, &hw).total_ms();
+            row.push(f1(ms));
+        }
+        t.row(row);
+    }
+    t
+}
+
+/// Paper-vs-simulated comparison rows for EXPERIMENTS.md.
+pub fn comparison() -> Table {
+    let hw = table2_hardware();
+    let mut t = Table::new(
+        "Table 2 — paper vs simulated",
+        &["model", "strategy", "paper ms", "sim ms", "rel err"],
+    );
+    for (model, strat, want) in paper_cells() {
+        let cfg = if model == "Base" { paper::base() } else { paper::ten_b() };
+        let routing = crate::config::Routing::parse(strat).unwrap();
+        let got = simulate_step(&cfg, routing, CapacityMode::Times1, &hw).total_ms();
+        t.row(vec![
+            model.into(),
+            strat.into(),
+            f1(want),
+            f1(got),
+            format!("{:+.1}%", (got - want) / want * 100.0),
+        ]);
+    }
+    t
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn rows_and_ordering() {
+        let t = run();
+        assert_eq!(t.rows.len(), 2);
+        let base: Vec<f64> = t.rows[0][1..].iter().map(|s| s.parse().unwrap()).collect();
+        // columns: top1 top2 top4 2top1 4top1
+        assert!(base[2] > base[1], "top4 slower than top2");
+        assert!(base[4] < base[2], "4top1 faster than top4");
+        let ten: Vec<f64> = t.rows[1][1..].iter().map(|s| s.parse().unwrap()).collect();
+        assert!(ten[1] > base[1], "10B slower than base");
+    }
+
+    #[test]
+    fn comparison_close() {
+        let t = comparison();
+        for row in &t.rows {
+            let rel: f64 = row[4]
+                .trim_end_matches('%')
+                .parse()
+                .unwrap();
+            assert!(rel.abs() < 16.0, "{row:?}");
+        }
+    }
+}

@@ -1,0 +1,56 @@
+//! Tables 3 & 4 — downstream zero-shot captioning PPL on the held-out
+//! E-commerce-IC-like split. Table 3: base scale, all five strategies ×
+//! both capacity policies. Table 4: the 10B twin at capacity 1x
+//! (paper: top1 6.97 / top2 5.73 / 2top1 5.64 — 2top1 ≈ top2).
+//!
+//! PPLs come from the same cached runs as Fig 3/5 — paired eval batches.
+
+use anyhow::Result;
+
+use super::runner::Runner;
+use crate::util::table::{f2, Table};
+
+pub fn table3(runner: &Runner, steps: i64) -> Result<Table> {
+    let strategies = ["top1", "top2", "top4", "2top1", "4top1"];
+    let mut header = vec!["capacity".to_string()];
+    header.extend(strategies.iter().map(|s| s.to_string()));
+    let header_refs: Vec<&str> = header.iter().map(|s| s.as_str()).collect();
+    let mut t = Table::new(
+        "Table 3 — eval PPL on held-out split (base scale)",
+        &header_refs,
+    );
+    for cap in ["capk", "cap1"] {
+        let mut row = vec![format!(
+            "Capacity {}",
+            if cap == "capk" { "kx" } else { "1x" }
+        )];
+        for s in strategies {
+            let variant = if s == "top1" {
+                "base-sim".to_string() // top-1 is identical under both policies
+            } else {
+                format!("base-sim-{s}-{cap}")
+            };
+            let run = runner.run(&variant, steps)?;
+            row.push(f2(run.final_ppl));
+        }
+        t.row(row);
+    }
+    Ok(t)
+}
+
+pub fn table4(runner: &Runner, steps: i64) -> Result<Table> {
+    let mut t = Table::new(
+        "Table 4 — eval PPL, 10B twin at capacity 1x (paper: 6.97 / 5.73 / 5.64)",
+        &["model", "top1", "top2", "2top1"],
+    );
+    let top1 = runner.run("large-sim", steps)?;
+    let top2 = runner.run("large-sim-top2-cap1", steps)?;
+    let p2 = runner.run("large-sim-2top1-cap1", steps)?;
+    t.row(vec![
+        "large-sim (10B twin)".into(),
+        f2(top1.final_ppl),
+        f2(top2.final_ppl),
+        f2(p2.final_ppl),
+    ]);
+    Ok(t)
+}

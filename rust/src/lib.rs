@@ -1,0 +1,32 @@
+//! # m6t — M6-T: Exploring Sparse Expert Models and Beyond, reproduced
+//!
+//! A three-layer reproduction of Yang et al. (2021):
+//!
+//! * **L1** — Pallas kernels for the MoE hot spots (expert-batched FFN,
+//!   prototype routing), authored in `python/compile/kernels/`;
+//! * **L2** — the M6-style multimodal MoE transformer + optimizers in JAX
+//!   (`python/compile/`), AOT-lowered to HLO text once per experiment
+//!   variant;
+//! * **L3** — this crate: the coordinator that owns the synthetic corpus,
+//!   the PJRT runtime with device-resident train state, the routing
+//!   analytics (c_v load balance), the analytical FLOPs model, the Whale
+//!   cluster simulator, and every table/figure driver.
+//!
+//! Python never runs on the request path: after `make artifacts`, the
+//! `m6t` binary is self-contained.
+//!
+//! See DESIGN.md for the full system inventory and the per-experiment
+//! index; EXPERIMENTS.md for paper-vs-measured results.
+
+pub mod cluster;
+pub mod config;
+pub mod coordinator;
+pub mod data;
+pub mod experiments;
+pub mod flops;
+pub mod metrics;
+pub mod moe;
+pub mod runtime;
+pub mod scaling;
+pub mod testing;
+pub mod util;

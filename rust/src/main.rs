@@ -1,0 +1,342 @@
+//! `m6t` — launcher CLI for the M6-T reproduction.
+//!
+//! Subcommands map one-to-one onto DESIGN.md §3's experiment index:
+//!   list                    show runnable variants from the manifest
+//!   train                   train one variant (checkpoints, metrics)
+//!   eval                    eval PPL of a checkpoint / fresh init
+//!   flops                   Table 1 (analytical per-GPU GFLOPs)
+//!   simulate                Table 2 (calibrated cluster simulator)
+//!   figure fig1|fig3|fig4|fig5|fig6
+//!   tables                  Tables 3 & 4 (downstream PPL)
+//!   report                  run everything, write results/ CSVs
+
+use std::process::ExitCode;
+
+use anyhow::Result;
+
+use m6t::config::paper;
+use m6t::coordinator::{Checkpoint, TrainOptions, Trainer};
+use m6t::experiments::{self, Runner};
+use m6t::runtime::{Engine, Manifest};
+use m6t::util::cli::Command;
+
+fn main() -> ExitCode {
+    let argv: Vec<String> = std::env::args().skip(1).collect();
+    let (sub, rest) = match argv.split_first() {
+        Some((s, r)) => (s.as_str(), r.to_vec()),
+        None => {
+            eprintln!("{USAGE}");
+            return ExitCode::FAILURE;
+        }
+    };
+    match dispatch(sub, &rest) {
+        Ok(()) => ExitCode::SUCCESS,
+        Err(e) => {
+            eprintln!("error: {e:#}");
+            ExitCode::FAILURE
+        }
+    }
+}
+
+const USAGE: &str = "m6t — M6-T sparse-expert reproduction
+subcommands:
+  list | train | eval | flops | simulate | figure | tables | report
+run `m6t <subcommand> --help` for options";
+
+fn common(cmd: Command) -> Command {
+    cmd.opt_default("artifacts", "artifacts", "artifact directory")
+        .opt_default("results", "results", "results directory")
+        .opt_default("seed", "42", "data/init seed")
+}
+
+fn dispatch(sub: &str, rest: &[String]) -> Result<()> {
+    match sub {
+        "list" => cmd_list(rest),
+        "train" => cmd_train(rest),
+        "eval" => cmd_eval(rest),
+        "flops" => cmd_flops(rest),
+        "simulate" => cmd_simulate(rest),
+        "figure" => cmd_figure(rest),
+        "tables" => cmd_tables(rest),
+        "report" => cmd_report(rest),
+        "--help" | "-h" | "help" => {
+            println!("{USAGE}");
+            Ok(())
+        }
+        other => anyhow::bail!("unknown subcommand {other:?}\n{USAGE}"),
+    }
+}
+
+fn parse(cmd: Command, rest: &[String]) -> Result<m6t::util::cli::Args> {
+    cmd.parse(rest).map_err(|e| anyhow::anyhow!("{e}"))
+}
+
+fn cmd_list(rest: &[String]) -> Result<()> {
+    let args = parse(common(Command::new("list", "show runnable variants")), rest)?;
+    let manifest = Manifest::load(args.get("artifacts").unwrap())?;
+    println!("{:<28} {:>9} {:>6} {:>8} {:>7}", "variant", "params", "C", "routing", "layers");
+    for (name, v) in &manifest.variants {
+        println!(
+            "{:<28} {:>8.1}M {:>6} {:>8} {:>7}",
+            name,
+            v.param_count as f64 / 1e6,
+            v.capacity,
+            v.config.routing.name(),
+            v.config.layers
+        );
+    }
+    Ok(())
+}
+
+fn cmd_train(rest: &[String]) -> Result<()> {
+    let cmd = common(Command::new("train", "train one variant"))
+        .opt_default("variant", "base-sim", "variant name (see `m6t list`)")
+        .opt_default("steps", "200", "training steps")
+        .opt_default("eval-every", "0", "eval cadence (0 = end only)")
+        .opt("checkpoint", "write final checkpoint here")
+        .opt("resume", "resume from checkpoint")
+        .flag("quiet", "suppress progress lines");
+    let args = parse(cmd, rest)?;
+    let manifest = Manifest::load(args.get("artifacts").unwrap())?;
+    let engine = Engine::cpu()?;
+    let name = args.get("variant").unwrap();
+    let info = manifest.variant(name)?;
+    eprintln!(
+        "[m6t] {} — {:.1}M params, C={}, {} on {}",
+        name,
+        info.param_count as f64 / 1e6,
+        info.capacity,
+        info.config.routing.name(),
+        engine.platform()
+    );
+    let runtime = engine.load(info)?;
+    eprintln!("[m6t] compiled in {:.1}s", runtime.compile_seconds);
+    let opts = TrainOptions {
+        steps: args.get_or("steps", 200i64).map_err(anyhow::Error::msg)?,
+        seed: args.get_or("seed", 42u64).map_err(anyhow::Error::msg)?,
+        eval_every: args.get_or("eval-every", 0i64).map_err(anyhow::Error::msg)?,
+        metrics_dir: Some(format!("{}/metrics", args.get("results").unwrap())),
+        verbose: !args.flag("quiet"),
+        ..Default::default()
+    };
+    let trainer = Trainer::new(&engine, runtime, opts);
+    let (outcome, state) = match args.get("resume") {
+        Some(path) => {
+            let ck = Checkpoint::load(path)?;
+            eprintln!("[m6t] resuming from step {}", ck.step);
+            let state = trainer.restore(&ck)?;
+            trainer.train_from(state)?
+        }
+        None => trainer.train()?,
+    };
+    println!(
+        "final: step {} loss {:.4} eval-PPL {:.3}",
+        outcome.final_state_step,
+        outcome.log.tail_loss(20),
+        outcome.evals.last().map(|&(_, p)| p).unwrap_or(f64::NAN)
+    );
+    if let Some(path) = args.get("checkpoint") {
+        trainer.snapshot(&state)?.save(path)?;
+        eprintln!("[m6t] checkpoint -> {path}");
+    }
+    Ok(())
+}
+
+fn cmd_eval(rest: &[String]) -> Result<()> {
+    let cmd = common(Command::new("eval", "evaluate PPL"))
+        .opt_default("variant", "base-sim", "variant name")
+        .opt("checkpoint", "checkpoint to evaluate (default: fresh init)")
+        .opt_default("batches", "16", "eval batches");
+    let args = parse(cmd, rest)?;
+    let manifest = Manifest::load(args.get("artifacts").unwrap())?;
+    let engine = Engine::cpu()?;
+    let info = manifest.variant(args.get("variant").unwrap())?;
+    let runtime = engine.load(info)?;
+    let opts = TrainOptions {
+        seed: args.get_or("seed", 42u64).map_err(anyhow::Error::msg)?,
+        ..Default::default()
+    };
+    let trainer = Trainer::new(&engine, runtime, opts);
+    let state = match args.get("checkpoint") {
+        Some(path) => trainer.restore(&Checkpoint::load(path)?)?,
+        None => trainer.runtime.init_state(42)?,
+    };
+    let n = args.get_or("batches", 16usize).map_err(anyhow::Error::msg)?;
+    let ppl = trainer.eval_ppl(&state, n)?;
+    println!("eval PPL over {n} batches: {ppl:.3}");
+    Ok(())
+}
+
+fn cmd_flops(rest: &[String]) -> Result<()> {
+    let cmd = Command::new("flops", "Table 1: analytical per-GPU GFLOPs")
+        .opt_default("model", "base", "paper preset: base|10B|100B|250B|1T")
+        .opt_default("results", "results", "results directory");
+    let args = parse(cmd, rest)?;
+    let preset = paper::by_name(args.get("model").unwrap())
+        .ok_or_else(|| anyhow::anyhow!("unknown preset {:?}", args.get("model")))?;
+    let t = experiments::table1::run(Some(preset));
+    print!("{}", t.render());
+    t.save_csv(format!("{}/table1.csv", args.get("results").unwrap()))?;
+    Ok(())
+}
+
+fn cmd_simulate(rest: &[String]) -> Result<()> {
+    let cmd = Command::new("simulate", "Table 2: cluster-simulated ms/step")
+        .opt_default("results", "results", "results directory")
+        .flag("compare", "also print paper-vs-simulated deltas");
+    let args = parse(cmd, rest)?;
+    let t = experiments::table2::run();
+    print!("{}", t.render());
+    t.save_csv(format!("{}/table2.csv", args.get("results").unwrap()))?;
+    if args.flag("compare") {
+        let c = experiments::table2::comparison();
+        print!("{}", c.render());
+        c.save_csv(format!("{}/table2_comparison.csv", args.get("results").unwrap()))?;
+    }
+    Ok(())
+}
+
+fn runner_from<'e>(
+    args: &m6t::util::cli::Args,
+    engine: &'e Engine,
+    manifest: &'e Manifest,
+) -> Result<Runner<'e>> {
+    let mut r = Runner::new(engine, manifest, args.get("results").unwrap());
+    r.seed = args.get_or("seed", 42u64).map_err(anyhow::Error::msg)?;
+    r.force = args.flag("force");
+    Ok(r)
+}
+
+fn cmd_figure(rest: &[String]) -> Result<()> {
+    let cmd = common(Command::new("figure", "reproduce a paper figure"))
+        .opt_default("steps", "200", "steps per training run")
+        .opt_default("side", "left", "fig3/fig4: left|right")
+        .flag("force", "ignore the run cache");
+    let args = parse(cmd, rest)?;
+    let which = args
+        .positional
+        .first()
+        .ok_or_else(|| anyhow::anyhow!("usage: m6t figure <fig1|fig3|fig4|fig5|fig6>"))?
+        .clone();
+    let manifest = Manifest::load(args.get("artifacts").unwrap())?;
+    let engine = Engine::cpu()?;
+    let runner = runner_from(&args, &engine, &manifest)?;
+    let steps: i64 = args.get_or("steps", 200i64).map_err(anyhow::Error::msg)?;
+    let results = args.get("results").unwrap().to_string();
+    match which.as_str() {
+        "fig1" => {
+            let out = experiments::fig1::run(&runner, steps)?;
+            print!("{}", out.summary.render());
+            out.series.save_csv(format!("{results}/fig1_series.csv"))?;
+            out.summary.save_csv(format!("{results}/fig1_summary.csv"))?;
+        }
+        "fig3" => {
+            let side = args.get("side").unwrap();
+            let out = experiments::fig3::run(&runner, steps, side)?;
+            print!("{}", out.summary.render());
+            out.curves.save_csv(format!("{results}/fig3_{side}_curves.csv"))?;
+            out.summary.save_csv(format!("{results}/fig3_{side}_summary.csv"))?;
+        }
+        "fig4" => {
+            let side = args.get("side").unwrap();
+            let out = experiments::fig4::run(&runner, steps, side)?;
+            print!("{}", out.summary.render());
+            out.curves.save_csv(format!("{results}/fig4_{side}_curves.csv"))?;
+            out.summary.save_csv(format!("{results}/fig4_{side}_summary.csv"))?;
+        }
+        "fig5" => {
+            let out = experiments::fig5::run(&runner, steps)?;
+            print!("{}", out.summary.render());
+            out.curves.save_csv(format!("{results}/fig5_curves.csv"))?;
+            out.summary.save_csv(format!("{results}/fig5_summary.csv"))?;
+        }
+        "fig6" => {
+            let out = experiments::fig6::run(&runner, steps)?;
+            print!("{}", out.summary.render());
+            println!("modelled convergence speedup: {:.2}x (paper: ~5x)", out.speedup);
+            out.curves.save_csv(format!("{results}/fig6_curves.csv"))?;
+            out.summary.save_csv(format!("{results}/fig6_summary.csv"))?;
+        }
+        other => anyhow::bail!("unknown figure {other:?}"),
+    }
+    Ok(())
+}
+
+fn cmd_tables(rest: &[String]) -> Result<()> {
+    let cmd = common(Command::new("tables", "Tables 3 & 4: downstream PPL"))
+        .opt_default("steps", "200", "steps per training run")
+        .flag("force", "ignore the run cache");
+    let args = parse(cmd, rest)?;
+    let manifest = Manifest::load(args.get("artifacts").unwrap())?;
+    let engine = Engine::cpu()?;
+    let runner = runner_from(&args, &engine, &manifest)?;
+    let steps: i64 = args.get_or("steps", 200i64).map_err(anyhow::Error::msg)?;
+    let results = args.get("results").unwrap().to_string();
+    let t3 = experiments::table34::table3(&runner, steps)?;
+    print!("{}", t3.render());
+    t3.save_csv(format!("{results}/table3.csv"))?;
+    let t4 = experiments::table34::table4(&runner, steps)?;
+    print!("{}", t4.render());
+    t4.save_csv(format!("{results}/table4.csv"))?;
+    Ok(())
+}
+
+fn cmd_report(rest: &[String]) -> Result<()> {
+    let cmd = common(Command::new("report", "run every table and figure"))
+        .opt_default("steps", "200", "steps per training run")
+        .flag("force", "ignore the run cache");
+    let args = parse(cmd, rest)?;
+    let manifest = Manifest::load(args.get("artifacts").unwrap())?;
+    let engine = Engine::cpu()?;
+    let runner = runner_from(&args, &engine, &manifest)?;
+    let steps: i64 = args.get_or("steps", 200i64).map_err(anyhow::Error::msg)?;
+    let results = args.get("results").unwrap().to_string();
+
+    let t1 = experiments::table1::run(None);
+    print!("{}", t1.render());
+    t1.save_csv(format!("{results}/table1.csv"))?;
+    let t2 = experiments::table2::run();
+    print!("{}", t2.render());
+    t2.save_csv(format!("{results}/table2.csv"))?;
+    let t2c = experiments::table2::comparison();
+    print!("{}", t2c.render());
+    t2c.save_csv(format!("{results}/table2_comparison.csv"))?;
+
+    let f1 = experiments::fig1::run(&runner, steps)?;
+    print!("{}", f1.summary.render());
+    f1.series.save_csv(format!("{results}/fig1_series.csv"))?;
+    f1.summary.save_csv(format!("{results}/fig1_summary.csv"))?;
+
+    for side in ["left", "right"] {
+        let f3 = experiments::fig3::run(&runner, steps, side)?;
+        print!("{}", f3.summary.render());
+        f3.curves.save_csv(format!("{results}/fig3_{side}_curves.csv"))?;
+        f3.summary.save_csv(format!("{results}/fig3_{side}_summary.csv"))?;
+    }
+    for side in ["left", "right"] {
+        let f4 = experiments::fig4::run(&runner, steps, side)?;
+        print!("{}", f4.summary.render());
+        f4.curves.save_csv(format!("{results}/fig4_{side}_curves.csv"))?;
+        f4.summary.save_csv(format!("{results}/fig4_{side}_summary.csv"))?;
+    }
+    let f5 = experiments::fig5::run(&runner, steps)?;
+    print!("{}", f5.summary.render());
+    f5.curves.save_csv(format!("{results}/fig5_curves.csv"))?;
+    f5.summary.save_csv(format!("{results}/fig5_summary.csv"))?;
+
+    let f6 = experiments::fig6::run(&runner, steps)?;
+    print!("{}", f6.summary.render());
+    println!("modelled convergence speedup: {:.2}x (paper: ~5x)", f6.speedup);
+    f6.curves.save_csv(format!("{results}/fig6_curves.csv"))?;
+    f6.summary.save_csv(format!("{results}/fig6_summary.csv"))?;
+
+    let t3 = experiments::table34::table3(&runner, steps)?;
+    print!("{}", t3.render());
+    t3.save_csv(format!("{results}/table3.csv"))?;
+    let t4 = experiments::table34::table4(&runner, steps)?;
+    print!("{}", t4.render());
+    t4.save_csv(format!("{results}/table4.csv"))?;
+
+    eprintln!("[m6t] report complete — CSVs in {results}/");
+    Ok(())
+}

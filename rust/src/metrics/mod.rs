@@ -1,0 +1,212 @@
+//! Training metrics: step records, EMA loss, per-layer c_v series, and
+//! CSV/JSONL sinks consumed by the figure drivers and EXPERIMENTS.md.
+
+use std::fs;
+use std::io::Write as _;
+use std::path::{Path, PathBuf};
+
+use anyhow::{Context, Result};
+
+use crate::runtime::engine::StepStats;
+use crate::util::json::{arr, num, obj, s, write as jwrite, Value};
+use crate::util::stats::Ema;
+
+/// One recorded training step.
+#[derive(Debug, Clone)]
+pub struct StepRecord {
+    pub step: i64,
+    pub loss: f64,
+    pub aux_loss: f64,
+    pub grad_norm: f64,
+    pub cv_per_layer: Vec<f64>,
+    pub dropped: f64,
+    pub ms_per_step: f64,
+}
+
+/// In-memory run log + optional JSONL sink.
+pub struct RunLog {
+    pub name: String,
+    pub records: Vec<StepRecord>,
+    ema: Ema,
+    sink: Option<fs::File>,
+    pub sink_path: Option<PathBuf>,
+}
+
+impl RunLog {
+    pub fn new(name: impl Into<String>) -> Self {
+        Self {
+            name: name.into(),
+            records: Vec::new(),
+            ema: Ema::new(0.95),
+            sink: None,
+            sink_path: None,
+        }
+    }
+
+    /// Also append every record to a JSONL file under `dir`.
+    pub fn with_sink(mut self, dir: impl AsRef<Path>) -> Result<Self> {
+        fs::create_dir_all(&dir)?;
+        let path = dir.as_ref().join(format!("{}.jsonl", self.name));
+        let file = fs::File::create(&path).with_context(|| format!("creating {path:?}"))?;
+        self.sink = Some(file);
+        self.sink_path = Some(path);
+        Ok(self)
+    }
+
+    pub fn push(&mut self, step: i64, stats: &StepStats, ms: f64) -> Result<()> {
+        let rec = StepRecord {
+            step,
+            loss: stats.loss as f64,
+            aux_loss: stats.aux_loss as f64,
+            grad_norm: stats.grad_norm as f64,
+            cv_per_layer: stats.cv_per_layer(),
+            dropped: stats.total_dropped(),
+            ms_per_step: ms,
+        };
+        self.ema.push(rec.loss);
+        if let Some(f) = &mut self.sink {
+            let v = obj(vec![
+                ("step", num(rec.step as f64)),
+                ("loss", num(rec.loss)),
+                ("aux_loss", num(rec.aux_loss)),
+                ("grad_norm", num(rec.grad_norm)),
+                ("cv", arr(rec.cv_per_layer.iter().map(|&x| num(x)).collect())),
+                ("dropped", num(rec.dropped)),
+                ("ms", num(rec.ms_per_step)),
+            ]);
+            writeln!(f, "{}", jwrite(&v))?;
+        }
+        self.records.push(rec);
+        Ok(())
+    }
+
+    pub fn ema_loss(&self) -> f64 {
+        self.ema.get()
+    }
+
+    pub fn last(&self) -> Option<&StepRecord> {
+        self.records.last()
+    }
+
+    /// Log-perplexity curve as (step, loss) pairs — the paper's y-axis
+    /// ("training log perplexity" == mean token NLL).
+    pub fn loss_curve(&self) -> Vec<(i64, f64)> {
+        self.records.iter().map(|r| (r.step, r.loss)).collect()
+    }
+
+    /// Mean loss over the trailing `n` records — convergence-level proxy.
+    pub fn tail_loss(&self, n: usize) -> f64 {
+        let take = self.records.len().min(n.max(1));
+        if take == 0 {
+            return f64::NAN;
+        }
+        let s: f64 = self.records[self.records.len() - take..]
+            .iter()
+            .map(|r| r.loss)
+            .sum();
+        s / take as f64
+    }
+
+    /// First step whose EMA-smoothed loss dips below `target` — used for
+    /// the Fig-6 convergence-speedup factor. None if never reached.
+    pub fn steps_to_loss(&self, target: f64) -> Option<i64> {
+        let mut ema = Ema::new(0.9);
+        for r in &self.records {
+            ema.push(r.loss);
+            if ema.get() <= target {
+                return Some(r.step);
+            }
+        }
+        None
+    }
+
+    /// Mean c_v of a layer over the trailing n records.
+    pub fn tail_cv(&self, layer: usize, n: usize) -> f64 {
+        let take = self.records.len().min(n.max(1));
+        if take == 0 {
+            return f64::NAN;
+        }
+        let s: f64 = self.records[self.records.len() - take..]
+            .iter()
+            .map(|r| r.cv_per_layer.get(layer).copied().unwrap_or(f64::NAN))
+            .sum();
+        s / take as f64
+    }
+
+    /// Summary object for EXPERIMENTS.md.
+    pub fn summary(&self) -> Value {
+        obj(vec![
+            ("name", s(self.name.clone())),
+            ("steps", num(self.records.len() as f64)),
+            ("final_loss", num(self.tail_loss(20))),
+            ("ema_loss", num(self.ema_loss())),
+            (
+                "mean_ms",
+                num({
+                    let n = self.records.len().max(1);
+                    self.records.iter().map(|r| r.ms_per_step).sum::<f64>() / n as f64
+                }),
+            ),
+        ])
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn stats(loss: f32, layers: usize, experts: usize) -> StepStats {
+        StepStats {
+            loss,
+            aux_loss: 0.1,
+            grad_norm: 1.0,
+            load: vec![1.0; layers * experts],
+            layers,
+            experts,
+            dropped: vec![0.0; layers],
+        }
+    }
+
+    #[test]
+    fn records_accumulate() {
+        let mut log = RunLog::new("t");
+        for i in 0..10 {
+            log.push(i, &stats(5.0 - i as f32 * 0.1, 2, 4), 100.0).unwrap();
+        }
+        assert_eq!(log.records.len(), 10);
+        assert!(log.tail_loss(3) < 5.0);
+        assert_eq!(log.loss_curve().len(), 10);
+        assert_eq!(log.last().unwrap().step, 9);
+    }
+
+    #[test]
+    fn steps_to_loss_finds_crossing() {
+        let mut log = RunLog::new("t");
+        for i in 0..50 {
+            log.push(i, &stats(5.0 - i as f32 * 0.1, 1, 2), 1.0).unwrap();
+        }
+        let hit = log.steps_to_loss(3.0).unwrap();
+        assert!((15..30).contains(&hit), "hit at {hit}");
+        assert_eq!(log.steps_to_loss(-1.0), None);
+    }
+
+    #[test]
+    fn balanced_load_cv_zero() {
+        let mut log = RunLog::new("t");
+        log.push(0, &stats(1.0, 2, 4), 1.0).unwrap();
+        assert_eq!(log.tail_cv(0, 1), 0.0);
+        assert_eq!(log.tail_cv(1, 1), 0.0);
+    }
+
+    #[test]
+    fn jsonl_sink_writes() {
+        let dir = std::env::temp_dir().join("m6t-metrics-test");
+        let mut log = RunLog::new("sink").with_sink(&dir).unwrap();
+        log.push(0, &stats(2.0, 1, 2), 3.0).unwrap();
+        let path = log.sink_path.clone().unwrap();
+        drop(log);
+        let text = fs::read_to_string(path).unwrap();
+        assert!(text.contains("\"loss\":2"));
+        let _ = fs::remove_dir_all(dir);
+    }
+}

@@ -1,0 +1,14 @@
+//! Rust mirror of the MoE routing semantics (GShard top-k and k top-1
+//! expert prototyping, with Eq.-2 capacity).
+//!
+//! The authoritative implementation lives in the lowered HLO (L2 + the
+//! Pallas routing kernel); this mirror exists so that
+//!  * the cluster simulator can replay routing decisions over synthetic
+//!    gate distributions at paper scale (Tables 2, Fig 6) without XLA,
+//!  * property tests can hammer the routing invariants (capacity never
+//!    exceeded, positions unique, drops accounted) over random inputs,
+//!  * the c_v load-balance analytics (Fig 1) have a host-side oracle.
+
+pub mod router;
+
+pub use router::{route, RouteOutput, RouterSpec};

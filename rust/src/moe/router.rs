@@ -1,0 +1,323 @@
+//! Host-side routing: top-k (k sequential argmax rounds over all experts)
+//! and k top-1 prototyping (k parallel routers over disjoint expert
+//! groups), with per-expert capacity and token dropping.
+//!
+//! Semantics match `python/compile/moe.py` exactly (the integration test
+//! `rust/tests/routing_parity.rs` cross-checks counts against the HLO's
+//! own load outputs).
+
+use crate::config::Routing;
+use crate::util::stats::coefficient_of_variation;
+
+/// Routing problem: gate probabilities for T tokens over E experts.
+#[derive(Debug, Clone)]
+pub struct RouterSpec {
+    pub routing: Routing,
+    pub num_experts: usize,
+    pub capacity: usize,
+}
+
+/// One token's assignment to one expert slot.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct Assignment {
+    pub token: usize,
+    pub expert: usize,
+    /// slot within the expert's capacity buffer
+    pub position: usize,
+    /// combine weight (renormalized for top-k, raw for prototyping)
+    pub gate: f32,
+}
+
+#[derive(Debug, Clone, Default)]
+pub struct RouteOutput {
+    pub assignments: Vec<Assignment>,
+    /// kept (real) tokens per expert — effective compute load (§3.1)
+    pub load: Vec<u32>,
+    /// tokens that overflowed capacity and fell back to the residual path
+    pub dropped: u32,
+}
+
+impl RouteOutput {
+    /// Coefficient of variation of effective compute load (Fig 1 metric).
+    pub fn cv(&self) -> f64 {
+        let loads: Vec<f64> = self.load.iter().map(|&x| x as f64).collect();
+        coefficient_of_variation(&loads)
+    }
+    /// Padding fraction: capacity slots left empty (they are still computed
+    /// and communicated — the cost the paper's Table 1 accounts under
+    /// "Capacity kx").
+    pub fn padding_fraction(&self, capacity: usize) -> f64 {
+        let total = self.load.len() * capacity;
+        if total == 0 {
+            return 0.0;
+        }
+        let used: usize = self.load.iter().map(|&x| x as usize).sum();
+        1.0 - used as f64 / total as f64
+    }
+}
+
+/// Route `gates` (T x E row-major, already softmaxed *per prototype group*
+/// for prototyping) under `spec`.
+pub fn route(gates: &[f32], tokens: usize, spec: &RouterSpec) -> RouteOutput {
+    let e = spec.num_experts;
+    assert_eq!(gates.len(), tokens * e, "gate matrix shape mismatch");
+    match spec.routing {
+        Routing::TopK(k) => route_topk(gates, tokens, e, k as usize, spec.capacity),
+        Routing::Prototype(z) => route_prototype(gates, tokens, e, z as usize, spec.capacity),
+    }
+}
+
+fn route_topk(
+    gates: &[f32],
+    tokens: usize,
+    e: usize,
+    k: usize,
+    capacity: usize,
+) -> RouteOutput {
+    let mut load = vec![0u32; e];
+    let mut out = RouteOutput { assignments: Vec::new(), load: Vec::new(), dropped: 0 };
+    // chosen[token] bitmask over experts already used by earlier rounds
+    let mut chosen = vec![vec![false; e]; tokens];
+    // raw gate of each selection, for renormalization
+    let mut selections: Vec<Vec<(usize, usize, f32, bool)>> = vec![Vec::new(); tokens];
+
+    for _round in 0..k {
+        // sequential argmax round: tokens processed in order (cumsum
+        // semantics), experts with earlier-round selections masked out
+        for t in 0..tokens {
+            let row = &gates[t * e..(t + 1) * e];
+            let mut best = usize::MAX;
+            let mut best_g = f32::NEG_INFINITY;
+            for (i, (&g, &used)) in row.iter().zip(&chosen[t]).enumerate() {
+                if !used && g > best_g {
+                    best = i;
+                    best_g = g;
+                }
+            }
+            debug_assert!(best != usize::MAX);
+            chosen[t][best] = true;
+            let pos = load[best] as usize;
+            let kept = pos < capacity;
+            if kept {
+                load[best] += 1;
+            } else {
+                out.dropped += 1;
+            }
+            selections[t].push((best, pos, best_g, kept));
+        }
+    }
+
+    // renormalize gate values over the k selections per token (Eq. 1)
+    for (t, sels) in selections.iter().enumerate() {
+        let denom: f32 = sels.iter().map(|s| s.2).sum::<f32>() + 1e-9;
+        for &(expert, position, g, kept) in sels {
+            if kept {
+                out.assignments.push(Assignment {
+                    token: t,
+                    expert,
+                    position,
+                    gate: g / denom,
+                });
+            }
+        }
+    }
+    out.load = load;
+    out
+}
+
+fn route_prototype(
+    gates: &[f32],
+    tokens: usize,
+    e: usize,
+    z: usize,
+    capacity: usize,
+) -> RouteOutput {
+    assert!(e % z == 0, "experts {e} not divisible by prototypes {z}");
+    let f = e / z;
+    let mut load = vec![0u32; e];
+    let mut out = RouteOutput { assignments: Vec::new(), load: Vec::new(), dropped: 0 };
+    // prototypes are independent routers — no cross-prototype interaction
+    for proto in 0..z {
+        for t in 0..tokens {
+            let row = &gates[t * e + proto * f..t * e + (proto + 1) * f];
+            let mut best = 0;
+            let mut best_g = f32::NEG_INFINITY;
+            for (i, &g) in row.iter().enumerate() {
+                if g > best_g {
+                    best = i;
+                    best_g = g;
+                }
+            }
+            let expert = proto * f + best;
+            let pos = load[expert] as usize;
+            if pos < capacity {
+                load[expert] += 1;
+                out.assignments.push(Assignment { token: t, expert, position: pos, gate: best_g });
+            } else {
+                out.dropped += 1;
+            }
+        }
+    }
+    out.load = load;
+    out
+}
+
+/// Convenience: per-token softmax over each prototype group (what the L2
+/// router does before the kernel).
+pub fn softmax_gates(logits: &[f32], tokens: usize, e: usize, prototypes: usize) -> Vec<f32> {
+    assert_eq!(logits.len(), tokens * e);
+    assert!(e % prototypes == 0);
+    let f = e / prototypes;
+    let mut out = vec![0f32; logits.len()];
+    for t in 0..tokens {
+        for z in 0..prototypes {
+            let base = t * e + z * f;
+            let row = &logits[base..base + f];
+            let max = row.iter().cloned().fold(f32::NEG_INFINITY, f32::max);
+            let exps: Vec<f32> = row.iter().map(|&x| (x - max).exp()).collect();
+            let sum: f32 = exps.iter().sum();
+            for (i, v) in exps.iter().enumerate() {
+                out[base + i] = v / sum;
+            }
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    fn random_gates(tokens: usize, e: usize, z: usize, seed: u64) -> Vec<f32> {
+        let mut rng = Rng::new(seed);
+        let logits: Vec<f32> = (0..tokens * e).map(|_| rng.normal() as f32).collect();
+        softmax_gates(&logits, tokens, e, z)
+    }
+
+    #[test]
+    fn top1_respects_capacity() {
+        let gates = random_gates(64, 8, 1, 1);
+        let spec = RouterSpec { routing: Routing::TopK(1), num_experts: 8, capacity: 4 };
+        let out = route(&gates, 64, &spec);
+        assert!(out.load.iter().all(|&l| l <= 4));
+        let kept: u32 = out.load.iter().sum();
+        assert_eq!(kept + out.dropped, 64);
+    }
+
+    #[test]
+    fn top2_assigns_two_distinct_experts() {
+        let gates = random_gates(16, 8, 1, 2);
+        let spec = RouterSpec { routing: Routing::TopK(2), num_experts: 8, capacity: 16 };
+        let out = route(&gates, 16, &spec);
+        // capacity ample: every token keeps both assignments
+        assert_eq!(out.assignments.len(), 32);
+        for t in 0..16 {
+            let experts: Vec<usize> = out
+                .assignments
+                .iter()
+                .filter(|a| a.token == t)
+                .map(|a| a.expert)
+                .collect();
+            assert_eq!(experts.len(), 2);
+            assert_ne!(experts[0], experts[1], "top-2 must pick distinct experts");
+        }
+    }
+
+    #[test]
+    fn topk_gates_renormalized() {
+        let gates = random_gates(8, 4, 1, 3);
+        let spec = RouterSpec { routing: Routing::TopK(2), num_experts: 4, capacity: 16 };
+        let out = route(&gates, 8, &spec);
+        for t in 0..8 {
+            let s: f32 = out
+                .assignments
+                .iter()
+                .filter(|a| a.token == t)
+                .map(|a| a.gate)
+                .sum();
+            assert!((s - 1.0).abs() < 1e-4, "token {t} gates sum {s}");
+        }
+    }
+
+    #[test]
+    fn prototype_routes_one_per_group() {
+        let gates = random_gates(32, 8, 2, 4);
+        let spec = RouterSpec { routing: Routing::Prototype(2), num_experts: 8, capacity: 32 };
+        let out = route(&gates, 32, &spec);
+        assert_eq!(out.assignments.len(), 64); // 2 prototypes x 32 tokens
+        for a in &out.assignments {
+            assert!(a.expert < 8);
+        }
+        for t in 0..32 {
+            let mut groups: Vec<usize> = out
+                .assignments
+                .iter()
+                .filter(|a| a.token == t)
+                .map(|a| a.expert / 4)
+                .collect();
+            groups.sort();
+            assert_eq!(groups, vec![0, 1], "one expert from each prototype");
+        }
+    }
+
+    #[test]
+    fn positions_unique_per_expert() {
+        let gates = random_gates(128, 8, 1, 5);
+        let spec = RouterSpec { routing: Routing::TopK(2), num_experts: 8, capacity: 20 };
+        let out = route(&gates, 128, &spec);
+        for e in 0..8 {
+            let mut pos: Vec<usize> = out
+                .assignments
+                .iter()
+                .filter(|a| a.expert == e)
+                .map(|a| a.position)
+                .collect();
+            let n = pos.len();
+            pos.sort();
+            pos.dedup();
+            assert_eq!(pos.len(), n, "duplicate slot in expert {e}");
+            assert!(pos.iter().all(|&p| p < 20));
+        }
+    }
+
+    #[test]
+    fn cv_zero_when_uniform() {
+        // identical gates -> argmax always expert 0 within each group; use
+        // a crafted gate matrix instead: distribute tokens round-robin
+        let tokens = 32;
+        let e = 4;
+        let mut gates = vec![0f32; tokens * e];
+        for t in 0..tokens {
+            gates[t * e + (t % e)] = 1.0;
+        }
+        let spec = RouterSpec { routing: Routing::TopK(1), num_experts: e, capacity: 8 };
+        let out = route(&gates, tokens, &spec);
+        assert_eq!(out.cv(), 0.0);
+        assert_eq!(out.dropped, 0);
+        assert_eq!(out.padding_fraction(8), 0.0);
+    }
+
+    #[test]
+    fn skewed_gates_drop_tokens() {
+        // all tokens love expert 0 -> only `capacity` survive
+        let tokens = 64;
+        let e = 8;
+        let mut gates = vec![0.001f32; tokens * e];
+        for t in 0..tokens {
+            gates[t * e] = 1.0;
+        }
+        let spec = RouterSpec { routing: Routing::TopK(1), num_experts: e, capacity: 10 };
+        let out = route(&gates, tokens, &spec);
+        assert_eq!(out.load[0], 10);
+        assert_eq!(out.dropped, 54);
+        assert!(out.cv() > 1.5);
+    }
+
+    #[test]
+    fn softmax_rows_normalize_per_group() {
+        let g = softmax_gates(&[1.0, 2.0, 3.0, 4.0], 1, 4, 2);
+        assert!((g[0] + g[1] - 1.0).abs() < 1e-6);
+        assert!((g[2] + g[3] - 1.0).abs() < 1e-6);
+    }
+}

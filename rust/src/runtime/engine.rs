@@ -1,0 +1,276 @@
+//! PJRT execution engine: loads HLO-text artifacts, compiles them on the
+//! CPU client, and runs train/eval steps with **device-resident state**.
+//!
+//! The train state (parameters + optimizer moments) never round-trips
+//! through the host: `step()` feeds the previous step's output buffers
+//! straight back via `execute_b` (the vendored xla crate is patched to set
+//! `ExecuteOptions::untuple_result`, so multi-output modules return flat
+//! per-output buffers). Only the batch goes in and the scalar metrics +
+//! per-layer load vectors come out — a few hundred bytes per step.
+
+use std::path::Path;
+use std::time::Instant;
+
+use anyhow::{anyhow, bail, Context, Result};
+
+use super::manifest::{DType, VariantInfo};
+use crate::data::Batch;
+
+/// Scalar + load statistics returned by one train step.
+#[derive(Debug, Clone)]
+pub struct StepStats {
+    pub loss: f32,
+    pub aux_loss: f32,
+    pub grad_norm: f32,
+    /// (layers, experts) kept-token counts, row-major
+    pub load: Vec<f32>,
+    pub layers: usize,
+    pub experts: usize,
+    /// per-layer dropped-token counts
+    pub dropped: Vec<f32>,
+}
+
+impl StepStats {
+    /// Per-layer coefficient of variation of effective compute load —
+    /// the paper's Fig-1 metric.
+    pub fn cv_per_layer(&self) -> Vec<f64> {
+        (0..self.layers)
+            .map(|l| {
+                let row: Vec<f64> = self.load[l * self.experts..(l + 1) * self.experts]
+                    .iter()
+                    .map(|&x| x as f64)
+                    .collect();
+                crate::util::stats::coefficient_of_variation(&row)
+            })
+            .collect()
+    }
+    pub fn total_dropped(&self) -> f64 {
+        self.dropped.iter().map(|&x| x as f64).sum()
+    }
+}
+
+/// Device-resident train state: the flat buffer vector whose order is
+/// pinned by `VariantInfo::state_leaves`.
+pub struct TrainState {
+    pub buffers: Vec<xla::PjRtBuffer>,
+    pub step: i64,
+}
+
+/// One compiled variant, ready to run.
+pub struct VariantRuntime {
+    pub info: VariantInfo,
+    init: xla::PjRtLoadedExecutable,
+    step: xla::PjRtLoadedExecutable,
+    eval: xla::PjRtLoadedExecutable,
+    client: xla::PjRtClient,
+    pub compile_seconds: f64,
+}
+
+/// The PJRT engine; owns the client.
+pub struct Engine {
+    client: xla::PjRtClient,
+}
+
+impl Engine {
+    pub fn cpu() -> Result<Self> {
+        let client = xla::PjRtClient::cpu().map_err(wrap)?;
+        Ok(Self { client })
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    fn compile_file(&self, path: &Path) -> Result<xla::PjRtLoadedExecutable> {
+        let text_path = path
+            .to_str()
+            .ok_or_else(|| anyhow!("non-utf8 artifact path {path:?}"))?;
+        let proto = xla::HloModuleProto::from_text_file(text_path)
+            .map_err(wrap)
+            .with_context(|| format!("parsing HLO text {path:?}"))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        self.client
+            .compile(&comp)
+            .map_err(wrap)
+            .with_context(|| format!("compiling {path:?}"))
+    }
+
+    /// Load + compile all three modules of a variant.
+    pub fn load(&self, info: &VariantInfo) -> Result<VariantRuntime> {
+        let t0 = Instant::now();
+        let init = self.compile_file(&info.init_hlo)?;
+        let step = self.compile_file(&info.step_hlo)?;
+        let eval = self.compile_file(&info.eval_hlo)?;
+        Ok(VariantRuntime {
+            info: info.clone(),
+            init,
+            step,
+            eval,
+            client: self.client.clone(),
+            compile_seconds: t0.elapsed().as_secs_f64(),
+        })
+    }
+}
+
+impl VariantRuntime {
+    /// Run the init module: seed -> fresh device-resident train state.
+    pub fn init_state(&self, seed: i32) -> Result<TrainState> {
+        let seed_lit = xla::Literal::scalar(seed);
+        let outs = self.init.execute::<xla::Literal>(&[seed_lit]).map_err(wrap)?;
+        let buffers = into_single_replica(outs)?;
+        if buffers.len() != self.info.n_state {
+            bail!(
+                "init returned {} buffers, manifest says {}",
+                buffers.len(),
+                self.info.n_state
+            );
+        }
+        Ok(TrainState { buffers, step: 0 })
+    }
+
+    /// Upload the batch to device buffers.
+    ///
+    /// Uses `BufferFromHostBuffer` with `kImmutableOnlyDuringCall` semantics:
+    /// the copy completes before the call returns, so no host memory needs to
+    /// outlive the call. (The literal-based upload path,
+    /// `BufferFromHostLiteral`, schedules `CopyFromLiteral` asynchronously on
+    /// the 0.5.1 TFRT CPU client and intermittently crossed copy lambdas with
+    /// later uploads — observed as a `literal.size_bytes() == b->size()`
+    /// check crash; see DESIGN.md §Runtime-notes.)
+    fn batch_buffers(&self, batch: &Batch) -> Result<(xla::PjRtBuffer, xla::PjRtBuffer)> {
+        let cfg = &self.info.config;
+        if batch.batch != cfg.batch || batch.text_len != cfg.text_len {
+            bail!(
+                "batch geometry {}x{} does not match config {}x{}",
+                batch.batch,
+                batch.text_len,
+                cfg.batch,
+                cfg.text_len
+            );
+        }
+        let pb = self
+            .client
+            .buffer_from_host_buffer(
+                &batch.patch_features,
+                &[batch.batch, batch.patches, batch.patch_dim],
+                None,
+            )
+            .map_err(wrap)?;
+        let tb = self
+            .client
+            .buffer_from_host_buffer(&batch.tokens, &[batch.batch, batch.text_len], None)
+            .map_err(wrap)?;
+        Ok((pb, tb))
+    }
+
+    /// One train step: consumes the state, returns the advanced state and
+    /// the step statistics. Parameters stay on device.
+    pub fn step(&self, state: TrainState, batch: &Batch) -> Result<(TrainState, StepStats)> {
+        let (pb, tb) = self.batch_buffers(batch)?;
+        let step_i32 = [state.step as i32];
+        let sb = self
+            .client
+            .buffer_from_host_buffer(&step_i32, &[], None)
+            .map_err(wrap)?;
+
+        let mut args: Vec<&xla::PjRtBuffer> = Vec::with_capacity(state.buffers.len() + 3);
+        args.extend(state.buffers.iter());
+        args.push(&sb);
+        args.push(&pb);
+        args.push(&tb);
+
+        let outs = self.step.execute_b::<&xla::PjRtBuffer>(&args).map_err(wrap)?;
+        let mut bufs = into_single_replica(outs)?;
+        let expect = self.info.n_state + self.info.step_outputs.len();
+        if bufs.len() != expect {
+            bail!("step returned {} buffers, expected {}", bufs.len(), expect);
+        }
+        let extras = bufs.split_off(self.info.n_state);
+        let cfg = &self.info.config;
+        let stats = StepStats {
+            loss: scalar_f32(&extras[0])?,
+            aux_loss: scalar_f32(&extras[1])?,
+            grad_norm: scalar_f32(&extras[2])?,
+            load: vec_f32(&extras[3])?,
+            layers: cfg.layers,
+            experts: cfg.num_experts,
+            dropped: vec_f32(&extras[4])?,
+        };
+        Ok((TrainState { buffers: bufs, step: state.step + 1 }, stats))
+    }
+
+    /// Teacher-forced eval on one batch: (sum_nll, token_count).
+    pub fn eval(&self, state: &TrainState, batch: &Batch) -> Result<(f64, f64)> {
+        let (pb, tb) = self.batch_buffers(batch)?;
+        let mut args: Vec<&xla::PjRtBuffer> = Vec::with_capacity(self.info.n_params + 2);
+        args.extend(state.buffers[..self.info.n_params].iter());
+        args.push(&pb);
+        args.push(&tb);
+        let outs = self.eval.execute_b::<&xla::PjRtBuffer>(&args).map_err(wrap)?;
+        let bufs = into_single_replica(outs)?;
+        if bufs.len() != 2 {
+            bail!("eval returned {} buffers, expected 2", bufs.len());
+        }
+        Ok((scalar_f32(&bufs[0])? as f64, scalar_f32(&bufs[1])? as f64))
+    }
+
+    /// Pull the full state to host (checkpointing).
+    pub fn state_to_host(&self, state: &TrainState) -> Result<Vec<Vec<f32>>> {
+        state
+            .buffers
+            .iter()
+            .zip(&self.info.state_leaves)
+            .map(|(b, spec)| match spec.dtype {
+                DType::F32 => vec_f32(b),
+                DType::I32 => {
+                    // i32 leaves (none today) round-trip bit-exactly via f32 reinterpret
+                    bail!("i32 state leaves not supported in checkpoints yet")
+                }
+            })
+            .collect()
+    }
+
+    /// Restore a host checkpoint into device buffers.
+    pub fn state_from_host(&self, leaves: &[Vec<f32>], step: i64) -> Result<TrainState> {
+        if leaves.len() != self.info.n_state {
+            bail!("checkpoint has {} leaves, expected {}", leaves.len(), self.info.n_state);
+        }
+        let mut buffers = Vec::with_capacity(leaves.len());
+        for (data, spec) in leaves.iter().zip(&self.info.state_leaves) {
+            if data.len() != spec.elements() {
+                bail!(
+                    "leaf {:?} has {} elements, expected {}",
+                    spec.name,
+                    data.len(),
+                    spec.elements()
+                );
+            }
+            buffers.push(
+                self.client
+                    .buffer_from_host_buffer(data, &spec.shape, None)
+                    .map_err(wrap)?,
+            );
+        }
+        Ok(TrainState { buffers, step })
+    }
+}
+
+fn into_single_replica(outs: Vec<Vec<xla::PjRtBuffer>>) -> Result<Vec<xla::PjRtBuffer>> {
+    let mut it = outs.into_iter();
+    let first = it.next().ok_or_else(|| anyhow!("no replica outputs"))?;
+    Ok(first)
+}
+
+fn scalar_f32(b: &xla::PjRtBuffer) -> Result<f32> {
+    let lit = b.to_literal_sync().map_err(wrap)?;
+    Ok(lit.to_vec::<f32>().map_err(wrap)?[0])
+}
+
+fn vec_f32(b: &xla::PjRtBuffer) -> Result<Vec<f32>> {
+    let lit = b.to_literal_sync().map_err(wrap)?;
+    lit.to_vec::<f32>().map_err(wrap)
+}
+
+fn wrap(e: xla::Error) -> anyhow::Error {
+    anyhow!("{e}")
+}

@@ -1,0 +1,209 @@
+//! Artifact manifest: the contract between `python/compile/aot.py` (which
+//! writes it) and the rust runtime (which wires device buffers from it).
+//!
+//! The manifest pins the *flat* argument/result orders of each lowered HLO
+//! module, so the coordinator never needs to reconstruct the jax pytree —
+//! train state is an opaque ordered vector of device buffers.
+
+use std::collections::BTreeMap;
+use std::fs;
+use std::path::{Path, PathBuf};
+
+use anyhow::{anyhow, bail, Context, Result};
+
+use crate::config::ModelConfig;
+use crate::util::json::{self, Value};
+
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum DType {
+    F32,
+    I32,
+}
+
+impl DType {
+    pub fn parse(s: &str) -> Result<Self> {
+        match s {
+            "float32" => Ok(DType::F32),
+            "int32" => Ok(DType::I32),
+            other => bail!("unsupported dtype {other:?} in manifest"),
+        }
+    }
+    pub fn size_bytes(&self) -> usize {
+        4
+    }
+}
+
+#[derive(Debug, Clone)]
+pub struct TensorSpec {
+    pub name: String,
+    pub shape: Vec<usize>,
+    pub dtype: DType,
+}
+
+impl TensorSpec {
+    pub fn elements(&self) -> usize {
+        self.shape.iter().product()
+    }
+    pub fn bytes(&self) -> usize {
+        self.elements() * self.dtype.size_bytes()
+    }
+    fn from_json(v: &Value) -> Result<Self> {
+        let name = v.req("name")?.as_str().unwrap_or("?").to_string();
+        let shape = v
+            .req("shape")?
+            .as_array()
+            .ok_or_else(|| anyhow!("shape not an array"))?
+            .iter()
+            .map(|x| x.as_usize().ok_or_else(|| anyhow!("bad dim")))
+            .collect::<Result<Vec<_>>>()?;
+        let dtype = DType::parse(v.req("dtype")?.as_str().unwrap_or(""))?;
+        Ok(TensorSpec { name, shape, dtype })
+    }
+}
+
+/// One lowered variant: config + file paths + buffer layout.
+#[derive(Debug, Clone)]
+pub struct VariantInfo {
+    pub name: String,
+    pub dir: PathBuf,
+    pub config: ModelConfig,
+    pub init_hlo: PathBuf,
+    pub step_hlo: PathBuf,
+    pub eval_hlo: PathBuf,
+    pub n_params: usize,
+    pub n_opt: usize,
+    pub n_state: usize,
+    pub param_count: u64,
+    pub capacity: usize,
+    pub state_leaves: Vec<TensorSpec>,
+    pub step_inputs: Vec<TensorSpec>,
+    pub step_outputs: Vec<TensorSpec>,
+    pub eval_outputs: Vec<TensorSpec>,
+}
+
+impl VariantInfo {
+    /// Total train-state bytes kept device-resident.
+    pub fn state_bytes(&self) -> usize {
+        self.state_leaves.iter().map(|l| l.bytes()).sum()
+    }
+}
+
+#[derive(Debug)]
+pub struct Manifest {
+    pub root: PathBuf,
+    pub variants: BTreeMap<String, VariantInfo>,
+}
+
+impl Manifest {
+    pub fn load(artifacts_dir: impl AsRef<Path>) -> Result<Self> {
+        let root = artifacts_dir.as_ref().to_path_buf();
+        let path = root.join("manifest.json");
+        let text = fs::read_to_string(&path)
+            .with_context(|| format!("reading {path:?} — run `make artifacts` first"))?;
+        let doc = json::parse(&text).with_context(|| format!("parsing {path:?}"))?;
+        let variants_json = doc
+            .req("variants")
+            .map_err(|e| anyhow!("{e}"))?
+            .as_object()
+            .ok_or_else(|| anyhow!("variants is not an object"))?;
+
+        let mut variants = BTreeMap::new();
+        for (name, v) in variants_json {
+            let entry = Self::parse_variant(name, v, &root)
+                .with_context(|| format!("variant {name:?}"))?;
+            variants.insert(name.clone(), entry);
+        }
+        Ok(Manifest { root, variants })
+    }
+
+    fn parse_variant(name: &str, v: &Value, root: &Path) -> Result<VariantInfo> {
+        let dir = root.join(name);
+        let files = v.req("files").map_err(|e| anyhow!("{e}"))?;
+        let file = |key: &str| -> Result<PathBuf> {
+            Ok(dir.join(
+                files
+                    .get(key)
+                    .and_then(|x| x.as_str())
+                    .ok_or_else(|| anyhow!("missing file entry {key:?}"))?,
+            ))
+        };
+        let config = ModelConfig::from_manifest(v.req("config").map_err(|e| anyhow!("{e}"))?)?;
+        let specs = |key: &str| -> Result<Vec<TensorSpec>> {
+            v.req(key)
+                .map_err(|e| anyhow!("{e}"))?
+                .as_array()
+                .ok_or_else(|| anyhow!("{key} not an array"))?
+                .iter()
+                .map(TensorSpec::from_json)
+                .collect()
+        };
+        let info = VariantInfo {
+            name: name.to_string(),
+            init_hlo: file("init")?,
+            step_hlo: file("step")?,
+            eval_hlo: file("eval")?,
+            dir,
+            config,
+            n_params: v.req("n_params").map_err(|e| anyhow!("{e}"))?.as_usize().unwrap_or(0),
+            n_opt: v.req("n_opt").map_err(|e| anyhow!("{e}"))?.as_usize().unwrap_or(0),
+            n_state: v.req("n_state").map_err(|e| anyhow!("{e}"))?.as_usize().unwrap_or(0),
+            param_count: v
+                .req("param_count")
+                .map_err(|e| anyhow!("{e}"))?
+                .as_f64()
+                .unwrap_or(0.0) as u64,
+            capacity: v.req("capacity").map_err(|e| anyhow!("{e}"))?.as_usize().unwrap_or(0),
+            state_leaves: specs("state_leaves")?,
+            step_inputs: specs("step_inputs")?,
+            step_outputs: specs("step_outputs")?,
+            eval_outputs: specs("eval_outputs")?,
+        };
+        if info.n_state != info.n_params + info.n_opt {
+            bail!(
+                "inconsistent state counts: {} != {} + {}",
+                info.n_state,
+                info.n_params,
+                info.n_opt
+            );
+        }
+        if info.state_leaves.len() != info.n_state {
+            bail!(
+                "state_leaves len {} != n_state {}",
+                info.state_leaves.len(),
+                info.n_state
+            );
+        }
+        Ok(info)
+    }
+
+    pub fn variant(&self, name: &str) -> Result<&VariantInfo> {
+        self.variants.get(name).ok_or_else(|| {
+            anyhow!(
+                "unknown variant {name:?}; available: {:?}",
+                self.variants.keys().collect::<Vec<_>>()
+            )
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn dtype_parse() {
+        assert_eq!(DType::parse("float32").unwrap(), DType::F32);
+        assert_eq!(DType::parse("int32").unwrap(), DType::I32);
+        assert!(DType::parse("float64").is_err());
+    }
+
+    #[test]
+    fn tensor_spec_math() {
+        let t = TensorSpec { name: "x".into(), shape: vec![4, 8, 2], dtype: DType::F32 };
+        assert_eq!(t.elements(), 64);
+        assert_eq!(t.bytes(), 256);
+    }
+
+    // Manifest::load against real artifacts is covered by the integration
+    // tests in rust/tests/ (requires `make artifacts`).
+}

@@ -1,0 +1,9 @@
+//! PJRT runtime: artifact manifest + engine with device-resident train
+//! state. See `engine` for the execution model and `manifest` for the
+//! python<->rust buffer-order contract.
+
+pub mod engine;
+pub mod manifest;
+
+pub use engine::{Engine, StepStats, TrainState, VariantRuntime};
+pub use manifest::{Manifest, TensorSpec, VariantInfo};

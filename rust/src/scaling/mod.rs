@@ -1,0 +1,168 @@
+//! Scaling-law machinery for Figs 5/6: fit saturating power laws
+//! L(s) = L_inf + a * s^(-b) to measured small-scale loss curves, model
+//! the parameter-count effect across our scale twins, and extrapolate the
+//! giant-model curves the paper trained on 480 GPUs (DESIGN.md §2).
+
+use crate::util::stats::linear_fit;
+
+/// L(s) = l_inf + a * s^(-b), s = training step.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct PowerLaw {
+    pub l_inf: f64,
+    pub a: f64,
+    pub b: f64,
+}
+
+impl PowerLaw {
+    pub fn predict(&self, step: f64) -> f64 {
+        self.l_inf + self.a * step.max(1.0).powf(-self.b)
+    }
+
+    /// Steps needed to reach `target` loss. None if unreachable.
+    pub fn steps_to(&self, target: f64) -> Option<f64> {
+        if target <= self.l_inf || self.a <= 0.0 || self.b <= 0.0 {
+            return None;
+        }
+        Some(((target - self.l_inf) / self.a).powf(-1.0 / self.b))
+    }
+}
+
+/// Fit L(s) = l_inf + a s^-b by scanning l_inf and solving the remaining
+/// log-log linear problem exactly; picks the l_inf with least squared
+/// error. Robust enough for smooth training curves.
+pub fn fit_power_law(steps: &[f64], losses: &[f64]) -> PowerLaw {
+    assert_eq!(steps.len(), losses.len());
+    assert!(steps.len() >= 4, "need >= 4 points to fit");
+    let min_loss = losses.iter().cloned().fold(f64::INFINITY, f64::min);
+
+    let mut best = PowerLaw { l_inf: 0.0, a: 1.0, b: 0.0 };
+    let mut best_err = f64::INFINITY;
+    // candidate floors from 0 to just under the observed minimum
+    for i in 0..40 {
+        let l_inf = min_loss * (i as f64 / 40.0) * 0.999;
+        let xs: Vec<f64> = steps.iter().map(|&s| s.max(1.0).ln()).collect();
+        let ys: Vec<f64> = losses
+            .iter()
+            .map(|&l| (l - l_inf).max(1e-9).ln())
+            .collect();
+        let (ln_a, neg_b) = linear_fit(&xs, &ys);
+        let cand = PowerLaw { l_inf, a: ln_a.exp(), b: -neg_b };
+        let err: f64 = steps
+            .iter()
+            .zip(losses)
+            .map(|(&s, &l)| {
+                let p = cand.predict(s);
+                (p - l) * (p - l)
+            })
+            .sum();
+        if err < best_err {
+            best_err = err;
+            best = cand;
+        }
+    }
+    best
+}
+
+/// Kaplan-style parameter scaling of the *achievable* loss floor:
+/// l_inf(P) = l_irr + (p_c / P)^alpha. Fit from >= 3 (params, floor)
+/// pairs measured on our scale twins; used to place the 100B/250B/1T
+/// curves of Fig 6 relative to each other.
+#[derive(Debug, Clone, Copy)]
+pub struct ParamScaling {
+    pub l_irr: f64,
+    pub p_c: f64,
+    pub alpha: f64,
+}
+
+impl ParamScaling {
+    pub fn floor(&self, params: f64) -> f64 {
+        self.l_irr + (self.p_c / params).powf(self.alpha)
+    }
+}
+
+pub fn fit_param_scaling(params: &[f64], floors: &[f64]) -> ParamScaling {
+    assert_eq!(params.len(), floors.len());
+    assert!(params.len() >= 3);
+    let min = floors.iter().cloned().fold(f64::INFINITY, f64::min);
+    let mut best = ParamScaling { l_irr: 0.0, p_c: 1.0, alpha: 0.0 };
+    let mut best_err = f64::INFINITY;
+    for i in 0..40 {
+        let l_irr = min * (i as f64 / 40.0) * 0.999;
+        let xs: Vec<f64> = params.iter().map(|&p| p.ln()).collect();
+        let ys: Vec<f64> = floors.iter().map(|&f| (f - l_irr).max(1e-9).ln()).collect();
+        let (intercept, slope) = linear_fit(&xs, &ys);
+        // ln(f - l_irr) = alpha ln(p_c) - alpha ln(P)
+        let alpha = -slope;
+        if alpha <= 0.0 {
+            continue;
+        }
+        let p_c = (intercept / alpha).exp();
+        let cand = ParamScaling { l_irr, p_c, alpha };
+        let err: f64 = params
+            .iter()
+            .zip(floors)
+            .map(|(&p, &f)| {
+                let d = cand.floor(p) - f;
+                d * d
+            })
+            .sum();
+        if err < best_err {
+            best_err = err;
+            best = cand;
+        }
+    }
+    best
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn power_law_roundtrip() {
+        let truth = PowerLaw { l_inf: 2.0, a: 6.0, b: 0.4 };
+        let steps: Vec<f64> = (1..60).map(|i| (i * 10) as f64).collect();
+        let losses: Vec<f64> = steps.iter().map(|&s| truth.predict(s)).collect();
+        let fit = fit_power_law(&steps, &losses);
+        for &s in &[25.0, 100.0, 400.0, 2000.0] {
+            let rel = (fit.predict(s) - truth.predict(s)).abs() / truth.predict(s);
+            assert!(rel < 0.02, "at {s}: fit {} truth {}", fit.predict(s), truth.predict(s));
+        }
+    }
+
+    #[test]
+    fn steps_to_inverts_predict() {
+        let law = PowerLaw { l_inf: 2.0, a: 5.0, b: 0.5 };
+        let s = law.steps_to(3.0).unwrap();
+        assert!((law.predict(s) - 3.0).abs() < 1e-9);
+        assert!(law.steps_to(1.9).is_none(), "below the floor is unreachable");
+    }
+
+    #[test]
+    fn param_scaling_roundtrip() {
+        let truth = ParamScaling { l_irr: 1.5, p_c: 1e9, alpha: 0.08 };
+        let params = [1e8, 1e9, 1e10, 1e11, 1e12];
+        let floors: Vec<f64> = params.iter().map(|&p| truth.floor(p)).collect();
+        let fit = fit_param_scaling(&params, &floors);
+        for &p in &params {
+            let rel = (fit.floor(p) - truth.floor(p)).abs() / truth.floor(p);
+            assert!(rel < 0.05, "at {p}: {} vs {}", fit.floor(p), truth.floor(p));
+        }
+        // bigger models have lower floors — the Fig-6 ordering
+        assert!(fit.floor(1e12) < fit.floor(1e11));
+    }
+
+    #[test]
+    fn fit_tolerates_noise() {
+        let truth = PowerLaw { l_inf: 2.5, a: 4.0, b: 0.35 };
+        let mut rng = crate::util::rng::Rng::new(9);
+        let steps: Vec<f64> = (1..100).map(|i| (i * 5) as f64).collect();
+        let losses: Vec<f64> = steps
+            .iter()
+            .map(|&s| truth.predict(s) + 0.02 * rng.normal())
+            .collect();
+        let fit = fit_power_law(&steps, &losses);
+        let rel = (fit.predict(1000.0) - truth.predict(1000.0)).abs() / truth.predict(1000.0);
+        assert!(rel < 0.05, "extrapolation error {rel}");
+    }
+}

@@ -1,0 +1,136 @@
+//! Micro-benchmark harness (criterion is not in the offline vendor set).
+//!
+//! Cargo bench targets use `harness = false` and drive this: warmup,
+//! calibrated iteration counts, and median/p10/p90 reporting over wall
+//! clock. Good enough to rank implementations and catch regressions; the
+//! end-to-end numbers that matter for the paper's tables come from the
+//! experiment drivers, not from here.
+
+use std::time::{Duration, Instant};
+
+#[derive(Debug, Clone)]
+pub struct BenchResult {
+    pub name: String,
+    pub iters: u64,
+    pub median_ns: f64,
+    pub p10_ns: f64,
+    pub p90_ns: f64,
+}
+
+impl BenchResult {
+    pub fn report(&self) -> String {
+        format!(
+            "{:<44} {:>12}/iter  (p10 {}, p90 {}, {} iters)",
+            self.name,
+            fmt_ns(self.median_ns),
+            fmt_ns(self.p10_ns),
+            fmt_ns(self.p90_ns),
+            self.iters
+        )
+    }
+}
+
+pub fn fmt_ns(ns: f64) -> String {
+    if ns >= 1e9 {
+        format!("{:.3}s", ns / 1e9)
+    } else if ns >= 1e6 {
+        format!("{:.3}ms", ns / 1e6)
+    } else if ns >= 1e3 {
+        format!("{:.3}us", ns / 1e3)
+    } else {
+        format!("{ns:.0}ns")
+    }
+}
+
+/// Benchmark `f`, auto-calibrating the per-sample iteration count so each
+/// sample takes ~`target_sample`. Returns robust percentiles over samples.
+pub fn bench<F: FnMut()>(name: &str, mut f: F) -> BenchResult {
+    bench_config(name, Duration::from_millis(30), 20, &mut f)
+}
+
+/// Variant for slow bodies (e.g. whole simulated training steps).
+pub fn bench_slow<F: FnMut()>(name: &str, mut f: F) -> BenchResult {
+    bench_config(name, Duration::from_millis(200), 8, &mut f)
+}
+
+fn bench_config<F: FnMut()>(
+    name: &str,
+    target_sample: Duration,
+    samples: usize,
+    f: &mut F,
+) -> BenchResult {
+    // warmup + calibration
+    let mut iters = 1u64;
+    loop {
+        let t0 = Instant::now();
+        for _ in 0..iters {
+            f();
+        }
+        let dt = t0.elapsed();
+        if dt >= target_sample / 4 || iters >= 1 << 28 {
+            let scale = target_sample.as_secs_f64() / dt.as_secs_f64().max(1e-9);
+            iters = ((iters as f64 * scale).ceil() as u64).max(1);
+            break;
+        }
+        iters *= 4;
+    }
+    let mut per_iter: Vec<f64> = Vec::with_capacity(samples);
+    for _ in 0..samples {
+        let t0 = Instant::now();
+        for _ in 0..iters {
+            f();
+        }
+        per_iter.push(t0.elapsed().as_nanos() as f64 / iters as f64);
+    }
+    per_iter.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let pick = |p: f64| per_iter[((p * (per_iter.len() - 1) as f64).round()) as usize];
+    BenchResult {
+        name: name.to_string(),
+        iters,
+        median_ns: pick(0.5),
+        p10_ns: pick(0.1),
+        p90_ns: pick(0.9),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn measures_something() {
+        let mut acc = 0u64;
+        let r = bench_config(
+            "noop-ish",
+            Duration::from_millis(2),
+            5,
+            &mut || {
+                acc = acc.wrapping_add(std::hint::black_box(1));
+            },
+        );
+        assert!(r.median_ns > 0.0);
+        assert!(r.iters >= 1);
+    }
+
+    #[test]
+    fn ordering_detects_slower_body() {
+        // black_box the loop bound so the sums cannot const-fold
+        let fast = bench_config("fast", Duration::from_millis(2), 5, &mut || {
+            let n = std::hint::black_box(10u64);
+            std::hint::black_box((0..n).fold(0u64, |a, x| a ^ x.wrapping_mul(31)));
+        });
+        let slow = bench_config("slow", Duration::from_millis(2), 5, &mut || {
+            let n = std::hint::black_box(100_000u64);
+            std::hint::black_box((0..n).fold(0u64, |a, x| a ^ x.wrapping_mul(31)));
+        });
+        assert!(slow.median_ns > fast.median_ns);
+    }
+
+    #[test]
+    fn formats_units() {
+        assert!(fmt_ns(5.0).ends_with("ns"));
+        assert!(fmt_ns(5e3).ends_with("us"));
+        assert!(fmt_ns(5e6).ends_with("ms"));
+        assert!(fmt_ns(5e9).ends_with('s'));
+    }
+}

@@ -1,0 +1,224 @@
+//! Tiny declarative CLI argument parser (clap is not in the offline vendor
+//! set). Supports `--flag`, `--key value`, `--key=value`, positional args,
+//! repeated flags, and auto-generated `--help`.
+
+use std::collections::BTreeMap;
+use std::fmt::Write as _;
+
+#[derive(Debug, Clone)]
+pub struct ArgSpec {
+    pub name: &'static str,
+    pub help: &'static str,
+    pub takes_value: bool,
+    pub default: Option<&'static str>,
+    pub repeated: bool,
+}
+
+/// Parsed arguments for one (sub)command.
+#[derive(Debug, Default)]
+pub struct Args {
+    values: BTreeMap<String, Vec<String>>,
+    flags: BTreeMap<String, usize>,
+    pub positional: Vec<String>,
+}
+
+impl Args {
+    pub fn get(&self, name: &str) -> Option<&str> {
+        self.values.get(name).and_then(|v| v.last()).map(|s| s.as_str())
+    }
+    pub fn get_all(&self, name: &str) -> &[String] {
+        self.values.get(name).map(|v| v.as_slice()).unwrap_or(&[])
+    }
+    pub fn flag(&self, name: &str) -> bool {
+        self.flags.get(name).copied().unwrap_or(0) > 0
+    }
+    pub fn get_parse<T: std::str::FromStr>(&self, name: &str) -> Result<Option<T>, String> {
+        match self.get(name) {
+            None => Ok(None),
+            Some(s) => s
+                .parse::<T>()
+                .map(Some)
+                .map_err(|_| format!("--{name}: cannot parse {s:?}")),
+        }
+    }
+    pub fn get_or<T: std::str::FromStr + Clone>(&self, name: &str, default: T) -> Result<T, String> {
+        Ok(self.get_parse::<T>(name)?.unwrap_or(default))
+    }
+}
+
+/// A command with a fixed argument specification.
+pub struct Command {
+    pub name: &'static str,
+    pub about: &'static str,
+    pub specs: Vec<ArgSpec>,
+}
+
+impl Command {
+    pub fn new(name: &'static str, about: &'static str) -> Self {
+        Self { name, about, specs: Vec::new() }
+    }
+
+    pub fn flag(mut self, name: &'static str, help: &'static str) -> Self {
+        self.specs.push(ArgSpec { name, help, takes_value: false, default: None, repeated: false });
+        self
+    }
+
+    pub fn opt(mut self, name: &'static str, help: &'static str) -> Self {
+        self.specs.push(ArgSpec { name, help, takes_value: true, default: None, repeated: false });
+        self
+    }
+
+    pub fn opt_default(
+        mut self,
+        name: &'static str,
+        default: &'static str,
+        help: &'static str,
+    ) -> Self {
+        self.specs.push(ArgSpec {
+            name,
+            help,
+            takes_value: true,
+            default: Some(default),
+            repeated: false,
+        });
+        self
+    }
+
+    pub fn opt_repeated(mut self, name: &'static str, help: &'static str) -> Self {
+        self.specs.push(ArgSpec { name, help, takes_value: true, default: None, repeated: true });
+        self
+    }
+
+    pub fn usage(&self) -> String {
+        let mut s = String::new();
+        let _ = writeln!(s, "{} — {}\n", self.name, self.about);
+        let _ = writeln!(s, "options:");
+        for spec in &self.specs {
+            let v = if spec.takes_value { " <value>" } else { "" };
+            let d = spec
+                .default
+                .map(|d| format!(" [default: {d}]"))
+                .unwrap_or_default();
+            let _ = writeln!(s, "  --{}{v:<12} {}{d}", spec.name, spec.help);
+        }
+        s
+    }
+
+    /// Parse `argv` (not including the program/subcommand names).
+    pub fn parse(&self, argv: &[String]) -> Result<Args, String> {
+        let mut out = Args::default();
+        for spec in &self.specs {
+            if let Some(d) = spec.default {
+                out.values.insert(spec.name.to_string(), vec![d.to_string()]);
+            }
+        }
+        let mut i = 0;
+        while i < argv.len() {
+            let a = &argv[i];
+            if a == "--help" || a == "-h" {
+                return Err(self.usage());
+            }
+            if let Some(rest) = a.strip_prefix("--") {
+                let (key, inline) = match rest.split_once('=') {
+                    Some((k, v)) => (k, Some(v.to_string())),
+                    None => (rest, None),
+                };
+                let spec = self
+                    .specs
+                    .iter()
+                    .find(|s| s.name == key)
+                    .ok_or_else(|| format!("unknown option --{key}\n\n{}", self.usage()))?;
+                if spec.takes_value {
+                    let val = match inline {
+                        Some(v) => v,
+                        None => {
+                            i += 1;
+                            argv.get(i)
+                                .cloned()
+                                .ok_or_else(|| format!("--{key} requires a value"))?
+                        }
+                    };
+                    let entry = out.values.entry(key.to_string()).or_default();
+                    if spec.repeated {
+                        // keep defaults out of repeated accumulation
+                        if spec.default.is_some() && entry.len() == 1 && out.flags.get(key).is_none()
+                        {
+                            entry.clear();
+                        }
+                        entry.push(val);
+                    } else {
+                        *entry = vec![val];
+                    }
+                    *out.flags.entry(key.to_string()).or_default() += 1;
+                } else {
+                    if inline.is_some() {
+                        return Err(format!("--{key} does not take a value"));
+                    }
+                    *out.flags.entry(key.to_string()).or_default() += 1;
+                }
+            } else {
+                out.positional.push(a.clone());
+            }
+            i += 1;
+        }
+        Ok(out)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn argv(s: &[&str]) -> Vec<String> {
+        s.iter().map(|x| x.to_string()).collect()
+    }
+
+    fn cmd() -> Command {
+        Command::new("test", "t")
+            .flag("verbose", "chatty")
+            .opt("steps", "how many")
+            .opt_default("out", "out.csv", "sink")
+            .opt_repeated("variant", "which")
+    }
+
+    #[test]
+    fn parses_mixed() {
+        let a = cmd()
+            .parse(&argv(&["--verbose", "--steps", "10", "pos1", "--variant=x", "--variant", "y"]))
+            .unwrap();
+        assert!(a.flag("verbose"));
+        assert_eq!(a.get("steps"), Some("10"));
+        assert_eq!(a.get("out"), Some("out.csv"));
+        assert_eq!(a.positional, vec!["pos1"]);
+        assert_eq!(a.get_all("variant"), &["x".to_string(), "y".to_string()]);
+    }
+
+    #[test]
+    fn default_applies() {
+        let a = cmd().parse(&argv(&[])).unwrap();
+        assert_eq!(a.get("out"), Some("out.csv"));
+        assert!(!a.flag("verbose"));
+    }
+
+    #[test]
+    fn typed_access() {
+        let a = cmd().parse(&argv(&["--steps", "42"])).unwrap();
+        assert_eq!(a.get_or("steps", 0usize).unwrap(), 42);
+        assert_eq!(a.get_or("missingdefaults", 7usize).unwrap(), 7);
+    }
+
+    #[test]
+    fn errors() {
+        assert!(cmd().parse(&argv(&["--nope"])).is_err());
+        assert!(cmd().parse(&argv(&["--steps"])).is_err());
+        assert!(cmd().parse(&argv(&["--verbose=1"])).is_err());
+        let bad = cmd().parse(&argv(&["--steps", "abc"])).unwrap();
+        assert!(bad.get_or("steps", 0usize).is_err());
+    }
+
+    #[test]
+    fn help_is_error_with_usage() {
+        let err = cmd().parse(&argv(&["--help"])).unwrap_err();
+        assert!(err.contains("--steps"));
+    }
+}

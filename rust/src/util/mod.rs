@@ -1,0 +1,12 @@
+//! Zero-dependency substrates: JSON, PRNG, CLI parsing, statistics, tables.
+//!
+//! The offline build environment only vendors the `xla` + `anyhow` crates,
+//! so the pieces a production launcher would normally pull from serde /
+//! clap / rand / criterion live here, with their own test suites.
+
+pub mod bench;
+pub mod cli;
+pub mod json;
+pub mod rng;
+pub mod stats;
+pub mod table;

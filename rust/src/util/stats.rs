@@ -1,0 +1,168 @@
+//! Streaming statistics helpers shared by metrics, the cluster simulator,
+//! and the benchmark harness.
+
+/// Welford online mean/variance accumulator.
+#[derive(Debug, Clone, Default)]
+pub struct Welford {
+    n: u64,
+    mean: f64,
+    m2: f64,
+}
+
+impl Welford {
+    pub fn push(&mut self, x: f64) {
+        self.n += 1;
+        let d = x - self.mean;
+        self.mean += d / self.n as f64;
+        self.m2 += d * (x - self.mean);
+    }
+    pub fn count(&self) -> u64 {
+        self.n
+    }
+    pub fn mean(&self) -> f64 {
+        self.mean
+    }
+    /// Population variance.
+    pub fn variance(&self) -> f64 {
+        if self.n == 0 {
+            0.0
+        } else {
+            self.m2 / self.n as f64
+        }
+    }
+    pub fn std(&self) -> f64 {
+        self.variance().sqrt()
+    }
+}
+
+/// Coefficient of variation c_v = sigma / mu over a slice — the paper's
+/// load-balance metric (§3.1, after Shazeer et al. 2017). Returns 0 for an
+/// all-zero or empty slice (a degenerate but fully "balanced" load).
+pub fn coefficient_of_variation(xs: &[f64]) -> f64 {
+    if xs.is_empty() {
+        return 0.0;
+    }
+    let n = xs.len() as f64;
+    let mean = xs.iter().sum::<f64>() / n;
+    if mean == 0.0 {
+        return 0.0;
+    }
+    let var = xs.iter().map(|x| (x - mean) * (x - mean)).sum::<f64>() / n;
+    var.sqrt() / mean
+}
+
+/// Exponential moving average, bias-corrected like Adam's first moment so
+/// early values are not dragged toward zero.
+#[derive(Debug, Clone)]
+pub struct Ema {
+    beta: f64,
+    value: f64,
+    steps: u64,
+}
+
+impl Ema {
+    pub fn new(beta: f64) -> Self {
+        assert!((0.0..1.0).contains(&beta));
+        Self { beta, value: 0.0, steps: 0 }
+    }
+    pub fn push(&mut self, x: f64) {
+        self.steps += 1;
+        self.value = self.beta * self.value + (1.0 - self.beta) * x;
+    }
+    pub fn get(&self) -> f64 {
+        if self.steps == 0 {
+            return f64::NAN;
+        }
+        self.value / (1.0 - self.beta.powi(self.steps as i32))
+    }
+}
+
+/// Percentile over a scratch copy (nearest-rank). p in [0, 100].
+pub fn percentile(xs: &[f64], p: f64) -> f64 {
+    assert!(!xs.is_empty());
+    let mut v = xs.to_vec();
+    v.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let rank = ((p / 100.0) * (v.len() as f64 - 1.0)).round() as usize;
+    v[rank.min(v.len() - 1)]
+}
+
+/// Least-squares fit of y = a + b x. Returns (a, b).
+pub fn linear_fit(xs: &[f64], ys: &[f64]) -> (f64, f64) {
+    assert_eq!(xs.len(), ys.len());
+    assert!(xs.len() >= 2);
+    let n = xs.len() as f64;
+    let sx: f64 = xs.iter().sum();
+    let sy: f64 = ys.iter().sum();
+    let sxx: f64 = xs.iter().map(|x| x * x).sum();
+    let sxy: f64 = xs.iter().zip(ys).map(|(x, y)| x * y).sum();
+    let denom = n * sxx - sx * sx;
+    assert!(denom.abs() > 1e-12, "degenerate x values in linear fit");
+    let b = (n * sxy - sx * sy) / denom;
+    let a = (sy - b * sx) / n;
+    (a, b)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn welford_matches_closed_form() {
+        let xs = [2.0, 4.0, 4.0, 4.0, 5.0, 5.0, 7.0, 9.0];
+        let mut w = Welford::default();
+        for x in xs {
+            w.push(x);
+        }
+        assert!((w.mean() - 5.0).abs() < 1e-12);
+        assert!((w.variance() - 4.0).abs() < 1e-12);
+        assert!((w.std() - 2.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn cv_balanced_is_zero() {
+        assert_eq!(coefficient_of_variation(&[5.0, 5.0, 5.0]), 0.0);
+        assert_eq!(coefficient_of_variation(&[]), 0.0);
+        assert_eq!(coefficient_of_variation(&[0.0, 0.0]), 0.0);
+    }
+
+    #[test]
+    fn cv_imbalanced_grows() {
+        let even = coefficient_of_variation(&[10.0, 10.0, 10.0, 10.0]);
+        let skew = coefficient_of_variation(&[40.0, 0.0, 0.0, 0.0]);
+        assert!(skew > even);
+        assert!((skew - (3.0f64).sqrt()).abs() < 1e-9); // sigma/mu for one-hot
+    }
+
+    #[test]
+    fn ema_converges() {
+        let mut e = Ema::new(0.9);
+        for _ in 0..200 {
+            e.push(3.0);
+        }
+        assert!((e.get() - 3.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn ema_bias_correction_early() {
+        let mut e = Ema::new(0.99);
+        e.push(5.0);
+        assert!((e.get() - 5.0).abs() < 1e-9, "first value should be exact");
+    }
+
+    #[test]
+    fn percentile_basics() {
+        let xs = [1.0, 2.0, 3.0, 4.0, 5.0];
+        assert_eq!(percentile(&xs, 0.0), 1.0);
+        assert_eq!(percentile(&xs, 50.0), 3.0);
+        assert_eq!(percentile(&xs, 100.0), 5.0);
+    }
+
+    #[test]
+    fn linear_fit_recovers_line() {
+        let xs: Vec<f64> = (0..10).map(|i| i as f64).collect();
+        let ys: Vec<f64> = xs.iter().map(|x| 2.0 + 3.0 * x).collect();
+        let (a, b) = linear_fit(&xs, &ys);
+        assert!((a - 2.0).abs() < 1e-9);
+        assert!((b - 3.0).abs() < 1e-9);
+    }
+}

@@ -1,0 +1,180 @@
+//! Property tests over the host-side routing mirror (no XLA needed):
+//! capacity, slot uniqueness, drop accounting, prototype disjointness,
+//! and cross-checks between top-k and prototyping.
+
+use m6t::config::Routing;
+use m6t::moe::{route, RouterSpec};
+use m6t::moe::router::softmax_gates;
+use m6t::testing::{check, gen};
+use m6t::util::rng::Rng;
+
+fn random_spec(rng: &mut Rng, b: m6t::testing::Bounds) -> (Vec<f32>, usize, RouterSpec) {
+    let (tokens, experts, capacity) = gen::routing_shape(rng, b);
+    let logits: Vec<f32> = (0..tokens * experts).map(|_| rng.normal() as f32).collect();
+    let k = [1u32, 2, 4][(rng.below(3)) as usize].min(experts as u32);
+    let proto = rng.below(2) == 0 && experts % (k as usize) == 0;
+    let routing = if proto && k > 1 {
+        Routing::Prototype(k)
+    } else {
+        Routing::TopK(k.min(experts as u32))
+    };
+    let z = routing.prototypes() as usize;
+    let gates = softmax_gates(&logits, tokens, experts, z);
+    (gates, tokens, RouterSpec { routing, num_experts: experts, capacity })
+}
+
+#[test]
+fn prop_capacity_never_exceeded() {
+    check("capacity", 200, |rng, b| {
+        let (gates, tokens, spec) = random_spec(rng, b);
+        let out = route(&gates, tokens, &spec);
+        for (e, &l) in out.load.iter().enumerate() {
+            if l as usize > spec.capacity {
+                return Err(format!("expert {e} load {l} > capacity {}", spec.capacity));
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_slots_unique_and_in_range() {
+    check("slots", 200, |rng, b| {
+        let (gates, tokens, spec) = random_spec(rng, b);
+        let out = route(&gates, tokens, &spec);
+        let mut seen = std::collections::HashSet::new();
+        for a in &out.assignments {
+            if a.position >= spec.capacity {
+                return Err(format!("assignment slot {} >= C {}", a.position, spec.capacity));
+            }
+            if !seen.insert((a.expert, a.position)) {
+                return Err(format!("duplicate slot ({}, {})", a.expert, a.position));
+            }
+            if a.token >= tokens || a.expert >= spec.num_experts {
+                return Err("index out of range".into());
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_drop_accounting_balances() {
+    check("drops", 200, |rng, b| {
+        let (gates, tokens, spec) = random_spec(rng, b);
+        let out = route(&gates, tokens, &spec);
+        let kept: u32 = out.load.iter().sum();
+        let expected = (tokens as u32) * spec.routing.k().min(spec.num_experts as u32);
+        if kept + out.dropped != expected {
+            return Err(format!(
+                "kept {kept} + dropped {} != {} ({:?})",
+                out.dropped, expected, spec.routing
+            ));
+        }
+        if out.assignments.len() != kept as usize {
+            return Err("assignment count != kept-load sum".into());
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_prototype_assignments_stay_in_group() {
+    check("proto-groups", 150, |rng, b| {
+        let (tokens, experts, capacity) = gen::routing_shape(rng, b);
+        let experts = if experts % 2 == 1 { experts + 1 } else { experts };
+        let logits: Vec<f32> = (0..tokens * experts).map(|_| rng.normal() as f32).collect();
+        let gates = softmax_gates(&logits, tokens, experts, 2);
+        let spec = RouterSpec {
+            routing: Routing::Prototype(2),
+            num_experts: experts,
+            capacity,
+        };
+        let out = route(&gates, tokens, &spec);
+        let f = experts / 2;
+        // each token has at most one assignment per prototype group
+        for t in 0..tokens {
+            let mut per_group = [0usize; 2];
+            for a in out.assignments.iter().filter(|a| a.token == t) {
+                per_group[a.expert / f] += 1;
+            }
+            if per_group[0] > 1 || per_group[1] > 1 {
+                return Err(format!("token {t} routed twice in one group"));
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_top1_and_1proto_identical() {
+    // TopK(1) and Prototype(1) are the same algorithm
+    check("top1-eq-1top1", 100, |rng, b| {
+        let (tokens, experts, capacity) = gen::routing_shape(rng, b);
+        let logits: Vec<f32> = (0..tokens * experts).map(|_| rng.normal() as f32).collect();
+        let gates = softmax_gates(&logits, tokens, experts, 1);
+        let a = route(
+            &gates,
+            tokens,
+            &RouterSpec { routing: Routing::TopK(1), num_experts: experts, capacity },
+        );
+        let b2 = route(
+            &gates,
+            tokens,
+            &RouterSpec { routing: Routing::Prototype(1), num_experts: experts, capacity },
+        );
+        if a.load != b2.load || a.dropped != b2.dropped {
+            return Err("top-1 != 1 top-1".into());
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_ample_capacity_drops_nothing() {
+    check("ample", 100, |rng, b| {
+        let (tokens, experts, _) = gen::routing_shape(rng, b);
+        let logits: Vec<f32> = (0..tokens * experts).map(|_| rng.normal() as f32).collect();
+        let gates = softmax_gates(&logits, tokens, experts, 1);
+        let spec = RouterSpec {
+            routing: Routing::TopK(1),
+            num_experts: experts,
+            capacity: tokens, // every token fits in any single expert
+        };
+        let out = route(&gates, tokens, &spec);
+        if out.dropped != 0 {
+            return Err(format!("dropped {} with ample capacity", out.dropped));
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_cv_reflects_skew() {
+    check("cv", 60, |rng, _b| {
+        let tokens = 64;
+        let experts = 8;
+        // uniform round-robin gates
+        let mut uniform = vec![0.0f32; tokens * experts];
+        for t in 0..tokens {
+            uniform[t * experts + (t % experts)] = 1.0;
+        }
+        // skewed: everything on expert 0
+        let mut skew = vec![0.0f32; tokens * experts];
+        for t in 0..tokens {
+            skew[t * experts] = 1.0;
+        }
+        let spec = RouterSpec {
+            routing: Routing::TopK(1),
+            num_experts: experts,
+            capacity: tokens,
+        };
+        let cv_u = route(&uniform, tokens, &spec).cv();
+        let cv_s = route(&skew, tokens, &spec).cv();
+        let _ = rng.next_u64();
+        if cv_u >= cv_s {
+            return Err(format!("cv uniform {cv_u} >= cv skew {cv_s}"));
+        }
+        Ok(())
+    });
+}

@@ -1,0 +1,138 @@
+//! Integration tests over the real artifacts: manifest contract, PJRT
+//! execution, training dynamics, checkpoint round-trip, c_v plausibility.
+//!
+//! Requires `make artifacts` (skipped gracefully if absent). The PJRT
+//! client is `Rc`-based (not `Sync`), so all engine-backed checks run
+//! sequentially inside one test with a single ~30 s compilation.
+
+use m6t::coordinator::{Checkpoint, TrainOptions, Trainer};
+use m6t::data::{Batcher, Split};
+use m6t::runtime::{Engine, Manifest, VariantRuntime};
+
+fn artifacts_present() -> bool {
+    std::path::Path::new("artifacts/manifest.json").exists()
+}
+
+#[test]
+fn manifest_loads_and_is_consistent() {
+    if !artifacts_present() {
+        eprintln!("skipping: run `make artifacts`");
+        return;
+    }
+    let m = Manifest::load("artifacts").expect("manifest");
+    assert!(m.variants.len() >= 20, "only {} variants", m.variants.len());
+    for (name, v) in &m.variants {
+        assert_eq!(v.n_state, v.n_params + v.n_opt, "{name}");
+        assert_eq!(v.state_leaves.len(), v.n_state, "{name}");
+        // rust param accounting must match python's (through the manifest)
+        assert_eq!(v.config.param_count(), v.param_count, "{name}");
+        // param leaves alone must hold exactly param_count elements
+        let n: usize = v.state_leaves[..v.n_params].iter().map(|l| l.elements()).sum();
+        assert_eq!(n as u64, v.param_count, "{name}");
+        // capacity formula agreement python<->rust
+        assert_eq!(v.config.capacity(), v.capacity, "{name}");
+    }
+}
+
+#[test]
+fn engine_end_to_end() {
+    if !artifacts_present() {
+        eprintln!("skipping: run `make artifacts`");
+        return;
+    }
+    let engine = Engine::cpu().expect("pjrt cpu client");
+    let manifest = Manifest::load("artifacts").expect("manifest");
+    let info = manifest.variant("base-sim").expect("base-sim");
+    let rt = engine.load(info).expect("compile base-sim");
+
+    check_init_determinism(&rt);
+    check_step_dynamics(&rt);
+    check_eval_pairing(&rt);
+    check_cv_plausible(&rt);
+    check_checkpoint_roundtrip(&engine, rt);
+}
+
+fn check_init_determinism(rt: &VariantRuntime) {
+    let a = rt.init_state(7).unwrap();
+    let b = rt.init_state(7).unwrap();
+    let c = rt.init_state(8).unwrap();
+    let ha = rt.state_to_host(&a).unwrap();
+    let hb = rt.state_to_host(&b).unwrap();
+    let hc = rt.state_to_host(&c).unwrap();
+    assert_eq!(ha, hb, "same seed, same init");
+    assert_ne!(ha, hc, "different seed, different init");
+}
+
+fn check_step_dynamics(rt: &VariantRuntime) {
+    let cfg = &rt.info.config;
+    let mut state = rt.init_state(42).unwrap();
+    let mut batcher = Batcher::for_config(cfg, Split::Train, 42);
+    let mut first = f32::NAN;
+    let mut last = f32::NAN;
+    for i in 0..8 {
+        let batch = batcher.next_batch();
+        let (next, stats) = rt.step(state, &batch).unwrap();
+        state = next;
+        if i == 0 {
+            first = stats.loss;
+        }
+        last = stats.loss;
+        // kept + dropped tokens account for every routed token per layer
+        let kept: f64 = stats.load.iter().map(|&x| x as f64).sum();
+        let dropped: f64 = stats.total_dropped();
+        let expected = (cfg.layers * cfg.tokens_per_batch() * cfg.routing.k() as usize) as f64;
+        assert_eq!(kept + dropped, expected, "step {i}");
+        assert!(stats.loss.is_finite());
+        assert!(stats.grad_norm > 0.0);
+        // per-expert load never exceeds capacity
+        assert!(stats.load.iter().all(|&l| (l as usize) <= rt.info.capacity));
+    }
+    assert!(last <= first + 0.05, "loss exploded: {first} -> {last}");
+}
+
+fn check_eval_pairing(rt: &VariantRuntime) {
+    let state = rt.init_state(1).unwrap();
+    let mut b1 = Batcher::for_config(&rt.info.config, Split::Eval, 42);
+    let mut b2 = Batcher::for_config(&rt.info.config, Split::Eval, 42);
+    let (nll1, c1) = rt.eval(&state, &b1.next_batch()).unwrap();
+    let (nll2, c2) = rt.eval(&state, &b2.next_batch()).unwrap();
+    assert_eq!(nll1, nll2);
+    assert_eq!(c1, c2);
+    // PPL at init is near the uniform prior over the vocab
+    let ppl = (nll1 / c1).exp();
+    let vocab = rt.info.config.vocab_size as f64;
+    assert!(ppl > vocab * 0.3 && ppl < vocab * 3.0, "init ppl {ppl}");
+}
+
+fn check_cv_plausible(rt: &VariantRuntime) {
+    let state = rt.init_state(3).unwrap();
+    let mut batcher = Batcher::for_config(&rt.info.config, Split::Train, 3);
+    let (_, stats) = rt.step(state, &batcher.next_batch()).unwrap();
+    let cv = stats.cv_per_layer();
+    assert_eq!(cv.len(), rt.info.config.layers);
+    for (l, c) in cv.iter().enumerate() {
+        assert!(c.is_finite() && *c >= 0.0, "layer {l} cv {c}");
+        assert!(*c < 4.0, "layer {l} cv {c} absurdly high");
+    }
+}
+
+fn check_checkpoint_roundtrip(engine: &Engine, rt: VariantRuntime) {
+    let opts = TrainOptions { steps: 3, seed: 42, verbose: false, ..Default::default() };
+    let trainer = Trainer::new(engine, rt, opts);
+    let (out1, state) = trainer.train().unwrap();
+    let ck = trainer.snapshot(&state).unwrap();
+    let path = std::env::temp_dir().join("m6t-int-ckpt.bin");
+    ck.save(&path).unwrap();
+    let ck2 = Checkpoint::load(&path).unwrap();
+    assert_eq!(ck2.step, out1.final_state_step);
+    let restored = trainer.restore(&ck2).unwrap();
+    // continuing from the checkpoint reproduces the same next loss as
+    // continuing in-memory (bitwise determinism of the whole stack)
+    let mut batcher = Batcher::for_config(&trainer.runtime.info.config, Split::Train, 42);
+    batcher.seek(state.step as u64 * trainer.runtime.info.config.batch as u64);
+    let batch = batcher.next_batch();
+    let (_, stats_mem) = trainer.runtime.step(state, &batch).unwrap();
+    let (_, stats_ck) = trainer.runtime.step(restored, &batch).unwrap();
+    assert_eq!(stats_mem.loss, stats_ck.loss);
+    let _ = std::fs::remove_file(path);
+}
