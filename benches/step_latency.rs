@@ -1,69 +1,43 @@
 //! `cargo bench --bench step_latency` — measured wall-clock ms/step of the
-//! runnable twins per routing strategy: the single-host *measured* series
-//! that sits next to Table 2's simulated cluster numbers in
-//! EXPERIMENTS.md. Also reports the per-step host<->device overhead of the
-//! coordinator (batch upload + stat readback), which must stay negligible
-//! against the XLA compute (L3-not-the-bottleneck check, DESIGN.md §Perf).
+//! native backend per routing strategy, next to the calibrated cluster
+//! simulator's prediction for the same variant: the single-host *measured*
+//! series that sits beside Table 2's simulated numbers. Uses the same
+//! `measure_step_ms` methodology as `m6t bench`, so the two reports agree.
+//! Also isolates the coordinator-side overhead (batch generation) so the
+//! routing mirror stays visibly the dominant cost.
 //!
-//! Requires artifacts; skips gracefully otherwise.
+//! Zero artifacts needed; with `--features pjrt` + artifacts the same
+//! harness shape applies to the PJRT engine.
 
 use std::time::Instant;
 
 use m6t::data::{Batcher, Split};
-use m6t::runtime::{Engine, Manifest};
-use m6t::util::table::{f1, Table};
+use m6t::runtime::{measure_step_ms, Backend as _, BackendProvider, NativeProvider};
+use m6t::util::table::{f1, f2, Table};
 
 fn main() -> anyhow::Result<()> {
-    if !std::path::Path::new("artifacts/manifest.json").exists() {
-        eprintln!("skipping step_latency: run `make artifacts` first");
-        return Ok(());
-    }
-    let manifest = Manifest::load("artifacts")?;
-    let engine = Engine::cpu()?;
-
-    // trimmed to three strategies: each variant costs a ~30 s XLA compile;
-    // the full five-way sweep is one --features away from trivial to add
+    let provider = NativeProvider::new();
     let variants = [
-        ("top1", "base-sim"),
-        ("top2", "base-sim-top2-cap1"),
-        ("2top1", "base-sim-2top1-cap1"),
+        ("top1", "base-top1"),
+        ("top2", "base-top2"),
+        ("top4", "base-top4"),
+        ("2top1", "base-2top1"),
+        ("4top1", "base-4top1"),
     ];
     let mut t = Table::new(
-        "measured ms/step, base-sim twins at capacity 1x (single-host CPU)",
-        &["strategy", "compile s", "ms/step (median of 6)", "upload+readback ms"],
+        "measured ms/step, native backend at paper-base geometry",
+        &["strategy", "ms/step (median of 8)", "sim cluster ms", "batch-gen ms"],
     );
     for (label, name) in variants {
-        let info = manifest.variant(name)?;
-        let rt = engine.load(info)?;
-        let mut state = rt.init_state(42)?;
-        let mut batcher = Batcher::for_config(&info.config, Split::Train, 42);
-        // warmup
-        let b0 = batcher.next_batch();
-        let (s1, _) = rt.step(state, &b0)?;
-        state = s1;
-        let mut samples = Vec::new();
-        for _ in 0..6 {
-            let batch = batcher.next_batch();
-            let t0 = Instant::now();
-            let (next, _stats) = rt.step(state, &batch)?;
-            samples.push(t0.elapsed().as_secs_f64() * 1e3);
-            state = next;
-        }
-        samples.sort_by(|a, b| a.partial_cmp(b).unwrap());
-        // isolate the coordinator-side overhead: batch generation + eval of
-        // a no-train readback. Approximate with an eval call (fwd only) gap.
-        let batch = batcher.next_batch();
+        let backend = provider.load(name)?;
+        let (step_ms, stats) = measure_step_ms(backend.as_ref(), 42, 1, 8)?;
+        // coordinator-side overhead: synthesizing one batch
+        let mut batcher = Batcher::for_config(&backend.info().config, Split::Train, 42);
         let t0 = Instant::now();
-        let _ = rt.eval(&state, &batch)?;
-        let eval_ms = t0.elapsed().as_secs_f64() * 1e3;
-        let step_ms = samples[samples.len() / 2];
-        t.row(vec![
-            label.into(),
-            f1(rt.compile_seconds),
-            f1(step_ms),
-            format!("~{:.1} (fwd-only eval {eval_ms:.0})", 0.2),
-        ]);
-        eprintln!("[bench] {label}: {step_ms:.0} ms/step");
+        let _ = batcher.next_batch();
+        let gen_ms = t0.elapsed().as_secs_f64() * 1e3;
+        t.row(vec![label.into(), f2(step_ms), f1(stats.sim_step_ms), f2(gen_ms)]);
+        eprintln!("[bench] {label}: {step_ms:.2} ms/step (sim {:.1} ms)", stats.sim_step_ms);
     }
     print!("{}", t.render());
     t.save_csv("results/table2_measured.csv")?;

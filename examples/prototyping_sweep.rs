@@ -1,7 +1,7 @@
 //! Expert-prototyping sweep (the paper's §3.3 in miniature): trains top-1,
 //! top-2 and 2-top-1 at equal FLOPs (capacity 1x) and prints convergence +
 //! wall-clock side by side — the effectiveness/efficiency trade-off the
-//! paper's Tables 2/3 quantify.
+//! paper's Tables 2/3 quantify. Native backend, zero artifacts.
 //!
 //! ```bash
 //! cargo run --release --example prototyping_sweep -- [steps]   # default 120
@@ -9,31 +9,28 @@
 
 use anyhow::Result;
 use m6t::coordinator::{TrainOptions, Trainer};
-use m6t::runtime::{Engine, Manifest};
+use m6t::runtime::{BackendProvider, NativeProvider};
 use m6t::util::table::{f2, f3, Table};
 
 fn main() -> Result<()> {
     let steps: i64 = std::env::args().nth(1).and_then(|s| s.parse().ok()).unwrap_or(120);
-    let manifest = Manifest::load("artifacts")?;
-    let engine = Engine::cpu()?;
+    let provider = NativeProvider::new();
 
     let variants = ["base-sim", "base-sim-top2-cap1", "base-sim-2top1-cap1"];
     let mut table = Table::new(
         "prototyping sweep (equal-FLOPs capacity 1x)",
-        &["variant", "final loss", "eval PPL", "ms/step", "dropped/step"],
+        &["variant", "final loss", "eval PPL", "sim ms/step", "dropped/step"],
     );
     for name in variants {
-        let info = manifest.variant(name)?;
-        let runtime = engine.load(info)?;
         let opts = TrainOptions { steps, verbose: false, ..Default::default() };
-        let trainer = Trainer::new(&engine, runtime, opts);
+        let trainer = Trainer::new(provider.load(name)?, opts);
         let (outcome, _state) = trainer.train()?;
         let n = outcome.log.records.len().max(1) as f64;
         table.row(vec![
             name.into(),
             f3(outcome.log.tail_loss(20)),
             f2(outcome.evals.last().map(|&(_, p)| p).unwrap_or(f64::NAN)),
-            f2(outcome.log.records.iter().map(|r| r.ms_per_step).sum::<f64>() / n),
+            f2(outcome.log.last().map(|r| r.sim_ms).unwrap_or(f64::NAN)),
             f2(outcome.log.records.iter().map(|r| r.dropped).sum::<f64>() / n),
         ]);
         eprintln!("[sweep] {name} done");

@@ -1,21 +1,21 @@
 //! Quickstart: load a variant, train briefly, evaluate, inspect balance.
+//! Runs on the pure-Rust native backend — no artifacts needed.
 //!
 //! ```bash
-//! make artifacts && cargo run --release --example quickstart
+//! cargo run --release --example quickstart
 //! ```
 
 use anyhow::Result;
 use m6t::coordinator::{TrainOptions, Trainer};
-use m6t::runtime::{Engine, Manifest};
+use m6t::runtime::{BackendProvider, NativeProvider};
 
 fn main() -> Result<()> {
-    // 1. the artifact manifest: every variant python lowered for us
-    let manifest = Manifest::load("artifacts")?;
-    println!("{} runnable variants", manifest.variants.len());
+    // 1. the built-in native registry: every runnable variant
+    let provider = NativeProvider::new();
+    println!("{} runnable variants", provider.names().len());
 
-    // 2. a PJRT CPU engine + one compiled variant
-    let engine = Engine::cpu()?;
-    let info = manifest.variant("base-sim")?;
+    // 2. one loaded backend
+    let info = provider.info("base-sim")?;
     println!(
         "base-sim: {:.1}M params, {} experts, routing {}, capacity {}",
         info.param_count as f64 / 1e6,
@@ -23,12 +23,10 @@ fn main() -> Result<()> {
         info.config.routing.name(),
         info.capacity,
     );
-    let runtime = engine.load(info)?;
-    println!("compiled in {:.1}s on {}", runtime.compile_seconds, engine.platform());
 
     // 3. train 30 steps on the synthetic multimodal corpus
     let opts = TrainOptions { steps: 30, verbose: false, ..Default::default() };
-    let trainer = Trainer::new(&engine, runtime, opts);
+    let trainer = Trainer::new(provider.load("base-sim")?, opts);
     let (outcome, state) = trainer.train()?;
     println!(
         "loss {:.4} -> {:.4} over {} steps",
@@ -46,6 +44,7 @@ fn main() -> Result<()> {
             last.cv_per_layer.iter().map(|c| format!("{c:.2}")).collect::<Vec<_>>()
         );
         println!("dropped tokens last step: {}", last.dropped);
+        println!("simulated cluster step time: {:.1} ms", last.sim_ms);
     }
     Ok(())
 }

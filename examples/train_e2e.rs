@@ -1,16 +1,16 @@
-//! End-to-end validation (DESIGN.md §4): train the ~100M-parameter
-//! `e2e-100m` config through the full three-layer stack — rust data
-//! pipeline -> AOT-compiled JAX+Pallas train step on PJRT -> metrics —
-//! and log the loss curve for EXPERIMENTS.md §E2E.
+//! End-to-end validation: train the ~100M-parameter `e2e-100m` config
+//! through the full stack — rust data pipeline -> backend train step ->
+//! metrics — and log the loss curve. Runs on the native backend by
+//! default; with `--features pjrt` + artifacts the same flow executes the
+//! AOT-compiled JAX+Pallas step instead (DESIGN.md §Backends).
 //!
 //! ```bash
-//! make artifacts
 //! cargo run --release --example train_e2e -- [steps]   # default 300
 //! ```
 
 use anyhow::Result;
 use m6t::coordinator::{TrainOptions, Trainer};
-use m6t::runtime::{Engine, Manifest};
+use m6t::runtime::{BackendProvider, NativeProvider};
 use m6t::util::table::Table;
 
 fn main() -> Result<()> {
@@ -19,20 +19,17 @@ fn main() -> Result<()> {
         .and_then(|s| s.parse().ok())
         .unwrap_or(300);
 
-    let manifest = Manifest::load("artifacts")?;
-    let engine = Engine::cpu()?;
-    let info = manifest.variant("e2e-100m")?;
+    let provider = NativeProvider::new();
+    let info = provider.info("e2e-100m")?;
     eprintln!(
-        "[e2e] {} — {:.1}M params, {} layers, {} experts, {} routing, state {:.0} MB device-resident",
+        "[e2e] {} — {:.1}M params, {} layers, {} experts, {} routing, state {:.0} kB host-resident",
         info.name,
         info.param_count as f64 / 1e6,
         info.config.layers,
         info.config.num_experts,
         info.config.routing.name(),
-        info.state_bytes() as f64 / 1e6,
+        info.state_bytes() as f64 / 1e3,
     );
-    let runtime = engine.load(info)?;
-    eprintln!("[e2e] compiled in {:.1}s", runtime.compile_seconds);
 
     let opts = TrainOptions {
         steps,
@@ -41,7 +38,7 @@ fn main() -> Result<()> {
         metrics_dir: Some("results/metrics".into()),
         ..Default::default()
     };
-    let trainer = Trainer::new(&engine, runtime, opts);
+    let trainer = Trainer::new(provider.load("e2e-100m")?, opts);
     let (outcome, state) = trainer.train()?;
 
     // summary table -> results/e2e_loss_curve.csv
@@ -50,7 +47,7 @@ fn main() -> Result<()> {
         t.row(vec![
             r.step.to_string(),
             format!("{:.4}", r.loss),
-            format!("{:.0}", r.ms_per_step),
+            format!("{:.2}", r.ms_per_step),
         ]);
     }
     t.save_csv("results/e2e_loss_curve.csv")?;
@@ -64,7 +61,7 @@ fn main() -> Result<()> {
     let ck = trainer.snapshot(&state)?;
     ck.save("results/e2e-100m.ckpt")?;
     println!(
-        "final loss {:.4}, eval PPL {:.2}, mean {:.0} ms/step; checkpoint + CSVs in results/",
+        "final loss {:.4}, eval PPL {:.2}, mean {:.2} ms/step; checkpoint + CSVs in results/",
         outcome.log.tail_loss(20),
         outcome.evals.last().map(|&(_, p)| p).unwrap_or(f64::NAN),
         outcome.log.records.iter().map(|r| r.ms_per_step).sum::<f64>()

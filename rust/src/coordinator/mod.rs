@@ -1,10 +1,10 @@
 //! The training coordinator — L3's orchestration core.
 //!
-//! Owns the step loop over the compiled PJRT train step, the synthetic
-//! data pipeline, metric collection (loss curves, per-layer c_v, drops),
-//! periodic paired evaluation (identical eval batches across strategies),
-//! and checkpointing. Every figure/table driver in `experiments` is built
-//! on [`Trainer`].
+//! Owns the step loop over a pluggable [`Backend`] (native or PJRT), the
+//! synthetic data pipeline, metric collection (loss curves, per-layer c_v,
+//! drops), periodic paired evaluation (identical eval batches across
+//! strategies), and checkpointing. Every figure/table driver in
+//! `experiments` is built on [`Trainer`].
 
 pub mod checkpoint;
 
@@ -14,7 +14,7 @@ use anyhow::Result;
 
 use crate::data::{Batcher, Split};
 use crate::metrics::RunLog;
-use crate::runtime::{Engine, TrainState, VariantRuntime};
+use crate::runtime::{Backend, TrainState, VariantInfo};
 
 pub use checkpoint::Checkpoint;
 
@@ -54,29 +54,33 @@ pub struct TrainOutcome {
     pub final_state_step: i64,
 }
 
-/// Drives one variant end to end.
-pub struct Trainer<'e> {
-    pub runtime: VariantRuntime,
+/// Drives one variant end to end through any [`Backend`].
+pub struct Trainer {
+    pub backend: Box<dyn Backend>,
     pub opts: TrainOptions,
-    _engine: &'e Engine,
 }
 
-impl<'e> Trainer<'e> {
-    pub fn new(engine: &'e Engine, runtime: VariantRuntime, opts: TrainOptions) -> Self {
-        Self { runtime, opts, _engine: engine }
+impl Trainer {
+    pub fn new(backend: Box<dyn Backend>, opts: TrainOptions) -> Self {
+        Self { backend, opts }
+    }
+
+    /// Static description of the loaded variant.
+    pub fn info(&self) -> &VariantInfo {
+        self.backend.info()
     }
 
     /// Teacher-forced PPL over `n` fixed eval batches (cursor reset so all
     /// strategies see identical data — paired comparison, Table 3/4).
     pub fn eval_ppl(&self, state: &TrainState, n: usize) -> Result<f64> {
-        let cfg = &self.runtime.info.config;
+        let cfg = &self.backend.info().config;
         let mut batcher = Batcher::for_config(cfg, Split::Eval, self.opts.seed);
         batcher.seek(0);
         let mut sum_nll = 0.0;
         let mut count = 0.0;
         for _ in 0..n {
             let batch = batcher.next_batch();
-            let (nll, c) = self.runtime.eval(state, &batch)?;
+            let (nll, c) = self.backend.eval(state, &batch)?;
             sum_nll += nll;
             count += c;
         }
@@ -86,13 +90,13 @@ impl<'e> Trainer<'e> {
     /// Run `steps` training steps from a fresh init; returns the outcome
     /// and the final state (for checkpointing / further eval).
     pub fn train(&self) -> Result<(TrainOutcome, TrainState)> {
-        let state = self.runtime.init_state(self.opts.seed as i32)?;
+        let state = self.backend.init_state(self.opts.seed as i32)?;
         self.train_from(state)
     }
 
     /// Continue training from an existing state.
     pub fn train_from(&self, mut state: TrainState) -> Result<(TrainOutcome, TrainState)> {
-        let info = &self.runtime.info;
+        let info = self.backend.info();
         let mut log = RunLog::new(info.name.clone());
         if let Some(dir) = &self.opts.metrics_dir {
             log = log.with_sink(dir)?;
@@ -107,7 +111,7 @@ impl<'e> Trainer<'e> {
         while state.step < end_step {
             let batch = batcher.next_batch();
             let t0 = Instant::now();
-            let (next, stats) = self.runtime.step(state, &batch)?;
+            let (next, stats) = self.backend.step(state, &batch)?;
             state = next;
             let ms = t0.elapsed().as_secs_f64() * 1e3;
             let step_now = state.step - 1;
@@ -157,15 +161,15 @@ impl<'e> Trainer<'e> {
     /// Snapshot the state into a host checkpoint.
     pub fn snapshot(&self, state: &TrainState) -> Result<Checkpoint> {
         Ok(Checkpoint {
-            variant: self.runtime.info.name.clone(),
+            variant: self.backend.info().name.clone(),
             step: state.step,
-            leaves: self.runtime.state_to_host(state)?,
+            leaves: self.backend.state_to_host(state)?,
         })
     }
 
-    /// Restore a checkpoint into device buffers.
+    /// Restore a checkpoint into a runnable state.
     pub fn restore(&self, ck: &Checkpoint) -> Result<TrainState> {
-        ck.validate(&self.runtime.info)?;
-        self.runtime.state_from_host(&ck.leaves, ck.step)
+        ck.validate(self.backend.info())?;
+        self.backend.state_from_host(&ck.leaves, ck.step)
     }
 }

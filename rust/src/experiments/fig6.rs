@@ -16,6 +16,7 @@ use anyhow::Result;
 use super::runner::Runner;
 use crate::cluster::steps_per_second;
 use crate::config::{paper, CapacityMode, Routing};
+use crate::runtime::BackendProvider as _;
 use crate::scaling::{fit_param_scaling, fit_power_law, PowerLaw};
 use crate::util::table::{f2, f3, Table};
 
@@ -42,7 +43,7 @@ pub fn run(runner: &Runner, steps: i64) -> Result<Fig6Output> {
         let steps_f: Vec<f64> = b.curve.iter().map(|&(s, _)| s as f64 + 1.0).collect();
         let losses: Vec<f64> = b.curve.iter().map(|&(_, l)| l).collect();
         let law = fit_power_law(&steps_f, &losses);
-        let params = runner.manifest.variant(baseline)?.param_count as f64;
+        let params = runner.provider.info(baseline)?.param_count as f64;
         twin_params.push(params);
         twin_floors.push(b.final_loss());
         proto_gain.push((b.final_loss() - p.final_loss()) / b.final_loss());

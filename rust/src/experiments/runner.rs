@@ -9,7 +9,7 @@ use std::path::{Path, PathBuf};
 use anyhow::{anyhow, Context, Result};
 
 use crate::coordinator::{TrainOptions, Trainer};
-use crate::runtime::{Engine, Manifest};
+use crate::runtime::{Backend as _, BackendProvider};
 use crate::util::json::{self, arr, num, obj, s, Value};
 
 /// The persisted essence of one training run.
@@ -137,10 +137,9 @@ impl CachedRun {
     }
 }
 
-/// Runner with a file-backed cache.
+/// Runner with a file-backed cache, generic over the execution backend.
 pub struct Runner<'e> {
-    pub engine: &'e Engine,
-    pub manifest: &'e Manifest,
+    pub provider: &'e dyn BackendProvider,
     pub results_dir: PathBuf,
     pub steps: i64,
     pub seed: u64,
@@ -149,10 +148,9 @@ pub struct Runner<'e> {
 }
 
 impl<'e> Runner<'e> {
-    pub fn new(engine: &'e Engine, manifest: &'e Manifest, results_dir: impl AsRef<Path>) -> Self {
+    pub fn new(provider: &'e dyn BackendProvider, results_dir: impl AsRef<Path>) -> Self {
         Self {
-            engine,
-            manifest,
+            provider,
             results_dir: results_dir.as_ref().to_path_buf(),
             steps: 200,
             seed: 42,
@@ -182,15 +180,15 @@ impl<'e> Runner<'e> {
                 }
             }
         }
-        let info = self.manifest.variant(variant)?;
+        let backend = self.provider.load(variant)?;
         if self.verbose {
+            let info = backend.info();
             eprintln!(
                 "[runner] {variant}: training {steps} steps ({:.1}M params, C={})",
                 info.param_count as f64 / 1e6,
                 info.capacity
             );
         }
-        let runtime = self.engine.load(info)?;
         let opts = TrainOptions {
             steps,
             seed: self.seed,
@@ -199,7 +197,7 @@ impl<'e> Runner<'e> {
             verbose: self.verbose,
             ..Default::default()
         };
-        let trainer = Trainer::new(self.engine, runtime, opts);
+        let trainer = Trainer::new(backend, opts);
         let (outcome, _state) = trainer.train()?;
 
         let n = outcome.log.records.len().max(1) as f64;

@@ -8,15 +8,19 @@
 //!   (`python/compile/`), AOT-lowered to HLO text once per experiment
 //!   variant;
 //! * **L3** — this crate: the coordinator that owns the synthetic corpus,
-//!   the PJRT runtime with device-resident train state, the routing
-//!   analytics (c_v load balance), the analytical FLOPs model, the Whale
-//!   cluster simulator, and every table/figure driver.
+//!   a pluggable [`runtime::Backend`] execution layer (a pure-Rust
+//!   [`runtime::NativeBackend`] that runs with zero artifacts, and a PJRT
+//!   engine with device-resident train state behind the `pjrt` cargo
+//!   feature), the routing analytics (c_v load balance), the analytical
+//!   FLOPs model, the Whale cluster simulator, and every table/figure
+//!   driver.
 //!
-//! Python never runs on the request path: after `make artifacts`, the
-//! `m6t` binary is self-contained.
+//! Python never runs on the request path: the default build is fully
+//! self-contained, and with `--features pjrt` + compiled artifacts the
+//! same `m6t` binary executes the lowered HLO instead.
 //!
-//! See DESIGN.md for the full system inventory and the per-experiment
-//! index; EXPERIMENTS.md for paper-vs-measured results.
+//! See DESIGN.md for the backend architecture, feature flags, and the
+//! per-experiment index.
 
 pub mod cluster;
 pub mod config;

@@ -1,9 +1,14 @@
 //! `m6t` — launcher CLI for the M6-T reproduction.
 //!
-//! Subcommands map one-to-one onto DESIGN.md §3's experiment index:
-//!   list                    show runnable variants from the manifest
+//! Every subcommand runs out of the box on the pure-Rust native backend
+//! (zero artifacts); with `--features pjrt` and a compiled artifact set,
+//! the same commands execute the real lowered HLO instead (DESIGN.md).
+//!
+//!   list                    show runnable variants
+//!   run                     short native training demo (c_v, drops, latency)
 //!   train                   train one variant (checkpoints, metrics)
 //!   eval                    eval PPL of a checkpoint / fresh init
+//!   bench                   measured vs simulated ms/step per strategy
 //!   flops                   Table 1 (analytical per-GPU GFLOPs)
 //!   simulate                Table 2 (calibrated cluster simulator)
 //!   figure fig1|fig3|fig4|fig5|fig6
@@ -17,8 +22,9 @@ use anyhow::Result;
 use m6t::config::paper;
 use m6t::coordinator::{Checkpoint, TrainOptions, Trainer};
 use m6t::experiments::{self, Runner};
-use m6t::runtime::{Engine, Manifest};
+use m6t::runtime::{measure_step_ms, Backend as _, BackendProvider, NativeProvider};
 use m6t::util::cli::Command;
+use m6t::util::table::{f1, f2, Table};
 
 fn main() -> ExitCode {
     let argv: Vec<String> = std::env::args().skip(1).collect();
@@ -40,20 +46,35 @@ fn main() -> ExitCode {
 
 const USAGE: &str = "m6t — M6-T sparse-expert reproduction
 subcommands:
-  list | train | eval | flops | simulate | figure | tables | report
+  list | run | train | eval | bench | flops | simulate | figure | tables | report
 run `m6t <subcommand> --help` for options";
 
 fn common(cmd: Command) -> Command {
-    cmd.opt_default("artifacts", "artifacts", "artifact directory")
+    cmd.opt_default("artifacts", "artifacts", "artifact directory (used with --features pjrt)")
         .opt_default("results", "results", "results directory")
         .opt_default("seed", "42", "data/init seed")
+}
+
+/// Pick the execution backend: the PJRT engine when the feature is on and
+/// artifacts exist, the zero-artifact native runtime otherwise.
+fn make_provider(artifacts: &str) -> Result<Box<dyn BackendProvider>> {
+    #[cfg(feature = "pjrt")]
+    {
+        if std::path::Path::new(artifacts).join("manifest.json").exists() {
+            return Ok(Box::new(m6t::runtime::PjrtProvider::new(artifacts)?));
+        }
+    }
+    let _ = artifacts;
+    Ok(Box::new(NativeProvider::new()))
 }
 
 fn dispatch(sub: &str, rest: &[String]) -> Result<()> {
     match sub {
         "list" => cmd_list(rest),
+        "run" => cmd_run(rest),
         "train" => cmd_train(rest),
         "eval" => cmd_eval(rest),
+        "bench" => cmd_bench(rest),
         "flops" => cmd_flops(rest),
         "simulate" => cmd_simulate(rest),
         "figure" => cmd_figure(rest),
@@ -73,9 +94,10 @@ fn parse(cmd: Command, rest: &[String]) -> Result<m6t::util::cli::Args> {
 
 fn cmd_list(rest: &[String]) -> Result<()> {
     let args = parse(common(Command::new("list", "show runnable variants")), rest)?;
-    let manifest = Manifest::load(args.get("artifacts").unwrap())?;
+    let provider = make_provider(args.get("artifacts").unwrap())?;
     println!("{:<28} {:>9} {:>6} {:>8} {:>7}", "variant", "params", "C", "routing", "layers");
-    for (name, v) in &manifest.variants {
+    for name in provider.names() {
+        let v = provider.info(&name)?;
         println!(
             "{:<28} {:>8.1}M {:>6} {:>8} {:>7}",
             name,
@@ -84,6 +106,51 @@ fn cmd_list(rest: &[String]) -> Result<()> {
             v.config.routing.name(),
             v.config.layers
         );
+    }
+    Ok(())
+}
+
+fn cmd_run(rest: &[String]) -> Result<()> {
+    let cmd = Command::new("run", "short native training run: balance, drops, latency")
+        .opt_default("variant", "base-top2", "native variant (see `m6t list`)")
+        .opt_default("steps", "40", "training steps")
+        .opt_default("seed", "42", "data/init seed")
+        .flag("quiet", "suppress progress lines");
+    let args = parse(cmd, rest)?;
+    let provider = NativeProvider::new();
+    let name = args.get("variant").unwrap();
+    let info = provider.info(name)?;
+    eprintln!(
+        "[m6t] {} — {:.1}M params, E={}, C={}, {} routing, native backend",
+        name,
+        info.param_count as f64 / 1e6,
+        info.config.num_experts,
+        info.capacity,
+        info.config.routing.name(),
+    );
+    let opts = TrainOptions {
+        steps: args.get_or("steps", 40i64).map_err(anyhow::Error::msg)?,
+        seed: args.get_or("seed", 42u64).map_err(anyhow::Error::msg)?,
+        verbose: !args.flag("quiet"),
+        ..Default::default()
+    };
+    let trainer = Trainer::new(provider.load(name)?, opts);
+    let (outcome, state) = trainer.train()?;
+    let ppl = trainer.eval_ppl(&state, 8)?;
+    println!(
+        "final: step {} loss {:.4} eval-PPL {:.3}",
+        outcome.final_state_step,
+        outcome.log.tail_loss(20),
+        ppl
+    );
+    if let Some(last) = outcome.log.last() {
+        let cvs: Vec<String> = last.cv_per_layer.iter().map(|c| format!("{c:.3}")).collect();
+        let drops: Vec<String> =
+            last.dropped_per_layer.iter().map(|d| format!("{d:.0}")).collect();
+        println!("per-layer load c_v:          [{}]", cvs.join(", "));
+        println!("per-layer dropped tokens:    [{}]", drops.join(", "));
+        println!("simulated cluster step time: {:.1} ms/step", last.sim_ms);
+        println!("measured host step time:     {:.2} ms/step", last.ms_per_step);
     }
     Ok(())
 }
@@ -97,20 +164,16 @@ fn cmd_train(rest: &[String]) -> Result<()> {
         .opt("resume", "resume from checkpoint")
         .flag("quiet", "suppress progress lines");
     let args = parse(cmd, rest)?;
-    let manifest = Manifest::load(args.get("artifacts").unwrap())?;
-    let engine = Engine::cpu()?;
+    let provider = make_provider(args.get("artifacts").unwrap())?;
     let name = args.get("variant").unwrap();
-    let info = manifest.variant(name)?;
+    let info = provider.info(name)?;
     eprintln!(
-        "[m6t] {} — {:.1}M params, C={}, {} on {}",
+        "[m6t] {} — {:.1}M params, C={}, {} routing",
         name,
         info.param_count as f64 / 1e6,
         info.capacity,
         info.config.routing.name(),
-        engine.platform()
     );
-    let runtime = engine.load(info)?;
-    eprintln!("[m6t] compiled in {:.1}s", runtime.compile_seconds);
     let opts = TrainOptions {
         steps: args.get_or("steps", 200i64).map_err(anyhow::Error::msg)?,
         seed: args.get_or("seed", 42u64).map_err(anyhow::Error::msg)?,
@@ -119,7 +182,7 @@ fn cmd_train(rest: &[String]) -> Result<()> {
         verbose: !args.flag("quiet"),
         ..Default::default()
     };
-    let trainer = Trainer::new(&engine, runtime, opts);
+    let trainer = Trainer::new(provider.load(name)?, opts);
     let (outcome, state) = match args.get("resume") {
         Some(path) => {
             let ck = Checkpoint::load(path)?;
@@ -148,22 +211,45 @@ fn cmd_eval(rest: &[String]) -> Result<()> {
         .opt("checkpoint", "checkpoint to evaluate (default: fresh init)")
         .opt_default("batches", "16", "eval batches");
     let args = parse(cmd, rest)?;
-    let manifest = Manifest::load(args.get("artifacts").unwrap())?;
-    let engine = Engine::cpu()?;
-    let info = manifest.variant(args.get("variant").unwrap())?;
-    let runtime = engine.load(info)?;
+    let provider = make_provider(args.get("artifacts").unwrap())?;
     let opts = TrainOptions {
         seed: args.get_or("seed", 42u64).map_err(anyhow::Error::msg)?,
         ..Default::default()
     };
-    let trainer = Trainer::new(&engine, runtime, opts);
+    let trainer = Trainer::new(provider.load(args.get("variant").unwrap())?, opts);
     let state = match args.get("checkpoint") {
         Some(path) => trainer.restore(&Checkpoint::load(path)?)?,
-        None => trainer.runtime.init_state(42)?,
+        None => trainer.backend.init_state(42)?,
     };
     let n = args.get_or("batches", 16usize).map_err(anyhow::Error::msg)?;
     let ppl = trainer.eval_ppl(&state, n)?;
     println!("eval PPL over {n} batches: {ppl:.3}");
+    Ok(())
+}
+
+fn cmd_bench(rest: &[String]) -> Result<()> {
+    let cmd = Command::new("bench", "measured host vs simulated cluster ms/step")
+        .opt_default("steps", "12", "measured steps per variant")
+        .opt_default("results", "results", "results directory");
+    let args = parse(cmd, rest)?;
+    let samples: usize = args.get_or("steps", 12usize).map_err(anyhow::Error::msg)?;
+    let provider = NativeProvider::new();
+    let variants = ["base-top1", "base-top2", "base-top4", "base-2top1", "base-4top1"];
+    let mut t = Table::new(
+        "native backend: measured host ms/step vs simulated cluster ms/step",
+        &["strategy", "host ms/step", "sim cluster ms/step"],
+    );
+    for name in variants {
+        let backend = provider.load(name)?;
+        let (host_ms, stats) = measure_step_ms(backend.as_ref(), 42, 1, samples)?;
+        t.row(vec![name.to_string(), f2(host_ms), f1(stats.sim_step_ms)]);
+        eprintln!(
+            "[bench] {name}: host {host_ms:.2} ms/step, sim {:.1} ms/step",
+            stats.sim_step_ms
+        );
+    }
+    print!("{}", t.render());
+    t.save_csv(format!("{}/bench_native.csv", args.get("results").unwrap()))?;
     Ok(())
 }
 
@@ -198,10 +284,9 @@ fn cmd_simulate(rest: &[String]) -> Result<()> {
 
 fn runner_from<'e>(
     args: &m6t::util::cli::Args,
-    engine: &'e Engine,
-    manifest: &'e Manifest,
+    provider: &'e dyn BackendProvider,
 ) -> Result<Runner<'e>> {
-    let mut r = Runner::new(engine, manifest, args.get("results").unwrap());
+    let mut r = Runner::new(provider, args.get("results").unwrap());
     r.seed = args.get_or("seed", 42u64).map_err(anyhow::Error::msg)?;
     r.force = args.flag("force");
     Ok(r)
@@ -218,9 +303,8 @@ fn cmd_figure(rest: &[String]) -> Result<()> {
         .first()
         .ok_or_else(|| anyhow::anyhow!("usage: m6t figure <fig1|fig3|fig4|fig5|fig6>"))?
         .clone();
-    let manifest = Manifest::load(args.get("artifacts").unwrap())?;
-    let engine = Engine::cpu()?;
-    let runner = runner_from(&args, &engine, &manifest)?;
+    let provider = make_provider(args.get("artifacts").unwrap())?;
+    let runner = runner_from(&args, provider.as_ref())?;
     let steps: i64 = args.get_or("steps", 200i64).map_err(anyhow::Error::msg)?;
     let results = args.get("results").unwrap().to_string();
     match which.as_str() {
@@ -267,9 +351,8 @@ fn cmd_tables(rest: &[String]) -> Result<()> {
         .opt_default("steps", "200", "steps per training run")
         .flag("force", "ignore the run cache");
     let args = parse(cmd, rest)?;
-    let manifest = Manifest::load(args.get("artifacts").unwrap())?;
-    let engine = Engine::cpu()?;
-    let runner = runner_from(&args, &engine, &manifest)?;
+    let provider = make_provider(args.get("artifacts").unwrap())?;
+    let runner = runner_from(&args, provider.as_ref())?;
     let steps: i64 = args.get_or("steps", 200i64).map_err(anyhow::Error::msg)?;
     let results = args.get("results").unwrap().to_string();
     let t3 = experiments::table34::table3(&runner, steps)?;
@@ -286,9 +369,8 @@ fn cmd_report(rest: &[String]) -> Result<()> {
         .opt_default("steps", "200", "steps per training run")
         .flag("force", "ignore the run cache");
     let args = parse(cmd, rest)?;
-    let manifest = Manifest::load(args.get("artifacts").unwrap())?;
-    let engine = Engine::cpu()?;
-    let runner = runner_from(&args, &engine, &manifest)?;
+    let provider = make_provider(args.get("artifacts").unwrap())?;
+    let runner = runner_from(&args, provider.as_ref())?;
     let steps: i64 = args.get_or("steps", 200i64).map_err(anyhow::Error::msg)?;
     let results = args.get("results").unwrap().to_string();
 

@@ -7,7 +7,7 @@ use std::path::{Path, PathBuf};
 
 use anyhow::{Context, Result};
 
-use crate::runtime::engine::StepStats;
+use crate::runtime::StepStats;
 use crate::util::json::{arr, num, obj, s, write as jwrite, Value};
 use crate::util::stats::Ema;
 
@@ -20,7 +20,10 @@ pub struct StepRecord {
     pub grad_norm: f64,
     pub cv_per_layer: Vec<f64>,
     pub dropped: f64,
+    pub dropped_per_layer: Vec<f64>,
     pub ms_per_step: f64,
+    /// simulated cluster ms/step (0 on measured-hardware backends)
+    pub sim_ms: f64,
 }
 
 /// In-memory run log + optional JSONL sink.
@@ -61,7 +64,9 @@ impl RunLog {
             grad_norm: stats.grad_norm as f64,
             cv_per_layer: stats.cv_per_layer(),
             dropped: stats.total_dropped(),
+            dropped_per_layer: stats.dropped.iter().map(|&x| x as f64).collect(),
             ms_per_step: ms,
+            sim_ms: stats.sim_step_ms,
         };
         self.ema.push(rec.loss);
         if let Some(f) = &mut self.sink {
@@ -73,6 +78,7 @@ impl RunLog {
                 ("cv", arr(rec.cv_per_layer.iter().map(|&x| num(x)).collect())),
                 ("dropped", num(rec.dropped)),
                 ("ms", num(rec.ms_per_step)),
+                ("sim_ms", num(rec.sim_ms)),
             ]);
             writeln!(f, "{}", jwrite(&v))?;
         }
@@ -164,6 +170,7 @@ mod tests {
             layers,
             experts,
             dropped: vec![0.0; layers],
+            sim_step_ms: 0.0,
         }
     }
 

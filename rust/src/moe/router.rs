@@ -58,11 +58,18 @@ impl RouteOutput {
 
 /// Route `gates` (T x E row-major, already softmaxed *per prototype group*
 /// for prototyping) under `spec`.
+///
+/// Top-k with `k > E` is clamped to `k = E`: after E argmax rounds every
+/// expert has been selected once per token, so further rounds have no
+/// unmasked expert to pick — the clamp makes k >= E mean "dense top-E"
+/// (one assignment per expert per token) instead of selecting a garbage
+/// index in release builds. Drop accounting follows: each token accounts
+/// for `min(k, E)` routed slots.
 pub fn route(gates: &[f32], tokens: usize, spec: &RouterSpec) -> RouteOutput {
     let e = spec.num_experts;
     assert_eq!(gates.len(), tokens * e, "gate matrix shape mismatch");
     match spec.routing {
-        Routing::TopK(k) => route_topk(gates, tokens, e, k as usize, spec.capacity),
+        Routing::TopK(k) => route_topk(gates, tokens, e, (k as usize).min(e), spec.capacity),
         Routing::Prototype(z) => route_prototype(gates, tokens, e, z as usize, spec.capacity),
     }
 }
@@ -312,6 +319,41 @@ mod tests {
         assert_eq!(out.load[0], 10);
         assert_eq!(out.dropped, 54);
         assert!(out.cv() > 1.5);
+    }
+
+    #[test]
+    fn topk_with_k_beyond_experts_clamps_to_dense() {
+        // regression: k > E used to leave `best == usize::MAX` after all
+        // experts were masked — UB-adjacent garbage indexing in release
+        let gates = random_gates(16, 4, 1, 6);
+        let spec = RouterSpec { routing: Routing::TopK(8), num_experts: 4, capacity: 16 };
+        let out = route(&gates, 16, &spec);
+        // clamped to dense top-E: every token reaches every expert once
+        assert_eq!(out.assignments.len(), 16 * 4);
+        assert_eq!(out.dropped, 0);
+        for t in 0..16 {
+            let mut experts: Vec<usize> = out
+                .assignments
+                .iter()
+                .filter(|a| a.token == t)
+                .map(|a| a.expert)
+                .collect();
+            experts.sort();
+            assert_eq!(experts, vec![0, 1, 2, 3], "token {t} must cover all experts");
+        }
+        // accounting matches the clamped k
+        let kept: u32 = out.load.iter().sum();
+        assert_eq!(kept + out.dropped, 16 * 4);
+    }
+
+    #[test]
+    fn topk_clamp_respects_capacity_too() {
+        let gates = random_gates(32, 4, 1, 7);
+        let spec = RouterSpec { routing: Routing::TopK(100), num_experts: 4, capacity: 8 };
+        let out = route(&gates, 32, &spec);
+        assert!(out.load.iter().all(|&l| l <= 8));
+        let kept: u32 = out.load.iter().sum();
+        assert_eq!(kept + out.dropped, 32 * 4);
     }
 
     #[test]

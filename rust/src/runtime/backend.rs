@@ -1,0 +1,163 @@
+//! The pluggable runtime surface: every execution engine — the pure-Rust
+//! [`NativeBackend`](super::native::NativeBackend) and the feature-gated
+//! PJRT engine — exposes the same `init_state / step / eval / checkpoint`
+//! contract through [`Backend`], and is constructed by a
+//! [`BackendProvider`] that owns the variant registry (the artifact
+//! manifest for PJRT, the built-in config registry for native).
+//!
+//! The coordinator, the experiment runner, and every figure/table driver
+//! talk only to these traits; swapping backends never touches them.
+
+use std::time::Instant;
+
+use anyhow::Result;
+
+use super::manifest::VariantInfo;
+use crate::data::{Batch, Batcher, Split};
+
+/// Scalar + load statistics returned by one train step.
+#[derive(Debug, Clone)]
+pub struct StepStats {
+    pub loss: f32,
+    pub aux_loss: f32,
+    pub grad_norm: f32,
+    /// (layers, experts) kept-token counts, row-major
+    pub load: Vec<f32>,
+    pub layers: usize,
+    pub experts: usize,
+    /// per-layer dropped-token counts
+    pub dropped: Vec<f32>,
+    /// simulated cluster ms/step for this variant's paper-scale twin
+    /// (0 when the backend measures real hardware instead of modelling it)
+    pub sim_step_ms: f64,
+}
+
+impl StepStats {
+    /// Per-layer coefficient of variation of effective compute load —
+    /// the paper's Fig-1 metric.
+    pub fn cv_per_layer(&self) -> Vec<f64> {
+        (0..self.layers)
+            .map(|l| {
+                let row: Vec<f64> = self.load[l * self.experts..(l + 1) * self.experts]
+                    .iter()
+                    .map(|&x| x as f64)
+                    .collect();
+                crate::util::stats::coefficient_of_variation(&row)
+            })
+            .collect()
+    }
+    pub fn total_dropped(&self) -> f64 {
+        self.dropped.iter().map(|&x| x as f64).sum()
+    }
+}
+
+/// Where a train state physically lives. The host representation is the
+/// manifest-ordered leaf vector (also the checkpoint format); the device
+/// representation is PJRT buffers and only exists under `--features pjrt`.
+pub enum StateRepr {
+    Host(Vec<Vec<f32>>),
+    #[cfg(feature = "pjrt")]
+    Device(Vec<xla::PjRtBuffer>),
+}
+
+/// Backend-agnostic train state: an opaque representation plus the step
+/// counter. Produced and consumed only through [`Backend`] methods.
+pub struct TrainState {
+    pub step: i64,
+    pub repr: StateRepr,
+}
+
+/// One loaded variant, ready to run — the execution contract extracted
+/// from the old PJRT-only `VariantRuntime`.
+pub trait Backend {
+    /// Static description of the variant (config, capacity, leaf layout).
+    fn info(&self) -> &VariantInfo;
+
+    /// Seed -> fresh train state. Deterministic per seed.
+    fn init_state(&self, seed: i32) -> Result<TrainState>;
+
+    /// One train step: consumes the state, returns the advanced state and
+    /// the step statistics.
+    fn step(&self, state: TrainState, batch: &Batch) -> Result<(TrainState, StepStats)>;
+
+    /// Teacher-forced eval on one batch: (sum_nll, token_count). Pure in
+    /// (state, batch) so paired comparisons across strategies are exact.
+    fn eval(&self, state: &TrainState, batch: &Batch) -> Result<(f64, f64)>;
+
+    /// Pull the full state to host leaves (checkpointing).
+    fn state_to_host(&self, state: &TrainState) -> Result<Vec<Vec<f32>>>;
+
+    /// Restore host leaves into a runnable state.
+    fn state_from_host(&self, leaves: &[Vec<f32>], step: i64) -> Result<TrainState>;
+}
+
+/// Median wall-clock ms of `samples` bare `step()` calls after `warmup`
+/// steps, plus the stats of the last sampled step — the one shared
+/// measurement methodology behind `m6t bench` and the `step_latency`
+/// bench, so both report the same "measured host ms/step" series.
+pub fn measure_step_ms(
+    backend: &dyn Backend,
+    seed: u64,
+    warmup: usize,
+    samples: usize,
+) -> Result<(f64, StepStats)> {
+    let cfg = backend.info().config.clone();
+    let mut state = backend.init_state(seed as i32)?;
+    let mut batcher = Batcher::for_config(&cfg, Split::Train, seed);
+    for _ in 0..warmup {
+        let batch = batcher.next_batch();
+        let (next, _stats) = backend.step(state, &batch)?;
+        state = next;
+    }
+    let mut ms: Vec<f64> = Vec::with_capacity(samples.max(1));
+    let mut last_stats = None;
+    for _ in 0..samples.max(1) {
+        let batch = batcher.next_batch();
+        let t0 = Instant::now();
+        let (next, stats) = backend.step(state, &batch)?;
+        ms.push(t0.elapsed().as_secs_f64() * 1e3);
+        state = next;
+        last_stats = Some(stats);
+    }
+    ms.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let median = ms[ms.len() / 2];
+    Ok((median, last_stats.expect("at least one sample")))
+}
+
+/// A source of runnable variants: resolves names to [`VariantInfo`] and
+/// constructs [`Backend`]s. Implemented by `NativeProvider` (built-in
+/// registry, zero artifacts) and `PjrtProvider` (artifact manifest).
+pub trait BackendProvider {
+    /// All variant names this provider can load, sorted.
+    fn names(&self) -> Vec<String>;
+
+    /// Static description of one variant.
+    fn info(&self, name: &str) -> Result<VariantInfo>;
+
+    /// Construct a ready-to-run backend for one variant.
+    fn load(&self, name: &str) -> Result<Box<dyn Backend>>;
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn cv_per_layer_splits_rows() {
+        let stats = StepStats {
+            loss: 1.0,
+            aux_loss: 0.0,
+            grad_norm: 1.0,
+            load: vec![4.0, 4.0, 8.0, 0.0],
+            layers: 2,
+            experts: 2,
+            dropped: vec![0.0, 0.0],
+            sim_step_ms: 0.0,
+        };
+        let cv = stats.cv_per_layer();
+        assert_eq!(cv.len(), 2);
+        assert_eq!(cv[0], 0.0, "balanced layer");
+        assert!(cv[1] > 0.9, "one-hot layer is maximally skewed");
+        assert_eq!(stats.total_dropped(), 0.0);
+    }
+}

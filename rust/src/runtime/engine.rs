@@ -1,5 +1,6 @@
-//! PJRT execution engine: loads HLO-text artifacts, compiles them on the
-//! CPU client, and runs train/eval steps with **device-resident state**.
+//! PJRT execution engine (cargo feature `pjrt`): loads HLO-text artifacts,
+//! compiles them on the CPU client, and runs train/eval steps with
+//! **device-resident state**.
 //!
 //! The train state (parameters + optimizer moments) never round-trips
 //! through the host: `step()` feeds the previous step's output buffers
@@ -7,54 +8,19 @@
 //! `ExecuteOptions::untuple_result`, so multi-output modules return flat
 //! per-output buffers). Only the batch goes in and the scalar metrics +
 //! per-layer load vectors come out — a few hundred bytes per step.
+//!
+//! Offline builds compile against `third_party/xla-stub`, which
+//! type-checks this module but fails at runtime; swap in the vendored
+//! crate to execute real artifacts (DESIGN.md §Backends).
 
 use std::path::Path;
 use std::time::Instant;
 
 use anyhow::{anyhow, bail, Context, Result};
 
-use super::manifest::{DType, VariantInfo};
+use super::backend::{Backend, BackendProvider, StateRepr, StepStats, TrainState};
+use super::manifest::{DType, Manifest, VariantInfo};
 use crate::data::Batch;
-
-/// Scalar + load statistics returned by one train step.
-#[derive(Debug, Clone)]
-pub struct StepStats {
-    pub loss: f32,
-    pub aux_loss: f32,
-    pub grad_norm: f32,
-    /// (layers, experts) kept-token counts, row-major
-    pub load: Vec<f32>,
-    pub layers: usize,
-    pub experts: usize,
-    /// per-layer dropped-token counts
-    pub dropped: Vec<f32>,
-}
-
-impl StepStats {
-    /// Per-layer coefficient of variation of effective compute load —
-    /// the paper's Fig-1 metric.
-    pub fn cv_per_layer(&self) -> Vec<f64> {
-        (0..self.layers)
-            .map(|l| {
-                let row: Vec<f64> = self.load[l * self.experts..(l + 1) * self.experts]
-                    .iter()
-                    .map(|&x| x as f64)
-                    .collect();
-                crate::util::stats::coefficient_of_variation(&row)
-            })
-            .collect()
-    }
-    pub fn total_dropped(&self) -> f64 {
-        self.dropped.iter().map(|&x| x as f64).sum()
-    }
-}
-
-/// Device-resident train state: the flat buffer vector whose order is
-/// pinned by `VariantInfo::state_leaves`.
-pub struct TrainState {
-    pub buffers: Vec<xla::PjRtBuffer>,
-    pub step: i64,
-}
 
 /// One compiled variant, ready to run.
 pub struct VariantRuntime {
@@ -113,21 +79,6 @@ impl Engine {
 }
 
 impl VariantRuntime {
-    /// Run the init module: seed -> fresh device-resident train state.
-    pub fn init_state(&self, seed: i32) -> Result<TrainState> {
-        let seed_lit = xla::Literal::scalar(seed);
-        let outs = self.init.execute::<xla::Literal>(&[seed_lit]).map_err(wrap)?;
-        let buffers = into_single_replica(outs)?;
-        if buffers.len() != self.info.n_state {
-            bail!(
-                "init returned {} buffers, manifest says {}",
-                buffers.len(),
-                self.info.n_state
-            );
-        }
-        Ok(TrainState { buffers, step: 0 })
-    }
-
     /// Upload the batch to device buffers.
     ///
     /// Uses `BufferFromHostBuffer` with `kImmutableOnlyDuringCall` semantics:
@@ -136,7 +87,7 @@ impl VariantRuntime {
     /// `BufferFromHostLiteral`, schedules `CopyFromLiteral` asynchronously on
     /// the 0.5.1 TFRT CPU client and intermittently crossed copy lambdas with
     /// later uploads — observed as a `literal.size_bytes() == b->size()`
-    /// check crash; see DESIGN.md §Runtime-notes.)
+    /// check crash.)
     fn batch_buffers(&self, batch: &Batch) -> Result<(xla::PjRtBuffer, xla::PjRtBuffer)> {
         let cfg = &self.info.config;
         if batch.batch != cfg.batch || batch.text_len != cfg.text_len {
@@ -163,9 +114,37 @@ impl VariantRuntime {
         Ok((pb, tb))
     }
 
+    fn device_buffers<'a>(&self, state: &'a TrainState) -> Result<&'a Vec<xla::PjRtBuffer>> {
+        match &state.repr {
+            StateRepr::Device(buffers) => Ok(buffers),
+            StateRepr::Host(_) => bail!("PJRT backend received a host-resident state"),
+        }
+    }
+}
+
+impl Backend for VariantRuntime {
+    fn info(&self) -> &VariantInfo {
+        &self.info
+    }
+
+    /// Run the init module: seed -> fresh device-resident train state.
+    fn init_state(&self, seed: i32) -> Result<TrainState> {
+        let seed_lit = xla::Literal::scalar(seed);
+        let outs = self.init.execute::<xla::Literal>(&[seed_lit]).map_err(wrap)?;
+        let buffers = into_single_replica(outs)?;
+        if buffers.len() != self.info.n_state {
+            bail!(
+                "init returned {} buffers, manifest says {}",
+                buffers.len(),
+                self.info.n_state
+            );
+        }
+        Ok(TrainState { step: 0, repr: StateRepr::Device(buffers) })
+    }
+
     /// One train step: consumes the state, returns the advanced state and
     /// the step statistics. Parameters stay on device.
-    pub fn step(&self, state: TrainState, batch: &Batch) -> Result<(TrainState, StepStats)> {
+    fn step(&self, state: TrainState, batch: &Batch) -> Result<(TrainState, StepStats)> {
         let (pb, tb) = self.batch_buffers(batch)?;
         let step_i32 = [state.step as i32];
         let sb = self
@@ -173,8 +152,9 @@ impl VariantRuntime {
             .buffer_from_host_buffer(&step_i32, &[], None)
             .map_err(wrap)?;
 
-        let mut args: Vec<&xla::PjRtBuffer> = Vec::with_capacity(state.buffers.len() + 3);
-        args.extend(state.buffers.iter());
+        let state_buffers = self.device_buffers(&state)?;
+        let mut args: Vec<&xla::PjRtBuffer> = Vec::with_capacity(state_buffers.len() + 3);
+        args.extend(state_buffers.iter());
         args.push(&sb);
         args.push(&pb);
         args.push(&tb);
@@ -195,15 +175,20 @@ impl VariantRuntime {
             layers: cfg.layers,
             experts: cfg.num_experts,
             dropped: vec_f32(&extras[4])?,
+            sim_step_ms: 0.0,
         };
-        Ok((TrainState { buffers: bufs, step: state.step + 1 }, stats))
+        Ok((
+            TrainState { step: state.step + 1, repr: StateRepr::Device(bufs) },
+            stats,
+        ))
     }
 
     /// Teacher-forced eval on one batch: (sum_nll, token_count).
-    pub fn eval(&self, state: &TrainState, batch: &Batch) -> Result<(f64, f64)> {
+    fn eval(&self, state: &TrainState, batch: &Batch) -> Result<(f64, f64)> {
         let (pb, tb) = self.batch_buffers(batch)?;
+        let state_buffers = self.device_buffers(state)?;
         let mut args: Vec<&xla::PjRtBuffer> = Vec::with_capacity(self.info.n_params + 2);
-        args.extend(state.buffers[..self.info.n_params].iter());
+        args.extend(state_buffers[..self.info.n_params].iter());
         args.push(&pb);
         args.push(&tb);
         let outs = self.eval.execute_b::<&xla::PjRtBuffer>(&args).map_err(wrap)?;
@@ -215,9 +200,8 @@ impl VariantRuntime {
     }
 
     /// Pull the full state to host (checkpointing).
-    pub fn state_to_host(&self, state: &TrainState) -> Result<Vec<Vec<f32>>> {
-        state
-            .buffers
+    fn state_to_host(&self, state: &TrainState) -> Result<Vec<Vec<f32>>> {
+        self.device_buffers(state)?
             .iter()
             .zip(&self.info.state_leaves)
             .map(|(b, spec)| match spec.dtype {
@@ -231,7 +215,7 @@ impl VariantRuntime {
     }
 
     /// Restore a host checkpoint into device buffers.
-    pub fn state_from_host(&self, leaves: &[Vec<f32>], step: i64) -> Result<TrainState> {
+    fn state_from_host(&self, leaves: &[Vec<f32>], step: i64) -> Result<TrainState> {
         if leaves.len() != self.info.n_state {
             bail!("checkpoint has {} leaves, expected {}", leaves.len(), self.info.n_state);
         }
@@ -251,7 +235,38 @@ impl VariantRuntime {
                     .map_err(wrap)?,
             );
         }
-        Ok(TrainState { buffers, step })
+        Ok(TrainState { step, repr: StateRepr::Device(buffers) })
+    }
+}
+
+/// Artifact-backed provider: the PJRT engine plus the manifest registry.
+pub struct PjrtProvider {
+    engine: Engine,
+    manifest: Manifest,
+}
+
+impl PjrtProvider {
+    pub fn new(artifacts_dir: impl AsRef<Path>) -> Result<Self> {
+        Ok(Self { engine: Engine::cpu()?, manifest: Manifest::load(artifacts_dir)? })
+    }
+
+    pub fn platform(&self) -> String {
+        self.engine.platform()
+    }
+}
+
+impl BackendProvider for PjrtProvider {
+    fn names(&self) -> Vec<String> {
+        self.manifest.variants.keys().cloned().collect()
+    }
+
+    fn info(&self, name: &str) -> Result<VariantInfo> {
+        Ok(self.manifest.variant(name)?.clone())
+    }
+
+    fn load(&self, name: &str) -> Result<Box<dyn Backend>> {
+        let info = self.manifest.variant(name)?;
+        Ok(Box::new(self.engine.load(info)?))
     }
 }
 

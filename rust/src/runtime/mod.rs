@@ -1,9 +1,19 @@
-//! PJRT runtime: artifact manifest + engine with device-resident train
-//! state. See `engine` for the execution model and `manifest` for the
-//! python<->rust buffer-order contract.
+//! Runtime layer: the pluggable [`Backend`] execution contract, the
+//! artifact manifest, the zero-artifact [`NativeBackend`], and — behind
+//! the `pjrt` cargo feature — the PJRT engine with device-resident state.
+//!
+//! See `backend` for the trait surface, `native` for the pure-Rust
+//! runtime, `manifest` for the python<->rust buffer-order contract, and
+//! `engine` (feature `pjrt`) for the XLA execution model.
 
+pub mod backend;
+#[cfg(feature = "pjrt")]
 pub mod engine;
 pub mod manifest;
+pub mod native;
 
-pub use engine::{Engine, StepStats, TrainState, VariantRuntime};
+pub use backend::{measure_step_ms, Backend, BackendProvider, StateRepr, StepStats, TrainState};
+#[cfg(feature = "pjrt")]
+pub use engine::{Engine, PjrtProvider, VariantRuntime};
 pub use manifest::{Manifest, TensorSpec, VariantInfo};
+pub use native::{NativeBackend, NativeProvider};

@@ -1,0 +1,562 @@
+//! Pure-Rust native backend: runs every variant with **zero artifacts**.
+//!
+//! Instead of executing lowered HLO, the native backend composes the
+//! repo's own analytic machinery into a deterministic training simulacrum:
+//!  * per-layer routing statistics come from the host-side routing mirror
+//!    ([`moe::route`]) over seeded gate logits plus a persistent per-expert
+//!    router bias (the state that makes balance dynamics visible), with
+//!    layers routed in parallel via `std::thread::scope`;
+//!  * the loss trajectory follows a [`scaling::PowerLaw`] whose floor
+//!    encodes the paper's qualitative findings (larger models lower, k > 1
+//!    helps with diminishing returns, prototyping helps more at scale,
+//!    token drops and MoE attention hurt, the aux loss buys balance but
+//!    not quality);
+//!  * step latency is the calibrated Whale cluster model's prediction for
+//!    the variant's configuration ([`cluster::simulate_step`]).
+//!
+//! Everything is a pure function of (state leaves, step, batch), so
+//! checkpoint round-trips reproduce runs bitwise — the property the
+//! integration tests pin down.
+
+use std::collections::BTreeMap;
+
+use anyhow::{anyhow, bail, Result};
+
+use super::backend::{Backend, BackendProvider, StateRepr, StepStats, TrainState};
+use super::manifest::{DType, TensorSpec, VariantInfo};
+use crate::cluster::{simulate_step, table2_hardware};
+use crate::config::{paper, CapacityMode, ModelConfig, Routing};
+use crate::data::Batch;
+use crate::moe::router::softmax_gates;
+use crate::moe::{route, RouterSpec};
+use crate::scaling::PowerLaw;
+use crate::util::rng::Rng;
+use crate::util::stats::coefficient_of_variation;
+
+/// Synthesize the manifest entry a native variant would have had: the
+/// state layout is [loss-law params, router bias], and the bookkeeping
+/// counts mirror the python/rust accounting contract.
+pub fn variant_info(cfg: &ModelConfig) -> VariantInfo {
+    let state_leaves = vec![
+        TensorSpec { name: "loss_law".into(), shape: vec![3], dtype: DType::F32 },
+        TensorSpec {
+            name: "router_bias".into(),
+            shape: vec![cfg.layers, cfg.num_experts],
+            dtype: DType::F32,
+        },
+    ];
+    VariantInfo {
+        name: cfg.name.clone(),
+        dir: Default::default(),
+        config: cfg.clone(),
+        init_hlo: Default::default(),
+        step_hlo: Default::default(),
+        eval_hlo: Default::default(),
+        n_params: state_leaves.len(),
+        n_opt: 0,
+        n_state: state_leaves.len(),
+        param_count: cfg.param_count(),
+        capacity: cfg.capacity(),
+        state_leaves,
+        step_inputs: Vec::new(),
+        step_outputs: Vec::new(),
+        eval_outputs: Vec::new(),
+    }
+}
+
+/// Achievable loss floor of a config — the place the paper's qualitative
+/// claims are encoded (see module docs).
+fn loss_floor(cfg: &ModelConfig) -> f64 {
+    let params = cfg.param_count() as f64;
+    let base = 1.1 + (2e7 / params).powf(0.08);
+    let k_eff = cfg.routing.k().min(cfg.num_experts as u32).max(1) as f64;
+    // k > 1 helps, with diminishing returns (Fig 3)
+    let k_gain = 0.05 * (1.0 - 1.0 / k_eff);
+    // prototyping's extra edge grows with expert count (Fig 5)
+    let proto_gain = if cfg.routing.prototypes() > 1 {
+        0.002 * (cfg.num_experts as f64).ln()
+    } else {
+        0.0
+    };
+    // balance does not buy quality: the aux loss costs a little (Fig 1) —
+    // sized to dominate the drop-penalty relief that balancing also brings
+    let aux_pen = if cfg.aux_loss_coef > 0.0 { 0.02 } else { 0.0 };
+    // MoE attention hurts; prototyping mitigates (Fig 4)
+    let attn_pen = if cfg.moe_attention {
+        if cfg.routing.prototypes() > 1 {
+            0.03
+        } else {
+            0.06
+        }
+    } else {
+        0.0
+    };
+    (base * (1.0 - k_gain - proto_gain) + aux_pen + attn_pen).max(0.2)
+}
+
+fn hash_str(s: &str) -> u64 {
+    let mut h = 0xcbf2_9ce4_8422_2325u64;
+    for b in s.bytes() {
+        h = (h ^ b as u64).wrapping_mul(0x100_0000_01b3);
+    }
+    h
+}
+
+fn hash_f32s(xs: &[f32]) -> u64 {
+    let mut h = 0xcbf2_9ce4_8422_2325u64;
+    for &x in xs {
+        h = (h ^ x.to_bits() as u64).wrapping_mul(0x100_0000_01b3);
+    }
+    h
+}
+
+fn batch_hash(batch: &Batch) -> u64 {
+    let mut h = 0xcbf2_9ce4_8422_2325u64;
+    for &t in &batch.tokens {
+        h = (h ^ t as u32 as u64).wrapping_mul(0x100_0000_01b3);
+    }
+    h
+}
+
+fn law_from_leaf(leaf: &[f32]) -> Result<PowerLaw> {
+    if leaf.len() != 3 {
+        bail!("loss-law leaf has {} elements, expected 3", leaf.len());
+    }
+    Ok(PowerLaw { l_inf: leaf[0] as f64, a: leaf[1] as f64, b: leaf[2] as f64 })
+}
+
+/// Route one layer's tokens: seeded gate logits + persistent router bias,
+/// softmaxed per prototype group, through the host routing mirror.
+fn route_layer(
+    seed: u64,
+    bias_row: &[f32],
+    tokens: usize,
+    experts: usize,
+    prototypes: usize,
+    routing: Routing,
+    capacity: usize,
+) -> (Vec<u32>, u32) {
+    let mut rng = Rng::new(seed);
+    let mut logits = vec![0f32; tokens * experts];
+    for t in 0..tokens {
+        for x in 0..experts {
+            logits[t * experts + x] = rng.normal() as f32 + bias_row[x];
+        }
+    }
+    let gates = softmax_gates(&logits, tokens, experts, prototypes);
+    let spec = RouterSpec { routing, num_experts: experts, capacity };
+    let out = route(&gates, tokens, &spec);
+    (out.load, out.dropped)
+}
+
+/// The native execution engine for one variant.
+pub struct NativeBackend {
+    info: VariantInfo,
+    sim_step_ms: f64,
+}
+
+impl NativeBackend {
+    pub fn new(cfg: &ModelConfig) -> Self {
+        let sim_step_ms =
+            simulate_step(cfg, cfg.routing, cfg.capacity_mode, &table2_hardware()).total_ms();
+        Self { info: variant_info(cfg), sim_step_ms }
+    }
+
+    /// Calibrated cluster-model prediction for this variant's step time.
+    pub fn simulated_step_ms(&self) -> f64 {
+        self.sim_step_ms
+    }
+
+    fn host_leaves<'a>(&self, state: &'a TrainState) -> Result<&'a Vec<Vec<f32>>> {
+        match &state.repr {
+            StateRepr::Host(leaves) => Ok(leaves),
+            #[cfg(feature = "pjrt")]
+            StateRepr::Device(_) => bail!("native backend received a device-resident state"),
+        }
+    }
+}
+
+impl Backend for NativeBackend {
+    fn info(&self) -> &VariantInfo {
+        &self.info
+    }
+
+    fn init_state(&self, seed: i32) -> Result<TrainState> {
+        let cfg = &self.info.config;
+        let mut rng = Rng::new(hash_str(&cfg.name) ^ seed as u32 as u64);
+        let floor = loss_floor(cfg);
+        // jitter the floor only slightly (±0.1%): seeds must vary the init,
+        // but cross-variant loss comparisons ride on the encoded floor gaps
+        let l_inf = floor * (1.0 + 0.002 * (rng.uniform() - 0.5));
+        // a pins loss(1) to ln(vocab): an untrained model scores ~uniform
+        let a = ((cfg.vocab_size as f64).ln() - l_inf).max(0.5);
+        let b = 0.35;
+        // bias std 0.4 over unit-variance gate noise: visibly skewed load
+        // (c_v ~ 0.4-0.6) without drop rates that would dominate the loss
+        let bias: Vec<f32> = (0..cfg.layers * cfg.num_experts)
+            .map(|_| (rng.normal() * 0.4) as f32)
+            .collect();
+        let leaves = vec![vec![l_inf as f32, a as f32, b as f32], bias];
+        Ok(TrainState { step: 0, repr: StateRepr::Host(leaves) })
+    }
+
+    fn step(&self, state: TrainState, batch: &Batch) -> Result<(TrainState, StepStats)> {
+        let cfg = &self.info.config;
+        let TrainState { step, repr } = state;
+        let mut leaves = match repr {
+            StateRepr::Host(leaves) => leaves,
+            #[cfg(feature = "pjrt")]
+            StateRepr::Device(_) => bail!("native backend received a device-resident state"),
+        };
+        let law = law_from_leaf(&leaves[0])?;
+        let tokens = cfg.tokens_per_batch();
+        let experts = cfg.num_experts;
+        let layers = cfg.layers;
+        let capacity = self.info.capacity;
+        let prototypes = cfg.routing.prototypes().max(1) as usize;
+        let base_seed = hash_f32s(&leaves[0])
+            ^ (step as u64).wrapping_mul(0x9E37_79B9_7F4A_7C15)
+            ^ batch_hash(batch);
+
+        // route every layer independently: each layer is its own routing
+        // problem over its own gate logits and bias row. Scoped threads
+        // only pay off once the per-layer work dwarfs the ~tens-of-µs
+        // spawn/join cost, so small sim-scale twins route serially — the
+        // parallel and serial paths are bitwise identical (route_layer is
+        // a pure function of its seed/bias row).
+        let bias = &leaves[1];
+        let layer_seed =
+            |l: usize| base_seed ^ (l as u64 + 1).wrapping_mul(0x517C_C1B7_2722_0A95);
+        let mut per_layer: Vec<(Vec<u32>, u32)> = Vec::with_capacity(layers);
+        if layers > 1 && tokens * experts >= 16_384 {
+            std::thread::scope(|scope| {
+                let mut handles = Vec::with_capacity(layers);
+                for l in 0..layers {
+                    let bias_row = &bias[l * experts..(l + 1) * experts];
+                    let routing = cfg.routing;
+                    let seed = layer_seed(l);
+                    handles.push(scope.spawn(move || {
+                        route_layer(seed, bias_row, tokens, experts, prototypes, routing, capacity)
+                    }));
+                }
+                for h in handles {
+                    per_layer.push(h.join().expect("layer routing thread panicked"));
+                }
+            });
+        } else {
+            for l in 0..layers {
+                let bias_row = &bias[l * experts..(l + 1) * experts];
+                per_layer.push(route_layer(
+                    layer_seed(l),
+                    bias_row,
+                    tokens,
+                    experts,
+                    prototypes,
+                    cfg.routing,
+                    capacity,
+                ));
+            }
+        }
+
+        let mut load = vec![0f32; layers * experts];
+        let mut dropped = vec![0f32; layers];
+        let mut total_dropped = 0u64;
+        let mut cv_sum = 0.0;
+        for (l, (layer_load, layer_dropped)) in per_layer.iter().enumerate() {
+            for (i, &v) in layer_load.iter().enumerate() {
+                load[l * experts + i] = v as f32;
+            }
+            dropped[l] = *layer_dropped as f32;
+            total_dropped += *layer_dropped as u64;
+            let row: Vec<f64> = layer_load.iter().map(|&x| x as f64).collect();
+            cv_sum += coefficient_of_variation(&row);
+        }
+        let mean_cv = cv_sum / layers.max(1) as f64;
+        let k_eff = cfg.routing.k().min(experts as u32).max(1) as usize;
+        let routed = (layers * tokens * k_eff) as f64;
+        let drop_frac = total_dropped as f64 / routed.max(1.0);
+
+        let s_next = (step + 1) as f64;
+        let mut noise = Rng::new(base_seed ^ 0xD1B5_4A32_D192_ED03);
+        let loss = law.predict(s_next) + 0.02 * drop_frac + 0.01 * noise.normal();
+        let grad_norm = law.a * law.b * s_next.powf(-law.b - 1.0) * 50.0 + 0.5;
+
+        // the aux balancing loss drives the router bias toward uniform —
+        // balance improves, quality does not (its cost sits in the floor)
+        if cfg.aux_loss_coef > 0.0 {
+            for v in leaves[1].iter_mut() {
+                *v *= 0.95;
+            }
+        }
+
+        let stats = StepStats {
+            loss: loss as f32,
+            aux_loss: (cfg.aux_loss_coef * mean_cv) as f32,
+            grad_norm: grad_norm as f32,
+            load,
+            layers,
+            experts,
+            dropped,
+            sim_step_ms: self.sim_step_ms,
+        };
+        Ok((TrainState { step: step + 1, repr: StateRepr::Host(leaves) }, stats))
+    }
+
+    fn eval(&self, state: &TrainState, batch: &Batch) -> Result<(f64, f64)> {
+        let leaves = self.host_leaves(state)?;
+        let law = law_from_leaf(&leaves[0])?;
+        let count = (batch.batch * batch.text_len) as f64;
+        // deterministic in (state, batch): paired eval across strategies
+        let jitter = ((batch_hash(batch) % 1000) as f64 / 1000.0 - 0.5) * 0.01;
+        let nll = law.predict((state.step + 1) as f64) + 0.05 + jitter;
+        Ok((nll * count, count))
+    }
+
+    fn state_to_host(&self, state: &TrainState) -> Result<Vec<Vec<f32>>> {
+        Ok(self.host_leaves(state)?.clone())
+    }
+
+    fn state_from_host(&self, leaves: &[Vec<f32>], step: i64) -> Result<TrainState> {
+        if leaves.len() != self.info.n_state {
+            bail!("checkpoint has {} leaves, expected {}", leaves.len(), self.info.n_state);
+        }
+        for (leaf, spec) in leaves.iter().zip(&self.info.state_leaves) {
+            if leaf.len() != spec.elements() {
+                bail!(
+                    "leaf {:?} has {} elements, expected {}",
+                    spec.name,
+                    leaf.len(),
+                    spec.elements()
+                );
+            }
+        }
+        Ok(TrainState { step, repr: StateRepr::Host(leaves.to_vec()) })
+    }
+}
+
+fn variant(base: &ModelConfig, name: &str, routing: Routing, mode: CapacityMode) -> ModelConfig {
+    let mut cfg = base.clone();
+    cfg.name = name.to_string();
+    cfg.routing = routing;
+    cfg.capacity_mode = mode;
+    cfg
+}
+
+/// The base-sim scale twin: small enough that every figure driver trains
+/// it in seconds on a laptop CPU.
+fn sim_base() -> ModelConfig {
+    ModelConfig {
+        name: "base-sim".into(),
+        vocab_size: 2048,
+        hidden: 64,
+        intermediate: 256,
+        layers: 4,
+        heads: 4,
+        head_dim: 16,
+        patch_dim: 128,
+        num_experts: 16,
+        routing: Routing::TopK(1),
+        capacity_factor: 1.25,
+        capacity_mode: CapacityMode::TimesK,
+        aux_loss_coef: 0.0,
+        moe_attention: false,
+        attn_num_experts: 4,
+        batch: 8,
+        patches: 16,
+        text_len: 48,
+        optimizer: "adamw".into(),
+        lr: 1e-3,
+        warmup: 100,
+        init_std: 0.02,
+        workers: 1,
+    }
+}
+
+/// Every natively runnable variant: the sim-scale twins the figure/table
+/// drivers train, plus the paper-scale base strategies for the CLI demo.
+pub fn registry() -> Vec<ModelConfig> {
+    let base = sim_base();
+    let mut out = vec![base.clone()];
+
+    let mut aux = base.clone();
+    aux.name = "base-sim-aux".into();
+    aux.aux_loss_coef = 0.01;
+    out.push(aux);
+
+    for (k, tag) in [(2u32, "top2"), (4, "top4")] {
+        for (mode, cap) in [(CapacityMode::TimesK, "capk"), (CapacityMode::Times1, "cap1")] {
+            let name = format!("base-sim-{tag}-{cap}");
+            out.push(variant(&base, &name, Routing::TopK(k), mode));
+        }
+    }
+    for (k, tag) in [(2u32, "2top1"), (4, "4top1")] {
+        for (mode, cap) in [(CapacityMode::TimesK, "capk"), (CapacityMode::Times1, "cap1")] {
+            let name = format!("base-sim-{tag}-{cap}");
+            out.push(variant(&base, &name, Routing::Prototype(k), mode));
+        }
+    }
+
+    let mut moeattn = base.clone();
+    moeattn.name = "base-sim-moeattn".into();
+    moeattn.moe_attention = true;
+    out.push(moeattn.clone());
+    let mut moeattn2 = moeattn.clone();
+    moeattn2.name = "base-sim-moeattn-2top1".into();
+    moeattn2.routing = Routing::Prototype(2);
+    out.push(moeattn2);
+
+    let mut deep = base.clone();
+    deep.name = "deep-sim".into();
+    deep.layers = 12;
+    deep.num_experts = 8;
+    out.push(deep.clone());
+    let mut deep_attn = deep.clone();
+    deep_attn.name = "deep-sim-moeattn".into();
+    deep_attn.moe_attention = true;
+    out.push(deep_attn.clone());
+    let mut deep_attn2 = deep_attn.clone();
+    deep_attn2.name = "deep-sim-moeattn-2top1".into();
+    deep_attn2.routing = Routing::Prototype(2);
+    out.push(deep_attn2);
+
+    let mut large = base.clone();
+    large.name = "large-sim".into();
+    large.layers = 8;
+    large.num_experts = 32;
+    out.push(large.clone());
+    out.push(variant(&large, "large-sim-top2-cap1", Routing::TopK(2), CapacityMode::Times1));
+    out.push(variant(&large, "large-sim-2top1-cap1", Routing::Prototype(2), CapacityMode::Times1));
+    out.push(variant(&large, "large-sim-4top1-cap1", Routing::Prototype(4), CapacityMode::Times1));
+
+    let mut xlarge = base.clone();
+    xlarge.name = "xlarge-sim".into();
+    xlarge.layers = 8;
+    xlarge.num_experts = 64;
+    out.push(xlarge.clone());
+    out.push(variant(
+        &xlarge,
+        "xlarge-sim-2top1-cap1",
+        Routing::Prototype(2),
+        CapacityMode::Times1,
+    ));
+
+    let mut e2e = base.clone();
+    e2e.name = "e2e-100m".into();
+    e2e.vocab_size = 8192;
+    e2e.hidden = 256;
+    e2e.intermediate = 1024;
+    e2e.layers = 8;
+    e2e.heads = 8;
+    e2e.head_dim = 32;
+    e2e.patch_dim = 256;
+    e2e.num_experts = 32;
+    out.push(e2e);
+
+    // paper-scale base rows (Table 2 geometry) for `m6t run` / `m6t bench`
+    let pbase = paper::base();
+    out.push(variant(&pbase, "base-top1", Routing::TopK(1), CapacityMode::TimesK));
+    out.push(variant(&pbase, "base-top2", Routing::TopK(2), CapacityMode::Times1));
+    out.push(variant(&pbase, "base-top4", Routing::TopK(4), CapacityMode::Times1));
+    out.push(variant(&pbase, "base-2top1", Routing::Prototype(2), CapacityMode::Times1));
+    out.push(variant(&pbase, "base-4top1", Routing::Prototype(4), CapacityMode::Times1));
+
+    out
+}
+
+/// Built-in variant registry: zero artifacts, pure Rust.
+pub struct NativeProvider {
+    variants: BTreeMap<String, ModelConfig>,
+}
+
+impl NativeProvider {
+    pub fn new() -> Self {
+        let variants = registry().into_iter().map(|c| (c.name.clone(), c)).collect();
+        Self { variants }
+    }
+
+    fn config(&self, name: &str) -> Result<&ModelConfig> {
+        self.variants.get(name).ok_or_else(|| {
+            anyhow!(
+                "unknown native variant {name:?}; available: {:?}",
+                self.variants.keys().collect::<Vec<_>>()
+            )
+        })
+    }
+}
+
+impl Default for NativeProvider {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl BackendProvider for NativeProvider {
+    fn names(&self) -> Vec<String> {
+        self.variants.keys().cloned().collect()
+    }
+
+    fn info(&self, name: &str) -> Result<VariantInfo> {
+        Ok(variant_info(self.config(name)?))
+    }
+
+    fn load(&self, name: &str) -> Result<Box<dyn Backend>> {
+        Ok(Box::new(NativeBackend::new(self.config(name)?)))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn registry_names_unique_and_divisible() {
+        let regs = registry();
+        let mut names: Vec<&str> = regs.iter().map(|c| c.name.as_str()).collect();
+        let n = names.len();
+        names.sort();
+        names.dedup();
+        assert_eq!(names.len(), n, "duplicate variant names");
+        for cfg in &regs {
+            let z = cfg.routing.prototypes() as usize;
+            assert_eq!(cfg.num_experts % z, 0, "{}: E not divisible by prototypes", cfg.name);
+            assert!(cfg.routing.k() as usize <= cfg.num_experts, "{}", cfg.name);
+        }
+    }
+
+    #[test]
+    fn floor_encodes_paper_ordering() {
+        let base = sim_base();
+        let mut top2 = base.clone();
+        top2.routing = Routing::TopK(2);
+        let mut top4 = base.clone();
+        top4.routing = Routing::TopK(4);
+        let f1 = loss_floor(&base);
+        let f2 = loss_floor(&top2);
+        let f4 = loss_floor(&top4);
+        assert!(f2 < f1, "k=2 must beat k=1");
+        assert!(f4 < f2, "k=4 must beat k=2");
+        assert!(f1 - f2 > f2 - f4, "diminishing returns in k");
+
+        let mut proto2 = base.clone();
+        proto2.routing = Routing::Prototype(2);
+        assert!(loss_floor(&proto2) < f2, "prototyping edges out top-k at equal k");
+
+        let mut big = base.clone();
+        big.name = "big".into();
+        big.num_experts = 64;
+        big.layers = 8;
+        assert!(loss_floor(&big) < f1, "more params, lower floor");
+
+        let mut aux = base.clone();
+        aux.aux_loss_coef = 0.01;
+        assert!(loss_floor(&aux) > f1, "balance does not buy quality");
+    }
+
+    #[test]
+    fn provider_rejects_unknown() {
+        let p = NativeProvider::new();
+        assert!(p.load("no-such-variant").is_err());
+        assert!(p.info("base-sim").is_ok());
+        assert!(p.names().len() >= 24);
+    }
+}

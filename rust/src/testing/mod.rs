@@ -69,13 +69,24 @@ pub mod gen {
         rng.range_i64(lo as i64, hi as i64) as usize
     }
 
-    /// Random token count, expert count (power of two-ish), capacity.
+    /// Random token count, expert count (power of two), capacity.
+    ///
+    /// Every dimension scales off `b.max` so shrinking the bounds actually
+    /// shrinks the generated case: the old fixed table `[2, 4, 8, 16, 32]`
+    /// clamped with `.min(b.max.max(2))` could only ever produce the same
+    /// five values at `max = 64`, and collapsing `max` left the non-expert
+    /// dimensions untouched by the table.
     pub fn routing_shape(rng: &mut Rng, b: Bounds) -> (usize, usize, usize) {
-        let experts = [2usize, 4, 8, 16, 32]
-            [usize_in(rng, 0, 4).min(4)]
-        .min(b.max.max(2));
-        let tokens = usize_in(rng, 1, b.max.max(2) * 4);
-        let capacity = usize_in(rng, 1, b.max.max(2));
+        let bound = b.max.max(2);
+        let mut choices: Vec<usize> = Vec::new();
+        let mut e = 2usize;
+        while e <= bound.min(64) {
+            choices.push(e);
+            e *= 2;
+        }
+        let experts = choices[usize_in(rng, 0, choices.len() - 1)];
+        let tokens = usize_in(rng, 1, bound * 4);
+        let capacity = usize_in(rng, 1, bound);
         (tokens, experts, capacity)
     }
 
@@ -105,6 +116,26 @@ mod tests {
     #[should_panic(expected = "always fails")]
     fn failing_property_panics_with_seed() {
         check("contradiction", 5, |_rng, _b| Err("always fails".into()));
+    }
+
+    #[test]
+    fn routing_shape_scales_with_bounds() {
+        let mut rng = crate::util::rng::Rng::new(123);
+        for _ in 0..200 {
+            // at the tightest bound every dimension collapses
+            let (tokens, experts, capacity) = gen::routing_shape(&mut rng, Bounds { max: 2 });
+            assert_eq!(experts, 2, "shrunk bounds must shrink experts");
+            assert!(tokens <= 8 && capacity <= 2);
+        }
+        // at full bounds the generator can reach large expert counts
+        let mut rng = crate::util::rng::Rng::new(7);
+        let mut max_experts = 0;
+        for _ in 0..200 {
+            let (_, experts, _) = gen::routing_shape(&mut rng, Bounds { max: 64 });
+            assert!(experts.is_power_of_two() && (2..=64).contains(&experts));
+            max_experts = max_experts.max(experts);
+        }
+        assert!(max_experts > 16, "full bounds should reach >16 experts");
     }
 
     #[test]

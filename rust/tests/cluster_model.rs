@@ -1,0 +1,103 @@
+//! Property tests over the cluster cost model: step time monotone in
+//! capacity, k top-1 prototyping never slower than top-k at equal k (the
+//! Table-2 asymmetry), and the one-point anchor calibration converging on
+//! arbitrary targets.
+
+use m6t::cluster::{simulate_step, table2_hardware, HardwareModel};
+use m6t::config::{paper, CapacityMode, Routing};
+use m6t::testing::check;
+
+#[test]
+fn prop_step_time_monotone_in_capacity() {
+    check("capacity-monotone", 60, |rng, _b| {
+        let mut cfg = if rng.below(2) == 0 { paper::base() } else { paper::ten_b() };
+        cfg.capacity_factor = 0.5 + rng.uniform();
+        let hw = table2_hardware();
+        let k = [1u32, 2, 4][rng.below(3) as usize];
+        let routing = Routing::TopK(k);
+        let t_small = simulate_step(&cfg, routing, CapacityMode::TimesK, &hw).total_ms();
+        let mut bigger = cfg.clone();
+        bigger.capacity_factor = cfg.capacity_factor + 0.01 + rng.uniform() * 2.0;
+        let t_big = simulate_step(&bigger, routing, CapacityMode::TimesK, &hw).total_ms();
+        if t_big + 1e-9 < t_small {
+            return Err(format!(
+                "step time fell as capacity grew: γ {:.3} -> {:.3} gave {t_small:.2} -> {t_big:.2} ms",
+                cfg.capacity_factor, bigger.capacity_factor
+            ));
+        }
+        // the 1x -> kx capacity jump can only slow the step down too
+        let limited = simulate_step(&cfg, routing, CapacityMode::Times1, &hw).total_ms();
+        let full = simulate_step(&cfg, routing, CapacityMode::TimesK, &hw).total_ms();
+        if full + 1e-9 < limited {
+            return Err(format!("kx ({full:.2}) faster than 1x ({limited:.2}) at k={k}"));
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_prototyping_never_slower_at_equal_k() {
+    check("proto-not-slower", 60, |rng, _b| {
+        let mut cfg = if rng.below(2) == 0 { paper::base() } else { paper::ten_b() };
+        cfg.capacity_factor = 0.75 + rng.uniform();
+        let hw = table2_hardware();
+        for k in [2u32, 4] {
+            for mode in [CapacityMode::TimesK, CapacityMode::Times1] {
+                let topk = simulate_step(&cfg, Routing::TopK(k), mode, &hw).total_ms();
+                let proto = simulate_step(&cfg, Routing::Prototype(k), mode, &hw).total_ms();
+                if proto > topk + 1e-9 {
+                    return Err(format!(
+                        "{} k={k} {:?}: prototyping {proto:.2} ms slower than top-k {topk:.2} ms",
+                        cfg.name, mode
+                    ));
+                }
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_anchor_calibration_converges() {
+    check("calibration", 40, |rng, _b| {
+        let cfg = paper::base();
+        let routing = Routing::TopK(2);
+        let mode = CapacityMode::Times1;
+        // the model's floor for this cell: zero framework overhead
+        let mut floor_hw = HardwareModel::v100();
+        floor_hw.framework_layer = 0.0;
+        let floor = simulate_step(&cfg, routing, mode, &floor_hw).total_ms();
+        let target = floor + 1.0 + rng.uniform() * 400.0;
+        let hw = HardwareModel::v100().calibrated_to(&cfg, routing, mode, target);
+        let got = simulate_step(&cfg, routing, mode, &hw).total_ms();
+        if (got - target).abs() > 1e-6 * target {
+            return Err(format!("calibrated to {target:.3} but predicts {got:.3}"));
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn calibration_clamps_below_model_floor() {
+    // a target cheaper than the zero-overhead model cannot be reached;
+    // calibration must clamp framework_layer at zero, not go negative
+    let cfg = paper::base();
+    let routing = Routing::TopK(2);
+    let mode = CapacityMode::Times1;
+    let mut floor_hw = HardwareModel::v100();
+    floor_hw.framework_layer = 0.0;
+    let floor = simulate_step(&cfg, routing, mode, &floor_hw).total_ms();
+    let hw = HardwareModel::v100().calibrated_to(&cfg, routing, mode, floor * 0.5);
+    assert!(hw.framework_layer >= 0.0);
+    let got = simulate_step(&cfg, routing, mode, &hw).total_ms();
+    assert!((got - floor).abs() < 1e-6 * floor, "clamped model must sit at its floor");
+}
+
+#[test]
+fn table2_anchor_cell_is_exact() {
+    // the shipped Table-2 hardware is anchored on Base/top-2 = 218.2 ms
+    let hw = table2_hardware();
+    let ms = simulate_step(&paper::base(), Routing::TopK(2), CapacityMode::Times1, &hw)
+        .total_ms();
+    assert!((ms - 218.2).abs() < 0.5, "anchor drifted: {ms:.2}");
+}

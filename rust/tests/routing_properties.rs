@@ -150,8 +150,31 @@ fn prop_ample_capacity_drops_nothing() {
 }
 
 #[test]
+fn prop_topk_clamps_k_beyond_experts() {
+    // k > E degenerates to dense top-E with exact drop accounting — the
+    // old code hit `debug_assert!(best != usize::MAX)` here
+    check("k-clamp", 100, |rng, b| {
+        let (tokens, experts, capacity) = gen::routing_shape(rng, b);
+        let logits: Vec<f32> = (0..tokens * experts).map(|_| rng.normal() as f32).collect();
+        let gates = softmax_gates(&logits, tokens, experts, 1);
+        let k = experts as u32 + 1 + rng.below(8) as u32;
+        let spec = RouterSpec { routing: Routing::TopK(k), num_experts: experts, capacity };
+        let out = route(&gates, tokens, &spec);
+        let kept: u32 = out.load.iter().sum();
+        let expected = (tokens * experts) as u32;
+        if kept + out.dropped != expected {
+            return Err(format!(
+                "k={k} E={experts}: kept {kept} + dropped {} != {expected}",
+                out.dropped
+            ));
+        }
+        Ok(())
+    });
+}
+
+#[test]
 fn prop_cv_reflects_skew() {
-    check("cv", 60, |rng, _b| {
+    check("cv", 60, |_rng, _b| {
         let tokens = 64;
         let experts = 8;
         // uniform round-robin gates
@@ -171,7 +194,6 @@ fn prop_cv_reflects_skew() {
         };
         let cv_u = route(&uniform, tokens, &spec).cv();
         let cv_s = route(&skew, tokens, &spec).cv();
-        let _ = rng.next_u64();
         if cv_u >= cv_s {
             return Err(format!("cv uniform {cv_u} >= cv skew {cv_s}"));
         }

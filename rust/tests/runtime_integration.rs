@@ -1,58 +1,70 @@
-//! Integration tests over the real artifacts: manifest contract, PJRT
-//! execution, training dynamics, checkpoint round-trip, c_v plausibility.
-//!
-//! Requires `make artifacts` (skipped gracefully if absent). The PJRT
-//! client is `Rc`-based (not `Sync`), so all engine-backed checks run
-//! sequentially inside one test with a single ~30 s compilation.
+//! Integration tests over the native backend: registry contract, routing
+//! accounting, training dynamics, paired eval, checkpoint round-trip, and
+//! the paper's qualitative balance/quality claims — all with **zero
+//! artifacts on disk** (see DESIGN.md §Backends; the PJRT twin of this
+//! suite needs `--features pjrt` plus a vendored xla crate and a compiled
+//! artifact set).
 
 use m6t::coordinator::{Checkpoint, TrainOptions, Trainer};
 use m6t::data::{Batcher, Split};
-use m6t::runtime::{Engine, Manifest, VariantRuntime};
+use m6t::runtime::{Backend, BackendProvider, NativeProvider};
 
-fn artifacts_present() -> bool {
-    std::path::Path::new("artifacts/manifest.json").exists()
+fn quiet(steps: i64) -> TrainOptions {
+    TrainOptions { steps, seed: 42, verbose: false, ..Default::default() }
 }
 
 #[test]
-fn manifest_loads_and_is_consistent() {
-    if !artifacts_present() {
-        eprintln!("skipping: run `make artifacts`");
-        return;
-    }
-    let m = Manifest::load("artifacts").expect("manifest");
-    assert!(m.variants.len() >= 20, "only {} variants", m.variants.len());
-    for (name, v) in &m.variants {
+fn registry_loads_and_is_consistent() {
+    let p = NativeProvider::new();
+    let names = p.names();
+    assert!(names.len() >= 24, "only {} variants", names.len());
+    for name in &names {
+        let v = p.info(name).expect("info");
         assert_eq!(v.n_state, v.n_params + v.n_opt, "{name}");
         assert_eq!(v.state_leaves.len(), v.n_state, "{name}");
-        // rust param accounting must match python's (through the manifest)
+        // native param accounting is the config's own closed form
         assert_eq!(v.config.param_count(), v.param_count, "{name}");
-        // param leaves alone must hold exactly param_count elements
-        let n: usize = v.state_leaves[..v.n_params].iter().map(|l| l.elements()).sum();
-        assert_eq!(n as u64, v.param_count, "{name}");
-        // capacity formula agreement python<->rust
+        // capacity formula agreement registry<->config (Eq. 2)
         assert_eq!(v.config.capacity(), v.capacity, "{name}");
+        // the native state layout: loss-law params + per-layer router bias
+        assert_eq!(v.state_leaves[0].elements(), 3, "{name}");
+        assert_eq!(
+            v.state_leaves[1].elements(),
+            v.config.layers * v.config.num_experts,
+            "{name}"
+        );
+    }
+    // the figure/table drivers' variant names must all resolve
+    for required in [
+        "base-sim",
+        "base-sim-aux",
+        "base-sim-top2-capk",
+        "base-sim-top2-cap1",
+        "base-sim-2top1-cap1",
+        "base-sim-moeattn",
+        "deep-sim",
+        "large-sim",
+        "xlarge-sim-2top1-cap1",
+        "e2e-100m",
+        "base-top2",
+    ] {
+        assert!(names.iter().any(|n| n == required), "missing {required}");
     }
 }
 
 #[test]
-fn engine_end_to_end() {
-    if !artifacts_present() {
-        eprintln!("skipping: run `make artifacts`");
-        return;
-    }
-    let engine = Engine::cpu().expect("pjrt cpu client");
-    let manifest = Manifest::load("artifacts").expect("manifest");
-    let info = manifest.variant("base-sim").expect("base-sim");
-    let rt = engine.load(info).expect("compile base-sim");
+fn native_end_to_end() {
+    let provider = NativeProvider::new();
+    let backend = provider.load("base-sim").expect("load base-sim");
 
-    check_init_determinism(&rt);
-    check_step_dynamics(&rt);
-    check_eval_pairing(&rt);
-    check_cv_plausible(&rt);
-    check_checkpoint_roundtrip(&engine, rt);
+    check_init_determinism(backend.as_ref());
+    check_step_dynamics(backend.as_ref());
+    check_eval_pairing(backend.as_ref());
+    check_cv_plausible(backend.as_ref());
+    check_checkpoint_roundtrip(&provider);
 }
 
-fn check_init_determinism(rt: &VariantRuntime) {
+fn check_init_determinism(rt: &dyn Backend) {
     let a = rt.init_state(7).unwrap();
     let b = rt.init_state(7).unwrap();
     let c = rt.init_state(8).unwrap();
@@ -63,8 +75,9 @@ fn check_init_determinism(rt: &VariantRuntime) {
     assert_ne!(ha, hc, "different seed, different init");
 }
 
-fn check_step_dynamics(rt: &VariantRuntime) {
-    let cfg = &rt.info.config;
+fn check_step_dynamics(rt: &dyn Backend) {
+    let cfg = &rt.info().config;
+    let capacity = rt.info().capacity;
     let mut state = rt.init_state(42).unwrap();
     let mut batcher = Batcher::for_config(cfg, Split::Train, 42);
     let mut first = f32::NAN;
@@ -85,54 +98,113 @@ fn check_step_dynamics(rt: &VariantRuntime) {
         assert!(stats.loss.is_finite());
         assert!(stats.grad_norm > 0.0);
         // per-expert load never exceeds capacity
-        assert!(stats.load.iter().all(|&l| (l as usize) <= rt.info.capacity));
+        assert!(stats.load.iter().all(|&l| (l as usize) <= capacity));
+        // the simulated step latency is a real, positive model output
+        assert!(stats.sim_step_ms > 0.0 && stats.sim_step_ms.is_finite());
     }
     assert!(last <= first + 0.05, "loss exploded: {first} -> {last}");
+    assert!(last < first, "8 steps of power-law descent must reduce loss");
 }
 
-fn check_eval_pairing(rt: &VariantRuntime) {
+fn check_eval_pairing(rt: &dyn Backend) {
     let state = rt.init_state(1).unwrap();
-    let mut b1 = Batcher::for_config(&rt.info.config, Split::Eval, 42);
-    let mut b2 = Batcher::for_config(&rt.info.config, Split::Eval, 42);
+    let mut b1 = Batcher::for_config(&rt.info().config, Split::Eval, 42);
+    let mut b2 = Batcher::for_config(&rt.info().config, Split::Eval, 42);
     let (nll1, c1) = rt.eval(&state, &b1.next_batch()).unwrap();
     let (nll2, c2) = rt.eval(&state, &b2.next_batch()).unwrap();
     assert_eq!(nll1, nll2);
     assert_eq!(c1, c2);
     // PPL at init is near the uniform prior over the vocab
     let ppl = (nll1 / c1).exp();
-    let vocab = rt.info.config.vocab_size as f64;
-    assert!(ppl > vocab * 0.3 && ppl < vocab * 3.0, "init ppl {ppl}");
+    let vocab = rt.info().config.vocab_size as f64;
+    assert!(ppl > vocab * 0.3 && ppl < vocab * 3.0, "init ppl {ppl} vs vocab {vocab}");
 }
 
-fn check_cv_plausible(rt: &VariantRuntime) {
+fn check_cv_plausible(rt: &dyn Backend) {
     let state = rt.init_state(3).unwrap();
-    let mut batcher = Batcher::for_config(&rt.info.config, Split::Train, 3);
+    let mut batcher = Batcher::for_config(&rt.info().config, Split::Train, 3);
     let (_, stats) = rt.step(state, &batcher.next_batch()).unwrap();
     let cv = stats.cv_per_layer();
-    assert_eq!(cv.len(), rt.info.config.layers);
+    assert_eq!(cv.len(), rt.info().config.layers);
     for (l, c) in cv.iter().enumerate() {
         assert!(c.is_finite() && *c >= 0.0, "layer {l} cv {c}");
         assert!(*c < 4.0, "layer {l} cv {c} absurdly high");
     }
 }
 
-fn check_checkpoint_roundtrip(engine: &Engine, rt: VariantRuntime) {
-    let opts = TrainOptions { steps: 3, seed: 42, verbose: false, ..Default::default() };
-    let trainer = Trainer::new(engine, rt, opts);
+fn check_checkpoint_roundtrip(provider: &NativeProvider) {
+    let trainer = Trainer::new(provider.load("base-sim").unwrap(), quiet(3));
     let (out1, state) = trainer.train().unwrap();
     let ck = trainer.snapshot(&state).unwrap();
-    let path = std::env::temp_dir().join("m6t-int-ckpt.bin");
+    let path = std::env::temp_dir().join("m6t-native-int-ckpt.bin");
     ck.save(&path).unwrap();
     let ck2 = Checkpoint::load(&path).unwrap();
     assert_eq!(ck2.step, out1.final_state_step);
     let restored = trainer.restore(&ck2).unwrap();
     // continuing from the checkpoint reproduces the same next loss as
     // continuing in-memory (bitwise determinism of the whole stack)
-    let mut batcher = Batcher::for_config(&trainer.runtime.info.config, Split::Train, 42);
-    batcher.seek(state.step as u64 * trainer.runtime.info.config.batch as u64);
+    let cfg = &trainer.info().config;
+    let mut batcher = Batcher::for_config(cfg, Split::Train, 42);
+    batcher.seek(state.step as u64 * cfg.batch as u64);
     let batch = batcher.next_batch();
-    let (_, stats_mem) = trainer.runtime.step(state, &batch).unwrap();
-    let (_, stats_ck) = trainer.runtime.step(restored, &batch).unwrap();
+    let (_, stats_mem) = trainer.backend.step(state, &batch).unwrap();
+    let (_, stats_ck) = trainer.backend.step(restored, &batch).unwrap();
     assert_eq!(stats_mem.loss, stats_ck.loss);
+    assert_eq!(stats_mem.load, stats_ck.load);
     let _ = std::fs::remove_file(path);
+}
+
+/// Fig 1's finding: the aux loss buys balance (lower c_v), not quality.
+#[test]
+fn aux_loss_balances_but_does_not_win() {
+    let provider = NativeProvider::new();
+    let steps = 60;
+    let (base_out, _) = Trainer::new(provider.load("base-sim").unwrap(), quiet(steps))
+        .train()
+        .unwrap();
+    let (aux_out, _) = Trainer::new(provider.load("base-sim-aux").unwrap(), quiet(steps))
+        .train()
+        .unwrap();
+    let layers = provider.info("base-sim").unwrap().config.layers;
+    let tail_cv = |log: &m6t::metrics::RunLog| -> f64 {
+        (0..layers).map(|l| log.tail_cv(l, 10)).sum::<f64>() / layers as f64
+    };
+    let cv_base = tail_cv(&base_out.log);
+    let cv_aux = tail_cv(&aux_out.log);
+    assert!(
+        cv_aux < cv_base * 0.7,
+        "aux loss must visibly balance the load: base {cv_base:.3} aux {cv_aux:.3}"
+    );
+    assert!(
+        aux_out.log.tail_loss(10) >= base_out.log.tail_loss(10) - 0.01,
+        "balance must not buy quality (paper Fig 1)"
+    );
+}
+
+/// Fig 3's finding at small scale: k = 2 beats k = 1; limited capacity
+/// drops tokens while full capacity does not.
+#[test]
+fn top2_beats_top1_and_capacity_governs_drops() {
+    let provider = NativeProvider::new();
+    let steps = 60;
+    let (top1, _) = Trainer::new(provider.load("base-sim").unwrap(), quiet(steps))
+        .train()
+        .unwrap();
+    let (top2_capk, _) =
+        Trainer::new(provider.load("base-sim-top2-capk").unwrap(), quiet(steps))
+            .train()
+            .unwrap();
+    let (top2_cap1, _) =
+        Trainer::new(provider.load("base-sim-top2-cap1").unwrap(), quiet(steps))
+            .train()
+            .unwrap();
+    assert!(
+        top2_capk.log.tail_loss(10) < top1.log.tail_loss(10),
+        "top-2 (capacity kx) must out-train top-1: {} vs {}",
+        top2_capk.log.tail_loss(10),
+        top1.log.tail_loss(10)
+    );
+    let drops_cap1: f64 =
+        top2_cap1.log.records.iter().map(|r| r.dropped).sum::<f64>();
+    assert!(drops_cap1 > 0.0, "capacity 1x with k=2 must drop tokens");
 }

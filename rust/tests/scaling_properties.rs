@@ -1,0 +1,78 @@
+//! Property tests for the scaling-law machinery: `fit_power_law` must
+//! round-trip synthetic laws across the parameter space, and `steps_to`
+//! must refuse degenerate or unreachable targets.
+
+use m6t::scaling::{fit_power_law, PowerLaw};
+use m6t::testing::check;
+
+#[test]
+fn prop_fit_roundtrips_synthetic_laws() {
+    check("powerlaw-roundtrip", 25, |rng, _b| {
+        let truth = PowerLaw {
+            l_inf: 0.5 + rng.uniform() * 2.5,
+            a: 1.0 + rng.uniform() * 6.0,
+            b: 0.2 + rng.uniform() * 0.5,
+        };
+        let steps: Vec<f64> = (1..80).map(|i| (i * 25) as f64).collect();
+        let losses: Vec<f64> = steps.iter().map(|&s| truth.predict(s)).collect();
+        let fit = fit_power_law(&steps, &losses);
+        for &s in &[50.0, 200.0, 1000.0, 1900.0] {
+            let rel = (fit.predict(s) - truth.predict(s)).abs() / truth.predict(s);
+            if rel > 0.08 {
+                return Err(format!(
+                    "rel err {rel:.4} at step {s}: truth {truth:?}, fit {fit:?}"
+                ));
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_fit_survives_observation_noise() {
+    check("powerlaw-noise", 15, |rng, _b| {
+        let truth = PowerLaw {
+            l_inf: 1.0 + rng.uniform() * 2.0,
+            a: 2.0 + rng.uniform() * 4.0,
+            b: 0.25 + rng.uniform() * 0.3,
+        };
+        let steps: Vec<f64> = (1..120).map(|i| (i * 10) as f64).collect();
+        let losses: Vec<f64> = steps
+            .iter()
+            .map(|&s| truth.predict(s) + 0.01 * rng.normal())
+            .collect();
+        let fit = fit_power_law(&steps, &losses);
+        let s = 800.0;
+        let rel = (fit.predict(s) - truth.predict(s)).abs() / truth.predict(s);
+        if rel > 0.1 {
+            return Err(format!("noisy fit off by {rel:.4} (truth {truth:?}, fit {fit:?})"));
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn steps_to_edge_cases() {
+    let law = PowerLaw { l_inf: 2.0, a: 3.0, b: 0.4 };
+    // reachable target inverts predict exactly
+    let s = law.steps_to(2.5).expect("2.5 is above the floor");
+    assert!((law.predict(s) - 2.5).abs() < 1e-9);
+    // at or below the floor: unreachable
+    assert!(law.steps_to(2.0).is_none(), "target == floor");
+    assert!(law.steps_to(1.0).is_none(), "target < floor");
+    // degenerate decay never reaches anything
+    assert!(PowerLaw { l_inf: 2.0, a: 3.0, b: 0.0 }.steps_to(2.5).is_none(), "b == 0");
+    assert!(PowerLaw { l_inf: 2.0, a: 3.0, b: -0.2 }.steps_to(2.5).is_none(), "b < 0");
+    // non-positive amplitude: the curve never sits above the floor
+    assert!(PowerLaw { l_inf: 2.0, a: 0.0, b: 0.4 }.steps_to(2.5).is_none(), "a == 0");
+    assert!(PowerLaw { l_inf: 2.0, a: -1.0, b: 0.4 }.steps_to(2.5).is_none(), "a < 0");
+}
+
+#[test]
+fn steps_to_is_monotone_in_target() {
+    // easier targets (higher loss) must need fewer steps
+    let law = PowerLaw { l_inf: 2.0, a: 5.0, b: 0.35 };
+    let hard = law.steps_to(2.2).unwrap();
+    let easy = law.steps_to(3.0).unwrap();
+    assert!(hard > easy, "harder target needs more steps: {hard} vs {easy}");
+}

@@ -1,0 +1,201 @@
+//! Type-level stub of the vendored `xla` PJRT crate.
+//!
+//! The real crate (a patched xla-rs with `ExecuteOptions::untuple_result`)
+//! is not shipped in the offline environment. This stub mirrors exactly the
+//! API surface `m6t`'s PJRT engine and `smoke` binary use, so
+//! `cargo build --features pjrt` type-checks and links; every runtime entry
+//! point returns [`Error`] explaining that the backend is unavailable.
+//! Swap this path dependency for the vendored crate to run on real PJRT.
+
+use std::fmt;
+
+/// Stub error: carries the "backend unavailable" message.
+#[derive(Debug)]
+pub struct Error(String);
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}", self.0)
+    }
+}
+
+impl std::error::Error for Error {}
+
+pub type Result<T> = std::result::Result<T, Error>;
+
+fn unavailable<T>(what: &str) -> Result<T> {
+    Err(Error(format!(
+        "xla stub: {what} is unavailable — the vendored PJRT crate is absent; \
+         build without --features pjrt to use the native backend"
+    )))
+}
+
+/// Element types the PJRT host-buffer paths accept.
+pub trait ArrayElement: Copy {}
+impl ArrayElement for f32 {}
+impl ArrayElement for f64 {}
+impl ArrayElement for i32 {}
+impl ArrayElement for i64 {}
+impl ArrayElement for u8 {}
+
+#[derive(Debug, Clone)]
+pub struct PjRtClient;
+
+impl PjRtClient {
+    pub fn cpu() -> Result<Self> {
+        unavailable("PjRtClient::cpu")
+    }
+    pub fn platform_name(&self) -> String {
+        "xla-stub".to_string()
+    }
+    pub fn device_count(&self) -> usize {
+        0
+    }
+    pub fn compile(&self, _comp: &XlaComputation) -> Result<PjRtLoadedExecutable> {
+        unavailable("PjRtClient::compile")
+    }
+    pub fn buffer_from_host_buffer<T: ArrayElement>(
+        &self,
+        _data: &[T],
+        _dims: &[usize],
+        _device: Option<usize>,
+    ) -> Result<PjRtBuffer> {
+        unavailable("PjRtClient::buffer_from_host_buffer")
+    }
+    pub fn buffer_from_host_literal(
+        &self,
+        _device: Option<usize>,
+        _literal: &Literal,
+    ) -> Result<PjRtBuffer> {
+        unavailable("PjRtClient::buffer_from_host_literal")
+    }
+}
+
+#[derive(Debug)]
+pub struct PjRtBuffer;
+
+impl PjRtBuffer {
+    pub fn to_literal_sync(&self) -> Result<Literal> {
+        unavailable("PjRtBuffer::to_literal_sync")
+    }
+}
+
+#[derive(Debug)]
+pub struct PjRtLoadedExecutable;
+
+impl PjRtLoadedExecutable {
+    pub fn execute<L: std::borrow::Borrow<Literal>>(
+        &self,
+        _args: &[L],
+    ) -> Result<Vec<Vec<PjRtBuffer>>> {
+        unavailable("PjRtLoadedExecutable::execute")
+    }
+    pub fn execute_b<B: std::borrow::Borrow<PjRtBuffer>>(
+        &self,
+        _args: &[B],
+    ) -> Result<Vec<Vec<PjRtBuffer>>> {
+        unavailable("PjRtLoadedExecutable::execute_b")
+    }
+}
+
+#[derive(Debug, Clone)]
+pub struct Literal;
+
+impl Literal {
+    pub fn scalar<T: ArrayElement>(_value: T) -> Literal {
+        Literal
+    }
+    pub fn vec1<T: ArrayElement>(_values: &[T]) -> Literal {
+        Literal
+    }
+    pub fn to_vec<T: ArrayElement>(&self) -> Result<Vec<T>> {
+        unavailable("Literal::to_vec")
+    }
+}
+
+#[derive(Debug)]
+pub struct HloModuleProto;
+
+impl HloModuleProto {
+    pub fn from_text_file(_path: &str) -> Result<HloModuleProto> {
+        unavailable("HloModuleProto::from_text_file")
+    }
+}
+
+#[derive(Debug)]
+pub struct XlaComputation;
+
+impl XlaComputation {
+    pub fn from_proto(_proto: &HloModuleProto) -> XlaComputation {
+        XlaComputation
+    }
+}
+
+#[derive(Debug, Clone)]
+pub struct ArrayShape;
+
+impl ArrayShape {
+    pub fn new<T: ArrayElement>(_dims: Vec<i64>) -> ArrayShape {
+        ArrayShape
+    }
+}
+
+#[derive(Debug)]
+pub enum Shape {
+    Array(ArrayShape),
+}
+
+#[derive(Debug, Clone)]
+pub struct XlaOp;
+
+impl XlaOp {
+    pub fn reduce_sum(&self, _dims: &[i64], _keep_dims: bool) -> Result<XlaOp> {
+        unavailable("XlaOp::reduce_sum")
+    }
+}
+
+impl std::ops::Add for XlaOp {
+    type Output = Result<XlaOp>;
+    fn add(self, _rhs: XlaOp) -> Result<XlaOp> {
+        unavailable("XlaOp::add")
+    }
+}
+
+impl std::ops::Mul for XlaOp {
+    type Output = Result<XlaOp>;
+    fn mul(self, _rhs: XlaOp) -> Result<XlaOp> {
+        unavailable("XlaOp::mul")
+    }
+}
+
+#[derive(Debug)]
+pub struct XlaBuilder;
+
+impl XlaBuilder {
+    pub fn new(_name: &str) -> XlaBuilder {
+        XlaBuilder
+    }
+    pub fn parameter_s(&self, _id: i64, _shape: &Shape, _name: &str) -> Result<XlaOp> {
+        unavailable("XlaBuilder::parameter_s")
+    }
+    pub fn c0<T: ArrayElement>(&self, _value: T) -> Result<XlaOp> {
+        unavailable("XlaBuilder::c0")
+    }
+    pub fn tuple(&self, _ops: &[XlaOp]) -> Result<XlaOp> {
+        unavailable("XlaBuilder::tuple")
+    }
+    pub fn build(&self, _root: &XlaOp) -> Result<XlaComputation> {
+        unavailable("XlaBuilder::build")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn stub_reports_unavailable() {
+        let err = PjRtClient::cpu().unwrap_err();
+        assert!(err.to_string().contains("unavailable"));
+    }
+}
