@@ -1,0 +1,22 @@
+//! `cargo bench --bench routing [-- <tokens>]` — the routing hot path's
+//! tracked microbench: tokens/sec of the allocation-free `RoutingEngine`
+//! vs the naive `route()` reference over
+//! `{top1, top2, top4, 2top1, 4top1} x {E=16, 64} x {tight, ample}`.
+//!
+//! Shares its suite (and table rendering) with `m6t bench --routing`;
+//! both write `BENCH_routing.json` at the repo root so the perf
+//! trajectory of the engine is pinned in one place.
+
+use m6t::moe::microbench;
+
+fn main() -> anyhow::Result<()> {
+    let tokens: usize = std::env::args()
+        .skip(1)
+        .find_map(|a| a.parse().ok())
+        .unwrap_or(16_384);
+    let rows = microbench::run_suite(tokens);
+    print!("{}", microbench::render_table(&rows, tokens).render());
+    microbench::write_json(&rows, tokens, "BENCH_routing.json")?;
+    eprintln!("[bench] wrote BENCH_routing.json");
+    Ok(())
+}

@@ -22,6 +22,13 @@
 //! See DESIGN.md for the backend architecture, feature flags, and the
 //! per-experiment index.
 
+// Index-heavy numerical code over flat row-major buffers: ranged loops
+// with explicit (t, e) indexing are the house style, and manual ceil-div
+// keeps the MSRV below `usize::div_ceil`. CI runs clippy with -D warnings;
+// these two lints are the deliberate exceptions.
+#![allow(clippy::needless_range_loop)]
+#![allow(clippy::manual_div_ceil)]
+
 pub mod cluster;
 pub mod config;
 pub mod coordinator;

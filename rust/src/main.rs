@@ -230,8 +230,14 @@ fn cmd_eval(rest: &[String]) -> Result<()> {
 fn cmd_bench(rest: &[String]) -> Result<()> {
     let cmd = Command::new("bench", "measured host vs simulated cluster ms/step")
         .opt_default("steps", "12", "measured steps per variant")
-        .opt_default("results", "results", "results directory");
+        .opt_default("results", "results", "results directory")
+        .flag("routing", "run the routing-engine microbench instead (writes BENCH_routing.json)")
+        .opt_default("tokens", "16384", "--routing: tokens per route call")
+        .opt_default("out", "BENCH_routing.json", "--routing: output JSON path");
     let args = parse(cmd, rest)?;
+    if args.flag("routing") {
+        return cmd_bench_routing(&args);
+    }
     let samples: usize = args.get_or("steps", 12usize).map_err(anyhow::Error::msg)?;
     let provider = NativeProvider::new();
     let variants = ["base-top1", "base-top2", "base-top4", "base-2top1", "base-4top1"];
@@ -250,6 +256,22 @@ fn cmd_bench(rest: &[String]) -> Result<()> {
     }
     print!("{}", t.render());
     t.save_csv(format!("{}/bench_native.csv", args.get("results").unwrap()))?;
+    Ok(())
+}
+
+/// `m6t bench --routing` — tokens/sec of the allocation-free RoutingEngine
+/// vs the naive reference `route()` across the paper's five strategies,
+/// E in {16, 64}, and tight/ample capacity. Writes the perf-trajectory
+/// JSON (BENCH_routing.json at the repo root by default).
+fn cmd_bench_routing(args: &m6t::util::cli::Args) -> Result<()> {
+    use m6t::moe::microbench;
+    let tokens: usize = args.get_or("tokens", 16384usize).map_err(anyhow::Error::msg)?;
+    let out_path = args.get("out").unwrap().to_string();
+    eprintln!("[bench] routing engine vs reference, {tokens} tokens per route call");
+    let rows = microbench::run_suite(tokens);
+    print!("{}", microbench::render_table(&rows, tokens).render());
+    microbench::write_json(&rows, tokens, &out_path)?;
+    eprintln!("[bench] wrote {out_path}");
     Ok(())
 }
 

@@ -1,0 +1,512 @@
+//! Allocation-free, parallel routing engine — the hot-path replacement
+//! for the naive [`route`](super::router::route) reference.
+//!
+//! The reference implementation allocates `Vec<Vec<bool>>` chosen-masks
+//! and per-token selection vectors on every call; at 16k tokens that is
+//! tens of thousands of heap allocations per routing round. The engine
+//! keeps flat scratch buffers in a reusable [`RouterScratch`] and reuses
+//! them across calls:
+//!
+//! * `chosen` is a flat `T x E` round-stamp array: a cell is "already
+//!   selected this call" iff it holds the current generation stamp, so
+//!   the buffer never needs clearing between calls;
+//! * selection arenas (`sel_expert/sel_gate/sel_pos/sel_kept`) are flat
+//!   `T x k` arrays reused call over call;
+//! * assignments are emitted into a caller-owned [`RouteOutput`] whose
+//!   vectors keep their capacity across steps ([`RoutingEngine::route_into`]).
+//!
+//! Routing splits into three phases:
+//!
+//! 1. **argmax** (parallel): each token's k-round argmax sequence depends
+//!    only on its own gate row, so tokens are sharded across the
+//!    [`WorkerPool`] — this is the O(k·T·E) bulk of the work;
+//! 2. **capacity** (sequential, O(k·T)): slot positions come from a
+//!    cumulative per-expert counter walked round-major then token-major —
+//!    the exact cumsum semantics of the reference and the lowered HLO;
+//! 3. **emit** (sequential, O(k·T)): combine gates, renormalized over all
+//!    k selections (kept *and* dropped, per `python/compile/moe.py`)
+//!    when k > 1, raw when k == 1.
+//!
+//! Determinism contract: outputs are a pure function of (gates, spec) —
+//! identical across pool sizes, shard counts, and serial/parallel paths,
+//! and identical to the naive reference (pinned by
+//! `rust/tests/routing_properties.rs` and `rust/tests/routing_parity.rs`).
+
+use std::sync::Arc;
+
+use crate::config::Routing;
+use crate::util::pool::{self, SendPtr, WorkerPool};
+
+use super::router::{Assignment, RouteOutput, RouterSpec};
+
+/// Tokens per parallel work unit. Fixed (not derived from the pool size)
+/// so the work decomposition — and therefore the output — is identical
+/// no matter how many workers execute it.
+const SHARD_TOKENS: usize = 512;
+
+/// Below this many argmax candidate visits (`T * E * k`) the pool handoff
+/// costs more than it saves; route on the calling thread instead. The
+/// serial and parallel paths produce identical outputs.
+const MIN_PARALLEL_WORK: usize = 1 << 15;
+
+/// Flat, reusable scratch for the routing engine. Grows monotonically to
+/// the largest shape routed; never shrinks, never cleared wholesale.
+#[derive(Default)]
+pub struct RouterScratch {
+    /// T x E round-stamp array: `chosen[t * e + x] == generation` means
+    /// expert `x` was already selected for token `t` in this call.
+    chosen: Vec<u32>,
+    generation: u32,
+    /// T x k selected expert index per (token, round).
+    sel_expert: Vec<u32>,
+    /// T x k raw gate of each selection.
+    sel_gate: Vec<f32>,
+    /// T x k capacity slot of each selection (valid where kept).
+    sel_pos: Vec<u32>,
+    /// T x k whether the selection fit under capacity.
+    sel_kept: Vec<bool>,
+}
+
+impl RouterScratch {
+    /// Bump the generation stamp (re-zeroing only on growth or the
+    /// once-in-2^32 wrap) and make sure the flat buffers cover
+    /// `tokens x e` / `tokens x sels`.
+    fn prepare(&mut self, tokens: usize, e: usize, sels: usize) -> u32 {
+        if self.chosen.len() < tokens * e {
+            self.chosen.clear();
+            self.chosen.resize(tokens * e, 0);
+            self.generation = 0;
+        }
+        if self.generation == u32::MAX {
+            self.chosen.fill(0);
+            self.generation = 0;
+        }
+        self.generation += 1;
+        let n = tokens * sels;
+        if self.sel_expert.len() < n {
+            self.sel_expert.resize(n, 0);
+            self.sel_gate.resize(n, 0.0);
+            self.sel_pos.resize(n, 0);
+            self.sel_kept.resize(n, false);
+        }
+        self.generation
+    }
+}
+
+/// Reusable routing engine: scratch buffers plus the worker pool that
+/// runs the argmax phase. One engine per thread of control; `route_into`
+/// takes `&mut self` and reuses everything across calls.
+pub struct RoutingEngine {
+    scratch: RouterScratch,
+    pool: Option<Arc<WorkerPool>>,
+}
+
+impl Default for RoutingEngine {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl RoutingEngine {
+    /// Engine on the process-wide pool.
+    pub fn new() -> Self {
+        Self { scratch: RouterScratch::default(), pool: None }
+    }
+
+    /// Engine on an injected pool — how the determinism tests pin
+    /// identical outputs across pool sizes.
+    pub fn with_pool(pool: Arc<WorkerPool>) -> Self {
+        Self { scratch: RouterScratch::default(), pool: Some(pool) }
+    }
+
+    /// Route into a caller-owned output, reusing its allocations.
+    /// Semantics are identical to [`route`](super::router::route).
+    pub fn route_into(
+        &mut self,
+        gates: &[f32],
+        tokens: usize,
+        spec: &RouterSpec,
+        out: &mut RouteOutput,
+    ) {
+        self.route_impl(gates, tokens, spec, out, true);
+    }
+
+    /// Counts-only routing: fills `load` and `dropped`, leaves
+    /// `assignments` empty. For callers that never read the combine
+    /// weights (the native backend's per-layer load statistics) this
+    /// skips the emission phase — gate renormalization and one push per
+    /// kept selection — entirely. Load/drop results are identical to
+    /// [`RoutingEngine::route_into`].
+    pub fn route_counts_into(
+        &mut self,
+        gates: &[f32],
+        tokens: usize,
+        spec: &RouterSpec,
+        out: &mut RouteOutput,
+    ) {
+        self.route_impl(gates, tokens, spec, out, false);
+    }
+
+    fn route_impl(
+        &mut self,
+        gates: &[f32],
+        tokens: usize,
+        spec: &RouterSpec,
+        out: &mut RouteOutput,
+        emit: bool,
+    ) {
+        let e = spec.num_experts;
+        assert_eq!(gates.len(), tokens * e, "gate matrix shape mismatch");
+        out.assignments.clear();
+        out.load.clear();
+        out.load.resize(e, 0);
+        out.dropped = 0;
+        match spec.routing {
+            Routing::TopK(k) => {
+                self.route_topk(gates, tokens, e, (k as usize).min(e), spec.capacity, out, emit)
+            }
+            Routing::Prototype(z) => {
+                self.route_prototype(gates, tokens, e, z as usize, spec.capacity, out, emit)
+            }
+        }
+    }
+
+    /// Convenience wrapper allocating a fresh output.
+    pub fn route(&mut self, gates: &[f32], tokens: usize, spec: &RouterSpec) -> RouteOutput {
+        let mut out = RouteOutput::default();
+        self.route_into(gates, tokens, spec, &mut out);
+        out
+    }
+
+    #[allow(clippy::too_many_arguments)]
+    fn route_topk(
+        &mut self,
+        gates: &[f32],
+        tokens: usize,
+        e: usize,
+        k: usize,
+        capacity: usize,
+        out: &mut RouteOutput,
+        emit: bool,
+    ) {
+        if tokens == 0 || k == 0 {
+            return;
+        }
+        let gen = self.scratch.prepare(tokens, e, k);
+
+        // Phase 1 — per-token argmax sequences, sharded over tokens.
+        {
+            let chosen = SendPtr::new(self.scratch.chosen.as_mut_ptr());
+            let sel_expert = SendPtr::new(self.scratch.sel_expert.as_mut_ptr());
+            let sel_gate = SendPtr::new(self.scratch.sel_gate.as_mut_ptr());
+            let body = |s: usize| {
+                let t0 = s * SHARD_TOKENS;
+                let t1 = (t0 + SHARD_TOKENS).min(tokens);
+                // SAFETY: each shard owns the disjoint token range
+                // [t0, t1) of every buffer, and `parallel_for` joins all
+                // shards before the borrow of `self.scratch` resumes.
+                let chosen = unsafe {
+                    std::slice::from_raw_parts_mut(chosen.get().add(t0 * e), (t1 - t0) * e)
+                };
+                let sel_expert = unsafe {
+                    std::slice::from_raw_parts_mut(sel_expert.get().add(t0 * k), (t1 - t0) * k)
+                };
+                let sel_gate = unsafe {
+                    std::slice::from_raw_parts_mut(sel_gate.get().add(t0 * k), (t1 - t0) * k)
+                };
+                for (i, t) in (t0..t1).enumerate() {
+                    let row = &gates[t * e..(t + 1) * e];
+                    if k == 1 {
+                        // top-1 fast path: a single round masks nothing,
+                        // so the chosen-stamp array is never touched —
+                        // selection is identical to the general path
+                        let mut best = 0;
+                        let mut best_g = f32::NEG_INFINITY;
+                        for (x, &g) in row.iter().enumerate() {
+                            if g > best_g {
+                                best = x;
+                                best_g = g;
+                            }
+                        }
+                        sel_expert[i] = best as u32;
+                        sel_gate[i] = best_g;
+                        continue;
+                    }
+                    let ch = &mut chosen[i * e..(i + 1) * e];
+                    for r in 0..k {
+                        let mut best = usize::MAX;
+                        let mut best_g = f32::NEG_INFINITY;
+                        // testing the gate before the stamp keeps the
+                        // chosen-array load off the common (non-max) path;
+                        // `&&` makes the predicate identical either way
+                        for (x, &g) in row.iter().enumerate() {
+                            if g > best_g && ch[x] != gen {
+                                best = x;
+                                best_g = g;
+                            }
+                        }
+                        debug_assert!(best != usize::MAX);
+                        ch[best] = gen;
+                        sel_expert[i * k + r] = best as u32;
+                        sel_gate[i * k + r] = best_g;
+                    }
+                }
+            };
+            self.run_sharded(tokens, e * k, &body);
+        }
+
+        // Phase 2 — capacity slots, round-major then token-major: the
+        // cumulative-counter order of the reference (and HLO cumsum).
+        let sc = &mut self.scratch;
+        for r in 0..k {
+            for t in 0..tokens {
+                let x = sc.sel_expert[t * k + r] as usize;
+                let pos = out.load[x];
+                let kept = (pos as usize) < capacity;
+                if kept {
+                    out.load[x] += 1;
+                } else {
+                    out.dropped += 1;
+                }
+                sc.sel_pos[t * k + r] = pos;
+                sc.sel_kept[t * k + r] = kept;
+            }
+        }
+
+        // Phase 3 — emit, token-major. Renormalize over all k selections
+        // (dropped ones included, per python/compile/moe.py) iff k > 1;
+        // top-1 keeps the raw softmax gate.
+        if !emit {
+            return;
+        }
+        for t in 0..tokens {
+            let base = t * k;
+            let denom: f32 = if k > 1 {
+                sc.sel_gate[base..base + k].iter().sum::<f32>() + 1e-9
+            } else {
+                1.0
+            };
+            for r in 0..k {
+                if sc.sel_kept[base + r] {
+                    out.assignments.push(Assignment {
+                        token: t,
+                        expert: sc.sel_expert[base + r] as usize,
+                        position: sc.sel_pos[base + r] as usize,
+                        gate: sc.sel_gate[base + r] / denom,
+                    });
+                }
+            }
+        }
+    }
+
+    #[allow(clippy::too_many_arguments)]
+    fn route_prototype(
+        &mut self,
+        gates: &[f32],
+        tokens: usize,
+        e: usize,
+        z: usize,
+        capacity: usize,
+        out: &mut RouteOutput,
+        emit: bool,
+    ) {
+        assert!(z > 0, "prototype count must be positive");
+        assert!(e % z == 0, "experts {e} not divisible by prototypes {z}");
+        if tokens == 0 {
+            return;
+        }
+        let f = e / z;
+        self.scratch.prepare(tokens, 0, z); // no chosen-mask needed: one round
+
+        // Phase 1 — per-token, per-prototype argmax, sharded over tokens.
+        {
+            let sel_expert = SendPtr::new(self.scratch.sel_expert.as_mut_ptr());
+            let sel_gate = SendPtr::new(self.scratch.sel_gate.as_mut_ptr());
+            let body = |s: usize| {
+                let t0 = s * SHARD_TOKENS;
+                let t1 = (t0 + SHARD_TOKENS).min(tokens);
+                // SAFETY: disjoint token ranges; see route_topk.
+                let sel_expert = unsafe {
+                    std::slice::from_raw_parts_mut(sel_expert.get().add(t0 * z), (t1 - t0) * z)
+                };
+                let sel_gate = unsafe {
+                    std::slice::from_raw_parts_mut(sel_gate.get().add(t0 * z), (t1 - t0) * z)
+                };
+                for (i, t) in (t0..t1).enumerate() {
+                    let row = &gates[t * e..(t + 1) * e];
+                    for p in 0..z {
+                        let group = &row[p * f..(p + 1) * f];
+                        let mut best = 0;
+                        let mut best_g = f32::NEG_INFINITY;
+                        for (x, &g) in group.iter().enumerate() {
+                            if g > best_g {
+                                best = x;
+                                best_g = g;
+                            }
+                        }
+                        sel_expert[i * z + p] = (p * f + best) as u32;
+                        sel_gate[i * z + p] = best_g;
+                    }
+                }
+            };
+            self.run_sharded(tokens, e, &body);
+        }
+
+        // Phase 2+3 — prototypes are independent routers; walk them in
+        // prototype-major order (the reference's emission order). Gates
+        // stay raw: no cross-prototype renormalization (paper Eq. 3).
+        let sc = &self.scratch;
+        for p in 0..z {
+            for t in 0..tokens {
+                let x = sc.sel_expert[t * z + p] as usize;
+                let pos = out.load[x] as usize;
+                if pos < capacity {
+                    out.load[x] += 1;
+                    if emit {
+                        out.assignments.push(Assignment {
+                            token: t,
+                            expert: x,
+                            position: pos,
+                            gate: sc.sel_gate[t * z + p],
+                        });
+                    }
+                } else {
+                    out.dropped += 1;
+                }
+            }
+        }
+    }
+
+    /// Run `body(shard)` over `ceil(tokens / SHARD_TOKENS)` shards — on
+    /// the pool when the total work justifies the handoff, inline
+    /// otherwise (`pool::run_shards` policy; identical outputs either way).
+    fn run_sharded(&self, tokens: usize, work_per_token: usize, body: &(dyn Fn(usize) + Sync)) {
+        let shards = (tokens + SHARD_TOKENS - 1) / SHARD_TOKENS;
+        pool::run_shards(
+            self.pool.as_deref(),
+            shards,
+            tokens * work_per_token,
+            MIN_PARALLEL_WORK,
+            body,
+        );
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::moe::router::{route, softmax_gates};
+    use crate::util::rng::Rng;
+
+    fn random_gates(tokens: usize, e: usize, z: usize, seed: u64) -> Vec<f32> {
+        let mut rng = Rng::new(seed);
+        let logits: Vec<f32> = (0..tokens * e).map(|_| rng.normal() as f32).collect();
+        softmax_gates(&logits, tokens, e, z)
+    }
+
+    fn assert_same(a: &RouteOutput, b: &RouteOutput) {
+        crate::testing::route_outputs_bitwise_eq(a, b).unwrap();
+    }
+
+    #[test]
+    fn matches_reference_on_mixed_shapes() {
+        let mut engine = RoutingEngine::new();
+        for (tokens, e, routing, capacity, seed) in [
+            (64, 8, Routing::TopK(1), 4, 1u64),
+            (64, 8, Routing::TopK(2), 4, 2),
+            (200, 16, Routing::TopK(4), 13, 3),
+            (31, 4, Routing::TopK(4), 31, 4), // k == E
+            (128, 16, Routing::Prototype(2), 9, 5),
+            (128, 16, Routing::Prototype(4), 2, 6), // tight capacity
+            (1, 2, Routing::TopK(2), 1, 7),
+        ] {
+            let z = routing.prototypes().max(1) as usize;
+            let gates = random_gates(tokens, e, z, seed);
+            let spec = RouterSpec { routing, num_experts: e, capacity };
+            let expect = route(&gates, tokens, &spec);
+            let got = engine.route(&gates, tokens, &spec);
+            assert_same(&got, &expect);
+        }
+    }
+
+    #[test]
+    fn scratch_reuse_across_shrinking_shapes_is_clean() {
+        // route a big shape, then a small one: stale stamps/selections
+        // from the big call must not leak into the small call
+        let mut engine = RoutingEngine::new();
+        let spec_big = RouterSpec { routing: Routing::TopK(4), num_experts: 16, capacity: 64 };
+        let gates_big = random_gates(600, 16, 1, 11);
+        let _ = engine.route(&gates_big, 600, &spec_big);
+        let spec_small = RouterSpec { routing: Routing::TopK(2), num_experts: 4, capacity: 3 };
+        let gates_small = random_gates(10, 4, 1, 12);
+        let expect = route(&gates_small, 10, &spec_small);
+        let got = engine.route(&gates_small, 10, &spec_small);
+        assert_same(&got, &expect);
+    }
+
+    #[test]
+    fn identical_across_pool_sizes() {
+        // big enough to cross MIN_PARALLEL_WORK and span several shards
+        let tokens = 4 * SHARD_TOKENS + 37;
+        let gates = random_gates(tokens, 16, 1, 21);
+        let spec = RouterSpec { routing: Routing::TopK(2), num_experts: 16, capacity: 200 };
+        let expect = RoutingEngine::with_pool(Arc::new(WorkerPool::new(0)))
+            .route(&gates, tokens, &spec);
+        for workers in [1usize, 2, pool::default_workers()] {
+            let got = RoutingEngine::with_pool(Arc::new(WorkerPool::new(workers)))
+                .route(&gates, tokens, &spec);
+            assert_same(&got, &expect);
+        }
+    }
+
+    #[test]
+    fn top1_gate_is_raw_not_renormalized() {
+        // headline bugfix: k = 1 must keep the raw softmax gate
+        let tokens = 32;
+        let e = 8;
+        let gates = random_gates(tokens, e, 1, 33);
+        let spec = RouterSpec { routing: Routing::TopK(1), num_experts: e, capacity: tokens };
+        let mut engine = RoutingEngine::new();
+        let out = engine.route(&gates, tokens, &spec);
+        assert_eq!(out.assignments.len(), tokens);
+        for a in &out.assignments {
+            let row = &gates[a.token * e..(a.token + 1) * e];
+            let max = row.iter().cloned().fold(f32::NEG_INFINITY, f32::max);
+            assert_eq!(a.gate.to_bits(), max.to_bits(), "gate must be the raw row max");
+            assert!(a.gate < 1.0, "softmax over 8 experts cannot saturate");
+        }
+    }
+
+    #[test]
+    fn counts_only_route_matches_full_route() {
+        let mut engine = RoutingEngine::new();
+        let mut counts = RouteOutput::default();
+        for (routing, seed) in
+            [(Routing::TopK(2), 51u64), (Routing::TopK(1), 52), (Routing::Prototype(4), 53)]
+        {
+            let z = routing.prototypes().max(1) as usize;
+            let gates = random_gates(96, 8, z, seed);
+            let spec = RouterSpec { routing, num_experts: 8, capacity: 7 };
+            let full = engine.route(&gates, 96, &spec);
+            engine.route_counts_into(&gates, 96, &spec, &mut counts);
+            assert_eq!(counts.load, full.load);
+            assert_eq!(counts.dropped, full.dropped);
+            assert!(counts.assignments.is_empty(), "counts-only must not emit");
+        }
+    }
+
+    #[test]
+    fn route_output_reuse_resets_state() {
+        let mut engine = RoutingEngine::new();
+        let gates = random_gates(40, 8, 1, 44);
+        let spec = RouterSpec { routing: Routing::TopK(2), num_experts: 8, capacity: 5 };
+        let mut out = RouteOutput::default();
+        engine.route_into(&gates, 40, &spec, &mut out);
+        let first = (out.assignments.clone(), out.load.clone(), out.dropped);
+        // second call into the same output must fully overwrite it
+        engine.route_into(&gates, 40, &spec, &mut out);
+        assert_eq!(out.assignments, first.0);
+        assert_eq!(out.load, first.1);
+        assert_eq!(out.dropped, first.2);
+    }
+}

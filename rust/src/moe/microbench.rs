@@ -1,0 +1,228 @@
+//! Routing microbench: tokens/sec of the allocation-free
+//! [`RoutingEngine`] against the naive [`route`] reference, across the
+//! paper's five strategies, two expert counts, and tight/ample capacity.
+//!
+//! Shared by `m6t bench --routing` and `cargo bench --bench routing`;
+//! both write `BENCH_routing.json` at the repo root so the routing hot
+//! path has a tracked perf trajectory (ROADMAP: "hot path measurably
+//! faster"). Every case first cross-checks that engine and reference
+//! produce identical outputs, so the bench doubles as a parity smoke.
+
+use anyhow::{Context as _, Result};
+
+use crate::config::Routing;
+use crate::util::bench::bench;
+use crate::util::json::{arr, num, obj, s, write as json_write, Value};
+use crate::util::rng::Rng;
+use crate::util::table::{f2, Table};
+
+use super::engine::RoutingEngine;
+use super::router::{route, softmax_gates, RouteOutput, RouterSpec};
+
+/// One measured (strategy, E, capacity-regime) cell.
+#[derive(Debug, Clone)]
+pub struct RoutingBenchRow {
+    pub strategy: String,
+    pub experts: usize,
+    /// "tight" (capacity 1x at factor 1.0 — drops guaranteed under k > 1)
+    /// or "ample" (capacity kx at factor 1.25 — the paper's default).
+    pub regime: &'static str,
+    pub capacity: usize,
+    pub tokens: usize,
+    pub reference_ns: f64,
+    pub engine_ns: f64,
+}
+
+impl RoutingBenchRow {
+    pub fn reference_tokens_per_sec(&self) -> f64 {
+        self.tokens as f64 * 1e9 / self.reference_ns
+    }
+    pub fn engine_tokens_per_sec(&self) -> f64 {
+        self.tokens as f64 * 1e9 / self.engine_ns
+    }
+    pub fn speedup(&self) -> f64 {
+        self.reference_ns / self.engine_ns
+    }
+}
+
+/// The benched grid: {top1, top2, top4, 2top1, 4top1} x {E=16, 64} x
+/// {tight, ample}.
+pub fn cases() -> Vec<(Routing, usize, &'static str)> {
+    let strategies = [
+        Routing::TopK(1),
+        Routing::TopK(2),
+        Routing::TopK(4),
+        Routing::Prototype(2),
+        Routing::Prototype(4),
+    ];
+    let mut out = Vec::new();
+    for &experts in &[16usize, 64] {
+        for &routing in &strategies {
+            for regime in ["tight", "ample"] {
+                out.push((routing, experts, regime));
+            }
+        }
+    }
+    out
+}
+
+fn capacity_for(routing: Routing, regime: &str, tokens: usize, experts: usize) -> usize {
+    let k = routing.k().max(1) as f64;
+    let t_over_e = tokens as f64 / experts as f64;
+    let c = match regime {
+        // Eq.-2 with k_eff = 1, gamma = 1.0: overflow is the common case
+        "tight" => t_over_e,
+        // Eq.-2 with k_eff = k, gamma = 1.25: the paper's default headroom
+        _ => k * t_over_e * 1.25,
+    };
+    (c.ceil() as usize).max(1)
+}
+
+/// Run the full grid at `tokens` tokens per route call. Panics if the
+/// engine and the reference ever disagree on an output.
+pub fn run_suite(tokens: usize) -> Vec<RoutingBenchRow> {
+    let mut engine = RoutingEngine::new();
+    let mut out = RouteOutput::default();
+    let mut rows = Vec::new();
+    for (case_idx, (routing, experts, regime)) in cases().into_iter().enumerate() {
+        let z = routing.prototypes().max(1) as usize;
+        let mut rng = Rng::new(0xB0B5 ^ ((case_idx as u64) << 8));
+        let logits: Vec<f32> = (0..tokens * experts).map(|_| rng.normal() as f32).collect();
+        let gates = softmax_gates(&logits, tokens, experts, z);
+        let capacity = capacity_for(routing, regime, tokens, experts);
+        let spec = RouterSpec { routing, num_experts: experts, capacity };
+
+        // parity smoke before timing anything
+        let expect = route(&gates, tokens, &spec);
+        engine.route_into(&gates, tokens, &spec, &mut out);
+        assert_eq!(out.load, expect.load, "{} E={experts} {regime}: load", routing.name());
+        assert_eq!(out.dropped, expect.dropped, "{} E={experts} {regime}: drops", routing.name());
+        assert_eq!(
+            out.assignments, expect.assignments,
+            "{} E={experts} {regime}: assignments",
+            routing.name()
+        );
+
+        let label = format!("{} E={experts} C={capacity} ({regime})", routing.name());
+        let r_ref = bench(&format!("reference {label}"), || {
+            std::hint::black_box(route(&gates, tokens, &spec));
+        });
+        let r_eng = bench(&format!("engine    {label}"), || {
+            engine.route_into(&gates, tokens, &spec, &mut out);
+            std::hint::black_box(&out);
+        });
+        let row = RoutingBenchRow {
+            strategy: routing.name(),
+            experts,
+            regime,
+            capacity,
+            tokens,
+            reference_ns: r_ref.median_ns,
+            engine_ns: r_eng.median_ns,
+        };
+        eprintln!(
+            "[bench] {label}: ref {:.2} Mtok/s, engine {:.2} Mtok/s ({:.2}x)",
+            row.reference_tokens_per_sec() / 1e6,
+            row.engine_tokens_per_sec() / 1e6,
+            row.speedup()
+        );
+        rows.push(row);
+    }
+    rows
+}
+
+/// Human-readable table over the suite — shared by `m6t bench --routing`
+/// and the `routing` cargo-bench target so their reports cannot diverge.
+pub fn render_table(rows: &[RoutingBenchRow], tokens: usize) -> Table {
+    let mut t = Table::new(
+        format!("routing: engine vs naive reference, {tokens} tokens/call"),
+        &["strategy", "E", "capacity", "ref Mtok/s", "engine Mtok/s", "speedup"],
+    );
+    for r in rows {
+        t.row(vec![
+            r.strategy.clone(),
+            r.experts.to_string(),
+            format!("{} ({})", r.capacity, r.regime),
+            f2(r.reference_tokens_per_sec() / 1e6),
+            f2(r.engine_tokens_per_sec() / 1e6),
+            format!("{}x", f2(r.speedup())),
+        ]);
+    }
+    t
+}
+
+/// Serialize the suite to the tracked perf-trajectory JSON.
+pub fn to_json(rows: &[RoutingBenchRow], tokens: usize) -> Value {
+    let items: Vec<Value> = rows
+        .iter()
+        .map(|r| {
+            obj(vec![
+                ("strategy", s(r.strategy.clone())),
+                ("experts", num(r.experts as f64)),
+                ("capacity_regime", s(r.regime)),
+                ("capacity", num(r.capacity as f64)),
+                ("tokens", num(r.tokens as f64)),
+                ("reference_ns_per_route", num(r.reference_ns)),
+                ("engine_ns_per_route", num(r.engine_ns)),
+                ("reference_tokens_per_sec", num(r.reference_tokens_per_sec())),
+                ("engine_tokens_per_sec", num(r.engine_tokens_per_sec())),
+                ("speedup", num(r.speedup())),
+            ])
+        })
+        .collect();
+    obj(vec![
+        ("bench", s("routing")),
+        ("tokens_per_route", num(tokens as f64)),
+        ("rows", arr(items)),
+    ])
+}
+
+/// Write `BENCH_routing.json` (or wherever `path` points).
+pub fn write_json(rows: &[RoutingBenchRow], tokens: usize, path: &str) -> Result<()> {
+    let text = json_write(&to_json(rows, tokens)) + "\n";
+    std::fs::write(path, text).with_context(|| format!("writing {path}"))?;
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn grid_covers_the_issue_matrix() {
+        let cs = cases();
+        assert_eq!(cs.len(), 20, "5 strategies x 2 expert counts x 2 regimes");
+        assert!(cs.iter().any(|&(r, e, g)| r == Routing::Prototype(4) && e == 64 && g == "ample"));
+        assert!(cs.iter().any(|&(r, e, g)| r == Routing::TopK(4) && e == 16 && g == "tight"));
+    }
+
+    #[test]
+    fn capacity_regimes_bracket_the_load() {
+        // tight at k=4 must be far below ample: drops guaranteed
+        let tight = capacity_for(Routing::TopK(4), "tight", 4096, 16);
+        let ample = capacity_for(Routing::TopK(4), "ample", 4096, 16);
+        assert_eq!(tight, 256);
+        assert_eq!(ample, 1280);
+        assert!(capacity_for(Routing::TopK(1), "tight", 3, 64) >= 1);
+    }
+
+    #[test]
+    fn json_shape_is_stable() {
+        let rows = vec![RoutingBenchRow {
+            strategy: "top2".into(),
+            experts: 16,
+            regime: "tight",
+            capacity: 8,
+            tokens: 128,
+            reference_ns: 2000.0,
+            engine_ns: 500.0,
+        }];
+        let v = to_json(&rows, 128);
+        assert_eq!(v.get("bench").and_then(|b| b.as_str()), Some("routing"));
+        let arr = v.get("rows").and_then(|r| r.as_array()).unwrap();
+        assert_eq!(arr.len(), 1);
+        let row = &arr[0];
+        assert_eq!(row.get("speedup").and_then(|s| s.as_f64()), Some(4.0));
+        assert_eq!(row.get("strategy").and_then(|s| s.as_str()), Some("top2"));
+    }
+}

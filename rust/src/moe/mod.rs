@@ -8,7 +8,18 @@
 //!  * property tests can hammer the routing invariants (capacity never
 //!    exceeded, positions unique, drops accounted) over random inputs,
 //!  * the c_v load-balance analytics (Fig 1) have a host-side oracle.
+//!
+//! Two implementations share one semantics:
+//!  * [`router::route`] — the naive reference: simple, obviously correct,
+//!    allocation-heavy; kept as the oracle for property tests and as the
+//!    baseline the routing microbench measures speedups against;
+//!  * [`engine::RoutingEngine`] — the allocation-free, pool-parallel
+//!    engine the native backend's hot path runs
+//!    (`m6t bench --routing` tracks the gap in `BENCH_routing.json`).
 
+pub mod engine;
+pub mod microbench;
 pub mod router;
 
+pub use engine::{RouterScratch, RoutingEngine};
 pub use router::{route, RouteOutput, RouterSpec};

@@ -2,9 +2,16 @@
 //! and k top-1 prototyping (k parallel routers over disjoint expert
 //! groups), with per-expert capacity and token dropping.
 //!
-//! Semantics match `python/compile/moe.py` exactly (the integration test
-//! `rust/tests/routing_parity.rs` cross-checks counts against the HLO's
-//! own load outputs).
+//! Semantics match `python/compile/moe.py` exactly; the golden-fixture
+//! test `rust/tests/routing_parity.rs` pins the python semantics (top-k
+//! renormalization over all k selections including dropped ones, raw
+//! un-renormalized gates for top-1 and prototyping) against both this
+//! reference and the [`RoutingEngine`](super::engine::RoutingEngine).
+//!
+//! This file is the *reference* implementation: simple and allocation-
+//! heavy. The hot path runs the allocation-free engine instead; the
+//! property tests in `rust/tests/routing_properties.rs` hold the two
+//! bitwise identical.
 
 use crate::config::Routing;
 use crate::util::stats::coefficient_of_variation;
@@ -114,9 +121,17 @@ fn route_topk(
         }
     }
 
-    // renormalize gate values over the k selections per token (Eq. 1)
+    // renormalize gate values over the k selections per token (Eq. 1) —
+    // only when k > 1, matching `python/compile/moe.py`'s
+    // `if renormalize and rounds > 1` guard: top-1 keeps the raw softmax
+    // gate (< 1.0), it is NOT renormalized to ~1.0. The denominator sums
+    // all k selections, dropped ones included (python lines 85-87).
     for (t, sels) in selections.iter().enumerate() {
-        let denom: f32 = sels.iter().map(|s| s.2).sum::<f32>() + 1e-9;
+        let denom: f32 = if k > 1 {
+            sels.iter().map(|s| s.2).sum::<f32>() + 1e-9
+        } else {
+            1.0
+        };
         for &(expert, position, g, kept) in sels {
             if kept {
                 out.assignments.push(Assignment {
@@ -172,23 +187,33 @@ fn route_prototype(
 /// Convenience: per-token softmax over each prototype group (what the L2
 /// router does before the kernel).
 pub fn softmax_gates(logits: &[f32], tokens: usize, e: usize, prototypes: usize) -> Vec<f32> {
-    assert_eq!(logits.len(), tokens * e);
-    assert!(e % prototypes == 0);
+    let mut out = logits.to_vec();
+    softmax_rows_in_place(&mut out, tokens, e, prototypes);
+    out
+}
+
+/// In-place variant of [`softmax_gates`]: turns `rows` logit rows (row
+/// stride `e`, softmaxed per prototype group) into gate probabilities
+/// without an output allocation — the form the native backend's sharded
+/// gate generation writes directly into its reused gate buffer.
+pub fn softmax_rows_in_place(buf: &mut [f32], rows: usize, e: usize, prototypes: usize) {
+    assert_eq!(buf.len(), rows * e);
+    assert!(prototypes > 0 && e % prototypes == 0);
     let f = e / prototypes;
-    let mut out = vec![0f32; logits.len()];
-    for t in 0..tokens {
+    for t in 0..rows {
         for z in 0..prototypes {
-            let base = t * e + z * f;
-            let row = &logits[base..base + f];
+            let row = &mut buf[t * e + z * f..t * e + z * f + f];
             let max = row.iter().cloned().fold(f32::NEG_INFINITY, f32::max);
-            let exps: Vec<f32> = row.iter().map(|&x| (x - max).exp()).collect();
-            let sum: f32 = exps.iter().sum();
-            for (i, v) in exps.iter().enumerate() {
-                out[base + i] = v / sum;
+            let mut sum = 0f32;
+            for v in row.iter_mut() {
+                *v = (*v - max).exp();
+                sum += *v;
+            }
+            for v in row.iter_mut() {
+                *v /= sum;
             }
         }
     }
-    out
 }
 
 #[cfg(test)]
@@ -228,6 +253,34 @@ mod tests {
                 .collect();
             assert_eq!(experts.len(), 2);
             assert_ne!(experts[0], experts[1], "top-2 must pick distinct experts");
+        }
+    }
+
+    #[test]
+    fn top1_gate_equals_raw_max_gate() {
+        // regression: top-1 used to renormalize its single selection,
+        // yielding gate ~= 1.0 instead of the raw softmax gate —
+        // python/compile/moe.py only renormalizes when rounds > 1
+        let tokens = 24;
+        let e = 8;
+        let gates = random_gates(tokens, e, 1, 9);
+        let spec = RouterSpec { routing: Routing::TopK(1), num_experts: e, capacity: tokens };
+        let out = route(&gates, tokens, &spec);
+        assert_eq!(out.assignments.len(), tokens);
+        for a in &out.assignments {
+            let row = &gates[a.token * e..(a.token + 1) * e];
+            let max = row.iter().cloned().fold(f32::NEG_INFINITY, f32::max);
+            assert_eq!(
+                a.gate.to_bits(),
+                max.to_bits(),
+                "token {}: top-1 gate must be the raw per-token max gate",
+                a.token
+            );
+            assert!(
+                a.gate < 1.0,
+                "token {}: a non-degenerate softmax row cannot give gate 1.0",
+                a.token
+            );
         }
     }
 

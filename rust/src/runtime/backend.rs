@@ -119,7 +119,7 @@ pub fn measure_step_ms(
         state = next;
         last_stats = Some(stats);
     }
-    ms.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    ms.sort_by(f64::total_cmp);
     let median = ms[ms.len() / 2];
     Ok((median, last_stats.expect("at least one sample")))
 }

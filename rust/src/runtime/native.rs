@@ -2,10 +2,13 @@
 //!
 //! Instead of executing lowered HLO, the native backend composes the
 //! repo's own analytic machinery into a deterministic training simulacrum:
-//!  * per-layer routing statistics come from the host-side routing mirror
-//!    ([`moe::route`]) over seeded gate logits plus a persistent per-expert
-//!    router bias (the state that makes balance dynamics visible), with
-//!    layers routed in parallel via `std::thread::scope`;
+//!  * per-layer routing statistics come from the host-side routing engine
+//!    ([`moe::RoutingEngine`]) over seeded gate logits plus a persistent
+//!    per-expert router bias (the state that makes balance dynamics
+//!    visible); gate generation and the routing argmax are decomposed
+//!    into layer x token-shard work units on the persistent
+//!    [`WorkerPool`] (`util::pool`) instead of the old one-unpooled-
+//!    thread-per-layer spawn;
 //!  * the loss trajectory follows a [`scaling::PowerLaw`] whose floor
 //!    encodes the paper's qualitative findings (larger models lower, k > 1
 //!    helps with diminishing returns, prototyping helps more at scale,
@@ -19,6 +22,7 @@
 //! integration tests pin down.
 
 use std::collections::BTreeMap;
+use std::sync::{Arc, Mutex};
 
 use anyhow::{anyhow, bail, Result};
 
@@ -27,9 +31,10 @@ use super::manifest::{DType, TensorSpec, VariantInfo};
 use crate::cluster::{simulate_step, table2_hardware};
 use crate::config::{paper, CapacityMode, ModelConfig, Routing};
 use crate::data::Batch;
-use crate::moe::router::softmax_gates;
-use crate::moe::{route, RouterSpec};
+use crate::moe::router::softmax_rows_in_place;
+use crate::moe::{RouteOutput, RouterSpec, RoutingEngine};
 use crate::scaling::PowerLaw;
+use crate::util::pool::{self, SendPtr, WorkerPool};
 use crate::util::rng::Rng;
 use crate::util::stats::coefficient_of_variation;
 
@@ -125,41 +130,95 @@ fn law_from_leaf(leaf: &[f32]) -> Result<PowerLaw> {
     Ok(PowerLaw { l_inf: leaf[0] as f64, a: leaf[1] as f64, b: leaf[2] as f64 })
 }
 
-/// Route one layer's tokens: seeded gate logits + persistent router bias,
-/// softmaxed per prototype group, through the host routing mirror.
-fn route_layer(
-    seed: u64,
+/// Tokens per gate-generation work unit. Fixed (not derived from pool
+/// size) so the per-shard RNG streams — and therefore every routed gate —
+/// are identical no matter how many workers run them.
+const GEN_SHARD_TOKENS: usize = 512;
+
+/// Below this many gate cells the pool handoff costs more than the
+/// RNG + softmax work it spreads; generate serially instead. The serial
+/// path is bitwise identical.
+const MIN_GEN_PARALLEL_WORK: usize = 4096;
+
+/// Fill one layer's gate matrix: seeded per-shard logits + persistent
+/// router bias, softmaxed in place per prototype group. Token shards run
+/// as independent work units on the pool; each shard derives its own RNG
+/// stream from (layer seed, shard index), so the result is a pure
+/// function of the seed regardless of scheduling.
+fn fill_gates(
+    pool_ref: &WorkerPool,
+    gates: &mut [f32],
+    layer_seed: u64,
     bias_row: &[f32],
     tokens: usize,
     experts: usize,
     prototypes: usize,
-    routing: Routing,
-    capacity: usize,
-) -> (Vec<u32>, u32) {
-    let mut rng = Rng::new(seed);
-    let mut logits = vec![0f32; tokens * experts];
-    for t in 0..tokens {
-        for x in 0..experts {
-            logits[t * experts + x] = rng.normal() as f32 + bias_row[x];
+) {
+    let shards = (tokens + GEN_SHARD_TOKENS - 1) / GEN_SHARD_TOKENS;
+    let base = SendPtr::new(gates.as_mut_ptr());
+    let body = |s: usize| {
+        let t0 = s * GEN_SHARD_TOKENS;
+        let t1 = (t0 + GEN_SHARD_TOKENS).min(tokens);
+        // SAFETY: shards write disjoint token ranges, and parallel_for
+        // joins every shard before `gates` is read again.
+        let buf = unsafe {
+            std::slice::from_raw_parts_mut(base.get().add(t0 * experts), (t1 - t0) * experts)
+        };
+        let mut rng = Rng::new(layer_seed).fold_in(s as u64);
+        for (i, v) in buf.iter_mut().enumerate() {
+            *v = rng.normal() as f32 + bias_row[i % experts];
         }
-    }
-    let gates = softmax_gates(&logits, tokens, experts, prototypes);
-    let spec = RouterSpec { routing, num_experts: experts, capacity };
-    let out = route(&gates, tokens, &spec);
-    (out.load, out.dropped)
+        softmax_rows_in_place(buf, t1 - t0, experts, prototypes);
+    };
+    pool::run_shards(Some(pool_ref), shards, tokens * experts, MIN_GEN_PARALLEL_WORK, &body);
+}
+
+/// Per-step reusable buffers. `step` takes `&self`, so these live behind
+/// a lock: the routing engine's scratch and the gate matrix must survive
+/// across steps for the hot path to be allocation-free after warmup.
+struct StepScratch {
+    engine: RoutingEngine,
+    gates: Vec<f32>,
+    route_out: RouteOutput,
 }
 
 /// The native execution engine for one variant.
 pub struct NativeBackend {
     info: VariantInfo,
     sim_step_ms: f64,
+    /// injected worker pool; `None` means the process-wide pool
+    pool: Option<Arc<WorkerPool>>,
+    scratch: Mutex<StepScratch>,
 }
 
 impl NativeBackend {
     pub fn new(cfg: &ModelConfig) -> Self {
         let sim_step_ms =
             simulate_step(cfg, cfg.routing, cfg.capacity_mode, &table2_hardware()).total_ms();
-        Self { info: variant_info(cfg), sim_step_ms }
+        Self {
+            info: variant_info(cfg),
+            sim_step_ms,
+            pool: None,
+            scratch: Mutex::new(StepScratch {
+                engine: RoutingEngine::new(),
+                gates: Vec::new(),
+                route_out: RouteOutput::default(),
+            }),
+        }
+    }
+
+    /// Backend pinned to a specific pool — how the determinism tests
+    /// assert bitwise-identical [`StepStats`] across pool sizes.
+    pub fn with_pool(cfg: &ModelConfig, pool: Arc<WorkerPool>) -> Self {
+        let mut backend = Self::new(cfg);
+        backend.scratch.get_mut().unwrap().engine =
+            RoutingEngine::with_pool(Arc::clone(&pool));
+        backend.pool = Some(pool);
+        backend
+    }
+
+    fn pool(&self) -> &WorkerPool {
+        self.pool.as_deref().unwrap_or_else(pool::global)
     }
 
     /// Calibrated cluster-model prediction for this variant's step time.
@@ -218,58 +277,50 @@ impl Backend for NativeBackend {
             ^ (step as u64).wrapping_mul(0x9E37_79B9_7F4A_7C15)
             ^ batch_hash(batch);
 
-        // route every layer independently: each layer is its own routing
-        // problem over its own gate logits and bias row. Scoped threads
-        // only pay off once the per-layer work dwarfs the ~tens-of-µs
-        // spawn/join cost, so small sim-scale twins route serially — the
-        // parallel and serial paths are bitwise identical (route_layer is
-        // a pure function of its seed/bias row).
+        // route every layer: each layer is its own routing problem over
+        // its own gate logits and bias row. The work decomposes into
+        // layer x token-shard units on the persistent pool — gate
+        // generation shards by (layer seed, shard) RNG streams, and the
+        // routing engine shards its argmax phase the same way — so a
+        // 12-layer config no longer spawns 12 unpooled threads per step,
+        // and the result is bitwise identical across pool sizes.
+        let mut scratch_guard = self.scratch.lock().expect("step scratch poisoned");
+        let StepScratch { engine, gates, route_out } = &mut *scratch_guard;
+        let pool_ref = self.pool();
         let bias = &leaves[1];
         let layer_seed =
             |l: usize| base_seed ^ (l as u64 + 1).wrapping_mul(0x517C_C1B7_2722_0A95);
-        let mut per_layer: Vec<(Vec<u32>, u32)> = Vec::with_capacity(layers);
-        if layers > 1 && tokens * experts >= 16_384 {
-            std::thread::scope(|scope| {
-                let mut handles = Vec::with_capacity(layers);
-                for l in 0..layers {
-                    let bias_row = &bias[l * experts..(l + 1) * experts];
-                    let routing = cfg.routing;
-                    let seed = layer_seed(l);
-                    handles.push(scope.spawn(move || {
-                        route_layer(seed, bias_row, tokens, experts, prototypes, routing, capacity)
-                    }));
-                }
-                for h in handles {
-                    per_layer.push(h.join().expect("layer routing thread panicked"));
-                }
-            });
-        } else {
-            for l in 0..layers {
-                let bias_row = &bias[l * experts..(l + 1) * experts];
-                per_layer.push(route_layer(
-                    layer_seed(l),
-                    bias_row,
-                    tokens,
-                    experts,
-                    prototypes,
-                    cfg.routing,
-                    capacity,
-                ));
-            }
-        }
+        let spec = RouterSpec { routing: cfg.routing, num_experts: experts, capacity };
+        // every cell is overwritten by fill_gates, so only the length matters
+        gates.resize(tokens * experts, 0.0);
 
         let mut load = vec![0f32; layers * experts];
         let mut dropped = vec![0f32; layers];
         let mut total_dropped = 0u64;
         let mut cv_sum = 0.0;
-        for (l, (layer_load, layer_dropped)) in per_layer.iter().enumerate() {
-            for (i, &v) in layer_load.iter().enumerate() {
+        let mut cv_row: Vec<f64> = Vec::with_capacity(experts);
+        for l in 0..layers {
+            let bias_row = &bias[l * experts..(l + 1) * experts];
+            fill_gates(
+                pool_ref,
+                gates.as_mut_slice(),
+                layer_seed(l),
+                bias_row,
+                tokens,
+                experts,
+                prototypes,
+            );
+            // counts-only: the stats below read just load/dropped, so the
+            // engine skips combine-gate emission entirely
+            engine.route_counts_into(gates.as_slice(), tokens, &spec, route_out);
+            for (i, &v) in route_out.load.iter().enumerate() {
                 load[l * experts + i] = v as f32;
             }
-            dropped[l] = *layer_dropped as f32;
-            total_dropped += *layer_dropped as u64;
-            let row: Vec<f64> = layer_load.iter().map(|&x| x as f64).collect();
-            cv_sum += coefficient_of_variation(&row);
+            dropped[l] = route_out.dropped as f32;
+            total_dropped += route_out.dropped as u64;
+            cv_row.clear();
+            cv_row.extend(route_out.load.iter().map(|&x| x as f64));
+            cv_sum += coefficient_of_variation(&cv_row);
         }
         let mean_cv = cv_sum / layers.max(1) as f64;
         let k_eff = cfg.routing.k().min(experts as u32).max(1) as usize;

@@ -5,7 +5,37 @@
 //! regeneration") and reports the smallest failing seed/bounds so the case
 //! is trivially reproducible with a unit test.
 
+use crate::moe::RouteOutput;
 use crate::util::rng::Rng;
+
+/// Bitwise equality of two [`RouteOutput`]s: load, drop counts, and
+/// assignment tuples, with combine gates compared as raw f32 bits. This
+/// is the engine-vs-reference equivalence contract, kept in one place so
+/// the engine unit tests, the routing property tests, and the golden-
+/// fixture parity tests cannot silently drift apart in what they check.
+pub fn route_outputs_bitwise_eq(a: &RouteOutput, b: &RouteOutput) -> Result<(), String> {
+    if a.load != b.load {
+        return Err(format!("load diverged: {:?} vs {:?}", a.load, b.load));
+    }
+    if a.dropped != b.dropped {
+        return Err(format!("dropped diverged: {} vs {}", a.dropped, b.dropped));
+    }
+    if a.assignments.len() != b.assignments.len() {
+        return Err(format!(
+            "assignment count diverged: {} vs {}",
+            a.assignments.len(),
+            b.assignments.len()
+        ));
+    }
+    for (i, (x, y)) in a.assignments.iter().zip(&b.assignments).enumerate() {
+        if (x.token, x.expert, x.position) != (y.token, y.expert, y.position)
+            || x.gate.to_bits() != y.gate.to_bits()
+        {
+            return Err(format!("assignment {i} diverged: {x:?} vs {y:?}"));
+        }
+    }
+    Ok(())
+}
 
 /// Size bounds handed to generators; shrinking lowers `max`.
 #[derive(Debug, Clone, Copy)]

@@ -82,7 +82,7 @@ fn bench_config<F: FnMut()>(
         }
         per_iter.push(t0.elapsed().as_nanos() as f64 / iters as f64);
     }
-    per_iter.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    per_iter.sort_by(f64::total_cmp);
     let pick = |p: f64| per_iter[((p * (per_iter.len() - 1) as f64).round()) as usize];
     BenchResult {
         name: name.to_string(),

@@ -1,0 +1,385 @@
+//! Persistent worker pool for the routing hot path (rayon is not in the
+//! offline vendor set).
+//!
+//! The native backend used to spawn one scoped thread per layer on every
+//! `step()` — a 12-layer config cost 12 spawns/joins per step regardless
+//! of core count. This pool spawns its threads once (bounded by
+//! [`std::thread::available_parallelism`]) and hands them work units
+//! through a shared queue; [`WorkerPool::parallel_for`] is the only
+//! scheduling primitive the hot path needs.
+//!
+//! Determinism contract: `parallel_for(n, body)` runs `body(i)` exactly
+//! once for every `i in 0..n`, with no promise about order or about which
+//! thread runs which index. Callers that want bitwise-identical results
+//! across pool sizes must make each work unit a pure function of its
+//! index — which is exactly how the routing engine and the native
+//! backend's gate generation are written (per-shard seeds, disjoint
+//! output slices). The caller's thread participates in the loop, so a
+//! pool with zero workers degrades to a plain serial loop and nested
+//! `parallel_for` calls cannot deadlock (a blocked caller drains the
+//! queue while it waits).
+
+use std::collections::VecDeque;
+use std::panic::{catch_unwind, AssertUnwindSafe};
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
+use std::sync::{Arc, Condvar, Mutex, OnceLock};
+use std::thread::JoinHandle;
+use std::time::Duration;
+
+type Job = Box<dyn FnOnce() + Send + 'static>;
+
+struct Shared {
+    queue: Mutex<VecDeque<Job>>,
+    work_ready: Condvar,
+    shutdown: AtomicBool,
+}
+
+/// Completion latch for one `parallel_for` batch.
+struct Latch {
+    state: Mutex<LatchState>,
+    done: Condvar,
+}
+
+struct LatchState {
+    remaining: usize,
+    panicked: bool,
+}
+
+impl Latch {
+    fn new(remaining: usize) -> Self {
+        Self { state: Mutex::new(LatchState { remaining, panicked: false }), done: Condvar::new() }
+    }
+
+    fn count_down(&self, panicked: bool) {
+        let mut st = self.state.lock().unwrap();
+        st.remaining -= 1;
+        st.panicked |= panicked;
+        if st.remaining == 0 {
+            self.done.notify_all();
+        }
+    }
+}
+
+/// A fixed set of persistent worker threads plus a shared work queue.
+pub struct WorkerPool {
+    shared: Arc<Shared>,
+    workers: usize,
+    handles: Vec<JoinHandle<()>>,
+}
+
+impl WorkerPool {
+    /// Spawn a pool with exactly `workers` threads. Zero is valid: every
+    /// `parallel_for` then runs inline on the caller.
+    pub fn new(workers: usize) -> Self {
+        let shared = Arc::new(Shared {
+            queue: Mutex::new(VecDeque::new()),
+            work_ready: Condvar::new(),
+            shutdown: AtomicBool::new(false),
+        });
+        let handles = (0..workers)
+            .map(|i| {
+                let shared = Arc::clone(&shared);
+                std::thread::Builder::new()
+                    .name(format!("m6t-pool-{i}"))
+                    .spawn(move || worker_loop(&shared))
+                    .expect("failed to spawn pool worker")
+            })
+            .collect();
+        Self { shared, workers, handles }
+    }
+
+    /// Number of worker threads (the caller participates on top of these).
+    pub fn workers(&self) -> usize {
+        self.workers
+    }
+
+    /// Run `body(i)` exactly once for every `i in 0..items`, spreading the
+    /// indices over the pool plus the calling thread. Returns only after
+    /// every index has completed; panics (once) if any `body` panicked.
+    pub fn parallel_for<'scope>(&self, items: usize, body: &(dyn Fn(usize) + Sync + 'scope)) {
+        if items == 0 {
+            return;
+        }
+        let helpers = self.workers.min(items.saturating_sub(1));
+        if helpers == 0 {
+            for i in 0..items {
+                body(i);
+            }
+            return;
+        }
+        // SAFETY: the latch below guarantees every helper job has finished
+        // (and thus dropped its copy of this reference) before this
+        // function returns — even when the caller's own loop panics — so
+        // the 'scope borrow never escapes its true lifetime.
+        let body_static: &'static (dyn Fn(usize) + Sync) = unsafe {
+            std::mem::transmute::<&(dyn Fn(usize) + Sync), &'static (dyn Fn(usize) + Sync)>(body)
+        };
+        let next = Arc::new(AtomicUsize::new(0));
+        let latch = Arc::new(Latch::new(helpers));
+        {
+            let mut q = self.shared.queue.lock().unwrap();
+            for _ in 0..helpers {
+                let next = Arc::clone(&next);
+                let latch = Arc::clone(&latch);
+                q.push_back(Box::new(move || {
+                    let res = catch_unwind(AssertUnwindSafe(|| loop {
+                        let i = next.fetch_add(1, Ordering::Relaxed);
+                        if i >= items {
+                            break;
+                        }
+                        body_static(i);
+                    }));
+                    latch.count_down(res.is_err());
+                }));
+            }
+        }
+        self.shared.work_ready.notify_all();
+        // the caller claims indices too: a busy pool never stalls the loop
+        let caller = catch_unwind(AssertUnwindSafe(|| loop {
+            let i = next.fetch_add(1, Ordering::Relaxed);
+            if i >= items {
+                break;
+            }
+            body(i);
+        }));
+        let helper_panicked = self.wait_draining(&latch);
+        if let Err(payload) = caller {
+            std::panic::resume_unwind(payload);
+        }
+        if helper_panicked {
+            panic!("parallel_for: a pool worker panicked while running a work unit");
+        }
+    }
+
+    /// Block until `latch` opens, helping with queued jobs in the
+    /// meantime so nested `parallel_for` calls cannot deadlock.
+    fn wait_draining(&self, latch: &Latch) -> bool {
+        loop {
+            let job = {
+                let st = latch.state.lock().unwrap();
+                if st.remaining == 0 {
+                    return st.panicked;
+                }
+                drop(st);
+                self.shared.queue.lock().unwrap().pop_front()
+            };
+            match job {
+                // jobs track their own completion; a panicking job must
+                // not unwind through us and skip our own latch wait
+                Some(j) => {
+                    let _ = catch_unwind(AssertUnwindSafe(j));
+                }
+                None => {
+                    let st = latch.state.lock().unwrap();
+                    if st.remaining == 0 {
+                        return st.panicked;
+                    }
+                    let (st, _timeout) =
+                        latch.done.wait_timeout(st, Duration::from_millis(1)).unwrap();
+                    if st.remaining == 0 {
+                        return st.panicked;
+                    }
+                }
+            }
+        }
+    }
+}
+
+impl Drop for WorkerPool {
+    fn drop(&mut self) {
+        // store shutdown while holding the queue mutex: a worker is then
+        // either before its own critical section (it will see the flag)
+        // or already parked in wait() (the notify below wakes it) — a
+        // store outside the lock could land between a worker's check and
+        // its wait, losing the only wakeup and hanging join() forever
+        {
+            let _q = self.shared.queue.lock().unwrap();
+            self.shared.shutdown.store(true, Ordering::Release);
+        }
+        self.shared.work_ready.notify_all();
+        for h in self.handles.drain(..) {
+            let _ = h.join();
+        }
+    }
+}
+
+fn worker_loop(shared: &Shared) {
+    loop {
+        let job = {
+            let mut q = shared.queue.lock().unwrap();
+            loop {
+                if let Some(j) = q.pop_front() {
+                    break Some(j);
+                }
+                if shared.shutdown.load(Ordering::Acquire) {
+                    break None;
+                }
+                q = shared.work_ready.wait(q).unwrap();
+            }
+        };
+        match job {
+            // keep the worker alive across panicking jobs; the job's own
+            // latch reports the failure to whoever is waiting on it
+            Some(j) => {
+                let _ = catch_unwind(AssertUnwindSafe(j));
+            }
+            None => return,
+        }
+    }
+}
+
+/// Shard dispatch policy shared by every token-sharded hot-path phase:
+/// run `body(s)` for `s in 0..shards` on `pool` (or the global pool when
+/// `None`) when `work` crosses `min_work` and there is more than one
+/// shard; as a plain serial loop on the caller otherwise. Both paths
+/// produce identical outputs, and the global pool is only instantiated
+/// if the parallel branch is actually taken.
+pub fn run_shards(
+    pool: Option<&WorkerPool>,
+    shards: usize,
+    work: usize,
+    min_work: usize,
+    body: &(dyn Fn(usize) + Sync),
+) {
+    if shards > 1 && work >= min_work {
+        pool.unwrap_or_else(global).parallel_for(shards, body);
+    } else {
+        for s in 0..shards {
+            body(s);
+        }
+    }
+}
+
+/// Default worker count: one per available core, capped — routing shards
+/// are memory-bandwidth-bound well before 8 threads.
+pub fn default_workers() -> usize {
+    std::thread::available_parallelism().map(|n| n.get()).unwrap_or(2).min(8)
+}
+
+/// The process-wide pool the hot path uses unless a caller injects its
+/// own (tests inject 1- and 2-worker pools to pin determinism).
+pub fn global() -> &'static WorkerPool {
+    static GLOBAL: OnceLock<WorkerPool> = OnceLock::new();
+    GLOBAL.get_or_init(|| WorkerPool::new(default_workers()))
+}
+
+/// Raw pointer that may cross thread boundaries. Used to hand each
+/// `parallel_for` work unit its disjoint slice of a shared output buffer.
+///
+/// Safety contract (on the *user*, not this type): work units must write
+/// through non-overlapping ranges, and the buffer must outlive the
+/// `parallel_for` call — which it does, because `parallel_for` joins every
+/// unit before returning.
+pub struct SendPtr<T>(*mut T);
+
+impl<T> SendPtr<T> {
+    pub fn new(ptr: *mut T) -> Self {
+        Self(ptr)
+    }
+    pub fn get(&self) -> *mut T {
+        self.0
+    }
+}
+
+// manual impls because derive would demand `T: Clone/Copy`, which a raw
+// pointer wrapper does not need
+#[allow(clippy::expl_impl_clone_on_copy)]
+impl<T> Clone for SendPtr<T> {
+    fn clone(&self) -> Self {
+        *self
+    }
+}
+impl<T> Copy for SendPtr<T> {}
+unsafe impl<T> Send for SendPtr<T> {}
+unsafe impl<T> Sync for SendPtr<T> {}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn covers_every_index_exactly_once() {
+        let pool = WorkerPool::new(3);
+        let hits: Vec<AtomicUsize> = (0..1000).map(|_| AtomicUsize::new(0)).collect();
+        pool.parallel_for(1000, &|i| {
+            hits[i].fetch_add(1, Ordering::Relaxed);
+        });
+        assert!(hits.iter().all(|h| h.load(Ordering::Relaxed) == 1));
+    }
+
+    #[test]
+    fn zero_worker_pool_runs_inline() {
+        let pool = WorkerPool::new(0);
+        let sum = AtomicUsize::new(0);
+        pool.parallel_for(100, &|i| {
+            sum.fetch_add(i, Ordering::Relaxed);
+        });
+        assert_eq!(sum.load(Ordering::Relaxed), 99 * 100 / 2);
+    }
+
+    #[test]
+    fn disjoint_writes_identical_across_pool_sizes() {
+        let run = |workers: usize| -> Vec<u64> {
+            let pool = WorkerPool::new(workers);
+            let mut out = vec![0u64; 4096];
+            let ptr = SendPtr::new(out.as_mut_ptr());
+            pool.parallel_for(64, &|s| {
+                // each unit owns a disjoint 64-element chunk
+                let chunk = unsafe { std::slice::from_raw_parts_mut(ptr.get().add(s * 64), 64) };
+                for (j, v) in chunk.iter_mut().enumerate() {
+                    *v = (s as u64) * 1_000_003 + j as u64;
+                }
+            });
+            out
+        };
+        let expect = run(0);
+        for workers in [1, 2, default_workers()] {
+            assert_eq!(run(workers), expect, "pool size {workers} diverged");
+        }
+    }
+
+    #[test]
+    fn nested_parallel_for_does_not_deadlock() {
+        let pool = WorkerPool::new(2);
+        let sum = AtomicUsize::new(0);
+        pool.parallel_for(4, &|_outer| {
+            pool.parallel_for(8, &|i| {
+                sum.fetch_add(i + 1, Ordering::Relaxed);
+            });
+        });
+        assert_eq!(sum.load(Ordering::Relaxed), 4 * (8 * 9 / 2));
+    }
+
+    #[test]
+    fn borrowing_the_stack_is_fine() {
+        // the whole point of the transmute: bodies may borrow locals
+        let data: Vec<usize> = (0..512).collect();
+        let pool = WorkerPool::new(2);
+        let sum = AtomicUsize::new(0);
+        pool.parallel_for(data.len(), &|i| {
+            sum.fetch_add(data[i], Ordering::Relaxed);
+        });
+        assert_eq!(sum.load(Ordering::Relaxed), 511 * 512 / 2);
+    }
+
+    #[test]
+    fn body_panic_propagates_and_pool_survives() {
+        let pool = WorkerPool::new(2);
+        // panic on late indices so helpers are guaranteed a share of them;
+        // whichever thread hits one, parallel_for must panic exactly once
+        let result = std::panic::catch_unwind(AssertUnwindSafe(|| {
+            pool.parallel_for(64, &|i| {
+                if i >= 32 {
+                    panic!("boom at {i}");
+                }
+            });
+        }));
+        assert!(result.is_err(), "parallel_for must propagate body panics");
+        // pool must still be usable after a panicked batch
+        let sum = AtomicUsize::new(0);
+        pool.parallel_for(16, &|i| {
+            sum.fetch_add(i, Ordering::Relaxed);
+        });
+        assert_eq!(sum.load(Ordering::Relaxed), 15 * 16 / 2);
+    }
+}

@@ -78,10 +78,15 @@ impl Ema {
 }
 
 /// Percentile over a scratch copy (nearest-rank). p in [0, 100].
+///
+/// NaN-tolerant: `f64::total_cmp` sorts NaNs to the end instead of
+/// panicking the way `partial_cmp().unwrap()` used to — a NaN-poisoned
+/// latency series degrades the top percentiles rather than killing the
+/// whole report.
 pub fn percentile(xs: &[f64], p: f64) -> f64 {
     assert!(!xs.is_empty());
     let mut v = xs.to_vec();
-    v.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    v.sort_by(f64::total_cmp);
     let rank = ((p / 100.0) * (v.len() as f64 - 1.0)).round() as usize;
     v[rank.min(v.len() - 1)]
 }
@@ -155,6 +160,17 @@ mod tests {
         assert_eq!(percentile(&xs, 0.0), 1.0);
         assert_eq!(percentile(&xs, 50.0), 3.0);
         assert_eq!(percentile(&xs, 100.0), 5.0);
+    }
+
+    #[test]
+    fn percentile_tolerates_nan() {
+        // regression: partial_cmp().unwrap() panicked on NaN input
+        let xs = [f64::NAN, 1.0, 3.0, 2.0];
+        assert_eq!(percentile(&xs, 0.0), 1.0, "finite values sort below NaN");
+        assert_eq!(percentile(&xs, 50.0), 3.0);
+        assert!(percentile(&xs, 100.0).is_nan(), "NaN occupies the top rank");
+        // all-NaN input still must not panic
+        assert!(percentile(&[f64::NAN, f64::NAN], 50.0).is_nan());
     }
 
     #[test]

@@ -1,0 +1,77 @@
+//! The native backend's step must be a pure function of (state, step,
+//! batch) — NOT of the worker-pool geometry. These tests pin bitwise-
+//! identical [`StepStats`] across pool sizes 1, 2, and the default
+//! (available-parallelism) pool, replacing the guarantee the old
+//! thread-per-layer spawn provided only by accident.
+
+use std::sync::Arc;
+
+use m6t::data::{Batcher, Split};
+use m6t::runtime::native::registry;
+use m6t::runtime::{Backend as _, NativeBackend, StepStats};
+use m6t::util::pool::{default_workers, WorkerPool};
+
+/// Everything in StepStats, as bits: f32/f64 payloads must match exactly,
+/// not just approximately.
+fn stats_bits(s: &StepStats) -> (u32, u32, u32, Vec<u32>, Vec<u32>, u64, usize, usize) {
+    (
+        s.loss.to_bits(),
+        s.aux_loss.to_bits(),
+        s.grad_norm.to_bits(),
+        s.load.iter().map(|x| x.to_bits()).collect(),
+        s.dropped.iter().map(|x| x.to_bits()).collect(),
+        s.sim_step_ms.to_bits(),
+        s.layers,
+        s.experts,
+    )
+}
+
+fn run_steps(backend: &NativeBackend, steps: usize) -> Vec<(u32, u32, u32, Vec<u32>, Vec<u32>, u64, usize, usize)> {
+    let cfg = backend.info().config.clone();
+    let mut state = backend.init_state(7).expect("init");
+    let mut batcher = Batcher::for_config(&cfg, Split::Train, 7);
+    let mut out = Vec::with_capacity(steps);
+    for _ in 0..steps {
+        let batch = batcher.next_batch();
+        let (next, stats) = backend.step(state, &batch).expect("step");
+        state = next;
+        out.push(stats_bits(&stats));
+    }
+    out
+}
+
+#[test]
+fn step_stats_bitwise_identical_across_pool_sizes() {
+    // deep-sim: 12 layers (the old code spawned 12 unpooled threads for
+    // it); base-top2 / base-4top1: paper-base geometry with 1024 tokens —
+    // multiple 512-token shards, crossing every parallel threshold in
+    // both the gate-gen and argmax phases for top-k and prototyping
+    for name in ["deep-sim", "base-top2", "base-4top1"] {
+        let cfg = registry()
+            .into_iter()
+            .find(|c| c.name == name)
+            .expect("registry variant");
+        let reference = run_steps(&NativeBackend::with_pool(&cfg, Arc::new(WorkerPool::new(1))), 3);
+        for workers in [2usize, default_workers()] {
+            let got =
+                run_steps(&NativeBackend::with_pool(&cfg, Arc::new(WorkerPool::new(workers))), 3);
+            assert_eq!(got, reference, "{name}: pool size {workers} diverged from size 1");
+        }
+        // the default constructor (process-wide pool) must agree too
+        let got = run_steps(&NativeBackend::new(&cfg), 3);
+        assert_eq!(got, reference, "{name}: global-pool backend diverged");
+    }
+}
+
+#[test]
+fn zero_worker_pool_matches_parallel_pools() {
+    // a zero-worker pool runs everything inline on the caller: the
+    // serial path must be bitwise identical to the parallel one
+    let cfg = registry()
+        .into_iter()
+        .find(|c| c.name == "large-sim")
+        .expect("registry variant");
+    let serial = run_steps(&NativeBackend::with_pool(&cfg, Arc::new(WorkerPool::new(0))), 2);
+    let parallel = run_steps(&NativeBackend::with_pool(&cfg, Arc::new(WorkerPool::new(3))), 2);
+    assert_eq!(serial, parallel);
+}

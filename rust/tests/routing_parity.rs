@@ -1,0 +1,154 @@
+//! Golden-fixture parity with `python/compile/moe.py` routing semantics,
+//! checked against BOTH implementations (the naive `route()` reference
+//! and the allocation-free `RoutingEngine`):
+//!
+//! * top-k: gate values renormalized over all k selections — *including
+//!   dropped ones* (python lines 85-87: the denominator is the sum over
+//!   rounds before `keep` masking);
+//! * top-1: NO renormalization (`if renormalize and rounds > 1`): the
+//!   combine gate is the raw per-token max softmax gate, < 1.0;
+//! * prototyping: raw gates, no cross-prototype renormalization (Eq. 3);
+//!   prototype outputs simply sum.
+//!
+//! The fixtures are small enough to verify by hand; positions follow the
+//! round-major cumulative-counter order of the HLO's cumsum.
+
+use m6t::config::Routing;
+use m6t::moe::{route, RouteOutput, RouterSpec, RoutingEngine};
+use m6t::testing::route_outputs_bitwise_eq;
+
+const EPS: f32 = 1e-6;
+
+/// Run a fixture through both implementations and check them against the
+/// hand-computed expectation.
+fn check_fixture(
+    name: &str,
+    gates: &[f32],
+    tokens: usize,
+    spec: &RouterSpec,
+    want: &[(usize, usize, usize, f32)], // (token, expert, position, gate)
+    want_load: &[u32],
+    want_dropped: u32,
+) {
+    let reference = route(gates, tokens, spec);
+    let engine = RoutingEngine::new().route(gates, tokens, spec);
+    for (which, out) in [("reference", &reference), ("engine", &engine)] {
+        assert_eq!(out.load, want_load, "{name}/{which}: load");
+        assert_eq!(out.dropped, want_dropped, "{name}/{which}: dropped");
+        assert_eq!(out.assignments.len(), want.len(), "{name}/{which}: assignment count");
+        for (i, (a, &(t, e, p, g))) in out.assignments.iter().zip(want).enumerate() {
+            assert_eq!((a.token, a.expert, a.position), (t, e, p), "{name}/{which}: slot {i}");
+            assert!(
+                (a.gate - g).abs() < EPS,
+                "{name}/{which}: slot {i} gate {} != {g}",
+                a.gate
+            );
+        }
+    }
+    // and the two implementations must agree bitwise with each other
+    assert_identical(name, &reference, &engine);
+}
+
+fn assert_identical(name: &str, a: &RouteOutput, b: &RouteOutput) {
+    if let Err(e) = route_outputs_bitwise_eq(a, b) {
+        panic!("{name}: implementations diverged: {e}");
+    }
+}
+
+#[test]
+fn top2_ample_renormalizes_over_both_selections() {
+    // T=2, E=3, C=4 (ample). Row-major gates:
+    //   t0: [0.2, 0.5, 0.3] -> rounds pick e1 (0.5) then e2 (0.3)
+    //   t1: [0.6, 0.1, 0.3] -> rounds pick e0 (0.6) then e2 (0.3)
+    let gates = [0.2, 0.5, 0.3, 0.6, 0.1, 0.3];
+    let spec = RouterSpec { routing: Routing::TopK(2), num_experts: 3, capacity: 4 };
+    check_fixture(
+        "top2-ample",
+        &gates,
+        2,
+        &spec,
+        &[
+            (0, 1, 0, 0.5 / 0.8), // 0.625
+            (0, 2, 0, 0.3 / 0.8), // 0.375
+            (1, 0, 0, 0.6 / 0.9), // 0.6667
+            (1, 2, 1, 0.3 / 0.9), // 0.3333
+        ],
+        &[1, 1, 2],
+        0,
+    );
+}
+
+#[test]
+fn top2_tight_keeps_dropped_selection_in_denominator() {
+    // T=3, E=2, C=1. Round 0: t0->e0 kept, t1->e0 DROPPED, t2->e1 kept.
+    // Round 1: t0->e1 dropped, t1->e1 dropped, t2->e0 dropped.
+    // t0 keeps only its e0 selection, but its combine gate is
+    // 0.7 / (0.7 + 0.3) = 0.7 — the dropped second selection stays in the
+    // denominator, exactly as python renormalizes before `keep` masking.
+    let gates = [0.7, 0.3, 0.8, 0.2, 0.4, 0.6];
+    let spec = RouterSpec { routing: Routing::TopK(2), num_experts: 2, capacity: 1 };
+    check_fixture(
+        "top2-tight",
+        &gates,
+        3,
+        &spec,
+        &[(0, 0, 0, 0.7), (2, 1, 0, 0.6)],
+        &[1, 1],
+        4,
+    );
+}
+
+#[test]
+fn top1_gate_is_the_raw_softmax_gate() {
+    // headline bugfix fixture: rounds == 1 -> no renormalization.
+    // The kept gate is the raw row max (0.5, 0.6), NOT ~1.0.
+    let gates = [0.2, 0.5, 0.3, 0.6, 0.1, 0.3];
+    let spec = RouterSpec { routing: Routing::TopK(1), num_experts: 3, capacity: 4 };
+    check_fixture(
+        "top1-raw",
+        &gates,
+        2,
+        &spec,
+        &[(0, 1, 0, 0.5), (1, 0, 0, 0.6)],
+        &[1, 1, 0],
+        0,
+    );
+}
+
+#[test]
+fn prototyping_keeps_raw_gates_without_cross_prototype_renorm() {
+    // E=4 split into Z=2 prototypes of F=2. Per-group softmaxed gates:
+    //   t0: group0 [0.6, 0.4], group1 [0.3, 0.7] -> picks e0, e3
+    //   t1: group0 [0.2, 0.8], group1 [0.5, 0.5] -> picks e1, e2 (tie:
+    //       first index wins, matching the kernel's argmax)
+    // Emission is prototype-major; gates stay raw (t0's sum is 1.3).
+    let gates = [0.6, 0.4, 0.3, 0.7, 0.2, 0.8, 0.5, 0.5];
+    let spec = RouterSpec { routing: Routing::Prototype(2), num_experts: 4, capacity: 4 };
+    check_fixture(
+        "2top1-raw",
+        &gates,
+        2,
+        &spec,
+        &[(0, 0, 0, 0.6), (1, 1, 0, 0.8), (0, 3, 0, 0.7), (1, 2, 0, 0.5)],
+        &[1, 1, 1, 1],
+        0,
+    );
+}
+
+#[test]
+fn prototype_capacity_is_shared_per_expert_not_per_prototype() {
+    // Both tokens' group-0 router picks e0; C=1 drops the second.
+    //   t0: group0 [0.9, 0.1], group1 [0.5, 0.5]
+    //   t1: group0 [0.8, 0.2], group1 [0.1, 0.9]
+    let gates = [0.9, 0.1, 0.5, 0.5, 0.8, 0.2, 0.1, 0.9];
+    let spec = RouterSpec { routing: Routing::Prototype(2), num_experts: 4, capacity: 1 };
+    check_fixture(
+        "2top1-tight",
+        &gates,
+        2,
+        &spec,
+        &[(0, 0, 0, 0.9), (0, 2, 0, 0.5), (1, 3, 0, 0.9)],
+        &[1, 0, 1, 1],
+        1,
+    );
+}

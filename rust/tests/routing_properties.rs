@@ -1,11 +1,13 @@
 //! Property tests over the host-side routing mirror (no XLA needed):
 //! capacity, slot uniqueness, drop accounting, prototype disjointness,
-//! and cross-checks between top-k and prototyping.
+//! cross-checks between top-k and prototyping, and bitwise equivalence
+//! between the naive `route()` reference and the allocation-free
+//! `RoutingEngine`.
 
 use m6t::config::Routing;
-use m6t::moe::{route, RouterSpec};
 use m6t::moe::router::softmax_gates;
-use m6t::testing::{check, gen};
+use m6t::moe::{route, RouterSpec, RoutingEngine};
+use m6t::testing::{check, gen, route_outputs_bitwise_eq as diff};
 use m6t::util::rng::Rng;
 
 fn random_spec(rng: &mut Rng, b: m6t::testing::Bounds) -> (Vec<f32>, usize, RouterSpec) {
@@ -107,8 +109,60 @@ fn prop_prototype_assignments_stay_in_group() {
 }
 
 #[test]
+fn prop_engine_matches_reference() {
+    // one engine across all cases: also exercises scratch reuse over
+    // wildly varying (tokens, experts, k) shapes
+    let mut engine = RoutingEngine::new();
+    check("engine-parity", 250, |rng, b| {
+        let (gates, tokens, spec) = random_spec(rng, b);
+        let expect = route(&gates, tokens, &spec);
+        let got = engine.route(&gates, tokens, &spec);
+        diff(&got, &expect)
+    });
+}
+
+#[test]
+fn prop_engine_matches_reference_tight_capacity_and_k_eq_e() {
+    // the edge cases the issue calls out explicitly: capacity 1 (heavy
+    // drops), ample capacity, k == E (dense top-E), and full prototyping
+    // (z == E, one expert per group)
+    let mut engine = RoutingEngine::new();
+    check("engine-parity-edges", 120, |rng, b| {
+        let (tokens, experts, _) = gen::routing_shape(rng, b);
+        let logits: Vec<f32> = (0..tokens * experts).map(|_| rng.normal() as f32).collect();
+        let specs = [
+            RouterSpec {
+                routing: Routing::TopK(experts as u32),
+                num_experts: experts,
+                capacity: 1,
+            },
+            RouterSpec {
+                routing: Routing::TopK(experts as u32),
+                num_experts: experts,
+                capacity: tokens,
+            },
+            RouterSpec {
+                routing: Routing::Prototype(experts as u32),
+                num_experts: experts,
+                capacity: 1,
+            },
+        ];
+        for spec in specs {
+            let z = spec.routing.prototypes() as usize;
+            let gates = softmax_gates(&logits, tokens, experts, z);
+            let expect = route(&gates, tokens, &spec);
+            let got = engine.route(&gates, tokens, &spec);
+            diff(&got, &expect).map_err(|e| format!("{:?}: {e}", spec.routing))?;
+        }
+        Ok(())
+    });
+}
+
+#[test]
 fn prop_top1_and_1proto_identical() {
-    // TopK(1) and Prototype(1) are the same algorithm
+    // TopK(1) and Prototype(1) are the same algorithm — and since the
+    // top-1 gate-parity fix (no renormalization at k = 1) their combine
+    // gates agree bitwise too, not just their load/drop counts
     check("top1-eq-1top1", 100, |rng, b| {
         let (tokens, experts, capacity) = gen::routing_shape(rng, b);
         let logits: Vec<f32> = (0..tokens * experts).map(|_| rng.normal() as f32).collect();
@@ -123,10 +177,7 @@ fn prop_top1_and_1proto_identical() {
             tokens,
             &RouterSpec { routing: Routing::Prototype(1), num_experts: experts, capacity },
         );
-        if a.load != b2.load || a.dropped != b2.dropped {
-            return Err("top-1 != 1 top-1".into());
-        }
-        Ok(())
+        diff(&a, &b2)
     });
 }
 
