@@ -18,6 +18,8 @@
 //! else is predicted. `tests` assert the calibrated model lands within
 //! tolerance of the paper's other known cells.
 
+use anyhow::{bail, Result};
+
 use crate::config::{CapacityMode, ModelConfig, Routing};
 use crate::flops::forward_flops;
 
@@ -62,19 +64,69 @@ impl HardwareModel {
 
     /// Calibrate `framework_layer` so that `cfg` under `routing`/`mode`
     /// predicts exactly `target_ms` — one-point anchor calibration.
-    pub fn calibrated_to(
+    ///
+    /// Fails when the anchor sits *below* the zero-overhead prediction:
+    /// no non-negative framework overhead can fit such a target, which
+    /// means the base hardware model over-predicts and "calibrated"
+    /// would be a lie. Use [`HardwareModel::calibrated_to`] for the
+    /// clamp-and-warn behavior.
+    pub fn try_calibrated_to(
         mut self,
         cfg: &ModelConfig,
         routing: Routing,
         mode: CapacityMode,
         target_ms: f64,
-    ) -> Self {
+    ) -> Result<Self> {
         self.framework_layer = 0.0;
         let base = simulate_step(cfg, routing, mode, &self).total_ms();
         let residual_ms = target_ms - base;
-        self.framework_layer = (residual_ms / cfg.layers as f64 / 1e3).max(0.0);
-        self
+        if residual_ms < 0.0 {
+            bail!(
+                "calibration anchor {target_ms:.2} ms is below the zero-overhead \
+                 prediction {base:.2} ms for {}/{}: the base hardware model \
+                 over-predicts this cell and no non-negative framework_layer can fit it",
+                cfg.name,
+                routing.name()
+            );
+        }
+        self.framework_layer = residual_ms / cfg.layers as f64 / 1e3;
+        Ok(self)
     }
+
+    /// Anchor calibration with the historical clamping behavior: an
+    /// unreachable (too-cheap) target clamps `framework_layer` to zero —
+    /// but no longer silently: the over-prediction is reported on stderr
+    /// so a miscalibrated base model cannot hide behind its anchor.
+    pub fn calibrated_to(
+        self,
+        cfg: &ModelConfig,
+        routing: Routing,
+        mode: CapacityMode,
+        target_ms: f64,
+    ) -> Self {
+        match self.clone().try_calibrated_to(cfg, routing, mode, target_ms) {
+            Ok(hw) => hw,
+            Err(e) => {
+                eprintln!("[cluster] warning: {e:#}; clamping framework_layer to 0");
+                let mut hw = self;
+                hw.framework_layer = 0.0;
+                hw
+            }
+        }
+    }
+}
+
+/// Measured expert-parallel traffic from an executed
+/// [`DispatchPlan`](crate::moe::DispatchPlan) step — what
+/// [`simulate_step_observed`] consumes in place of the analytic O(ECM)
+/// all-to-all estimate.
+#[derive(Debug, Clone, Copy)]
+pub struct ObservedTraffic {
+    /// measured all-to-all payload bytes per MoE layer per direction
+    pub a2a_bytes_per_layer: f64,
+    /// max/mean per-shard token load (>= 1): expert compute runs at the
+    /// pace of the most-loaded shard, so imbalance stretches that phase
+    pub shard_balance: f64,
 }
 
 /// Per-phase timing of one simulated training step (milliseconds).
@@ -105,12 +157,37 @@ impl StepTime {
     }
 }
 
-/// Simulate one training step of `cfg` with the given routing strategy.
+/// Simulate one training step of `cfg` with the given routing strategy,
+/// using the analytic O(ECM) all-to-all estimate.
 pub fn simulate_step(
     cfg: &ModelConfig,
     routing: Routing,
     mode: CapacityMode,
     hw: &HardwareModel,
+) -> StepTime {
+    simulate(cfg, routing, mode, hw, None)
+}
+
+/// Simulate one training step with *measured* dispatch traffic: the
+/// observed all-to-all byte volume replaces the analytic per-layer O(ECM)
+/// estimate, and the observed shard imbalance stretches expert compute
+/// (the most-loaded shard paces the exchange).
+pub fn simulate_step_observed(
+    cfg: &ModelConfig,
+    routing: Routing,
+    mode: CapacityMode,
+    hw: &HardwareModel,
+    observed: &ObservedTraffic,
+) -> StepTime {
+    simulate(cfg, routing, mode, hw, Some(observed))
+}
+
+fn simulate(
+    cfg: &ModelConfig,
+    routing: Routing,
+    mode: CapacityMode,
+    hw: &HardwareModel,
+    observed: Option<&ObservedTraffic>,
 ) -> StepTime {
     let f = forward_flops(cfg, routing, mode);
     let l = cfg.layers as f64;
@@ -122,6 +199,11 @@ pub fn simulate_step(
     let mut t = StepTime::default();
     t.attention_ms = ms(f.attention) * fb;
     t.expert_ms = ms(f.expert_ffn) * fb;
+    if let Some(obs) = observed {
+        // imbalanced shards stretch expert compute: everyone waits for
+        // the most-loaded shard before the combine all-to-all
+        t.expert_ms *= obs.shard_balance.max(1.0);
+    }
     t.dispatch_combine_ms = ms(f.dispatch_combine) * fb;
     t.head_ms = ms(f.embed_head) * fb;
 
@@ -133,8 +215,10 @@ pub fn simulate_step(
         ms(f.gating) * fb + l * (rounds * hw.routing_round + (protos - 1.0) * hw.proto_overhead) * 1e3;
 
     // all-to-all: dispatch + combine on forward, their transposes on
-    // backward => 4 transfers per MoE layer
-    let a2a_one = f.a2a_bytes_per_layer / hw.net_bw + hw.a2a_latency * (d - 1.0).max(0.0);
+    // backward => 4 transfers per MoE layer. With an observed plan the
+    // measured payload replaces the analytic O(ECM) buffer volume.
+    let a2a_bytes = observed.map_or(f.a2a_bytes_per_layer, |o| o.a2a_bytes_per_layer);
+    let a2a_one = a2a_bytes / hw.net_bw + hw.a2a_latency * (d - 1.0).max(0.0);
     t.a2a_ms = l * 4.0 * a2a_one * 1e3;
 
     // data-parallel all-reduce of dense (non-expert) gradients:
@@ -255,6 +339,54 @@ mod tests {
         // plausible step time (paper trained 30k steps in days)
         let ms = predict(&paper::one_t(), Routing::Prototype(2));
         assert!((200.0..60_000.0).contains(&ms), "1T step {ms} ms");
+    }
+
+    #[test]
+    fn observed_traffic_replaces_analytic_a2a() {
+        let base = paper::base();
+        let hw = table2_hardware();
+        let analytic = simulate_step(&base, Routing::TopK(2), CapacityMode::Times1, &hw);
+        // perfectly balanced exchange moving half the analytic volume
+        let half = forward_flops(&base, Routing::TopK(2), CapacityMode::Times1)
+            .a2a_bytes_per_layer
+            / 2.0;
+        let obs = ObservedTraffic { a2a_bytes_per_layer: half, shard_balance: 1.0 };
+        let observed =
+            simulate_step_observed(&base, Routing::TopK(2), CapacityMode::Times1, &hw, &obs);
+        assert!(observed.a2a_ms < analytic.a2a_ms, "less traffic must cost less");
+        assert_eq!(observed.expert_ms, analytic.expert_ms, "balanced: no straggler stretch");
+        // a 2x-imbalanced exchange doubles the expert critical path
+        let skewed = ObservedTraffic { a2a_bytes_per_layer: half, shard_balance: 2.0 };
+        let stretched =
+            simulate_step_observed(&base, Routing::TopK(2), CapacityMode::Times1, &hw, &skewed);
+        assert!((stretched.expert_ms - 2.0 * analytic.expert_ms).abs() < 1e-9);
+        // zero observed traffic kills the bandwidth term but not latency
+        let silent = ObservedTraffic { a2a_bytes_per_layer: 0.0, shard_balance: 1.0 };
+        let quiet =
+            simulate_step_observed(&base, Routing::TopK(2), CapacityMode::Times1, &hw, &silent);
+        assert!(quiet.a2a_ms < analytic.a2a_ms * 0.2, "quiet {}", quiet.a2a_ms);
+    }
+
+    #[test]
+    fn unreachable_anchor_errors_and_clamps() {
+        // pin the satellite fix: a target below the zero-overhead floor
+        // must surface as an error from try_calibrated_to, and the
+        // clamping path must land exactly at framework_layer == 0
+        let base = paper::base();
+        let err = HardwareModel::v100()
+            .try_calibrated_to(&base, Routing::TopK(2), CapacityMode::Times1, 1.0);
+        assert!(err.is_err(), "1 ms anchor cannot be reachable");
+        let msg = format!("{:#}", err.unwrap_err());
+        assert!(msg.contains("below the zero-overhead prediction"), "{msg}");
+        let clamped = HardwareModel::v100()
+            .calibrated_to(&base, Routing::TopK(2), CapacityMode::Times1, 1.0);
+        assert_eq!(clamped.framework_layer, 0.0);
+        // a reachable anchor still calibrates exactly
+        let ok = HardwareModel::v100()
+            .try_calibrated_to(&base, Routing::TopK(2), CapacityMode::Times1, 218.2)
+            .unwrap();
+        let got = simulate_step(&base, Routing::TopK(2), CapacityMode::Times1, &ok).total_ms();
+        assert!((got - 218.2).abs() < 1e-6);
     }
 
     #[test]

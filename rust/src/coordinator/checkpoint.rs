@@ -6,11 +6,16 @@ use std::fs;
 use std::io::{Read, Write};
 use std::path::Path;
 
-use anyhow::{bail, Context, Result};
+use anyhow::{anyhow, bail, Context, Result};
 
 use crate::runtime::manifest::VariantInfo;
 
 const MAGIC: &[u8; 8] = b"M6TCKPT1";
+
+/// Upper bound on the on-disk leaf count. Real variants carry a handful
+/// of leaves; anything near this is a corrupt header, and bounding it
+/// keeps a hostile `n_leaves` from pre-allocating unbounded memory.
+const MAX_LEAVES: u64 = 1 << 16;
 
 /// Host-side checkpoint: leaf arrays in manifest order + the step counter.
 #[derive(Debug, Clone, PartialEq)]
@@ -45,9 +50,16 @@ impl Checkpoint {
         Ok(())
     }
 
+    /// Load and validate a checkpoint. On-disk sizes are *untrusted*:
+    /// every claimed length is bounded with checked arithmetic against
+    /// sane maxima and the actual file size before a single byte is
+    /// allocated, so a corrupt or truncated file fails with an error
+    /// instead of an OOM abort — and trailing garbage after the last
+    /// leaf is rejected rather than silently ignored.
     pub fn load(path: impl AsRef<Path>) -> Result<Checkpoint> {
         let mut f = fs::File::open(&path)
             .with_context(|| format!("opening checkpoint {:?}", path.as_ref()))?;
+        let file_len = f.metadata()?.len();
         let mut magic = [0u8; 8];
         f.read_exact(&mut magic)?;
         if &magic != MAGIC {
@@ -66,18 +78,42 @@ impl Checkpoint {
         f.read_exact(&mut name)?;
         let variant = String::from_utf8(name).context("checkpoint variant name not utf-8")?;
         f.read_exact(&mut b4)?;
-        let n_leaves = u32::from_le_bytes(b4) as usize;
-        let mut leaves = Vec::with_capacity(n_leaves);
-        for _ in 0..n_leaves {
-            f.read_exact(&mut b8)?;
-            let n = u64::from_le_bytes(b8) as usize;
-            let mut raw = vec![0u8; n * 4];
-            f.read_exact(&mut raw)?;
+        let n_leaves = u32::from_le_bytes(b4) as u64;
+        if n_leaves > MAX_LEAVES {
+            bail!("checkpoint claims {n_leaves} leaves (max {MAX_LEAVES}): corrupt header");
+        }
+        // bytes consumed so far: magic + step + name header + name + leaf count
+        let mut offset: u64 = 8 + 8 + 4 + name_len as u64 + 4;
+        let mut leaves = Vec::with_capacity(n_leaves as usize);
+        for i in 0..n_leaves {
+            f.read_exact(&mut b8).with_context(|| format!("reading leaf {i} header"))?;
+            offset += 8;
+            let n = u64::from_le_bytes(b8);
+            let bytes = n
+                .checked_mul(4)
+                .ok_or_else(|| anyhow!("leaf {i}: element count {n} overflows the byte size"))?;
+            let remaining = file_len.saturating_sub(offset);
+            if bytes > remaining {
+                bail!(
+                    "leaf {i}: claims {bytes} bytes but only {remaining} remain in the \
+                     file (corrupt or truncated checkpoint)"
+                );
+            }
+            let mut raw = vec![0u8; bytes as usize];
+            f.read_exact(&mut raw).with_context(|| format!("reading leaf {i} data"))?;
+            offset += bytes;
             let leaf = raw
                 .chunks_exact(4)
                 .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
                 .collect();
             leaves.push(leaf);
+        }
+        if file_len > offset {
+            bail!(
+                "checkpoint has {} trailing bytes after the last leaf: corrupt file \
+                 or mismatched leaf table",
+                file_len - offset
+            );
         }
         Ok(Checkpoint { variant, step, leaves })
     }
@@ -127,6 +163,86 @@ mod tests {
         let path = std::env::temp_dir().join("m6t-ckpt-bad.bin");
         fs::write(&path, b"NOTMAGIC rest").unwrap();
         assert!(Checkpoint::load(&path).is_err());
+        let _ = fs::remove_file(path);
+    }
+
+    /// A syntactically valid header for one-leaf checkpoints, ending just
+    /// before the leaf length u64.
+    fn header_for(variant: &[u8], n_leaves: u32) -> Vec<u8> {
+        let mut bytes = Vec::new();
+        bytes.extend_from_slice(MAGIC);
+        bytes.extend_from_slice(&7i64.to_le_bytes());
+        bytes.extend_from_slice(&(variant.len() as u32).to_le_bytes());
+        bytes.extend_from_slice(variant);
+        bytes.extend_from_slice(&n_leaves.to_le_bytes());
+        bytes
+    }
+
+    #[test]
+    fn rejects_overflowing_leaf_length() {
+        // regression: `n * 4` used to overflow / feed `vec![0u8; huge]`,
+        // aborting the process on a corrupt file instead of erroring
+        let path = std::env::temp_dir().join("m6t-ckpt-overflow.bin");
+        let mut bytes = header_for(b"base-sim", 1);
+        bytes.extend_from_slice(&u64::MAX.to_le_bytes()); // leaf "length"
+        fs::write(&path, &bytes).unwrap();
+        let err = Checkpoint::load(&path).unwrap_err();
+        assert!(format!("{err:#}").contains("overflow"), "{err:#}");
+        let _ = fs::remove_file(path);
+    }
+
+    #[test]
+    fn rejects_oversized_leaf_length() {
+        // length that multiplies fine but dwarfs the file: must error
+        // before allocating, not OOM
+        let path = std::env::temp_dir().join("m6t-ckpt-oversized.bin");
+        let mut bytes = header_for(b"base-sim", 1);
+        bytes.extend_from_slice(&(1u64 << 40).to_le_bytes());
+        fs::write(&path, &bytes).unwrap();
+        let err = Checkpoint::load(&path).unwrap_err();
+        assert!(format!("{err:#}").contains("remain in the file"), "{err:#}");
+        let _ = fs::remove_file(path);
+    }
+
+    #[test]
+    fn rejects_unreasonable_leaf_count() {
+        let path = std::env::temp_dir().join("m6t-ckpt-leafcount.bin");
+        let bytes = header_for(b"base-sim", u32::MAX);
+        fs::write(&path, &bytes).unwrap();
+        let err = Checkpoint::load(&path).unwrap_err();
+        assert!(format!("{err:#}").contains("leaves"), "{err:#}");
+        let _ = fs::remove_file(path);
+    }
+
+    #[test]
+    fn rejects_truncated_data() {
+        let ck = Checkpoint {
+            variant: "base-sim".into(),
+            step: 5,
+            leaves: vec![vec![1.0; 64]],
+        };
+        let path = std::env::temp_dir().join("m6t-ckpt-truncated.bin");
+        ck.save(&path).unwrap();
+        let full = fs::read(&path).unwrap();
+        fs::write(&path, &full[..full.len() - 10]).unwrap();
+        assert!(Checkpoint::load(&path).is_err(), "truncated file must not load");
+        let _ = fs::remove_file(path);
+    }
+
+    #[test]
+    fn rejects_trailing_garbage() {
+        let ck = Checkpoint {
+            variant: "base-sim".into(),
+            step: 5,
+            leaves: vec![vec![1.0, 2.0]],
+        };
+        let path = std::env::temp_dir().join("m6t-ckpt-trailing.bin");
+        ck.save(&path).unwrap();
+        let mut full = fs::read(&path).unwrap();
+        full.extend_from_slice(b"JUNK");
+        fs::write(&path, &full).unwrap();
+        let err = Checkpoint::load(&path).unwrap_err();
+        assert!(format!("{err:#}").contains("trailing"), "{err:#}");
         let _ = fs::remove_file(path);
     }
 }

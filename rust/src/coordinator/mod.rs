@@ -99,7 +99,9 @@ impl Trainer {
         let info = self.backend.info();
         let mut log = RunLog::new(info.name.clone());
         if let Some(dir) = &self.opts.metrics_dir {
-            log = log.with_sink(dir)?;
+            // a resumed run (checkpoint restore) must append: truncating
+            // the sink would silently destroy its recorded history
+            log = if state.step > 0 { log.with_sink_append(dir)? } else { log.with_sink(dir)? };
         }
         let mut batcher = Batcher::for_config(&info.config, Split::Train, self.opts.seed);
         // resume-aware: skip the batches already consumed

@@ -5,10 +5,12 @@
 //! the same commands execute the real lowered HLO instead (DESIGN.md).
 //!
 //!   list                    show runnable variants
-//!   run                     short native training demo (c_v, drops, latency)
+//!   run                     short native training demo (c_v, drops, latency);
+//!                           --workers D runs the expert-parallel sharded runtime
 //!   train                   train one variant (checkpoints, metrics)
 //!   eval                    eval PPL of a checkpoint / fresh init
-//!   bench                   measured vs simulated ms/step per strategy
+//!   bench                   measured vs simulated ms/step per strategy;
+//!                           --routing / --dispatch run the tracked suites
 //!   flops                   Table 1 (analytical per-GPU GFLOPs)
 //!   simulate                Table 2 (calibrated cluster simulator)
 //!   figure fig1|fig3|fig4|fig5|fig6
@@ -115,8 +117,16 @@ fn cmd_run(rest: &[String]) -> Result<()> {
         .opt_default("variant", "base-top2", "native variant (see `m6t list`)")
         .opt_default("steps", "40", "training steps")
         .opt_default("seed", "42", "data/init seed")
+        .opt_default("workers", "1", "expert-parallel workers D (sharded runtime when > 1)")
         .flag("quiet", "suppress progress lines");
     let args = parse(cmd, rest)?;
+    let workers: usize = args.get_or("workers", 1usize).map_err(anyhow::Error::msg)?;
+    if workers == 0 {
+        anyhow::bail!("--workers must be at least 1");
+    }
+    if workers > 1 {
+        return cmd_run_sharded(&args, workers);
+    }
     let provider = NativeProvider::new();
     let name = args.get("variant").unwrap();
     let info = provider.info(name)?;
@@ -150,6 +160,66 @@ fn cmd_run(rest: &[String]) -> Result<()> {
         println!("per-layer load c_v:          [{}]", cvs.join(", "));
         println!("per-layer dropped tokens:    [{}]", drops.join(", "));
         println!("simulated cluster step time: {:.1} ms/step", last.sim_ms);
+        println!("measured host step time:     {:.2} ms/step", last.ms_per_step);
+    }
+    Ok(())
+}
+
+/// `m6t run --workers D` — the expert-parallel sharded runtime: every
+/// worker routes its own local batch, the all-to-all exchange is
+/// accounted exactly, and the cluster model consumes the *measured*
+/// traffic in place of its analytic estimate.
+fn cmd_run_sharded(args: &m6t::util::cli::Args, workers: usize) -> Result<()> {
+    use m6t::metrics::RunLog;
+    use m6t::runtime::ShardedRun;
+
+    let provider = NativeProvider::new();
+    let name = args.get("variant").unwrap();
+    let info = provider.info(name)?;
+    let cfg = info.config.clone();
+    let run = ShardedRun::new(&cfg, workers)?;
+    eprintln!(
+        "[m6t] {} — sharded: D={} workers, E={} ({} experts/shard), C={} per worker, {} routing",
+        name,
+        workers,
+        cfg.num_experts,
+        cfg.num_experts / workers,
+        run.info().capacity,
+        cfg.routing.name(),
+    );
+    let steps: i64 = args.get_or("steps", 40i64).map_err(anyhow::Error::msg)?;
+    let seed: u64 = args.get_or("seed", 42u64).map_err(anyhow::Error::msg)?;
+    let mut log = RunLog::new(format!("{name}-d{workers}"));
+    let state = run.train(steps, seed, &mut log, !args.flag("quiet"))?;
+    let ppl = run.eval_ppl(&state, 8, seed)?;
+    println!("final: step {} loss {:.4} eval-PPL {:.3}", state.step, log.tail_loss(20), ppl);
+    if let Some(last) = log.last() {
+        let dsp = last
+            .dispatch
+            .as_ref()
+            .ok_or_else(|| anyhow::anyhow!("sharded run produced no dispatch record"))?;
+        let fmt0 = |xs: &[f64]| -> String {
+            xs.iter().map(|x| format!("{x:.0}")).collect::<Vec<_>>().join(", ")
+        };
+        let drop_rates: Vec<String> = dsp
+            .per_shard_recv
+            .iter()
+            .zip(&dsp.per_shard_dropped)
+            .map(|(&recv, &drop)| format!("{:.3}", drop / (recv + drop).max(1.0)))
+            .collect();
+        println!("cross-worker load c_v:       {:.3}", dsp.shard_load_cv);
+        println!("per-worker dropped tokens:   [{}]", fmt0(&dsp.per_worker_dropped));
+        println!("per-shard recv tokens:       [{}]", fmt0(&dsp.per_shard_recv));
+        println!("per-shard drop rate:         [{}]", drop_rates.join(", "));
+        println!(
+            "measured all-to-all:         {:.3} MB/step ({:.1}% of routed tokens cross workers)",
+            dsp.a2a_bytes_step / 1e6,
+            dsp.cross_fraction * 100.0
+        );
+        println!(
+            "cluster step time:           analytic {:.1} ms -> observed {:.1} ms",
+            last.sim_ms, dsp.observed_ms
+        );
         println!("measured host step time:     {:.2} ms/step", last.ms_per_step);
     }
     Ok(())
@@ -233,10 +303,15 @@ fn cmd_bench(rest: &[String]) -> Result<()> {
         .opt_default("results", "results", "results directory")
         .flag("routing", "run the routing-engine microbench instead (writes BENCH_routing.json)")
         .opt_default("tokens", "16384", "--routing: tokens per route call")
-        .opt_default("out", "BENCH_routing.json", "--routing: output JSON path");
+        .opt_default("out", "BENCH_routing.json", "--routing: output JSON path")
+        .flag("dispatch", "run the sharded-dispatch suite instead (writes BENCH_dispatch.json)")
+        .opt_default("dispatch-out", "BENCH_dispatch.json", "--dispatch: output JSON path");
     let args = parse(cmd, rest)?;
     if args.flag("routing") {
         return cmd_bench_routing(&args);
+    }
+    if args.flag("dispatch") {
+        return cmd_bench_dispatch(&args);
     }
     let samples: usize = args.get_or("steps", 12usize).map_err(anyhow::Error::msg)?;
     let provider = NativeProvider::new();
@@ -271,6 +346,23 @@ fn cmd_bench_routing(args: &m6t::util::cli::Args) -> Result<()> {
     let rows = microbench::run_suite(tokens);
     print!("{}", microbench::render_table(&rows, tokens).render());
     microbench::write_json(&rows, tokens, &out_path)?;
+    eprintln!("[bench] wrote {out_path}");
+    Ok(())
+}
+
+/// `m6t bench --dispatch` — the sharded expert-parallel runtime over
+/// {base, 10B geometry twins} x {top1, top2, 2top1} x D in {1, 4, 8}:
+/// measured host ms/step, cross-worker load c_v, drop rates, measured
+/// all-to-all bytes, and the cluster model's analytic-vs-observed gap.
+/// Writes BENCH_dispatch.json at the repo root by default.
+fn cmd_bench_dispatch(args: &m6t::util::cli::Args) -> Result<()> {
+    use m6t::runtime::dispatch_bench;
+    let steps: usize = args.get_or("steps", 12usize).map_err(anyhow::Error::msg)?;
+    let out_path = args.get("dispatch-out").unwrap().to_string();
+    eprintln!("[bench] sharded dispatch suite, {steps} steps per cell");
+    let rows = dispatch_bench::run_suite(steps)?;
+    print!("{}", dispatch_bench::render_table(&rows).render());
+    dispatch_bench::write_json(&rows, steps, &out_path)?;
     eprintln!("[bench] wrote {out_path}");
     Ok(())
 }

@@ -7,9 +7,16 @@ use std::path::{Path, PathBuf};
 
 use anyhow::{Context, Result};
 
+use crate::moe::DispatchSummary;
 use crate::runtime::StepStats;
 use crate::util::json::{arr, num, obj, s, write as jwrite, Value};
 use crate::util::stats::Ema;
+
+/// The one loss-smoothing constant: [`RunLog::ema_loss`] and the Fig-6
+/// convergence-crossing detector [`RunLog::steps_to_loss`] must agree on
+/// when a target is reached, so they share this beta (they used to run
+/// 0.95 vs 0.9 and disagreed).
+pub const LOSS_EMA_BETA: f64 = 0.95;
 
 /// One recorded training step.
 #[derive(Debug, Clone)]
@@ -24,6 +31,10 @@ pub struct StepRecord {
     pub ms_per_step: f64,
     /// simulated cluster ms/step (0 on measured-hardware backends)
     pub sim_ms: f64,
+    /// expert-parallel dispatch series (sharded runtime only): per-worker
+    /// drops, per-shard receive totals, cross-worker c_v, measured a2a
+    /// bytes, observed cluster ms
+    pub dispatch: Option<DispatchSummary>,
 }
 
 /// In-memory run log + optional JSONL sink.
@@ -40,17 +51,37 @@ impl RunLog {
         Self {
             name: name.into(),
             records: Vec::new(),
-            ema: Ema::new(0.95),
+            ema: Ema::new(LOSS_EMA_BETA),
             sink: None,
             sink_path: None,
         }
     }
 
-    /// Also append every record to a JSONL file under `dir`.
-    pub fn with_sink(mut self, dir: impl AsRef<Path>) -> Result<Self> {
+    /// Also record every step in a JSONL file under `dir`, truncating any
+    /// existing file — for *fresh* runs. A resumed run must use
+    /// [`RunLog::with_sink_append`] or it destroys its recorded history.
+    pub fn with_sink(self, dir: impl AsRef<Path>) -> Result<Self> {
+        self.with_sink_opts(dir, false)
+    }
+
+    /// Append-mode sink for resumed runs: prior recorded lines survive
+    /// and new steps continue the same JSONL series.
+    pub fn with_sink_append(self, dir: impl AsRef<Path>) -> Result<Self> {
+        self.with_sink_opts(dir, true)
+    }
+
+    fn with_sink_opts(mut self, dir: impl AsRef<Path>, append: bool) -> Result<Self> {
         fs::create_dir_all(&dir)?;
         let path = dir.as_ref().join(format!("{}.jsonl", self.name));
-        let file = fs::File::create(&path).with_context(|| format!("creating {path:?}"))?;
+        let file = if append {
+            fs::OpenOptions::new()
+                .create(true)
+                .append(true)
+                .open(&path)
+                .with_context(|| format!("opening {path:?} for append"))?
+        } else {
+            fs::File::create(&path).with_context(|| format!("creating {path:?}"))?
+        };
         self.sink = Some(file);
         self.sink_path = Some(path);
         Ok(self)
@@ -67,10 +98,11 @@ impl RunLog {
             dropped_per_layer: stats.dropped.iter().map(|&x| x as f64).collect(),
             ms_per_step: ms,
             sim_ms: stats.sim_step_ms,
+            dispatch: stats.dispatch.clone(),
         };
         self.ema.push(rec.loss);
         if let Some(f) = &mut self.sink {
-            let v = obj(vec![
+            let mut fields = vec![
                 ("step", num(rec.step as f64)),
                 ("loss", num(rec.loss)),
                 ("aux_loss", num(rec.aux_loss)),
@@ -79,7 +111,22 @@ impl RunLog {
                 ("dropped", num(rec.dropped)),
                 ("ms", num(rec.ms_per_step)),
                 ("sim_ms", num(rec.sim_ms)),
-            ]);
+            ];
+            if let Some(dsp) = &rec.dispatch {
+                fields.push(("workers", num(dsp.workers as f64)));
+                fields.push(("shard_cv", num(dsp.shard_load_cv)));
+                fields.push(("a2a_bytes", num(dsp.a2a_bytes_step)));
+                fields.push(("observed_ms", num(dsp.observed_ms)));
+                fields.push((
+                    "worker_dropped",
+                    arr(dsp.per_worker_dropped.iter().map(|&x| num(x)).collect()),
+                ));
+                fields.push((
+                    "shard_recv",
+                    arr(dsp.per_shard_recv.iter().map(|&x| num(x)).collect()),
+                ));
+            }
+            let v = obj(fields);
             writeln!(f, "{}", jwrite(&v))?;
         }
         self.records.push(rec);
@@ -115,8 +162,11 @@ impl RunLog {
 
     /// First step whose EMA-smoothed loss dips below `target` — used for
     /// the Fig-6 convergence-speedup factor. None if never reached.
+    /// Smooths with [`LOSS_EMA_BETA`], the same beta as [`RunLog::ema_loss`],
+    /// so the crossing detector and the reported EMA agree about when a
+    /// target is reached.
     pub fn steps_to_loss(&self, target: f64) -> Option<i64> {
-        let mut ema = Ema::new(0.9);
+        let mut ema = Ema::new(LOSS_EMA_BETA);
         for r in &self.records {
             ema.push(r.loss);
             if ema.get() <= target {
@@ -171,6 +221,7 @@ mod tests {
             experts,
             dropped: vec![0.0; layers],
             sim_step_ms: 0.0,
+            dispatch: None,
         }
     }
 
@@ -193,8 +244,36 @@ mod tests {
             log.push(i, &stats(5.0 - i as f32 * 0.1, 1, 2), 1.0).unwrap();
         }
         let hit = log.steps_to_loss(3.0).unwrap();
-        assert!((15..30).contains(&hit), "hit at {hit}");
+        // raw loss crosses 3.0 at step 20; the 0.95-EMA lags behind it
+        assert!((25..40).contains(&hit), "hit at {hit}");
         assert_eq!(log.steps_to_loss(-1.0), None);
+    }
+
+    #[test]
+    fn crossing_detector_agrees_with_reported_ema() {
+        // satellite regression: steps_to_loss used beta 0.9 while ema_loss
+        // used 0.95 — the detector crossed targets the reported EMA had
+        // not reached. With one shared beta, the final reported EMA is
+        // reached exactly at the final step, never earlier.
+        let mut log = RunLog::new("t");
+        for i in 0..60 {
+            log.push(i, &stats(4.0 - i as f32 * 0.05, 1, 2), 1.0).unwrap();
+        }
+        let final_ema = log.ema_loss();
+        assert_eq!(
+            log.steps_to_loss(final_ema),
+            Some(59),
+            "a strictly decreasing EMA reaches its own final value only at the last step"
+        );
+        // and any earlier crossing the detector reports is one the
+        // replayed reported-EMA sequence actually made
+        let target = 3.0;
+        let hit = log.steps_to_loss(target).unwrap();
+        let mut ema = Ema::new(LOSS_EMA_BETA);
+        for r in &log.records[..=hit as usize] {
+            ema.push(r.loss);
+        }
+        assert!(ema.get() <= target, "detector crossed before the reported EMA did");
     }
 
     #[test]
@@ -214,6 +293,77 @@ mod tests {
         drop(log);
         let text = fs::read_to_string(path).unwrap();
         assert!(text.contains("\"loss\":2"));
+        let _ = fs::remove_dir_all(dir);
+    }
+
+    #[test]
+    fn append_sink_preserves_prior_history() {
+        // satellite regression: with_sink used File::create even on
+        // resume, truncating the recorded history of the original run
+        let dir = std::env::temp_dir().join("m6t-metrics-append-test");
+        let _ = fs::remove_dir_all(&dir);
+        let mut log = RunLog::new("resumable").with_sink(&dir).unwrap();
+        log.push(0, &stats(5.0, 1, 2), 1.0).unwrap();
+        log.push(1, &stats(4.0, 1, 2), 1.0).unwrap();
+        let path = log.sink_path.clone().unwrap();
+        drop(log);
+
+        // "resume": a fresh RunLog over the same sink in append mode
+        let mut resumed = RunLog::new("resumable").with_sink_append(&dir).unwrap();
+        resumed.push(2, &stats(3.0, 1, 2), 1.0).unwrap();
+        drop(resumed);
+
+        let text = fs::read_to_string(&path).unwrap();
+        let lines: Vec<&str> = text.lines().collect();
+        assert_eq!(lines.len(), 3, "prior lines must survive the resume");
+        assert!(lines[0].contains("\"step\":0"), "{}", lines[0]);
+        assert!(lines[1].contains("\"step\":1"), "{}", lines[1]);
+        assert!(lines[2].contains("\"step\":2"), "{}", lines[2]);
+
+        // a fresh (non-append) sink still truncates
+        let mut fresh = RunLog::new("resumable").with_sink(&dir).unwrap();
+        fresh.push(0, &stats(9.0, 1, 2), 1.0).unwrap();
+        drop(fresh);
+        let text = fs::read_to_string(&path).unwrap();
+        assert_eq!(text.lines().count(), 1, "create mode truncates");
+        let _ = fs::remove_dir_all(dir);
+    }
+
+    #[test]
+    fn dispatch_series_reach_the_sink() {
+        let dir = std::env::temp_dir().join("m6t-metrics-dispatch-test");
+        let _ = fs::remove_dir_all(&dir);
+        let mut s = stats(2.0, 1, 2);
+        s.dispatch = Some(DispatchSummary {
+            workers: 4,
+            layers: 1,
+            shard_load_cv: 0.25,
+            shard_balance: 1.5,
+            per_worker_dropped: vec![1.0, 2.0, 3.0, 4.0],
+            per_shard_recv: vec![10.0, 20.0, 30.0, 40.0],
+            per_shard_dropped: vec![0.0; 4],
+            a2a_bytes_per_layer: 1024.0,
+            a2a_bytes_step: 4096.0,
+            cross_fraction: 0.75,
+            drop_fraction: 0.1,
+            observed_ms: 123.0,
+        });
+        let mut log = RunLog::new("dsp").with_sink(&dir).unwrap();
+        log.push(0, &s, 1.0).unwrap();
+        let path = log.sink_path.clone().unwrap();
+        assert_eq!(log.last().unwrap().dispatch.as_ref().unwrap().workers, 4);
+        drop(log);
+        let text = fs::read_to_string(path).unwrap();
+        let keys = [
+            "\"workers\":4",
+            "\"shard_cv\":0.25",
+            "\"observed_ms\":123",
+            "\"worker_dropped\"",
+            "\"shard_recv\"",
+        ];
+        for key in keys {
+            assert!(text.contains(key), "missing {key} in {text}");
+        }
         let _ = fs::remove_dir_all(dir);
     }
 }

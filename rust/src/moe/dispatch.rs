@@ -1,0 +1,450 @@
+//! Expert-parallel dispatch accounting: what D workers actually exchange.
+//!
+//! The paper's headline systems result (1T params on 480 V100 workers)
+//! rests on expert parallelism: every worker routes its *local* batch of
+//! `T_local` tokens with per-worker capacity `C = k·T_local/E·γ` (Eq. 2 at
+//! local scope), then all-to-alls the dispatched tokens to the workers
+//! hosting each expert shard (E/D experts per worker). The cluster model
+//! prices this traffic analytically as O(ECM); this module *accounts* it
+//! exactly from executed routing decisions, so the runtime can observe
+//! where multi-worker behavior diverges from the single-router
+//! idealization — per-shard load skew, per-shard drop concentration, and
+//! the real (non-padded, non-local) byte volume on each link.
+//!
+//! A [`DispatchPlan`] is one layer's exchange: per (source worker,
+//! destination expert) kept and demanded token counts, from which every
+//! per-shard and per-link quantity is derived. A [`DispatchSummary`]
+//! aggregates the per-layer plans of one training step into the compact
+//! record that [`StepStats`](crate::runtime::StepStats) and the metrics
+//! sink carry.
+//!
+//! Conservation contract (pinned by `rust/tests/dispatch_properties.rs`):
+//! per worker, kept + dropped equals the routed-slot total `k_eff·T_local`;
+//! the bytes every worker sends equal the bytes every shard receives; and
+//! at D = 1 all traffic is local, so measured all-to-all bytes are zero.
+
+use crate::util::stats::coefficient_of_variation;
+
+use super::router::RouteOutput;
+
+/// Bytes of one dispatched token vector (f32 activations of width M).
+fn token_bytes(hidden: usize) -> u64 {
+    hidden as u64 * 4
+}
+
+/// One MoE layer's all-to-all exchange across D expert-parallel workers.
+///
+/// Experts are sharded contiguously: worker `v` hosts experts
+/// `[v·E/D, (v+1)·E/D)`. `send`/`demand` are row-major D x E counts of the
+/// tokens each source worker routed toward each (global) expert — `send`
+/// after local capacity enforcement, `demand` before it.
+#[derive(Debug, Clone, PartialEq)]
+pub struct DispatchPlan {
+    pub workers: usize,
+    pub num_experts: usize,
+    /// per-worker per-expert capacity C (Eq. 2 at local scope)
+    pub capacity: usize,
+    /// token vector width M — the byte accounting's scale factor
+    pub hidden: usize,
+    /// D x E kept (dispatched) token counts, row-major
+    pub send: Vec<u32>,
+    /// D x E pre-capacity demanded token counts, row-major
+    pub demand: Vec<u32>,
+}
+
+impl DispatchPlan {
+    /// Build a plan from raw per-worker count matrices.
+    pub fn new(
+        workers: usize,
+        num_experts: usize,
+        capacity: usize,
+        hidden: usize,
+        send: Vec<u32>,
+        demand: Vec<u32>,
+    ) -> DispatchPlan {
+        assert!(workers > 0, "dispatch plan needs at least one worker");
+        assert!(
+            num_experts % workers == 0,
+            "experts {num_experts} not divisible by workers {workers}: shards must be equal"
+        );
+        assert_eq!(send.len(), workers * num_experts, "send matrix shape mismatch");
+        assert_eq!(demand.len(), workers * num_experts, "demand matrix shape mismatch");
+        DispatchPlan { workers, num_experts, capacity, hidden, send, demand }
+    }
+
+    /// Build a plan from each worker's executed [`RouteOutput`] over its
+    /// local batch (all workers route the same expert set).
+    pub fn from_worker_routes(
+        num_experts: usize,
+        capacity: usize,
+        hidden: usize,
+        routes: &[RouteOutput],
+    ) -> DispatchPlan {
+        let workers = routes.len();
+        let mut send = vec![0u32; workers * num_experts];
+        let mut demand = vec![0u32; workers * num_experts];
+        for (w, r) in routes.iter().enumerate() {
+            assert_eq!(r.load.len(), num_experts, "worker {w}: load width mismatch");
+            assert_eq!(r.demand.len(), num_experts, "worker {w}: demand width mismatch");
+            send[w * num_experts..(w + 1) * num_experts].copy_from_slice(&r.load);
+            demand[w * num_experts..(w + 1) * num_experts].copy_from_slice(&r.demand);
+        }
+        DispatchPlan::new(workers, num_experts, capacity, hidden, send, demand)
+    }
+
+    pub fn experts_per_shard(&self) -> usize {
+        self.num_experts / self.workers
+    }
+
+    /// Worker hosting (global) expert `e`.
+    pub fn shard_of(&self, expert: usize) -> usize {
+        expert / self.experts_per_shard()
+    }
+
+    /// Tokens worker `w` dispatches in total (kept under local capacity).
+    pub fn kept_per_worker(&self) -> Vec<u64> {
+        (0..self.workers)
+            .map(|w| {
+                self.send[w * self.num_experts..(w + 1) * self.num_experts]
+                    .iter()
+                    .map(|&x| x as u64)
+                    .sum()
+            })
+            .collect()
+    }
+
+    /// Tokens worker `w` dropped at its local capacity gate.
+    pub fn dropped_per_worker(&self) -> Vec<u64> {
+        (0..self.workers)
+            .map(|w| {
+                let at = w * self.num_experts;
+                (0..self.num_experts)
+                    .map(|e| (self.demand[at + e] - self.send[at + e]) as u64)
+                    .sum()
+            })
+            .collect()
+    }
+
+    /// Tokens landing on (processed by) each expert shard.
+    pub fn recv_per_shard(&self) -> Vec<u64> {
+        let mut recv = vec![0u64; self.workers];
+        for w in 0..self.workers {
+            for e in 0..self.num_experts {
+                recv[self.shard_of(e)] += self.send[w * self.num_experts + e] as u64;
+            }
+        }
+        recv
+    }
+
+    /// Drops attributed to each destination shard: demand that overflowed
+    /// the local capacity of experts hosted there.
+    pub fn dropped_per_shard(&self) -> Vec<u64> {
+        let mut drops = vec![0u64; self.workers];
+        for w in 0..self.workers {
+            for e in 0..self.num_experts {
+                let at = w * self.num_experts + e;
+                drops[self.shard_of(e)] += (self.demand[at] - self.send[at]) as u64;
+            }
+        }
+        drops
+    }
+
+    /// Total kept tokens this layer (across all workers).
+    pub fn kept_total(&self) -> u64 {
+        self.send.iter().map(|&x| x as u64).sum()
+    }
+
+    /// Total dropped tokens this layer.
+    pub fn dropped_total(&self) -> u64 {
+        self.demand.iter().map(|&x| x as u64).sum::<u64>() - self.kept_total()
+    }
+
+    /// Kept tokens whose destination shard is not their source worker —
+    /// the tokens that actually traverse the network.
+    pub fn cross_tokens(&self) -> u64 {
+        let mut cross = 0u64;
+        for w in 0..self.workers {
+            for e in 0..self.num_experts {
+                if self.shard_of(e) != w {
+                    cross += self.send[w * self.num_experts + e] as u64;
+                }
+            }
+        }
+        cross
+    }
+
+    /// D x D dispatch-direction byte matrix: `bytes[w * D + v]` is what
+    /// worker `w` sends to shard `v`. The diagonal is zero — tokens for
+    /// locally hosted experts never touch the network. The combine
+    /// direction is the transpose (same totals).
+    pub fn bytes_matrix(&self) -> Vec<u64> {
+        let d = self.workers;
+        let per_token = token_bytes(self.hidden);
+        let mut bytes = vec![0u64; d * d];
+        for w in 0..d {
+            for e in 0..self.num_experts {
+                let v = self.shard_of(e);
+                if v != w {
+                    bytes[w * d + v] += self.send[w * self.num_experts + e] as u64 * per_token;
+                }
+            }
+        }
+        bytes
+    }
+
+    /// Measured all-to-all payload, one direction, this layer.
+    pub fn dispatch_bytes(&self) -> u64 {
+        self.cross_tokens() * token_bytes(self.hidden)
+    }
+
+    /// Coefficient of variation of per-shard received tokens — the
+    /// cross-worker load-balance metric (Fig-1's c_v at shard scope).
+    pub fn shard_load_cv(&self) -> f64 {
+        let recv: Vec<f64> = self.recv_per_shard().iter().map(|&x| x as f64).collect();
+        coefficient_of_variation(&recv)
+    }
+}
+
+/// One training step's dispatch record, aggregated over the per-layer
+/// plans: the per-worker / per-shard series the metrics sink carries and
+/// the observed traffic the cluster model consumes in place of its
+/// analytic O(ECM) estimate.
+#[derive(Debug, Clone, PartialEq)]
+pub struct DispatchSummary {
+    pub workers: usize,
+    pub layers: usize,
+    /// c_v of per-shard received tokens, summed over layers
+    pub shard_load_cv: f64,
+    /// mean over layers of the per-layer max/mean per-shard load (>= 1) —
+    /// the straggler stretch an imbalanced exchange puts on expert
+    /// compute. Per-layer because every layer synchronizes independently
+    /// at its combine all-to-all: opposing imbalances in different
+    /// layers must not cancel
+    pub shard_balance: f64,
+    /// per source worker: tokens dropped at the local capacity gate
+    pub per_worker_dropped: Vec<f64>,
+    /// per destination shard: tokens received (all layers)
+    pub per_shard_recv: Vec<f64>,
+    /// per destination shard: demand lost to capacity (all layers)
+    pub per_shard_dropped: Vec<f64>,
+    /// measured all-to-all payload bytes per layer per direction (mean
+    /// over layers) — the analytic model's O(ECM) replacement
+    pub a2a_bytes_per_layer: f64,
+    /// measured bytes for the whole step: dispatch + combine forward and
+    /// their backward transposes (4 transfers per layer)
+    pub a2a_bytes_step: f64,
+    /// fraction of kept tokens that crossed a worker boundary
+    pub cross_fraction: f64,
+    /// dropped / demanded tokens over the whole step
+    pub drop_fraction: f64,
+    /// cluster-model step time over the observed traffic
+    /// ([`cluster::simulate_step_observed`](crate::cluster::simulate_step_observed));
+    /// 0 until the driver fills it in
+    pub observed_ms: f64,
+}
+
+impl DispatchSummary {
+    /// Aggregate one step's per-layer plans. All plans must share the
+    /// same worker count.
+    pub fn from_plans(plans: &[DispatchPlan]) -> DispatchSummary {
+        assert!(!plans.is_empty(), "a dispatch summary needs at least one layer plan");
+        let workers = plans[0].workers;
+        let layers = plans.len();
+        let mut per_worker_dropped = vec![0u64; workers];
+        let mut per_shard_recv = vec![0u64; workers];
+        let mut per_shard_dropped = vec![0u64; workers];
+        let mut cross = 0u64;
+        let mut bytes_one_direction = 0u64;
+        let mut kept = 0u64;
+        let mut dropped = 0u64;
+        let mut balance_sum = 0.0f64;
+        for p in plans {
+            assert_eq!(p.workers, workers, "mixed worker counts in one summary");
+            let layer_recv = p.recv_per_shard();
+            for (acc, &x) in per_shard_recv.iter_mut().zip(&layer_recv) {
+                *acc += x;
+            }
+            for (acc, x) in per_worker_dropped.iter_mut().zip(p.dropped_per_worker()) {
+                *acc += x;
+            }
+            for (acc, x) in per_shard_dropped.iter_mut().zip(p.dropped_per_shard()) {
+                *acc += x;
+            }
+            // per-layer straggler stretch: each layer synchronizes at its
+            // own combine all-to-all, so the balance is averaged over
+            // layers, never computed from layer-summed totals (where a
+            // shard-0-heavy layer and a shard-1-heavy layer would cancel)
+            let mean = layer_recv.iter().map(|&x| x as f64).sum::<f64>() / workers as f64;
+            let max = layer_recv.iter().map(|&x| x as f64).fold(0.0f64, f64::max);
+            balance_sum += if mean > 0.0 { (max / mean).max(1.0) } else { 1.0 };
+            cross += p.cross_tokens();
+            bytes_one_direction += p.dispatch_bytes();
+            kept += p.kept_total();
+            dropped += p.dropped_total();
+        }
+        let recv_f: Vec<f64> = per_shard_recv.iter().map(|&x| x as f64).collect();
+        let shard_balance = balance_sum / layers as f64;
+        DispatchSummary {
+            workers,
+            layers,
+            shard_load_cv: coefficient_of_variation(&recv_f),
+            shard_balance,
+            per_worker_dropped: per_worker_dropped.iter().map(|&x| x as f64).collect(),
+            per_shard_recv: recv_f,
+            per_shard_dropped: per_shard_dropped.iter().map(|&x| x as f64).collect(),
+            a2a_bytes_per_layer: bytes_one_direction as f64 / layers as f64,
+            a2a_bytes_step: bytes_one_direction as f64 * 4.0,
+            cross_fraction: cross as f64 / (kept as f64).max(1.0),
+            drop_fraction: dropped as f64 / ((kept + dropped) as f64).max(1.0),
+            observed_ms: 0.0,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::Routing;
+    use crate::moe::router::{route, softmax_gates, RouterSpec};
+    use crate::util::rng::Rng;
+
+    fn worker_routes(
+        workers: usize,
+        tokens: usize,
+        e: usize,
+        routing: Routing,
+        capacity: usize,
+        seed: u64,
+    ) -> Vec<RouteOutput> {
+        let z = routing.prototypes().max(1) as usize;
+        let spec = RouterSpec { routing, num_experts: e, capacity };
+        (0..workers)
+            .map(|w| {
+                let mut rng = Rng::new(seed ^ ((w as u64 + 1) * 0x9E37));
+                let logits: Vec<f32> = (0..tokens * e).map(|_| rng.normal() as f32).collect();
+                let gates = softmax_gates(&logits, tokens, e, z);
+                route(&gates, tokens, &spec)
+            })
+            .collect()
+    }
+
+    #[test]
+    fn plan_conserves_tokens() {
+        let routes = worker_routes(4, 128, 16, Routing::TopK(2), 18, 7);
+        let plan = DispatchPlan::from_worker_routes(16, 18, 64, &routes);
+        // per-worker kept + dropped == routed slots
+        let kept = plan.kept_per_worker();
+        let drops = plan.dropped_per_worker();
+        for w in 0..4 {
+            assert_eq!(kept[w] + drops[w], 128 * 2, "worker {w}");
+        }
+        // global send == global receive
+        let recv_total: u64 = plan.recv_per_shard().iter().sum();
+        assert_eq!(recv_total, plan.kept_total());
+        assert_eq!(kept.iter().sum::<u64>(), plan.kept_total());
+        // drops attributed to shards account for every drop
+        assert_eq!(plan.dropped_per_shard().iter().sum::<u64>(), plan.dropped_total());
+    }
+
+    #[test]
+    fn bytes_matrix_is_conserved_with_zero_diagonal() {
+        let routes = worker_routes(4, 96, 8, Routing::Prototype(2), 30, 11);
+        let plan = DispatchPlan::from_worker_routes(8, 30, 32, &routes);
+        let m = plan.bytes_matrix();
+        let d = plan.workers;
+        for w in 0..d {
+            assert_eq!(m[w * d + w], 0, "diagonal (local) traffic must be zero");
+        }
+        let row_total: u64 = m.iter().sum();
+        assert_eq!(row_total, plan.dispatch_bytes());
+        // column sums (per-shard received bytes) conserve the total too
+        let col_total: u64 =
+            (0..d).map(|v| (0..d).map(|w| m[w * d + v]).sum::<u64>()).sum();
+        assert_eq!(col_total, plan.dispatch_bytes());
+        assert_eq!(plan.dispatch_bytes(), plan.cross_tokens() * 32 * 4);
+    }
+
+    #[test]
+    fn single_worker_has_no_network_traffic() {
+        let routes = worker_routes(1, 200, 8, Routing::TopK(1), 40, 3);
+        let plan = DispatchPlan::from_worker_routes(8, 40, 64, &routes);
+        assert_eq!(plan.cross_tokens(), 0);
+        assert_eq!(plan.dispatch_bytes(), 0);
+        assert_eq!(plan.shard_load_cv(), 0.0, "one shard is trivially balanced");
+        assert_eq!(plan.recv_per_shard(), vec![plan.kept_total()]);
+    }
+
+    #[test]
+    fn summary_aggregates_layers() {
+        let l0 = DispatchPlan::from_worker_routes(
+            8,
+            20,
+            16,
+            &worker_routes(2, 64, 8, Routing::TopK(2), 20, 21),
+        );
+        let l1 = DispatchPlan::from_worker_routes(
+            8,
+            20,
+            16,
+            &worker_routes(2, 64, 8, Routing::TopK(2), 20, 22),
+        );
+        let s = DispatchSummary::from_plans(&[l0.clone(), l1.clone()]);
+        assert_eq!(s.workers, 2);
+        assert_eq!(s.layers, 2);
+        let bytes = (l0.dispatch_bytes() + l1.dispatch_bytes()) as f64;
+        assert_eq!(s.a2a_bytes_per_layer, bytes / 2.0);
+        assert_eq!(s.a2a_bytes_step, bytes * 4.0);
+        assert!(s.shard_balance >= 1.0);
+        assert!((0.0..=1.0).contains(&s.cross_fraction));
+        assert!((0.0..=1.0).contains(&s.drop_fraction));
+        let recv_sum: f64 = s.per_shard_recv.iter().sum();
+        assert_eq!(recv_sum, (l0.kept_total() + l1.kept_total()) as f64);
+    }
+
+    #[test]
+    fn opposing_layer_imbalances_do_not_cancel_in_shard_balance() {
+        // regression: layer 0 one-hot on shard 0, layer 1 one-hot on
+        // shard 1 — the layer-summed recv is perfectly balanced, but
+        // every layer still ran at a 2x straggler pace
+        let d = 2;
+        let e = 2;
+        let t = 10u32;
+        // worker rows both demand/keep everything on one expert
+        let one_hot = |expert: usize| -> (Vec<u32>, Vec<u32>) {
+            let mut counts = vec![0u32; d * e];
+            for w in 0..d {
+                counts[w * e + expert] = t;
+            }
+            (counts.clone(), counts)
+        };
+        let (send0, demand0) = one_hot(0);
+        let (send1, demand1) = one_hot(1);
+        let l0 = DispatchPlan::new(d, e, t as usize, 4, send0, demand0);
+        let l1 = DispatchPlan::new(d, e, t as usize, 4, send1, demand1);
+        let s = DispatchSummary::from_plans(&[l0, l1]);
+        // aggregate recv is [2t, 2t] -> cv 0, but the per-layer stretch
+        // is 2x in both layers and must survive aggregation
+        assert_eq!(s.shard_load_cv, 0.0);
+        assert_eq!(s.shard_balance, 2.0, "per-layer straggler stretch cancelled");
+    }
+
+    #[test]
+    fn skewed_load_concentrates_on_one_shard() {
+        // every token demands expert 0 -> shard 0 receives everything
+        let e = 8;
+        let tokens = 64;
+        let mut gates = vec![0.001f32; tokens * e];
+        for t in 0..tokens {
+            gates[t * e] = 1.0;
+        }
+        let spec = RouterSpec { routing: Routing::TopK(1), num_experts: e, capacity: 10 };
+        let routes: Vec<RouteOutput> = (0..4).map(|_| route(&gates, tokens, &spec)).collect();
+        let plan = DispatchPlan::from_worker_routes(e, 10, 16, &routes);
+        let recv = plan.recv_per_shard();
+        assert_eq!(recv[0], 4 * 10, "only expert 0 keeps tokens, capped at capacity");
+        assert_eq!(recv[1..].iter().sum::<u64>(), 0);
+        assert!(plan.shard_load_cv() > 1.5);
+        // worker 0's tokens to expert 0 are local; workers 1..3 cross
+        assert_eq!(plan.cross_tokens(), 3 * 10);
+    }
+}

@@ -131,7 +131,7 @@ impl RoutingEngine {
         self.route_impl(gates, tokens, spec, out, true);
     }
 
-    /// Counts-only routing: fills `load` and `dropped`, leaves
+    /// Counts-only routing: fills `load`, `demand`, and `dropped`, leaves
     /// `assignments` empty. For callers that never read the combine
     /// weights (the native backend's per-layer load statistics) this
     /// skips the emission phase — gate renormalization and one push per
@@ -160,6 +160,8 @@ impl RoutingEngine {
         out.assignments.clear();
         out.load.clear();
         out.load.resize(e, 0);
+        out.demand.clear();
+        out.demand.resize(e, 0);
         out.dropped = 0;
         match spec.routing {
             Routing::TopK(k) => {
@@ -261,6 +263,7 @@ impl RoutingEngine {
         for r in 0..k {
             for t in 0..tokens {
                 let x = sc.sel_expert[t * k + r] as usize;
+                out.demand[x] += 1;
                 let pos = out.load[x];
                 let kept = (pos as usize) < capacity;
                 if kept {
@@ -359,6 +362,7 @@ impl RoutingEngine {
         for p in 0..z {
             for t in 0..tokens {
                 let x = sc.sel_expert[t * z + p] as usize;
+                out.demand[x] += 1;
                 let pos = out.load[x] as usize;
                 if pos < capacity {
                     out.load[x] += 1;
@@ -490,6 +494,7 @@ mod tests {
             let full = engine.route(&gates, 96, &spec);
             engine.route_counts_into(&gates, 96, &spec, &mut counts);
             assert_eq!(counts.load, full.load);
+            assert_eq!(counts.demand, full.demand);
             assert_eq!(counts.dropped, full.dropped);
             assert!(counts.assignments.is_empty(), "counts-only must not emit");
         }

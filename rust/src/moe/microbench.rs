@@ -96,6 +96,7 @@ pub fn run_suite(tokens: usize) -> Vec<RoutingBenchRow> {
         let expect = route(&gates, tokens, &spec);
         engine.route_into(&gates, tokens, &spec, &mut out);
         assert_eq!(out.load, expect.load, "{} E={experts} {regime}: load", routing.name());
+        assert_eq!(out.demand, expect.demand, "{} E={experts} {regime}: demand", routing.name());
         assert_eq!(out.dropped, expect.dropped, "{} E={experts} {regime}: drops", routing.name());
         assert_eq!(
             out.assignments, expect.assignments,

@@ -16,10 +16,18 @@
 //!  * [`engine::RoutingEngine`] — the allocation-free, pool-parallel
 //!    engine the native backend's hot path runs
 //!    (`m6t bench --routing` tracks the gap in `BENCH_routing.json`).
+//!
+//! On top of the routers, [`dispatch`] accounts what D expert-parallel
+//! workers actually exchange: per-(worker, expert) token counts, per-shard
+//! load/drops, and exact all-to-all byte volumes — the layer the sharded
+//! runtime (`runtime::shard`) and the observed-traffic cluster simulation
+//! are built on.
 
+pub mod dispatch;
 pub mod engine;
 pub mod microbench;
 pub mod router;
 
+pub use dispatch::{DispatchPlan, DispatchSummary};
 pub use engine::{RouterScratch, RoutingEngine};
 pub use router::{route, RouteOutput, RouterSpec};

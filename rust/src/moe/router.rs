@@ -40,6 +40,10 @@ pub struct RouteOutput {
     pub assignments: Vec<Assignment>,
     /// kept (real) tokens per expert — effective compute load (§3.1)
     pub load: Vec<u32>,
+    /// pre-capacity selections per expert (kept + overflowed) — what the
+    /// router *wanted*; `demand - load` is the per-expert drop count the
+    /// expert-parallel dispatch accounting attributes to each shard
+    pub demand: Vec<u32>,
     /// tokens that overflowed capacity and fell back to the residual path
     pub dropped: u32,
 }
@@ -89,7 +93,13 @@ fn route_topk(
     capacity: usize,
 ) -> RouteOutput {
     let mut load = vec![0u32; e];
-    let mut out = RouteOutput { assignments: Vec::new(), load: Vec::new(), dropped: 0 };
+    let mut demand = vec![0u32; e];
+    let mut out = RouteOutput {
+        assignments: Vec::new(),
+        load: Vec::new(),
+        demand: Vec::new(),
+        dropped: 0,
+    };
     // chosen[token] bitmask over experts already used by earlier rounds
     let mut chosen = vec![vec![false; e]; tokens];
     // raw gate of each selection, for renormalization
@@ -110,6 +120,7 @@ fn route_topk(
             }
             debug_assert!(best != usize::MAX);
             chosen[t][best] = true;
+            demand[best] += 1;
             let pos = load[best] as usize;
             let kept = pos < capacity;
             if kept {
@@ -144,6 +155,7 @@ fn route_topk(
         }
     }
     out.load = load;
+    out.demand = demand;
     out
 }
 
@@ -157,7 +169,13 @@ fn route_prototype(
     assert!(e % z == 0, "experts {e} not divisible by prototypes {z}");
     let f = e / z;
     let mut load = vec![0u32; e];
-    let mut out = RouteOutput { assignments: Vec::new(), load: Vec::new(), dropped: 0 };
+    let mut demand = vec![0u32; e];
+    let mut out = RouteOutput {
+        assignments: Vec::new(),
+        load: Vec::new(),
+        demand: Vec::new(),
+        dropped: 0,
+    };
     // prototypes are independent routers — no cross-prototype interaction
     for proto in 0..z {
         for t in 0..tokens {
@@ -171,6 +189,7 @@ fn route_prototype(
                 }
             }
             let expert = proto * f + best;
+            demand[expert] += 1;
             let pos = load[expert] as usize;
             if pos < capacity {
                 load[expert] += 1;
@@ -181,6 +200,7 @@ fn route_prototype(
         }
     }
     out.load = load;
+    out.demand = demand;
     out
 }
 
@@ -407,6 +427,29 @@ mod tests {
         assert!(out.load.iter().all(|&l| l <= 8));
         let kept: u32 = out.load.iter().sum();
         assert_eq!(kept + out.dropped, 32 * 4);
+    }
+
+    #[test]
+    fn demand_accounts_for_kept_and_dropped() {
+        for (routing, z) in [(Routing::TopK(2), 1usize), (Routing::Prototype(2), 2)] {
+            let gates = random_gates(96, 8, z, 8);
+            let spec = RouterSpec { routing, num_experts: 8, capacity: 9 };
+            let out = route(&gates, 96, &spec);
+            // per-expert: demand = kept + dropped-at-that-expert
+            let dropped_total: u32 = out
+                .demand
+                .iter()
+                .zip(&out.load)
+                .map(|(&d, &l)| {
+                    assert!(d >= l, "demand below kept load");
+                    d - l
+                })
+                .sum();
+            assert_eq!(dropped_total, out.dropped);
+            // every token demands exactly k slots
+            let total: u32 = out.demand.iter().sum();
+            assert_eq!(total, 96 * 2);
+        }
     }
 
     #[test]

@@ -14,6 +14,7 @@ use anyhow::Result;
 
 use super::manifest::VariantInfo;
 use crate::data::{Batch, Batcher, Split};
+use crate::moe::DispatchSummary;
 
 /// Scalar + load statistics returned by one train step.
 #[derive(Debug, Clone)]
@@ -30,6 +31,11 @@ pub struct StepStats {
     /// simulated cluster ms/step for this variant's paper-scale twin
     /// (0 when the backend measures real hardware instead of modelling it)
     pub sim_step_ms: f64,
+    /// expert-parallel dispatch accounting for this step — per-worker /
+    /// per-shard series plus measured all-to-all bytes. `None` on
+    /// single-router backends; filled by the sharded runtime
+    /// ([`ShardedRun`](super::shard::ShardedRun)).
+    pub dispatch: Option<DispatchSummary>,
 }
 
 impl StepStats {
@@ -153,6 +159,7 @@ mod tests {
             experts: 2,
             dropped: vec![0.0, 0.0],
             sim_step_ms: 0.0,
+            dispatch: None,
         };
         let cv = stats.cv_per_layer();
         assert_eq!(cv.len(), 2);

@@ -1,0 +1,259 @@
+//! Sharded-dispatch bench: the expert-parallel runtime measured over
+//! {base, 10B geometry twins} x {top1, top2, 2top1} x D in {1, 4, 8}.
+//!
+//! Shared by `m6t bench --dispatch` (and the CI smoke step); writes the
+//! tracked perf/behavior trajectory `BENCH_dispatch.json`. Each cell runs
+//! a few [`ShardedRun`] steps and records what the single-router
+//! idealization cannot see: cross-worker load c_v, per-shard drop rates,
+//! measured all-to-all bytes, and the cluster model's analytic-vs-
+//! observed step-time gap.
+
+use anyhow::{Context as _, Result};
+
+use crate::config::{CapacityMode, ModelConfig, Routing};
+use crate::metrics::RunLog;
+use crate::runtime::shard::ShardedRun;
+use crate::util::json::{arr, num, obj, s, write as json_write, Value};
+use crate::util::table::{f1, f2, Table};
+
+/// Sim-scale twin of the paper's Base geometry (Table 5: 5 layers,
+/// E = 32) — small hidden sizes so a cell runs in milliseconds.
+pub fn base_twin() -> ModelConfig {
+    ModelConfig {
+        name: "base-twin".into(),
+        vocab_size: 2048,
+        hidden: 64,
+        intermediate: 256,
+        layers: 5,
+        heads: 4,
+        head_dim: 16,
+        patch_dim: 128,
+        num_experts: 32,
+        routing: Routing::TopK(1),
+        capacity_factor: 1.25,
+        capacity_mode: CapacityMode::TimesK,
+        aux_loss_coef: 0.0,
+        moe_attention: false,
+        attn_num_experts: 4,
+        batch: 8,
+        patches: 16,
+        text_len: 48,
+        optimizer: "adamw".into(),
+        lr: 1e-3,
+        warmup: 100,
+        init_std: 0.02,
+        workers: 1,
+    }
+}
+
+/// Sim-scale twin of the 10B geometry (Table 5: 10 layers, E = 128).
+pub fn ten_b_twin() -> ModelConfig {
+    let mut c = base_twin();
+    c.name = "10B-twin".into();
+    c.layers = 10;
+    c.num_experts = 128;
+    c
+}
+
+/// The benched strategies: the paper's three headline routing regimes.
+fn strategies() -> Vec<(Routing, CapacityMode)> {
+    vec![
+        (Routing::TopK(1), CapacityMode::TimesK),
+        (Routing::TopK(2), CapacityMode::Times1),
+        (Routing::Prototype(2), CapacityMode::Times1),
+    ]
+}
+
+/// The benched grid: {base, 10B twins} x {top1, top2, 2top1} x D in {1,4,8}.
+pub fn cases() -> Vec<(ModelConfig, usize)> {
+    let mut out = Vec::new();
+    for model in [base_twin(), ten_b_twin()] {
+        for (routing, mode) in strategies() {
+            for workers in [1usize, 4, 8] {
+                let mut cfg = model.clone();
+                cfg.name = format!("{}-{}", model.name, routing.name());
+                cfg.routing = routing;
+                cfg.capacity_mode = mode;
+                out.push((cfg, workers));
+            }
+        }
+    }
+    out
+}
+
+/// One measured (model, strategy, D) cell.
+#[derive(Debug, Clone)]
+pub struct DispatchBenchRow {
+    pub model: String,
+    pub strategy: String,
+    pub workers: usize,
+    pub tokens_per_worker: usize,
+    pub capacity: usize,
+    /// median measured host ms per sharded step
+    pub host_ms: f64,
+    /// cross-worker load c_v (last step)
+    pub shard_cv: f64,
+    /// dropped / demanded tokens (last step)
+    pub drop_rate: f64,
+    /// measured all-to-all MB per step (all 4 directions)
+    pub a2a_mb_step: f64,
+    /// cluster model, analytic O(ECM) traffic
+    pub analytic_ms: f64,
+    /// cluster model, observed traffic + shard imbalance
+    pub observed_ms: f64,
+}
+
+/// Run the full grid, `steps` measured sharded steps per cell. Each cell
+/// is driven through [`ShardedRun::train`] — the same stepping loop (and
+/// the same worker-batch consumption order) the real runs use, so the
+/// bench can never silently measure a different data stream.
+pub fn run_suite(steps: usize) -> Result<Vec<DispatchBenchRow>> {
+    let steps = steps.max(1);
+    let mut rows = Vec::new();
+    for (cfg, workers) in cases() {
+        let run = ShardedRun::new(&cfg, workers)?;
+        let mut log = RunLog::new(format!("{}-d{workers}", cfg.name));
+        run.train(steps as i64, 42, &mut log, false)?;
+        let mut ms: Vec<f64> = log.records.iter().map(|r| r.ms_per_step).collect();
+        ms.sort_by(f64::total_cmp);
+        let host_ms = ms[ms.len() / 2];
+        let last = log.last().expect("at least one recorded step");
+        let dsp = last.dispatch.as_ref().expect("sharded records carry dispatch");
+        let row = DispatchBenchRow {
+            model: cfg.name.clone(),
+            strategy: cfg.routing.name(),
+            workers,
+            tokens_per_worker: cfg.tokens_per_batch(),
+            capacity: run.info().capacity,
+            host_ms,
+            shard_cv: dsp.shard_load_cv,
+            drop_rate: dsp.drop_fraction,
+            a2a_mb_step: dsp.a2a_bytes_step / 1e6,
+            analytic_ms: last.sim_ms,
+            observed_ms: dsp.observed_ms,
+        };
+        eprintln!(
+            "[bench] {} D={}: host {:.2} ms, shard-cv {:.3}, drop {:.3}, a2a {:.2} MB, cluster {:.1} -> {:.1} ms",
+            row.model,
+            row.workers,
+            row.host_ms,
+            row.shard_cv,
+            row.drop_rate,
+            row.a2a_mb_step,
+            row.analytic_ms,
+            row.observed_ms
+        );
+        rows.push(row);
+    }
+    Ok(rows)
+}
+
+/// Human-readable table over the suite.
+pub fn render_table(rows: &[DispatchBenchRow]) -> Table {
+    let mut t = Table::new(
+        "sharded dispatch: measured exchange vs analytic cluster estimate",
+        &[
+            "model",
+            "D",
+            "T/worker",
+            "C",
+            "host ms",
+            "shard c_v",
+            "drop",
+            "a2a MB/step",
+            "analytic ms",
+            "observed ms",
+        ],
+    );
+    for r in rows {
+        t.row(vec![
+            r.model.clone(),
+            r.workers.to_string(),
+            r.tokens_per_worker.to_string(),
+            r.capacity.to_string(),
+            f2(r.host_ms),
+            f2(r.shard_cv),
+            f2(r.drop_rate),
+            f2(r.a2a_mb_step),
+            f1(r.analytic_ms),
+            f1(r.observed_ms),
+        ]);
+    }
+    t
+}
+
+/// Serialize the suite to the tracked trajectory JSON.
+pub fn to_json(rows: &[DispatchBenchRow], steps: usize) -> Value {
+    let items: Vec<Value> = rows
+        .iter()
+        .map(|r| {
+            obj(vec![
+                ("model", s(r.model.clone())),
+                ("strategy", s(r.strategy.clone())),
+                ("workers", num(r.workers as f64)),
+                ("tokens_per_worker", num(r.tokens_per_worker as f64)),
+                ("capacity", num(r.capacity as f64)),
+                ("host_ms_per_step", num(r.host_ms)),
+                ("shard_load_cv", num(r.shard_cv)),
+                ("drop_rate", num(r.drop_rate)),
+                ("a2a_mb_per_step", num(r.a2a_mb_step)),
+                ("cluster_analytic_ms", num(r.analytic_ms)),
+                ("cluster_observed_ms", num(r.observed_ms)),
+            ])
+        })
+        .collect();
+    obj(vec![
+        ("bench", s("dispatch")),
+        ("steps_per_cell", num(steps as f64)),
+        ("rows", arr(items)),
+    ])
+}
+
+/// Write `BENCH_dispatch.json` (or wherever `path` points).
+pub fn write_json(rows: &[DispatchBenchRow], steps: usize, path: &str) -> Result<()> {
+    let text = json_write(&to_json(rows, steps)) + "\n";
+    std::fs::write(path, text).with_context(|| format!("writing {path}"))?;
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn grid_covers_the_issue_matrix() {
+        let cs = cases();
+        assert_eq!(cs.len(), 18, "2 models x 3 strategies x 3 worker counts");
+        for (cfg, workers) in &cs {
+            assert_eq!(cfg.num_experts % workers, 0, "{}: unshardable at D={workers}", cfg.name);
+        }
+        assert!(cs.iter().any(|(c, d)| c.name == "10B-twin-2top1" && *d == 8));
+        assert!(cs.iter().any(|(c, d)| c.name == "base-twin-top2" && *d == 1));
+    }
+
+    #[test]
+    fn json_shape_is_stable() {
+        let rows = vec![DispatchBenchRow {
+            model: "base-twin-top1".into(),
+            strategy: "top1".into(),
+            workers: 4,
+            tokens_per_worker: 512,
+            capacity: 20,
+            host_ms: 1.5,
+            shard_cv: 0.3,
+            drop_rate: 0.01,
+            a2a_mb_step: 2.5,
+            analytic_ms: 100.0,
+            observed_ms: 80.0,
+        }];
+        let v = to_json(&rows, 4);
+        assert_eq!(v.get("bench").and_then(|b| b.as_str()), Some("dispatch"));
+        let items = v.get("rows").and_then(|r| r.as_array()).unwrap();
+        assert_eq!(items.len(), 1);
+        assert_eq!(items[0].get("workers").and_then(|w| w.as_f64()), Some(4.0));
+        assert_eq!(
+            items[0].get("cluster_observed_ms").and_then(|w| w.as_f64()),
+            Some(80.0)
+        );
+    }
+}

@@ -176,6 +176,7 @@ impl Backend for VariantRuntime {
             experts: cfg.num_experts,
             dropped: vec_f32(&extras[4])?,
             sim_step_ms: 0.0,
+            dispatch: None,
         };
         Ok((
             TrainState { step: state.step + 1, repr: StateRepr::Device(bufs) },

@@ -1,19 +1,25 @@
 //! Runtime layer: the pluggable [`Backend`] execution contract, the
-//! artifact manifest, the zero-artifact [`NativeBackend`], and — behind
-//! the `pjrt` cargo feature — the PJRT engine with device-resident state.
+//! artifact manifest, the zero-artifact [`NativeBackend`], the
+//! expert-parallel [`ShardedRun`] driver with its dispatch bench, and —
+//! behind the `pjrt` cargo feature — the PJRT engine with
+//! device-resident state.
 //!
 //! See `backend` for the trait surface, `native` for the pure-Rust
-//! runtime, `manifest` for the python<->rust buffer-order contract, and
-//! `engine` (feature `pjrt`) for the XLA execution model.
+//! runtime, `shard` for the multi-worker all-to-all execution layer,
+//! `manifest` for the python<->rust buffer-order contract, and `engine`
+//! (feature `pjrt`) for the XLA execution model.
 
 pub mod backend;
+pub mod dispatch_bench;
 #[cfg(feature = "pjrt")]
 pub mod engine;
 pub mod manifest;
 pub mod native;
+pub mod shard;
 
 pub use backend::{measure_step_ms, Backend, BackendProvider, StateRepr, StepStats, TrainState};
 #[cfg(feature = "pjrt")]
 pub use engine::{Engine, PjrtProvider, VariantRuntime};
 pub use manifest::{Manifest, TensorSpec, VariantInfo};
 pub use native::{NativeBackend, NativeProvider};
+pub use shard::ShardedRun;

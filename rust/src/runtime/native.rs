@@ -99,6 +99,15 @@ fn loss_floor(cfg: &ModelConfig) -> f64 {
     (base * (1.0 - k_gain - proto_gain) + aux_pen + attn_pen).max(0.2)
 }
 
+/// Constant mixed into the step seed (`base_seed` below). Shared with the
+/// sharded runtime (`runtime::shard`), whose worker 0 must reproduce this
+/// backend's exact RNG streams.
+pub(crate) const STEP_SEED_MIX: u64 = 0x9E37_79B9_7F4A_7C15;
+/// Constant deriving per-layer seeds from the step seed.
+pub(crate) const LAYER_SEED_MIX: u64 = 0x517C_C1B7_2722_0A95;
+/// Constant deriving the loss-noise stream from the step seed.
+pub(crate) const NOISE_SEED_MIX: u64 = 0xD1B5_4A32_D192_ED03;
+
 fn hash_str(s: &str) -> u64 {
     let mut h = 0xcbf2_9ce4_8422_2325u64;
     for b in s.bytes() {
@@ -107,7 +116,7 @@ fn hash_str(s: &str) -> u64 {
     h
 }
 
-fn hash_f32s(xs: &[f32]) -> u64 {
+pub(crate) fn hash_f32s(xs: &[f32]) -> u64 {
     let mut h = 0xcbf2_9ce4_8422_2325u64;
     for &x in xs {
         h = (h ^ x.to_bits() as u64).wrapping_mul(0x100_0000_01b3);
@@ -115,7 +124,7 @@ fn hash_f32s(xs: &[f32]) -> u64 {
     h
 }
 
-fn batch_hash(batch: &Batch) -> u64 {
+pub(crate) fn batch_hash(batch: &Batch) -> u64 {
     let mut h = 0xcbf2_9ce4_8422_2325u64;
     for &t in &batch.tokens {
         h = (h ^ t as u32 as u64).wrapping_mul(0x100_0000_01b3);
@@ -123,7 +132,7 @@ fn batch_hash(batch: &Batch) -> u64 {
     h
 }
 
-fn law_from_leaf(leaf: &[f32]) -> Result<PowerLaw> {
+pub(crate) fn law_from_leaf(leaf: &[f32]) -> Result<PowerLaw> {
     if leaf.len() != 3 {
         bail!("loss-law leaf has {} elements, expected 3", leaf.len());
     }
@@ -145,7 +154,7 @@ const MIN_GEN_PARALLEL_WORK: usize = 4096;
 /// as independent work units on the pool; each shard derives its own RNG
 /// stream from (layer seed, shard index), so the result is a pure
 /// function of the seed regardless of scheduling.
-fn fill_gates(
+pub(crate) fn fill_gates(
     pool_ref: &WorkerPool,
     gates: &mut [f32],
     layer_seed: u64,
@@ -274,7 +283,7 @@ impl Backend for NativeBackend {
         let capacity = self.info.capacity;
         let prototypes = cfg.routing.prototypes().max(1) as usize;
         let base_seed = hash_f32s(&leaves[0])
-            ^ (step as u64).wrapping_mul(0x9E37_79B9_7F4A_7C15)
+            ^ (step as u64).wrapping_mul(STEP_SEED_MIX)
             ^ batch_hash(batch);
 
         // route every layer: each layer is its own routing problem over
@@ -288,8 +297,7 @@ impl Backend for NativeBackend {
         let StepScratch { engine, gates, route_out } = &mut *scratch_guard;
         let pool_ref = self.pool();
         let bias = &leaves[1];
-        let layer_seed =
-            |l: usize| base_seed ^ (l as u64 + 1).wrapping_mul(0x517C_C1B7_2722_0A95);
+        let layer_seed = |l: usize| base_seed ^ (l as u64 + 1).wrapping_mul(LAYER_SEED_MIX);
         let spec = RouterSpec { routing: cfg.routing, num_experts: experts, capacity };
         // every cell is overwritten by fill_gates, so only the length matters
         gates.resize(tokens * experts, 0.0);
@@ -328,7 +336,7 @@ impl Backend for NativeBackend {
         let drop_frac = total_dropped as f64 / routed.max(1.0);
 
         let s_next = (step + 1) as f64;
-        let mut noise = Rng::new(base_seed ^ 0xD1B5_4A32_D192_ED03);
+        let mut noise = Rng::new(base_seed ^ NOISE_SEED_MIX);
         let loss = law.predict(s_next) + 0.02 * drop_frac + 0.01 * noise.normal();
         let grad_norm = law.a * law.b * s_next.powf(-law.b - 1.0) * 50.0 + 0.5;
 
@@ -349,6 +357,7 @@ impl Backend for NativeBackend {
             experts,
             dropped,
             sim_step_ms: self.sim_step_ms,
+            dispatch: None,
         };
         Ok((TrainState { step: step + 1, repr: StateRepr::Host(leaves) }, stats))
     }

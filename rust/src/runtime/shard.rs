@@ -1,0 +1,429 @@
+//! Expert-parallel multi-worker runtime: D data-parallel workers, each
+//! routing its *own* local batch with per-worker capacity
+//! `C = k·T_local/E·γ` (Eq. 2 at local scope), exchanging tokens with the
+//! E/D-expert shards over an all-to-all whose traffic is accounted
+//! exactly ([`moe::dispatch`](crate::moe::dispatch)).
+//!
+//! [`ShardedRun`] executes D `NativeBackend`-style worker steps per global
+//! step: per (worker, layer), gate generation and the routing argmax run
+//! as token-shard work units on the persistent [`WorkerPool`] — the same
+//! decomposition, and therefore the same bitwise-determinism contract
+//! across pool sizes, as `NativeBackend::step`
+//! (`rust/tests/pool_determinism.rs`). Worker 0's RNG streams are
+//! *identical* to the single-worker backend's, and every global aggregate
+//! is computed in the same operation order, so at D = 1 the emitted
+//! [`StepStats`] reproduce `NativeBackend::step` bit for bit — the
+//! contract `rust/tests/dispatch_properties.rs` pins.
+//!
+//! Each step also emits a [`DispatchSummary`]: per-worker drop counts,
+//! per-shard received/dropped tokens, the cross-worker load c_v, and the
+//! *measured* all-to-all bytes that [`simulate_step_observed`] consumes
+//! in place of the cluster model's analytic O(ECM) estimate.
+
+use std::sync::{Arc, Mutex};
+use std::time::Instant;
+
+use anyhow::{bail, Result};
+
+use super::backend::{Backend, StateRepr, StepStats, TrainState};
+use super::manifest::VariantInfo;
+use super::native::{
+    batch_hash, fill_gates, hash_f32s, law_from_leaf, NativeBackend, LAYER_SEED_MIX,
+    NOISE_SEED_MIX, STEP_SEED_MIX,
+};
+use crate::cluster::{simulate_step_observed, table2_hardware, HardwareModel, ObservedTraffic};
+use crate::config::ModelConfig;
+use crate::data::{Batch, Batcher, Split};
+use crate::metrics::RunLog;
+use crate::moe::{DispatchPlan, DispatchSummary, RouteOutput, RouterSpec, RoutingEngine};
+use crate::util::pool::{self, WorkerPool};
+use crate::util::rng::Rng;
+use crate::util::stats::coefficient_of_variation;
+
+/// Constant separating per-worker RNG streams. Worker 0 folds in zero, so
+/// its streams are bitwise identical to `NativeBackend::step`'s.
+const WORKER_SEED_MIX: u64 = 0xA24B_AED4_963E_E407;
+
+/// Per-run reusable routing buffers (see `StepScratch` in `native`).
+#[derive(Default)]
+struct ShardScratch {
+    engine: RoutingEngine,
+    gates: Vec<f32>,
+    route_out: RouteOutput,
+}
+
+/// The expert-parallel execution driver: D workers over one shared
+/// (data-parallel-synchronized) train state.
+pub struct ShardedRun {
+    native: NativeBackend,
+    workers: usize,
+    pool: Option<Arc<WorkerPool>>,
+    hw: HardwareModel,
+    scratch: Mutex<ShardScratch>,
+}
+
+impl ShardedRun {
+    /// Driver for `cfg` sharded over `workers` expert-parallel workers
+    /// (the config's own `workers` field is overridden). Requires E to
+    /// divide into equal shards.
+    pub fn new(cfg: &ModelConfig, workers: usize) -> Result<Self> {
+        Self::build(cfg, workers, None)
+    }
+
+    /// Driver pinned to a specific pool — how the determinism tests
+    /// assert bitwise-identical output across pool sizes.
+    pub fn with_pool(cfg: &ModelConfig, workers: usize, pool: Arc<WorkerPool>) -> Result<Self> {
+        Self::build(cfg, workers, Some(pool))
+    }
+
+    fn build(cfg: &ModelConfig, workers: usize, pool: Option<Arc<WorkerPool>>) -> Result<Self> {
+        if workers == 0 {
+            bail!("sharded run needs at least one worker");
+        }
+        if cfg.num_experts % workers != 0 {
+            bail!(
+                "experts {} not divisible by workers {workers}: expert shards must be equal",
+                cfg.num_experts
+            );
+        }
+        let mut cfg_d = cfg.clone();
+        cfg_d.workers = workers;
+        let native = match &pool {
+            Some(p) => NativeBackend::with_pool(&cfg_d, Arc::clone(p)),
+            None => NativeBackend::new(&cfg_d),
+        };
+        let engine = match &pool {
+            Some(p) => RoutingEngine::with_pool(Arc::clone(p)),
+            None => RoutingEngine::new(),
+        };
+        Ok(Self {
+            native,
+            workers,
+            pool,
+            hw: table2_hardware(),
+            scratch: Mutex::new(ShardScratch {
+                engine,
+                gates: Vec::new(),
+                route_out: RouteOutput::default(),
+            }),
+        })
+    }
+
+    pub fn info(&self) -> &VariantInfo {
+        self.native.info()
+    }
+
+    pub fn workers(&self) -> usize {
+        self.workers
+    }
+
+    /// Analytic (pre-observation) cluster prediction for one step at this
+    /// worker count.
+    pub fn analytic_step_ms(&self) -> f64 {
+        self.native.simulated_step_ms()
+    }
+
+    /// Fresh train state — identical to the single-worker backend's
+    /// (worker replicas are data-parallel-synchronized, so one state
+    /// vector represents all of them).
+    pub fn init_state(&self, seed: i32) -> Result<TrainState> {
+        self.native.init_state(seed)
+    }
+
+    /// One global step over `batches` (one local batch per worker).
+    pub fn step(&self, state: TrainState, batches: &[Batch]) -> Result<(TrainState, StepStats)> {
+        let (state, stats, _plans) = self.step_detailed(state, batches)?;
+        Ok((state, stats))
+    }
+
+    /// [`ShardedRun::step`] plus the per-layer [`DispatchPlan`]s — the
+    /// form the invariant tests and the dispatch bench consume.
+    pub fn step_detailed(
+        &self,
+        state: TrainState,
+        batches: &[Batch],
+    ) -> Result<(TrainState, StepStats, Vec<DispatchPlan>)> {
+        let info = self.native.info();
+        let cfg = &info.config;
+        let d = self.workers;
+        if batches.len() != d {
+            bail!("sharded step got {} batches for {d} workers", batches.len());
+        }
+        let TrainState { step, repr } = state;
+        let mut leaves = match repr {
+            StateRepr::Host(leaves) => leaves,
+            #[cfg(feature = "pjrt")]
+            StateRepr::Device(_) => bail!("sharded runtime received a device-resident state"),
+        };
+        let law = law_from_leaf(&leaves[0])?;
+        let tokens = cfg.tokens_per_batch();
+        let experts = cfg.num_experts;
+        let layers = cfg.layers;
+        let capacity = info.capacity;
+        let prototypes = cfg.routing.prototypes().max(1) as usize;
+
+        let mut guard = self.scratch.lock().expect("shard scratch poisoned");
+        let ShardScratch { engine, gates, route_out } = &mut *guard;
+        let pool_ref = self.pool.as_deref().unwrap_or_else(pool::global);
+        let bias = &leaves[1];
+        let spec = RouterSpec { routing: cfg.routing, num_experts: experts, capacity };
+        gates.resize(tokens * experts, 0.0);
+
+        // every worker routes its own local batch: per-(worker, layer)
+        // kept and demanded counts, accumulated serially in worker order
+        // while each phase's token shards run on the pool — the exact
+        // per-phase decomposition of NativeBackend::step, repeated D
+        // times with per-worker RNG streams.
+        let mut wl_load = vec![0u32; d * layers * experts];
+        let mut wl_demand = vec![0u32; d * layers * experts];
+        let mut wl_dropped = vec![0u32; d * layers];
+        let mut total_dropped = 0u64;
+        let mut noise_sum = 0.0f64;
+        let state_hash = hash_f32s(&leaves[0]);
+        for w in 0..d {
+            let base_seed = state_hash
+                ^ (step as u64).wrapping_mul(STEP_SEED_MIX)
+                ^ batch_hash(&batches[w])
+                ^ (w as u64).wrapping_mul(WORKER_SEED_MIX);
+            for l in 0..layers {
+                let layer_seed = base_seed ^ (l as u64 + 1).wrapping_mul(LAYER_SEED_MIX);
+                let bias_row = &bias[l * experts..(l + 1) * experts];
+                fill_gates(
+                    pool_ref,
+                    gates.as_mut_slice(),
+                    layer_seed,
+                    bias_row,
+                    tokens,
+                    experts,
+                    prototypes,
+                );
+                engine.route_counts_into(gates.as_slice(), tokens, &spec, route_out);
+                let at = (w * layers + l) * experts;
+                wl_load[at..at + experts].copy_from_slice(&route_out.load);
+                wl_demand[at..at + experts].copy_from_slice(&route_out.demand);
+                wl_dropped[w * layers + l] = route_out.dropped;
+                total_dropped += route_out.dropped as u64;
+            }
+            let mut noise = Rng::new(base_seed ^ NOISE_SEED_MIX);
+            noise_sum += noise.normal();
+        }
+        drop(guard);
+
+        // global aggregates, in NativeBackend::step's operation order so
+        // D = 1 reproduces its StepStats bitwise
+        let mut load = vec![0f32; layers * experts];
+        let mut dropped = vec![0f32; layers];
+        let mut cv_sum = 0.0;
+        let mut cv_row: Vec<f64> = Vec::with_capacity(experts);
+        for l in 0..layers {
+            cv_row.clear();
+            for e in 0..experts {
+                let mut sum = 0u32;
+                for w in 0..d {
+                    sum += wl_load[(w * layers + l) * experts + e];
+                }
+                load[l * experts + e] = sum as f32;
+                cv_row.push(sum as f64);
+            }
+            let mut drop_sum = 0u32;
+            for w in 0..d {
+                drop_sum += wl_dropped[w * layers + l];
+            }
+            dropped[l] = drop_sum as f32;
+            cv_sum += coefficient_of_variation(&cv_row);
+        }
+        let mean_cv = cv_sum / layers.max(1) as f64;
+        let k_eff = cfg.routing.k().min(experts as u32).max(1) as usize;
+        let routed = (layers * tokens * k_eff * d) as f64;
+        let drop_frac = total_dropped as f64 / routed.max(1.0);
+
+        let s_next = (step + 1) as f64;
+        let noise_mean = noise_sum / d as f64;
+        let loss = law.predict(s_next) + 0.02 * drop_frac + 0.01 * noise_mean;
+        let grad_norm = law.a * law.b * s_next.powf(-law.b - 1.0) * 50.0 + 0.5;
+
+        // data-parallel replicas stay synchronized: the aux balancing
+        // decay applies once per global step, exactly as at D = 1
+        if cfg.aux_loss_coef > 0.0 {
+            for v in leaves[1].iter_mut() {
+                *v *= 0.95;
+            }
+        }
+
+        // one DispatchPlan per layer, then the step-level summary with
+        // the observed-traffic cluster prediction
+        let mut plans = Vec::with_capacity(layers);
+        for l in 0..layers {
+            let mut send = vec![0u32; d * experts];
+            let mut demand = vec![0u32; d * experts];
+            for w in 0..d {
+                let at = (w * layers + l) * experts;
+                send[w * experts..(w + 1) * experts]
+                    .copy_from_slice(&wl_load[at..at + experts]);
+                demand[w * experts..(w + 1) * experts]
+                    .copy_from_slice(&wl_demand[at..at + experts]);
+            }
+            plans.push(DispatchPlan::new(d, experts, capacity, cfg.hidden, send, demand));
+        }
+        let mut summary = DispatchSummary::from_plans(&plans);
+        let observed = ObservedTraffic {
+            a2a_bytes_per_layer: summary.a2a_bytes_per_layer,
+            shard_balance: summary.shard_balance,
+        };
+        summary.observed_ms =
+            simulate_step_observed(cfg, cfg.routing, cfg.capacity_mode, &self.hw, &observed)
+                .total_ms();
+
+        let stats = StepStats {
+            loss: loss as f32,
+            aux_loss: (cfg.aux_loss_coef * mean_cv) as f32,
+            grad_norm: grad_norm as f32,
+            load,
+            layers,
+            experts,
+            dropped,
+            sim_step_ms: self.native.simulated_step_ms(),
+            dispatch: Some(summary),
+        };
+        Ok((TrainState { step: step + 1, repr: StateRepr::Host(leaves) }, stats, plans))
+    }
+
+    /// Drive `steps` global steps from a fresh init, one local batch per
+    /// worker per step (worker `w` consumes batch `s·D + w`, so D = 1
+    /// replays the single-worker data stream exactly). Records every
+    /// step — including the per-worker dispatch series — in `log`.
+    pub fn train(
+        &self,
+        steps: i64,
+        seed: u64,
+        log: &mut RunLog,
+        verbose: bool,
+    ) -> Result<TrainState> {
+        let state = self.init_state(seed as i32)?;
+        self.train_from(state, steps, seed, log, verbose)
+    }
+
+    /// Continue training from an existing state (resume-aware: the batch
+    /// cursor skips everything all D workers already consumed).
+    pub fn train_from(
+        &self,
+        mut state: TrainState,
+        steps: i64,
+        seed: u64,
+        log: &mut RunLog,
+        verbose: bool,
+    ) -> Result<TrainState> {
+        let info = self.native.info();
+        let cfg = info.config.clone();
+        let d = self.workers;
+        let mut batcher = Batcher::for_config(&cfg, Split::Train, seed);
+        batcher.seek(state.step as u64 * (cfg.batch * d) as u64);
+        let mut batches: Vec<Batch> = Vec::with_capacity(d);
+        let end_step = state.step + steps;
+        while state.step < end_step {
+            batches.clear();
+            for _ in 0..d {
+                batches.push(batcher.next_batch());
+            }
+            let t0 = Instant::now();
+            let (next, stats) = self.step(state, &batches)?;
+            state = next;
+            let ms = t0.elapsed().as_secs_f64() * 1e3;
+            let step_now = state.step - 1;
+            log.push(step_now, &stats, ms)?;
+            if verbose && step_now % 50 == 0 {
+                let (cv, a2a_mb) = stats
+                    .dispatch
+                    .as_ref()
+                    .map(|s| (s.shard_load_cv, s.a2a_bytes_step / 1e6))
+                    .unwrap_or((0.0, 0.0));
+                eprintln!(
+                    "[{}|D={d}] step {:>5} loss {:.4} drop {:>5.0} shard-cv {:.3} a2a {:.2} MB {:.0} ms",
+                    info.name,
+                    step_now,
+                    stats.loss,
+                    stats.total_dropped(),
+                    cv,
+                    a2a_mb,
+                    ms
+                );
+            }
+        }
+        Ok(state)
+    }
+
+    /// Teacher-forced eval PPL over `n` paired eval batches (cursor reset,
+    /// identical data across strategies and worker counts).
+    pub fn eval_ppl(&self, state: &TrainState, n: usize, seed: u64) -> Result<f64> {
+        let cfg = &self.native.info().config;
+        let mut batcher = Batcher::for_config(cfg, Split::Eval, seed);
+        batcher.seek(0);
+        let mut sum_nll = 0.0;
+        let mut count = 0.0;
+        for _ in 0..n {
+            let batch = batcher.next_batch();
+            let (nll, c) = self.native.eval(state, &batch)?;
+            sum_nll += nll;
+            count += c;
+        }
+        Ok((sum_nll / count.max(1.0)).exp())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::runtime::native::registry;
+
+    fn sim_cfg(name: &str) -> ModelConfig {
+        registry().into_iter().find(|c| c.name == name).expect("registry variant")
+    }
+
+    #[test]
+    fn rejects_unshardable_geometry() {
+        let cfg = sim_cfg("base-sim"); // E = 16
+        assert!(ShardedRun::new(&cfg, 0).is_err());
+        assert!(ShardedRun::new(&cfg, 3).is_err(), "16 % 3 != 0");
+        assert!(ShardedRun::new(&cfg, 8).is_ok());
+    }
+
+    #[test]
+    fn step_requires_one_batch_per_worker() {
+        let cfg = sim_cfg("base-sim");
+        let run = ShardedRun::new(&cfg, 4).unwrap();
+        let state = run.init_state(7).unwrap();
+        let mut batcher = Batcher::for_config(&cfg, Split::Train, 7);
+        let batches = vec![batcher.next_batch()];
+        assert!(run.step(state, &batches).is_err());
+    }
+
+    #[test]
+    fn sharded_step_emits_conserved_dispatch() {
+        let cfg = sim_cfg("large-sim"); // E = 32, 8 layers
+        let d = 4;
+        let run = ShardedRun::new(&cfg, d).unwrap();
+        let state = run.init_state(11).unwrap();
+        let mut batcher = Batcher::for_config(&cfg, Split::Train, 11);
+        let batches: Vec<Batch> = (0..d).map(|_| batcher.next_batch()).collect();
+        let (next, stats, plans) = run.step_detailed(state, &batches).unwrap();
+        assert_eq!(next.step, 1);
+        assert_eq!(plans.len(), cfg.layers);
+        let summary = stats.dispatch.as_ref().expect("sharded stats carry dispatch");
+        assert_eq!(summary.workers, d);
+        // routed-slot conservation per worker per layer
+        let tokens = cfg.tokens_per_batch() as u64;
+        let k_eff = cfg.routing.k().max(1) as u64;
+        for plan in &plans {
+            let kept = plan.kept_per_worker();
+            let drops = plan.dropped_per_worker();
+            for w in 0..d {
+                assert_eq!(kept[w] + drops[w], tokens * k_eff);
+            }
+        }
+        // global StepStats load equals the per-shard receive totals
+        let stats_total: f64 = stats.load.iter().map(|&x| x as f64).sum();
+        let recv_total: f64 = summary.per_shard_recv.iter().sum();
+        assert_eq!(stats_total, recv_total);
+        assert!(summary.observed_ms > 0.0);
+    }
+}

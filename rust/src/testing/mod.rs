@@ -8,14 +8,17 @@
 use crate::moe::RouteOutput;
 use crate::util::rng::Rng;
 
-/// Bitwise equality of two [`RouteOutput`]s: load, drop counts, and
-/// assignment tuples, with combine gates compared as raw f32 bits. This
+/// Bitwise equality of two [`RouteOutput`]s: load, demand, drop counts,
+/// and assignment tuples, with combine gates compared as raw f32 bits. This
 /// is the engine-vs-reference equivalence contract, kept in one place so
 /// the engine unit tests, the routing property tests, and the golden-
 /// fixture parity tests cannot silently drift apart in what they check.
 pub fn route_outputs_bitwise_eq(a: &RouteOutput, b: &RouteOutput) -> Result<(), String> {
     if a.load != b.load {
         return Err(format!("load diverged: {:?} vs {:?}", a.load, b.load));
+    }
+    if a.demand != b.demand {
+        return Err(format!("demand diverged: {:?} vs {:?}", a.demand, b.demand));
     }
     if a.dropped != b.dropped {
         return Err(format!("dropped diverged: {} vs {}", a.dropped, b.dropped));

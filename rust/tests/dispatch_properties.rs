@@ -1,0 +1,259 @@
+//! Invariants of the expert-parallel dispatch layer:
+//!
+//! * per-worker kept + dropped always equals the routed-slot total, and a
+//!   D = 1 plan is exactly the single-worker routing reference (all
+//!   traffic local, zero all-to-all bytes);
+//! * plan byte counts are conserved — what every worker sends equals
+//!   what every shard receives;
+//! * `ShardedRun` is bitwise deterministic across pool sizes 0/1/2 and
+//!   the default, the same contract `pool_determinism.rs` pins for the
+//!   single-worker backend;
+//! * at D = 1 the sharded runtime reproduces `NativeBackend::step`'s
+//!   `StepStats` bit for bit.
+
+use std::sync::Arc;
+
+use m6t::config::Routing;
+use m6t::data::{Batch, Batcher, Split};
+use m6t::moe::dispatch::DispatchPlan;
+use m6t::moe::{route, RouterSpec};
+use m6t::runtime::native::registry;
+use m6t::runtime::{Backend as _, NativeBackend, ShardedRun, StepStats};
+use m6t::testing::{check, gen};
+use m6t::util::pool::{default_workers, WorkerPool};
+use m6t::util::rng::Rng;
+
+#[test]
+fn prop_plan_conserves_tokens_and_bytes() {
+    check("dispatch-conservation", 60, |rng, b| {
+        let (tokens, experts, capacity) = gen::routing_shape(rng, b);
+        // worker counts that divide the expert count
+        let divisors: Vec<usize> = [1usize, 2, 4, 8]
+            .into_iter()
+            .filter(|d| experts % d == 0)
+            .collect();
+        let workers = divisors[gen::usize_in(rng, 0, divisors.len() - 1)];
+        let k = 1 + gen::usize_in(rng, 0, 3) as u32;
+        let routing =
+            if rng.below(2) == 0 { Routing::TopK(k) } else { Routing::Prototype(1) };
+        let spec = RouterSpec { routing, num_experts: experts, capacity };
+        let routes: Vec<_> = (0..workers)
+            .map(|w| {
+                let mut wrng = Rng::new(rng.next_u64() ^ (w as u64));
+                let gates = gen::gates(&mut wrng, tokens, experts);
+                route(&gates, tokens, &spec)
+            })
+            .collect();
+        let hidden = 8 + gen::usize_in(rng, 0, 64);
+        let plan = DispatchPlan::from_worker_routes(experts, capacity, hidden, &routes);
+
+        // per-worker kept + dropped == routed slots (k_eff per token)
+        let k_eff = match routing {
+            Routing::TopK(k) => (k as usize).min(experts),
+            Routing::Prototype(z) => z as usize,
+        };
+        let kept = plan.kept_per_worker();
+        let drops = plan.dropped_per_worker();
+        for w in 0..workers {
+            let total = kept[w] + drops[w];
+            let want = (tokens * k_eff) as u64;
+            if total != want {
+                return Err(format!(
+                    "worker {w}: kept {} + dropped {} = {total} != routed {want}",
+                    kept[w], drops[w]
+                ));
+            }
+        }
+
+        // send totals == receive totals, for tokens and for bytes
+        let sent: u64 = kept.iter().sum();
+        let recv: u64 = plan.recv_per_shard().iter().sum();
+        if sent != recv {
+            return Err(format!("token conservation broken: sent {sent} recv {recv}"));
+        }
+        let m = plan.bytes_matrix();
+        let d = plan.workers;
+        let row_total: u64 = m.iter().sum();
+        let col_total: u64 =
+            (0..d).map(|v| (0..d).map(|w| m[w * d + v]).sum::<u64>()).sum();
+        if row_total != col_total || row_total != plan.dispatch_bytes() {
+            return Err(format!(
+                "byte conservation broken: rows {row_total} cols {col_total} total {}",
+                plan.dispatch_bytes()
+            ));
+        }
+        for w in 0..d {
+            if m[w * d + w] != 0 {
+                return Err(format!("worker {w} 'sends' to itself over the network"));
+            }
+        }
+
+        // the per-shard drop attribution accounts for every drop
+        let shard_drops: u64 = plan.dropped_per_shard().iter().sum();
+        let worker_drops: u64 = drops.iter().sum();
+        if shard_drops != worker_drops {
+            return Err(format!(
+                "drop attribution broken: shards {shard_drops} workers {worker_drops}"
+            ));
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_single_worker_plan_matches_reference() {
+    // D = 1: the plan is the single-router reference — recv per (only)
+    // shard equals total kept load, nothing crosses the network
+    check("dispatch-d1-reference", 40, |rng, b| {
+        let (tokens, experts, capacity) = gen::routing_shape(rng, b);
+        let routing = Routing::TopK(2.min(experts as u32));
+        let spec = RouterSpec { routing, num_experts: experts, capacity };
+        let gates = gen::gates(rng, tokens, experts);
+        let reference = route(&gates, tokens, &spec);
+        let plan = DispatchPlan::from_worker_routes(experts, capacity, 16, &[reference.clone()]);
+        let kept_ref: u64 = reference.load.iter().map(|&x| x as u64).sum();
+        if plan.recv_per_shard() != vec![kept_ref] {
+            return Err(format!(
+                "D=1 recv {:?} != reference kept {kept_ref}",
+                plan.recv_per_shard()
+            ));
+        }
+        if plan.cross_tokens() != 0 || plan.dispatch_bytes() != 0 {
+            return Err("D=1 must be all-local".into());
+        }
+        if plan.dropped_per_worker() != vec![reference.dropped as u64] {
+            return Err(format!(
+                "D=1 drops {:?} != reference {}",
+                plan.dropped_per_worker(),
+                reference.dropped
+            ));
+        }
+        Ok(())
+    });
+}
+
+/// Everything in StepStats, as bits (sharded runs additionally carry a
+/// dispatch summary, compared separately via PartialEq).
+fn stats_bits(s: &StepStats) -> (u32, u32, u32, Vec<u32>, Vec<u32>, u64) {
+    (
+        s.loss.to_bits(),
+        s.aux_loss.to_bits(),
+        s.grad_norm.to_bits(),
+        s.load.iter().map(|x| x.to_bits()).collect(),
+        s.dropped.iter().map(|x| x.to_bits()).collect(),
+        s.sim_step_ms.to_bits(),
+    )
+}
+
+fn run_sharded_steps(run: &ShardedRun, steps: usize, seed: u64) -> Vec<StepStats> {
+    let cfg = run.info().config.clone();
+    let d = run.workers();
+    let mut state = run.init_state(seed as i32).expect("init");
+    let mut batcher = Batcher::for_config(&cfg, Split::Train, seed);
+    let mut out = Vec::with_capacity(steps);
+    for _ in 0..steps {
+        let batches: Vec<Batch> = (0..d).map(|_| batcher.next_batch()).collect();
+        let (next, stats) = run.step(state, &batches).expect("step");
+        state = next;
+        out.push(stats);
+    }
+    out
+}
+
+#[test]
+fn sharded_d1_reproduces_native_backend_bitwise() {
+    // acceptance: D = 1 reproduces the current single-worker StepStats
+    // bit for bit — same seeds, same batch stream, same arithmetic
+    for name in ["base-sim", "large-sim", "base-sim-aux"] {
+        let cfg = registry().into_iter().find(|c| c.name == name).expect("variant");
+        assert_eq!(cfg.workers, 1, "parity baseline must be a single-worker config");
+        let backend = NativeBackend::new(&cfg);
+        let mut state = backend.init_state(7).expect("init");
+        let mut batcher = Batcher::for_config(&cfg, Split::Train, 7);
+        let mut native_stats = Vec::new();
+        for _ in 0..3 {
+            let batch = batcher.next_batch();
+            let (next, stats) = backend.step(state, &batch).expect("step");
+            state = next;
+            native_stats.push(stats);
+        }
+
+        let run = ShardedRun::new(&cfg, 1).expect("sharded D=1");
+        let sharded_stats = run_sharded_steps(&run, 3, 7);
+        for (i, (n, s)) in native_stats.iter().zip(&sharded_stats).enumerate() {
+            assert_eq!(
+                stats_bits(n),
+                stats_bits(s),
+                "{name}: step {i} diverged between NativeBackend and ShardedRun D=1"
+            );
+            let dsp = s.dispatch.as_ref().expect("sharded stats carry dispatch");
+            assert_eq!(dsp.workers, 1);
+            assert_eq!(dsp.a2a_bytes_step, 0.0, "a single worker moves nothing");
+            assert_eq!(dsp.shard_load_cv, 0.0);
+        }
+    }
+}
+
+#[test]
+fn sharded_bitwise_identical_across_pool_sizes() {
+    // same contract as pool_determinism.rs, at D = 4: the worker-pool
+    // geometry must never leak into the sharded runtime's output
+    let cfg = registry()
+        .into_iter()
+        .find(|c| c.name == "large-sim")
+        .expect("registry variant");
+    let reference = {
+        let run = ShardedRun::with_pool(&cfg, 4, Arc::new(WorkerPool::new(1))).unwrap();
+        run_sharded_steps(&run, 3, 11)
+    };
+    for workers in [0usize, 2, default_workers()] {
+        let run = ShardedRun::with_pool(&cfg, 4, Arc::new(WorkerPool::new(workers))).unwrap();
+        let got = run_sharded_steps(&run, 3, 11);
+        assert_eq!(got.len(), reference.len());
+        for (i, (a, b)) in reference.iter().zip(&got).enumerate() {
+            assert_eq!(
+                stats_bits(a),
+                stats_bits(b),
+                "pool size {workers}: step {i} StepStats diverged"
+            );
+            assert_eq!(
+                a.dispatch, b.dispatch,
+                "pool size {workers}: step {i} dispatch summary diverged"
+            );
+        }
+    }
+    // the default constructor (process-wide pool) must agree too
+    let run = ShardedRun::new(&cfg, 4).unwrap();
+    let got = run_sharded_steps(&run, 3, 11);
+    for (i, (a, b)) in reference.iter().zip(&got).enumerate() {
+        assert_eq!(stats_bits(a), stats_bits(b), "global pool: step {i} diverged");
+        assert_eq!(a.dispatch, b.dispatch, "global pool: step {i} dispatch diverged");
+    }
+}
+
+#[test]
+fn sharding_changes_dispatch_not_convergence_seeds() {
+    // different D: different per-worker streams and real cross traffic —
+    // but the same conservation laws at every D
+    let cfg = registry()
+        .into_iter()
+        .find(|c| c.name == "base-sim")
+        .expect("registry variant");
+    for d in [2usize, 4, 8] {
+        let run = ShardedRun::new(&cfg, d).unwrap();
+        let stats = run_sharded_steps(&run, 2, 5);
+        for s in &stats {
+            let dsp = s.dispatch.as_ref().unwrap();
+            assert_eq!(dsp.workers, d);
+            assert_eq!(dsp.per_shard_recv.len(), d);
+            assert_eq!(dsp.per_worker_dropped.len(), d);
+            // recv totals equal the global kept load
+            let recv: f64 = dsp.per_shard_recv.iter().sum();
+            let load: f64 = s.load.iter().map(|&x| x as f64).sum();
+            assert_eq!(recv, load, "D={d}: recv/load mismatch");
+            assert!(dsp.a2a_bytes_step > 0.0, "D={d}: cross traffic must exist");
+            assert!(dsp.observed_ms > 0.0);
+            assert!((0.0..=1.0).contains(&dsp.cross_fraction));
+        }
+    }
+}
