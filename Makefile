@@ -1,6 +1,6 @@
 # Convenience targets; tier-1 verify is `cargo build --release && cargo test -q`.
 
-.PHONY: build test fmt run report artifacts smoke
+.PHONY: build test fmt run report artifacts smoke bench-step
 
 build:
 	cargo build --release
@@ -16,6 +16,12 @@ run:
 
 report:
 	cargo run --release -- report
+
+# End-to-end step throughput: fused (worker x layer) grid vs the serial
+# two-pass baseline, written to BENCH_step.json (see DESIGN.md on how to
+# read it).
+bench-step:
+	cargo run --release -- bench --step
 
 # `artifacts` is a documented no-op stub. The AOT pipeline
 # (python/compile/aot.py -> HLO text + artifacts/manifest.json) feeds the

@@ -1,0 +1,23 @@
+//! `cargo bench --bench step [-- <steps>]` — the end-to-end sharded-step
+//! throughput bench: the fused parallel (worker x layer) grid vs the
+//! pre-fusion serial two-pass baseline, measured in the same run over
+//! {base, large, xlarge-sim} x {top1, top2, 2top1, 4top1} x D in {1,4,8}.
+//!
+//! Shares its suite (and table rendering) with `m6t bench --step`; both
+//! write `BENCH_step.json` at the repo root so the hot path's end-to-end
+//! perf trajectory is pinned in one place.
+
+use m6t::runtime::step_bench;
+
+fn main() -> anyhow::Result<()> {
+    let steps: usize = std::env::args().skip(1).find_map(|a| a.parse().ok()).unwrap_or(12);
+    let rows = step_bench::run_suite(steps)?;
+    print!("{}", step_bench::render_table(&rows, steps).render());
+    step_bench::write_json(&rows, steps, "BENCH_step.json")?;
+    eprintln!(
+        "[bench] xlarge-sim min speedup at D>=4: {:.2}x",
+        step_bench::xlarge_min_speedup(&rows)
+    );
+    eprintln!("[bench] wrote BENCH_step.json");
+    Ok(())
+}

@@ -10,7 +10,8 @@
 //!   train                   train one variant (checkpoints, metrics)
 //!   eval                    eval PPL of a checkpoint / fresh init
 //!   bench                   measured vs simulated ms/step per strategy;
-//!                           --routing / --dispatch run the tracked suites
+//!                           --routing / --dispatch / --step run the
+//!                           tracked suites (BENCH_*.json)
 //!   flops                   Table 1 (analytical per-GPU GFLOPs)
 //!   simulate                Table 2 (calibrated cluster simulator)
 //!   figure fig1|fig3|fig4|fig5|fig6
@@ -305,13 +306,21 @@ fn cmd_bench(rest: &[String]) -> Result<()> {
         .opt_default("tokens", "16384", "--routing: tokens per route call")
         .opt_default("out", "BENCH_routing.json", "--routing: output JSON path")
         .flag("dispatch", "run the sharded-dispatch suite instead (writes BENCH_dispatch.json)")
-        .opt_default("dispatch-out", "BENCH_dispatch.json", "--dispatch: output JSON path");
+        .opt_default("dispatch-out", "BENCH_dispatch.json", "--dispatch: output JSON path")
+        .flag(
+            "step",
+            "run the fused-vs-baseline step-throughput suite instead (writes BENCH_step.json)",
+        )
+        .opt_default("step-out", "BENCH_step.json", "--step: output JSON path");
     let args = parse(cmd, rest)?;
     if args.flag("routing") {
         return cmd_bench_routing(&args);
     }
     if args.flag("dispatch") {
         return cmd_bench_dispatch(&args);
+    }
+    if args.flag("step") {
+        return cmd_bench_step(&args);
     }
     let samples: usize = args.get_or("steps", 12usize).map_err(anyhow::Error::msg)?;
     let provider = NativeProvider::new();
@@ -363,6 +372,29 @@ fn cmd_bench_dispatch(args: &m6t::util::cli::Args) -> Result<()> {
     let rows = dispatch_bench::run_suite(steps)?;
     print!("{}", dispatch_bench::render_table(&rows).render());
     dispatch_bench::write_json(&rows, steps, &out_path)?;
+    eprintln!("[bench] wrote {out_path}");
+    Ok(())
+}
+
+/// `m6t bench --step` — end-to-end sharded step throughput: the fused
+/// parallel (worker x layer) grid against the pre-fusion serial two-pass
+/// baseline, measured in the same run over {base, large, xlarge-sim} x
+/// {top1, top2, 2top1, 4top1} x D in {1, 4, 8}. Reports p50/p95 step ms,
+/// steps/sec, routed-tokens/sec, the baseline-vs-fused speedup, and the
+/// gate-matrix bytes the fused path never materializes. Writes
+/// BENCH_step.json at the repo root by default.
+fn cmd_bench_step(args: &m6t::util::cli::Args) -> Result<()> {
+    use m6t::runtime::step_bench;
+    let steps: usize = args.get_or("steps", 12usize).map_err(anyhow::Error::msg)?;
+    let out_path = args.get("step-out").unwrap().to_string();
+    eprintln!("[bench] fused vs two-pass sharded step, {steps} steps per cell and mode");
+    let rows = step_bench::run_suite(steps)?;
+    print!("{}", step_bench::render_table(&rows, steps).render());
+    step_bench::write_json(&rows, steps, &out_path)?;
+    eprintln!(
+        "[bench] xlarge-sim min speedup at D>=4: {:.2}x",
+        step_bench::xlarge_min_speedup(&rows)
+    );
     eprintln!("[bench] wrote {out_path}");
     Ok(())
 }

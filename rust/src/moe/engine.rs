@@ -31,6 +31,13 @@
 //! identical across pool sizes, shard counts, and serial/parallel paths,
 //! and identical to the naive reference (pinned by
 //! `rust/tests/routing_properties.rs` and `rust/tests/routing_parity.rs`).
+//!
+//! Role note: callers that need per-assignment combine weights route
+//! here; the counts-only hot path (native + sharded step statistics) now
+//! runs the fused single-pass kernel ([`super::fused`]), which never
+//! materializes the gate matrix — this engine's `route_counts_into` is
+//! kept as the two-pass baseline `m6t bench --step` measures against and
+//! as the bitwise oracle the fused parity tests compare to.
 
 use std::sync::Arc;
 

@@ -1,0 +1,431 @@
+//! Fused single-pass **counts-only** routing kernel: the hot path behind
+//! the native and sharded step.
+//!
+//! The two-pass path materializes a full `T x E` f32 gate matrix
+//! (`runtime::native::fill_gates`) behind one pool barrier and then
+//! re-reads the whole matrix in the routing engine's argmax phase behind
+//! another. For callers that only need **counts** — per-expert kept load,
+//! pre-capacity demand, and drop totals — that round trip through memory
+//! is pure overhead: capacity under a cumulative slot counter is
+//! order-independent, so
+//!
+//! ```text
+//! kept_e = min(demand_e, C)      dropped = sum_e (demand_e - kept_e)
+//! ```
+//!
+//! only the *demand histogram* matters, and demand histograms of disjoint
+//! token tiles merge exactly (u32 sums). This module therefore processes
+//! one [`TILE_TOKENS`]-token tile at a time: seed the tile's gate rows
+//! (bitwise identical to `fill_gates`'s per-shard stream), softmax per
+//! prototype group, run every argmax round, and emit one per-expert
+//! demand histogram — never touching a global gate matrix. A whole
+//! (worker, layer) cell, or any sub-range of its tiles, is an independent
+//! work unit, which is what lets the sharded runtime dispatch its full
+//! D x L grid in parallel (`runtime::native::route_grid_counts`).
+//!
+//! Determinism contract: tile `s` of a layer derives its RNG stream as
+//! `Rng::new(layer_seed).fold_in(s)` — the exact stream `fill_gates` uses
+//! for shard `s` — and the argmax predicate is the routing engine's, so
+//! the merged counts are bitwise identical to the two-pass path (and to
+//! the naive [`route`](super::router::route) reference) for every
+//! strategy, capacity, and prototype grouping. `rust/tests/fused_routing.rs`
+//! pins this; the two-pass engine stays around as the oracle and for
+//! combine-weight callers, which genuinely need per-assignment output.
+
+use std::cell::RefCell;
+
+use crate::config::Routing;
+use crate::util::rng::Rng;
+
+use super::router::softmax_rows_in_place;
+
+/// Tokens per fused tile. MUST match the two-pass path's gate-generation
+/// shard size (`runtime::native` uses this constant directly): the RNG
+/// stream of tile `s` is `Rng::new(layer_seed).fold_in(s)`, so any
+/// divergence in tile size would change which normals land in which gate
+/// cell and break bitwise parity with the materialized path.
+pub const TILE_TOKENS: usize = 512;
+
+/// Number of tiles covering `tokens` tokens.
+pub fn tiles_for(tokens: usize) -> usize {
+    // manual ceil-div: house style, keeps the MSRV below usize::div_ceil
+    (tokens + TILE_TOKENS - 1) / TILE_TOKENS
+}
+
+/// Reusable scratch for one fused work unit: the current tile's gate rows
+/// (the only gate storage the counts path ever materializes — at most
+/// `TILE_TOKENS x E` floats, cache-resident) plus the top-k chosen-stamp
+/// row. Grows monotonically to the largest shape routed.
+#[derive(Default)]
+pub struct FusedScratch {
+    gates: Vec<f32>,
+    /// E-wide stamp row: `chosen[x] == generation` means expert `x` was
+    /// already selected for the token currently being routed.
+    chosen: Vec<u32>,
+    generation: u32,
+}
+
+impl FusedScratch {
+    fn prepare(&mut self, rows: usize, experts: usize) {
+        if self.gates.len() < rows * experts {
+            self.gates.resize(rows * experts, 0.0);
+        }
+        if self.chosen.len() < experts {
+            self.chosen.clear();
+            self.chosen.resize(experts, 0);
+            self.generation = 0;
+        }
+    }
+}
+
+thread_local! {
+    static SCRATCH: RefCell<FusedScratch> = RefCell::new(FusedScratch::default());
+}
+
+/// Run `f` with this thread's fused scratch. Pool workers route many
+/// tiles each; keeping one scratch per thread makes the hot loop
+/// allocation-free after warmup without any cross-unit coordination
+/// (outputs never depend on scratch history — every cell a unit reads is
+/// a cell it wrote first).
+pub fn with_thread_scratch<R>(f: impl FnOnce(&mut FusedScratch) -> R) -> R {
+    SCRATCH.with(|s| f(&mut s.borrow_mut()))
+}
+
+/// Fill `gates` with tile `tile_idx`'s gate rows: seeded normal logits
+/// plus the persistent router bias, softmaxed in place per prototype
+/// group. Bitwise identical to what `fill_gates` writes for shard
+/// `tile_idx` — this is the single source of truth both paths call.
+pub fn gen_tile_gates(
+    gates: &mut [f32],
+    layer_seed: u64,
+    tile_idx: usize,
+    bias_row: &[f32],
+    rows: usize,
+    experts: usize,
+    prototypes: usize,
+) {
+    assert_eq!(gates.len(), rows * experts, "tile gate buffer shape mismatch");
+    let mut rng = Rng::new(layer_seed).fold_in(tile_idx as u64);
+    for (i, v) in gates.iter_mut().enumerate() {
+        *v = rng.normal() as f32 + bias_row[i % experts];
+    }
+    softmax_rows_in_place(gates, rows, experts, prototypes);
+}
+
+/// Accumulate per-expert pre-capacity demand for `rows` gate rows into
+/// `demand`. Selection semantics are exactly the routing engine's: top-k
+/// runs `min(k, E)` argmax rounds with earlier selections masked (first
+/// strict maximum wins), prototyping one argmax per expert group.
+pub fn accumulate_demand(
+    gates: &[f32],
+    rows: usize,
+    experts: usize,
+    routing: Routing,
+    chosen: &mut [u32],
+    generation: &mut u32,
+    demand: &mut [u32],
+) {
+    assert_eq!(gates.len(), rows * experts, "gate tile shape mismatch");
+    assert_eq!(demand.len(), experts, "demand histogram width mismatch");
+    match routing {
+        Routing::TopK(k) => {
+            let k = (k as usize).min(experts);
+            if k == 0 {
+                return;
+            }
+            if k == 1 {
+                // top-1 fast path: a single round masks nothing
+                for t in 0..rows {
+                    let row = &gates[t * experts..(t + 1) * experts];
+                    let mut best = 0usize;
+                    let mut best_g = f32::NEG_INFINITY;
+                    for (x, &g) in row.iter().enumerate() {
+                        if g > best_g {
+                            best = x;
+                            best_g = g;
+                        }
+                    }
+                    demand[best] += 1;
+                }
+                return;
+            }
+            debug_assert!(chosen.len() >= experts);
+            for t in 0..rows {
+                if *generation == u32::MAX {
+                    chosen.fill(0);
+                    *generation = 0;
+                }
+                *generation += 1;
+                let gen = *generation;
+                let row = &gates[t * experts..(t + 1) * experts];
+                for _round in 0..k {
+                    let mut best = usize::MAX;
+                    let mut best_g = f32::NEG_INFINITY;
+                    // gate test before the stamp load, exactly like the
+                    // engine: `&&` keeps the predicate identical
+                    for (x, &g) in row.iter().enumerate() {
+                        if g > best_g && chosen[x] != gen {
+                            best = x;
+                            best_g = g;
+                        }
+                    }
+                    debug_assert!(best != usize::MAX);
+                    chosen[best] = gen;
+                    demand[best] += 1;
+                }
+            }
+        }
+        Routing::Prototype(z) => {
+            let z = z as usize;
+            assert!(z > 0, "prototype count must be positive");
+            assert!(experts % z == 0, "experts {experts} not divisible by prototypes {z}");
+            let f = experts / z;
+            for t in 0..rows {
+                let row = &gates[t * experts..(t + 1) * experts];
+                for p in 0..z {
+                    let group = &row[p * f..(p + 1) * f];
+                    let mut best = 0usize;
+                    let mut best_g = f32::NEG_INFINITY;
+                    for (x, &g) in group.iter().enumerate() {
+                        if g > best_g {
+                            best = x;
+                            best_g = g;
+                        }
+                    }
+                    demand[p * f + best] += 1;
+                }
+            }
+        }
+    }
+}
+
+/// One fused work unit: generate tile `tile_idx`'s gates from
+/// `(layer_seed, tile_idx)` and add its selections to `demand` — the
+/// single pass that replaces materialize-then-route. `rows` is the tile's
+/// token count (the last tile of a layer may be short); `demand` is
+/// accumulated into, so the caller zeroes it once per histogram.
+#[allow(clippy::too_many_arguments)]
+pub fn tile_demand(
+    scratch: &mut FusedScratch,
+    layer_seed: u64,
+    tile_idx: usize,
+    rows: usize,
+    bias_row: &[f32],
+    experts: usize,
+    prototypes: usize,
+    routing: Routing,
+    demand: &mut [u32],
+) {
+    scratch.prepare(rows, experts);
+    let FusedScratch { gates, chosen, generation } = scratch;
+    let gates = &mut gates[..rows * experts];
+    gen_tile_gates(gates, layer_seed, tile_idx, bias_row, rows, experts, prototypes);
+    accumulate_demand(gates, rows, experts, routing, chosen, generation, demand);
+}
+
+/// Capacity-clamp a merged demand histogram into kept load. Counts-only
+/// routing is order-independent: slot positions come from a cumulative
+/// per-expert counter, so exactly the first `C` selections of each expert
+/// are kept no matter which tokens they belong to — `kept_e =
+/// min(demand_e, C)`. Returns the dropped-selection total.
+pub fn counts_from_demand(demand: &[u32], capacity: usize, load: &mut [u32]) -> u32 {
+    assert_eq!(demand.len(), load.len(), "demand/load width mismatch");
+    let cap = capacity.min(u32::MAX as usize) as u32;
+    let mut dropped = 0u32;
+    for (l, &d) in load.iter_mut().zip(demand) {
+        let kept = d.min(cap);
+        *l = kept;
+        dropped += d - kept;
+    }
+    dropped
+}
+
+/// Serial whole-layer fused counts: every tile of the layer accumulated
+/// into one histogram, then capacity-clamped. This is the reference shape
+/// of the fused path (the parallel grid in `runtime::native` merges the
+/// same per-tile histograms in the same tile order) and the entry point
+/// the parity tests drive. Returns the dropped-selection total.
+#[allow(clippy::too_many_arguments)]
+pub fn layer_counts(
+    scratch: &mut FusedScratch,
+    layer_seed: u64,
+    bias_row: &[f32],
+    tokens: usize,
+    experts: usize,
+    prototypes: usize,
+    routing: Routing,
+    capacity: usize,
+    demand: &mut [u32],
+    load: &mut [u32],
+) -> u32 {
+    demand.fill(0);
+    for s in 0..tiles_for(tokens) {
+        let t0 = s * TILE_TOKENS;
+        let rows = TILE_TOKENS.min(tokens - t0);
+        tile_demand(scratch, layer_seed, s, rows, bias_row, experts, prototypes, routing, demand);
+    }
+    counts_from_demand(demand, capacity, load)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::moe::engine::RoutingEngine;
+    use crate::moe::router::{route, RouteOutput, RouterSpec};
+
+    /// Materialize a full layer's gates tile by tile — the oracle input
+    /// for comparing fused counts against the two-pass implementations.
+    fn layer_gates(seed: u64, bias_row: &[f32], tokens: usize, e: usize, z: usize) -> Vec<f32> {
+        let mut gates = vec![0f32; tokens * e];
+        for s in 0..tiles_for(tokens) {
+            let t0 = s * TILE_TOKENS;
+            let rows = TILE_TOKENS.min(tokens - t0);
+            gen_tile_gates(&mut gates[t0 * e..(t0 + rows) * e], seed, s, bias_row, rows, e, z);
+        }
+        gates
+    }
+
+    fn fused_counts(
+        seed: u64,
+        bias_row: &[f32],
+        tokens: usize,
+        e: usize,
+        routing: Routing,
+        capacity: usize,
+    ) -> (Vec<u32>, Vec<u32>, u32) {
+        let mut scratch = FusedScratch::default();
+        let mut demand = vec![0u32; e];
+        let mut load = vec![0u32; e];
+        let z = routing.prototypes().max(1) as usize;
+        let dropped = layer_counts(
+            &mut scratch,
+            seed,
+            bias_row,
+            tokens,
+            e,
+            z,
+            routing,
+            capacity,
+            &mut demand,
+            &mut load,
+        );
+        (demand, load, dropped)
+    }
+
+    #[test]
+    fn fused_matches_reference_and_engine() {
+        let e = 16;
+        let mut engine = RoutingEngine::new();
+        let mut counts = RouteOutput::default();
+        for (routing, tokens, capacity, seed) in [
+            (Routing::TopK(1), 700, 45, 1u64),       // spans 2 tiles
+            (Routing::TopK(2), 64, 5, 2),            // tight capacity
+            (Routing::TopK(4), 1200, 9999, 3),       // ample, 3 tiles
+            (Routing::Prototype(2), 300, 20, 4),
+            (Routing::Prototype(4), 1025, 70, 5),    // short last tile
+            (Routing::TopK(16), 96, 4, 6),           // k == E
+        ] {
+            let z = routing.prototypes().max(1) as usize;
+            let bias: Vec<f32> = (0..e).map(|i| (i as f32 - 8.0) * 0.07).collect();
+            let gates = layer_gates(seed, &bias, tokens, e, z);
+            let spec = RouterSpec { routing, num_experts: e, capacity };
+            let expect = route(&gates, tokens, &spec);
+            let (demand, load, dropped) = fused_counts(seed, &bias, tokens, e, routing, capacity);
+            assert_eq!(demand, expect.demand, "{routing:?} demand");
+            assert_eq!(load, expect.load, "{routing:?} load");
+            assert_eq!(dropped, expect.dropped, "{routing:?} dropped");
+            engine.route_counts_into(&gates, tokens, &spec, &mut counts);
+            assert_eq!(load, counts.load, "{routing:?} engine load");
+            assert_eq!(demand, counts.demand, "{routing:?} engine demand");
+            assert_eq!(dropped, counts.dropped, "{routing:?} engine dropped");
+        }
+    }
+
+    #[test]
+    fn counts_from_demand_clamps_exactly() {
+        let demand = vec![0u32, 3, 7, 12];
+        let mut load = vec![0u32; 4];
+        let dropped = counts_from_demand(&demand, 7, &mut load);
+        assert_eq!(load, vec![0, 3, 7, 7]);
+        assert_eq!(dropped, 5);
+        let dropped = counts_from_demand(&demand, 0, &mut load);
+        assert_eq!(load, vec![0; 4]);
+        assert_eq!(dropped, 22);
+    }
+
+    #[test]
+    fn scratch_reuse_across_shapes_is_clean() {
+        // a big top-4 call followed by a small top-2 call over fewer
+        // experts: stale stamps must not leak into the second histogram
+        let bias_big: Vec<f32> = vec![0.0; 32];
+        let bias_small: Vec<f32> = vec![0.1; 4];
+        let mut scratch = FusedScratch::default();
+        let mut demand = vec![0u32; 32];
+        let mut load = vec![0u32; 32];
+        layer_counts(
+            &mut scratch,
+            9,
+            &bias_big,
+            900,
+            32,
+            1,
+            Routing::TopK(4),
+            40,
+            &mut demand,
+            &mut load,
+        );
+        let mut demand_s = vec![0u32; 4];
+        let mut load_s = vec![0u32; 4];
+        let dropped = layer_counts(
+            &mut scratch,
+            10,
+            &bias_small,
+            33,
+            4,
+            1,
+            Routing::TopK(2),
+            5,
+            &mut demand_s,
+            &mut load_s,
+        );
+        let gates = layer_gates(10, &bias_small, 33, 4, 1);
+        let spec = RouterSpec { routing: Routing::TopK(2), num_experts: 4, capacity: 5 };
+        let expect = route(&gates, 33, &spec);
+        assert_eq!(demand_s, expect.demand);
+        assert_eq!(load_s, expect.load);
+        assert_eq!(dropped, expect.dropped);
+    }
+
+    #[test]
+    fn generation_wrap_refills_cleanly() {
+        // force the wrap branch: a scratch whose last call ended on the
+        // final stamp value (generation == MAX, stale MAX stamps in the
+        // row) must re-zero the row before the next token routes
+        let e = 8;
+        let bias: Vec<f32> = vec![0.0; e];
+        let mut scratch = FusedScratch::default();
+        scratch.prepare(TILE_TOKENS, e);
+        scratch.generation = u32::MAX;
+        scratch.chosen.fill(u32::MAX); // stale stamps from the "previous" call
+        let mut demand = vec![0u32; e];
+        let mut load = vec![0u32; e];
+        let dropped = layer_counts(
+            &mut scratch,
+            21,
+            &bias,
+            16,
+            e,
+            1,
+            Routing::TopK(3),
+            4,
+            &mut demand,
+            &mut load,
+        );
+        let gates = layer_gates(21, &bias, 16, e, 1);
+        let spec = RouterSpec { routing: Routing::TopK(3), num_experts: e, capacity: 4 };
+        let expect = route(&gates, 16, &spec);
+        assert_eq!(demand, expect.demand);
+        assert_eq!(load, expect.load);
+        assert_eq!(dropped, expect.dropped);
+    }
+}

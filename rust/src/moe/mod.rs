@@ -9,13 +9,20 @@
 //!    exceeded, positions unique, drops accounted) over random inputs,
 //!  * the c_v load-balance analytics (Fig 1) have a host-side oracle.
 //!
-//! Two implementations share one semantics:
+//! Three implementations share one semantics:
 //!  * [`router::route`] — the naive reference: simple, obviously correct,
 //!    allocation-heavy; kept as the oracle for property tests and as the
 //!    baseline the routing microbench measures speedups against;
 //!  * [`engine::RoutingEngine`] — the allocation-free, pool-parallel
-//!    engine the native backend's hot path runs
-//!    (`m6t bench --routing` tracks the gap in `BENCH_routing.json`).
+//!    engine for callers that need per-assignment combine weights
+//!    (`m6t bench --routing` tracks the gap in `BENCH_routing.json`);
+//!  * [`fused`] — the single-pass **counts-only** kernel: per-tile gate
+//!    generation fused with the argmax rounds into a per-expert demand
+//!    histogram, never materializing the global gate matrix. Counts are
+//!    order-independent (`kept_e = min(demand_e, C)`), so tile histograms
+//!    merge exactly — the property the parallel (worker x layer) sharded
+//!    step is built on (`m6t bench --step` tracks the end-to-end gap in
+//!    `BENCH_step.json`).
 //!
 //! On top of the routers, [`dispatch`] accounts what D expert-parallel
 //! workers actually exchange: per-(worker, expert) token counts, per-shard
@@ -25,9 +32,11 @@
 
 pub mod dispatch;
 pub mod engine;
+pub mod fused;
 pub mod microbench;
 pub mod router;
 
 pub use dispatch::{DispatchPlan, DispatchSummary};
 pub use engine::{RouterScratch, RoutingEngine};
+pub use fused::FusedScratch;
 pub use router::{route, RouteOutput, RouterSpec};

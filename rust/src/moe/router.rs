@@ -9,9 +9,10 @@
 //! reference and the [`RoutingEngine`](super::engine::RoutingEngine).
 //!
 //! This file is the *reference* implementation: simple and allocation-
-//! heavy. The hot path runs the allocation-free engine instead; the
-//! property tests in `rust/tests/routing_properties.rs` hold the two
-//! bitwise identical.
+//! heavy. Combine-weight callers run the allocation-free engine instead,
+//! and counts-only callers the fused single-pass kernel
+//! ([`super::fused`]); `rust/tests/routing_properties.rs` and
+//! `rust/tests/fused_routing.rs` hold all three bitwise identical.
 
 use crate::config::Routing;
 use crate::util::stats::coefficient_of_variation;

@@ -97,16 +97,17 @@ pub trait Backend {
     fn state_from_host(&self, leaves: &[Vec<f32>], step: i64) -> Result<TrainState>;
 }
 
-/// Median wall-clock ms of `samples` bare `step()` calls after `warmup`
-/// steps, plus the stats of the last sampled step — the one shared
-/// measurement methodology behind `m6t bench` and the `step_latency`
-/// bench, so both report the same "measured host ms/step" series.
-pub fn measure_step_ms(
+/// Wall-clock ms of `samples` bare `step()` calls after `warmup` steps
+/// (sorted ascending), plus the stats of the last sampled step — the one
+/// shared measurement methodology behind `m6t bench`, the `step_latency`
+/// bench, and the step-throughput suite (`runtime::step_bench`), which
+/// derives its p50/p95 from the same series shape.
+pub fn measure_step_series(
     backend: &dyn Backend,
     seed: u64,
     warmup: usize,
     samples: usize,
-) -> Result<(f64, StepStats)> {
+) -> Result<(Vec<f64>, StepStats)> {
     let cfg = backend.info().config.clone();
     let mut state = backend.init_state(seed as i32)?;
     let mut batcher = Batcher::for_config(&cfg, Split::Train, seed);
@@ -126,8 +127,19 @@ pub fn measure_step_ms(
         last_stats = Some(stats);
     }
     ms.sort_by(f64::total_cmp);
-    let median = ms[ms.len() / 2];
-    Ok((median, last_stats.expect("at least one sample")))
+    Ok((ms, last_stats.expect("at least one sample")))
+}
+
+/// Median wall-clock ms of `samples` bare `step()` calls after `warmup`
+/// steps — [`measure_step_series`] reduced to its p50.
+pub fn measure_step_ms(
+    backend: &dyn Backend,
+    seed: u64,
+    warmup: usize,
+    samples: usize,
+) -> Result<(f64, StepStats)> {
+    let (ms, stats) = measure_step_series(backend, seed, warmup, samples)?;
+    Ok((ms[ms.len() / 2], stats))
 }
 
 /// A source of runnable variants: resolves names to [`VariantInfo`] and

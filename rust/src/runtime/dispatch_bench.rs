@@ -113,8 +113,12 @@ pub fn run_suite(steps: usize) -> Result<Vec<DispatchBenchRow>> {
     for (cfg, workers) in cases() {
         let run = ShardedRun::new(&cfg, workers)?;
         let mut log = RunLog::new(format!("{}-d{workers}", cfg.name));
-        run.train(steps as i64, 42, &mut log, false)?;
-        let mut ms: Vec<f64> = log.records.iter().map(|r| r.ms_per_step).collect();
+        // one extra leading step, excluded from the median: it carries the
+        // cold scratch/pool allocations, and the other two measurement
+        // harnesses (measure_step_series, step_bench) discard a warmup
+        // step too — the three suites must report comparable numbers
+        run.train(steps as i64 + 1, 42, &mut log, false)?;
+        let mut ms: Vec<f64> = log.records.iter().skip(1).map(|r| r.ms_per_step).collect();
         ms.sort_by(f64::total_cmp);
         let host_ms = ms[ms.len() / 2];
         let last = log.last().expect("at least one recorded step");

@@ -16,10 +16,14 @@ pub mod engine;
 pub mod manifest;
 pub mod native;
 pub mod shard;
+pub mod step_bench;
 
-pub use backend::{measure_step_ms, Backend, BackendProvider, StateRepr, StepStats, TrainState};
+pub use backend::{
+    measure_step_ms, measure_step_series, Backend, BackendProvider, StateRepr, StepStats,
+    TrainState,
+};
 #[cfg(feature = "pjrt")]
 pub use engine::{Engine, PjrtProvider, VariantRuntime};
 pub use manifest::{Manifest, TensorSpec, VariantInfo};
 pub use native::{NativeBackend, NativeProvider};
-pub use shard::ShardedRun;
+pub use shard::{ShardedRun, StepMode};

@@ -2,13 +2,15 @@
 //!
 //! Instead of executing lowered HLO, the native backend composes the
 //! repo's own analytic machinery into a deterministic training simulacrum:
-//!  * per-layer routing statistics come from the host-side routing engine
-//!    ([`moe::RoutingEngine`]) over seeded gate logits plus a persistent
-//!    per-expert router bias (the state that makes balance dynamics
-//!    visible); gate generation and the routing argmax are decomposed
-//!    into layer x token-shard work units on the persistent
-//!    [`WorkerPool`] (`util::pool`) instead of the old one-unpooled-
-//!    thread-per-layer spawn;
+//!  * per-layer routing statistics come from the fused counts-only
+//!    routing kernel ([`moe::fused`]) over seeded gate logits plus a
+//!    persistent per-expert router bias (the state that makes balance
+//!    dynamics visible); the step dispatches layer x token-tile work
+//!    units onto the persistent [`WorkerPool`] (`util::pool`) via
+//!    [`route_grid_counts`], each unit generating and routing one
+//!    cache-resident gate tile — the global gate matrix is never
+//!    materialized (the two-pass `fill_gates` + engine path survives as
+//!    the sharded runtime's bench baseline and bitwise oracle);
 //!  * the loss trajectory follows a [`scaling::PowerLaw`] whose floor
 //!    encodes the paper's qualitative findings (larger models lower, k > 1
 //!    helps with diminishing returns, prototyping helps more at scale,
@@ -31,8 +33,7 @@ use super::manifest::{DType, TensorSpec, VariantInfo};
 use crate::cluster::{simulate_step, table2_hardware};
 use crate::config::{paper, CapacityMode, ModelConfig, Routing};
 use crate::data::Batch;
-use crate::moe::router::softmax_rows_in_place;
-use crate::moe::{RouteOutput, RouterSpec, RoutingEngine};
+use crate::moe::fused;
 use crate::scaling::PowerLaw;
 use crate::util::pool::{self, SendPtr, WorkerPool};
 use crate::util::rng::Rng;
@@ -139,10 +140,12 @@ pub(crate) fn law_from_leaf(leaf: &[f32]) -> Result<PowerLaw> {
     Ok(PowerLaw { l_inf: leaf[0] as f64, a: leaf[1] as f64, b: leaf[2] as f64 })
 }
 
-/// Tokens per gate-generation work unit. Fixed (not derived from pool
-/// size) so the per-shard RNG streams — and therefore every routed gate —
-/// are identical no matter how many workers run them.
-const GEN_SHARD_TOKENS: usize = 512;
+/// Tokens per gate-generation work unit — one fused tile. Fixed (not
+/// derived from pool size) so the per-shard RNG streams — and therefore
+/// every routed gate — are identical no matter how many workers run them,
+/// and shared with [`moe::fused`] so the materialized and fused paths
+/// consume the same streams.
+const GEN_SHARD_TOKENS: usize = fused::TILE_TOKENS;
 
 /// Below this many gate cells the pool handoff costs more than the
 /// RNG + softmax work it spreads; generate serially instead. The serial
@@ -153,8 +156,11 @@ const MIN_GEN_PARALLEL_WORK: usize = 4096;
 /// router bias, softmaxed in place per prototype group. Token shards run
 /// as independent work units on the pool; each shard derives its own RNG
 /// stream from (layer seed, shard index), so the result is a pure
-/// function of the seed regardless of scheduling.
-pub(crate) fn fill_gates(
+/// function of the seed regardless of scheduling. Each shard is exactly
+/// one [`fused::gen_tile_gates`] tile — the single source of truth that
+/// keeps this two-pass materializer bitwise in lockstep with the fused
+/// counts kernel (pinned by `rust/tests/fused_routing.rs`).
+pub fn fill_gates(
     pool_ref: &WorkerPool,
     gates: &mut [f32],
     layer_seed: u64,
@@ -163,7 +169,7 @@ pub(crate) fn fill_gates(
     experts: usize,
     prototypes: usize,
 ) {
-    let shards = (tokens + GEN_SHARD_TOKENS - 1) / GEN_SHARD_TOKENS;
+    let shards = fused::tiles_for(tokens);
     let base = SendPtr::new(gates.as_mut_ptr());
     let body = |s: usize| {
         let t0 = s * GEN_SHARD_TOKENS;
@@ -173,22 +179,129 @@ pub(crate) fn fill_gates(
         let buf = unsafe {
             std::slice::from_raw_parts_mut(base.get().add(t0 * experts), (t1 - t0) * experts)
         };
-        let mut rng = Rng::new(layer_seed).fold_in(s as u64);
-        for (i, v) in buf.iter_mut().enumerate() {
-            *v = rng.normal() as f32 + bias_row[i % experts];
-        }
-        softmax_rows_in_place(buf, t1 - t0, experts, prototypes);
+        fused::gen_tile_gates(buf, layer_seed, s, bias_row, t1 - t0, experts, prototypes);
     };
     pool::run_shards(Some(pool_ref), shards, tokens * experts, MIN_GEN_PARALLEL_WORK, &body);
 }
 
+/// Route a full (worker x layer) grid through the fused counts kernel:
+/// every `(worker, layer, tile)` triple is an independent work unit on
+/// the pool, emitting its per-expert demand histogram into a disjoint
+/// slice of `partial`; the histograms are then merged per (worker, layer)
+/// in fixed tile order and capacity-clamped into `wl_load` / `wl_demand`
+/// / `wl_dropped` (row-major `[worker][layer][expert]` and
+/// `[worker][layer]`).
+///
+/// Determinism: the unit decomposition depends only on the problem shape,
+/// each unit is a pure function of `(worker_seeds[w], layer, tile)`, and
+/// the merge is exact u32 addition — so the outputs are bitwise identical
+/// across pool sizes and to the serial two-pass path. `worker_seeds`
+/// carries one step seed per worker (the native backend passes exactly
+/// one); layer seeds are derived with [`LAYER_SEED_MIX`] exactly as the
+/// two-pass path does.
+#[allow(clippy::too_many_arguments)]
+pub(crate) fn route_grid_counts(
+    pool_ref: &WorkerPool,
+    worker_seeds: &[u64],
+    bias: &[f32],
+    tokens: usize,
+    experts: usize,
+    layers: usize,
+    prototypes: usize,
+    routing: Routing,
+    capacity: usize,
+    partial: &mut Vec<u32>,
+    wl_demand: &mut [u32],
+    wl_load: &mut [u32],
+    wl_dropped: &mut [u32],
+) {
+    let d = worker_seeds.len();
+    assert_eq!(bias.len(), layers * experts, "bias shape mismatch");
+    assert_eq!(wl_demand.len(), d * layers * experts, "wl_demand shape mismatch");
+    assert_eq!(wl_load.len(), d * layers * experts, "wl_load shape mismatch");
+    assert_eq!(wl_dropped.len(), d * layers, "wl_dropped shape mismatch");
+    let tiles = fused::tiles_for(tokens);
+    if tiles == 0 {
+        // zero tokens route nothing — keep the merge below simple
+        wl_demand.fill(0);
+        wl_load.fill(0);
+        wl_dropped.fill(0);
+        return;
+    }
+    let units = d * layers * tiles;
+    if partial.len() < units * experts {
+        partial.resize(units * experts, 0);
+    }
+    {
+        let base = SendPtr::new(partial.as_mut_ptr());
+        let body = |u: usize| {
+            let w = u / (layers * tiles);
+            let rem = u % (layers * tiles);
+            let l = rem / tiles;
+            let s = rem % tiles;
+            let layer_seed = worker_seeds[w] ^ (l as u64 + 1).wrapping_mul(LAYER_SEED_MIX);
+            let bias_row = &bias[l * experts..(l + 1) * experts];
+            let rows = fused::TILE_TOKENS.min(tokens - s * fused::TILE_TOKENS);
+            // SAFETY: unit `u` owns the disjoint range
+            // [u * experts, (u + 1) * experts) of `partial`, and
+            // parallel_for joins every unit before the merge reads it.
+            let demand =
+                unsafe { std::slice::from_raw_parts_mut(base.get().add(u * experts), experts) };
+            demand.fill(0);
+            fused::with_thread_scratch(|sc| {
+                fused::tile_demand(
+                    sc, layer_seed, s, rows, bias_row, experts, prototypes, routing, demand,
+                );
+            });
+        };
+        pool::run_shards(
+            Some(pool_ref),
+            units,
+            d * layers * tokens * experts,
+            MIN_GEN_PARALLEL_WORK,
+            &body,
+        );
+    }
+    // exact merge: per (worker, layer), sum the tile histograms in tile
+    // order, then capacity-clamp — kept_e = min(demand_e, C), so the
+    // merged counts equal what routing the whole layer at once produces.
+    for w in 0..d {
+        for l in 0..layers {
+            let at = (w * layers + l) * experts;
+            let unit0 = (w * layers + l) * tiles;
+            {
+                let dst = &mut wl_demand[at..at + experts];
+                dst.copy_from_slice(&partial[unit0 * experts..(unit0 + 1) * experts]);
+                for s in 1..tiles {
+                    let src = &partial[(unit0 + s) * experts..(unit0 + s + 1) * experts];
+                    for (acc, &x) in dst.iter_mut().zip(src) {
+                        *acc += x;
+                    }
+                }
+            }
+            wl_dropped[w * layers + l] = fused::counts_from_demand(
+                &wl_demand[at..at + experts],
+                capacity,
+                &mut wl_load[at..at + experts],
+            );
+        }
+    }
+}
+
 /// Per-step reusable buffers. `step` takes `&self`, so these live behind
-/// a lock: the routing engine's scratch and the gate matrix must survive
-/// across steps for the hot path to be allocation-free after warmup.
+/// a lock: the fused grid's partial histograms and the merged per-layer
+/// counts must survive across steps for the hot path to be
+/// allocation-free after warmup (per-tile gate scratch is thread-local
+/// inside [`moe::fused`]).
+#[derive(Default)]
 struct StepScratch {
-    engine: RoutingEngine,
-    gates: Vec<f32>,
-    route_out: RouteOutput,
+    /// per-(layer, tile) demand histograms, `units x E`
+    partial: Vec<u32>,
+    /// merged per-layer demand / kept load, `layers x E`
+    wl_demand: Vec<u32>,
+    wl_load: Vec<u32>,
+    /// per-layer dropped-selection counts
+    wl_dropped: Vec<u32>,
 }
 
 /// The native execution engine for one variant.
@@ -208,11 +321,7 @@ impl NativeBackend {
             info: variant_info(cfg),
             sim_step_ms,
             pool: None,
-            scratch: Mutex::new(StepScratch {
-                engine: RoutingEngine::new(),
-                gates: Vec::new(),
-                route_out: RouteOutput::default(),
-            }),
+            scratch: Mutex::new(StepScratch::default()),
         }
     }
 
@@ -220,8 +329,6 @@ impl NativeBackend {
     /// assert bitwise-identical [`StepStats`] across pool sizes.
     pub fn with_pool(cfg: &ModelConfig, pool: Arc<WorkerPool>) -> Self {
         let mut backend = Self::new(cfg);
-        backend.scratch.get_mut().unwrap().engine =
-            RoutingEngine::with_pool(Arc::clone(&pool));
         backend.pool = Some(pool);
         backend
     }
@@ -286,48 +393,56 @@ impl Backend for NativeBackend {
             ^ (step as u64).wrapping_mul(STEP_SEED_MIX)
             ^ batch_hash(batch);
 
-        // route every layer: each layer is its own routing problem over
-        // its own gate logits and bias row. The work decomposes into
-        // layer x token-shard units on the persistent pool — gate
-        // generation shards by (layer seed, shard) RNG streams, and the
-        // routing engine shards its argmax phase the same way — so a
-        // 12-layer config no longer spawns 12 unpooled threads per step,
-        // and the result is bitwise identical across pool sizes.
+        // route every layer through the fused counts kernel: each
+        // (layer, token-tile) pair is an independent work unit on the
+        // persistent pool, generating and routing one cache-resident gate
+        // tile — the counts path never materializes a T x E gate matrix.
+        // Tile histograms merge exactly, so the result is bitwise
+        // identical across pool sizes and to the two-pass oracle.
         let mut scratch_guard = self.scratch.lock().expect("step scratch poisoned");
-        let StepScratch { engine, gates, route_out } = &mut *scratch_guard;
+        let StepScratch { partial, wl_demand, wl_load, wl_dropped } = &mut *scratch_guard;
         let pool_ref = self.pool();
         let bias = &leaves[1];
-        let layer_seed = |l: usize| base_seed ^ (l as u64 + 1).wrapping_mul(LAYER_SEED_MIX);
-        let spec = RouterSpec { routing: cfg.routing, num_experts: experts, capacity };
-        // every cell is overwritten by fill_gates, so only the length matters
-        gates.resize(tokens * experts, 0.0);
+        let n = layers * experts;
+        if wl_demand.len() < n {
+            wl_demand.resize(n, 0);
+            wl_load.resize(n, 0);
+        }
+        if wl_dropped.len() < layers {
+            wl_dropped.resize(layers, 0);
+        }
+        route_grid_counts(
+            pool_ref,
+            &[base_seed],
+            bias,
+            tokens,
+            experts,
+            layers,
+            prototypes,
+            cfg.routing,
+            capacity,
+            partial,
+            &mut wl_demand[..n],
+            &mut wl_load[..n],
+            &mut wl_dropped[..layers],
+        );
 
+        // aggregate in the exact operation order of the old per-layer
+        // loop, so the emitted StepStats stay bitwise stable
         let mut load = vec![0f32; layers * experts];
         let mut dropped = vec![0f32; layers];
         let mut total_dropped = 0u64;
         let mut cv_sum = 0.0;
         let mut cv_row: Vec<f64> = Vec::with_capacity(experts);
         for l in 0..layers {
-            let bias_row = &bias[l * experts..(l + 1) * experts];
-            fill_gates(
-                pool_ref,
-                gates.as_mut_slice(),
-                layer_seed(l),
-                bias_row,
-                tokens,
-                experts,
-                prototypes,
-            );
-            // counts-only: the stats below read just load/dropped, so the
-            // engine skips combine-gate emission entirely
-            engine.route_counts_into(gates.as_slice(), tokens, &spec, route_out);
-            for (i, &v) in route_out.load.iter().enumerate() {
-                load[l * experts + i] = v as f32;
+            let row = &wl_load[l * experts..(l + 1) * experts];
+            for (dst, &v) in load[l * experts..(l + 1) * experts].iter_mut().zip(row) {
+                *dst = v as f32;
             }
-            dropped[l] = route_out.dropped as f32;
-            total_dropped += route_out.dropped as u64;
+            dropped[l] = wl_dropped[l] as f32;
+            total_dropped += wl_dropped[l] as u64;
             cv_row.clear();
-            cv_row.extend(route_out.load.iter().map(|&x| x as f64));
+            cv_row.extend(row.iter().map(|&x| x as f64));
             cv_sum += coefficient_of_variation(&cv_row);
         }
         let mean_cv = cv_sum / layers.max(1) as f64;

@@ -4,14 +4,22 @@
 //! E/D-expert shards over an all-to-all whose traffic is accounted
 //! exactly ([`moe::dispatch`](crate::moe::dispatch)).
 //!
-//! [`ShardedRun`] executes D `NativeBackend`-style worker steps per global
-//! step: per (worker, layer), gate generation and the routing argmax run
-//! as token-shard work units on the persistent [`WorkerPool`] — the same
-//! decomposition, and therefore the same bitwise-determinism contract
-//! across pool sizes, as `NativeBackend::step`
-//! (`rust/tests/pool_determinism.rs`). Worker 0's RNG streams are
-//! *identical* to the single-worker backend's, and every global aggregate
-//! is computed in the same operation order, so at D = 1 the emitted
+//! [`ShardedRun`] executes D `NativeBackend`-style worker steps per
+//! global step. The default [`StepMode::Fused`] path dispatches the
+//! **entire D x L (worker, layer) grid** — further split into token
+//! tiles — as independent work units on the persistent [`WorkerPool`]:
+//! each unit owns its own RNG stream (derived from its `(worker, layer,
+//! tile)` coordinates), generates and routes one cache-resident gate
+//! tile through the fused counts kernel ([`moe::fused`]), and writes a
+//! disjoint demand histogram; histograms merge exactly, so the step is
+//! bitwise identical across pool sizes (`rust/tests/pool_determinism.rs`,
+//! `rust/tests/fused_routing.rs`). The pre-fusion serial two-pass path
+//! ([`StepMode::TwoPass`]: materialize each (worker, layer) gate matrix,
+//! then route it with the engine) is kept callable as the throughput
+//! baseline `m6t bench --step` measures against and as the bitwise
+//! oracle the tests compare to. Worker 0's RNG streams are *identical*
+//! to the single-worker backend's, and every global aggregate is
+//! computed in the same operation order, so at D = 1 the emitted
 //! [`StepStats`] reproduce `NativeBackend::step` bit for bit — the
 //! contract `rust/tests/dispatch_properties.rs` pins.
 //!
@@ -28,8 +36,8 @@ use anyhow::{bail, Result};
 use super::backend::{Backend, StateRepr, StepStats, TrainState};
 use super::manifest::VariantInfo;
 use super::native::{
-    batch_hash, fill_gates, hash_f32s, law_from_leaf, NativeBackend, LAYER_SEED_MIX,
-    NOISE_SEED_MIX, STEP_SEED_MIX,
+    batch_hash, fill_gates, hash_f32s, law_from_leaf, route_grid_counts, NativeBackend,
+    LAYER_SEED_MIX, NOISE_SEED_MIX, STEP_SEED_MIX,
 };
 use crate::cluster::{simulate_step_observed, table2_hardware, HardwareModel, ObservedTraffic};
 use crate::config::ModelConfig;
@@ -44,12 +52,48 @@ use crate::util::stats::coefficient_of_variation;
 /// its streams are bitwise identical to `NativeBackend::step`'s.
 const WORKER_SEED_MIX: u64 = 0xA24B_AED4_963E_E407;
 
+/// Which implementation routes the (worker x layer) grid of one step.
+/// Both modes are bitwise identical in everything they emit — StepStats,
+/// dispatch summary, and per-layer plans (`rust/tests/fused_routing.rs`).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum StepMode {
+    /// Fused single-pass counts kernel over the full parallel
+    /// D x L x tile work-unit grid — the default hot path.
+    Fused,
+    /// The pre-fusion path: a serial (worker, layer) double loop, each
+    /// cell materializing its gate matrix (`fill_gates`) and re-reading
+    /// it through the routing engine. Kept as the throughput baseline
+    /// `m6t bench --step` measures the fused path against, and as the
+    /// bitwise oracle for the determinism tests.
+    TwoPass,
+}
+
 /// Per-run reusable routing buffers (see `StepScratch` in `native`).
+/// Everything the sharded hot loop touches per step that does *not*
+/// escape into [`StepStats`] lives here, so `train` steps are
+/// allocation-free after warmup. (`StepStats::load`/`dropped` and the
+/// returned plan list are the step's owned output and necessarily fresh;
+/// the plans' big count matrices are recycled through `plan_pool`.)
 #[derive(Default)]
 struct ShardScratch {
+    // two-pass baseline
     engine: RoutingEngine,
     gates: Vec<f32>,
     route_out: RouteOutput,
+    // fused grid
+    partial: Vec<u32>,
+    // shared per-step state
+    worker_seeds: Vec<u64>,
+    /// D x L x E kept counts, row-major
+    wl_load: Vec<u32>,
+    /// D x L x E pre-capacity demand, row-major
+    wl_demand: Vec<u32>,
+    /// D x L dropped-selection counts
+    wl_dropped: Vec<u32>,
+    cv_row: Vec<f64>,
+    /// recycled `DispatchPlan`s: [`ShardedRun::step`] returns each step's
+    /// plans here so the next step reuses their send/demand vectors
+    plan_pool: Vec<DispatchPlan>,
 }
 
 /// The expert-parallel execution driver: D workers over one shared
@@ -101,11 +145,7 @@ impl ShardedRun {
             workers,
             pool,
             hw: table2_hardware(),
-            scratch: Mutex::new(ShardScratch {
-                engine,
-                gates: Vec::new(),
-                route_out: RouteOutput::default(),
-            }),
+            scratch: Mutex::new(ShardScratch { engine, ..ShardScratch::default() }),
         })
     }
 
@@ -132,16 +172,33 @@ impl ShardedRun {
 
     /// One global step over `batches` (one local batch per worker).
     pub fn step(&self, state: TrainState, batches: &[Batch]) -> Result<(TrainState, StepStats)> {
-        let (state, stats, _plans) = self.step_detailed(state, batches)?;
+        let (state, stats, plans) = self.step_detailed(state, batches)?;
+        // the train loop never reads the plans: recycle their count
+        // matrices so the hot loop stays allocation-free after warmup
+        let mut guard = self.scratch.lock().expect("shard scratch poisoned");
+        guard.plan_pool.extend(plans);
         Ok((state, stats))
     }
 
     /// [`ShardedRun::step`] plus the per-layer [`DispatchPlan`]s — the
-    /// form the invariant tests and the dispatch bench consume.
+    /// form the invariant tests and the dispatch bench consume. Routes
+    /// through the fused parallel grid ([`StepMode::Fused`]).
     pub fn step_detailed(
         &self,
         state: TrainState,
         batches: &[Batch],
+    ) -> Result<(TrainState, StepStats, Vec<DispatchPlan>)> {
+        self.step_detailed_mode(state, batches, StepMode::Fused)
+    }
+
+    /// [`ShardedRun::step_detailed`] with an explicit [`StepMode`] — how
+    /// the step bench times fused against the two-pass baseline in one
+    /// run, and how the tests pin the two modes bitwise identical.
+    pub fn step_detailed_mode(
+        &self,
+        state: TrainState,
+        batches: &[Batch],
+        mode: StepMode,
     ) -> Result<(TrainState, StepStats, Vec<DispatchPlan>)> {
         let info = self.native.info();
         let cfg = &info.config;
@@ -163,74 +220,121 @@ impl ShardedRun {
         let prototypes = cfg.routing.prototypes().max(1) as usize;
 
         let mut guard = self.scratch.lock().expect("shard scratch poisoned");
-        let ShardScratch { engine, gates, route_out } = &mut *guard;
+        let scratch = &mut *guard;
         let pool_ref = self.pool.as_deref().unwrap_or_else(pool::global);
         let bias = &leaves[1];
-        let spec = RouterSpec { routing: cfg.routing, num_experts: experts, capacity };
-        gates.resize(tokens * experts, 0.0);
-
-        // every worker routes its own local batch: per-(worker, layer)
-        // kept and demanded counts, accumulated serially in worker order
-        // while each phase's token shards run on the pool — the exact
-        // per-phase decomposition of NativeBackend::step, repeated D
-        // times with per-worker RNG streams.
-        let mut wl_load = vec![0u32; d * layers * experts];
-        let mut wl_demand = vec![0u32; d * layers * experts];
-        let mut wl_dropped = vec![0u32; d * layers];
-        let mut total_dropped = 0u64;
-        let mut noise_sum = 0.0f64;
         let state_hash = hash_f32s(&leaves[0]);
-        for w in 0..d {
-            let base_seed = state_hash
+        scratch.worker_seeds.clear();
+        scratch.worker_seeds.extend((0..d).map(|w| {
+            state_hash
                 ^ (step as u64).wrapping_mul(STEP_SEED_MIX)
                 ^ batch_hash(&batches[w])
-                ^ (w as u64).wrapping_mul(WORKER_SEED_MIX);
-            for l in 0..layers {
-                let layer_seed = base_seed ^ (l as u64 + 1).wrapping_mul(LAYER_SEED_MIX);
-                let bias_row = &bias[l * experts..(l + 1) * experts];
-                fill_gates(
+                ^ (w as u64).wrapping_mul(WORKER_SEED_MIX)
+        }));
+        let n = d * layers * experts;
+        if scratch.wl_load.len() < n {
+            scratch.wl_load.resize(n, 0);
+            scratch.wl_demand.resize(n, 0);
+        }
+        if scratch.wl_dropped.len() < d * layers {
+            scratch.wl_dropped.resize(d * layers, 0);
+        }
+
+        // every worker routes its own local batch: per-(worker, layer)
+        // kept and demanded counts. The fused mode dispatches the whole
+        // D x L x tile grid as independent pool work units (each a pure
+        // function of its coordinates, merged exactly); the two-pass
+        // baseline walks the grid serially, materializing each cell's
+        // gate matrix. Same counts bitwise either way.
+        match mode {
+            StepMode::Fused => {
+                let ShardScratch { partial, worker_seeds, wl_load, wl_demand, wl_dropped, .. } =
+                    &mut *scratch;
+                route_grid_counts(
                     pool_ref,
-                    gates.as_mut_slice(),
-                    layer_seed,
-                    bias_row,
+                    worker_seeds,
+                    bias,
                     tokens,
                     experts,
+                    layers,
                     prototypes,
+                    cfg.routing,
+                    capacity,
+                    partial,
+                    &mut wl_demand[..n],
+                    &mut wl_load[..n],
+                    &mut wl_dropped[..d * layers],
                 );
-                engine.route_counts_into(gates.as_slice(), tokens, &spec, route_out);
-                let at = (w * layers + l) * experts;
-                wl_load[at..at + experts].copy_from_slice(&route_out.load);
-                wl_demand[at..at + experts].copy_from_slice(&route_out.demand);
-                wl_dropped[w * layers + l] = route_out.dropped;
-                total_dropped += route_out.dropped as u64;
             }
-            let mut noise = Rng::new(base_seed ^ NOISE_SEED_MIX);
+            StepMode::TwoPass => {
+                let ShardScratch {
+                    engine,
+                    gates,
+                    route_out,
+                    worker_seeds,
+                    wl_load,
+                    wl_demand,
+                    wl_dropped,
+                    ..
+                } = &mut *scratch;
+                let spec = RouterSpec { routing: cfg.routing, num_experts: experts, capacity };
+                // resize-once guard: fill_gates overwrites every cell, so
+                // re-zeroing an already-large buffer would be pure waste
+                if gates.len() < tokens * experts {
+                    gates.resize(tokens * experts, 0.0);
+                }
+                let gates = &mut gates[..tokens * experts];
+                for w in 0..d {
+                    for l in 0..layers {
+                        let layer_seed =
+                            worker_seeds[w] ^ (l as u64 + 1).wrapping_mul(LAYER_SEED_MIX);
+                        let bias_row = &bias[l * experts..(l + 1) * experts];
+                        fill_gates(
+                            pool_ref, gates, layer_seed, bias_row, tokens, experts, prototypes,
+                        );
+                        engine.route_counts_into(gates, tokens, &spec, route_out);
+                        let at = (w * layers + l) * experts;
+                        wl_load[at..at + experts].copy_from_slice(&route_out.load);
+                        wl_demand[at..at + experts].copy_from_slice(&route_out.demand);
+                        wl_dropped[w * layers + l] = route_out.dropped;
+                    }
+                }
+            }
+        }
+
+        // drop totals + per-worker loss noise, in worker order — the
+        // exact accumulation order (and RNG streams) of both modes
+        let mut total_dropped = 0u64;
+        let mut noise_sum = 0.0f64;
+        for w in 0..d {
+            for l in 0..layers {
+                total_dropped += scratch.wl_dropped[w * layers + l] as u64;
+            }
+            let mut noise = Rng::new(scratch.worker_seeds[w] ^ NOISE_SEED_MIX);
             noise_sum += noise.normal();
         }
-        drop(guard);
 
         // global aggregates, in NativeBackend::step's operation order so
         // D = 1 reproduces its StepStats bitwise
         let mut load = vec![0f32; layers * experts];
         let mut dropped = vec![0f32; layers];
         let mut cv_sum = 0.0;
-        let mut cv_row: Vec<f64> = Vec::with_capacity(experts);
         for l in 0..layers {
-            cv_row.clear();
+            scratch.cv_row.clear();
             for e in 0..experts {
                 let mut sum = 0u32;
                 for w in 0..d {
-                    sum += wl_load[(w * layers + l) * experts + e];
+                    sum += scratch.wl_load[(w * layers + l) * experts + e];
                 }
                 load[l * experts + e] = sum as f32;
-                cv_row.push(sum as f64);
+                scratch.cv_row.push(sum as f64);
             }
             let mut drop_sum = 0u32;
             for w in 0..d {
-                drop_sum += wl_dropped[w * layers + l];
+                drop_sum += scratch.wl_dropped[w * layers + l];
             }
             dropped[l] = drop_sum as f32;
-            cv_sum += coefficient_of_variation(&cv_row);
+            cv_sum += coefficient_of_variation(&scratch.cv_row);
         }
         let mean_cv = cv_sum / layers.max(1) as f64;
         let k_eff = cfg.routing.k().min(experts as u32).max(1) as usize;
@@ -251,20 +355,25 @@ impl ShardedRun {
         }
 
         // one DispatchPlan per layer, then the step-level summary with
-        // the observed-traffic cluster prediction
+        // the observed-traffic cluster prediction. Count matrices come
+        // out of the recycled pool when `step()` has returned earlier
+        // plans, so steady-state training allocates nothing here.
         let mut plans = Vec::with_capacity(layers);
         for l in 0..layers {
-            let mut send = vec![0u32; d * experts];
-            let mut demand = vec![0u32; d * experts];
+            let (mut send, mut demand) = match scratch.plan_pool.pop() {
+                Some(p) => (p.send, p.demand),
+                None => (Vec::new(), Vec::new()),
+            };
+            send.clear();
+            demand.clear();
             for w in 0..d {
                 let at = (w * layers + l) * experts;
-                send[w * experts..(w + 1) * experts]
-                    .copy_from_slice(&wl_load[at..at + experts]);
-                demand[w * experts..(w + 1) * experts]
-                    .copy_from_slice(&wl_demand[at..at + experts]);
+                send.extend_from_slice(&scratch.wl_load[at..at + experts]);
+                demand.extend_from_slice(&scratch.wl_demand[at..at + experts]);
             }
             plans.push(DispatchPlan::new(d, experts, capacity, cfg.hidden, send, demand));
         }
+        drop(guard);
         let mut summary = DispatchSummary::from_plans(&plans);
         let observed = ObservedTraffic {
             a2a_bytes_per_layer: summary.a2a_bytes_per_layer,
@@ -317,7 +426,21 @@ impl ShardedRun {
         let cfg = info.config.clone();
         let d = self.workers;
         let mut batcher = Batcher::for_config(&cfg, Split::Train, seed);
-        batcher.seek(state.step as u64 * (cfg.batch * d) as u64);
+        // batch-cursor math stays in checked u64: the old
+        // `step * (batch * d)` usize product could overflow when resuming
+        // a long run at high D (and silently wrap the data stream)
+        let consumed = match (cfg.batch as u64)
+            .checked_mul(d as u64)
+            .and_then(|per_step| (state.step.max(0) as u64).checked_mul(per_step))
+        {
+            Some(c) => c,
+            None => bail!(
+                "batch cursor overflow: cannot resume {} at step {} with D={d}",
+                info.name,
+                state.step
+            ),
+        };
+        batcher.seek(consumed);
         let mut batches: Vec<Batch> = Vec::with_capacity(d);
         let end_step = state.step + steps;
         while state.step < end_step {
@@ -395,6 +518,19 @@ mod tests {
         let mut batcher = Batcher::for_config(&cfg, Split::Train, 7);
         let batches = vec![batcher.next_batch()];
         assert!(run.step(state, &batches).is_err());
+    }
+
+    #[test]
+    fn train_from_rejects_batch_cursor_overflow() {
+        // regression: resuming at an absurd step count used to overflow
+        // the usize batch-cursor product and silently wrap the stream
+        let cfg = sim_cfg("base-sim");
+        let run = ShardedRun::new(&cfg, 4).unwrap();
+        let mut state = run.init_state(3).unwrap();
+        state.step = i64::MAX;
+        let mut log = RunLog::new("overflow-test".to_string());
+        let err = run.train_from(state, 0, 3, &mut log, false);
+        assert!(err.is_err(), "cursor overflow must surface, not wrap");
     }
 
     #[test]

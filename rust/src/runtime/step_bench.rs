@@ -1,0 +1,332 @@
+//! End-to-end step-throughput bench: the fused parallel (worker x layer)
+//! sharded step measured against the pre-fusion serial two-pass baseline
+//! **in the same run**, over {base, large, xlarge-sim geometries} x
+//! {top1, top2, 2top1, 4top1} x D in {1, 4, 8}.
+//!
+//! Shared by `m6t bench --step` and `cargo bench --bench step`; writes
+//! the tracked perf trajectory `BENCH_step.json`. Every cell first
+//! cross-checks that [`StepMode::Fused`] and [`StepMode::TwoPass`] emit
+//! bitwise-identical StepStats, dispatch summaries, and per-layer plans,
+//! so the bench doubles as a parity smoke; it then reports p50/p95 step
+//! latency, steps/sec, routed-tokens/sec, the baseline-vs-fused speedup
+//! (the machine-readable regression signal), and the gate-matrix bytes
+//! per step the fused path never materializes.
+
+use std::time::Instant;
+
+use anyhow::{ensure, Context as _, Result};
+
+use crate::config::{CapacityMode, ModelConfig, Routing};
+use crate::data::{Batch, Batcher, Split};
+use crate::runtime::native::registry;
+use crate::runtime::shard::{ShardedRun, StepMode};
+use crate::util::json::{arr, num, obj, s, write as json_write, Value};
+use crate::util::stats::percentile;
+use crate::util::table::{f2, Table};
+
+/// The benched geometries: the sim-scale E = 16 / 32 / 64 twins from the
+/// native registry (xlarge-sim is the acceptance gate's E = 64 row).
+const GEOMETRIES: [&str; 3] = ["base-sim", "large-sim", "xlarge-sim"];
+
+fn geometry(name: &str) -> ModelConfig {
+    registry().into_iter().find(|c| c.name == name).expect("registry geometry")
+}
+
+/// The benched strategies: the paper's headline routing regimes at their
+/// usual capacity modes.
+fn strategies() -> Vec<(Routing, CapacityMode)> {
+    vec![
+        (Routing::TopK(1), CapacityMode::TimesK),
+        (Routing::TopK(2), CapacityMode::Times1),
+        (Routing::Prototype(2), CapacityMode::Times1),
+        (Routing::Prototype(4), CapacityMode::Times1),
+    ]
+}
+
+/// The benched grid: 3 geometries x 4 strategies x D in {1, 4, 8}.
+pub fn cases() -> Vec<(ModelConfig, usize)> {
+    let mut out = Vec::new();
+    for geo in GEOMETRIES {
+        let model = geometry(geo);
+        for (routing, mode) in strategies() {
+            for workers in [1usize, 4, 8] {
+                let mut cfg = model.clone();
+                cfg.name = format!("{geo}-{}", routing.name());
+                cfg.routing = routing;
+                cfg.capacity_mode = mode;
+                out.push((cfg, workers));
+            }
+        }
+    }
+    out
+}
+
+/// One measured (geometry, strategy, D) cell: fused and baseline timed
+/// over the same data stream in the same process.
+#[derive(Debug, Clone)]
+pub struct StepBenchRow {
+    pub model: String,
+    pub strategy: String,
+    pub workers: usize,
+    pub layers: usize,
+    pub experts: usize,
+    pub tokens_per_worker: usize,
+    /// token-slot routings per global step: D * L * T * k_eff
+    pub routed_per_step: u64,
+    /// f32 gate-matrix bytes the two-pass path streams through per step
+    /// (D * L * T * E * 4) and the fused path never materializes
+    pub gate_bytes_avoided: u64,
+    pub fused_p50_ms: f64,
+    pub fused_p95_ms: f64,
+    pub baseline_p50_ms: f64,
+    pub baseline_p95_ms: f64,
+}
+
+impl StepBenchRow {
+    pub fn fused_steps_per_sec(&self) -> f64 {
+        1e3 / self.fused_p50_ms
+    }
+    pub fn baseline_steps_per_sec(&self) -> f64 {
+        1e3 / self.baseline_p50_ms
+    }
+    pub fn fused_routed_tokens_per_sec(&self) -> f64 {
+        self.routed_per_step as f64 * 1e3 / self.fused_p50_ms
+    }
+    pub fn baseline_routed_tokens_per_sec(&self) -> f64 {
+        self.routed_per_step as f64 * 1e3 / self.baseline_p50_ms
+    }
+    /// Baseline-vs-fused speedup on p50 step time (> 1 = fused faster) —
+    /// the machine-readable regression field.
+    pub fn speedup(&self) -> f64 {
+        self.baseline_p50_ms / self.fused_p50_ms
+    }
+}
+
+/// Time `steps` sharded steps in `mode` (after one warmup step), on the
+/// exact batch stream `ShardedRun::train` would consume.
+fn measure(run: &ShardedRun, mode: StepMode, steps: usize, seed: u64) -> Result<Vec<f64>> {
+    let cfg = run.info().config.clone();
+    let d = run.workers();
+    let mut state = run.init_state(seed as i32)?;
+    let mut batcher = Batcher::for_config(&cfg, Split::Train, seed);
+    let mut ms = Vec::with_capacity(steps);
+    for i in 0..steps + 1 {
+        let mut batches: Vec<Batch> = Vec::with_capacity(d);
+        for _ in 0..d {
+            batches.push(batcher.next_batch());
+        }
+        let t0 = Instant::now();
+        let (next, _stats, _plans) = run.step_detailed_mode(state, &batches, mode)?;
+        if i > 0 {
+            ms.push(t0.elapsed().as_secs_f64() * 1e3);
+        }
+        state = next;
+    }
+    Ok(ms)
+}
+
+/// Parity smoke: one step in each mode from the same state and batches
+/// must agree bitwise in stats, dispatch summary, and per-layer plans.
+fn assert_modes_agree(run: &ShardedRun, seed: u64) -> Result<()> {
+    let cfg = run.info().config.clone();
+    let d = run.workers();
+    let mut batcher = Batcher::for_config(&cfg, Split::Train, seed);
+    let mut batches: Vec<Batch> = Vec::with_capacity(d);
+    for _ in 0..d {
+        batches.push(batcher.next_batch());
+    }
+    let init = run.init_state(seed as i32)?;
+    let (_, a, pa) = run.step_detailed_mode(init, &batches, StepMode::Fused)?;
+    let init = run.init_state(seed as i32)?;
+    let (_, b, pb) = run.step_detailed_mode(init, &batches, StepMode::TwoPass)?;
+    let same = a.loss.to_bits() == b.loss.to_bits()
+        && a.load.len() == b.load.len()
+        && a.load.iter().zip(&b.load).all(|(x, y)| x.to_bits() == y.to_bits())
+        && a.dropped.iter().zip(&b.dropped).all(|(x, y)| x.to_bits() == y.to_bits())
+        && a.dispatch == b.dispatch
+        && pa == pb;
+    ensure!(same, "fused vs two-pass divergence on {} at D={d}", cfg.name);
+    Ok(())
+}
+
+/// Run the full grid, `steps` measured steps per (cell, mode).
+pub fn run_suite(steps: usize) -> Result<Vec<StepBenchRow>> {
+    let steps = steps.max(1);
+    let mut rows = Vec::new();
+    for (cfg, workers) in cases() {
+        let run = ShardedRun::new(&cfg, workers)?;
+        assert_modes_agree(&run, 42)?;
+        let fused = measure(&run, StepMode::Fused, steps, 42)?;
+        let baseline = measure(&run, StepMode::TwoPass, steps, 42)?;
+        let tokens = cfg.tokens_per_batch();
+        let k_eff = cfg.routing.k().min(cfg.num_experts as u32).max(1) as usize;
+        let row = StepBenchRow {
+            model: cfg.name.clone(),
+            strategy: cfg.routing.name(),
+            workers,
+            layers: cfg.layers,
+            experts: cfg.num_experts,
+            tokens_per_worker: tokens,
+            routed_per_step: (workers * cfg.layers * tokens * k_eff) as u64,
+            gate_bytes_avoided: (workers * cfg.layers * tokens * cfg.num_experts * 4) as u64,
+            fused_p50_ms: percentile(&fused, 50.0),
+            fused_p95_ms: percentile(&fused, 95.0),
+            baseline_p50_ms: percentile(&baseline, 50.0),
+            baseline_p95_ms: percentile(&baseline, 95.0),
+        };
+        eprintln!(
+            "[bench] {} D={}: fused {:.3} ms (p95 {:.3}), baseline {:.3} ms, {:.2}x, {:.2} Mtok/s routed",
+            row.model,
+            row.workers,
+            row.fused_p50_ms,
+            row.fused_p95_ms,
+            row.baseline_p50_ms,
+            row.speedup(),
+            row.fused_routed_tokens_per_sec() / 1e6
+        );
+        rows.push(row);
+    }
+    Ok(rows)
+}
+
+/// Minimum fused speedup over the acceptance slice: xlarge-sim (E = 64)
+/// at D >= 4 — the regression gate the JSON surfaces at top level.
+pub fn xlarge_min_speedup(rows: &[StepBenchRow]) -> f64 {
+    let min = rows
+        .iter()
+        .filter(|r| r.model.starts_with("xlarge-sim") && r.workers >= 4)
+        .map(StepBenchRow::speedup)
+        .fold(f64::INFINITY, f64::min);
+    // 0 (not inf) when the slice is absent, so the JSON stays valid
+    if min.is_finite() {
+        min
+    } else {
+        0.0
+    }
+}
+
+/// Human-readable table over the suite.
+pub fn render_table(rows: &[StepBenchRow], steps: usize) -> Table {
+    let mut t = Table::new(
+        format!("sharded step: fused grid vs two-pass serial baseline, {steps} steps/cell"),
+        &[
+            "model",
+            "D",
+            "T/worker",
+            "fused p50 ms",
+            "fused p95 ms",
+            "base p50 ms",
+            "speedup",
+            "routed Mtok/s",
+        ],
+    );
+    for r in rows {
+        t.row(vec![
+            r.model.clone(),
+            r.workers.to_string(),
+            r.tokens_per_worker.to_string(),
+            f2(r.fused_p50_ms),
+            f2(r.fused_p95_ms),
+            f2(r.baseline_p50_ms),
+            format!("{}x", f2(r.speedup())),
+            f2(r.fused_routed_tokens_per_sec() / 1e6),
+        ]);
+    }
+    t
+}
+
+/// Serialize the suite to the tracked trajectory JSON.
+pub fn to_json(rows: &[StepBenchRow], steps: usize) -> Value {
+    let items: Vec<Value> = rows
+        .iter()
+        .map(|r| {
+            obj(vec![
+                ("model", s(r.model.clone())),
+                ("strategy", s(r.strategy.clone())),
+                ("workers", num(r.workers as f64)),
+                ("layers", num(r.layers as f64)),
+                ("experts", num(r.experts as f64)),
+                ("tokens_per_worker", num(r.tokens_per_worker as f64)),
+                ("routed_tokens_per_step", num(r.routed_per_step as f64)),
+                ("gate_bytes_avoided_per_step", num(r.gate_bytes_avoided as f64)),
+                ("fused_p50_ms", num(r.fused_p50_ms)),
+                ("fused_p95_ms", num(r.fused_p95_ms)),
+                ("baseline_p50_ms", num(r.baseline_p50_ms)),
+                ("baseline_p95_ms", num(r.baseline_p95_ms)),
+                ("fused_steps_per_sec", num(r.fused_steps_per_sec())),
+                ("baseline_steps_per_sec", num(r.baseline_steps_per_sec())),
+                ("fused_routed_tokens_per_sec", num(r.fused_routed_tokens_per_sec())),
+                ("baseline_routed_tokens_per_sec", num(r.baseline_routed_tokens_per_sec())),
+                ("speedup", num(r.speedup())),
+            ])
+        })
+        .collect();
+    obj(vec![
+        ("bench", s("step")),
+        ("steps_per_cell", num(steps as f64)),
+        ("xlarge_min_speedup_d4_plus", num(xlarge_min_speedup(rows))),
+        ("rows", arr(items)),
+    ])
+}
+
+/// Write `BENCH_step.json` (or wherever `path` points).
+pub fn write_json(rows: &[StepBenchRow], steps: usize, path: &str) -> Result<()> {
+    let text = json_write(&to_json(rows, steps)) + "\n";
+    std::fs::write(path, text).with_context(|| format!("writing {path}"))?;
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn grid_covers_the_issue_matrix() {
+        let cs = cases();
+        assert_eq!(cs.len(), 36, "3 geometries x 4 strategies x 3 worker counts");
+        for (cfg, workers) in &cs {
+            assert_eq!(cfg.num_experts % workers, 0, "{}: unshardable at D={workers}", cfg.name);
+            let z = cfg.routing.prototypes().max(1) as usize;
+            assert_eq!(cfg.num_experts % z, 0, "{}: E not divisible by prototypes", cfg.name);
+        }
+        assert!(cs.iter().any(|(c, d)| c.name == "xlarge-sim-4top1" && *d == 8));
+        assert!(cs.iter().any(|(c, d)| c.name == "base-sim-top1" && *d == 1));
+    }
+
+    #[test]
+    fn modes_agree_on_a_sharded_cell() {
+        let mut cfg = geometry("base-sim");
+        cfg.routing = Routing::TopK(2);
+        cfg.capacity_mode = CapacityMode::Times1;
+        let run = ShardedRun::new(&cfg, 4).unwrap();
+        assert_modes_agree(&run, 7).unwrap();
+    }
+
+    #[test]
+    fn json_shape_is_stable() {
+        let rows = vec![StepBenchRow {
+            model: "xlarge-sim-top1".into(),
+            strategy: "top1".into(),
+            workers: 4,
+            layers: 8,
+            experts: 64,
+            tokens_per_worker: 512,
+            routed_per_step: 4 * 8 * 512,
+            gate_bytes_avoided: 4 * 8 * 512 * 64 * 4,
+            fused_p50_ms: 2.0,
+            fused_p95_ms: 2.5,
+            baseline_p50_ms: 4.0,
+            baseline_p95_ms: 5.0,
+        }];
+        let v = to_json(&rows, 8);
+        assert_eq!(v.get("bench").and_then(|b| b.as_str()), Some("step"));
+        assert_eq!(v.get("xlarge_min_speedup_d4_plus").and_then(|x| x.as_f64()), Some(2.0));
+        let items = v.get("rows").and_then(|r| r.as_array()).unwrap();
+        assert_eq!(items.len(), 1);
+        assert_eq!(items[0].get("speedup").and_then(|x| x.as_f64()), Some(2.0));
+        assert_eq!(
+            items[0].get("gate_bytes_avoided_per_step").and_then(|x| x.as_f64()),
+            Some((4 * 8 * 512 * 64 * 4) as f64)
+        );
+    }
+}

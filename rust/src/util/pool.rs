@@ -12,12 +12,14 @@
 //! once for every `i in 0..n`, with no promise about order or about which
 //! thread runs which index. Callers that want bitwise-identical results
 //! across pool sizes must make each work unit a pure function of its
-//! index — which is exactly how the routing engine and the native
-//! backend's gate generation are written (per-shard seeds, disjoint
-//! output slices). The caller's thread participates in the loop, so a
-//! pool with zero workers degrades to a plain serial loop and nested
-//! `parallel_for` calls cannot deadlock (a blocked caller drains the
-//! queue while it waits).
+//! index — which is exactly how the routing engine, the two-pass gate
+//! materializer, and the fused (worker x layer x tile) step grid
+//! (`runtime::native::route_grid_counts`, the pool's largest client:
+//! one flat `parallel_for` over the whole D x L x tile space) are
+//! written (per-unit seeds, disjoint output slices). The caller's thread
+//! participates in the loop, so a pool with zero workers degrades to a
+//! plain serial loop and nested `parallel_for` calls cannot deadlock (a
+//! blocked caller drains the queue while it waits).
 
 use std::collections::VecDeque;
 use std::panic::{catch_unwind, AssertUnwindSafe};

@@ -1,0 +1,242 @@
+//! Parity and determinism contract of the fused counts-only routing
+//! kernel and the parallel (worker x layer) sharded step built on it:
+//!
+//! * the fused kernel's demand/load/drop counts are bitwise identical to
+//!   the naive `route()` reference and to the two-pass engine across the
+//!   routing grid ({top1, top2, top4, 2top1, 4top1} x {tight, ample
+//!   capacity} x prototype groupings), including multi-tile layers;
+//! * the two-pass `fill_gates` materializer and the fused per-tile gate
+//!   generator consume identical RNG streams (same gate bits);
+//! * `ShardedRun`'s fused step reproduces the serial two-pass baseline
+//!   bit for bit — StepStats, dispatch summary, and per-layer plans —
+//!   at every D, and stays bitwise stable across pool sizes;
+//! * at D = 1 both modes reproduce `NativeBackend::step` (itself fused
+//!   now) exactly, closing the fused/two-pass/native triangle.
+
+use std::sync::Arc;
+
+use m6t::config::Routing;
+use m6t::data::{Batch, Batcher, Split};
+use m6t::moe::fused::{self, FusedScratch};
+use m6t::moe::{route, RouteOutput, RouterSpec, RoutingEngine};
+use m6t::runtime::native::{fill_gates, registry};
+use m6t::runtime::{Backend as _, NativeBackend, ShardedRun, StepMode, StepStats};
+use m6t::testing::{check, gen};
+use m6t::util::pool::{default_workers, WorkerPool};
+use m6t::util::rng::Rng;
+
+/// Materialize a full layer's gates tile by tile via the fused path's
+/// generator — the oracle input for the reference router.
+fn layer_gates(seed: u64, bias_row: &[f32], tokens: usize, e: usize, z: usize) -> Vec<f32> {
+    let mut gates = vec![0f32; tokens * e];
+    for s in 0..fused::tiles_for(tokens) {
+        let t0 = s * fused::TILE_TOKENS;
+        let rows = fused::TILE_TOKENS.min(tokens - t0);
+        fused::gen_tile_gates(&mut gates[t0 * e..(t0 + rows) * e], seed, s, bias_row, rows, e, z);
+    }
+    gates
+}
+
+#[test]
+fn prop_fused_counts_match_reference_and_engine() {
+    let mut engine = RoutingEngine::new();
+    let mut counts = RouteOutput::default();
+    let mut scratch = FusedScratch::default();
+    check("fused-parity", 150, |rng, b| {
+        let bound = b.max.max(2);
+        // powers of two up to 64, like gen::routing_shape — but tokens
+        // stretched so a good fraction of cases span multiple 512-token
+        // tiles (the histogram-merge path)
+        let (_, experts, _) = gen::routing_shape(rng, b);
+        let tokens = gen::usize_in(rng, 1, bound * 20);
+        let strategies = [
+            Routing::TopK(1),
+            Routing::TopK(2),
+            Routing::TopK(4),
+            Routing::Prototype(2),
+            Routing::Prototype(4),
+        ];
+        let mut routing = strategies[gen::usize_in(rng, 0, strategies.len() - 1)];
+        let z = routing.prototypes().max(1) as usize;
+        if experts % z != 0 {
+            routing = Routing::TopK(routing.k());
+        }
+        let z = routing.prototypes().max(1) as usize;
+        // tight (drops guaranteed under load) vs ample capacity
+        let capacity = if rng.below(2) == 0 {
+            gen::usize_in(rng, 1, (tokens / experts).max(1))
+        } else {
+            tokens
+        };
+        let seed = rng.next_u64();
+        let bias: Vec<f32> = (0..experts).map(|_| (rng.normal() * 0.4) as f32).collect();
+
+        let gates = layer_gates(seed, &bias, tokens, experts, z);
+        let spec = RouterSpec { routing, num_experts: experts, capacity };
+        let expect = route(&gates, tokens, &spec);
+
+        let mut demand = vec![0u32; experts];
+        let mut load = vec![0u32; experts];
+        let dropped = fused::layer_counts(
+            &mut scratch,
+            seed,
+            &bias,
+            tokens,
+            experts,
+            z,
+            routing,
+            capacity,
+            &mut demand,
+            &mut load,
+        );
+        if demand != expect.demand {
+            return Err(format!("{routing:?}: fused demand diverged from reference"));
+        }
+        if load != expect.load {
+            return Err(format!("{routing:?}: fused load diverged from reference"));
+        }
+        if dropped != expect.dropped {
+            return Err(format!(
+                "{routing:?}: fused dropped {dropped} != reference {}",
+                expect.dropped
+            ));
+        }
+        engine.route_counts_into(&gates, tokens, &spec, &mut counts);
+        if load != counts.load || demand != counts.demand || dropped != counts.dropped {
+            return Err(format!("{routing:?}: fused diverged from two-pass engine"));
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn fill_gates_matches_fused_tile_generator() {
+    // the two-pass materializer and the fused kernel must consume
+    // identical RNG streams: same seeds, same tile split, same gate bits
+    let experts = 16;
+    let prototypes = 2;
+    let tokens = 2 * fused::TILE_TOKENS + 131; // three tiles, last short
+    let mut rng = Rng::new(99);
+    let bias: Vec<f32> = (0..experts).map(|_| (rng.normal() * 0.4) as f32).collect();
+    let seed = 0xDEAD_BEEF_u64;
+    let expect = layer_gates(seed, &bias, tokens, experts, prototypes);
+    let mut got = vec![0f32; tokens * experts];
+    for workers in [0usize, 2] {
+        let pool = WorkerPool::new(workers);
+        got.fill(0.0);
+        fill_gates(&pool, &mut got, seed, &bias, tokens, experts, prototypes);
+        assert_eq!(
+            expect.iter().map(|x| x.to_bits()).collect::<Vec<_>>(),
+            got.iter().map(|x| x.to_bits()).collect::<Vec<_>>(),
+            "fill_gates diverged from the fused tile generator (pool {workers})"
+        );
+    }
+}
+
+/// Everything in StepStats, as bits.
+fn stats_bits(s: &StepStats) -> (u32, u32, u32, Vec<u32>, Vec<u32>, u64) {
+    (
+        s.loss.to_bits(),
+        s.aux_loss.to_bits(),
+        s.grad_norm.to_bits(),
+        s.load.iter().map(|x| x.to_bits()).collect(),
+        s.dropped.iter().map(|x| x.to_bits()).collect(),
+        s.sim_step_ms.to_bits(),
+    )
+}
+
+fn worker_batches(run: &ShardedRun, seed: u64, steps: usize) -> Vec<Vec<Batch>> {
+    let cfg = run.info().config.clone();
+    let d = run.workers();
+    let mut batcher = Batcher::for_config(&cfg, Split::Train, seed);
+    (0..steps).map(|_| (0..d).map(|_| batcher.next_batch()).collect()).collect()
+}
+
+fn run_mode(run: &ShardedRun, seed: u64, steps: usize, mode: StepMode) -> Vec<StepStats> {
+    let mut state = run.init_state(seed as i32).expect("init");
+    let mut out = Vec::with_capacity(steps);
+    for batches in worker_batches(run, seed, steps) {
+        let (next, stats, _plans) = run.step_detailed_mode(state, &batches, mode).expect("step");
+        state = next;
+        out.push(stats);
+    }
+    out
+}
+
+#[test]
+fn fused_step_reproduces_two_pass_baseline_bitwise() {
+    // acceptance: the fused parallel grid and the serial two-pass
+    // baseline are the same function — stats, dispatch, and plans
+    for (name, d) in [("base-sim", 4usize), ("large-sim", 2), ("xlarge-sim", 8), ("base-sim-aux", 1)]
+    {
+        let cfg = registry().into_iter().find(|c| c.name == name).expect("variant");
+        let run = ShardedRun::new(&cfg, d).unwrap();
+        // plans compared on a fresh first step, where the recycling pool
+        // is cold in both modes
+        let all = worker_batches(&run, 13, 1);
+        let batches = &all[0];
+        let init = run.init_state(13).unwrap();
+        let (_, fa, pa) = run.step_detailed_mode(init, batches, StepMode::Fused).unwrap();
+        let init = run.init_state(13).unwrap();
+        let (_, fb, pb) = run.step_detailed_mode(init, batches, StepMode::TwoPass).unwrap();
+        assert_eq!(stats_bits(&fa), stats_bits(&fb), "{name} D={d}: StepStats diverged");
+        assert_eq!(fa.dispatch, fb.dispatch, "{name} D={d}: dispatch summary diverged");
+        assert_eq!(pa, pb, "{name} D={d}: per-layer plans diverged");
+
+        // and over a short multi-step run (scratch reuse in both modes)
+        let fused = run_mode(&run, 17, 3, StepMode::Fused);
+        let twopass = run_mode(&run, 17, 3, StepMode::TwoPass);
+        for (i, (a, b)) in fused.iter().zip(&twopass).enumerate() {
+            assert_eq!(stats_bits(a), stats_bits(b), "{name} D={d}: step {i} diverged");
+            assert_eq!(a.dispatch, b.dispatch, "{name} D={d}: step {i} dispatch diverged");
+        }
+    }
+}
+
+#[test]
+fn fused_step_bitwise_identical_across_pool_sizes() {
+    // the fused grid's unit decomposition is pure shape: pool geometry
+    // must never leak into the emitted stats (xlarge-sim = the E=64
+    // acceptance geometry)
+    let cfg = registry().into_iter().find(|c| c.name == "xlarge-sim").expect("variant");
+    let reference = {
+        let run = ShardedRun::with_pool(&cfg, 4, Arc::new(WorkerPool::new(1))).unwrap();
+        run_mode(&run, 23, 2, StepMode::Fused)
+    };
+    for workers in [0usize, 2, default_workers()] {
+        let run = ShardedRun::with_pool(&cfg, 4, Arc::new(WorkerPool::new(workers))).unwrap();
+        let got = run_mode(&run, 23, 2, StepMode::Fused);
+        for (i, (a, b)) in reference.iter().zip(&got).enumerate() {
+            assert_eq!(stats_bits(a), stats_bits(b), "pool {workers}: step {i} diverged");
+            assert_eq!(a.dispatch, b.dispatch, "pool {workers}: step {i} dispatch diverged");
+        }
+    }
+}
+
+#[test]
+fn both_modes_at_d1_reproduce_native_backend() {
+    // the triangle: native (fused), sharded fused D=1, and sharded
+    // two-pass D=1 all emit the same bits
+    let cfg = registry().into_iter().find(|c| c.name == "large-sim").expect("variant");
+    let backend = NativeBackend::new(&cfg);
+    let mut state = backend.init_state(7).expect("init");
+    let mut batcher = Batcher::for_config(&cfg, Split::Train, 7);
+    let mut native_stats = Vec::new();
+    for _ in 0..2 {
+        let batch = batcher.next_batch();
+        let (next, stats) = backend.step(state, &batch).expect("step");
+        state = next;
+        native_stats.push(stats);
+    }
+    let run = ShardedRun::new(&cfg, 1).unwrap();
+    for mode in [StepMode::Fused, StepMode::TwoPass] {
+        let sharded = run_mode(&run, 7, 2, mode);
+        for (i, (n, s)) in native_stats.iter().zip(&sharded).enumerate() {
+            assert_eq!(
+                stats_bits(n),
+                stats_bits(s),
+                "step {i}: {mode:?} at D=1 diverged from NativeBackend"
+            );
+        }
+    }
+}
