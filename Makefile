@@ -1,6 +1,6 @@
 # Convenience targets; tier-1 verify is `cargo build --release && cargo test -q`.
 
-.PHONY: build test fmt run report artifacts smoke bench-step
+.PHONY: build test fmt run report artifacts smoke bench-step bench-overlap
 
 build:
 	cargo build --release
@@ -22,6 +22,12 @@ report:
 # read it).
 bench-step:
 	cargo run --release -- bench --step
+
+# Link-level overlap-aware cluster model vs the serial aggregate, over
+# flat and hierarchical topologies, written to BENCH_overlap.json (see
+# DESIGN.md on how to read it).
+bench-overlap:
+	cargo run --release -- bench --overlap
 
 # `artifacts` is a documented no-op stub. The AOT pipeline
 # (python/compile/aot.py -> HLO text + artifacts/manifest.json) feeds the

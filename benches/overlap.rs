@@ -1,0 +1,24 @@
+//! `cargo bench --bench overlap [-- <steps>]` — the overlap/topology
+//! suite: the link-level, overlap-aware cluster model swept over
+//! {base, large, xlarge-sim} x {top1, top2, 2top1} x D in {4, 8, 16} x
+//! {flat, hierarchical} topologies.
+//!
+//! Shares its suite (and table rendering) with `m6t bench --overlap`;
+//! both write `BENCH_overlap.json` at the repo root, whose
+//! `min_overlap_speedup` field is the CI regression gate.
+
+use m6t::runtime::overlap_bench;
+
+fn main() -> anyhow::Result<()> {
+    let steps: usize = std::env::args().skip(1).find_map(|a| a.parse().ok()).unwrap_or(12);
+    let rows = overlap_bench::run_suite(steps)?;
+    print!("{}", overlap_bench::render_table(&rows, steps).render());
+    overlap_bench::write_json(&rows, steps, "BENCH_overlap.json")?;
+    eprintln!(
+        "[bench] min overlap speedup: {:.2}x, max bottleneck link share: {:.2}",
+        overlap_bench::min_overlap_speedup(&rows),
+        overlap_bench::max_bottleneck_link_share(&rows)
+    );
+    eprintln!("[bench] wrote BENCH_overlap.json");
+    Ok(())
+}

@@ -23,6 +23,10 @@ use anyhow::{bail, Result};
 use crate::config::{CapacityMode, ModelConfig, Routing};
 use crate::flops::forward_flops;
 
+pub mod topology;
+
+pub use topology::{simulate_step_overlapped, OverlapOutcome, Topology};
+
 /// Hardware + framework constants of one simulated worker.
 #[derive(Debug, Clone)]
 pub struct HardwareModel {
@@ -31,10 +35,22 @@ pub struct HardwareModel {
     pub flops_eff: f64,
     /// HBM bandwidth, bytes/s (V100: 900 GB/s)
     pub mem_bw: f64,
-    /// per-worker RDMA bandwidth, bytes/s (100 Gb/s)
+    /// per-worker RDMA bandwidth, bytes/s (100 Gb/s) — the *inter-node*
+    /// tier of the link model (`cluster::topology`)
     pub net_bw: f64,
-    /// all-to-all per-hop latency, seconds
+    /// all-to-all per-hop latency, seconds (inter-node tier)
     pub a2a_latency: f64,
+    /// per-worker bandwidth between workers on the *same* node, bytes/s
+    /// (NVLink/PCIe class — must be >= `net_bw` for the link model's
+    /// "hierarchy never slower than flat" invariant to hold)
+    pub intra_node_bw: f64,
+    /// per-hop latency between same-node workers, seconds (must be <=
+    /// `a2a_latency`)
+    pub intra_node_latency: f64,
+    /// workers grouped per node: 1 = flat (every cross-worker link is
+    /// inter-node, the paper's single-GPU-per-host testbed); > 1 enables
+    /// the hierarchical intra/inter tiers
+    pub workers_per_node: usize,
     /// cost of one serialized routing round (argmax+cumsum+masking kernel
     /// chain dispatch under TF1), seconds
     pub routing_round: f64,
@@ -48,18 +64,32 @@ pub struct HardwareModel {
 }
 
 impl HardwareModel {
-    /// V100-32GB + TF1.15/Whale defaults, pre-calibration.
+    /// V100-32GB + TF1.15/Whale defaults, pre-calibration. The topology
+    /// defaults to flat (`workers_per_node = 1`): the paper's testbed ran
+    /// one GPU per host on 100 Gb RDMA, so every cross-worker link is
+    /// inter-node and the hierarchical tier is inert until a caller opts
+    /// into a grouping ([`HardwareModel::with_workers_per_node`]).
     pub fn v100() -> Self {
         Self {
             flops_eff: 37.5e12,
             mem_bw: 900e9,
             net_bw: 12.5e9,
             a2a_latency: 30e-6,
+            intra_node_bw: 60e9,
+            intra_node_latency: 3e-6,
+            workers_per_node: 1,
             routing_round: 1.5e-3,
             proto_overhead: 0.5e-3,
             framework_layer: 25e-3,
             framework_step: 10e-3,
         }
+    }
+
+    /// The same hardware with `wpn` workers grouped per node — the
+    /// hierarchical variant the overlap bench sweeps against flat.
+    pub fn with_workers_per_node(mut self, wpn: usize) -> Self {
+        self.workers_per_node = wpn.max(1);
+        self
     }
 
     /// Calibrate `framework_layer` so that `cfg` under `routing`/`mode`

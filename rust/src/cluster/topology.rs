@@ -1,0 +1,394 @@
+//! Link-level, topology-aware, overlap-capable all-to-all model.
+//!
+//! The aggregate observed model ([`simulate_step_observed`]) prices a
+//! layer's exchange as *total cross bytes through one NIC*, fully
+//! serialized behind compute — a deliberate upper bound. This module
+//! refines both halves:
+//!
+//!  * **Per-link bottleneck.** A [`DispatchPlan`]'s zero-diagonal D x D
+//!    `bytes_matrix` maps each ordered worker pair onto a link whose tier
+//!    is decided by a [`Topology`] (a workers-per-node grouping): peers on
+//!    the same node exchange at `intra_node_bw` / `intra_node_latency`,
+//!    peers on different nodes at `net_bw` / `a2a_latency`. Links fan out
+//!    concurrently; what serializes is each worker's NIC, so the layer's
+//!    exchange completes when the most-loaded worker has drained its
+//!    send *and* receive queues ([`layer_bottleneck_seconds`]). On a flat
+//!    topology this can never exceed the aggregate model (which pushes
+//!    *every* worker's bytes through a single NIC) — the invariant
+//!    `rust/tests/topology_model.rs` pins.
+//!
+//!  * **Compute/dispatch overlap.** [`simulate_step_overlapped`] reworks
+//!    the serial step into a two-resource pipeline: a compute engine
+//!    (attention + gating + expert FFN + per-layer framework cost) and a
+//!    comm engine (each layer's 4 all-to-all transfers) process layers in
+//!    order, with layer ℓ's dispatch overlapping layer ℓ±1's expert
+//!    compute (overlap depth 1: compute of layer ℓ waits only on comm of
+//!    layer ℓ-2, the double-buffering window). The serial schedule is
+//!    always admissible, so the overlapped time is clamped to never
+//!    exceed it — `overlap_speedup >= 1.0` is structural, not empirical.
+//!
+//! The `--no-overlap` path is not an approximation of the old model: it
+//! *is* the old model ([`OverlapOutcome::serial_ms`] comes from the same
+//! [`simulate_step_observed`] call, bit for bit).
+
+use crate::config::{CapacityMode, ModelConfig, Routing};
+
+use super::{simulate_step_observed, HardwareModel, ObservedTraffic, StepTime};
+
+/// A workers-per-node grouping of D expert-parallel workers. Worker `w`
+/// lives on node `w / workers_per_node`; links between same-node workers
+/// use the intra-node bandwidth/latency tier, everything else the
+/// inter-node (RDMA) tier.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Topology {
+    pub workers: usize,
+    pub workers_per_node: usize,
+}
+
+impl Topology {
+    /// `workers_per_node` clamps to at least 1 (1 = flat).
+    pub fn new(workers: usize, workers_per_node: usize) -> Self {
+        Self { workers: workers.max(1), workers_per_node: workers_per_node.max(1) }
+    }
+
+    /// Every worker on its own node: all cross-worker links are
+    /// inter-node — the paper's testbed and the pre-PR model's implicit
+    /// topology.
+    pub fn flat(workers: usize) -> Self {
+        Self::new(workers, 1)
+    }
+
+    /// `wpn` workers per node; the last node may be smaller when `wpn`
+    /// does not divide D.
+    pub fn hierarchical(workers: usize, wpn: usize) -> Self {
+        Self::new(workers, wpn)
+    }
+
+    pub fn is_flat(&self) -> bool {
+        self.workers_per_node == 1
+    }
+
+    pub fn node_of(&self, worker: usize) -> usize {
+        worker / self.workers_per_node
+    }
+
+    /// Do `w` and `v` share a node (their link is intra-node)?
+    pub fn is_intra(&self, w: usize, v: usize) -> bool {
+        self.node_of(w) == self.node_of(v)
+    }
+
+    pub fn nodes(&self) -> usize {
+        self.workers.div_ceil(self.workers_per_node)
+    }
+
+    /// Bench/report label: `flat` or `nodes<wpn>`.
+    pub fn name(&self) -> String {
+        if self.is_flat() {
+            "flat".to_string()
+        } else {
+            format!("nodes{}", self.workers_per_node)
+        }
+    }
+}
+
+/// One-direction completion time (seconds) of one layer's exchange under
+/// the per-link bottleneck model: every worker drains its send and
+/// receive queues concurrently, each queue split across the two
+/// bandwidth tiers, plus the per-hop handshake latency to each peer
+/// (paid whether or not bytes flow, exactly as the aggregate model
+/// charges `a2a_latency * (D - 1)` even for an empty exchange). The
+/// layer completes when the slowest worker does.
+///
+/// `link_bytes` is the row-major zero-diagonal D x D matrix of
+/// [`DispatchPlan::bytes_matrix`](crate::moe::DispatchPlan::bytes_matrix).
+/// D = 1 has no links and costs exactly zero.
+pub fn layer_bottleneck_seconds(link_bytes: &[u64], topo: &Topology, hw: &HardwareModel) -> f64 {
+    let d = topo.workers;
+    assert_eq!(link_bytes.len(), d * d, "link matrix must be D x D");
+    if d <= 1 {
+        return 0.0;
+    }
+    let mut worst = 0.0f64;
+    for w in 0..d {
+        let mut send_inter = 0u64;
+        let mut send_intra = 0u64;
+        let mut recv_inter = 0u64;
+        let mut recv_intra = 0u64;
+        let mut latency = 0.0f64;
+        for v in 0..d {
+            if v == w {
+                continue;
+            }
+            if topo.is_intra(w, v) {
+                send_intra += link_bytes[w * d + v];
+                recv_intra += link_bytes[v * d + w];
+                latency += hw.intra_node_latency;
+            } else {
+                send_inter += link_bytes[w * d + v];
+                recv_inter += link_bytes[v * d + w];
+                latency += hw.a2a_latency;
+            }
+        }
+        let send = send_inter as f64 / hw.net_bw + send_intra as f64 / hw.intra_node_bw;
+        let recv = recv_inter as f64 / hw.net_bw + recv_intra as f64 / hw.intra_node_bw;
+        worst = worst.max(send.max(recv) + latency);
+    }
+    worst
+}
+
+/// The overlap model's verdict on one step: the serial baseline (bitwise
+/// the pre-overlap `simulate_step_observed` total), the pipelined time,
+/// and the decomposition both are built from.
+#[derive(Debug, Clone, Copy)]
+pub struct OverlapOutcome {
+    /// today's aggregate-serial observed step time — the `--no-overlap`
+    /// baseline/oracle, produced by the same [`simulate_step_observed`]
+    /// call as before this model existed (bit for bit)
+    pub serial_ms: f64,
+    /// two-resource pipeline step time; never exceeds `serial_ms`
+    pub overlapped_ms: f64,
+    /// the serial model's aggregate a2a total (L x 4 transfers through
+    /// one NIC)
+    pub comm_serial_ms: f64,
+    /// the per-link bottleneck comm total (sum over layers of 4 x the
+    /// layer's bottleneck time) — what the pipeline tries to hide
+    pub comm_link_ms: f64,
+    /// overlappable compute total (attention + gating + dispatch einsums
+    /// + expert FFN + per-layer framework cost)
+    pub compute_ms: f64,
+    /// non-overlappable tail (head + dense all-reduce + optimizer +
+    /// per-step framework cost)
+    pub tail_ms: f64,
+    /// fraction of the link-model comm hidden behind compute, in [0, 1]
+    /// (1.0 when there is no comm to hide — D = 1, or an all-local step)
+    pub overlap_efficiency: f64,
+}
+
+impl OverlapOutcome {
+    /// Serial / overlapped step time (>= 1.0 by construction) — the
+    /// bench's per-row regression field.
+    pub fn overlap_speedup(&self) -> f64 {
+        if self.overlapped_ms > 0.0 {
+            self.serial_ms / self.overlapped_ms
+        } else {
+            1.0
+        }
+    }
+}
+
+/// Finish time of the layer pipeline: a compute engine runs `c` ms per
+/// layer, a comm engine runs `comm_ms[l]` ms per layer, comm of layer ℓ
+/// starts after its compute, and compute of layer ℓ waits only on comm
+/// of layer ℓ-2 (the double-buffering window that lets layer ℓ's
+/// dispatch overlap its neighbors' compute). Both engines are monotone,
+/// so the result never exceeds the fully serial `Σc + Σcomm`.
+fn pipeline_finish_ms(compute_layer_ms: f64, comm_ms: &[f64]) -> f64 {
+    let mut compute_done = 0.0f64;
+    let mut comm_done_prev = 0.0f64; // comm engine after layer l-1
+    let mut comm_done_prev2 = 0.0f64; // comm engine after layer l-2
+    for &m in comm_ms {
+        compute_done = compute_done.max(comm_done_prev2) + compute_layer_ms;
+        let comm_done = comm_done_prev.max(compute_done) + m;
+        comm_done_prev2 = comm_done_prev;
+        comm_done_prev = comm_done;
+    }
+    compute_done.max(comm_done_prev)
+}
+
+/// Split the serial step time into the pipeline's three pieces, all in
+/// ms: per-layer overlappable compute, the non-overlappable tail, and
+/// (implicitly) the a2a the link model reprices.
+fn decompose(t: &StepTime, layers: usize, hw: &HardwareModel) -> (f64, f64) {
+    let l = layers.max(1) as f64;
+    let overlappable = t.attention_ms + t.gating_ms + t.dispatch_combine_ms + t.expert_ms;
+    let compute_layer = overlappable / l + hw.framework_layer * 1e3;
+    let tail = t.head_ms + t.allreduce_ms + t.optimizer_ms + hw.framework_step * 1e3;
+    (compute_layer, tail)
+}
+
+/// Overlap-aware observed step time. `per_layer_comm_ms` is each MoE
+/// layer's **one-direction** per-link bottleneck time in ms
+/// ([`layer_bottleneck_seconds`] x 1e3); the pipeline charges 4 transfers
+/// per layer, exactly like the serial model. The serial baseline is
+/// computed by the unchanged [`simulate_step_observed`] (so `--no-overlap`
+/// reproduces pre-overlap numbers bitwise), and the overlapped time is
+/// clamped to it: the serial schedule is always admissible, so modelling
+/// overlap can only help.
+pub fn simulate_step_overlapped(
+    cfg: &ModelConfig,
+    routing: Routing,
+    mode: CapacityMode,
+    hw: &HardwareModel,
+    observed: &ObservedTraffic,
+    per_layer_comm_ms: &[f64],
+) -> OverlapOutcome {
+    assert_eq!(per_layer_comm_ms.len(), cfg.layers, "one comm entry per layer");
+    let serial = simulate_step_observed(cfg, routing, mode, hw, observed);
+    let serial_ms = serial.total_ms();
+    let (compute_layer, tail_ms) = decompose(&serial, cfg.layers, hw);
+    let compute_ms = compute_layer * cfg.layers as f64;
+
+    // one comm-engine job per layer: its 4 transfers at the link-model
+    // bottleneck rate (dispatch + combine, forward + backward)
+    let mut comm_jobs: Vec<f64> = Vec::with_capacity(per_layer_comm_ms.len());
+    let mut comm_link_ms = 0.0f64;
+    for &m in per_layer_comm_ms {
+        let job = 4.0 * m;
+        comm_link_ms += job;
+        comm_jobs.push(job);
+    }
+
+    let pipelined = pipeline_finish_ms(compute_layer, &comm_jobs) + tail_ms;
+    let overlapped_ms = pipelined.min(serial_ms);
+
+    // fraction of link-model comm hidden: the pipeline's win over the
+    // fully serialized link schedule, normalized by the comm it had to
+    // hide. No comm to hide counts as fully hidden.
+    let serial_link_ms = compute_ms + comm_link_ms + tail_ms;
+    let overlap_efficiency = if comm_link_ms > 0.0 {
+        ((serial_link_ms - overlapped_ms) / comm_link_ms).clamp(0.0, 1.0)
+    } else {
+        1.0
+    };
+
+    OverlapOutcome {
+        serial_ms,
+        overlapped_ms,
+        comm_serial_ms: serial.a2a_ms,
+        comm_link_ms,
+        compute_ms,
+        tail_ms,
+        overlap_efficiency,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cluster::table2_hardware;
+    use crate::config::paper;
+
+    #[test]
+    fn topology_grouping() {
+        let flat = Topology::flat(8);
+        assert!(flat.is_flat());
+        assert_eq!(flat.nodes(), 8);
+        assert!(!flat.is_intra(0, 1));
+        assert_eq!(flat.name(), "flat");
+
+        let hier = Topology::hierarchical(8, 4);
+        assert_eq!(hier.nodes(), 2);
+        assert!(hier.is_intra(0, 3));
+        assert!(!hier.is_intra(3, 4));
+        assert_eq!(hier.name(), "nodes4");
+
+        // non-dividing grouping: the last node is smaller, nobody panics
+        let ragged = Topology::hierarchical(6, 4);
+        assert_eq!(ragged.nodes(), 2);
+        assert!(ragged.is_intra(4, 5));
+        assert!(!ragged.is_intra(3, 4));
+
+        // zero clamps to flat
+        assert!(Topology::new(4, 0).is_flat());
+    }
+
+    #[test]
+    fn single_worker_has_zero_comm() {
+        let hw = HardwareModel::v100();
+        let t = Topology::flat(1);
+        assert_eq!(layer_bottleneck_seconds(&[0], &t, &hw), 0.0);
+    }
+
+    #[test]
+    fn flat_bottleneck_matches_nic_and_latency() {
+        let hw = HardwareModel::v100();
+        let t = Topology::flat(2);
+        // worker 0 sends 125 MB to worker 1; nothing comes back
+        let bytes = 125_000_000u64;
+        let m = [0, bytes, 0, 0];
+        let got = layer_bottleneck_seconds(&m, &t, &hw);
+        let want = bytes as f64 / hw.net_bw + hw.a2a_latency;
+        assert!((got - want).abs() < 1e-12, "{got} vs {want}");
+    }
+
+    #[test]
+    fn hierarchy_never_slower_than_flat() {
+        let hw = HardwareModel::v100();
+        let d = 8;
+        // a dense asymmetric exchange
+        let mut m = vec![0u64; d * d];
+        for w in 0..d {
+            for v in 0..d {
+                if w != v {
+                    m[w * d + v] = ((w * 7 + v * 13 + 1) * 100_000) as u64;
+                }
+            }
+        }
+        let flat = layer_bottleneck_seconds(&m, &Topology::flat(d), &hw);
+        let hier = layer_bottleneck_seconds(&m, &Topology::hierarchical(d, 4), &hw);
+        assert!(
+            hier <= flat,
+            "intra-node links are faster, so grouping cannot slow the exchange: {hier} vs {flat}"
+        );
+    }
+
+    #[test]
+    fn pipeline_bounds() {
+        // uniform work: the pipeline is bounded below by each engine's
+        // total and above by the fully serial schedule
+        let comm = vec![2.0; 8];
+        let t = pipeline_finish_ms(3.0, &comm);
+        assert!(t >= 8.0 * 3.0, "compute-bound floor: {t}");
+        assert!(t <= 8.0 * (3.0 + 2.0), "serial ceiling: {t}");
+        // comm-bound case
+        let comm = vec![10.0; 8];
+        let t = pipeline_finish_ms(1.0, &comm);
+        assert!(t >= 80.0 && t <= 88.0, "{t}");
+        // no layers -> nothing to do
+        assert_eq!(pipeline_finish_ms(5.0, &[]), 0.0);
+    }
+
+    #[test]
+    fn overlapped_never_exceeds_serial_and_speedup_is_at_least_one() {
+        let base = paper::base();
+        let hw = table2_hardware();
+        let obs = ObservedTraffic { a2a_bytes_per_layer: 2.0e6, shard_balance: 1.3 };
+        // per-link comm strictly cheaper than the aggregate serial charge
+        let comm: Vec<f64> = (0..base.layers).map(|l| 0.01 + l as f64 * 0.001).collect();
+        let out = simulate_step_overlapped(
+            &base,
+            Routing::TopK(2),
+            CapacityMode::Times1,
+            &hw,
+            &obs,
+            &comm,
+        );
+        assert!(out.overlapped_ms <= out.serial_ms);
+        assert!(out.overlap_speedup() >= 1.0);
+        assert!((0.0..=1.0).contains(&out.overlap_efficiency));
+        // the serial baseline is the unchanged observed model, bit for bit
+        let oracle =
+            simulate_step_observed(&base, Routing::TopK(2), CapacityMode::Times1, &hw, &obs)
+                .total_ms();
+        assert_eq!(out.serial_ms.to_bits(), oracle.to_bits());
+    }
+
+    #[test]
+    fn zero_comm_counts_as_fully_hidden() {
+        let base = paper::base();
+        let hw = table2_hardware();
+        let obs = ObservedTraffic { a2a_bytes_per_layer: 0.0, shard_balance: 1.0 };
+        let comm = vec![0.0; base.layers];
+        let out = simulate_step_overlapped(
+            &base,
+            Routing::TopK(1),
+            CapacityMode::TimesK,
+            &hw,
+            &obs,
+            &comm,
+        );
+        assert_eq!(out.overlap_efficiency, 1.0);
+        assert_eq!(out.comm_link_ms, 0.0);
+        assert!(out.overlapped_ms <= out.serial_ms);
+    }
+}

@@ -99,9 +99,16 @@ impl Trainer {
         let info = self.backend.info();
         let mut log = RunLog::new(info.name.clone());
         if let Some(dir) = &self.opts.metrics_dir {
-            // a resumed run (checkpoint restore) must append: truncating
-            // the sink would silently destroy its recorded history
-            log = if state.step > 0 { log.with_sink_append(dir)? } else { log.with_sink(dir)? };
+            // a resumed run (checkpoint restore) must append — truncating
+            // the sink would destroy its recorded history — but the steps
+            // at and past the checkpoint are about to be re-executed, so
+            // their old records are dropped first: resuming the same
+            // checkpoint twice must not double-log the overlap range
+            log = if state.step > 0 {
+                log.with_sink_resume(dir, state.step)?
+            } else {
+                log.with_sink(dir)?
+            };
         }
         let mut batcher = Batcher::for_config(&info.config, Split::Train, self.opts.seed);
         // resume-aware: skip the batches already consumed

@@ -10,8 +10,8 @@
 //!   train                   train one variant (checkpoints, metrics)
 //!   eval                    eval PPL of a checkpoint / fresh init
 //!   bench                   measured vs simulated ms/step per strategy;
-//!                           --routing / --dispatch / --step run the
-//!                           tracked suites (BENCH_*.json)
+//!                           --routing / --dispatch / --step / --overlap
+//!                           run the tracked suites (BENCH_*.json)
 //!   flops                   Table 1 (analytical per-GPU GFLOPs)
 //!   simulate                Table 2 (calibrated cluster simulator)
 //!   figure fig1|fig3|fig4|fig5|fig6
@@ -119,6 +119,12 @@ fn cmd_run(rest: &[String]) -> Result<()> {
         .opt_default("steps", "40", "training steps")
         .opt_default("seed", "42", "data/init seed")
         .opt_default("workers", "1", "expert-parallel workers D (sharded runtime when > 1)")
+        .opt_default(
+            "workers-per-node",
+            "1",
+            "node grouping for the hierarchical link model (1 = flat)",
+        )
+        .flag("no-overlap", "report only the serial (pre-overlap) cluster model")
         .flag("quiet", "suppress progress lines");
     let args = parse(cmd, rest)?;
     let workers: usize = args.get_or("workers", 1usize).map_err(anyhow::Error::msg)?;
@@ -169,7 +175,9 @@ fn cmd_run(rest: &[String]) -> Result<()> {
 /// `m6t run --workers D` — the expert-parallel sharded runtime: every
 /// worker routes its own local batch, the all-to-all exchange is
 /// accounted exactly, and the cluster model consumes the *measured*
-/// traffic in place of its analytic estimate.
+/// traffic in place of its analytic estimate — per link and overlapped
+/// against expert compute unless `--no-overlap` asks for the serial
+/// baseline.
 fn cmd_run_sharded(args: &m6t::util::cli::Args, workers: usize) -> Result<()> {
     use m6t::metrics::RunLog;
     use m6t::runtime::ShardedRun;
@@ -178,15 +186,22 @@ fn cmd_run_sharded(args: &m6t::util::cli::Args, workers: usize) -> Result<()> {
     let name = args.get("variant").unwrap();
     let info = provider.info(name)?;
     let cfg = info.config.clone();
-    let run = ShardedRun::new(&cfg, workers)?;
+    let wpn: usize = args.get_or("workers-per-node", 1usize).map_err(anyhow::Error::msg)?;
+    if wpn == 0 {
+        anyhow::bail!("--workers-per-node must be at least 1");
+    }
+    let mut run = ShardedRun::new(&cfg, workers)?;
+    run.set_workers_per_node(wpn);
+    let topo = run.topology();
     eprintln!(
-        "[m6t] {} — sharded: D={} workers, E={} ({} experts/shard), C={} per worker, {} routing",
+        "[m6t] {} — sharded: D={} workers, E={} ({} experts/shard), C={} per worker, {} routing, {} topology",
         name,
         workers,
         cfg.num_experts,
         cfg.num_experts / workers,
         run.info().capacity,
         cfg.routing.name(),
+        topo.name(),
     );
     let steps: i64 = args.get_or("steps", 40i64).map_err(anyhow::Error::msg)?;
     let seed: u64 = args.get_or("seed", 42u64).map_err(anyhow::Error::msg)?;
@@ -217,10 +232,30 @@ fn cmd_run_sharded(args: &m6t::util::cli::Args, workers: usize) -> Result<()> {
             dsp.a2a_bytes_step / 1e6,
             dsp.cross_fraction * 100.0
         );
-        println!(
-            "cluster step time:           analytic {:.1} ms -> observed {:.1} ms",
-            last.sim_ms, dsp.observed_ms
-        );
+        if args.flag("no-overlap") {
+            // the serial baseline, formatted exactly as before the
+            // overlap model existed — the oracle comparison surface
+            println!(
+                "cluster step time:           analytic {:.1} ms -> observed {:.1} ms",
+                last.sim_ms, dsp.observed_ms
+            );
+        } else {
+            println!(
+                "bottleneck link:             w{} -> w{}  {:.3} MB/step ({:.0}% of cross bytes)",
+                dsp.bottleneck_src,
+                dsp.bottleneck_dst,
+                dsp.max_link_bytes * 4.0 / 1e6,
+                dsp.bottleneck_link_share() * 100.0
+            );
+            println!(
+                "cluster step time:           analytic {:.1} ms -> serial {:.1} ms -> overlapped {:.1} ms ({:.2}x, {:.0}% of comm hidden)",
+                last.sim_ms,
+                dsp.observed_ms,
+                dsp.observed_overlap_ms,
+                dsp.overlap_speedup(),
+                dsp.overlap_efficiency * 100.0
+            );
+        }
         println!("measured host step time:     {:.2} ms/step", last.ms_per_step);
     }
     Ok(())
@@ -311,7 +346,12 @@ fn cmd_bench(rest: &[String]) -> Result<()> {
             "step",
             "run the fused-vs-baseline step-throughput suite instead (writes BENCH_step.json)",
         )
-        .opt_default("step-out", "BENCH_step.json", "--step: output JSON path");
+        .opt_default("step-out", "BENCH_step.json", "--step: output JSON path")
+        .flag(
+            "overlap",
+            "run the overlap/topology suite instead (writes BENCH_overlap.json)",
+        )
+        .opt_default("overlap-out", "BENCH_overlap.json", "--overlap: output JSON path");
     let args = parse(cmd, rest)?;
     if args.flag("routing") {
         return cmd_bench_routing(&args);
@@ -321,6 +361,9 @@ fn cmd_bench(rest: &[String]) -> Result<()> {
     }
     if args.flag("step") {
         return cmd_bench_step(&args);
+    }
+    if args.flag("overlap") {
+        return cmd_bench_overlap(&args);
     }
     let samples: usize = args.get_or("steps", 12usize).map_err(anyhow::Error::msg)?;
     let provider = NativeProvider::new();
@@ -394,6 +437,30 @@ fn cmd_bench_step(args: &m6t::util::cli::Args) -> Result<()> {
     eprintln!(
         "[bench] xlarge-sim min speedup at D>=4: {:.2}x",
         step_bench::xlarge_min_speedup(&rows)
+    );
+    eprintln!("[bench] wrote {out_path}");
+    Ok(())
+}
+
+/// `m6t bench --overlap` — the link-level, overlap-aware cluster model
+/// over {base, large, xlarge-sim} x {top1, top2, 2top1} x D in {4, 8, 16}
+/// x {flat, hierarchical} topologies: serial vs overlapped cluster ms,
+/// overlap efficiency, and per-cell bottleneck-link concentration.
+/// Writes BENCH_overlap.json at the repo root by default; its
+/// `min_overlap_speedup` field is a CI regression gate (>= 1.0 is
+/// structural — below it the cost model broke).
+fn cmd_bench_overlap(args: &m6t::util::cli::Args) -> Result<()> {
+    use m6t::runtime::overlap_bench;
+    let steps: usize = args.get_or("steps", 12usize).map_err(anyhow::Error::msg)?;
+    let out_path = args.get("overlap-out").unwrap().to_string();
+    eprintln!("[bench] overlap/topology suite, {steps} steps per cell");
+    let rows = overlap_bench::run_suite(steps)?;
+    print!("{}", overlap_bench::render_table(&rows, steps).render());
+    overlap_bench::write_json(&rows, steps, &out_path)?;
+    eprintln!(
+        "[bench] min overlap speedup: {:.2}x, max bottleneck link share: {:.2}",
+        overlap_bench::min_overlap_speedup(&rows),
+        overlap_bench::max_bottleneck_link_share(&rows)
     );
     eprintln!("[bench] wrote {out_path}");
     Ok(())

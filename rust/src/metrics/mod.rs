@@ -65,8 +65,40 @@ impl RunLog {
     }
 
     /// Append-mode sink for resumed runs: prior recorded lines survive
-    /// and new steps continue the same JSONL series.
+    /// and new steps continue the same JSONL series. Callers that know
+    /// the resume step must use [`RunLog::with_sink_resume`] instead, or
+    /// re-running the overlap range double-logs it.
     pub fn with_sink_append(self, dir: impl AsRef<Path>) -> Result<Self> {
+        self.with_sink_opts(dir, true)
+    }
+
+    /// Append-mode sink for a run resuming at `resume_step`: on open, any
+    /// previously recorded line with `step >= resume_step` is dropped
+    /// (those steps are about to be re-executed and re-logged), so
+    /// resuming the same checkpoint twice cannot duplicate the
+    /// overlapping step range — the JSONL step column stays strictly
+    /// monotone. Lines that don't parse as records are preserved
+    /// untouched rather than destroyed.
+    pub fn with_sink_resume(self, dir: impl AsRef<Path>, resume_step: i64) -> Result<Self> {
+        let dir = dir.as_ref();
+        let path = dir.join(format!("{}.jsonl", self.name));
+        if path.exists() {
+            let text = fs::read_to_string(&path)
+                .with_context(|| format!("reading {path:?} for resume truncation"))?;
+            let mut kept = String::with_capacity(text.len());
+            for line in text.lines() {
+                let stale = crate::util::json::parse(line)
+                    .ok()
+                    .and_then(|v| v.get("step").and_then(|s| s.as_i64()))
+                    .is_some_and(|step| step >= resume_step);
+                if !stale {
+                    kept.push_str(line);
+                    kept.push('\n');
+                }
+            }
+            fs::write(&path, kept)
+                .with_context(|| format!("truncating {path:?} at step {resume_step}"))?;
+        }
         self.with_sink_opts(dir, true)
     }
 
@@ -116,7 +148,10 @@ impl RunLog {
                 fields.push(("workers", num(dsp.workers as f64)));
                 fields.push(("shard_cv", num(dsp.shard_load_cv)));
                 fields.push(("a2a_bytes", num(dsp.a2a_bytes_step)));
+                fields.push(("max_link_bytes", num(dsp.max_link_bytes)));
                 fields.push(("observed_ms", num(dsp.observed_ms)));
+                fields.push(("overlap_ms", num(dsp.observed_overlap_ms)));
+                fields.push(("overlap_eff", num(dsp.overlap_efficiency)));
                 fields.push((
                     "worker_dropped",
                     arr(dsp.per_worker_dropped.iter().map(|&x| num(x)).collect()),
@@ -329,6 +364,60 @@ mod tests {
         let _ = fs::remove_dir_all(dir);
     }
 
+    fn sink_steps(path: &Path) -> Vec<i64> {
+        fs::read_to_string(path)
+            .unwrap()
+            .lines()
+            .map(|l| {
+                crate::util::json::parse(l)
+                    .unwrap()
+                    .get("step")
+                    .and_then(|s| s.as_i64())
+                    .expect("record has a step")
+            })
+            .collect()
+    }
+
+    #[test]
+    fn resume_sink_drops_overlapping_steps() {
+        // satellite regression (found in PR 4 review): plain append on
+        // resume re-logged the overlapping step range, so resuming the
+        // same checkpoint twice produced a non-monotone step column
+        let dir = std::env::temp_dir().join("m6t-metrics-resume-test");
+        let _ = fs::remove_dir_all(&dir);
+        let mut log = RunLog::new("ck").with_sink(&dir).unwrap();
+        for i in 0..5 {
+            log.push(i, &stats(5.0 - i as f32 * 0.1, 1, 2), 1.0).unwrap();
+        }
+        let path = log.sink_path.clone().unwrap();
+        drop(log);
+
+        // "resume from a step-3 checkpoint" twice: both re-run steps 3..5
+        for _ in 0..2 {
+            let mut resumed = RunLog::new("ck").with_sink_resume(&dir, 3).unwrap();
+            for i in 3..5 {
+                resumed.push(i, &stats(4.0 - i as f32 * 0.1, 1, 2), 1.0).unwrap();
+            }
+            drop(resumed);
+            let steps = sink_steps(&path);
+            assert_eq!(steps, vec![0, 1, 2, 3, 4], "step column must stay monotone");
+        }
+
+        // resuming at a step past the end is a pure append
+        let mut tail = RunLog::new("ck").with_sink_resume(&dir, 5).unwrap();
+        tail.push(5, &stats(3.0, 1, 2), 1.0).unwrap();
+        drop(tail);
+        assert_eq!(sink_steps(&path), vec![0, 1, 2, 3, 4, 5]);
+
+        // resuming a run with no prior sink just creates the file
+        let mut fresh = RunLog::new("ck-none").with_sink_resume(&dir, 7).unwrap();
+        fresh.push(7, &stats(2.0, 1, 2), 1.0).unwrap();
+        let fresh_path = fresh.sink_path.clone().unwrap();
+        drop(fresh);
+        assert_eq!(sink_steps(&fresh_path), vec![7]);
+        let _ = fs::remove_dir_all(dir);
+    }
+
     #[test]
     fn dispatch_series_reach_the_sink() {
         let dir = std::env::temp_dir().join("m6t-metrics-dispatch-test");
@@ -346,7 +435,12 @@ mod tests {
             a2a_bytes_step: 4096.0,
             cross_fraction: 0.75,
             drop_fraction: 0.1,
+            max_link_bytes: 512.0,
+            bottleneck_src: 2,
+            bottleneck_dst: 0,
             observed_ms: 123.0,
+            observed_overlap_ms: 100.0,
+            overlap_efficiency: 0.8,
         });
         let mut log = RunLog::new("dsp").with_sink(&dir).unwrap();
         log.push(0, &s, 1.0).unwrap();
@@ -358,6 +452,9 @@ mod tests {
             "\"workers\":4",
             "\"shard_cv\":0.25",
             "\"observed_ms\":123",
+            "\"overlap_ms\":100",
+            "\"overlap_eff\":0.8",
+            "\"max_link_bytes\":512",
             "\"worker_dropped\"",
             "\"shard_recv\"",
         ];

@@ -178,18 +178,27 @@ impl DispatchPlan {
     /// locally hosted experts never touch the network. The combine
     /// direction is the transpose (same totals).
     pub fn bytes_matrix(&self) -> Vec<u64> {
+        let mut bytes = vec![0u64; self.workers * self.workers];
+        self.add_bytes_matrix_into(&mut bytes);
+        bytes
+    }
+
+    /// Accumulate this layer's [`DispatchPlan::bytes_matrix`] into a
+    /// caller-owned D x D buffer — the allocation-free form the sharded
+    /// hot loop and the link-level cost model (`cluster::topology`) use,
+    /// both per layer (zeroed buffer) and summed over a step's plans.
+    pub fn add_bytes_matrix_into(&self, out: &mut [u64]) {
         let d = self.workers;
+        assert_eq!(out.len(), d * d, "link-byte buffer must be D x D");
         let per_token = token_bytes(self.hidden);
-        let mut bytes = vec![0u64; d * d];
         for w in 0..d {
             for e in 0..self.num_experts {
                 let v = self.shard_of(e);
                 if v != w {
-                    bytes[w * d + v] += self.send[w * self.num_experts + e] as u64 * per_token;
+                    out[w * d + v] += self.send[w * self.num_experts + e] as u64 * per_token;
                 }
             }
         }
-        bytes
     }
 
     /// Measured all-to-all payload, one direction, this layer.
@@ -237,10 +246,26 @@ pub struct DispatchSummary {
     pub cross_fraction: f64,
     /// dropped / demanded tokens over the whole step
     pub drop_fraction: f64,
+    /// bytes on the most-loaded (source, destination) link, summed over
+    /// the step's layers, one direction — the link-level bottleneck the
+    /// aggregate byte count cannot see
+    pub max_link_bytes: f64,
+    /// source worker of the most-loaded link (0 when nothing crossed)
+    pub bottleneck_src: usize,
+    /// destination shard of the most-loaded link
+    pub bottleneck_dst: usize,
     /// cluster-model step time over the observed traffic
     /// ([`cluster::simulate_step_observed`](crate::cluster::simulate_step_observed));
     /// 0 until the driver fills it in
     pub observed_ms: f64,
+    /// overlap-aware cluster step time (per-link bottleneck comm
+    /// pipelined against expert compute,
+    /// [`cluster::simulate_step_overlapped`](crate::cluster::simulate_step_overlapped));
+    /// never exceeds `observed_ms`; 0 until the driver fills it in
+    pub observed_overlap_ms: f64,
+    /// fraction of link-model comm hidden behind compute, in [0, 1];
+    /// 0 until the driver fills it in
+    pub overlap_efficiency: f64,
 }
 
 impl DispatchSummary {
@@ -258,6 +283,7 @@ impl DispatchSummary {
         let mut kept = 0u64;
         let mut dropped = 0u64;
         let mut balance_sum = 0.0f64;
+        let mut link_bytes = vec![0u64; workers * workers];
         for p in plans {
             assert_eq!(p.workers, workers, "mixed worker counts in one summary");
             let layer_recv = p.recv_per_shard();
@@ -281,9 +307,24 @@ impl DispatchSummary {
             bytes_one_direction += p.dispatch_bytes();
             kept += p.kept_total();
             dropped += p.dropped_total();
+            p.add_bytes_matrix_into(&mut link_bytes);
         }
         let recv_f: Vec<f64> = per_shard_recv.iter().map(|&x| x as f64).collect();
         let shard_balance = balance_sum / layers as f64;
+        // the most-loaded ordered link over the whole step (one direction)
+        let mut max_link_bytes = 0u64;
+        let mut bottleneck_src = 0usize;
+        let mut bottleneck_dst = 0usize;
+        for w in 0..workers {
+            for v in 0..workers {
+                let b = link_bytes[w * workers + v];
+                if b > max_link_bytes {
+                    max_link_bytes = b;
+                    bottleneck_src = w;
+                    bottleneck_dst = v;
+                }
+            }
+        }
         DispatchSummary {
             workers,
             layers,
@@ -296,7 +337,38 @@ impl DispatchSummary {
             a2a_bytes_step: bytes_one_direction as f64 * 4.0,
             cross_fraction: cross as f64 / (kept as f64).max(1.0),
             drop_fraction: dropped as f64 / ((kept + dropped) as f64).max(1.0),
+            max_link_bytes: max_link_bytes as f64,
+            bottleneck_src,
+            bottleneck_dst,
             observed_ms: 0.0,
+            observed_overlap_ms: 0.0,
+            overlap_efficiency: 0.0,
+        }
+    }
+
+    /// Share of the step's cross-worker bytes carried by the single
+    /// most-loaded link — 0 when nothing crossed. The bench's
+    /// `bottleneck_link_share` field: at 1.0 one link is the whole story,
+    /// at ~1/(D·(D-1)) the exchange is perfectly spread.
+    pub fn bottleneck_link_share(&self) -> f64 {
+        // clamp: reconstructing the total from the per-layer mean can
+        // land an ULP below the true sum when L is not a power of two
+        let total = self.a2a_bytes_per_layer * self.layers as f64;
+        if total > 0.0 {
+            (self.max_link_bytes / total).clamp(0.0, 1.0)
+        } else {
+            0.0
+        }
+    }
+
+    /// Serial / overlapped cluster step time (>= 1.0 once the driver has
+    /// filled both fields) — the one shared definition behind the CLI
+    /// report and the overlap bench's per-row regression field.
+    pub fn overlap_speedup(&self) -> f64 {
+        if self.observed_overlap_ms > 0.0 {
+            self.observed_ms / self.observed_overlap_ms
+        } else {
+            1.0
         }
     }
 }
@@ -399,6 +471,27 @@ mod tests {
         assert!((0.0..=1.0).contains(&s.drop_fraction));
         let recv_sum: f64 = s.per_shard_recv.iter().sum();
         assert_eq!(recv_sum, (l0.kept_total() + l1.kept_total()) as f64);
+        // the bottleneck link is the max cell of the layer-summed matrix
+        let d = s.workers;
+        let mut summed = l0.bytes_matrix();
+        for (acc, x) in summed.iter_mut().zip(l1.bytes_matrix()) {
+            *acc += x;
+        }
+        let max = summed.iter().copied().max().unwrap();
+        assert_eq!(s.max_link_bytes, max as f64);
+        assert_eq!(summed[s.bottleneck_src * d + s.bottleneck_dst], max);
+        assert!((0.0..=1.0).contains(&s.bottleneck_link_share()));
+        assert!(s.max_link_bytes <= bytes, "one link cannot carry more than the total");
+    }
+
+    #[test]
+    fn single_worker_summary_has_no_bottleneck_link() {
+        let routes = worker_routes(1, 64, 8, Routing::TopK(2), 20, 9);
+        let plan = DispatchPlan::from_worker_routes(8, 20, 32, &routes);
+        let s = DispatchSummary::from_plans(&[plan]);
+        assert_eq!(s.max_link_bytes, 0.0);
+        assert_eq!(s.bottleneck_link_share(), 0.0);
+        assert_eq!((s.bottleneck_src, s.bottleneck_dst), (0, 0));
     }
 
     #[test]

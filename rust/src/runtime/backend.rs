@@ -32,9 +32,11 @@ pub struct StepStats {
     /// (0 when the backend measures real hardware instead of modelling it)
     pub sim_step_ms: f64,
     /// expert-parallel dispatch accounting for this step — per-worker /
-    /// per-shard series plus measured all-to-all bytes. `None` on
-    /// single-router backends; filled by the sharded runtime
-    /// ([`ShardedRun`](super::shard::ShardedRun)).
+    /// per-shard series, measured all-to-all bytes, the bottleneck link
+    /// (max per-link bytes), and the serial-vs-overlapped cluster
+    /// predictions from the link-level topology model
+    /// (`cluster::topology`). `None` on single-router backends; filled
+    /// by the sharded runtime ([`ShardedRun`](super::shard::ShardedRun)).
     pub dispatch: Option<DispatchSummary>,
 }
 

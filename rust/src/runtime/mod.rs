@@ -15,6 +15,7 @@ pub mod dispatch_bench;
 pub mod engine;
 pub mod manifest;
 pub mod native;
+pub mod overlap_bench;
 pub mod shard;
 pub mod step_bench;
 

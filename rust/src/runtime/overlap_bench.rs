@@ -1,0 +1,329 @@
+//! Overlap/topology bench: the link-level, overlap-aware cluster model
+//! (`cluster::topology`) swept over {base, large, xlarge-sim geometries}
+//! x {top1, top2, 2top1} x D in {4, 8, 16} x {flat, hierarchical}
+//! topologies.
+//!
+//! Shared by `m6t bench --overlap` (and the CI smoke + regression gate);
+//! writes the tracked trajectory `BENCH_overlap.json`. Each cell runs a
+//! few [`ShardedRun`] steps and records the serial-vs-overlapped cluster
+//! step time, the overlap efficiency (fraction of link-model comm hidden
+//! behind compute), and the bottleneck link (which worker pair carries
+//! the exchange). Every cell also re-derives the serial number through
+//! [`simulate_step_observed`] and insists on bitwise equality — the
+//! `--no-overlap` baseline can never silently drift from the pre-overlap
+//! model.
+//!
+//! The two top-level regression fields:
+//!  * `min_overlap_speedup` — minimum serial/overlapped ratio over every
+//!    cell; the model guarantees >= 1.0 (the serial schedule is always
+//!    admissible), so a value below 1.0 means the cost model broke;
+//!  * `max_bottleneck_link_share` — how concentrated the worst cell's
+//!    exchange is on a single link (1.0 = one link is the whole story).
+
+use anyhow::{ensure, Context as _, Result};
+
+use crate::cluster::{simulate_step_observed, table2_hardware, ObservedTraffic};
+use crate::config::{CapacityMode, ModelConfig, Routing};
+use crate::metrics::RunLog;
+use crate::runtime::native::registry;
+use crate::runtime::shard::ShardedRun;
+use crate::util::json::{arr, num, obj, s, write as json_write, Value};
+use crate::util::table::{f2, Table};
+
+/// The benched geometries: the sim-scale E = 16 / 32 / 64 twins.
+const GEOMETRIES: [&str; 3] = ["base-sim", "large-sim", "xlarge-sim"];
+
+/// Workers per node in the hierarchical cells (the flat cells use 1).
+pub const HIER_WORKERS_PER_NODE: usize = 4;
+
+fn geometry(name: &str) -> ModelConfig {
+    registry().into_iter().find(|c| c.name == name).expect("registry geometry")
+}
+
+/// The benched strategies: the paper's three headline routing regimes.
+fn strategies() -> Vec<(Routing, CapacityMode)> {
+    vec![
+        (Routing::TopK(1), CapacityMode::TimesK),
+        (Routing::TopK(2), CapacityMode::Times1),
+        (Routing::Prototype(2), CapacityMode::Times1),
+    ]
+}
+
+/// The benched grid: 3 geometries x 3 strategies x D in {4, 8, 16} x
+/// {flat, hierarchical} — 54 cells.
+pub fn cases() -> Vec<(ModelConfig, usize, usize)> {
+    let mut out = Vec::new();
+    for geo in GEOMETRIES {
+        let model = geometry(geo);
+        for (routing, mode) in strategies() {
+            for workers in [4usize, 8, 16] {
+                for wpn in [1usize, HIER_WORKERS_PER_NODE] {
+                    let mut cfg = model.clone();
+                    cfg.name = format!("{geo}-{}", routing.name());
+                    cfg.routing = routing;
+                    cfg.capacity_mode = mode;
+                    out.push((cfg, workers, wpn));
+                }
+            }
+        }
+    }
+    out
+}
+
+/// One measured (geometry, strategy, D, topology) cell.
+#[derive(Debug, Clone)]
+pub struct OverlapBenchRow {
+    pub model: String,
+    pub strategy: String,
+    pub workers: usize,
+    pub topology: String,
+    pub workers_per_node: usize,
+    pub tokens_per_worker: usize,
+    /// measured all-to-all MB per step (all 4 directions)
+    pub a2a_mb_step: f64,
+    /// bytes on the most-loaded link / total cross bytes (one direction)
+    pub bottleneck_link_share: f64,
+    pub bottleneck_src: usize,
+    pub bottleneck_dst: usize,
+    /// pre-overlap serial observed cluster ms (the `--no-overlap` oracle)
+    pub serial_ms: f64,
+    /// link-level pipelined cluster ms
+    pub overlapped_ms: f64,
+    /// fraction of link-model comm hidden behind compute
+    pub overlap_efficiency: f64,
+    /// median measured host ms per sharded step
+    pub host_ms: f64,
+}
+
+impl OverlapBenchRow {
+    /// Serial / overlapped (>= 1.0 by construction) over the row's
+    /// recorded fields — the per-row regression field the CI gate floors
+    /// at 1.0. Same convention as
+    /// [`DispatchSummary::overlap_speedup`](crate::moe::DispatchSummary::overlap_speedup),
+    /// which the live summary carries.
+    pub fn overlap_speedup(&self) -> f64 {
+        if self.overlapped_ms > 0.0 {
+            self.serial_ms / self.overlapped_ms
+        } else {
+            1.0
+        }
+    }
+}
+
+/// Run the full grid, `steps` measured sharded steps per cell.
+pub fn run_suite(steps: usize) -> Result<Vec<OverlapBenchRow>> {
+    let steps = steps.max(1);
+    let hw = table2_hardware();
+    let mut rows = Vec::new();
+    for (cfg, workers, wpn) in cases() {
+        let mut run = ShardedRun::new(&cfg, workers)?;
+        run.set_workers_per_node(wpn);
+        let topo = run.topology();
+        let mut log = RunLog::new(format!("{}-d{workers}-{}", cfg.name, topo.name()));
+        // one extra leading step carries the cold allocations, matching
+        // the other bench harnesses' warmup discard
+        run.train(steps as i64 + 1, 42, &mut log, false)?;
+        let mut ms: Vec<f64> = log.records.iter().skip(1).map(|r| r.ms_per_step).collect();
+        ms.sort_by(f64::total_cmp);
+        let host_ms = ms[ms.len() / 2];
+        let last = log.last().expect("at least one recorded step");
+        let dsp = last.dispatch.as_ref().expect("sharded records carry dispatch");
+
+        // the serial baseline must BE the pre-overlap observed model
+        // (the run's own config carries workers = D, which the simulator
+        // reads for the latency hop count)
+        let run_cfg = run.info().config.clone();
+        let oracle = simulate_step_observed(
+            &run_cfg,
+            cfg.routing,
+            cfg.capacity_mode,
+            &hw,
+            &ObservedTraffic {
+                a2a_bytes_per_layer: dsp.a2a_bytes_per_layer,
+                shard_balance: dsp.shard_balance,
+            },
+        )
+        .total_ms();
+        ensure!(
+            dsp.observed_ms.to_bits() == oracle.to_bits(),
+            "{} D={workers} {}: serial baseline drifted from simulate_step_observed",
+            cfg.name,
+            topo.name()
+        );
+        ensure!(
+            dsp.observed_overlap_ms <= dsp.observed_ms,
+            "{} D={workers} {}: overlap made the step slower",
+            cfg.name,
+            topo.name()
+        );
+
+        let row = OverlapBenchRow {
+            model: cfg.name.clone(),
+            strategy: cfg.routing.name(),
+            workers,
+            topology: topo.name(),
+            workers_per_node: wpn,
+            tokens_per_worker: cfg.tokens_per_batch(),
+            a2a_mb_step: dsp.a2a_bytes_step / 1e6,
+            bottleneck_link_share: dsp.bottleneck_link_share(),
+            bottleneck_src: dsp.bottleneck_src,
+            bottleneck_dst: dsp.bottleneck_dst,
+            serial_ms: dsp.observed_ms,
+            overlapped_ms: dsp.observed_overlap_ms,
+            overlap_efficiency: dsp.overlap_efficiency,
+            host_ms,
+        };
+        eprintln!(
+            "[bench] {} D={} {}: serial {:.1} ms -> overlapped {:.1} ms ({:.2}x, eff {:.2}), link share {:.2}",
+            row.model,
+            row.workers,
+            row.topology,
+            row.serial_ms,
+            row.overlapped_ms,
+            row.overlap_speedup(),
+            row.overlap_efficiency,
+            row.bottleneck_link_share
+        );
+        rows.push(row);
+    }
+    Ok(rows)
+}
+
+/// Minimum overlap speedup over every cell — the CI gate's floor (1.0 is
+/// structural; below it the cost model broke). 0 when there are no rows,
+/// so an empty JSON fails the gate instead of passing it.
+pub fn min_overlap_speedup(rows: &[OverlapBenchRow]) -> f64 {
+    let min = rows.iter().map(OverlapBenchRow::overlap_speedup).fold(f64::INFINITY, f64::min);
+    if min.is_finite() {
+        min
+    } else {
+        0.0
+    }
+}
+
+/// Worst-cell bottleneck concentration.
+pub fn max_bottleneck_link_share(rows: &[OverlapBenchRow]) -> f64 {
+    rows.iter().map(|r| r.bottleneck_link_share).fold(0.0f64, f64::max)
+}
+
+/// Human-readable table over the suite.
+pub fn render_table(rows: &[OverlapBenchRow], steps: usize) -> Table {
+    let mut t = Table::new(
+        format!("overlap-aware link model vs serial aggregate, {steps} steps/cell"),
+        &[
+            "model",
+            "D",
+            "topo",
+            "a2a MB/step",
+            "link share",
+            "serial ms",
+            "overlap ms",
+            "speedup",
+            "eff",
+        ],
+    );
+    for r in rows {
+        t.row(vec![
+            r.model.clone(),
+            r.workers.to_string(),
+            r.topology.clone(),
+            f2(r.a2a_mb_step),
+            f2(r.bottleneck_link_share),
+            f2(r.serial_ms),
+            f2(r.overlapped_ms),
+            format!("{}x", f2(r.overlap_speedup())),
+            f2(r.overlap_efficiency),
+        ]);
+    }
+    t
+}
+
+/// Serialize the suite to the tracked trajectory JSON.
+pub fn to_json(rows: &[OverlapBenchRow], steps: usize) -> Value {
+    let items: Vec<Value> = rows
+        .iter()
+        .map(|r| {
+            obj(vec![
+                ("model", s(r.model.clone())),
+                ("strategy", s(r.strategy.clone())),
+                ("workers", num(r.workers as f64)),
+                ("topology", s(r.topology.clone())),
+                ("workers_per_node", num(r.workers_per_node as f64)),
+                ("tokens_per_worker", num(r.tokens_per_worker as f64)),
+                ("a2a_mb_per_step", num(r.a2a_mb_step)),
+                ("bottleneck_link_share", num(r.bottleneck_link_share)),
+                ("bottleneck_src", num(r.bottleneck_src as f64)),
+                ("bottleneck_dst", num(r.bottleneck_dst as f64)),
+                ("serial_ms", num(r.serial_ms)),
+                ("overlapped_ms", num(r.overlapped_ms)),
+                ("overlap_speedup", num(r.overlap_speedup())),
+                ("overlap_efficiency", num(r.overlap_efficiency)),
+                ("host_ms_per_step", num(r.host_ms)),
+            ])
+        })
+        .collect();
+    obj(vec![
+        ("bench", s("overlap")),
+        ("steps_per_cell", num(steps as f64)),
+        ("min_overlap_speedup", num(min_overlap_speedup(rows))),
+        ("max_bottleneck_link_share", num(max_bottleneck_link_share(rows))),
+        ("rows", arr(items)),
+    ])
+}
+
+/// Write `BENCH_overlap.json` (or wherever `path` points).
+pub fn write_json(rows: &[OverlapBenchRow], steps: usize, path: &str) -> Result<()> {
+    let text = json_write(&to_json(rows, steps)) + "\n";
+    std::fs::write(path, text).with_context(|| format!("writing {path}"))?;
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn grid_covers_the_issue_matrix() {
+        let cs = cases();
+        assert_eq!(cs.len(), 54, "3 geometries x 3 strategies x 3 D x 2 topologies");
+        for (cfg, workers, wpn) in &cs {
+            assert_eq!(cfg.num_experts % workers, 0, "{}: unshardable at D={workers}", cfg.name);
+            assert!(*wpn == 1 || *wpn == HIER_WORKERS_PER_NODE);
+        }
+        assert!(cs.iter().any(|(c, d, w)| c.name == "xlarge-sim-2top1" && *d == 16 && *w == 4));
+        assert!(cs.iter().any(|(c, d, w)| c.name == "base-sim-top1" && *d == 4 && *w == 1));
+    }
+
+    #[test]
+    fn json_shape_is_stable() {
+        let rows = vec![OverlapBenchRow {
+            model: "xlarge-sim-top1".into(),
+            strategy: "top1".into(),
+            workers: 8,
+            topology: "nodes4".into(),
+            workers_per_node: 4,
+            tokens_per_worker: 512,
+            a2a_mb_step: 3.5,
+            bottleneck_link_share: 0.25,
+            bottleneck_src: 2,
+            bottleneck_dst: 5,
+            serial_ms: 200.0,
+            overlapped_ms: 160.0,
+            overlap_efficiency: 0.9,
+            host_ms: 1.5,
+        }];
+        let v = to_json(&rows, 4);
+        assert_eq!(v.get("bench").and_then(|b| b.as_str()), Some("overlap"));
+        assert_eq!(v.get("min_overlap_speedup").and_then(|x| x.as_f64()), Some(1.25));
+        assert_eq!(v.get("max_bottleneck_link_share").and_then(|x| x.as_f64()), Some(0.25));
+        let items = v.get("rows").and_then(|r| r.as_array()).unwrap();
+        assert_eq!(items[0].get("overlap_speedup").and_then(|x| x.as_f64()), Some(1.25));
+        assert_eq!(items[0].get("topology").and_then(|x| x.as_str()), Some("nodes4"));
+    }
+
+    #[test]
+    fn empty_suite_fails_the_gate() {
+        assert_eq!(min_overlap_speedup(&[]), 0.0);
+        assert_eq!(max_bottleneck_link_share(&[]), 0.0);
+    }
+}

@@ -39,7 +39,11 @@ use super::native::{
     batch_hash, fill_gates, hash_f32s, law_from_leaf, route_grid_counts, NativeBackend,
     LAYER_SEED_MIX, NOISE_SEED_MIX, STEP_SEED_MIX,
 };
-use crate::cluster::{simulate_step_observed, table2_hardware, HardwareModel, ObservedTraffic};
+use crate::cluster::topology::layer_bottleneck_seconds;
+use crate::cluster::{
+    simulate_step_observed, simulate_step_overlapped, table2_hardware, HardwareModel,
+    ObservedTraffic, Topology,
+};
 use crate::config::ModelConfig;
 use crate::data::{Batch, Batcher, Split};
 use crate::metrics::RunLog;
@@ -91,6 +95,10 @@ struct ShardScratch {
     /// D x L dropped-selection counts
     wl_dropped: Vec<u32>,
     cv_row: Vec<f64>,
+    /// D x D per-layer link-byte accumulator for the topology cost model
+    link_layer: Vec<u64>,
+    /// per-layer one-direction link-bottleneck comm, ms
+    layer_comm_ms: Vec<f64>,
     /// recycled `DispatchPlan`s: [`ShardedRun::step`] returns each step's
     /// plans here so the next step reuses their send/demand vectors
     plan_pool: Vec<DispatchPlan>,
@@ -103,6 +111,9 @@ pub struct ShardedRun {
     workers: usize,
     pool: Option<Arc<WorkerPool>>,
     hw: HardwareModel,
+    /// workers-per-node grouping for the link-level comm model; defaults
+    /// to the hardware model's grouping (flat on the paper's testbed)
+    topology: Topology,
     scratch: Mutex<ShardScratch>,
 }
 
@@ -140,11 +151,14 @@ impl ShardedRun {
             Some(p) => RoutingEngine::with_pool(Arc::clone(p)),
             None => RoutingEngine::new(),
         };
+        let hw = table2_hardware();
+        let topology = Topology::new(workers, hw.workers_per_node);
         Ok(Self {
             native,
             workers,
             pool,
-            hw: table2_hardware(),
+            hw,
+            topology,
             scratch: Mutex::new(ShardScratch { engine, ..ShardScratch::default() }),
         })
     }
@@ -155,6 +169,21 @@ impl ShardedRun {
 
     pub fn workers(&self) -> usize {
         self.workers
+    }
+
+    /// The workers-per-node grouping the link-level comm model prices
+    /// this run's all-to-all against.
+    pub fn topology(&self) -> Topology {
+        self.topology
+    }
+
+    /// Regroup the workers `wpn` per node (1 = flat). Only the comm cost
+    /// model changes — routing, dispatch accounting, and every StepStats
+    /// series are topology-independent. The hardware model's grouping
+    /// field is kept in lockstep so the two never disagree.
+    pub fn set_workers_per_node(&mut self, wpn: usize) {
+        self.hw.workers_per_node = wpn.max(1);
+        self.topology = Topology::new(self.workers, self.hw.workers_per_node);
     }
 
     /// Analytic (pre-observation) cluster prediction for one step at this
@@ -373,7 +402,20 @@ impl ShardedRun {
             }
             plans.push(DispatchPlan::new(d, experts, capacity, cfg.hidden, send, demand));
         }
-        drop(guard);
+        // per-layer link-bottleneck comm for the overlap model: each
+        // layer's byte matrix priced on its own (every layer synchronizes
+        // at its own all-to-all, so layer matrices are never summed here)
+        if scratch.link_layer.len() < d * d {
+            scratch.link_layer.resize(d * d, 0);
+        }
+        scratch.layer_comm_ms.clear();
+        for plan in &plans {
+            let link = &mut scratch.link_layer[..d * d];
+            link.fill(0);
+            plan.add_bytes_matrix_into(link);
+            let ms = layer_bottleneck_seconds(link, &self.topology, &self.hw) * 1e3;
+            scratch.layer_comm_ms.push(ms);
+        }
         let mut summary = DispatchSummary::from_plans(&plans);
         let observed = ObservedTraffic {
             a2a_bytes_per_layer: summary.a2a_bytes_per_layer,
@@ -382,6 +424,17 @@ impl ShardedRun {
         summary.observed_ms =
             simulate_step_observed(cfg, cfg.routing, cfg.capacity_mode, &self.hw, &observed)
                 .total_ms();
+        let overlap = simulate_step_overlapped(
+            cfg,
+            cfg.routing,
+            cfg.capacity_mode,
+            &self.hw,
+            &observed,
+            &scratch.layer_comm_ms,
+        );
+        summary.observed_overlap_ms = overlap.overlapped_ms;
+        summary.overlap_efficiency = overlap.overlap_efficiency;
+        drop(guard);
 
         let stats = StepStats {
             loss: loss as f32,
@@ -561,5 +614,38 @@ mod tests {
         let recv_total: f64 = summary.per_shard_recv.iter().sum();
         assert_eq!(stats_total, recv_total);
         assert!(summary.observed_ms > 0.0);
+        // the overlap model is filled in and can only help
+        assert!(summary.observed_overlap_ms > 0.0);
+        assert!(summary.observed_overlap_ms <= summary.observed_ms);
+        assert!(summary.overlap_speedup() >= 1.0);
+        assert!((0.0..=1.0).contains(&summary.overlap_efficiency));
+        assert!((0.0..=1.0).contains(&summary.bottleneck_link_share()));
+    }
+
+    #[test]
+    fn topology_changes_comm_model_only() {
+        let cfg = sim_cfg("large-sim");
+        let d = 8;
+        let step_once = |wpn: usize| {
+            let mut run = ShardedRun::new(&cfg, d).unwrap();
+            run.set_workers_per_node(wpn);
+            let state = run.init_state(13).unwrap();
+            let mut batcher = Batcher::for_config(&cfg, Split::Train, 13);
+            let batches: Vec<Batch> = (0..d).map(|_| batcher.next_batch()).collect();
+            let (_, stats) = run.step(state, &batches).unwrap();
+            stats
+        };
+        let flat = step_once(1);
+        let hier = step_once(4);
+        // routing and dispatch accounting are topology-independent
+        assert_eq!(flat.loss.to_bits(), hier.loss.to_bits());
+        let (df, dh) =
+            (flat.dispatch.as_ref().unwrap(), hier.dispatch.as_ref().unwrap());
+        assert_eq!(df.a2a_bytes_step, dh.a2a_bytes_step);
+        assert_eq!(df.max_link_bytes, dh.max_link_bytes);
+        // the serial observed model never saw the topology either
+        assert_eq!(df.observed_ms.to_bits(), dh.observed_ms.to_bits());
+        // faster intra-node links can only shrink the overlapped time
+        assert!(dh.observed_overlap_ms <= df.observed_overlap_ms);
     }
 }

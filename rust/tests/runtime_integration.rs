@@ -154,6 +154,64 @@ fn check_checkpoint_roundtrip(provider: &NativeProvider) {
     let _ = std::fs::remove_file(path);
 }
 
+/// Resume idempotency (found in PR 4 review): resuming the *same*
+/// checkpoint twice must not double-log the overlapping step range — the
+/// metrics JSONL step column stays strictly monotone because the
+/// append-open drops records the resumed run is about to re-execute.
+#[test]
+fn resuming_the_same_checkpoint_twice_keeps_the_step_column_monotone() {
+    let provider = NativeProvider::new();
+    let dir = std::env::temp_dir().join("m6t-resume-idempotency-test");
+    let _ = std::fs::remove_dir_all(&dir);
+    let metrics_dir = dir.join("metrics").to_string_lossy().into_owned();
+    let opts = TrainOptions {
+        steps: 4,
+        seed: 42,
+        verbose: false,
+        metrics_dir: Some(metrics_dir.clone()),
+        ..Default::default()
+    };
+    let trainer = Trainer::new(provider.load("base-sim").unwrap(), opts);
+    let (_, state) = trainer.train().unwrap();
+    let ck = trainer.snapshot(&state).unwrap();
+    let ck_path = dir.join("ck.bin");
+    ck.save(&ck_path).unwrap();
+
+    let sink = std::path::Path::new(&metrics_dir).join("base-sim.jsonl");
+    let steps_in = |path: &std::path::Path| -> Vec<i64> {
+        std::fs::read_to_string(path)
+            .unwrap()
+            .lines()
+            .map(|l| {
+                m6t::util::json::parse(l)
+                    .unwrap()
+                    .get("step")
+                    .and_then(|s| s.as_i64())
+                    .expect("record has a step")
+            })
+            .collect()
+    };
+    assert_eq!(steps_in(&sink), vec![0, 1, 2, 3]);
+
+    // resume the SAME checkpoint twice; each resume re-runs steps 4..6
+    for round in 0..2 {
+        let loaded = Checkpoint::load(&ck_path).unwrap();
+        let resumed = trainer.restore(&loaded).unwrap();
+        trainer.train_from(resumed).unwrap();
+        let steps = steps_in(&sink);
+        assert_eq!(
+            steps,
+            vec![0, 1, 2, 3, 4, 5, 6, 7],
+            "resume round {round}: overlapping range double-logged"
+        );
+        let mut sorted = steps.clone();
+        sorted.sort();
+        sorted.dedup();
+        assert_eq!(sorted, steps, "resume round {round}: step column not monotone");
+    }
+    let _ = std::fs::remove_dir_all(dir);
+}
+
 /// Fig 1's finding: the aux loss buys balance (lower c_v), not quality.
 #[test]
 fn aux_loss_balances_but_does_not_win() {

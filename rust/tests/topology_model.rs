@@ -1,0 +1,224 @@
+//! Invariants of the link-level, overlap-aware all-to-all model
+//! (`cluster::topology`):
+//!
+//! * the plan's per-link byte matrix conserves the aggregate a2a byte
+//!   count (rows, columns, and the summary's bottleneck link all agree);
+//! * the flat-topology per-link bottleneck never exceeds the serial
+//!   aggregate model, which serializes every link's bytes through a
+//!   single NIC — so the refined model can only *reduce* the priced
+//!   exchange, never inflate it past the pre-PR oracle;
+//! * a hierarchical grouping (faster intra-node links) never prices the
+//!   exchange above flat;
+//! * D = 1 has zero links and zero comm time;
+//! * the `--no-overlap` serial baseline is bitwise the pre-overlap
+//!   `simulate_step_observed` output, and the overlapped time never
+//!   exceeds it (`overlap_speedup >= 1.0` is structural).
+
+use m6t::cluster::topology::layer_bottleneck_seconds;
+use m6t::cluster::{
+    simulate_step_observed, table2_hardware, HardwareModel, ObservedTraffic, Topology,
+};
+use m6t::config::Routing;
+use m6t::data::{Batch, Batcher, Split};
+use m6t::moe::dispatch::{DispatchPlan, DispatchSummary};
+use m6t::moe::{route, RouterSpec};
+use m6t::runtime::native::registry;
+use m6t::runtime::ShardedRun;
+use m6t::testing::{check, gen};
+use m6t::util::rng::Rng;
+
+/// Random multi-worker plan over random routed gates.
+fn random_plan(rng: &mut Rng, b: m6t::testing::Bounds) -> DispatchPlan {
+    let (tokens, experts, capacity) = gen::routing_shape(rng, b);
+    let divisors: Vec<usize> =
+        [1usize, 2, 4, 8].into_iter().filter(|d| experts % d == 0).collect();
+    let workers = divisors[gen::usize_in(rng, 0, divisors.len() - 1)];
+    let k = 1 + gen::usize_in(rng, 0, 3) as u32;
+    let routing = if rng.below(2) == 0 { Routing::TopK(k) } else { Routing::Prototype(1) };
+    let spec = RouterSpec { routing, num_experts: experts, capacity };
+    let routes: Vec<_> = (0..workers)
+        .map(|w| {
+            let mut wrng = Rng::new(rng.next_u64() ^ (w as u64));
+            let gates = gen::gates(&mut wrng, tokens, experts);
+            route(&gates, tokens, &spec)
+        })
+        .collect();
+    let hidden = 8 + gen::usize_in(rng, 0, 64);
+    DispatchPlan::from_worker_routes(experts, capacity, hidden, &routes)
+}
+
+#[test]
+fn prop_per_link_bytes_sum_to_aggregate() {
+    check("topology-link-conservation", 60, |rng, b| {
+        let plan = random_plan(rng, b);
+        let d = plan.workers;
+        let m = plan.bytes_matrix();
+        let sum: u64 = m.iter().sum();
+        if sum != plan.dispatch_bytes() {
+            return Err(format!(
+                "link bytes {sum} != aggregate a2a bytes {}",
+                plan.dispatch_bytes()
+            ));
+        }
+        // the summary's bottleneck link is the max cell and never more
+        // than the total
+        let s = DispatchSummary::from_plans(&[plan.clone()]);
+        let max = m.iter().copied().max().unwrap_or(0);
+        if s.max_link_bytes != max as f64 {
+            return Err(format!("summary max link {} != matrix max {max}", s.max_link_bytes));
+        }
+        if max > sum {
+            return Err("one link carries more than the total".into());
+        }
+        if max > 0 && m[s.bottleneck_src * d + s.bottleneck_dst] != max {
+            return Err("bottleneck coordinates do not point at the max link".into());
+        }
+        let share = s.bottleneck_link_share();
+        if !(0.0..=1.0).contains(&share) {
+            return Err(format!("bottleneck share {share} out of range"));
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_flat_bottleneck_never_exceeds_serial_aggregate() {
+    // the pre-PR serial model pushes the layer's ENTIRE cross-worker
+    // byte volume through one NIC; draining every worker's queues
+    // concurrently can only be faster (and the hop-latency charge is
+    // identical), so the refined model never beats the oracle *upward*
+    check("topology-flat-vs-aggregate", 60, |rng, b| {
+        let plan = random_plan(rng, b);
+        let d = plan.workers;
+        let hw = table2_hardware();
+        let topo = Topology::flat(d);
+        let got = layer_bottleneck_seconds(&plan.bytes_matrix(), &topo, &hw);
+        let serial = plan.dispatch_bytes() as f64 / hw.net_bw
+            + hw.a2a_latency * (d as f64 - 1.0).max(0.0);
+        if got > serial + 1e-15 {
+            return Err(format!(
+                "flat bottleneck {got} exceeds serial aggregate {serial} at D={d}"
+            ));
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_hierarchy_never_slower_than_flat() {
+    check("topology-hier-vs-flat", 40, |rng, b| {
+        let plan = random_plan(rng, b);
+        let d = plan.workers;
+        let hw = table2_hardware();
+        let m = plan.bytes_matrix();
+        let flat = layer_bottleneck_seconds(&m, &Topology::flat(d), &hw);
+        for wpn in [2usize, 4] {
+            let hier = layer_bottleneck_seconds(&m, &Topology::hierarchical(d, wpn), &hw);
+            if hier > flat + 1e-15 {
+                return Err(format!(
+                    "nodes{wpn} bottleneck {hier} above flat {flat} at D={d}"
+                ));
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn single_worker_has_zero_comm_everywhere() {
+    let hw = table2_hardware();
+    assert_eq!(layer_bottleneck_seconds(&[0], &Topology::flat(1), &hw), 0.0);
+
+    // end to end: a D = 1 sharded step moves nothing, so the link model
+    // sees an empty exchange and the overlap fields degrade cleanly
+    let cfg = registry().into_iter().find(|c| c.name == "base-sim").unwrap();
+    let run = ShardedRun::new(&cfg, 1).unwrap();
+    let state = run.init_state(3).unwrap();
+    let mut batcher = Batcher::for_config(&cfg, Split::Train, 3);
+    let batches = vec![batcher.next_batch()];
+    let (_, stats) = run.step(state, &batches).unwrap();
+    let dsp = stats.dispatch.as_ref().unwrap();
+    assert_eq!(dsp.max_link_bytes, 0.0);
+    assert_eq!(dsp.bottleneck_link_share(), 0.0);
+    assert_eq!(dsp.overlap_efficiency, 1.0, "no comm counts as fully hidden");
+    assert!(dsp.observed_overlap_ms > 0.0);
+    assert!(dsp.observed_overlap_ms <= dsp.observed_ms);
+}
+
+/// The `--no-overlap` oracle: the sharded runtime's serial observed-ms
+/// series must be bitwise what the pre-overlap `simulate_step_observed`
+/// produces from the same aggregate traffic — the overlap refactor may
+/// only *add* numbers, never move the old ones.
+#[test]
+fn serial_observed_ms_is_bitwise_the_pre_overlap_model() {
+    for (name, d) in [("base-sim", 4usize), ("large-sim", 8), ("xlarge-sim", 4)] {
+        let cfg = registry().into_iter().find(|c| c.name == name).unwrap();
+        let run = ShardedRun::new(&cfg, d).unwrap();
+        let run_cfg = run.info().config.clone();
+        let mut state = run.init_state(17).unwrap();
+        let mut batcher = Batcher::for_config(&cfg, Split::Train, 17);
+        for step in 0..2 {
+            let batches: Vec<Batch> = (0..d).map(|_| batcher.next_batch()).collect();
+            let (next, stats) = run.step(state, &batches).unwrap();
+            state = next;
+            let dsp = stats.dispatch.as_ref().unwrap();
+            let oracle = simulate_step_observed(
+                &run_cfg,
+                run_cfg.routing,
+                run_cfg.capacity_mode,
+                &table2_hardware(),
+                &ObservedTraffic {
+                    a2a_bytes_per_layer: dsp.a2a_bytes_per_layer,
+                    shard_balance: dsp.shard_balance,
+                },
+            )
+            .total_ms();
+            assert_eq!(
+                dsp.observed_ms.to_bits(),
+                oracle.to_bits(),
+                "{name} D={d} step {step}: serial path drifted from simulate_step_observed"
+            );
+        }
+    }
+}
+
+#[test]
+fn overlap_never_slower_across_the_bench_grid_slice() {
+    // a small slice of the bench grid: every cell's overlapped time is
+    // bounded by its serial time on both topologies
+    for name in ["base-sim", "large-sim"] {
+        let cfg = registry().into_iter().find(|c| c.name == name).unwrap();
+        for d in [4usize, 8] {
+            for wpn in [1usize, 4] {
+                let mut run = ShardedRun::new(&cfg, d).unwrap();
+                run.set_workers_per_node(wpn);
+                let state = run.init_state(23).unwrap();
+                let mut batcher = Batcher::for_config(&cfg, Split::Train, 23);
+                let batches: Vec<Batch> = (0..d).map(|_| batcher.next_batch()).collect();
+                let (_, stats) = run.step(state, &batches).unwrap();
+                let dsp = stats.dispatch.as_ref().unwrap();
+                assert!(
+                    dsp.observed_overlap_ms <= dsp.observed_ms,
+                    "{name} D={d} wpn={wpn}: overlap {} above serial {}",
+                    dsp.observed_overlap_ms,
+                    dsp.observed_ms
+                );
+                assert!(dsp.observed_overlap_ms > 0.0);
+                assert!((0.0..=1.0).contains(&dsp.overlap_efficiency));
+            }
+        }
+    }
+}
+
+#[test]
+fn intra_tier_defaults_keep_the_invariants_sound() {
+    // the "hierarchy never slower" and "flat never above aggregate"
+    // invariants lean on the hardware defaults: intra-node links must be
+    // at least as fast (and as low-latency) as inter-node ones
+    let hw = HardwareModel::v100();
+    assert!(hw.intra_node_bw >= hw.net_bw);
+    assert!(hw.intra_node_latency <= hw.a2a_latency);
+    assert_eq!(hw.workers_per_node, 1, "the paper's testbed is flat");
+    assert_eq!(hw.clone().with_workers_per_node(0).workers_per_node, 1);
+    assert_eq!(hw.with_workers_per_node(4).workers_per_node, 4);
+}
