@@ -1,6 +1,6 @@
 # Convenience targets; tier-1 verify is `cargo build --release && cargo test -q`.
 
-.PHONY: build test fmt run report artifacts smoke bench-step bench-overlap
+.PHONY: build test fmt run report artifacts smoke bench-step bench-overlap bench-ffn
 
 build:
 	cargo build --release
@@ -28,6 +28,11 @@ bench-step:
 # DESIGN.md on how to read it).
 bench-overlap:
 	cargo run --release -- bench --overlap
+
+# Native expert-FFN kernels: cache-tiled fwd/bwd vs the naive loop-order
+# baseline, written to BENCH_ffn.json (see DESIGN.md on how to read it).
+bench-ffn:
+	cargo run --release -- bench --ffn
 
 # `artifacts` is a documented no-op stub. The AOT pipeline
 # (python/compile/aot.py -> HLO text + artifacts/manifest.json) feeds the

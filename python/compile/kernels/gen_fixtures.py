@@ -1,0 +1,195 @@
+"""Generate the golden parity fixtures pinning the Rust kernels to the
+Python reference (``rust/tests/fixtures/*.json``).
+
+The Rust FFN (``rust/src/moe/ffn.rs``) and optimizer
+(``rust/src/runtime/optim.rs``) ports are asserted against these to 1e-5
+relative tolerance by ``rust/tests/ffn_parity.rs``.  Everything here runs
+through the *same* code the Pallas kernels are tested against:
+
+  * gelu / gelu_grad           -> kernels.ref
+  * moe_ffn forward + VJP      -> kernels.moe_ffn (custom-VJP entry point,
+                                  interpret mode — the analytic-gelu_grad
+                                  backward the Rust port mirrors)
+  * AdamW / Adafactor steps    -> compile.optim
+
+Run from the repo root:
+
+    python3 -m python.compile.kernels.gen_fixtures
+"""
+
+from __future__ import annotations
+
+import json
+import os
+import types
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from . import moe_ffn as kernel
+from . import ref
+from .. import optim
+
+OUT_DIR = os.path.join(
+    os.path.dirname(__file__), "..", "..", "..", "rust", "tests", "fixtures"
+)
+
+
+def flat(x) -> list[float]:
+    return [float(v) for v in np.asarray(x, dtype=np.float32).reshape(-1)]
+
+
+def rand(rng: np.random.RandomState, shape, scale: float) -> jnp.ndarray:
+    return jnp.asarray(rng.standard_normal(shape).astype(np.float32) * scale)
+
+
+def gelu_fixture() -> dict:
+    xs = np.array(
+        [-6.0, -3.0, -1.5, -0.7, -0.1, 0.0, 0.1, 0.7, 1.5, 3.0, 6.0, 0.044715],
+        dtype=np.float32,
+    )
+    x = jnp.asarray(xs)
+    return {
+        "x": flat(x),
+        "gelu": flat(ref.gelu(x)),
+        "gelu_grad": flat(ref.gelu_grad(x)),
+    }
+
+
+# The acceptance grid: base geometry, non-128-multiple dims, single
+# expert, capacity 1.  (seed, e, c, m, i, i_block)
+FFN_CASES = [
+    ("base", 101, 8, 6, 32, 64, 16),
+    ("nonmult", 202, 3, 5, 7, 24, 8),
+    ("e1", 303, 1, 6, 8, 16, 16),
+    ("c1", 404, 2, 1, 8, 16, 8),
+]
+
+
+def ffn_fixture() -> dict:
+    cases = []
+    for name, seed, e, c, m, i, i_block in FFN_CASES:
+        rng = np.random.RandomState(seed)
+        x = rand(rng, (e, c, m), 1.0)
+        w1 = rand(rng, (e, m, i), 0.2)
+        w2 = rand(rng, (e, i, m), 0.2)
+        g = rand(rng, (e, c, m), 0.1)
+        out, vjp = jax.vjp(lambda x, w1, w2: kernel.moe_ffn(x, w1, w2, i_block), x, w1, w2)
+        dx, dw1, dw2 = vjp(g)
+        cases.append(
+            {
+                "name": name,
+                "experts": e,
+                "capacity": c,
+                "hidden": m,
+                "intermediate": i,
+                "i_block": i_block,
+                "x": flat(x),
+                "w1": flat(w1),
+                "w2": flat(w2),
+                "g": flat(g),
+                "out": flat(out),
+                "dx": flat(dx),
+                "dw1": flat(dw1),
+                "dw2": flat(dw2),
+            }
+        )
+    return {"cases": cases}
+
+
+def optim_fixture() -> dict:
+    cfg = types.SimpleNamespace(lr=2e-3, warmup=10, weight_decay=0.01)
+    out: dict = {}
+
+    # -- AdamW: one step at t=3 with non-zero accumulated moments --------
+    rng = np.random.RandomState(1234)
+    shape = (2, 3, 4)
+    p = rand(rng, shape, 1.0)
+    g = rand(rng, shape, 0.1)
+    m0 = rand(rng, shape, 0.01)
+    v0 = jnp.abs(rand(rng, shape, 0.001))
+    step = jnp.asarray(3, dtype=jnp.int32)
+    params = {"w": p}
+    new_p, st = optim.adamw_update(
+        cfg, params, {"w": g}, optim.AdamWState(m={"w": m0}, v={"w": v0}), step
+    )
+    out["adamw"] = {
+        "lr": cfg.lr,
+        "warmup": cfg.warmup,
+        "weight_decay": cfg.weight_decay,
+        "step": 3,
+        "shape": list(shape),
+        "p": flat(p),
+        "g": flat(g),
+        "m": flat(m0),
+        "v": flat(v0),
+        "new_p": flat(new_p["w"]),
+        "new_m": flat(st.m["w"]),
+        "new_v": flat(st.v["w"]),
+    }
+
+    # -- Adafactor, factored 3-D leaf at t=7 -----------------------------
+    rng = np.random.RandomState(5678)
+    p = rand(rng, shape, 1.0)
+    g = rand(rng, shape, 0.1)
+    vr0 = jnp.abs(rand(rng, shape[:-1], 0.001))
+    vc0 = jnp.abs(rand(rng, shape[:-2] + shape[-1:], 0.001))
+    step = jnp.asarray(7, dtype=jnp.int32)
+    new_p, st = optim.adafactor_update(
+        cfg, {"w": p}, {"w": g}, optim.AdafactorState(v_row={"w": vr0}, v_col={"w": vc0}), step
+    )
+    out["adafactor_factored"] = {
+        "lr": cfg.lr,
+        "warmup": cfg.warmup,
+        "weight_decay": cfg.weight_decay,
+        "step": 7,
+        "shape": list(shape),
+        "p": flat(p),
+        "g": flat(g),
+        "vr": flat(vr0),
+        "vc": flat(vc0),
+        "new_p": flat(new_p["w"]),
+        "new_vr": flat(st.v_row["w"]),
+        "new_vc": flat(st.v_col["w"]),
+    }
+
+    # -- Adafactor, unfactored vector leaf at t=7 ------------------------
+    rng = np.random.RandomState(9012)
+    p = rand(rng, (5,), 1.0)
+    g = rand(rng, (5,), 0.1)
+    v0 = jnp.abs(rand(rng, (5,), 0.001))
+    dummy = jnp.zeros((1,), jnp.float32)
+    new_p, st = optim.adafactor_update(
+        cfg, {"w": p}, {"w": g}, optim.AdafactorState(v_row={"w": v0}, v_col={"w": dummy}), step
+    )
+    out["adafactor_vector"] = {
+        "lr": cfg.lr,
+        "warmup": cfg.warmup,
+        "weight_decay": cfg.weight_decay,
+        "step": 7,
+        "p": flat(p),
+        "g": flat(g),
+        "v": flat(v0),
+        "new_p": flat(new_p["w"]),
+        "new_v": flat(st.v_row["w"]),
+    }
+    return out
+
+
+def main() -> None:
+    os.makedirs(OUT_DIR, exist_ok=True)
+    for name, payload in [
+        ("gelu.json", gelu_fixture()),
+        ("moe_ffn.json", ffn_fixture()),
+        ("optim.json", optim_fixture()),
+    ]:
+        path = os.path.join(OUT_DIR, name)
+        with open(path, "w") as f:
+            json.dump(payload, f)
+            f.write("\n")
+        print(f"wrote {os.path.normpath(path)}")
+
+
+if __name__ == "__main__":
+    main()

@@ -57,6 +57,33 @@ impl Routing {
     }
 }
 
+/// What the step actually computes (see DESIGN.md §Native expert compute).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ComputeMode {
+    /// Real per-expert FFN GEMMs + optimizer updates on the dispatched
+    /// tokens — the default for the small `-real` registry twins.
+    Real,
+    /// PowerLaw loss + calibrated cluster latency model — still the only
+    /// way to price D=480-GPU scenarios on one box.
+    Simulated,
+}
+
+impl ComputeMode {
+    pub fn parse(s: &str) -> Option<Self> {
+        match s {
+            "real" => Some(ComputeMode::Real),
+            "sim" | "simulated" => Some(ComputeMode::Simulated),
+            _ => None,
+        }
+    }
+    pub fn name(&self) -> &'static str {
+        match self {
+            ComputeMode::Real => "real",
+            ComputeMode::Simulated => "sim",
+        }
+    }
+}
+
 /// Capacity policy: the paper's "Capacity kx" vs "Capacity 1x" (Table 1/3).
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum CapacityMode {
@@ -106,6 +133,11 @@ pub struct ModelConfig {
     pub lr: f64,
     pub warmup: usize,
     pub init_std: f64,
+    /// decoupled weight decay (python `ModelConfig.weight_decay`).
+    pub weight_decay: f64,
+    /// what the native step executes: real expert compute or the
+    /// simulated loss/latency models.
+    pub compute: ComputeMode,
     /// number of workers the paper ran this row on (Table 5); used only by
     /// the cluster simulator.
     pub workers: usize,
@@ -212,6 +244,15 @@ impl ModelConfig {
             lr: f64_of("lr")?,
             warmup: usize_of("warmup")?,
             init_std: f64_of("init_std")?,
+            // optional keys: older manifests predate them (python default
+            // weight_decay is 0.01; lowered HLO variants are simulated-free
+            // real compute on device, so the native mode tag is advisory)
+            weight_decay: v.get("weight_decay").and_then(|x| x.as_f64()).unwrap_or(0.01),
+            compute: v
+                .get("compute")
+                .and_then(|x| x.as_str())
+                .and_then(ComputeMode::parse)
+                .unwrap_or(ComputeMode::Simulated),
             workers: 1,
         })
     }
@@ -245,6 +286,8 @@ pub mod paper {
             lr: 8e-5,
             warmup: 500,
             init_std: 0.02,
+            weight_decay: 0.01,
+            compute: ComputeMode::Simulated,
             workers: 8,
         }
     }

@@ -1,6 +1,20 @@
-//! Checkpointing: the device-resident train state serialized to a simple
-//! self-describing binary format (magic + leaf table + f32 data, little
-//! endian). No external serialization crates are available offline.
+//! Checkpointing: the train state serialized to a simple self-describing
+//! binary format (magic + leaf table + f32 data, little endian). No
+//! external serialization crates are available offline.
+//!
+//! Two on-disk versions exist:
+//!  * **v2** (`M6TCKPT2`, what `save` writes): every leaf carries its
+//!    manifest name and a dtype tag, so `validate` matches leaves **by
+//!    name** against the variant manifest — a reordered or re-laid-out
+//!    state surfaces as a named mismatch (or is silently permuted back
+//!    into manifest order by [`Checkpoint::leaves_in_manifest_order`])
+//!    instead of loading transposed data positionally.
+//!  * **v1** (`M6TCKPT1`): the legacy anonymous-leaf format; still
+//!    loadable read-only, validated positionally as before.
+//!
+//! Saves are **atomic**: the bytes stream into a `.tmp` sibling which is
+//! fsynced and then renamed over the final path, so a crash mid-save can
+//! never leave a truncated file where a good checkpoint (or none) was.
 
 use std::fs;
 use std::io::{Read, Write};
@@ -8,70 +22,150 @@ use std::path::Path;
 
 use anyhow::{anyhow, bail, Context, Result};
 
-use crate::runtime::manifest::VariantInfo;
+use crate::runtime::manifest::{DType, VariantInfo};
 
-const MAGIC: &[u8; 8] = b"M6TCKPT1";
+const MAGIC_V1: &[u8; 8] = b"M6TCKPT1";
+const MAGIC_V2: &[u8; 8] = b"M6TCKPT2";
 
 /// Upper bound on the on-disk leaf count. Real variants carry a handful
 /// of leaves; anything near this is a corrupt header, and bounding it
 /// keeps a hostile `n_leaves` from pre-allocating unbounded memory.
 const MAX_LEAVES: u64 = 1 << 16;
+/// Upper bound on any on-disk name length (variant or leaf).
+const MAX_NAME_LEN: usize = 4096;
 
-/// Host-side checkpoint: leaf arrays in manifest order + the step counter.
+fn dtype_tag(d: &DType) -> u8 {
+    match d {
+        DType::F32 => 0,
+        DType::I32 => 1,
+    }
+}
+
+fn dtype_from_tag(tag: u8) -> Result<DType> {
+    match tag {
+        0 => Ok(DType::F32),
+        1 => Ok(DType::I32),
+        t => bail!("unknown leaf dtype tag {t}"),
+    }
+}
+
+/// Host-side checkpoint: leaf arrays in manifest order + the step
+/// counter. `names`/`dtypes` parallel `leaves`; both are empty only for
+/// checkpoints read from the legacy v1 format.
 #[derive(Debug, Clone, PartialEq)]
 pub struct Checkpoint {
     pub variant: String,
     pub step: i64,
     pub leaves: Vec<Vec<f32>>,
+    /// manifest name of each leaf (empty for v1-loaded checkpoints)
+    pub names: Vec<String>,
+    /// manifest dtype of each leaf (empty for v1-loaded checkpoints)
+    pub dtypes: Vec<DType>,
 }
 
 impl Checkpoint {
+    /// Build a checkpoint whose leaf names/dtypes come from the variant
+    /// manifest — the one constructor the training path uses, so every
+    /// saved checkpoint is v2-complete by construction.
+    pub fn from_manifest(info: &VariantInfo, step: i64, leaves: Vec<Vec<f32>>) -> Result<Self> {
+        if leaves.len() != info.state_leaves.len() {
+            bail!(
+                "state has {} leaves, manifest {:?} wants {}",
+                leaves.len(),
+                info.name,
+                info.state_leaves.len()
+            );
+        }
+        Ok(Self {
+            variant: info.name.clone(),
+            step,
+            leaves,
+            names: info.state_leaves.iter().map(|s| s.name.clone()).collect(),
+            dtypes: info.state_leaves.iter().map(|s| s.dtype.clone()).collect(),
+        })
+    }
+
+    /// Atomically write the checkpoint (always the v2 named format):
+    /// stream to a `.tmp` sibling, fsync, rename over `path`, then
+    /// best-effort fsync the parent directory. A crash at any point
+    /// leaves either the old file or the new one — never a torn write.
     pub fn save(&self, path: impl AsRef<Path>) -> Result<()> {
-        if let Some(parent) = path.as_ref().parent() {
+        let path = path.as_ref();
+        if self.names.len() != self.leaves.len() || self.dtypes.len() != self.leaves.len() {
+            bail!(
+                "checkpoint for {:?} has {} leaves but {} names / {} dtypes — \
+                 construct it via Checkpoint::from_manifest",
+                self.variant,
+                self.leaves.len(),
+                self.names.len(),
+                self.dtypes.len()
+            );
+        }
+        if let Some(parent) = path.parent() {
             fs::create_dir_all(parent)?;
         }
-        let mut f = fs::File::create(&path)
-            .with_context(|| format!("creating checkpoint {:?}", path.as_ref()))?;
-        f.write_all(MAGIC)?;
-        f.write_all(&self.step.to_le_bytes())?;
-        let name = self.variant.as_bytes();
-        f.write_all(&(name.len() as u32).to_le_bytes())?;
-        f.write_all(name)?;
-        f.write_all(&(self.leaves.len() as u32).to_le_bytes())?;
-        for leaf in &self.leaves {
-            f.write_all(&(leaf.len() as u64).to_le_bytes())?;
-            // SAFETY-free alternative: stream the f32s as LE bytes
-            let mut buf = Vec::with_capacity(leaf.len() * 4);
-            for v in leaf {
-                buf.extend_from_slice(&v.to_le_bytes());
+        let tmp = path.with_extension("tmp");
+        {
+            let mut f = fs::File::create(&tmp)
+                .with_context(|| format!("creating checkpoint temp {tmp:?}"))?;
+            f.write_all(MAGIC_V2)?;
+            f.write_all(&self.step.to_le_bytes())?;
+            let name = self.variant.as_bytes();
+            f.write_all(&(name.len() as u32).to_le_bytes())?;
+            f.write_all(name)?;
+            f.write_all(&(self.leaves.len() as u32).to_le_bytes())?;
+            for ((leaf, lname), dtype) in self.leaves.iter().zip(&self.names).zip(&self.dtypes) {
+                let lname = lname.as_bytes();
+                f.write_all(&(lname.len() as u32).to_le_bytes())?;
+                f.write_all(lname)?;
+                f.write_all(&[dtype_tag(dtype)])?;
+                f.write_all(&(leaf.len() as u64).to_le_bytes())?;
+                // SAFETY-free alternative: stream the f32s as LE bytes
+                let mut buf = Vec::with_capacity(leaf.len() * 4);
+                for v in leaf {
+                    buf.extend_from_slice(&v.to_le_bytes());
+                }
+                f.write_all(&buf)?;
             }
-            f.write_all(&buf)?;
+            f.flush()?;
+            f.sync_all().with_context(|| format!("fsyncing checkpoint temp {tmp:?}"))?;
+        }
+        fs::rename(&tmp, path)
+            .with_context(|| format!("renaming checkpoint {tmp:?} -> {path:?}"))?;
+        // the rename itself must be durable too; failure to fsync the
+        // directory is not data loss on the happy path, so best-effort
+        if let Some(parent) = path.parent() {
+            if let Ok(dir) = fs::File::open(parent) {
+                let _ = dir.sync_all();
+            }
         }
         Ok(())
     }
 
-    /// Load and validate a checkpoint. On-disk sizes are *untrusted*:
-    /// every claimed length is bounded with checked arithmetic against
-    /// sane maxima and the actual file size before a single byte is
-    /// allocated, so a corrupt or truncated file fails with an error
-    /// instead of an OOM abort — and trailing garbage after the last
-    /// leaf is rejected rather than silently ignored.
+    /// Load and validate a checkpoint (v2 or legacy v1). On-disk sizes
+    /// are *untrusted*: every claimed length is bounded with checked
+    /// arithmetic against sane maxima and the actual file size before a
+    /// single byte is allocated, so a corrupt or truncated file fails
+    /// with an error instead of an OOM abort — and trailing garbage
+    /// after the last leaf is rejected rather than silently ignored.
     pub fn load(path: impl AsRef<Path>) -> Result<Checkpoint> {
         let mut f = fs::File::open(&path)
             .with_context(|| format!("opening checkpoint {:?}", path.as_ref()))?;
         let file_len = f.metadata()?.len();
         let mut magic = [0u8; 8];
         f.read_exact(&mut magic)?;
-        if &magic != MAGIC {
-            bail!("bad checkpoint magic {magic:?}");
-        }
+        let v2 = match &magic {
+            m if m == MAGIC_V2 => true,
+            m if m == MAGIC_V1 => false,
+            _ => bail!("bad checkpoint magic {magic:?}"),
+        };
         let mut b8 = [0u8; 8];
         f.read_exact(&mut b8)?;
         let step = i64::from_le_bytes(b8);
         let mut b4 = [0u8; 4];
         f.read_exact(&mut b4)?;
         let name_len = u32::from_le_bytes(b4) as usize;
-        if name_len > 4096 {
+        if name_len > MAX_NAME_LEN {
             bail!("unreasonable variant-name length {name_len}");
         }
         let mut name = vec![0u8; name_len];
@@ -85,7 +179,31 @@ impl Checkpoint {
         // bytes consumed so far: magic + step + name header + name + leaf count
         let mut offset: u64 = 8 + 8 + 4 + name_len as u64 + 4;
         let mut leaves = Vec::with_capacity(n_leaves as usize);
+        let mut names = Vec::new();
+        let mut dtypes = Vec::new();
+        let mut b1 = [0u8; 1];
         for i in 0..n_leaves {
+            if v2 {
+                f.read_exact(&mut b4).with_context(|| format!("reading leaf {i} name length"))?;
+                offset += 4;
+                let lname_len = u32::from_le_bytes(b4) as usize;
+                if lname_len > MAX_NAME_LEN {
+                    bail!("leaf {i}: unreasonable name length {lname_len}");
+                }
+                if lname_len as u64 > file_len.saturating_sub(offset) {
+                    bail!("leaf {i}: name runs past end of file (truncated checkpoint)");
+                }
+                let mut lname = vec![0u8; lname_len];
+                f.read_exact(&mut lname).with_context(|| format!("reading leaf {i} name"))?;
+                offset += lname_len as u64;
+                names.push(
+                    String::from_utf8(lname)
+                        .with_context(|| format!("leaf {i} name not utf-8"))?,
+                );
+                f.read_exact(&mut b1).with_context(|| format!("reading leaf {i} dtype"))?;
+                offset += 1;
+                dtypes.push(dtype_from_tag(b1[0]).with_context(|| format!("leaf {i}"))?);
+            }
             f.read_exact(&mut b8).with_context(|| format!("reading leaf {i} header"))?;
             offset += 8;
             let n = u64::from_le_bytes(b8);
@@ -115,10 +233,15 @@ impl Checkpoint {
                 file_len - offset
             );
         }
-        Ok(Checkpoint { variant, step, leaves })
+        Ok(Checkpoint { variant, step, leaves, names, dtypes })
     }
 
-    /// Validate leaf count/sizes against a variant manifest.
+    /// Validate against a variant manifest. v2 checkpoints (named
+    /// leaves) are matched **by name** — every leaf must exist in the
+    /// manifest with the same element count and dtype, with no
+    /// duplicates and no missing leaves; leaf *order* is free, since
+    /// [`Checkpoint::leaves_in_manifest_order`] restores it. Legacy v1
+    /// checkpoints fall back to the old positional check.
     pub fn validate(&self, info: &VariantInfo) -> Result<()> {
         if self.variant != info.name {
             bail!("checkpoint is for {:?}, not {:?}", self.variant, info.name);
@@ -126,36 +249,215 @@ impl Checkpoint {
         if self.leaves.len() != info.n_state {
             bail!("checkpoint has {} leaves, manifest wants {}", self.leaves.len(), info.n_state);
         }
-        for (leaf, spec) in self.leaves.iter().zip(&info.state_leaves) {
+        if self.names.is_empty() {
+            // legacy v1: anonymous leaves, positional validation
+            for (leaf, spec) in self.leaves.iter().zip(&info.state_leaves) {
+                if leaf.len() != spec.elements() {
+                    bail!(
+                        "leaf {:?}: {} elements vs spec {}",
+                        spec.name,
+                        leaf.len(),
+                        spec.elements()
+                    );
+                }
+            }
+            return Ok(());
+        }
+        if self.names.len() != self.leaves.len() || self.dtypes.len() != self.leaves.len() {
+            bail!(
+                "checkpoint names/dtypes ({}/{}) do not match its {} leaves",
+                self.names.len(),
+                self.dtypes.len(),
+                self.leaves.len()
+            );
+        }
+        let mut seen = std::collections::BTreeSet::new();
+        for ((leaf, name), dtype) in self.leaves.iter().zip(&self.names).zip(&self.dtypes) {
+            if !seen.insert(name.as_str()) {
+                bail!("checkpoint has duplicate leaf {name:?}");
+            }
+            let spec = info
+                .state_leaves
+                .iter()
+                .find(|s| &s.name == name)
+                .ok_or_else(|| anyhow!("checkpoint leaf {name:?} is not in the manifest"))?;
             if leaf.len() != spec.elements() {
-                bail!(
-                    "leaf {:?}: {} elements vs spec {}",
-                    spec.name,
-                    leaf.len(),
-                    spec.elements()
-                );
+                bail!("leaf {name:?}: {} elements vs spec {}", leaf.len(), spec.elements());
+            }
+            if dtype != &spec.dtype {
+                bail!("leaf {name:?}: dtype {dtype:?} vs spec {:?}", spec.dtype);
             }
         }
+        // counts equal + no duplicates + all present => bijection
         Ok(())
+    }
+
+    /// The leaf arrays permuted into the manifest's order — what
+    /// `Backend::state_from_host` expects. v1 checkpoints (no names) are
+    /// already positional; v2 checkpoints are matched by name, so a
+    /// checkpoint whose leaves were written in a different order still
+    /// restores correctly. Call [`Checkpoint::validate`] first.
+    pub fn leaves_in_manifest_order(&self, info: &VariantInfo) -> Result<Vec<Vec<f32>>> {
+        if self.names.is_empty() {
+            return Ok(self.leaves.clone());
+        }
+        info.state_leaves
+            .iter()
+            .map(|spec| {
+                self.names
+                    .iter()
+                    .position(|n| n == &spec.name)
+                    .map(|at| self.leaves[at].clone())
+                    .ok_or_else(|| anyhow!("checkpoint is missing leaf {:?}", spec.name))
+            })
+            .collect()
     }
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::runtime::manifest::TensorSpec;
+
+    fn named(variant: &str, step: i64, leaves: Vec<Vec<f32>>) -> Checkpoint {
+        let names = (0..leaves.len()).map(|i| format!("leaf{i}")).collect();
+        let dtypes = vec![DType::F32; leaves.len()];
+        Checkpoint { variant: variant.into(), step, leaves, names, dtypes }
+    }
+
+    fn info_for(ck: &Checkpoint) -> VariantInfo {
+        let state_leaves: Vec<TensorSpec> = ck
+            .leaves
+            .iter()
+            .zip(&ck.names)
+            .map(|(leaf, name)| TensorSpec {
+                name: name.clone(),
+                shape: vec![leaf.len()],
+                dtype: DType::F32,
+            })
+            .collect();
+        VariantInfo {
+            name: ck.variant.clone(),
+            dir: Default::default(),
+            config: crate::config::paper::base(),
+            init_hlo: Default::default(),
+            step_hlo: Default::default(),
+            eval_hlo: Default::default(),
+            n_params: state_leaves.len(),
+            n_opt: 0,
+            n_state: state_leaves.len(),
+            param_count: 0,
+            capacity: 0,
+            state_leaves,
+            step_inputs: Vec::new(),
+            step_outputs: Vec::new(),
+            eval_outputs: Vec::new(),
+        }
+    }
 
     #[test]
     fn roundtrip() {
-        let ck = Checkpoint {
-            variant: "base-sim".into(),
-            step: 123,
-            leaves: vec![vec![1.0, -2.5, 3.25], vec![0.0; 7]],
-        };
+        let ck = named("base-sim", 123, vec![vec![1.0, -2.5, 3.25], vec![0.0; 7]]);
         let path = std::env::temp_dir().join("m6t-ckpt-test.bin");
         ck.save(&path).unwrap();
         let back = Checkpoint::load(&path).unwrap();
         assert_eq!(back, ck);
+        assert_eq!(back.names, vec!["leaf0".to_string(), "leaf1".to_string()]);
+        assert_eq!(back.dtypes, vec![DType::F32, DType::F32]);
         let _ = fs::remove_file(path);
+    }
+
+    #[test]
+    fn save_refuses_anonymous_leaves() {
+        let ck = Checkpoint {
+            variant: "base-sim".into(),
+            step: 1,
+            leaves: vec![vec![1.0]],
+            names: Vec::new(),
+            dtypes: Vec::new(),
+        };
+        let path = std::env::temp_dir().join("m6t-ckpt-anon.bin");
+        assert!(ck.save(&path).is_err(), "v2 save requires names/dtypes");
+        let _ = fs::remove_file(path);
+    }
+
+    #[test]
+    fn interrupted_save_leaves_previous_checkpoint_intact() {
+        // regression: save() used to stream straight into the final path,
+        // so a crash mid-write destroyed the previous good checkpoint.
+        // Simulate the crash by materializing the half-written temp file
+        // next to a good save — the final path must still load clean.
+        let dir = std::env::temp_dir().join("m6t-ckpt-atomic");
+        let _ = fs::remove_dir_all(&dir);
+        let path = dir.join("state.ckpt");
+        let good = named("base-sim", 10, vec![vec![1.0; 32], vec![2.0; 8]]);
+        good.save(&path).unwrap();
+        let full = fs::read(&path).unwrap();
+        // a torn write of a *newer* checkpoint dies mid-stream
+        fs::write(path.with_extension("tmp"), &full[..full.len() / 2]).unwrap();
+        let back = Checkpoint::load(&path).unwrap();
+        assert_eq!(back, good, "torn temp file must not affect the published checkpoint");
+        // and no stale temp is ever loadable as a checkpoint
+        assert!(Checkpoint::load(path.with_extension("tmp")).is_err());
+        let _ = fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn loads_legacy_v1_format() {
+        // hand-craft a v1 file: anonymous leaves, positional layout
+        let path = std::env::temp_dir().join("m6t-ckpt-v1.bin");
+        let mut bytes = Vec::new();
+        bytes.extend_from_slice(MAGIC_V1);
+        bytes.extend_from_slice(&42i64.to_le_bytes());
+        bytes.extend_from_slice(&(8u32).to_le_bytes());
+        bytes.extend_from_slice(b"base-sim");
+        bytes.extend_from_slice(&(2u32).to_le_bytes());
+        for leaf in [vec![1.0f32, -2.0], vec![0.5f32; 3]] {
+            bytes.extend_from_slice(&(leaf.len() as u64).to_le_bytes());
+            for v in leaf {
+                bytes.extend_from_slice(&v.to_le_bytes());
+            }
+        }
+        fs::write(&path, &bytes).unwrap();
+        let back = Checkpoint::load(&path).unwrap();
+        assert_eq!(back.variant, "base-sim");
+        assert_eq!(back.step, 42);
+        assert_eq!(back.leaves, vec![vec![1.0, -2.0], vec![0.5; 3]]);
+        assert!(back.names.is_empty(), "v1 has no leaf names");
+        assert!(back.dtypes.is_empty());
+        let _ = fs::remove_file(path);
+    }
+
+    #[test]
+    fn validate_matches_by_name_and_rejects_mismatches() {
+        let ck = named("base-sim", 3, vec![vec![1.0, 2.0], vec![3.0; 4]]);
+        let info = info_for(&ck);
+        ck.validate(&info).unwrap();
+
+        // reordered leaves still validate and restore in manifest order
+        let mut reordered = ck.clone();
+        reordered.leaves.swap(0, 1);
+        reordered.names.swap(0, 1);
+        reordered.validate(&info).unwrap();
+        let restored = reordered.leaves_in_manifest_order(&info).unwrap();
+        assert_eq!(restored, ck.leaves, "by-name restore must undo the permutation");
+
+        // an unknown leaf name is rejected (the old positional check
+        // would have accepted any equal-size leaf here)
+        let mut renamed = ck.clone();
+        renamed.names[1] = "not-a-leaf".into();
+        assert!(renamed.validate(&info).is_err());
+
+        // dtype mismatches are rejected
+        let mut retyped = ck.clone();
+        retyped.dtypes[0] = DType::I32;
+        assert!(retyped.validate(&info).is_err());
+
+        // duplicate names are rejected even when sizes line up
+        let mut duped = ck.clone();
+        duped.names[1] = duped.names[0].clone();
+        duped.leaves[1] = duped.leaves[0].clone();
+        assert!(duped.validate(&info).is_err());
     }
 
     #[test]
@@ -166,15 +468,19 @@ mod tests {
         let _ = fs::remove_file(path);
     }
 
-    /// A syntactically valid header for one-leaf checkpoints, ending just
-    /// before the leaf length u64.
+    /// A syntactically valid v2 header for one-leaf checkpoints, ending
+    /// just after the first leaf's name + dtype, right before the leaf
+    /// length u64.
     fn header_for(variant: &[u8], n_leaves: u32) -> Vec<u8> {
         let mut bytes = Vec::new();
-        bytes.extend_from_slice(MAGIC);
+        bytes.extend_from_slice(MAGIC_V2);
         bytes.extend_from_slice(&7i64.to_le_bytes());
         bytes.extend_from_slice(&(variant.len() as u32).to_le_bytes());
         bytes.extend_from_slice(variant);
         bytes.extend_from_slice(&n_leaves.to_le_bytes());
+        bytes.extend_from_slice(&(5u32).to_le_bytes());
+        bytes.extend_from_slice(b"leaf0");
+        bytes.push(0); // dtype tag: F32
         bytes
     }
 
@@ -215,12 +521,24 @@ mod tests {
     }
 
     #[test]
+    fn rejects_oversized_leaf_name() {
+        let path = std::env::temp_dir().join("m6t-ckpt-badname.bin");
+        let mut bytes = Vec::new();
+        bytes.extend_from_slice(MAGIC_V2);
+        bytes.extend_from_slice(&7i64.to_le_bytes());
+        bytes.extend_from_slice(&(8u32).to_le_bytes());
+        bytes.extend_from_slice(b"base-sim");
+        bytes.extend_from_slice(&(1u32).to_le_bytes());
+        bytes.extend_from_slice(&(u32::MAX).to_le_bytes()); // leaf name "length"
+        fs::write(&path, &bytes).unwrap();
+        let err = Checkpoint::load(&path).unwrap_err();
+        assert!(format!("{err:#}").contains("name"), "{err:#}");
+        let _ = fs::remove_file(path);
+    }
+
+    #[test]
     fn rejects_truncated_data() {
-        let ck = Checkpoint {
-            variant: "base-sim".into(),
-            step: 5,
-            leaves: vec![vec![1.0; 64]],
-        };
+        let ck = named("base-sim", 5, vec![vec![1.0; 64]]);
         let path = std::env::temp_dir().join("m6t-ckpt-truncated.bin");
         ck.save(&path).unwrap();
         let full = fs::read(&path).unwrap();
@@ -231,11 +549,7 @@ mod tests {
 
     #[test]
     fn rejects_trailing_garbage() {
-        let ck = Checkpoint {
-            variant: "base-sim".into(),
-            step: 5,
-            leaves: vec![vec![1.0, 2.0]],
-        };
+        let ck = named("base-sim", 5, vec![vec![1.0, 2.0]]);
         let path = std::env::temp_dir().join("m6t-ckpt-trailing.bin");
         ck.save(&path).unwrap();
         let mut full = fs::read(&path).unwrap();

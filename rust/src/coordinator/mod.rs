@@ -90,7 +90,7 @@ impl Trainer {
     /// Run `steps` training steps from a fresh init; returns the outcome
     /// and the final state (for checkpointing / further eval).
     pub fn train(&self) -> Result<(TrainOutcome, TrainState)> {
-        let state = self.backend.init_state(self.opts.seed as i32)?;
+        let state = self.backend.init_state(self.opts.seed)?;
         self.train_from(state)
     }
 
@@ -167,18 +167,21 @@ impl Trainer {
         ))
     }
 
-    /// Snapshot the state into a host checkpoint.
+    /// Snapshot the state into a host checkpoint (leaves named and
+    /// dtype-tagged from the variant manifest — the v2 on-disk format).
     pub fn snapshot(&self, state: &TrainState) -> Result<Checkpoint> {
-        Ok(Checkpoint {
-            variant: self.backend.info().name.clone(),
-            step: state.step,
-            leaves: self.backend.state_to_host(state)?,
-        })
+        Checkpoint::from_manifest(
+            self.backend.info(),
+            state.step,
+            self.backend.state_to_host(state)?,
+        )
     }
 
-    /// Restore a checkpoint into a runnable state.
+    /// Restore a checkpoint into a runnable state. v2 checkpoints are
+    /// validated and restored by leaf *name*; legacy v1 positionally.
     pub fn restore(&self, ck: &Checkpoint) -> Result<TrainState> {
-        ck.validate(self.backend.info())?;
-        self.backend.state_from_host(&ck.leaves, ck.step)
+        let info = self.backend.info();
+        ck.validate(info)?;
+        self.backend.state_from_host(&ck.leaves_in_manifest_order(info)?, ck.step)
     }
 }

@@ -10,7 +10,7 @@
 //!   train                   train one variant (checkpoints, metrics)
 //!   eval                    eval PPL of a checkpoint / fresh init
 //!   bench                   measured vs simulated ms/step per strategy;
-//!                           --routing / --dispatch / --step / --overlap
+//!                           --routing / --dispatch / --step / --overlap / --ffn
 //!                           run the tracked suites (BENCH_*.json)
 //!   flops                   Table 1 (analytical per-GPU GFLOPs)
 //!   simulate                Table 2 (calibrated cluster simulator)
@@ -351,7 +351,12 @@ fn cmd_bench(rest: &[String]) -> Result<()> {
             "overlap",
             "run the overlap/topology suite instead (writes BENCH_overlap.json)",
         )
-        .opt_default("overlap-out", "BENCH_overlap.json", "--overlap: output JSON path");
+        .opt_default("overlap-out", "BENCH_overlap.json", "--overlap: output JSON path")
+        .flag(
+            "ffn",
+            "run the expert-FFN kernel suite instead (writes BENCH_ffn.json)",
+        )
+        .opt_default("ffn-out", "BENCH_ffn.json", "--ffn: output JSON path");
     let args = parse(cmd, rest)?;
     if args.flag("routing") {
         return cmd_bench_routing(&args);
@@ -364,6 +369,9 @@ fn cmd_bench(rest: &[String]) -> Result<()> {
     }
     if args.flag("overlap") {
         return cmd_bench_overlap(&args);
+    }
+    if args.flag("ffn") {
+        return cmd_bench_ffn(&args);
     }
     let samples: usize = args.get_or("steps", 12usize).map_err(anyhow::Error::msg)?;
     let provider = NativeProvider::new();
@@ -462,6 +470,26 @@ fn cmd_bench_overlap(args: &m6t::util::cli::Args) -> Result<()> {
         overlap_bench::min_overlap_speedup(&rows),
         overlap_bench::max_bottleneck_link_share(&rows)
     );
+    eprintln!("[bench] wrote {out_path}");
+    Ok(())
+}
+
+/// `m6t bench --ffn` — the native expert-FFN kernels: the cache-tiled
+/// `gelu(x @ w1) @ w2` forward and rematerializing backward against the
+/// naive loop-order baseline, over three geometries x pool sizes. Each
+/// cell asserts tiled-vs-naive parity before timing. Writes
+/// BENCH_ffn.json at the repo root by default; its `min_tiled_speedup`
+/// field is a CI regression gate (>= 1.0 is structural — the tiled
+/// kernel exists to beat the textbook loop order).
+fn cmd_bench_ffn(args: &m6t::util::cli::Args) -> Result<()> {
+    use m6t::runtime::ffn_bench;
+    let reps: usize = args.get_or("steps", 8usize).map_err(anyhow::Error::msg)?;
+    let out_path = args.get("ffn-out").unwrap().to_string();
+    eprintln!("[bench] expert-FFN kernel suite, {reps} reps per cell");
+    let rows = ffn_bench::run_suite(reps)?;
+    print!("{}", ffn_bench::render_table(&rows, reps).render());
+    ffn_bench::write_json(&rows, reps, &out_path)?;
+    eprintln!("[bench] min tiled speedup: {:.2}x", ffn_bench::min_tiled_speedup(&rows));
     eprintln!("[bench] wrote {out_path}");
     Ok(())
 }

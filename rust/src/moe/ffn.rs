@@ -1,0 +1,596 @@
+//! Expert-batched FFN kernels: the Rust port of the paper's compute hot
+//! spot (`python/compile/kernels/moe_ffn.py`), the two expert matmuls
+//! §A.3 profiles at ~98% of the MoE layer's forward FLOPs:
+//!
+//! ```text
+//!   x (E, C, M) -> h = x @ w1 (E, C, I) -> a = gelu(h) -> a @ w2 (E, C, M)
+//! ```
+//!
+//! The tiled kernel mirrors the Pallas grid exactly: one **(expert,
+//! I-tile)** pair per work unit on the [`WorkerPool`], with the
+//! `(C, I_blk)` activation tile living in thread-local scratch (the VMEM
+//! analogue) and never materializing the full `(E, C, I)` hidden matrix.
+//! Each forward unit writes its partial `(C, M)` down-projection into a
+//! disjoint slice of a caller-owned buffer; partials merge serially in
+//! fixed tile order, so results are **bitwise identical across pool
+//! sizes** — the same determinism contract as `route_grid_counts`.
+//!
+//! The backward pass rematerializes `h` and `a = gelu(h)` per tile
+//! instead of storing them (the kernel's custom-VJP strategy): each unit
+//! owns the `[e, :, i0..i1]` slice of `dw1` and `[e, i0..i1, :]` slice of
+//! `dw2` outright, so weight grads need no merge at all; `dx` partials
+//! (only needed by parity tests — the training path feeds a frozen slab)
+//! merge in tile order like the forward.
+//!
+//! Memory layout is plain row-major f32 with the inner loops arranged so
+//! every innermost access is contiguous (axpy over rows of `w1`/`w2`,
+//! dot over rows of `g`/`w2`) — the shape LLVM autovectorizes. The
+//! `*_naive` twins use the textbook strided dot-product order and are the
+//! baseline `m6t bench --ffn` measures the speedup against.
+
+use std::cell::RefCell;
+
+use anyhow::{bail, Result};
+
+use crate::util::pool::{self, SendPtr, WorkerPool};
+
+/// Default inner tile over the intermediate dimension — same constant as
+/// `moe_ffn.DEFAULT_I_BLOCK` (sized for the paper's base geometry VMEM
+/// budget; on CPU it keeps the `(C, I_blk)` tile L2-resident).
+pub const DEFAULT_I_BLOCK: usize = 512;
+
+/// Below this many flops per call the pool handoff costs more than the
+/// GEMM work it spreads; run the units serially instead (bitwise
+/// identical either way).
+const MIN_PARALLEL_FLOPS: u64 = 1 << 16;
+
+// tanh-GeLU constants, bit-for-bit the ones in `kernels/ref.py`.
+const SQRT_2_OVER_PI: f64 = 0.7978845608028654;
+const GELU_C: f64 = 0.044715;
+
+/// tanh-approximated GeLU, matching `ref.gelu` in f32.
+#[inline]
+pub fn gelu(x: f32) -> f32 {
+    let s = SQRT_2_OVER_PI as f32;
+    let c = GELU_C as f32;
+    let u = s * (x + c * x * x * x);
+    0.5 * x * (1.0 + u.tanh())
+}
+
+/// Analytic d gelu / dx, matching `ref.gelu_grad` in f32.
+#[inline]
+pub fn gelu_grad(x: f32) -> f32 {
+    let s = SQRT_2_OVER_PI as f32;
+    let c = GELU_C as f32;
+    let u = s * (x + c * x * x * x);
+    let t = u.tanh();
+    let du = s * (1.0 + 3.0 * c * x * x);
+    0.5 * (1.0 + t) + 0.5 * x * (1.0 - t * t) * du
+}
+
+/// Mirror of `moe_ffn._pick_i_block`: clamp the requested block to I,
+/// then halve until it divides I exactly.
+pub fn pick_i_block(intermediate: usize, requested: Option<usize>) -> Result<usize> {
+    if intermediate == 0 {
+        bail!("intermediate dimension must be positive");
+    }
+    let mut blk = requested.unwrap_or(DEFAULT_I_BLOCK).min(intermediate);
+    while blk > 0 && intermediate % blk != 0 {
+        blk /= 2;
+    }
+    if blk == 0 {
+        bail!("intermediate={intermediate} has no power-of-2 tile");
+    }
+    Ok(blk)
+}
+
+/// Geometry of one expert-batched FFN application:
+/// `x (E, C, M)`, `w1 (E, M, I)`, `w2 (E, I, M)`, `out (E, C, M)`.
+#[derive(Debug, Clone, Copy)]
+pub struct FfnShape {
+    pub experts: usize,      // E
+    pub capacity: usize,     // C
+    pub hidden: usize,       // M
+    pub intermediate: usize, // I
+    pub i_block: usize,
+}
+
+impl FfnShape {
+    pub fn new(
+        experts: usize,
+        capacity: usize,
+        hidden: usize,
+        intermediate: usize,
+    ) -> Result<Self> {
+        Self::with_block(experts, capacity, hidden, intermediate, None)
+    }
+
+    pub fn with_block(
+        experts: usize,
+        capacity: usize,
+        hidden: usize,
+        intermediate: usize,
+        requested: Option<usize>,
+    ) -> Result<Self> {
+        if experts == 0 || capacity == 0 || hidden == 0 {
+            bail!("FFN shape has a zero dimension: E={experts} C={capacity} M={hidden}");
+        }
+        let i_block = pick_i_block(intermediate, requested)?;
+        Ok(Self { experts, capacity, hidden, intermediate, i_block })
+    }
+
+    /// I-tiles per expert; the pool grid is `experts x n_tiles` units.
+    pub fn n_tiles(&self) -> usize {
+        self.intermediate / self.i_block
+    }
+    pub fn units(&self) -> usize {
+        self.experts * self.n_tiles()
+    }
+    pub fn x_len(&self) -> usize {
+        self.experts * self.capacity * self.hidden
+    }
+    pub fn w1_len(&self) -> usize {
+        self.experts * self.hidden * self.intermediate
+    }
+    pub fn w2_len(&self) -> usize {
+        self.experts * self.intermediate * self.hidden
+    }
+    /// Forward FLOPs: the two GEMMs at mul+add = 2 (`moe_ffn.fwd_flops`).
+    pub fn fwd_flops(&self) -> u64 {
+        let (e, c, m, i) = (
+            self.experts as u64,
+            self.capacity as u64,
+            self.hidden as u64,
+            self.intermediate as u64,
+        );
+        e * (2 * c * m * i + 2 * c * i * m)
+    }
+}
+
+/// Per-thread `(C, I_blk)` tile buffers — the VMEM analogue. Thread-local
+/// so pool units never contend or allocate after warmup.
+#[derive(Default)]
+struct TileScratch {
+    h: Vec<f32>,
+    a: Vec<f32>,
+    da: Vec<f32>,
+}
+
+thread_local! {
+    static SCRATCH: RefCell<TileScratch> = RefCell::new(TileScratch::default());
+}
+
+fn with_tile_scratch<R>(f: impl FnOnce(&mut TileScratch) -> R) -> R {
+    SCRATCH.with(|s| f(&mut s.borrow_mut()))
+}
+
+fn check_shapes(shape: &FfnShape, x: &[f32], w1: &[f32], w2: &[f32], out: &[f32]) {
+    assert_eq!(x.len(), shape.x_len(), "x shape mismatch");
+    assert_eq!(w1.len(), shape.w1_len(), "w1 shape mismatch");
+    assert_eq!(w2.len(), shape.w2_len(), "w2 shape mismatch");
+    assert_eq!(out.len(), shape.x_len(), "out shape mismatch");
+}
+
+/// One forward (expert, I-tile) unit: `dst (C, M) = gelu(x_e @ w1_tile)
+/// @ w2_tile`. `h` accumulates in m-order (axpy), so the hidden tile is
+/// bitwise identical to the naive dot-product order.
+#[allow(clippy::too_many_arguments)]
+fn fwd_tile(
+    sc: &mut TileScratch,
+    x: &[f32],  // (C, M) — one expert's slab
+    w1: &[f32], // (M, I) — one expert's up-projection
+    w2: &[f32], // (I, M)
+    dst: &mut [f32],
+    c: usize,
+    m: usize,
+    i: usize,
+    i0: usize,
+    blk: usize,
+) {
+    let h = &mut sc.h;
+    h.clear();
+    h.resize(c * blk, 0.0);
+    for t in 0..c {
+        let xr = &x[t * m..(t + 1) * m];
+        let hr = &mut h[t * blk..(t + 1) * blk];
+        for (mm, &xv) in xr.iter().enumerate() {
+            let wr = &w1[mm * i + i0..mm * i + i0 + blk];
+            for (hv, &wv) in hr.iter_mut().zip(wr) {
+                *hv += xv * wv;
+            }
+        }
+    }
+    let a = &mut sc.a;
+    a.clear();
+    a.extend(h.iter().map(|&hv| gelu(hv)));
+    dst.fill(0.0);
+    for t in 0..c {
+        let ar = &a[t * blk..(t + 1) * blk];
+        let dr = &mut dst[t * m..(t + 1) * m];
+        for (ii, &av) in ar.iter().enumerate() {
+            let wr = &w2[(i0 + ii) * m..(i0 + ii + 1) * m];
+            for (dv, &wv) in dr.iter_mut().zip(wr) {
+                *dv += av * wv;
+            }
+        }
+    }
+}
+
+/// Cache-tiled forward: `out = gelu(x @ w1) @ w2` per expert, one
+/// (expert, I-tile) unit per pool task. `partial` is a caller-owned
+/// reusable buffer (resized to `units x C x M`); tile partials merge
+/// serially in fixed tile order, so the output is bitwise identical
+/// across pool sizes (including a zero-worker pool).
+pub fn fwd_tiled(
+    pool_ref: &WorkerPool,
+    shape: FfnShape,
+    x: &[f32],
+    w1: &[f32],
+    w2: &[f32],
+    out: &mut [f32],
+    partial: &mut Vec<f32>,
+) {
+    check_shapes(&shape, x, w1, w2, out);
+    let FfnShape { experts: e, capacity: c, hidden: m, intermediate: i, i_block: blk } = shape;
+    let tiles = shape.n_tiles();
+    let units = shape.units();
+    let cm = c * m;
+    if partial.len() < units * cm {
+        partial.resize(units * cm, 0.0);
+    }
+    {
+        let base = SendPtr::new(partial.as_mut_ptr());
+        let body = |u: usize| {
+            let e_idx = u / tiles;
+            let i0 = (u % tiles) * blk;
+            let xe = &x[e_idx * cm..(e_idx + 1) * cm];
+            let w1e = &w1[e_idx * m * i..(e_idx + 1) * m * i];
+            let w2e = &w2[e_idx * i * m..(e_idx + 1) * i * m];
+            // SAFETY: unit `u` owns the disjoint range
+            // [u * cm, (u + 1) * cm) of `partial`, and the pool joins
+            // every unit before the merge below reads it.
+            let dst = unsafe { std::slice::from_raw_parts_mut(base.get().add(u * cm), cm) };
+            with_tile_scratch(|sc| fwd_tile(sc, xe, w1e, w2e, dst, c, m, i, i0, blk));
+        };
+        pool::run_shards(
+            Some(pool_ref),
+            units,
+            shape.fwd_flops().min(usize::MAX as u64) as usize,
+            MIN_PARALLEL_FLOPS as usize,
+            &body,
+        );
+    }
+    // exact merge in fixed tile order per expert: same association no
+    // matter how many workers computed the partials
+    for e_idx in 0..e {
+        let out_e = &mut out[e_idx * cm..(e_idx + 1) * cm];
+        let unit0 = e_idx * tiles;
+        out_e.copy_from_slice(&partial[unit0 * cm..(unit0 + 1) * cm]);
+        for t_idx in 1..tiles {
+            let src = &partial[(unit0 + t_idx) * cm..(unit0 + t_idx + 1) * cm];
+            for (acc, &v) in out_e.iter_mut().zip(src) {
+                *acc += v;
+            }
+        }
+    }
+}
+
+/// Naive baseline: untiled per-expert dot-product GEMMs. The first
+/// matmul walks `w1` columns at stride I and the second walks `w2`
+/// columns at stride M — the textbook order the tiled kernel exists to
+/// beat. `h_scratch` holds one expert's full `(C, I)` hidden matrix.
+pub fn fwd_naive(
+    shape: FfnShape,
+    x: &[f32],
+    w1: &[f32],
+    w2: &[f32],
+    out: &mut [f32],
+    h_scratch: &mut Vec<f32>,
+) {
+    check_shapes(&shape, x, w1, w2, out);
+    let FfnShape { experts: e, capacity: c, hidden: m, intermediate: i, .. } = shape;
+    let cm = c * m;
+    h_scratch.clear();
+    h_scratch.resize(c * i, 0.0);
+    for e_idx in 0..e {
+        let xe = &x[e_idx * cm..(e_idx + 1) * cm];
+        let w1e = &w1[e_idx * m * i..(e_idx + 1) * m * i];
+        let w2e = &w2[e_idx * i * m..(e_idx + 1) * i * m];
+        for t in 0..c {
+            for ii in 0..i {
+                let mut acc = 0.0f32;
+                for mm in 0..m {
+                    acc += xe[t * m + mm] * w1e[mm * i + ii];
+                }
+                h_scratch[t * i + ii] = acc;
+            }
+        }
+        for hv in h_scratch.iter_mut() {
+            *hv = gelu(*hv);
+        }
+        let out_e = &mut out[e_idx * cm..(e_idx + 1) * cm];
+        for t in 0..c {
+            for mm in 0..m {
+                let mut acc = 0.0f32;
+                for ii in 0..i {
+                    acc += h_scratch[t * i + ii] * w2e[ii * m + mm];
+                }
+                out_e[t * m + mm] = acc;
+            }
+        }
+    }
+}
+
+/// Tiled backward with activation rematerialization. Per (expert,
+/// I-tile) unit, recomputes `h` and `a = gelu(h)`, then emits
+///
+/// ```text
+///   dh = (g @ w2_tile^T) * gelu'(h)
+///   dw1[e, :, i0..i1] = x_e^T @ dh        (unit-owned slice, no merge)
+///   dw2[e, i0..i1, :] = a^T @ g_e         (unit-owned slice, no merge)
+///   dx_e += dh @ w1_tile^T                (partials merged in tile order)
+/// ```
+///
+/// `dw1`/`dw2` are fully overwritten. `dx` is optional: the training
+/// path feeds a frozen input slab and skips it; parity tests pass
+/// `Some` to check the full VJP against `ref.py`.
+#[allow(clippy::too_many_arguments)]
+pub fn bwd_tiled(
+    pool_ref: &WorkerPool,
+    shape: FfnShape,
+    x: &[f32],
+    w1: &[f32],
+    w2: &[f32],
+    g: &[f32],
+    dw1: &mut [f32],
+    dw2: &mut [f32],
+    mut dx: Option<&mut [f32]>,
+    partial: &mut Vec<f32>,
+) {
+    check_shapes(&shape, x, w1, w2, g);
+    assert_eq!(dw1.len(), shape.w1_len(), "dw1 shape mismatch");
+    assert_eq!(dw2.len(), shape.w2_len(), "dw2 shape mismatch");
+    let FfnShape { experts: e, capacity: c, hidden: m, intermediate: i, i_block: blk } = shape;
+    let tiles = shape.n_tiles();
+    let units = shape.units();
+    let cm = c * m;
+    let want_dx = dx.is_some();
+    if let Some(dxs) = dx.as_deref() {
+        assert_eq!(dxs.len(), shape.x_len(), "dx shape mismatch");
+    }
+    if want_dx && partial.len() < units * cm {
+        partial.resize(units * cm, 0.0);
+    }
+    {
+        let dw1p = SendPtr::new(dw1.as_mut_ptr());
+        let dw2p = SendPtr::new(dw2.as_mut_ptr());
+        let dxp = SendPtr::new(partial.as_mut_ptr());
+        let body = |u: usize| {
+            let e_idx = u / tiles;
+            let i0 = (u % tiles) * blk;
+            let xe = &x[e_idx * cm..(e_idx + 1) * cm];
+            let ge = &g[e_idx * cm..(e_idx + 1) * cm];
+            let w1e = &w1[e_idx * m * i..(e_idx + 1) * m * i];
+            let w2e = &w2[e_idx * i * m..(e_idx + 1) * i * m];
+            // SAFETY: unit `u` owns dw1[e, :, i0..i0+blk) and
+            // dw2[e, i0..i0+blk, :) — tiles are disjoint across units —
+            // plus [u * cm, (u + 1) * cm) of the dx partials; the pool
+            // joins every unit before any of them is read.
+            let dw1e =
+                unsafe { std::slice::from_raw_parts_mut(dw1p.get().add(e_idx * m * i), m * i) };
+            let dw2e =
+                unsafe { std::slice::from_raw_parts_mut(dw2p.get().add(e_idx * i * m), i * m) };
+            with_tile_scratch(|sc| {
+                // rematerialize h and a for this tile
+                let (h, a, da) = (&mut sc.h, &mut sc.a, &mut sc.da);
+                h.clear();
+                h.resize(c * blk, 0.0);
+                for t in 0..c {
+                    let xr = &xe[t * m..(t + 1) * m];
+                    let hr = &mut h[t * blk..(t + 1) * blk];
+                    for (mm, &xv) in xr.iter().enumerate() {
+                        let wr = &w1e[mm * i + i0..mm * i + i0 + blk];
+                        for (hv, &wv) in hr.iter_mut().zip(wr) {
+                            *hv += xv * wv;
+                        }
+                    }
+                }
+                a.clear();
+                a.extend(h.iter().map(|&hv| gelu(hv)));
+                // da = g @ w2_tile^T (contiguous dot), then dh in place
+                da.clear();
+                da.resize(c * blk, 0.0);
+                for t in 0..c {
+                    let gr = &ge[t * m..(t + 1) * m];
+                    let dr = &mut da[t * blk..(t + 1) * blk];
+                    for (ii, dv) in dr.iter_mut().enumerate() {
+                        let wr = &w2e[(i0 + ii) * m..(i0 + ii + 1) * m];
+                        let mut acc = 0.0f32;
+                        for (&gv, &wv) in gr.iter().zip(wr) {
+                            acc += gv * wv;
+                        }
+                        *dv = acc;
+                    }
+                }
+                for (dv, &hv) in da.iter_mut().zip(h.iter()) {
+                    *dv *= gelu_grad(hv);
+                }
+                // dw1 tile: dw1[e, mm, i0..i1] = sum_t x[t, mm] * dh[t, :]
+                for mm in 0..m {
+                    dw1e[mm * i + i0..mm * i + i0 + blk].fill(0.0);
+                }
+                for t in 0..c {
+                    let dhr = &da[t * blk..(t + 1) * blk];
+                    let xr = &xe[t * m..(t + 1) * m];
+                    for (mm, &xv) in xr.iter().enumerate() {
+                        let dst = &mut dw1e[mm * i + i0..mm * i + i0 + blk];
+                        for (dv, &dhv) in dst.iter_mut().zip(dhr) {
+                            *dv += xv * dhv;
+                        }
+                    }
+                }
+                // dw2 tile: dw2[e, i0+ii, :] = sum_t a[t, ii] * g[t, :]
+                dw2e[i0 * m..(i0 + blk) * m].fill(0.0);
+                for t in 0..c {
+                    let ar = &a[t * blk..(t + 1) * blk];
+                    let gr = &ge[t * m..(t + 1) * m];
+                    for (ii, &av) in ar.iter().enumerate() {
+                        let dst = &mut dw2e[(i0 + ii) * m..(i0 + ii + 1) * m];
+                        for (dv, &gv) in dst.iter_mut().zip(gr) {
+                            *dv += av * gv;
+                        }
+                    }
+                }
+                // dx partial: dh @ w1_tile^T (contiguous dot)
+                if want_dx {
+                    let dst =
+                        unsafe { std::slice::from_raw_parts_mut(dxp.get().add(u * cm), cm) };
+                    for t in 0..c {
+                        let dhr = &da[t * blk..(t + 1) * blk];
+                        let dr = &mut dst[t * m..(t + 1) * m];
+                        for (mm, dv) in dr.iter_mut().enumerate() {
+                            let wr = &w1e[mm * i + i0..mm * i + i0 + blk];
+                            let mut acc = 0.0f32;
+                            for (&dhv, &wv) in dhr.iter().zip(wr) {
+                                acc += dhv * wv;
+                            }
+                            *dv = acc;
+                        }
+                    }
+                }
+            });
+        };
+        pool::run_shards(
+            Some(pool_ref),
+            units,
+            (3 * shape.fwd_flops()).min(usize::MAX as u64) as usize,
+            MIN_PARALLEL_FLOPS as usize,
+            &body,
+        );
+    }
+    if let Some(dxs) = dx.as_deref_mut() {
+        for e_idx in 0..e {
+            let dx_e = &mut dxs[e_idx * cm..(e_idx + 1) * cm];
+            let unit0 = e_idx * tiles;
+            dx_e.copy_from_slice(&partial[unit0 * cm..(unit0 + 1) * cm]);
+            for t_idx in 1..tiles {
+                let src = &partial[(unit0 + t_idx) * cm..(unit0 + t_idx + 1) * cm];
+                for (acc, &v) in dx_e.iter_mut().zip(src) {
+                    *acc += v;
+                }
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+    use std::sync::Arc;
+
+    fn fill(rng: &mut Rng, n: usize, scale: f32) -> Vec<f32> {
+        (0..n).map(|_| (rng.normal() as f32) * scale).collect()
+    }
+
+    fn rel_close(a: &[f32], b: &[f32], tol: f32) -> bool {
+        a.iter().zip(b).all(|(&x, &y)| (x - y).abs() <= tol * y.abs().max(1.0))
+    }
+
+    #[test]
+    fn pick_i_block_mirrors_python() {
+        assert_eq!(pick_i_block(4096, None).unwrap(), 512);
+        assert_eq!(pick_i_block(256, None).unwrap(), 256);
+        assert_eq!(pick_i_block(24, None).unwrap(), 24);
+        assert_eq!(pick_i_block(24, Some(8)).unwrap(), 8);
+        assert_eq!(pick_i_block(48, Some(36)).unwrap(), 4); // 36 -> 18 -> 9 -> 4
+        assert!(pick_i_block(0, None).is_err());
+    }
+
+    #[test]
+    fn tiled_matches_naive_forward() {
+        let shape = FfnShape::with_block(3, 5, 8, 24, Some(8)).unwrap();
+        let mut rng = Rng::new(11);
+        let x = fill(&mut rng, shape.x_len(), 1.0);
+        let w1 = fill(&mut rng, shape.w1_len(), 0.1);
+        let w2 = fill(&mut rng, shape.w2_len(), 0.1);
+        let pool = WorkerPool::new(2);
+        let mut out_t = vec![0.0; shape.x_len()];
+        let mut out_n = vec![0.0; shape.x_len()];
+        let mut partial = Vec::new();
+        let mut h = Vec::new();
+        fwd_tiled(&pool, shape, &x, &w1, &w2, &mut out_t, &mut partial);
+        fwd_naive(shape, &x, &w1, &w2, &mut out_n, &mut h);
+        assert!(rel_close(&out_t, &out_n, 1e-5), "tiled vs naive forward diverged");
+    }
+
+    #[test]
+    fn forward_bitwise_stable_across_pools() {
+        let shape = FfnShape::with_block(4, 6, 16, 32, Some(8)).unwrap();
+        let mut rng = Rng::new(7);
+        let x = fill(&mut rng, shape.x_len(), 1.0);
+        let w1 = fill(&mut rng, shape.w1_len(), 0.05);
+        let w2 = fill(&mut rng, shape.w2_len(), 0.05);
+        let mut reference: Option<Vec<u32>> = None;
+        for workers in [0usize, 1, 3] {
+            let pool = Arc::new(WorkerPool::new(workers));
+            let mut out = vec![0.0; shape.x_len()];
+            let mut partial = Vec::new();
+            fwd_tiled(&pool, shape, &x, &w1, &w2, &mut out, &mut partial);
+            let bits: Vec<u32> = out.iter().map(|v| v.to_bits()).collect();
+            match &reference {
+                None => reference = Some(bits),
+                Some(r) => assert_eq!(&bits, r, "pool size {workers} diverged"),
+            }
+        }
+    }
+
+    #[test]
+    fn backward_bitwise_stable_across_pools_with_dx() {
+        let shape = FfnShape::with_block(2, 4, 8, 16, Some(4)).unwrap();
+        let mut rng = Rng::new(23);
+        let x = fill(&mut rng, shape.x_len(), 1.0);
+        let w1 = fill(&mut rng, shape.w1_len(), 0.1);
+        let w2 = fill(&mut rng, shape.w2_len(), 0.1);
+        let g = fill(&mut rng, shape.x_len(), 0.01);
+        let mut reference: Option<Vec<u32>> = None;
+        for workers in [0usize, 2] {
+            let pool = Arc::new(WorkerPool::new(workers));
+            let mut dw1 = vec![0.0; shape.w1_len()];
+            let mut dw2 = vec![0.0; shape.w2_len()];
+            let mut dx = vec![0.0; shape.x_len()];
+            let mut partial = Vec::new();
+            bwd_tiled(
+                &pool,
+                shape,
+                &x,
+                &w1,
+                &w2,
+                &g,
+                &mut dw1,
+                &mut dw2,
+                Some(&mut dx),
+                &mut partial,
+            );
+            let bits: Vec<u32> = dw1
+                .iter()
+                .chain(dw2.iter())
+                .chain(dx.iter())
+                .map(|v| v.to_bits())
+                .collect();
+            match &reference {
+                None => reference = Some(bits),
+                Some(r) => assert_eq!(&bits, r, "pool size {workers} diverged"),
+            }
+        }
+    }
+
+    #[test]
+    fn gelu_limits() {
+        assert_eq!(gelu(0.0), 0.0);
+        assert!((gelu(10.0) - 10.0).abs() < 1e-4, "gelu(x) -> x for large x");
+        assert!(gelu(-10.0).abs() < 1e-4, "gelu(x) -> 0 for very negative x");
+        assert!((gelu_grad(10.0) - 1.0).abs() < 1e-4);
+        assert!(gelu_grad(-10.0).abs() < 1e-4);
+    }
+}

@@ -29,9 +29,14 @@
 //! load/drops, and exact all-to-all byte volumes — the layer the sharded
 //! runtime (`runtime::shard`) and the observed-traffic cluster simulation
 //! are built on.
+//!
+//! Downstream of routing, [`ffn`] holds the expert-batched FFN compute
+//! kernels (tiled forward/backward GEMMs) that turn routed counts into
+//! real per-expert compute for the `ComputeMode::Real` variants.
 
 pub mod dispatch;
 pub mod engine;
+pub mod ffn;
 pub mod fused;
 pub mod microbench;
 pub mod router;

@@ -81,8 +81,10 @@ pub trait Backend {
     /// Static description of the variant (config, capacity, leaf layout).
     fn info(&self) -> &VariantInfo;
 
-    /// Seed -> fresh train state. Deterministic per seed.
-    fn init_state(&self, seed: i32) -> Result<TrainState>;
+    /// Seed -> fresh train state. Deterministic per seed; the full 64 bits
+    /// participate (a regression pinned by `runtime_integration.rs` — the
+    /// old `i32` surface silently truncated the upper half).
+    fn init_state(&self, seed: u64) -> Result<TrainState>;
 
     /// One train step: consumes the state, returns the advanced state and
     /// the step statistics.
@@ -111,7 +113,7 @@ pub fn measure_step_series(
     samples: usize,
 ) -> Result<(Vec<f64>, StepStats)> {
     let cfg = backend.info().config.clone();
-    let mut state = backend.init_state(seed as i32)?;
+    let mut state = backend.init_state(seed)?;
     let mut batcher = Batcher::for_config(&cfg, Split::Train, seed);
     for _ in 0..warmup {
         let batch = batcher.next_batch();

@@ -10,7 +10,7 @@
 
 use anyhow::{Context as _, Result};
 
-use crate::config::{CapacityMode, ModelConfig, Routing};
+use crate::config::{CapacityMode, ComputeMode, ModelConfig, Routing};
 use crate::metrics::RunLog;
 use crate::runtime::shard::ShardedRun;
 use crate::util::json::{arr, num, obj, s, write as json_write, Value};
@@ -42,6 +42,8 @@ pub fn base_twin() -> ModelConfig {
         lr: 1e-3,
         warmup: 100,
         init_std: 0.02,
+        weight_decay: 0.01,
+        compute: ComputeMode::Simulated,
         workers: 1,
     }
 }

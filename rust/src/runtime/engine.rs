@@ -128,8 +128,11 @@ impl Backend for VariantRuntime {
     }
 
     /// Run the init module: seed -> fresh device-resident train state.
-    fn init_state(&self, seed: i32) -> Result<TrainState> {
-        let seed_lit = xla::Literal::scalar(seed);
+    /// The lowered init takes an i32 seed, so the 64-bit seed is folded
+    /// (xor of halves) instead of truncated — the upper bits still vary
+    /// the stream.
+    fn init_state(&self, seed: u64) -> Result<TrainState> {
+        let seed_lit = xla::Literal::scalar((seed ^ (seed >> 32)) as u32 as i32);
         let outs = self.init.execute::<xla::Literal>(&[seed_lit]).map_err(wrap)?;
         let buffers = into_single_replica(outs)?;
         if buffers.len() != self.info.n_state {

@@ -1,0 +1,334 @@
+//! Expert-FFN kernel bench: the cache-tiled `moe::ffn` kernels against
+//! the naive strided-dot baseline, over three geometries x pool sizes
+//! {0 (serial), 2, default}. Shared by `m6t bench --ffn`; writes the
+//! tracked perf trajectory `BENCH_ffn.json`.
+//!
+//! Every cell first cross-checks tiled-vs-naive forward parity
+//! (max relative diff, asserted < 1e-4), so the bench doubles as a
+//! numerics smoke; it then reports p50 latency for the naive forward,
+//! the tiled forward, and a full tiled train application (forward +
+//! rematerializing backward), plus GFLOP/s, tokens/sec, and the
+//! naive-vs-tiled speedup. The JSON's `min_tiled_speedup` field is the
+//! CI regression gate (>= 1.0 is structural — the tiled kernel exists
+//! to beat the textbook loop order).
+
+use std::time::Instant;
+
+use anyhow::{ensure, Context as _, Result};
+
+use crate::moe::ffn::{self, FfnShape};
+use crate::util::json::{arr, num, obj, s, write as json_write, Value};
+use crate::util::pool::{self, WorkerPool};
+use crate::util::rng::Rng;
+use crate::util::stats::percentile;
+use crate::util::table::{f2, Table};
+
+/// One benched FFN geometry (E, C, M, I).
+#[derive(Debug, Clone, Copy)]
+pub struct FfnGeometry {
+    pub name: &'static str,
+    pub experts: usize,
+    pub capacity: usize,
+    pub hidden: usize,
+    pub intermediate: usize,
+}
+
+/// The benched geometries: the base-sim expert slab, a mid-size twin,
+/// and a wide-intermediate shape that exercises multi-tile experts.
+pub const GEOMETRIES: [FfnGeometry; 3] = [
+    FfnGeometry { name: "sim-base", experts: 16, capacity: 40, hidden: 64, intermediate: 256 },
+    FfnGeometry { name: "mid", experts: 8, capacity: 64, hidden: 256, intermediate: 1024 },
+    FfnGeometry { name: "wide-i", experts: 4, capacity: 64, hidden: 128, intermediate: 2048 },
+];
+
+/// The benched pool sizes: serial (0 workers), a fixed 2-worker pool,
+/// and the machine default — deduplicated on small hosts.
+pub fn pool_sizes() -> Vec<usize> {
+    let mut v = vec![0usize, 2, pool::default_workers()];
+    v.sort_unstable();
+    v.dedup();
+    v
+}
+
+/// One measured (geometry, pool size) cell. The naive baseline is
+/// measured once per geometry (it ignores the pool) and repeated on
+/// every row so each row's speedup is self-contained.
+#[derive(Debug, Clone)]
+pub struct FfnBenchRow {
+    pub geometry: String,
+    pub experts: usize,
+    pub capacity: usize,
+    pub hidden: usize,
+    pub intermediate: usize,
+    pub i_block: usize,
+    pub tiles_per_expert: usize,
+    pub workers: usize,
+    pub naive_p50_ms: f64,
+    pub tiled_fwd_p50_ms: f64,
+    /// forward + rematerializing backward (the training application)
+    pub tiled_train_p50_ms: f64,
+    /// tiled-vs-naive forward parity on this cell's data
+    pub max_rel_diff: f64,
+}
+
+impl FfnBenchRow {
+    fn fwd_flops(&self) -> f64 {
+        let (e, c, m, i) = (
+            self.experts as f64,
+            self.capacity as f64,
+            self.hidden as f64,
+            self.intermediate as f64,
+        );
+        e * (2.0 * c * m * i + 2.0 * c * i * m)
+    }
+    /// Tiled forward throughput in GFLOP/s.
+    pub fn gflops(&self) -> f64 {
+        self.fwd_flops() / (self.tiled_fwd_p50_ms * 1e6)
+    }
+    /// Naive-vs-tiled forward speedup (> 1 = tiled faster) — the
+    /// machine-readable regression field.
+    pub fn speedup(&self) -> f64 {
+        self.naive_p50_ms / self.tiled_fwd_p50_ms
+    }
+    /// Expert-slab tokens trained per second (one fwd+bwd per token).
+    pub fn tokens_per_sec(&self) -> f64 {
+        (self.experts * self.capacity) as f64 * 1e3 / self.tiled_train_p50_ms
+    }
+}
+
+/// p50 wall-clock ms of `reps` calls after one warmup call.
+fn p50_ms(reps: usize, mut f: impl FnMut()) -> f64 {
+    f();
+    let mut ms = Vec::with_capacity(reps);
+    for _ in 0..reps {
+        let t0 = Instant::now();
+        f();
+        ms.push(t0.elapsed().as_secs_f64() * 1e3);
+    }
+    percentile(&ms, 50.0)
+}
+
+fn fill(rng: &mut Rng, n: usize, scale: f32) -> Vec<f32> {
+    (0..n).map(|_| (rng.normal() as f32) * scale).collect()
+}
+
+/// Run the full grid, `reps` measured calls per (cell, kernel).
+pub fn run_suite(reps: usize) -> Result<Vec<FfnBenchRow>> {
+    let reps = reps.max(1);
+    let mut rows = Vec::new();
+    for (gi, geo) in GEOMETRIES.iter().enumerate() {
+        let shape = FfnShape::new(geo.experts, geo.capacity, geo.hidden, geo.intermediate)?;
+        let mut rng = Rng::new(0x5EED ^ ((gi as u64 + 1) << 8));
+        let x = fill(&mut rng, shape.x_len(), 1.0);
+        let w1 = fill(&mut rng, shape.w1_len(), 0.05);
+        let w2 = fill(&mut rng, shape.w2_len(), 0.05);
+        let g = fill(&mut rng, shape.x_len(), 0.01);
+
+        let mut out_naive = vec![0.0f32; shape.x_len()];
+        let mut h_scratch = Vec::new();
+        let naive_ms = p50_ms(reps, || {
+            ffn::fwd_naive(shape, &x, &w1, &w2, &mut out_naive, &mut h_scratch);
+        });
+
+        for workers in pool_sizes() {
+            let pool = WorkerPool::new(workers);
+            let mut out = vec![0.0f32; shape.x_len()];
+            let mut partial = Vec::new();
+            let fwd_ms = p50_ms(reps, || {
+                ffn::fwd_tiled(&pool, shape, &x, &w1, &w2, &mut out, &mut partial);
+            });
+            let max_rel_diff = out
+                .iter()
+                .zip(&out_naive)
+                .map(|(&a, &b)| ((a - b).abs() / b.abs().max(1.0)) as f64)
+                .fold(0.0, f64::max);
+            ensure!(
+                max_rel_diff < 1e-4,
+                "tiled vs naive forward diverged on {} at {} workers: {max_rel_diff}",
+                geo.name,
+                workers
+            );
+            let mut dw1 = vec![0.0f32; shape.w1_len()];
+            let mut dw2 = vec![0.0f32; shape.w2_len()];
+            let train_ms = p50_ms(reps, || {
+                ffn::fwd_tiled(&pool, shape, &x, &w1, &w2, &mut out, &mut partial);
+                ffn::bwd_tiled(
+                    &pool,
+                    shape,
+                    &x,
+                    &w1,
+                    &w2,
+                    &g,
+                    &mut dw1,
+                    &mut dw2,
+                    None,
+                    &mut partial,
+                );
+            });
+            let row = FfnBenchRow {
+                geometry: geo.name.to_string(),
+                experts: geo.experts,
+                capacity: geo.capacity,
+                hidden: geo.hidden,
+                intermediate: geo.intermediate,
+                i_block: shape.i_block,
+                tiles_per_expert: shape.n_tiles(),
+                workers,
+                naive_p50_ms: naive_ms,
+                tiled_fwd_p50_ms: fwd_ms,
+                tiled_train_p50_ms: train_ms,
+                max_rel_diff,
+            };
+            eprintln!(
+                "[bench] ffn {} W={}: naive {:.3} ms, tiled {:.3} ms ({:.2}x, {:.1} GFLOP/s), \
+                 train {:.3} ms ({:.0} tok/s)",
+                row.geometry,
+                row.workers,
+                row.naive_p50_ms,
+                row.tiled_fwd_p50_ms,
+                row.speedup(),
+                row.gflops(),
+                row.tiled_train_p50_ms,
+                row.tokens_per_sec()
+            );
+            rows.push(row);
+        }
+    }
+    Ok(rows)
+}
+
+/// Minimum tiled-vs-naive speedup over the whole grid — the regression
+/// gate the JSON surfaces at top level. 0 (not inf) on an empty suite,
+/// so the JSON stays valid.
+pub fn min_tiled_speedup(rows: &[FfnBenchRow]) -> f64 {
+    let min = rows.iter().map(FfnBenchRow::speedup).fold(f64::INFINITY, f64::min);
+    if min.is_finite() {
+        min
+    } else {
+        0.0
+    }
+}
+
+/// Human-readable table over the suite.
+pub fn render_table(rows: &[FfnBenchRow], reps: usize) -> Table {
+    let mut t = Table::new(
+        format!("expert FFN: tiled kernel vs naive loop order, {reps} reps/cell"),
+        &[
+            "geometry",
+            "ExCxMxI",
+            "W",
+            "naive p50 ms",
+            "tiled p50 ms",
+            "train p50 ms",
+            "GFLOP/s",
+            "speedup",
+            "tok/s",
+        ],
+    );
+    for r in rows {
+        t.row(vec![
+            r.geometry.clone(),
+            format!("{}x{}x{}x{}", r.experts, r.capacity, r.hidden, r.intermediate),
+            r.workers.to_string(),
+            f2(r.naive_p50_ms),
+            f2(r.tiled_fwd_p50_ms),
+            f2(r.tiled_train_p50_ms),
+            f2(r.gflops()),
+            format!("{}x", f2(r.speedup())),
+            format!("{:.0}", r.tokens_per_sec()),
+        ]);
+    }
+    t
+}
+
+/// Serialize the suite to the tracked trajectory JSON.
+pub fn to_json(rows: &[FfnBenchRow], reps: usize) -> Value {
+    let items: Vec<Value> = rows
+        .iter()
+        .map(|r| {
+            obj(vec![
+                ("geometry", s(r.geometry.clone())),
+                ("experts", num(r.experts as f64)),
+                ("capacity", num(r.capacity as f64)),
+                ("hidden", num(r.hidden as f64)),
+                ("intermediate", num(r.intermediate as f64)),
+                ("i_block", num(r.i_block as f64)),
+                ("tiles_per_expert", num(r.tiles_per_expert as f64)),
+                ("workers", num(r.workers as f64)),
+                ("naive_p50_ms", num(r.naive_p50_ms)),
+                ("tiled_fwd_p50_ms", num(r.tiled_fwd_p50_ms)),
+                ("tiled_train_p50_ms", num(r.tiled_train_p50_ms)),
+                ("gflops", num(r.gflops())),
+                ("speedup", num(r.speedup())),
+                ("tokens_per_sec", num(r.tokens_per_sec())),
+                ("max_rel_diff", num(r.max_rel_diff)),
+            ])
+        })
+        .collect();
+    obj(vec![
+        ("bench", s("ffn")),
+        ("reps_per_cell", num(reps as f64)),
+        ("min_tiled_speedup", num(min_tiled_speedup(rows))),
+        ("rows", arr(items)),
+    ])
+}
+
+/// Write `BENCH_ffn.json` (or wherever `path` points).
+pub fn write_json(rows: &[FfnBenchRow], reps: usize, path: &str) -> Result<()> {
+    let text = json_write(&to_json(rows, reps)) + "\n";
+    std::fs::write(path, text).with_context(|| format!("writing {path}"))?;
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn geometries_are_tileable() {
+        for g in GEOMETRIES {
+            let shape = FfnShape::new(g.experts, g.capacity, g.hidden, g.intermediate).unwrap();
+            assert_eq!(shape.intermediate % shape.i_block, 0, "{}", g.name);
+            assert!(shape.n_tiles() >= 1, "{}", g.name);
+        }
+        // wide-i must actually exercise multi-tile experts
+        let w = GEOMETRIES[2];
+        let shape = FfnShape::new(w.experts, w.capacity, w.hidden, w.intermediate).unwrap();
+        assert!(shape.n_tiles() >= 2, "wide-i should span several I-tiles");
+    }
+
+    #[test]
+    fn pool_sizes_start_serial_and_dedupe() {
+        let sizes = pool_sizes();
+        assert_eq!(sizes[0], 0, "serial baseline first");
+        let mut sorted = sizes.clone();
+        sorted.dedup();
+        assert_eq!(sorted, sizes, "pool sizes must be unique");
+    }
+
+    #[test]
+    fn json_shape_is_stable() {
+        let rows = vec![FfnBenchRow {
+            geometry: "mid".into(),
+            experts: 8,
+            capacity: 64,
+            hidden: 256,
+            intermediate: 1024,
+            i_block: 512,
+            tiles_per_expert: 2,
+            workers: 2,
+            naive_p50_ms: 4.0,
+            tiled_fwd_p50_ms: 1.0,
+            tiled_train_p50_ms: 3.0,
+            max_rel_diff: 1e-7,
+        }];
+        let v = to_json(&rows, 8);
+        assert_eq!(v.get("bench").and_then(|b| b.as_str()), Some("ffn"));
+        assert_eq!(v.get("min_tiled_speedup").and_then(|x| x.as_f64()), Some(4.0));
+        let items = v.get("rows").and_then(|r| r.as_array()).unwrap();
+        assert_eq!(items.len(), 1);
+        assert_eq!(items[0].get("speedup").and_then(|x| x.as_f64()), Some(4.0));
+        let toks = items[0].get("tokens_per_sec").and_then(|x| x.as_f64()).unwrap();
+        assert!((toks - 8.0 * 64.0 * 1e3 / 3.0).abs() < 1e-6);
+    }
+}

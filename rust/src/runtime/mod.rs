@@ -13,8 +13,10 @@ pub mod backend;
 pub mod dispatch_bench;
 #[cfg(feature = "pjrt")]
 pub mod engine;
+pub mod ffn_bench;
 pub mod manifest;
 pub mod native;
+pub mod optim;
 pub mod overlap_bench;
 pub mod shard;
 pub mod step_bench;

@@ -19,6 +19,16 @@
 //!  * step latency is the calibrated Whale cluster model's prediction for
 //!    the variant's configuration ([`cluster::simulate_step`]).
 //!
+//! Variants with [`ComputeMode::Real`] (the `-real` registry twins)
+//! replace the PowerLaw loss with **actual expert compute**: the routed
+//! per-expert token counts fill a seeded `(E, C, M)` input slab, the
+//! tiled FFN kernels ([`moe::ffn`]) run the forward and backward GEMMs
+//! on the pool, the loss is the measured MSE against a scaled-copy
+//! regression target, and AdamW/Adafactor ([`runtime::optim`]) update
+//! real weight leaves. Routing, seeds, and stats aggregation are shared
+//! with the simulated path, and the sharded runtime calls the same
+//! [`real_train_step`] so D = 1 reproduces this backend bitwise.
+//!
 //! Everything is a pure function of (state leaves, step, batch), so
 //! checkpoint round-trips reproduce runs bitwise — the property the
 //! integration tests pin down.
@@ -31,19 +41,43 @@ use anyhow::{anyhow, bail, Result};
 use super::backend::{Backend, BackendProvider, StateRepr, StepStats, TrainState};
 use super::manifest::{DType, TensorSpec, VariantInfo};
 use crate::cluster::{simulate_step, table2_hardware};
-use crate::config::{paper, CapacityMode, ModelConfig, Routing};
+use crate::config::{paper, CapacityMode, ComputeMode, ModelConfig, Routing};
 use crate::data::Batch;
+use crate::moe::ffn::{self, FfnShape};
 use crate::moe::fused;
+use crate::runtime::optim;
 use crate::scaling::PowerLaw;
 use crate::util::pool::{self, SendPtr, WorkerPool};
 use crate::util::rng::Rng;
 use crate::util::stats::coefficient_of_variation;
 
+/// Leaf index of the first real FFN weight (leaves 0/1 are always the
+/// loss-law params and the router bias, in every compute mode).
+pub(crate) const REAL_WEIGHT_LEAF0: usize = 2;
+
+/// Leaf index of layer `l`'s up-projection `w1 (E, M, I)`.
+pub(crate) fn w1_leaf(l: usize) -> usize {
+    REAL_WEIGHT_LEAF0 + 2 * l
+}
+/// Leaf index of layer `l`'s down-projection `w2 (E, I, M)`.
+pub(crate) fn w2_leaf(l: usize) -> usize {
+    REAL_WEIGHT_LEAF0 + 2 * l + 1
+}
+/// Leaf index of the first optimizer leaf (4 per layer, after all
+/// weights): AdamW packs `[m_w1, v_w1, m_w2, v_w2]`, Adafactor packs
+/// `[vr_w1, vc_w1, vr_w2, vc_w2]`.
+pub(crate) fn opt_leaf0(layers: usize) -> usize {
+    REAL_WEIGHT_LEAF0 + 2 * layers
+}
+
 /// Synthesize the manifest entry a native variant would have had: the
-/// state layout is [loss-law params, router bias], and the bookkeeping
-/// counts mirror the python/rust accounting contract.
+/// state layout is [loss-law params, router bias], plus — for
+/// [`ComputeMode::Real`] — per-layer expert FFN weights followed by
+/// their optimizer leaves. The bookkeeping counts mirror the python/rust
+/// accounting contract.
 pub fn variant_info(cfg: &ModelConfig) -> VariantInfo {
-    let state_leaves = vec![
+    let (e, m, i) = (cfg.num_experts, cfg.hidden, cfg.intermediate);
+    let mut state_leaves = vec![
         TensorSpec { name: "loss_law".into(), shape: vec![3], dtype: DType::F32 },
         TensorSpec {
             name: "router_bias".into(),
@@ -51,6 +85,54 @@ pub fn variant_info(cfg: &ModelConfig) -> VariantInfo {
             dtype: DType::F32,
         },
     ];
+    if cfg.compute == ComputeMode::Real {
+        for l in 0..cfg.layers {
+            state_leaves.push(TensorSpec {
+                name: format!("layer{l}/ffn_w1"),
+                shape: vec![e, m, i],
+                dtype: DType::F32,
+            });
+            state_leaves.push(TensorSpec {
+                name: format!("layer{l}/ffn_w2"),
+                shape: vec![e, i, m],
+                dtype: DType::F32,
+            });
+        }
+    }
+    let n_params = state_leaves.len();
+    if cfg.compute == ComputeMode::Real {
+        if cfg.optimizer == "adafactor" {
+            // factored second moments: per-row / per-column means over
+            // each expert's matrix (sublinear memory, the 1T recipe)
+            for l in 0..cfg.layers {
+                for (w, rows, cols) in [("ffn_w1", m, i), ("ffn_w2", i, m)] {
+                    state_leaves.push(TensorSpec {
+                        name: format!("opt/layer{l}/{w}/vr"),
+                        shape: vec![e, rows],
+                        dtype: DType::F32,
+                    });
+                    state_leaves.push(TensorSpec {
+                        name: format!("opt/layer{l}/{w}/vc"),
+                        shape: vec![e, cols],
+                        dtype: DType::F32,
+                    });
+                }
+            }
+        } else {
+            for l in 0..cfg.layers {
+                for (w, rows, cols) in [("ffn_w1", m, i), ("ffn_w2", i, m)] {
+                    for mom in ["m", "v"] {
+                        state_leaves.push(TensorSpec {
+                            name: format!("opt/layer{l}/{w}/{mom}"),
+                            shape: vec![e, rows, cols],
+                            dtype: DType::F32,
+                        });
+                    }
+                }
+            }
+        }
+    }
+    let n_state = state_leaves.len();
     VariantInfo {
         name: cfg.name.clone(),
         dir: Default::default(),
@@ -58,9 +140,9 @@ pub fn variant_info(cfg: &ModelConfig) -> VariantInfo {
         init_hlo: Default::default(),
         step_hlo: Default::default(),
         eval_hlo: Default::default(),
-        n_params: state_leaves.len(),
-        n_opt: 0,
-        n_state: state_leaves.len(),
+        n_params,
+        n_opt: n_state - n_params,
+        n_state,
         param_count: cfg.param_count(),
         capacity: cfg.capacity(),
         state_leaves,
@@ -108,6 +190,14 @@ pub(crate) const STEP_SEED_MIX: u64 = 0x9E37_79B9_7F4A_7C15;
 pub(crate) const LAYER_SEED_MIX: u64 = 0x517C_C1B7_2722_0A95;
 /// Constant deriving the loss-noise stream from the step seed.
 pub(crate) const NOISE_SEED_MIX: u64 = 0xD1B5_4A32_D192_ED03;
+/// Constant deriving each expert's input-slab stream (real compute) from
+/// the layer seed.
+pub(crate) const SLAB_SEED_MIX: u64 = 0xE703_37A4_2F29_1D5B;
+
+/// Regression target of the real-compute objective: the FFN learns
+/// `y = TARGET_SCALE * x` on its dispatched tokens, so the loss is a
+/// genuine measured quantity that actually descends under the optimizer.
+pub(crate) const TARGET_SCALE: f32 = 0.25;
 
 fn hash_str(s: &str) -> u64 {
     let mut h = 0xcbf2_9ce4_8422_2325u64;
@@ -288,6 +378,261 @@ pub(crate) fn route_grid_counts(
     }
 }
 
+/// Reusable buffers for the real-compute path: input/output/gradient
+/// slabs, the FFN kernels' tile partials, per-worker and worker-summed
+/// weight gradients, and optimizer update scratch. Lives inside
+/// [`StepScratch`] (and the sharded runtime's scratch) so the hot path is
+/// allocation-free after warmup.
+#[derive(Default)]
+pub(crate) struct RealScratch {
+    /// (E, C, M) seeded input slab
+    x: Vec<f32>,
+    /// (E, C, M) FFN output
+    y: Vec<f32>,
+    /// (E, C, M) loss gradient dL/dy
+    g: Vec<f32>,
+    /// tile partials for [`ffn::fwd_tiled`] / [`ffn::bwd_tiled`]
+    partial: Vec<f32>,
+    /// one worker's weight grads for the current layer
+    dw1: Vec<f32>,
+    dw2: Vec<f32>,
+    /// worker-summed weight grads for the current layer
+    gw1: Vec<f32>,
+    gw2: Vec<f32>,
+    /// optimizer update scratch (Adafactor's `u`)
+    opt_u: Vec<f32>,
+}
+
+/// Fill one layer's `(E, C, M)` input slab: expert `e` gets
+/// `min(load_e, C)` rows of seeded unit normals (its own RNG stream, so
+/// the slab is a pure function of `(layer_seed, loads)` regardless of
+/// scheduling); padding rows stay zero. One expert per pool unit.
+fn fill_slab(
+    pool_ref: &WorkerPool,
+    x: &mut [f32],
+    layer_seed: u64,
+    loads: &[u32],
+    capacity: usize,
+    m: usize,
+) {
+    let experts = loads.len();
+    assert_eq!(x.len(), experts * capacity * m, "slab shape mismatch");
+    x.fill(0.0);
+    let base = SendPtr::new(x.as_mut_ptr());
+    let body = |e_idx: usize| {
+        let rows = (loads[e_idx] as usize).min(capacity);
+        if rows == 0 {
+            return;
+        }
+        let mut rng = Rng::new(layer_seed ^ (e_idx as u64 + 1).wrapping_mul(SLAB_SEED_MIX));
+        // SAFETY: expert `e_idx` owns the disjoint row range starting at
+        // e_idx * capacity * m; the pool joins every unit before reads.
+        let dst = unsafe {
+            std::slice::from_raw_parts_mut(base.get().add(e_idx * capacity * m), rows * m)
+        };
+        for v in dst.iter_mut() {
+            *v = rng.normal() as f32;
+        }
+    };
+    pool::run_shards(Some(pool_ref), experts, experts * capacity * m, MIN_GEN_PARALLEL_WORK, &body);
+}
+
+/// One worker-layer of real forward compute: fill the routed slab, run
+/// the tiled FFN, and measure the regression loss
+/// `mean((y - TARGET_SCALE * x)^2)` over the active (routed) rows,
+/// writing `dL/dy` into `g`. Returns the mean loss; padding rows carry
+/// zero gradient so dropped tokens contribute nothing.
+#[allow(clippy::too_many_arguments)]
+fn real_layer_forward(
+    pool_ref: &WorkerPool,
+    shape: FfnShape,
+    layer_seed: u64,
+    loads: &[u32],
+    w1: &[f32],
+    w2: &[f32],
+    x: &mut Vec<f32>,
+    y: &mut Vec<f32>,
+    g: &mut Vec<f32>,
+    partial: &mut Vec<f32>,
+) -> f64 {
+    let (c, m) = (shape.capacity, shape.hidden);
+    x.clear();
+    x.resize(shape.x_len(), 0.0);
+    y.clear();
+    y.resize(shape.x_len(), 0.0);
+    g.clear();
+    g.resize(shape.x_len(), 0.0);
+    fill_slab(pool_ref, x, layer_seed, loads, c, m);
+    ffn::fwd_tiled(pool_ref, shape, x, w1, w2, y, partial);
+    let active: usize = loads.iter().map(|&v| (v as usize).min(c)).sum();
+    let denom = (active * m).max(1) as f32;
+    let mut lsum = 0.0f64;
+    for (e_idx, &load) in loads.iter().enumerate() {
+        let rows = (load as usize).min(c);
+        let at = e_idx * c * m;
+        for idx in at..at + rows * m {
+            let r = y[idx] - TARGET_SCALE * x[idx];
+            lsum += r as f64 * r as f64;
+            g[idx] = 2.0 * r / denom;
+        }
+    }
+    lsum / denom as f64
+}
+
+/// One full real training step over every (worker, layer): forward +
+/// backward through the tiled FFN kernels, gradients averaged across
+/// workers (data parallelism over the grid's routed loads), then the
+/// configured optimizer update. Shared by [`NativeBackend::step`]
+/// (`worker_seeds.len() == 1`) and the sharded runtime, whose D = 1 case
+/// therefore reproduces the native backend bitwise (`x / 1.0 == x`).
+///
+/// `wl_load` is row-major `[worker][layer][expert]` kept counts from
+/// [`route_grid_counts`]. Returns `(mean loss, grad L2 norm)`.
+#[allow(clippy::too_many_arguments)]
+pub(crate) fn real_train_step(
+    pool_ref: &WorkerPool,
+    cfg: &ModelConfig,
+    capacity: usize,
+    leaves: &mut [Vec<f32>],
+    worker_seeds: &[u64],
+    wl_load: &[u32],
+    step: i64,
+    sc: &mut RealScratch,
+) -> Result<(f64, f64)> {
+    let (e, m, i) = (cfg.num_experts, cfg.hidden, cfg.intermediate);
+    let layers = cfg.layers;
+    let d = worker_seeds.len();
+    assert_eq!(wl_load.len(), d * layers * e, "wl_load shape mismatch");
+    let shape = FfnShape::new(e, capacity, m, i)?;
+    let lr = optim::lr_schedule(cfg.lr, cfg.warmup, step);
+    let wd = cfg.weight_decay as f32;
+    let opt0 = opt_leaf0(layers);
+    if leaves.len() <= opt0 {
+        bail!("real compute needs {} state leaves, got {}", opt0 + 4 * layers, leaves.len());
+    }
+    let mut loss_sum = 0.0f64;
+    let mut grad_sq = 0.0f64;
+    for l in 0..layers {
+        sc.gw1.clear();
+        sc.gw1.resize(shape.w1_len(), 0.0);
+        sc.gw2.clear();
+        sc.gw2.resize(shape.w2_len(), 0.0);
+        sc.dw1.resize(shape.w1_len(), 0.0);
+        sc.dw2.resize(shape.w2_len(), 0.0);
+        let mut layer_loss = 0.0f64;
+        for (w, &wseed) in worker_seeds.iter().enumerate() {
+            let layer_seed = wseed ^ (l as u64 + 1).wrapping_mul(LAYER_SEED_MIX);
+            let loads = &wl_load[(w * layers + l) * e..(w * layers + l + 1) * e];
+            layer_loss += real_layer_forward(
+                pool_ref,
+                shape,
+                layer_seed,
+                loads,
+                &leaves[w1_leaf(l)],
+                &leaves[w2_leaf(l)],
+                &mut sc.x,
+                &mut sc.y,
+                &mut sc.g,
+                &mut sc.partial,
+            );
+            ffn::bwd_tiled(
+                pool_ref,
+                shape,
+                &sc.x,
+                &leaves[w1_leaf(l)],
+                &leaves[w2_leaf(l)],
+                &sc.g,
+                &mut sc.dw1,
+                &mut sc.dw2,
+                None,
+                &mut sc.partial,
+            );
+            // accumulate in worker order (deterministic association)
+            for (acc, &v) in sc.gw1.iter_mut().zip(&sc.dw1) {
+                *acc += v;
+            }
+            for (acc, &v) in sc.gw2.iter_mut().zip(&sc.dw2) {
+                *acc += v;
+            }
+        }
+        loss_sum += layer_loss / d as f64;
+        // average the data-parallel grads; exact no-op at d = 1
+        for v in sc.gw1.iter_mut() {
+            *v /= d as f32;
+        }
+        for v in sc.gw2.iter_mut() {
+            *v /= d as f32;
+        }
+        for &v in sc.gw1.iter().chain(sc.gw2.iter()) {
+            grad_sq += v as f64 * v as f64;
+        }
+        // optimizer update: params and opt leaves via split borrows
+        let (params, opt) = leaves.split_at_mut(opt0);
+        let (pw1s, pw2s) = params.split_at_mut(w2_leaf(l));
+        let p_w1 = &mut pw1s[w1_leaf(l)];
+        let p_w2 = &mut pw2s[0];
+        let (o_w1, o_w2) = opt[4 * l..4 * l + 4].split_at_mut(2);
+        let (oa, ob) = o_w1.split_at_mut(1);
+        let (oc, od) = o_w2.split_at_mut(1);
+        if cfg.optimizer == "adafactor" {
+            optim::adafactor_update_factored(
+                p_w1, &sc.gw1, &mut oa[0], &mut ob[0], e, m, i, step, lr, wd, &mut sc.opt_u,
+            );
+            optim::adafactor_update_factored(
+                p_w2, &sc.gw2, &mut oc[0], &mut od[0], e, i, m, step, lr, wd, &mut sc.opt_u,
+            );
+        } else {
+            optim::adamw_update(p_w1, &sc.gw1, &mut oa[0], &mut ob[0], step, lr, wd);
+            optim::adamw_update(p_w2, &sc.gw2, &mut oc[0], &mut od[0], step, lr, wd);
+        }
+    }
+    Ok((loss_sum / layers.max(1) as f64, grad_sq.sqrt()))
+}
+
+/// Forward-only real compute for eval: the measured regression loss over
+/// the routed loads, averaged across workers and layers. No state is
+/// touched.
+pub(crate) fn real_forward_loss(
+    pool_ref: &WorkerPool,
+    cfg: &ModelConfig,
+    capacity: usize,
+    leaves: &[Vec<f32>],
+    worker_seeds: &[u64],
+    wl_load: &[u32],
+    sc: &mut RealScratch,
+) -> Result<f64> {
+    let (e, m, i) = (cfg.num_experts, cfg.hidden, cfg.intermediate);
+    let layers = cfg.layers;
+    let d = worker_seeds.len();
+    assert_eq!(wl_load.len(), d * layers * e, "wl_load shape mismatch");
+    let shape = FfnShape::new(e, capacity, m, i)?;
+    if leaves.len() <= w2_leaf(layers.saturating_sub(1)) {
+        bail!("real compute needs weight leaves through {}", w2_leaf(layers - 1));
+    }
+    let mut loss_sum = 0.0f64;
+    for l in 0..layers {
+        let mut layer_loss = 0.0f64;
+        for (w, &wseed) in worker_seeds.iter().enumerate() {
+            let layer_seed = wseed ^ (l as u64 + 1).wrapping_mul(LAYER_SEED_MIX);
+            let loads = &wl_load[(w * layers + l) * e..(w * layers + l + 1) * e];
+            layer_loss += real_layer_forward(
+                pool_ref,
+                shape,
+                layer_seed,
+                loads,
+                &leaves[w1_leaf(l)],
+                &leaves[w2_leaf(l)],
+                &mut sc.x,
+                &mut sc.y,
+                &mut sc.g,
+                &mut sc.partial,
+            );
+        }
+        loss_sum += layer_loss / d as f64;
+    }
+    Ok(loss_sum / layers.max(1) as f64)
+}
+
 /// Per-step reusable buffers. `step` takes `&self`, so these live behind
 /// a lock: the fused grid's partial histograms and the merged per-layer
 /// counts must survive across steps for the hot path to be
@@ -302,6 +647,8 @@ struct StepScratch {
     wl_load: Vec<u32>,
     /// per-layer dropped-selection counts
     wl_dropped: Vec<u32>,
+    /// real-compute slabs/grads (empty for simulated variants)
+    real: RealScratch,
 }
 
 /// The native execution engine for one variant.
@@ -356,9 +703,9 @@ impl Backend for NativeBackend {
         &self.info
     }
 
-    fn init_state(&self, seed: i32) -> Result<TrainState> {
+    fn init_state(&self, seed: u64) -> Result<TrainState> {
         let cfg = &self.info.config;
-        let mut rng = Rng::new(hash_str(&cfg.name) ^ seed as u32 as u64);
+        let mut rng = Rng::new(hash_str(&cfg.name) ^ seed);
         let floor = loss_floor(cfg);
         // jitter the floor only slightly (±0.1%): seeds must vary the init,
         // but cross-variant loss comparisons ride on the encoded floor gaps
@@ -371,7 +718,21 @@ impl Backend for NativeBackend {
         let bias: Vec<f32> = (0..cfg.layers * cfg.num_experts)
             .map(|_| (rng.normal() * 0.4) as f32)
             .collect();
-        let leaves = vec![vec![l_inf as f32, a as f32, b as f32], bias];
+        let mut leaves = vec![vec![l_inf as f32, a as f32, b as f32], bias];
+        if cfg.compute == ComputeMode::Real {
+            // real FFN weights continue the same init stream: per layer,
+            // w1 (E, M, I) then w2 (E, I, M), N(0, init_std^2)
+            let (e, m, i) = (cfg.num_experts, cfg.hidden, cfg.intermediate);
+            for _ in 0..cfg.layers {
+                for len in [e * m * i, e * i * m] {
+                    leaves.push((0..len).map(|_| (rng.normal() * cfg.init_std) as f32).collect());
+                }
+            }
+            // zero-initialized optimizer moments, per the manifest layout
+            for spec in &self.info.state_leaves[opt_leaf0(cfg.layers)..] {
+                leaves.push(vec![0.0; spec.elements()]);
+            }
+        }
         Ok(TrainState { step: 0, repr: StateRepr::Host(leaves) })
     }
 
@@ -400,7 +761,7 @@ impl Backend for NativeBackend {
         // Tile histograms merge exactly, so the result is bitwise
         // identical across pool sizes and to the two-pass oracle.
         let mut scratch_guard = self.scratch.lock().expect("step scratch poisoned");
-        let StepScratch { partial, wl_demand, wl_load, wl_dropped } = &mut *scratch_guard;
+        let StepScratch { partial, wl_demand, wl_load, wl_dropped, real } = &mut *scratch_guard;
         let pool_ref = self.pool();
         let bias = &leaves[1];
         let n = layers * experts;
@@ -451,9 +812,26 @@ impl Backend for NativeBackend {
         let drop_frac = total_dropped as f64 / routed.max(1.0);
 
         let s_next = (step + 1) as f64;
-        let mut noise = Rng::new(base_seed ^ NOISE_SEED_MIX);
-        let loss = law.predict(s_next) + 0.02 * drop_frac + 0.01 * noise.normal();
-        let grad_norm = law.a * law.b * s_next.powf(-law.b - 1.0) * 50.0 + 0.5;
+        let (loss, grad_norm) = if cfg.compute == ComputeMode::Real {
+            // actual expert compute: routed loads fill seeded slabs, the
+            // tiled FFN runs forward + backward, the optimizer updates
+            // real weight leaves, and the loss is the measured MSE
+            real_train_step(
+                pool_ref,
+                cfg,
+                capacity,
+                &mut leaves,
+                &[base_seed],
+                &wl_load[..n],
+                step,
+                real,
+            )?
+        } else {
+            let mut noise = Rng::new(base_seed ^ NOISE_SEED_MIX);
+            let loss = law.predict(s_next) + 0.02 * drop_frac + 0.01 * noise.normal();
+            let grad_norm = law.a * law.b * s_next.powf(-law.b - 1.0) * 50.0 + 0.5;
+            (loss, grad_norm)
+        };
 
         // the aux balancing loss drives the router bias toward uniform —
         // balance improves, quality does not (its cost sits in the floor)
@@ -478,9 +856,52 @@ impl Backend for NativeBackend {
     }
 
     fn eval(&self, state: &TrainState, batch: &Batch) -> Result<(f64, f64)> {
+        let cfg = &self.info.config;
         let leaves = self.host_leaves(state)?;
-        let law = law_from_leaf(&leaves[0])?;
         let count = (batch.batch * batch.text_len) as f64;
+        if cfg.compute == ComputeMode::Real {
+            // measured forward loss over this batch's routed loads —
+            // deterministic in (state, batch), no jitter needed
+            let tokens = cfg.tokens_per_batch();
+            let experts = cfg.num_experts;
+            let layers = cfg.layers;
+            let capacity = self.info.capacity;
+            let prototypes = cfg.routing.prototypes().max(1) as usize;
+            let base_seed = hash_f32s(&leaves[0])
+                ^ (state.step as u64).wrapping_mul(STEP_SEED_MIX)
+                ^ batch_hash(batch);
+            let mut guard = self.scratch.lock().expect("step scratch poisoned");
+            let StepScratch { partial, wl_demand, wl_load, wl_dropped, real } = &mut *guard;
+            let pool_ref = self.pool();
+            let n = layers * experts;
+            if wl_demand.len() < n {
+                wl_demand.resize(n, 0);
+                wl_load.resize(n, 0);
+            }
+            if wl_dropped.len() < layers {
+                wl_dropped.resize(layers, 0);
+            }
+            route_grid_counts(
+                pool_ref,
+                &[base_seed],
+                &leaves[1],
+                tokens,
+                experts,
+                layers,
+                prototypes,
+                cfg.routing,
+                capacity,
+                partial,
+                &mut wl_demand[..n],
+                &mut wl_load[..n],
+                &mut wl_dropped[..layers],
+            );
+            let seeds = [base_seed];
+            let nll =
+                real_forward_loss(pool_ref, cfg, capacity, leaves, &seeds, &wl_load[..n], real)?;
+            return Ok((nll * count, count));
+        }
+        let law = law_from_leaf(&leaves[0])?;
         // deterministic in (state, batch): paired eval across strategies
         let jitter = ((batch_hash(batch) % 1000) as f64 / 1000.0 - 0.5) * 0.01;
         let nll = law.predict((state.step + 1) as f64) + 0.05 + jitter;
@@ -543,6 +964,8 @@ fn sim_base() -> ModelConfig {
         lr: 1e-3,
         warmup: 100,
         init_std: 0.02,
+        weight_decay: 0.01,
+        compute: ComputeMode::Simulated,
         workers: 1,
     }
 }
@@ -614,6 +1037,20 @@ pub fn registry() -> Vec<ModelConfig> {
         Routing::Prototype(2),
         CapacityMode::Times1,
     ));
+
+    // real-compute twins: actual per-expert GEMM FFN + optimizer updates
+    // (lr/warmup tuned so the measured loss visibly descends in ~40 steps)
+    let mut real = base.clone();
+    real.name = "base-sim-real".into();
+    real.compute = ComputeMode::Real;
+    real.lr = 2e-3;
+    real.warmup = 20;
+    out.push(real.clone());
+    let mut real_af = real.clone();
+    real_af.name = "base-sim-real-af".into();
+    real_af.optimizer = "adafactor".into();
+    real_af.lr = 5e-3;
+    out.push(real_af);
 
     let mut e2e = base.clone();
     e2e.name = "e2e-100m".into();

@@ -36,15 +36,15 @@ use anyhow::{bail, Result};
 use super::backend::{Backend, StateRepr, StepStats, TrainState};
 use super::manifest::VariantInfo;
 use super::native::{
-    batch_hash, fill_gates, hash_f32s, law_from_leaf, route_grid_counts, NativeBackend,
-    LAYER_SEED_MIX, NOISE_SEED_MIX, STEP_SEED_MIX,
+    batch_hash, fill_gates, hash_f32s, law_from_leaf, real_train_step, route_grid_counts,
+    NativeBackend, RealScratch, LAYER_SEED_MIX, NOISE_SEED_MIX, STEP_SEED_MIX,
 };
 use crate::cluster::topology::layer_bottleneck_seconds;
 use crate::cluster::{
     simulate_step_observed, simulate_step_overlapped, table2_hardware, HardwareModel,
     ObservedTraffic, Topology,
 };
-use crate::config::ModelConfig;
+use crate::config::{ComputeMode, ModelConfig};
 use crate::data::{Batch, Batcher, Split};
 use crate::metrics::RunLog;
 use crate::moe::{DispatchPlan, DispatchSummary, RouteOutput, RouterSpec, RoutingEngine};
@@ -102,6 +102,8 @@ struct ShardScratch {
     /// recycled `DispatchPlan`s: [`ShardedRun::step`] returns each step's
     /// plans here so the next step reuses their send/demand vectors
     plan_pool: Vec<DispatchPlan>,
+    /// real-compute slabs/grads (empty for simulated variants)
+    real: RealScratch,
 }
 
 /// The expert-parallel execution driver: D workers over one shared
@@ -195,7 +197,7 @@ impl ShardedRun {
     /// Fresh train state — identical to the single-worker backend's
     /// (worker replicas are data-parallel-synchronized, so one state
     /// vector represents all of them).
-    pub fn init_state(&self, seed: i32) -> Result<TrainState> {
+    pub fn init_state(&self, seed: u64) -> Result<TrainState> {
         self.native.init_state(seed)
     }
 
@@ -372,8 +374,26 @@ impl ShardedRun {
 
         let s_next = (step + 1) as f64;
         let noise_mean = noise_sum / d as f64;
-        let loss = law.predict(s_next) + 0.02 * drop_frac + 0.01 * noise_mean;
-        let grad_norm = law.a * law.b * s_next.powf(-law.b - 1.0) * 50.0 + 0.5;
+        let (loss, grad_norm) = if cfg.compute == ComputeMode::Real {
+            // real expert compute over the full (worker, layer) grid —
+            // the same shared kernel path as NativeBackend::step, so
+            // D = 1 reproduces the single-worker run bitwise
+            let ShardScratch { worker_seeds, wl_load, real, .. } = &mut *scratch;
+            real_train_step(
+                pool_ref,
+                cfg,
+                capacity,
+                &mut leaves,
+                worker_seeds,
+                &wl_load[..n],
+                step,
+                real,
+            )?
+        } else {
+            let loss = law.predict(s_next) + 0.02 * drop_frac + 0.01 * noise_mean;
+            let grad_norm = law.a * law.b * s_next.powf(-law.b - 1.0) * 50.0 + 0.5;
+            (loss, grad_norm)
+        };
 
         // data-parallel replicas stay synchronized: the aux balancing
         // decay applies once per global step, exactly as at D = 1
@@ -461,7 +481,7 @@ impl ShardedRun {
         log: &mut RunLog,
         verbose: bool,
     ) -> Result<TrainState> {
-        let state = self.init_state(seed as i32)?;
+        let state = self.init_state(seed)?;
         self.train_from(state, steps, seed, log, verbose)
     }
 

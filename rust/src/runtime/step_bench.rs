@@ -107,7 +107,7 @@ impl StepBenchRow {
 fn measure(run: &ShardedRun, mode: StepMode, steps: usize, seed: u64) -> Result<Vec<f64>> {
     let cfg = run.info().config.clone();
     let d = run.workers();
-    let mut state = run.init_state(seed as i32)?;
+    let mut state = run.init_state(seed)?;
     let mut batcher = Batcher::for_config(&cfg, Split::Train, seed);
     let mut ms = Vec::with_capacity(steps);
     for i in 0..steps + 1 {
@@ -135,9 +135,9 @@ fn assert_modes_agree(run: &ShardedRun, seed: u64) -> Result<()> {
     for _ in 0..d {
         batches.push(batcher.next_batch());
     }
-    let init = run.init_state(seed as i32)?;
+    let init = run.init_state(seed)?;
     let (_, a, pa) = run.step_detailed_mode(init, &batches, StepMode::Fused)?;
-    let init = run.init_state(seed as i32)?;
+    let init = run.init_state(seed)?;
     let (_, b, pb) = run.step_detailed_mode(init, &batches, StepMode::TwoPass)?;
     let same = a.loss.to_bits() == b.loss.to_bits()
         && a.load.len() == b.load.len()

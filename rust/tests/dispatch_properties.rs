@@ -148,7 +148,7 @@ fn stats_bits(s: &StepStats) -> (u32, u32, u32, Vec<u32>, Vec<u32>, u64) {
 fn run_sharded_steps(run: &ShardedRun, steps: usize, seed: u64) -> Vec<StepStats> {
     let cfg = run.info().config.clone();
     let d = run.workers();
-    let mut state = run.init_state(seed as i32).expect("init");
+    let mut state = run.init_state(seed).expect("init");
     let mut batcher = Batcher::for_config(&cfg, Split::Train, seed);
     let mut out = Vec::with_capacity(steps);
     for _ in 0..steps {

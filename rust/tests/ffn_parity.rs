@@ -1,0 +1,189 @@
+//! Golden parity: the native FFN and optimizer kernels against the
+//! Python reference (`kernels/ref.py`, `kernels/moe_ffn.py`,
+//! `compile/optim.py`), via the checked-in fixtures in
+//! `tests/fixtures/*.json` (regenerate with
+//! `python3 -m python.compile.kernels.gen_fixtures`).
+//!
+//! Tolerance is 1e-5 *relative* (`|a - b| <= 1e-5 * max(1, |b|)`): the
+//! Rust kernels accumulate in a different association order than the
+//! jax einsums, so bitwise equality is not expected — but anything
+//! looser than 1e-5 on these shapes means the math diverged.
+//!
+//! The FFN grid covers the acceptance cases: base geometry,
+//! non-128-multiple dims, a single expert, and capacity 1.
+
+use m6t::moe::ffn::{self, FfnShape};
+use m6t::runtime::optim;
+use m6t::util::json::{self, Value};
+use m6t::util::pool::WorkerPool;
+
+const REL_TOL: f32 = 1e-5;
+
+fn load(name: &str) -> Value {
+    let path = format!("{}/tests/fixtures/{name}", env!("CARGO_MANIFEST_DIR"));
+    let text = std::fs::read_to_string(&path).unwrap_or_else(|e| panic!("reading {path}: {e}"));
+    json::parse(&text).expect("fixture JSON parses")
+}
+
+fn f32s(v: &Value, key: &str) -> Vec<f32> {
+    v.get(key)
+        .and_then(|a| a.as_array())
+        .unwrap_or_else(|| panic!("fixture missing array {key:?}"))
+        .iter()
+        .map(|x| x.as_f64().expect("fixture number") as f32)
+        .collect()
+}
+
+fn usize_of(v: &Value, key: &str) -> usize {
+    v.get(key)
+        .and_then(|x| x.as_usize())
+        .unwrap_or_else(|| panic!("fixture missing int {key:?}"))
+}
+
+fn assert_close(got: &[f32], want: &[f32], what: &str) {
+    assert_eq!(got.len(), want.len(), "{what}: length mismatch");
+    for (j, (&a, &b)) in got.iter().zip(want).enumerate() {
+        let tol = REL_TOL * b.abs().max(1.0);
+        assert!(
+            (a - b).abs() <= tol,
+            "{what}[{j}]: got {a}, reference {b} (|diff| {} > tol {tol})",
+            (a - b).abs()
+        );
+    }
+}
+
+#[test]
+fn gelu_matches_reference() {
+    let fix = load("gelu.json");
+    let x = f32s(&fix, "x");
+    let want_g = f32s(&fix, "gelu");
+    let want_dg = f32s(&fix, "gelu_grad");
+    let got_g: Vec<f32> = x.iter().map(|&v| ffn::gelu(v)).collect();
+    let got_dg: Vec<f32> = x.iter().map(|&v| ffn::gelu_grad(v)).collect();
+    assert_close(&got_g, &want_g, "gelu");
+    assert_close(&got_dg, &want_dg, "gelu_grad");
+}
+
+#[test]
+fn moe_ffn_forward_and_backward_match_reference() {
+    let fix = load("moe_ffn.json");
+    let cases = fix.get("cases").and_then(|c| c.as_array()).expect("cases");
+    assert_eq!(cases.len(), 4, "the acceptance grid has four geometries");
+    for case in cases {
+        let name = case.get("name").and_then(|n| n.as_str()).expect("case name").to_string();
+        let (e, c) = (usize_of(case, "experts"), usize_of(case, "capacity"));
+        let (m, i) = (usize_of(case, "hidden"), usize_of(case, "intermediate"));
+        let i_block = usize_of(case, "i_block");
+        let shape = FfnShape::with_block(e, c, m, i, Some(i_block)).expect("shape");
+        assert_eq!(shape.i_block, i_block, "{name}: tile pick diverged from python");
+
+        let x = f32s(case, "x");
+        let w1 = f32s(case, "w1");
+        let w2 = f32s(case, "w2");
+        let g = f32s(case, "g");
+        let want_out = f32s(case, "out");
+        let want_dx = f32s(case, "dx");
+        let want_dw1 = f32s(case, "dw1");
+        let want_dw2 = f32s(case, "dw2");
+
+        // naive forward
+        let mut out = vec![0.0f32; shape.x_len()];
+        let mut h = Vec::new();
+        ffn::fwd_naive(shape, &x, &w1, &w2, &mut out, &mut h);
+        assert_close(&out, &want_out, &format!("{name}/fwd_naive"));
+
+        for workers in [0usize, 2] {
+            let pool = WorkerPool::new(workers);
+            let mut out_t = vec![0.0f32; shape.x_len()];
+            let mut partial = Vec::new();
+            ffn::fwd_tiled(&pool, shape, &x, &w1, &w2, &mut out_t, &mut partial);
+            assert_close(&out_t, &want_out, &format!("{name}/fwd_tiled/W{workers}"));
+
+            let mut dw1 = vec![0.0f32; shape.w1_len()];
+            let mut dw2 = vec![0.0f32; shape.w2_len()];
+            let mut dx = vec![0.0f32; shape.x_len()];
+            ffn::bwd_tiled(
+                &pool,
+                shape,
+                &x,
+                &w1,
+                &w2,
+                &g,
+                &mut dw1,
+                &mut dw2,
+                Some(&mut dx),
+                &mut partial,
+            );
+            assert_close(&dx, &want_dx, &format!("{name}/dx/W{workers}"));
+            assert_close(&dw1, &want_dw1, &format!("{name}/dw1/W{workers}"));
+            assert_close(&dw2, &want_dw2, &format!("{name}/dw2/W{workers}"));
+        }
+    }
+}
+
+#[test]
+fn adamw_step_matches_reference() {
+    let fix = load("optim.json");
+    let case = fix.get("adamw").expect("adamw fixture");
+    let lr_peak = case.get("lr").and_then(|x| x.as_f64()).expect("lr");
+    let warmup = usize_of(case, "warmup");
+    let step = case.get("step").and_then(|x| x.as_i64()).expect("step");
+    let wd = case.get("weight_decay").and_then(|x| x.as_f64()).expect("wd") as f32;
+    let mut p = f32s(case, "p");
+    let g = f32s(case, "g");
+    let mut m = f32s(case, "m");
+    let mut v = f32s(case, "v");
+    let lr = optim::lr_schedule(lr_peak, warmup, step);
+    optim::adamw_update(&mut p, &g, &mut m, &mut v, step, lr, wd);
+    assert_close(&p, &f32s(case, "new_p"), "adamw/p");
+    assert_close(&m, &f32s(case, "new_m"), "adamw/m");
+    assert_close(&v, &f32s(case, "new_v"), "adamw/v");
+}
+
+#[test]
+fn adafactor_factored_step_matches_reference() {
+    let fix = load("optim.json");
+    let case = fix.get("adafactor_factored").expect("adafactor fixture");
+    let lr_peak = case.get("lr").and_then(|x| x.as_f64()).expect("lr");
+    let warmup = usize_of(case, "warmup");
+    let step = case.get("step").and_then(|x| x.as_i64()).expect("step");
+    let wd = case.get("weight_decay").and_then(|x| x.as_f64()).expect("wd") as f32;
+    let shape: Vec<usize> = case
+        .get("shape")
+        .and_then(|a| a.as_array())
+        .expect("shape")
+        .iter()
+        .map(|x| x.as_usize().expect("dim"))
+        .collect();
+    let (mats, rows, cols) = (shape[0], shape[1], shape[2]);
+    let mut p = f32s(case, "p");
+    let g = f32s(case, "g");
+    let mut vr = f32s(case, "vr");
+    let mut vc = f32s(case, "vc");
+    let mut u = Vec::new();
+    let lr = optim::lr_schedule(lr_peak, warmup, step);
+    optim::adafactor_update_factored(
+        &mut p, &g, &mut vr, &mut vc, mats, rows, cols, step, lr, wd, &mut u,
+    );
+    assert_close(&p, &f32s(case, "new_p"), "adafactor/p");
+    assert_close(&vr, &f32s(case, "new_vr"), "adafactor/vr");
+    assert_close(&vc, &f32s(case, "new_vc"), "adafactor/vc");
+}
+
+#[test]
+fn adafactor_vector_step_matches_reference() {
+    let fix = load("optim.json");
+    let case = fix.get("adafactor_vector").expect("vector fixture");
+    let lr_peak = case.get("lr").and_then(|x| x.as_f64()).expect("lr");
+    let warmup = usize_of(case, "warmup");
+    let step = case.get("step").and_then(|x| x.as_i64()).expect("step");
+    let wd = case.get("weight_decay").and_then(|x| x.as_f64()).expect("wd") as f32;
+    let mut p = f32s(case, "p");
+    let g = f32s(case, "g");
+    let mut v = f32s(case, "v");
+    let mut u = Vec::new();
+    let lr = optim::lr_schedule(lr_peak, warmup, step);
+    optim::adafactor_update_vector(&mut p, &g, &mut v, step, lr, wd, &mut u);
+    assert_close(&p, &f32s(case, "new_p"), "adafactor_vector/p");
+    assert_close(&v, &f32s(case, "new_v"), "adafactor_vector/v");
+}

@@ -153,7 +153,7 @@ fn worker_batches(run: &ShardedRun, seed: u64, steps: usize) -> Vec<Vec<Batch>> 
 }
 
 fn run_mode(run: &ShardedRun, seed: u64, steps: usize, mode: StepMode) -> Vec<StepStats> {
-    let mut state = run.init_state(seed as i32).expect("init");
+    let mut state = run.init_state(seed).expect("init");
     let mut out = Vec::with_capacity(steps);
     for batches in worker_batches(run, seed, steps) {
         let (next, stats, _plans) = run.step_detailed_mode(state, &batches, mode).expect("step");

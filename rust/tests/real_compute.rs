@@ -1,0 +1,221 @@
+//! End-to-end tests of `ComputeMode::Real`: the native expert-FFN +
+//! optimizer step actually training, staying bitwise deterministic
+//! across pool sizes and across the native/sharded split, and
+//! round-tripping mid-run through a v2 checkpoint.
+//!
+//! The heavy checks run on a shrunken Real config (tiny M/I/E, two
+//! layers) so the whole file stays cheap under `cargo test` debug
+//! builds; the registry twins themselves get a short smoke. The descent
+//! thresholds have wide margin: a numpy simulation of the same
+//! objective/optimizer puts the 60-step tail/head loss ratio at ~0.5
+//! (AdamW) and ~0.1 (Adafactor) across seeds, and we assert < 0.75.
+
+use std::sync::Arc;
+
+use m6t::config::ModelConfig;
+use m6t::coordinator::{Checkpoint, TrainOptions, Trainer};
+use m6t::data::{Batcher, Split};
+use m6t::runtime::native::registry;
+use m6t::runtime::{
+    Backend, BackendProvider, NativeBackend, NativeProvider, ShardedRun, StateRepr, TrainState,
+};
+use m6t::util::pool::WorkerPool;
+
+/// A Real-compute config small enough that 60 debug-mode steps are
+/// cheap: it inherits every policy knob from the registry twin and only
+/// shrinks the geometry.
+fn tiny_real(optimizer: &str) -> ModelConfig {
+    let mut cfg = registry()
+        .into_iter()
+        .find(|c| c.name == "base-sim-real")
+        .expect("base-sim-real in registry");
+    cfg.name = format!("tiny-real-{optimizer}");
+    cfg.hidden = 16;
+    cfg.intermediate = 32;
+    cfg.num_experts = 4;
+    cfg.layers = 2;
+    cfg.batch = 2;
+    cfg.patches = 8;
+    cfg.text_len = 24;
+    cfg.optimizer = optimizer.into();
+    if optimizer == "adafactor" {
+        cfg.lr = 5e-3;
+    }
+    cfg
+}
+
+fn host_leaves(state: &TrainState) -> &Vec<Vec<f32>> {
+    match &state.repr {
+        StateRepr::Host(leaves) => leaves,
+        #[cfg(feature = "pjrt")]
+        StateRepr::Device(_) => panic!("native state must be host-resident"),
+    }
+}
+
+/// Run `steps` training steps from a fresh init and return the loss
+/// series plus the final state.
+fn run_steps(backend: &dyn Backend, steps: usize, seed: u64) -> (Vec<f32>, TrainState) {
+    let cfg = &backend.info().config;
+    let mut state = backend.init_state(seed).unwrap();
+    let mut batcher = Batcher::for_config(cfg, Split::Train, seed);
+    let mut losses = Vec::with_capacity(steps);
+    for i in 0..steps {
+        let batch = batcher.next_batch();
+        let (next, stats) = backend.step(state, &batch).unwrap();
+        state = next;
+        assert!(stats.loss.is_finite(), "step {i}: loss {}", stats.loss);
+        assert!(stats.loss > 0.0, "step {i}: sum-of-squares loss must be positive");
+        assert!(
+            stats.grad_norm.is_finite() && stats.grad_norm > 0.0,
+            "step {i}: grad_norm {}",
+            stats.grad_norm
+        );
+        losses.push(stats.loss);
+    }
+    (losses, state)
+}
+
+fn descent_ratio(losses: &[f32]) -> f64 {
+    let head: f64 = losses[..5].iter().map(|&l| l as f64).sum::<f64>() / 5.0;
+    let tail: f64 = losses[losses.len() - 5..].iter().map(|&l| l as f64).sum::<f64>() / 5.0;
+    tail / head
+}
+
+#[test]
+fn real_adamw_training_descends() {
+    let backend = NativeBackend::new(&tiny_real("adamw"));
+    let (losses, _) = run_steps(&backend, 60, 42);
+    let ratio = descent_ratio(&losses);
+    assert!(
+        ratio < 0.75,
+        "60 AdamW steps on the real FFN must cut the regression loss: \
+         head->tail ratio {ratio:.3} (losses {:?} .. {:?})",
+        &losses[..3],
+        &losses[losses.len() - 3..]
+    );
+}
+
+#[test]
+fn real_adafactor_training_descends() {
+    let backend = NativeBackend::new(&tiny_real("adafactor"));
+    let (losses, _) = run_steps(&backend, 60, 42);
+    let ratio = descent_ratio(&losses);
+    assert!(
+        ratio < 0.75,
+        "60 Adafactor steps on the real FFN must cut the regression loss: \
+         head->tail ratio {ratio:.3}"
+    );
+}
+
+/// The (expert, I-tile) pool sharding merges partials in a fixed tile
+/// order, so the whole training trajectory must be bitwise identical no
+/// matter how many workers execute it.
+#[test]
+fn real_step_is_bitwise_identical_across_pool_sizes() {
+    let cfg = tiny_real("adamw");
+    let mut reference: Option<(Vec<u32>, Vec<Vec<f32>>)> = None;
+    for workers in [0usize, 2, 5] {
+        let backend = NativeBackend::with_pool(&cfg, Arc::new(WorkerPool::new(workers)));
+        let (losses, state) = run_steps(&backend, 4, 9);
+        let bits: Vec<u32> = losses.iter().map(|l| l.to_bits()).collect();
+        let leaves = backend.state_to_host(&state).unwrap();
+        match &reference {
+            None => reference = Some((bits, leaves)),
+            Some((ref_bits, ref_leaves)) => {
+                assert_eq!(ref_bits, &bits, "W={workers}: per-step loss bits diverged");
+                assert_eq!(ref_leaves, &leaves, "W={workers}: final state diverged");
+            }
+        }
+    }
+}
+
+/// Worker 0's shard seed folds in `0 * WORKER_SEED_MIX`, so a D=1
+/// sharded run must reproduce the single-process native trajectory
+/// bitwise — losses and the full final state.
+#[test]
+fn sharded_d1_real_run_matches_native_bitwise() {
+    let cfg = tiny_real("adamw");
+    let native = NativeBackend::new(&cfg);
+    let shard = ShardedRun::new(&cfg, 1).unwrap();
+
+    let mut n_state = native.init_state(11).unwrap();
+    let mut s_state = shard.init_state(11).unwrap();
+    assert_eq!(host_leaves(&n_state), host_leaves(&s_state), "init diverged");
+
+    let mut batcher = Batcher::for_config(&cfg, Split::Train, 11);
+    for i in 0..4 {
+        let batch = batcher.next_batch();
+        let (n_next, n_stats) = native.step(n_state, &batch).unwrap();
+        let (s_next, s_stats, _) =
+            shard.step_detailed(s_state, std::slice::from_ref(&batch)).unwrap();
+        assert_eq!(
+            n_stats.loss.to_bits(),
+            s_stats.loss.to_bits(),
+            "step {i}: native {} vs sharded {}",
+            n_stats.loss,
+            s_stats.loss
+        );
+        n_state = n_next;
+        s_state = s_next;
+    }
+    assert_eq!(host_leaves(&n_state), host_leaves(&s_state), "final state diverged");
+}
+
+/// Acceptance: a mid-run Real checkpoint round-trips through the v2
+/// on-disk format (named, dtype-tagged leaves) and resumes bitwise
+/// identically — and the leaf names actually carry the FFN weights and
+/// optimizer moments.
+#[test]
+fn real_checkpoint_v2_roundtrip_resumes_bitwise() {
+    let cfg = tiny_real("adamw");
+    let opts = TrainOptions { steps: 4, seed: 42, verbose: false, ..Default::default() };
+    let trainer = Trainer::new(Box::new(NativeBackend::new(&cfg)), opts);
+    let (_, state) = trainer.train().unwrap();
+
+    let ck = trainer.snapshot(&state).unwrap();
+    let has = |name: &str| ck.names.iter().any(|n| n == name);
+    assert!(has("layer0/ffn_w1"), "missing layer0/ffn_w1 in {:?}", ck.names);
+    assert!(has("layer1/ffn_w2"), "missing layer1/ffn_w2 in {:?}", ck.names);
+    assert!(has("opt/layer0/ffn_w1/m"), "missing opt moment leaf in {:?}", ck.names);
+    assert!(has("opt/layer1/ffn_w2/v"), "missing opt moment leaf in {:?}", ck.names);
+
+    let path = std::env::temp_dir().join("m6t-real-v2-roundtrip.bin");
+    ck.save(&path).unwrap();
+    let raw = std::fs::read(&path).unwrap();
+    assert_eq!(&raw[..8], b"M6TCKPT2", "mid-run saves must use the v2 format");
+
+    let loaded = Checkpoint::load(&path).unwrap();
+    assert_eq!(loaded.step, state.step);
+    let restored = trainer.restore(&loaded).unwrap();
+
+    // continue both one step on the same batch: bitwise-identical loss
+    // and next state
+    let mut batcher = Batcher::for_config(&cfg, Split::Train, 42);
+    batcher.seek(state.step as u64 * cfg.batch as u64);
+    let batch = batcher.next_batch();
+    let (mem_next, mem_stats) = trainer.backend.step(state, &batch).unwrap();
+    let (ck_next, ck_stats) = trainer.backend.step(restored, &batch).unwrap();
+    assert_eq!(mem_stats.loss.to_bits(), ck_stats.loss.to_bits());
+    assert_eq!(host_leaves(&mem_next), host_leaves(&ck_next), "post-resume state diverged");
+    let _ = std::fs::remove_file(path);
+}
+
+/// Registry smoke for the real twins: they load through the provider,
+/// step with finite positive loss, and eval deterministically.
+#[test]
+fn registry_real_twins_step_and_eval() {
+    let provider = NativeProvider::new();
+    for name in ["base-sim-real", "base-sim-real-af"] {
+        let backend = provider.load(name).expect(name);
+        let (losses, state) = run_steps(backend.as_ref(), 2, 7);
+        assert_eq!(losses.len(), 2, "{name}");
+
+        let mut b1 = Batcher::for_config(&backend.info().config, Split::Eval, 5);
+        let mut b2 = Batcher::for_config(&backend.info().config, Split::Eval, 5);
+        let (nll1, c1) = backend.eval(&state, &b1.next_batch()).unwrap();
+        let (nll2, c2) = backend.eval(&state, &b2.next_batch()).unwrap();
+        assert_eq!(nll1.to_bits(), nll2.to_bits(), "{name}: eval must be deterministic");
+        assert_eq!(c1, c2, "{name}");
+        assert!(nll1.is_finite() && c1 > 0.0, "{name}: nll {nll1}, count {c1}");
+    }
+}

@@ -47,6 +47,8 @@ fn registry_loads_and_is_consistent() {
         "xlarge-sim-2top1-cap1",
         "e2e-100m",
         "base-top2",
+        "base-sim-real",
+        "base-sim-real-af",
     ] {
         assert!(names.iter().any(|n| n == required), "missing {required}");
     }
@@ -73,6 +75,11 @@ fn check_init_determinism(rt: &dyn Backend) {
     let hc = rt.state_to_host(&c).unwrap();
     assert_eq!(ha, hb, "same seed, same init");
     assert_ne!(ha, hc, "different seed, different init");
+    // regression: the old `seed as u32` truncation made seeds differing
+    // only in their upper 32 bits collide to the same init
+    let d = rt.init_state(7 | (1 << 32)).unwrap();
+    let hd = rt.state_to_host(&d).unwrap();
+    assert_ne!(ha, hd, "upper seed bits must vary the init stream");
 }
 
 fn check_step_dynamics(rt: &dyn Backend) {
