@@ -1,6 +1,6 @@
 # Convenience targets; tier-1 verify is `cargo build --release && cargo test -q`.
 
-.PHONY: build test fmt run report artifacts smoke bench-step bench-overlap bench-ffn
+.PHONY: build test fmt lint lint-unsafe miri tsan run report artifacts smoke bench-step bench-overlap bench-ffn
 
 build:
 	cargo build --release
@@ -10,6 +10,33 @@ test:
 
 fmt:
 	cargo fmt --check
+
+# Static unsafe-budget gate: scans the workspace for `unsafe` tokens and
+# checks them against rust/unsafe_allowlist.txt (every site needs an
+# adjacent `// SAFETY:` comment, and the only budgeted file is
+# rust/src/util/shard.rs). Also runs as a plain unit test in `make test`.
+lint-unsafe:
+	cargo run --release -- lint-unsafe
+
+lint: lint-unsafe
+	cargo clippy -- -D warnings
+	cargo fmt --check
+
+# Miri over the concurrency-relevant subset (tests shrink their sizes
+# under cfg(miri)). Needs a nightly toolchain with the miri component.
+miri:
+	MIRIFLAGS="-Zmiri-disable-isolation -Zmiri-ignore-leaks" \
+		cargo +nightly miri test -q -p m6t --lib -- \
+		util::shard util::pool moe::engine moe::ffn moe::fused moe::dispatch
+	MIRIFLAGS="-Zmiri-disable-isolation -Zmiri-ignore-leaks" \
+		cargo +nightly miri test -q -p m6t --test shard_views
+
+# ThreadSanitizer smoke over the cross-thread determinism tests. Needs a
+# nightly toolchain with the rust-src component (for -Zbuild-std).
+tsan:
+	RUSTFLAGS="-Zsanitizer=thread" \
+		cargo +nightly test -Zbuild-std --target x86_64-unknown-linux-gnu -q \
+		-p m6t --test pool_determinism --test shard_views
 
 run:
 	cargo run --release -- run --variant base-top2

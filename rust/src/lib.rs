@@ -22,12 +22,13 @@
 //! See DESIGN.md for the backend architecture, feature flags, and the
 //! per-experiment index.
 
-// Index-heavy numerical code over flat row-major buffers: ranged loops
-// with explicit (t, e) indexing are the house style, and manual ceil-div
-// keeps the MSRV below `usize::div_ceil`. CI runs clippy with -D warnings;
-// these two lints are the deliberate exceptions.
-#![allow(clippy::needless_range_loop)]
-#![allow(clippy::manual_div_ceil)]
+// The crate's unsafe budget is a single audited module: every raw-pointer
+// sharding trick lives behind `util::shard`, which opts back in with a
+// module-level `#![allow(unsafe_code)]`. `deny` (not `forbid`) so that one
+// override is legal; the hot-path modules additionally `forbid` locally,
+// and `m6t lint-unsafe` ratchets the site count in CI.
+#![deny(unsafe_code)]
+#![deny(unsafe_op_in_unsafe_fn)]
 
 pub mod cluster;
 pub mod config;

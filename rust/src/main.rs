@@ -17,6 +17,9 @@
 //!   figure fig1|fig3|fig4|fig5|fig6
 //!   tables                  Tables 3 & 4 (downstream PPL)
 //!   report                  run everything, write results/ CSVs
+//!   lint-unsafe             enforce the unsafe-budget allowlist (CI gate)
+
+#![forbid(unsafe_code)]
 
 use std::process::ExitCode;
 
@@ -49,7 +52,7 @@ fn main() -> ExitCode {
 
 const USAGE: &str = "m6t — M6-T sparse-expert reproduction
 subcommands:
-  list | run | train | eval | bench | flops | simulate | figure | tables | report
+  list | run | train | eval | bench | flops | simulate | figure | tables | report | lint-unsafe
 run `m6t <subcommand> --help` for options";
 
 fn common(cmd: Command) -> Command {
@@ -83,6 +86,7 @@ fn dispatch(sub: &str, rest: &[String]) -> Result<()> {
         "figure" => cmd_figure(rest),
         "tables" => cmd_tables(rest),
         "report" => cmd_report(rest),
+        "lint-unsafe" => cmd_lint_unsafe(rest),
         "--help" | "-h" | "help" => {
             println!("{USAGE}");
             Ok(())
@@ -491,6 +495,32 @@ fn cmd_bench_ffn(args: &m6t::util::cli::Args) -> Result<()> {
     ffn_bench::write_json(&rows, reps, &out_path)?;
     eprintln!("[bench] min tiled speedup: {:.2}x", ffn_bench::min_tiled_speedup(&rows));
     eprintln!("[bench] wrote {out_path}");
+    Ok(())
+}
+
+/// `m6t lint-unsafe` — the unsafe-budget ratchet (DESIGN.md "Safety &
+/// concurrency model"): scan the Rust sources, require every `unsafe`
+/// token to sit in the audited allowlist with an adjacent `// SAFETY:`
+/// comment, and fail on any drift in either direction.
+fn cmd_lint_unsafe(rest: &[String]) -> Result<()> {
+    let cmd = Command::new("lint-unsafe", "enforce the unsafe-budget allowlist")
+        .opt_default("root", ".", "repository root to scan")
+        .opt_default("allowlist", "rust/unsafe_allowlist.txt", "allowlist path (under --root)");
+    let args = parse(cmd, rest)?;
+    let root = std::path::PathBuf::from(args.get("root").unwrap());
+    let allowlist = root.join(args.get("allowlist").unwrap());
+    let report = m6t::util::lint::run(&root, &allowlist)?;
+    if !report.violations.is_empty() {
+        for v in &report.violations {
+            eprintln!("lint-unsafe: {v}");
+        }
+        anyhow::bail!("{} unsafe-budget violation(s)", report.violations.len());
+    }
+    println!(
+        "lint-unsafe: OK — {} files scanned, {} audited unsafe site(s), all within budget",
+        report.files_scanned,
+        report.unsafe_sites
+    );
     Ok(())
 }
 

@@ -39,10 +39,13 @@
 //! kept as the two-pass baseline `m6t bench --step` measures against and
 //! as the bitwise oracle the fused parity tests compare to.
 
+#![forbid(unsafe_code)]
+
 use std::sync::Arc;
 
 use crate::config::Routing;
-use crate::util::pool::{self, SendPtr, WorkerPool};
+use crate::util::pool::{self, WorkerPool};
+use crate::util::shard::DisjointChunks;
 
 use super::router::{Assignment, RouteOutput, RouterSpec};
 
@@ -203,26 +206,22 @@ impl RoutingEngine {
         }
         let gen = self.scratch.prepare(tokens, e, k);
 
-        // Phase 1 — per-token argmax sequences, sharded over tokens.
+        // Phase 1 — per-token argmax sequences, sharded over tokens. Each
+        // shard owns the token range [t0, t1) of every scratch buffer; the
+        // disjoint carve makes that a checked property instead of a comment.
         {
-            let chosen = SendPtr::new(self.scratch.chosen.as_mut_ptr());
-            let sel_expert = SendPtr::new(self.scratch.sel_expert.as_mut_ptr());
-            let sel_gate = SendPtr::new(self.scratch.sel_gate.as_mut_ptr());
+            let sc = &mut self.scratch;
+            let chosen_views = DisjointChunks::new(&mut sc.chosen[..tokens * e], SHARD_TOKENS * e);
+            let sel_expert_views =
+                DisjointChunks::new(&mut sc.sel_expert[..tokens * k], SHARD_TOKENS * k);
+            let sel_gate_views =
+                DisjointChunks::new(&mut sc.sel_gate[..tokens * k], SHARD_TOKENS * k);
             let body = |s: usize| {
                 let t0 = s * SHARD_TOKENS;
                 let t1 = (t0 + SHARD_TOKENS).min(tokens);
-                // SAFETY: each shard owns the disjoint token range
-                // [t0, t1) of every buffer, and `parallel_for` joins all
-                // shards before the borrow of `self.scratch` resumes.
-                let chosen = unsafe {
-                    std::slice::from_raw_parts_mut(chosen.get().add(t0 * e), (t1 - t0) * e)
-                };
-                let sel_expert = unsafe {
-                    std::slice::from_raw_parts_mut(sel_expert.get().add(t0 * k), (t1 - t0) * k)
-                };
-                let sel_gate = unsafe {
-                    std::slice::from_raw_parts_mut(sel_gate.get().add(t0 * k), (t1 - t0) * k)
-                };
+                let chosen = chosen_views.view(s);
+                let sel_expert = sel_expert_views.view(s);
+                let sel_gate = sel_gate_views.view(s);
                 for (i, t) in (t0..t1).enumerate() {
                     let row = &gates[t * e..(t + 1) * e];
                     if k == 1 {
@@ -261,7 +260,7 @@ impl RoutingEngine {
                     }
                 }
             };
-            self.run_sharded(tokens, e * k, &body);
+            Self::run_sharded(self.pool.as_deref(), tokens, e * k, &body);
         }
 
         // Phase 2 — capacity slots, round-major then token-major: the
@@ -328,20 +327,19 @@ impl RoutingEngine {
         let f = e / z;
         self.scratch.prepare(tokens, 0, z); // no chosen-mask needed: one round
 
-        // Phase 1 — per-token, per-prototype argmax, sharded over tokens.
+        // Phase 1 — per-token, per-prototype argmax, sharded over tokens
+        // (disjoint token ranges per shard; see route_topk).
         {
-            let sel_expert = SendPtr::new(self.scratch.sel_expert.as_mut_ptr());
-            let sel_gate = SendPtr::new(self.scratch.sel_gate.as_mut_ptr());
+            let sc = &mut self.scratch;
+            let sel_expert_views =
+                DisjointChunks::new(&mut sc.sel_expert[..tokens * z], SHARD_TOKENS * z);
+            let sel_gate_views =
+                DisjointChunks::new(&mut sc.sel_gate[..tokens * z], SHARD_TOKENS * z);
             let body = |s: usize| {
                 let t0 = s * SHARD_TOKENS;
                 let t1 = (t0 + SHARD_TOKENS).min(tokens);
-                // SAFETY: disjoint token ranges; see route_topk.
-                let sel_expert = unsafe {
-                    std::slice::from_raw_parts_mut(sel_expert.get().add(t0 * z), (t1 - t0) * z)
-                };
-                let sel_gate = unsafe {
-                    std::slice::from_raw_parts_mut(sel_gate.get().add(t0 * z), (t1 - t0) * z)
-                };
+                let sel_expert = sel_expert_views.view(s);
+                let sel_gate = sel_gate_views.view(s);
                 for (i, t) in (t0..t1).enumerate() {
                     let row = &gates[t * e..(t + 1) * e];
                     for p in 0..z {
@@ -359,7 +357,7 @@ impl RoutingEngine {
                     }
                 }
             };
-            self.run_sharded(tokens, e, &body);
+            Self::run_sharded(self.pool.as_deref(), tokens, e, &body);
         }
 
         // Phase 2+3 — prototypes are independent routers; walk them in
@@ -391,15 +389,16 @@ impl RoutingEngine {
     /// Run `body(shard)` over `ceil(tokens / SHARD_TOKENS)` shards — on
     /// the pool when the total work justifies the handoff, inline
     /// otherwise (`pool::run_shards` policy; identical outputs either way).
-    fn run_sharded(&self, tokens: usize, work_per_token: usize, body: &(dyn Fn(usize) + Sync)) {
-        let shards = (tokens + SHARD_TOKENS - 1) / SHARD_TOKENS;
-        pool::run_shards(
-            self.pool.as_deref(),
-            shards,
-            tokens * work_per_token,
-            MIN_PARALLEL_WORK,
-            body,
-        );
+    /// Associated (not a method) so callers can keep `&mut` borrows of
+    /// `self.scratch` live across the call.
+    fn run_sharded(
+        pool: Option<&WorkerPool>,
+        tokens: usize,
+        work_per_token: usize,
+        body: &(dyn Fn(usize) + Sync),
+    ) {
+        let shards = tokens.div_ceil(SHARD_TOKENS);
+        pool::run_shards(pool, shards, tokens * work_per_token, MIN_PARALLEL_WORK, body);
     }
 }
 
@@ -458,7 +457,9 @@ mod tests {
     #[test]
     fn identical_across_pool_sizes() {
         // big enough to cross MIN_PARALLEL_WORK and span several shards
-        let tokens = 4 * SHARD_TOKENS + 37;
+        // (kept just above the threshold under Miri, where every gate
+        // visit is interpreted)
+        let tokens = if cfg!(miri) { 2 * SHARD_TOKENS + 37 } else { 4 * SHARD_TOKENS + 37 };
         let gates = random_gates(tokens, 16, 1, 21);
         let spec = RouterSpec { routing: Routing::TopK(2), num_experts: 16, capacity: 200 };
         let expect = RoutingEngine::with_pool(Arc::new(WorkerPool::new(0)))

@@ -28,11 +28,14 @@
 //! `*_naive` twins use the textbook strided dot-product order and are the
 //! baseline `m6t bench --ffn` measures the speedup against.
 
+#![forbid(unsafe_code)]
+
 use std::cell::RefCell;
 
 use anyhow::{bail, Result};
 
-use crate::util::pool::{self, SendPtr, WorkerPool};
+use crate::util::pool::{self, WorkerPool};
+use crate::util::shard::{DisjointChunks, StridedViews};
 
 /// Default inner tile over the intermediate dimension — same constant as
 /// `moe_ffn.DEFAULT_I_BLOCK` (sized for the paper's base geometry VMEM
@@ -164,6 +167,24 @@ fn with_tile_scratch<R>(f: impl FnOnce(&mut TileScratch) -> R) -> R {
     SCRATCH.with(|s| f(&mut s.borrow_mut()))
 }
 
+/// The read-only operands of one expert-batched FFN application:
+/// `x (E, C, M)`, `w1 (E, M, I)`, `w2 (E, I, M)`.
+#[derive(Clone, Copy)]
+pub struct FfnInputs<'a> {
+    pub x: &'a [f32],
+    pub w1: &'a [f32],
+    pub w2: &'a [f32],
+}
+
+/// The gradient outputs of [`bwd_tiled`]: `dw1 (E, M, I)`, `dw2 (E, I, M)`
+/// fully overwritten; `dx (E, C, M)` optional (the training path feeds a
+/// frozen slab and skips it).
+pub struct FfnGrads<'a> {
+    pub dw1: &'a mut [f32],
+    pub dw2: &'a mut [f32],
+    pub dx: Option<&'a mut [f32]>,
+}
+
 fn check_shapes(shape: &FfnShape, x: &[f32], w1: &[f32], w2: &[f32], out: &[f32]) {
     assert_eq!(x.len(), shape.x_len(), "x shape mismatch");
     assert_eq!(w1.len(), shape.w1_len(), "w1 shape mismatch");
@@ -174,19 +195,16 @@ fn check_shapes(shape: &FfnShape, x: &[f32], w1: &[f32], w2: &[f32], out: &[f32]
 /// One forward (expert, I-tile) unit: `dst (C, M) = gelu(x_e @ w1_tile)
 /// @ w2_tile`. `h` accumulates in m-order (axpy), so the hidden tile is
 /// bitwise identical to the naive dot-product order.
-#[allow(clippy::too_many_arguments)]
 fn fwd_tile(
     sc: &mut TileScratch,
     x: &[f32],  // (C, M) — one expert's slab
     w1: &[f32], // (M, I) — one expert's up-projection
     w2: &[f32], // (I, M)
     dst: &mut [f32],
-    c: usize,
-    m: usize,
-    i: usize,
+    shape: FfnShape,
     i0: usize,
-    blk: usize,
 ) {
+    let FfnShape { capacity: c, hidden: m, intermediate: i, i_block: blk, .. } = shape;
     let h = &mut sc.h;
     h.clear();
     h.resize(c * blk, 0.0);
@@ -224,12 +242,11 @@ fn fwd_tile(
 pub fn fwd_tiled(
     pool_ref: &WorkerPool,
     shape: FfnShape,
-    x: &[f32],
-    w1: &[f32],
-    w2: &[f32],
+    inputs: FfnInputs<'_>,
     out: &mut [f32],
     partial: &mut Vec<f32>,
 ) {
+    let FfnInputs { x, w1, w2 } = inputs;
     check_shapes(&shape, x, w1, w2, out);
     let FfnShape { experts: e, capacity: c, hidden: m, intermediate: i, i_block: blk } = shape;
     let tiles = shape.n_tiles();
@@ -239,18 +256,17 @@ pub fn fwd_tiled(
         partial.resize(units * cm, 0.0);
     }
     {
-        let base = SendPtr::new(partial.as_mut_ptr());
+        // unit `u` owns the disjoint range [u * cm, (u + 1) * cm) of
+        // `partial`; the pool joins every unit before the merge reads it
+        let views = DisjointChunks::new(&mut partial[..units * cm], cm);
         let body = |u: usize| {
             let e_idx = u / tiles;
             let i0 = (u % tiles) * blk;
             let xe = &x[e_idx * cm..(e_idx + 1) * cm];
             let w1e = &w1[e_idx * m * i..(e_idx + 1) * m * i];
             let w2e = &w2[e_idx * i * m..(e_idx + 1) * i * m];
-            // SAFETY: unit `u` owns the disjoint range
-            // [u * cm, (u + 1) * cm) of `partial`, and the pool joins
-            // every unit before the merge below reads it.
-            let dst = unsafe { std::slice::from_raw_parts_mut(base.get().add(u * cm), cm) };
-            with_tile_scratch(|sc| fwd_tile(sc, xe, w1e, w2e, dst, c, m, i, i0, blk));
+            let dst = views.view(u);
+            with_tile_scratch(|sc| fwd_tile(sc, xe, w1e, w2e, dst, shape, i0));
         };
         pool::run_shards(
             Some(pool_ref),
@@ -334,19 +350,16 @@ pub fn fwd_naive(
 /// `dw1`/`dw2` are fully overwritten. `dx` is optional: the training
 /// path feeds a frozen input slab and skips it; parity tests pass
 /// `Some` to check the full VJP against `ref.py`.
-#[allow(clippy::too_many_arguments)]
 pub fn bwd_tiled(
     pool_ref: &WorkerPool,
     shape: FfnShape,
-    x: &[f32],
-    w1: &[f32],
-    w2: &[f32],
+    inputs: FfnInputs<'_>,
     g: &[f32],
-    dw1: &mut [f32],
-    dw2: &mut [f32],
-    mut dx: Option<&mut [f32]>,
+    grads: FfnGrads<'_>,
     partial: &mut Vec<f32>,
 ) {
+    let FfnInputs { x, w1, w2 } = inputs;
+    let FfnGrads { dw1, dw2, mut dx } = grads;
     check_shapes(&shape, x, w1, w2, g);
     assert_eq!(dw1.len(), shape.w1_len(), "dw1 shape mismatch");
     assert_eq!(dw2.len(), shape.w2_len(), "dw2 shape mismatch");
@@ -362,9 +375,18 @@ pub fn bwd_tiled(
         partial.resize(units * cm, 0.0);
     }
     {
-        let dw1p = SendPtr::new(dw1.as_mut_ptr());
-        let dw2p = SendPtr::new(dw2.as_mut_ptr());
-        let dxp = SendPtr::new(partial.as_mut_ptr());
+        // unit `u = e_idx * tiles + tile` owns dw1[e, :, i0..i0+blk) —
+        // `m` rows of `blk` columns at stride I — and the contiguous
+        // dw2[e, i0..i0+blk, :); the strided carve encodes exactly those
+        // index sets, so tiles of the same expert cannot alias
+        let dw1_views = StridedViews::new(dw1, e, m, tiles, blk);
+        let dw2_views = StridedViews::new(dw2, e, 1, tiles, blk * m);
+        // dx partials: unit `u` owns [u * cm, (u + 1) * cm)
+        let dx_views = if want_dx {
+            Some(DisjointChunks::new(&mut partial[..units * cm], cm))
+        } else {
+            None
+        };
         let body = |u: usize| {
             let e_idx = u / tiles;
             let i0 = (u % tiles) * blk;
@@ -372,14 +394,9 @@ pub fn bwd_tiled(
             let ge = &g[e_idx * cm..(e_idx + 1) * cm];
             let w1e = &w1[e_idx * m * i..(e_idx + 1) * m * i];
             let w2e = &w2[e_idx * i * m..(e_idx + 1) * i * m];
-            // SAFETY: unit `u` owns dw1[e, :, i0..i0+blk) and
-            // dw2[e, i0..i0+blk, :) — tiles are disjoint across units —
-            // plus [u * cm, (u + 1) * cm) of the dx partials; the pool
-            // joins every unit before any of them is read.
-            let dw1e =
-                unsafe { std::slice::from_raw_parts_mut(dw1p.get().add(e_idx * m * i), m * i) };
-            let dw2e =
-                unsafe { std::slice::from_raw_parts_mut(dw2p.get().add(e_idx * i * m), i * m) };
+            let mut dw1t = dw1_views.view(u);
+            let mut dw2t = dw2_views.view(u);
+            let dw2_tile = dw2t.row(0);
             with_tile_scratch(|sc| {
                 // rematerialize h and a for this tile
                 let (h, a, da) = (&mut sc.h, &mut sc.a, &mut sc.da);
@@ -417,34 +434,33 @@ pub fn bwd_tiled(
                 }
                 // dw1 tile: dw1[e, mm, i0..i1] = sum_t x[t, mm] * dh[t, :]
                 for mm in 0..m {
-                    dw1e[mm * i + i0..mm * i + i0 + blk].fill(0.0);
+                    dw1t.row(mm).fill(0.0);
                 }
                 for t in 0..c {
                     let dhr = &da[t * blk..(t + 1) * blk];
                     let xr = &xe[t * m..(t + 1) * m];
                     for (mm, &xv) in xr.iter().enumerate() {
-                        let dst = &mut dw1e[mm * i + i0..mm * i + i0 + blk];
+                        let dst = dw1t.row(mm);
                         for (dv, &dhv) in dst.iter_mut().zip(dhr) {
                             *dv += xv * dhv;
                         }
                     }
                 }
                 // dw2 tile: dw2[e, i0+ii, :] = sum_t a[t, ii] * g[t, :]
-                dw2e[i0 * m..(i0 + blk) * m].fill(0.0);
+                dw2_tile.fill(0.0);
                 for t in 0..c {
                     let ar = &a[t * blk..(t + 1) * blk];
                     let gr = &ge[t * m..(t + 1) * m];
                     for (ii, &av) in ar.iter().enumerate() {
-                        let dst = &mut dw2e[(i0 + ii) * m..(i0 + ii + 1) * m];
+                        let dst = &mut dw2_tile[ii * m..(ii + 1) * m];
                         for (dv, &gv) in dst.iter_mut().zip(gr) {
                             *dv += av * gv;
                         }
                     }
                 }
                 // dx partial: dh @ w1_tile^T (contiguous dot)
-                if want_dx {
-                    let dst =
-                        unsafe { std::slice::from_raw_parts_mut(dxp.get().add(u * cm), cm) };
+                if let Some(views) = &dx_views {
+                    let dst = views.view(u);
                     for t in 0..c {
                         let dhr = &da[t * blk..(t + 1) * blk];
                         let dr = &mut dst[t * m..(t + 1) * m];
@@ -519,7 +535,7 @@ mod tests {
         let mut out_n = vec![0.0; shape.x_len()];
         let mut partial = Vec::new();
         let mut h = Vec::new();
-        fwd_tiled(&pool, shape, &x, &w1, &w2, &mut out_t, &mut partial);
+        fwd_tiled(&pool, shape, FfnInputs { x: &x, w1: &w1, w2: &w2 }, &mut out_t, &mut partial);
         fwd_naive(shape, &x, &w1, &w2, &mut out_n, &mut h);
         assert!(rel_close(&out_t, &out_n, 1e-5), "tiled vs naive forward diverged");
     }
@@ -536,7 +552,7 @@ mod tests {
             let pool = Arc::new(WorkerPool::new(workers));
             let mut out = vec![0.0; shape.x_len()];
             let mut partial = Vec::new();
-            fwd_tiled(&pool, shape, &x, &w1, &w2, &mut out, &mut partial);
+            fwd_tiled(&pool, shape, FfnInputs { x: &x, w1: &w1, w2: &w2 }, &mut out, &mut partial);
             let bits: Vec<u32> = out.iter().map(|v| v.to_bits()).collect();
             match &reference {
                 None => reference = Some(bits),
@@ -563,13 +579,9 @@ mod tests {
             bwd_tiled(
                 &pool,
                 shape,
-                &x,
-                &w1,
-                &w2,
+                FfnInputs { x: &x, w1: &w1, w2: &w2 },
                 &g,
-                &mut dw1,
-                &mut dw2,
-                Some(&mut dx),
+                FfnGrads { dw1: &mut dw1, dw2: &mut dw2, dx: Some(&mut dx) },
                 &mut partial,
             );
             let bits: Vec<u32> = dw1

@@ -32,6 +32,8 @@
 //! pins this; the two-pass engine stays around as the oracle and for
 //! combine-weight callers, which genuinely need per-assignment output.
 
+#![forbid(unsafe_code)]
+
 use std::cell::RefCell;
 
 use crate::config::Routing;
@@ -48,8 +50,7 @@ pub const TILE_TOKENS: usize = 512;
 
 /// Number of tiles covering `tokens` tokens.
 pub fn tiles_for(tokens: usize) -> usize {
-    // manual ceil-div: house style, keeps the MSRV below usize::div_ceil
-    (tokens + TILE_TOKENS - 1) / TILE_TOKENS
+    tokens.div_ceil(TILE_TOKENS)
 }
 
 /// Reusable scratch for one fused work unit: the current tile's gate rows
@@ -317,14 +318,18 @@ mod tests {
         let e = 16;
         let mut engine = RoutingEngine::new();
         let mut counts = RouteOutput::default();
-        for (routing, tokens, capacity, seed) in [
-            (Routing::TopK(1), 700, 45, 1u64),       // spans 2 tiles
-            (Routing::TopK(2), 64, 5, 2),            // tight capacity
-            (Routing::TopK(4), 1200, 9999, 3),       // ample, 3 tiles
+        let cases = [
+            (Routing::TopK(1), 700, 45, 1u64),    // spans 2 tiles
+            (Routing::TopK(2), 64, 5, 2),         // tight capacity
+            (Routing::TopK(4), 1200, 9999, 3),    // ample, 3 tiles
             (Routing::Prototype(2), 300, 20, 4),
-            (Routing::Prototype(4), 1025, 70, 5),    // short last tile
-            (Routing::TopK(16), 96, 4, 6),           // k == E
-        ] {
+            (Routing::Prototype(4), 1025, 70, 5), // short last tile
+            (Routing::TopK(16), 96, 4, 6),        // k == E
+        ];
+        // Miri interprets every gate visit; the two-tile and tight-capacity
+        // cases already cover the tile-merge and clamp paths.
+        let take = if cfg!(miri) { 2 } else { cases.len() };
+        for (routing, tokens, capacity, seed) in cases.into_iter().take(take) {
             let z = routing.prototypes().max(1) as usize;
             let bias: Vec<f32> = (0..e).map(|i| (i as f32 - 8.0) * 0.07).collect();
             let gates = layer_gates(seed, &bias, tokens, e, z);

@@ -135,7 +135,8 @@ pub fn run_suite(reps: usize) -> Result<Vec<FfnBenchRow>> {
             let mut out = vec![0.0f32; shape.x_len()];
             let mut partial = Vec::new();
             let fwd_ms = p50_ms(reps, || {
-                ffn::fwd_tiled(&pool, shape, &x, &w1, &w2, &mut out, &mut partial);
+                let inputs = ffn::FfnInputs { x: &x, w1: &w1, w2: &w2 };
+                ffn::fwd_tiled(&pool, shape, inputs, &mut out, &mut partial);
             });
             let max_rel_diff = out
                 .iter()
@@ -151,19 +152,10 @@ pub fn run_suite(reps: usize) -> Result<Vec<FfnBenchRow>> {
             let mut dw1 = vec![0.0f32; shape.w1_len()];
             let mut dw2 = vec![0.0f32; shape.w2_len()];
             let train_ms = p50_ms(reps, || {
-                ffn::fwd_tiled(&pool, shape, &x, &w1, &w2, &mut out, &mut partial);
-                ffn::bwd_tiled(
-                    &pool,
-                    shape,
-                    &x,
-                    &w1,
-                    &w2,
-                    &g,
-                    &mut dw1,
-                    &mut dw2,
-                    None,
-                    &mut partial,
-                );
+                let inputs = ffn::FfnInputs { x: &x, w1: &w1, w2: &w2 };
+                ffn::fwd_tiled(&pool, shape, inputs, &mut out, &mut partial);
+                let grads = ffn::FfnGrads { dw1: &mut dw1, dw2: &mut dw2, dx: None };
+                ffn::bwd_tiled(&pool, shape, inputs, &g, grads, &mut partial);
             });
             let row = FfnBenchRow {
                 geometry: geo.name.to_string(),

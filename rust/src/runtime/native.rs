@@ -32,6 +32,7 @@
 //! Everything is a pure function of (state leaves, step, batch), so
 //! checkpoint round-trips reproduce runs bitwise — the property the
 //! integration tests pin down.
+#![forbid(unsafe_code)]
 
 use std::collections::BTreeMap;
 use std::sync::{Arc, Mutex};
@@ -43,11 +44,12 @@ use super::manifest::{DType, TensorSpec, VariantInfo};
 use crate::cluster::{simulate_step, table2_hardware};
 use crate::config::{paper, CapacityMode, ComputeMode, ModelConfig, Routing};
 use crate::data::Batch;
-use crate::moe::ffn::{self, FfnShape};
+use crate::moe::ffn::{self, FfnGrads, FfnInputs, FfnShape};
 use crate::moe::fused;
 use crate::runtime::optim;
 use crate::scaling::PowerLaw;
-use crate::util::pool::{self, SendPtr, WorkerPool};
+use crate::util::pool::{self, WorkerPool};
+use crate::util::shard::DisjointChunks;
 use crate::util::rng::Rng;
 use crate::util::stats::coefficient_of_variation;
 
@@ -260,18 +262,36 @@ pub fn fill_gates(
     prototypes: usize,
 ) {
     let shards = fused::tiles_for(tokens);
-    let base = SendPtr::new(gates.as_mut_ptr());
+    // each shard owns the disjoint token range [t0, t1) of the gate matrix
+    let views = DisjointChunks::new(&mut gates[..tokens * experts], GEN_SHARD_TOKENS * experts);
+    debug_assert_eq!(views.units(), shards);
     let body = |s: usize| {
-        let t0 = s * GEN_SHARD_TOKENS;
-        let t1 = (t0 + GEN_SHARD_TOKENS).min(tokens);
-        // SAFETY: shards write disjoint token ranges, and parallel_for
-        // joins every shard before `gates` is read again.
-        let buf = unsafe {
-            std::slice::from_raw_parts_mut(base.get().add(t0 * experts), (t1 - t0) * experts)
-        };
-        fused::gen_tile_gates(buf, layer_seed, s, bias_row, t1 - t0, experts, prototypes);
+        let buf = views.view(s);
+        let rows = buf.len() / experts;
+        fused::gen_tile_gates(buf, layer_seed, s, bias_row, rows, experts, prototypes);
     };
     pool::run_shards(Some(pool_ref), shards, tokens * experts, MIN_GEN_PARALLEL_WORK, &body);
+}
+
+/// Problem geometry of one routed (worker x layer) grid — everything
+/// [`route_grid_counts`] needs beyond the seeds, bias, and buffers.
+#[derive(Clone, Copy)]
+pub(crate) struct GridSpec {
+    pub tokens: usize,
+    pub experts: usize,
+    pub layers: usize,
+    pub prototypes: usize,
+    pub routing: Routing,
+    pub capacity: usize,
+}
+
+/// Output buffers of [`route_grid_counts`]: row-major
+/// `[worker][layer][expert]` demand/kept-load histograms plus per
+/// `[worker][layer]` dropped totals.
+pub(crate) struct GridCountsOut<'a> {
+    pub wl_demand: &'a mut [u32],
+    pub wl_load: &'a mut [u32],
+    pub wl_dropped: &'a mut [u32],
 }
 
 /// Route a full (worker x layer) grid through the fused counts kernel:
@@ -289,22 +309,16 @@ pub fn fill_gates(
 /// carries one step seed per worker (the native backend passes exactly
 /// one); layer seeds are derived with [`LAYER_SEED_MIX`] exactly as the
 /// two-pass path does.
-#[allow(clippy::too_many_arguments)]
 pub(crate) fn route_grid_counts(
     pool_ref: &WorkerPool,
     worker_seeds: &[u64],
     bias: &[f32],
-    tokens: usize,
-    experts: usize,
-    layers: usize,
-    prototypes: usize,
-    routing: Routing,
-    capacity: usize,
+    spec: GridSpec,
     partial: &mut Vec<u32>,
-    wl_demand: &mut [u32],
-    wl_load: &mut [u32],
-    wl_dropped: &mut [u32],
+    out: GridCountsOut<'_>,
 ) {
+    let GridSpec { tokens, experts, layers, prototypes, routing, capacity } = spec;
+    let GridCountsOut { wl_demand, wl_load, wl_dropped } = out;
     let d = worker_seeds.len();
     assert_eq!(bias.len(), layers * experts, "bias shape mismatch");
     assert_eq!(wl_demand.len(), d * layers * experts, "wl_demand shape mismatch");
@@ -323,7 +337,9 @@ pub(crate) fn route_grid_counts(
         partial.resize(units * experts, 0);
     }
     {
-        let base = SendPtr::new(partial.as_mut_ptr());
+        // unit `u` owns the disjoint range [u * experts, (u + 1) * experts)
+        // of `partial`; the pool joins every unit before the merge reads it
+        let views = DisjointChunks::new(&mut partial[..units * experts], experts);
         let body = |u: usize| {
             let w = u / (layers * tiles);
             let rem = u % (layers * tiles);
@@ -332,11 +348,7 @@ pub(crate) fn route_grid_counts(
             let layer_seed = worker_seeds[w] ^ (l as u64 + 1).wrapping_mul(LAYER_SEED_MIX);
             let bias_row = &bias[l * experts..(l + 1) * experts];
             let rows = fused::TILE_TOKENS.min(tokens - s * fused::TILE_TOKENS);
-            // SAFETY: unit `u` owns the disjoint range
-            // [u * experts, (u + 1) * experts) of `partial`, and
-            // parallel_for joins every unit before the merge reads it.
-            let demand =
-                unsafe { std::slice::from_raw_parts_mut(base.get().add(u * experts), experts) };
+            let demand = views.view(u);
             demand.fill(0);
             fused::with_thread_scratch(|sc| {
                 fused::tile_demand(
@@ -385,14 +397,8 @@ pub(crate) fn route_grid_counts(
 /// allocation-free after warmup.
 #[derive(Default)]
 pub(crate) struct RealScratch {
-    /// (E, C, M) seeded input slab
-    x: Vec<f32>,
-    /// (E, C, M) FFN output
-    y: Vec<f32>,
-    /// (E, C, M) loss gradient dL/dy
-    g: Vec<f32>,
-    /// tile partials for [`ffn::fwd_tiled`] / [`ffn::bwd_tiled`]
-    partial: Vec<f32>,
+    /// forward slabs + FFN tile partials (what [`real_layer_forward`] needs)
+    slabs: SlabScratch,
     /// one worker's weight grads for the current layer
     dw1: Vec<f32>,
     dw2: Vec<f32>,
@@ -401,6 +407,20 @@ pub(crate) struct RealScratch {
     gw2: Vec<f32>,
     /// optimizer update scratch (Adafactor's `u`)
     opt_u: Vec<f32>,
+}
+
+/// The per-layer forward working set: input/output/gradient slabs plus
+/// the FFN kernels' tile partials.
+#[derive(Default)]
+pub(crate) struct SlabScratch {
+    /// (E, C, M) seeded input slab
+    x: Vec<f32>,
+    /// (E, C, M) FFN output
+    y: Vec<f32>,
+    /// (E, C, M) loss gradient dL/dy
+    g: Vec<f32>,
+    /// tile partials for [`ffn::fwd_tiled`] / [`ffn::bwd_tiled`]
+    partial: Vec<f32>,
 }
 
 /// Fill one layer's `(E, C, M)` input slab: expert `e` gets
@@ -417,19 +437,20 @@ fn fill_slab(
 ) {
     let experts = loads.len();
     assert_eq!(x.len(), experts * capacity * m, "slab shape mismatch");
+    if x.is_empty() {
+        return;
+    }
     x.fill(0.0);
-    let base = SendPtr::new(x.as_mut_ptr());
+    // expert `e_idx` owns the disjoint (C, M) block starting at
+    // e_idx * capacity * m; the pool joins every unit before reads
+    let views = DisjointChunks::new(x, capacity * m);
     let body = |e_idx: usize| {
         let rows = (loads[e_idx] as usize).min(capacity);
         if rows == 0 {
             return;
         }
         let mut rng = Rng::new(layer_seed ^ (e_idx as u64 + 1).wrapping_mul(SLAB_SEED_MIX));
-        // SAFETY: expert `e_idx` owns the disjoint row range starting at
-        // e_idx * capacity * m; the pool joins every unit before reads.
-        let dst = unsafe {
-            std::slice::from_raw_parts_mut(base.get().add(e_idx * capacity * m), rows * m)
-        };
+        let dst = &mut views.view(e_idx)[..rows * m];
         for v in dst.iter_mut() {
             *v = rng.normal() as f32;
         }
@@ -440,9 +461,8 @@ fn fill_slab(
 /// One worker-layer of real forward compute: fill the routed slab, run
 /// the tiled FFN, and measure the regression loss
 /// `mean((y - TARGET_SCALE * x)^2)` over the active (routed) rows,
-/// writing `dL/dy` into `g`. Returns the mean loss; padding rows carry
+/// writing `dL/dy` into `sc.g`. Returns the mean loss; padding rows carry
 /// zero gradient so dropped tokens contribute nothing.
-#[allow(clippy::too_many_arguments)]
 fn real_layer_forward(
     pool_ref: &WorkerPool,
     shape: FfnShape,
@@ -450,12 +470,10 @@ fn real_layer_forward(
     loads: &[u32],
     w1: &[f32],
     w2: &[f32],
-    x: &mut Vec<f32>,
-    y: &mut Vec<f32>,
-    g: &mut Vec<f32>,
-    partial: &mut Vec<f32>,
+    sc: &mut SlabScratch,
 ) -> f64 {
     let (c, m) = (shape.capacity, shape.hidden);
+    let SlabScratch { x, y, g, partial } = sc;
     x.clear();
     x.resize(shape.x_len(), 0.0);
     y.clear();
@@ -463,7 +481,7 @@ fn real_layer_forward(
     g.clear();
     g.resize(shape.x_len(), 0.0);
     fill_slab(pool_ref, x, layer_seed, loads, c, m);
-    ffn::fwd_tiled(pool_ref, shape, x, w1, w2, y, partial);
+    ffn::fwd_tiled(pool_ref, shape, FfnInputs { x: x.as_slice(), w1, w2 }, y, partial);
     let active: usize = loads.iter().map(|&v| (v as usize).min(c)).sum();
     let denom = (active * m).max(1) as f32;
     let mut lsum = 0.0f64;
@@ -479,6 +497,14 @@ fn real_layer_forward(
     lsum / denom as f64
 }
 
+/// The routed-grid inputs of one real-compute pass: one step seed per
+/// worker plus the matching `[worker][layer][expert]` kept counts from
+/// [`route_grid_counts`].
+pub(crate) struct RoutedLoads<'a> {
+    pub worker_seeds: &'a [u64],
+    pub wl_load: &'a [u32],
+}
+
 /// One full real training step over every (worker, layer): forward +
 /// backward through the tiled FFN kernels, gradients averaged across
 /// workers (data parallelism over the grid's routed loads), then the
@@ -486,19 +512,18 @@ fn real_layer_forward(
 /// (`worker_seeds.len() == 1`) and the sharded runtime, whose D = 1 case
 /// therefore reproduces the native backend bitwise (`x / 1.0 == x`).
 ///
-/// `wl_load` is row-major `[worker][layer][expert]` kept counts from
-/// [`route_grid_counts`]. Returns `(mean loss, grad L2 norm)`.
-#[allow(clippy::too_many_arguments)]
+/// `routed.wl_load` is row-major `[worker][layer][expert]` kept counts
+/// from [`route_grid_counts`]. Returns `(mean loss, grad L2 norm)`.
 pub(crate) fn real_train_step(
     pool_ref: &WorkerPool,
     cfg: &ModelConfig,
     capacity: usize,
     leaves: &mut [Vec<f32>],
-    worker_seeds: &[u64],
-    wl_load: &[u32],
+    routed: RoutedLoads<'_>,
     step: i64,
     sc: &mut RealScratch,
 ) -> Result<(f64, f64)> {
+    let RoutedLoads { worker_seeds, wl_load } = routed;
     let (e, m, i) = (cfg.num_experts, cfg.hidden, cfg.intermediate);
     let layers = cfg.layers;
     let d = worker_seeds.len();
@@ -530,22 +555,15 @@ pub(crate) fn real_train_step(
                 loads,
                 &leaves[w1_leaf(l)],
                 &leaves[w2_leaf(l)],
-                &mut sc.x,
-                &mut sc.y,
-                &mut sc.g,
-                &mut sc.partial,
+                &mut sc.slabs,
             );
             ffn::bwd_tiled(
                 pool_ref,
                 shape,
-                &sc.x,
-                &leaves[w1_leaf(l)],
-                &leaves[w2_leaf(l)],
-                &sc.g,
-                &mut sc.dw1,
-                &mut sc.dw2,
-                None,
-                &mut sc.partial,
+                FfnInputs { x: &sc.slabs.x, w1: &leaves[w1_leaf(l)], w2: &leaves[w2_leaf(l)] },
+                &sc.slabs.g,
+                FfnGrads { dw1: &mut sc.dw1, dw2: &mut sc.dw2, dx: None },
+                &mut sc.slabs.partial,
             );
             // accumulate in worker order (deterministic association)
             for (acc, &v) in sc.gw1.iter_mut().zip(&sc.dw1) {
@@ -597,10 +615,10 @@ pub(crate) fn real_forward_loss(
     cfg: &ModelConfig,
     capacity: usize,
     leaves: &[Vec<f32>],
-    worker_seeds: &[u64],
-    wl_load: &[u32],
+    routed: RoutedLoads<'_>,
     sc: &mut RealScratch,
 ) -> Result<f64> {
+    let RoutedLoads { worker_seeds, wl_load } = routed;
     let (e, m, i) = (cfg.num_experts, cfg.hidden, cfg.intermediate);
     let layers = cfg.layers;
     let d = worker_seeds.len();
@@ -622,10 +640,7 @@ pub(crate) fn real_forward_loss(
                 loads,
                 &leaves[w1_leaf(l)],
                 &leaves[w2_leaf(l)],
-                &mut sc.x,
-                &mut sc.y,
-                &mut sc.g,
-                &mut sc.partial,
+                &mut sc.slabs,
             );
         }
         loss_sum += layer_loss / d as f64;
@@ -776,16 +791,13 @@ impl Backend for NativeBackend {
             pool_ref,
             &[base_seed],
             bias,
-            tokens,
-            experts,
-            layers,
-            prototypes,
-            cfg.routing,
-            capacity,
+            GridSpec { tokens, experts, layers, prototypes, routing: cfg.routing, capacity },
             partial,
-            &mut wl_demand[..n],
-            &mut wl_load[..n],
-            &mut wl_dropped[..layers],
+            GridCountsOut {
+                wl_demand: &mut wl_demand[..n],
+                wl_load: &mut wl_load[..n],
+                wl_dropped: &mut wl_dropped[..layers],
+            },
         );
 
         // aggregate in the exact operation order of the old per-layer
@@ -821,8 +833,7 @@ impl Backend for NativeBackend {
                 cfg,
                 capacity,
                 &mut leaves,
-                &[base_seed],
-                &wl_load[..n],
+                RoutedLoads { worker_seeds: &[base_seed], wl_load: &wl_load[..n] },
                 step,
                 real,
             )?
@@ -885,20 +896,17 @@ impl Backend for NativeBackend {
                 pool_ref,
                 &[base_seed],
                 &leaves[1],
-                tokens,
-                experts,
-                layers,
-                prototypes,
-                cfg.routing,
-                capacity,
+                GridSpec { tokens, experts, layers, prototypes, routing: cfg.routing, capacity },
                 partial,
-                &mut wl_demand[..n],
-                &mut wl_load[..n],
-                &mut wl_dropped[..layers],
+                GridCountsOut {
+                    wl_demand: &mut wl_demand[..n],
+                    wl_load: &mut wl_load[..n],
+                    wl_dropped: &mut wl_dropped[..layers],
+                },
             );
             let seeds = [base_seed];
-            let nll =
-                real_forward_loss(pool_ref, cfg, capacity, leaves, &seeds, &wl_load[..n], real)?;
+            let routed = RoutedLoads { worker_seeds: &seeds, wl_load: &wl_load[..n] };
+            let nll = real_forward_loss(pool_ref, cfg, capacity, leaves, routed, real)?;
             return Ok((nll * count, count));
         }
         let law = law_from_leaf(&leaves[0])?;

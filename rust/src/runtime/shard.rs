@@ -27,6 +27,7 @@
 //! per-shard received/dropped tokens, the cross-worker load c_v, and the
 //! *measured* all-to-all bytes that [`simulate_step_observed`] consumes
 //! in place of the cluster model's analytic O(ECM) estimate.
+#![forbid(unsafe_code)]
 
 use std::sync::{Arc, Mutex};
 use std::time::Instant;
@@ -37,7 +38,8 @@ use super::backend::{Backend, StateRepr, StepStats, TrainState};
 use super::manifest::VariantInfo;
 use super::native::{
     batch_hash, fill_gates, hash_f32s, law_from_leaf, real_train_step, route_grid_counts,
-    NativeBackend, RealScratch, LAYER_SEED_MIX, NOISE_SEED_MIX, STEP_SEED_MIX,
+    GridCountsOut, GridSpec, NativeBackend, RealScratch, RoutedLoads, LAYER_SEED_MIX,
+    NOISE_SEED_MIX, STEP_SEED_MIX,
 };
 use crate::cluster::topology::layer_bottleneck_seconds;
 use crate::cluster::{
@@ -285,16 +287,20 @@ impl ShardedRun {
                     pool_ref,
                     worker_seeds,
                     bias,
-                    tokens,
-                    experts,
-                    layers,
-                    prototypes,
-                    cfg.routing,
-                    capacity,
+                    GridSpec {
+                        tokens,
+                        experts,
+                        layers,
+                        prototypes,
+                        routing: cfg.routing,
+                        capacity,
+                    },
                     partial,
-                    &mut wl_demand[..n],
-                    &mut wl_load[..n],
-                    &mut wl_dropped[..d * layers],
+                    GridCountsOut {
+                        wl_demand: &mut wl_demand[..n],
+                        wl_load: &mut wl_load[..n],
+                        wl_dropped: &mut wl_dropped[..d * layers],
+                    },
                 );
             }
             StepMode::TwoPass => {
@@ -384,8 +390,7 @@ impl ShardedRun {
                 cfg,
                 capacity,
                 &mut leaves,
-                worker_seeds,
-                &wl_load[..n],
+                RoutedLoads { worker_seeds: worker_seeds.as_slice(), wl_load: &wl_load[..n] },
                 step,
                 real,
             )?

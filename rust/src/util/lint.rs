@@ -1,0 +1,409 @@
+//! `m6t lint-unsafe` — the crate's unsafe-budget ratchet.
+//!
+//! A std-only scanner (no syn, no external parser) that walks the Rust
+//! sources, counts `unsafe` tokens outside comments and literals, and
+//! compares them against the checked-in allowlist
+//! (`rust/unsafe_allowlist.txt`). The budget is exact in both directions:
+//! a new site fails until the allowlist is consciously edited, and a
+//! removed site fails until the budget is ratcheted *down*, so the
+//! allowlist always states the audited truth. Every counted site must
+//! also carry an adjacent `// SAFETY:` comment — on the same line, or in
+//! the contiguous `//` comment block directly above it.
+//!
+//! The tokenizer is deliberately small: it blanks line comments, nested
+//! block comments, string / raw-string / char literals (lifetimes are
+//! left alone), then matches the word `unsafe` on identifier boundaries.
+//! That is exact for the rustfmt'd code in this repository; it does not
+//! try to handle macro-generated `unsafe` or pathological token pastes.
+
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+
+use anyhow::{bail, Context, Result};
+
+/// Directories (relative to the repo root) that are scanned. Vendored
+/// code under `third_party/` is intentionally outside the budget.
+pub const SCAN_ROOTS: [&str; 3] = ["rust", "benches", "examples"];
+
+/// Directory names skipped wherever they appear (build output, vendored
+/// trees, test fixtures).
+const SKIP_DIRS: [&str; 3] = ["target", "third_party", "fixtures"];
+
+/// One scanned file: the token count plus the 1-based lines of counted
+/// tokens that have no adjacent `// SAFETY:` comment.
+struct FileScan {
+    count: usize,
+    missing_safety: Vec<usize>,
+}
+
+/// The outcome of a full scan. Violations are collected (not failed
+/// one-by-one) so a single run reports everything to fix.
+pub struct Report {
+    pub files_scanned: usize,
+    pub unsafe_sites: usize,
+    pub violations: Vec<String>,
+}
+
+fn is_ident_byte(c: u8) -> bool {
+    c == b'_' || c.is_ascii_alphanumeric()
+}
+
+/// If `b[i]` starts a raw string (`r"` / `r#"` / `r##"` ...), the number
+/// of hashes; `None` otherwise.
+fn raw_string_hashes(b: &[u8], i: usize) -> Option<usize> {
+    let mut j = i + 1;
+    while j < b.len() && b[j] == b'#' {
+        j += 1;
+    }
+    if j < b.len() && b[j] == b'"' {
+        Some(j - i - 1)
+    } else {
+        None
+    }
+}
+
+/// True when `b[i]` is the closing `"` of a raw string with `hashes`
+/// trailing `#`s.
+fn raw_string_closes(b: &[u8], i: usize, hashes: usize) -> bool {
+    b[i] == b'"'
+        && b[i + 1..].len() >= hashes
+        && b[i + 1..i + 1 + hashes].iter().all(|&c| c == b'#')
+}
+
+/// Blank a quoted string body starting just after the opening quote,
+/// keeping newlines so line numbers survive.
+fn blank_string_body(b: &[u8], i: &mut usize, out: &mut Vec<u8>) {
+    while *i < b.len() {
+        match b[*i] {
+            b'\\' if *i + 1 < b.len() => {
+                out.push(b' ');
+                out.push(if b[*i + 1] == b'\n' { b'\n' } else { b' ' });
+                *i += 2;
+            }
+            b'"' => {
+                out.push(b' ');
+                *i += 1;
+                return;
+            }
+            b'\n' => {
+                out.push(b'\n');
+                *i += 1;
+            }
+            _ => {
+                out.push(b' ');
+                *i += 1;
+            }
+        }
+    }
+}
+
+/// A copy of `src` with comments and literals blanked to spaces (newlines
+/// kept), so a word search over it sees only real tokens. Output length
+/// and line structure match the input exactly.
+fn strip(src: &str) -> String {
+    let b = src.as_bytes();
+    let mut out = Vec::with_capacity(b.len());
+    let mut i = 0;
+    while i < b.len() {
+        match b[i] {
+            b'/' if b.get(i + 1) == Some(&b'/') => {
+                while i < b.len() && b[i] != b'\n' {
+                    out.push(b' ');
+                    i += 1;
+                }
+            }
+            b'/' if b.get(i + 1) == Some(&b'*') => {
+                let mut depth = 1usize;
+                out.extend_from_slice(b"  ");
+                i += 2;
+                while i < b.len() && depth > 0 {
+                    if b[i] == b'/' && b.get(i + 1) == Some(&b'*') {
+                        depth += 1;
+                        out.extend_from_slice(b"  ");
+                        i += 2;
+                    } else if b[i] == b'*' && b.get(i + 1) == Some(&b'/') {
+                        depth -= 1;
+                        out.extend_from_slice(b"  ");
+                        i += 2;
+                    } else {
+                        out.push(if b[i] == b'\n' { b'\n' } else { b' ' });
+                        i += 1;
+                    }
+                }
+            }
+            b'"' => {
+                out.push(b' ');
+                i += 1;
+                blank_string_body(b, &mut i, &mut out);
+            }
+            b'r' if (i == 0 || !is_ident_byte(b[i - 1])) && raw_string_hashes(b, i).is_some() => {
+                let hashes = raw_string_hashes(b, i).unwrap();
+                for _ in 0..hashes + 2 {
+                    out.push(b' ');
+                }
+                i += hashes + 2;
+                while i < b.len() {
+                    if raw_string_closes(b, i, hashes) {
+                        for _ in 0..hashes + 1 {
+                            out.push(b' ');
+                        }
+                        i += hashes + 1;
+                        break;
+                    }
+                    out.push(if b[i] == b'\n' { b'\n' } else { b' ' });
+                    i += 1;
+                }
+            }
+            b'\'' => {
+                if b.get(i + 1) == Some(&b'\\') {
+                    // escaped char literal: blank through the closing quote
+                    out.extend_from_slice(b"  ");
+                    i += 2;
+                    while i < b.len() && b[i] != b'\'' {
+                        let step = if b[i] == b'\\' && i + 1 < b.len() { 2 } else { 1 };
+                        for _ in 0..step {
+                            out.push(b' ');
+                        }
+                        i += step;
+                    }
+                    if i < b.len() {
+                        out.push(b' ');
+                        i += 1;
+                    }
+                } else if b.get(i + 2) == Some(&b'\'') && b.get(i + 1) != Some(&b'\'') {
+                    // simple one-byte char literal 'x'
+                    out.extend_from_slice(b"   ");
+                    i += 3;
+                } else {
+                    // lifetime or loop label: the tick is plain code
+                    out.push(b'\'');
+                    i += 1;
+                }
+            }
+            other => {
+                out.push(other);
+                i += 1;
+            }
+        }
+    }
+    String::from_utf8(out).expect("stripped source stays valid UTF-8")
+}
+
+/// Does line `idx` (0-based, in the original source) carry an adjacent
+/// `SAFETY` marker: on the line itself, or in the contiguous `//` comment
+/// block directly above it?
+fn has_adjacent_safety(lines: &[&str], idx: usize) -> bool {
+    if lines.get(idx).is_some_and(|l| l.contains("SAFETY")) {
+        return true;
+    }
+    let mut k = idx;
+    while k > 0 {
+        k -= 1;
+        let t = lines[k].trim_start();
+        if !t.starts_with("//") {
+            return false;
+        }
+        if t.contains("SAFETY") {
+            return true;
+        }
+    }
+    false
+}
+
+fn scan(src: &str) -> FileScan {
+    let stripped = strip(src);
+    let orig: Vec<&str> = src.lines().collect();
+    let mut count = 0;
+    let mut missing_safety = Vec::new();
+    for (idx, line) in stripped.lines().enumerate() {
+        let bytes = line.as_bytes();
+        let mut from = 0;
+        while let Some(pos) = line[from..].find("unsafe") {
+            let at = from + pos;
+            let end = at + "unsafe".len();
+            from = end;
+            let left_ok = at == 0 || !is_ident_byte(bytes[at - 1]);
+            let right_ok = end >= bytes.len() || !is_ident_byte(bytes[end]);
+            if !(left_ok && right_ok) {
+                continue;
+            }
+            count += 1;
+            if !has_adjacent_safety(&orig, idx) {
+                missing_safety.push(idx + 1);
+            }
+        }
+    }
+    FileScan { count, missing_safety }
+}
+
+/// Parse the allowlist: `<path> <count>` per line, `#` comments, blanks.
+fn parse_allowlist(text: &str, path: &Path) -> Result<BTreeMap<String, usize>> {
+    let mut map = BTreeMap::new();
+    for (ln, raw) in text.lines().enumerate() {
+        let line = raw.split('#').next().unwrap_or("").trim();
+        if line.is_empty() {
+            continue;
+        }
+        let mut it = line.split_whitespace();
+        let (Some(file), Some(count), None) = (it.next(), it.next(), it.next()) else {
+            bail!("{}:{}: expected `<path> <count>`, got {raw:?}", path.display(), ln + 1);
+        };
+        let count: usize = count
+            .parse()
+            .with_context(|| format!("{}:{}: bad count {count:?}", path.display(), ln + 1))?;
+        if map.insert(file.to_string(), count).is_some() {
+            bail!("{}:{}: duplicate entry for {file}", path.display(), ln + 1);
+        }
+    }
+    Ok(map)
+}
+
+/// Recursively collect `.rs` files under `dir`, sorted for deterministic
+/// reports, skipping [`SKIP_DIRS`].
+fn collect_rs_files(dir: &Path, out: &mut Vec<PathBuf>) -> Result<()> {
+    let mut entries: Vec<_> = std::fs::read_dir(dir)
+        .with_context(|| format!("reading {}", dir.display()))?
+        .collect::<std::io::Result<Vec<_>>>()
+        .with_context(|| format!("listing {}", dir.display()))?;
+    entries.sort_by_key(|e| e.file_name());
+    for e in entries {
+        let path = e.path();
+        let name = e.file_name();
+        let name = name.to_string_lossy();
+        if path.is_dir() {
+            if !SKIP_DIRS.contains(&name.as_ref()) {
+                collect_rs_files(&path, out)?;
+            }
+        } else if name.ends_with(".rs") {
+            out.push(path);
+        }
+    }
+    Ok(())
+}
+
+/// Scan [`SCAN_ROOTS`] under `root` against the allowlist at
+/// `allowlist`. The returned report carries every violation; an empty
+/// `violations` means the budget holds exactly.
+pub fn run(root: &Path, allowlist: &Path) -> Result<Report> {
+    let text = std::fs::read_to_string(allowlist)
+        .with_context(|| format!("reading allowlist {}", allowlist.display()))?;
+    let mut budget = parse_allowlist(&text, allowlist)?;
+    let mut files = Vec::new();
+    for sub in SCAN_ROOTS {
+        let dir = root.join(sub);
+        if dir.is_dir() {
+            collect_rs_files(&dir, &mut files)?;
+        }
+    }
+    let mut violations = Vec::new();
+    let mut unsafe_sites = 0;
+    for path in &files {
+        let rel = path
+            .strip_prefix(root)
+            .unwrap_or(path)
+            .to_string_lossy()
+            .replace(std::path::MAIN_SEPARATOR, "/");
+        let src = std::fs::read_to_string(path)
+            .with_context(|| format!("reading {}", path.display()))?;
+        let file = scan(&src);
+        unsafe_sites += file.count;
+        for line in &file.missing_safety {
+            violations.push(format!(
+                "{rel}:{line}: `unsafe` without an adjacent `// SAFETY:` comment"
+            ));
+        }
+        match budget.remove(&rel) {
+            None if file.count > 0 => violations.push(format!(
+                "{rel}: {} `unsafe` site(s) outside the audited budget — express the \
+                 layout via util::shard instead of adding a new allowlist entry",
+                file.count
+            )),
+            Some(allowed) if allowed != file.count => violations.push(format!(
+                "{rel}: {} `unsafe` site(s) but the allowlist says {allowed} — ratchet \
+                 {} to match the audited count",
+                file.count,
+                allowlist.display()
+            )),
+            _ => {}
+        }
+    }
+    for (path, allowed) in budget {
+        violations.push(format!(
+            "{path}: allowlisted ({allowed} site(s)) but no such file was scanned — stale entry"
+        ));
+    }
+    Ok(Report { files_scanned: files.len(), unsafe_sites, violations })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn comments_literals_and_identifiers_do_not_count() {
+        let src = "#![allow(unsafe_code)]\n\
+                   // a comment mentioning unsafe code\n\
+                   let s = \"unsafe in a string\";\n\
+                   let e = \"escaped quote \\\" then unsafe\";\n\
+                   let c = 'u';\n\
+                   fn lt<'a>(x: &'a u32) -> &'a u32 { x }\n\
+                   /* block unsafe /* nested unsafe */ still a comment */\n\
+                   let n = do_unsafe_things();\n";
+        let f = scan(src);
+        assert_eq!(f.count, 0, "only real tokens may count");
+    }
+
+    #[test]
+    fn counts_real_sites_and_flags_missing_safety() {
+        let src = "// SAFETY: the pointer is valid for the whole call.\n\
+                   let a = unsafe { *p };\n\
+                   let b = unsafe { *q };\n";
+        let f = scan(src);
+        assert_eq!(f.count, 2);
+        assert_eq!(f.missing_safety, vec![3], "line 3 has no adjacent SAFETY comment");
+    }
+
+    #[test]
+    fn safety_walk_spans_the_whole_comment_block() {
+        let src = "// SAFETY: a long justification\n\
+                   // that continues over several lines\n\
+                   // before the site itself.\n\
+                   let a = unsafe { *p };\n";
+        assert!(scan(src).missing_safety.is_empty());
+    }
+
+    #[test]
+    fn raw_strings_chars_and_same_line_safety() {
+        let src = "let r = r#\"unsafe\"#;\n\
+                   let t = '\\n';\n\
+                   let u = unsafe { f() }; // SAFETY: covered on this line\n";
+        let f = scan(src);
+        assert_eq!(f.count, 1);
+        assert!(f.missing_safety.is_empty(), "same-line SAFETY must count");
+    }
+
+    #[test]
+    fn allowlist_parses_comments_and_rejects_junk() {
+        let p = Path::new("unsafe_allowlist.txt");
+        let m = parse_allowlist("# header\nrust/src/util/shard.rs 8\n\n", p).unwrap();
+        assert_eq!(m.get("rust/src/util/shard.rs"), Some(&8));
+        assert!(parse_allowlist("rust/a.rs\n", p).is_err(), "missing count");
+        assert!(parse_allowlist("rust/a.rs eight\n", p).is_err(), "non-numeric count");
+        assert!(parse_allowlist("rust/a.rs 1 extra\n", p).is_err(), "trailing junk");
+        assert!(
+            parse_allowlist("rust/a.rs 1\nrust/a.rs 2\n", p).is_err(),
+            "duplicate entries must be rejected"
+        );
+    }
+
+    /// The real repository budget, enforced by plain `cargo test`: the
+    /// allowlist is confined to `util::shard` and matches it exactly.
+    #[test]
+    fn the_repo_budget_holds() {
+        let rust_dir = Path::new(env!("CARGO_MANIFEST_DIR"));
+        let root = rust_dir.parent().expect("crate lives one level under the repo root");
+        let report = run(root, &root.join("rust/unsafe_allowlist.txt")).unwrap();
+        assert!(report.violations.is_empty(), "{:#?}", report.violations);
+        assert!(report.unsafe_sites > 0, "the shard module's sites must be visible");
+    }
+}

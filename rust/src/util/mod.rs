@@ -7,7 +7,9 @@
 pub mod bench;
 pub mod cli;
 pub mod json;
+pub mod lint;
 pub mod pool;
 pub mod rng;
+pub mod shard;
 pub mod stats;
 pub mod table;

@@ -16,10 +16,12 @@
 //! materializer, and the fused (worker x layer x tile) step grid
 //! (`runtime::native::route_grid_counts`, the pool's largest client:
 //! one flat `parallel_for` over the whole D x L x tile space) are
-//! written (per-unit seeds, disjoint output slices). The caller's thread
-//! participates in the loop, so a pool with zero workers degrades to a
-//! plain serial loop and nested `parallel_for` calls cannot deadlock (a
-//! blocked caller drains the queue while it waits).
+//! written (per-unit seeds, disjoint output slices via
+//! [`crate::util::shard`]). The caller's thread participates in the loop,
+//! so a pool with zero workers degrades to a plain serial loop and nested
+//! `parallel_for` calls cannot deadlock (a blocked caller drains the
+//! queue while it waits).
+#![forbid(unsafe_code)]
 
 use std::collections::VecDeque;
 use std::panic::{catch_unwind, AssertUnwindSafe};
@@ -109,13 +111,12 @@ impl WorkerPool {
             }
             return;
         }
-        // SAFETY: the latch below guarantees every helper job has finished
-        // (and thus dropped its copy of this reference) before this
-        // function returns — even when the caller's own loop panics — so
-        // the 'scope borrow never escapes its true lifetime.
-        let body_static: &'static (dyn Fn(usize) + Sync) = unsafe {
-            std::mem::transmute::<&(dyn Fn(usize) + Sync), &'static (dyn Fn(usize) + Sync)>(body)
-        };
+        // The latch below guarantees every helper job has finished (and
+        // thus dropped its copy of this reference) before this function
+        // returns — even when the caller's own loop panics — so the 'scope
+        // borrow never escapes its true lifetime. That protocol is the
+        // safety contract of `erase_body_lifetime` (see util::shard).
+        let body_static = crate::util::shard::erase_body_lifetime(body);
         let next = Arc::new(AtomicUsize::new(0));
         let latch = Arc::new(Latch::new(helpers));
         {
@@ -265,36 +266,6 @@ pub fn global() -> &'static WorkerPool {
     GLOBAL.get_or_init(|| WorkerPool::new(default_workers()))
 }
 
-/// Raw pointer that may cross thread boundaries. Used to hand each
-/// `parallel_for` work unit its disjoint slice of a shared output buffer.
-///
-/// Safety contract (on the *user*, not this type): work units must write
-/// through non-overlapping ranges, and the buffer must outlive the
-/// `parallel_for` call — which it does, because `parallel_for` joins every
-/// unit before returning.
-pub struct SendPtr<T>(*mut T);
-
-impl<T> SendPtr<T> {
-    pub fn new(ptr: *mut T) -> Self {
-        Self(ptr)
-    }
-    pub fn get(&self) -> *mut T {
-        self.0
-    }
-}
-
-// manual impls because derive would demand `T: Clone/Copy`, which a raw
-// pointer wrapper does not need
-#[allow(clippy::expl_impl_clone_on_copy)]
-impl<T> Clone for SendPtr<T> {
-    fn clone(&self) -> Self {
-        *self
-    }
-}
-impl<T> Copy for SendPtr<T> {}
-unsafe impl<T> Send for SendPtr<T> {}
-unsafe impl<T> Sync for SendPtr<T> {}
-
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -324,14 +295,14 @@ mod tests {
         let run = |workers: usize| -> Vec<u64> {
             let pool = WorkerPool::new(workers);
             let mut out = vec![0u64; 4096];
-            let ptr = SendPtr::new(out.as_mut_ptr());
+            let views = crate::util::shard::DisjointChunks::new(&mut out, 64);
             pool.parallel_for(64, &|s| {
                 // each unit owns a disjoint 64-element chunk
-                let chunk = unsafe { std::slice::from_raw_parts_mut(ptr.get().add(s * 64), 64) };
-                for (j, v) in chunk.iter_mut().enumerate() {
+                for (j, v) in views.view(s).iter_mut().enumerate() {
                     *v = (s as u64) * 1_000_003 + j as u64;
                 }
             });
+            drop(views);
             out
         };
         let expect = run(0);

@@ -1,0 +1,335 @@
+//! Verified-disjoint shard views: the crate's single audited `unsafe` module.
+//!
+//! Every parallel kernel in this repo follows the same shape: one flat buffer
+//! is carved into non-overlapping per-unit regions, each worker writes only
+//! its own region, and a serial fixed-order merge (or the disjointness itself)
+//! makes the result bitwise-deterministic across pool sizes. Historically each
+//! kernel re-derived that carve with raw pointers (`SendPtr` +
+//! `from_raw_parts_mut`) and a comment asserting disjointness. This module
+//! replaces all of those sites with two checked abstractions:
+//!
+//! - [`DisjointChunks`]: contiguous equal-width chunks (the last one clamped),
+//!   one per unit — the per-shard / per-tile / per-expert-slab layout.
+//! - [`StridedViews`]: a `(outer, inner)` unit grid over an
+//!   `outer x rows x inner x width` buffer, where unit `(o, t)` owns column
+//!   `t` of outer block `o` — the per-(expert, I-tile) weight-gradient layout
+//!   used by the tiled FFN backward pass. Crucially, two units of the same
+//!   outer block get *disjoint* views (they interleave by rows), which the old
+//!   raw-pointer code could not express: it materialised overlapping full
+//!   `&mut` slices per unit, which is undefined behavior under the aliasing
+//!   rules even though the written ranges never overlapped.
+//!
+//! Both hand out `&'a mut [T]` views tied to the borrow of the original
+//! buffer, so the borrow checker enforces the views die before the buffer is
+//! reused. Disjointness across units is enforced three ways:
+//!
+//! 1. by construction (the index arithmetic below, each line audited);
+//! 2. in debug builds, by a per-unit claim bitmap — claiming the same unit
+//!    twice panics, so any accidental overlap trips the determinism tests;
+//! 3. in CI, by Miri (stacked borrows) and ThreadSanitizer runs over the
+//!    pool/ffn/fused/dispatch test subset.
+//!
+//! The rest of the crate is `#![forbid(unsafe_code)]` per-module, and the
+//! `m6t lint-unsafe` budget scanner pins this file's `unsafe` count against
+//! `rust/unsafe_allowlist.txt`. To add a new parallel kernel, express its
+//! layout with one of these views (or extend this module) — never add
+//! `unsafe` elsewhere.
+#![allow(unsafe_code)]
+
+use std::marker::PhantomData;
+
+#[cfg(debug_assertions)]
+use std::sync::atomic::{AtomicBool, Ordering};
+
+/// Claim bitmap used by the debug overlap checker: one flag per unit,
+/// flipped exactly once by `view(u)`.
+#[cfg(debug_assertions)]
+fn new_claim_map(units: usize) -> Vec<AtomicBool> {
+    (0..units).map(|_| AtomicBool::new(false)).collect()
+}
+
+#[cfg(debug_assertions)]
+fn claim(map: &[AtomicBool], unit: usize, what: &str) {
+    assert!(
+        !map[unit].swap(true, Ordering::Relaxed),
+        "{what}: unit {unit} claimed twice (overlapping views)"
+    );
+}
+
+/// Carves one `&mut [T]` into `ceil(len / chunk)` non-overlapping contiguous
+/// views of `chunk` elements each (the last view clamped to the buffer end).
+///
+/// `view(u)` may be called from any thread (the struct is `Sync`); each unit
+/// index must be claimed at most once per carve, which debug builds enforce
+/// at runtime.
+pub struct DisjointChunks<'a, T> {
+    base: *mut T,
+    len: usize,
+    chunk: usize,
+    units: usize,
+    #[cfg(debug_assertions)]
+    claimed: Vec<AtomicBool>,
+    _marker: PhantomData<&'a mut [T]>,
+}
+
+// SAFETY: `DisjointChunks` holds a raw pointer only so distinct units can be
+// handed to distinct threads; `view` derives a fresh `&mut [T]` per unit and
+// the unit regions never overlap (by construction, checked in debug builds).
+// Sending or sharing the carve itself is therefore as safe as sending the
+// original `&mut [T]` would be.
+unsafe impl<T: Send> Send for DisjointChunks<'_, T> {}
+// SAFETY: see the `Send` impl above — `&DisjointChunks` only exposes `view`,
+// which yields non-overlapping `&mut` regions of a `Send` element type.
+unsafe impl<T: Send> Sync for DisjointChunks<'_, T> {}
+
+impl<'a, T> DisjointChunks<'a, T> {
+    /// Carve `buf` into chunks of `chunk` elements. `chunk` must be non-zero;
+    /// an empty `buf` yields zero units.
+    pub fn new(buf: &'a mut [T], chunk: usize) -> Self {
+        assert!(chunk > 0, "DisjointChunks: chunk width must be non-zero");
+        let len = buf.len();
+        let units = len.div_ceil(chunk);
+        Self {
+            base: buf.as_mut_ptr(),
+            len,
+            chunk,
+            units,
+            #[cfg(debug_assertions)]
+            claimed: new_claim_map(units),
+            _marker: PhantomData,
+        }
+    }
+
+    /// Number of units (views) this carve produces.
+    pub fn units(&self) -> usize {
+        self.units
+    }
+
+    /// The view owned by unit `u`: elements `[u * chunk, min((u + 1) * chunk, len))`.
+    ///
+    /// Panics if `u` is out of range, and (in debug builds) if `u` was
+    /// already claimed.
+    // The returned lifetime is 'a (the original buffer borrow), deliberately
+    // unrelated to the `&self` borrow: distinct units alias distinct memory.
+    #[allow(clippy::mut_from_ref)]
+    pub fn view(&self, u: usize) -> &'a mut [T] {
+        assert!(u < self.units, "DisjointChunks: unit {u} out of range ({} units)", self.units);
+        #[cfg(debug_assertions)]
+        claim(&self.claimed, u, "DisjointChunks");
+        let start = u * self.chunk;
+        let end = (start + self.chunk).min(self.len);
+        // SAFETY: `start < len` (u < units = ceil(len / chunk) and chunk > 0)
+        // and `end <= len`, so the range lies inside the original buffer,
+        // which outlives 'a. Unit ranges [u*chunk, (u+1)*chunk) are pairwise
+        // disjoint by construction and each unit is claimed at most once
+        // (checked in debug builds), so no two live `&mut` views alias.
+        unsafe { std::slice::from_raw_parts_mut(self.base.add(start), end - start) }
+    }
+}
+
+/// Carves an `outer x rows x inner x width` buffer into an `(outer, inner)`
+/// grid of strided views: unit `u = o * inner + t` owns, for every
+/// `r in 0..rows`, the `width`-element run starting at
+/// `((o * rows + r) * inner + t) * width`.
+///
+/// This is the per-(expert, I-tile) weight-gradient layout: `outer` experts,
+/// `rows` output rows per expert, `inner` tiles, `width` columns per tile.
+/// Two tiles of the same expert interleave by rows but never overlap.
+pub struct StridedViews<'a, T> {
+    base: *mut T,
+    outer: usize,
+    rows: usize,
+    inner: usize,
+    width: usize,
+    #[cfg(debug_assertions)]
+    claimed: Vec<AtomicBool>,
+    _marker: PhantomData<&'a mut [T]>,
+}
+
+// SAFETY: same argument as `DisjointChunks` — `view` yields per-unit regions
+// whose index sets are pairwise disjoint (proved in `view`'s SAFETY comment,
+// cross-checked against a naive index-set oracle in tests/shard_views.rs),
+// so handing units to other threads is as safe as sending the buffer itself.
+unsafe impl<T: Send> Send for StridedViews<'_, T> {}
+// SAFETY: see the `Send` impl above.
+unsafe impl<T: Send> Sync for StridedViews<'_, T> {}
+
+impl<'a, T> StridedViews<'a, T> {
+    /// Carve `buf`, which must be exactly `outer * rows * inner * width`
+    /// elements, into `outer * inner` strided views.
+    pub fn new(buf: &'a mut [T], outer: usize, rows: usize, inner: usize, width: usize) -> Self {
+        assert_eq!(
+            buf.len(),
+            outer * rows * inner * width,
+            "StridedViews: buffer length must equal outer * rows * inner * width"
+        );
+        Self {
+            base: buf.as_mut_ptr(),
+            outer,
+            rows,
+            inner,
+            width,
+            #[cfg(debug_assertions)]
+            claimed: new_claim_map(outer * inner),
+            _marker: PhantomData,
+        }
+    }
+
+    /// Number of units (views) this carve produces.
+    pub fn units(&self) -> usize {
+        self.outer * self.inner
+    }
+
+    /// The view owned by unit `u = o * inner + t`.
+    ///
+    /// Panics if `u` is out of range, and (in debug builds) if `u` was
+    /// already claimed.
+    pub fn view(&self, u: usize) -> StridedView<'a, T> {
+        let units = self.units();
+        assert!(u < units, "StridedViews: unit {u} out of range ({units} units)");
+        #[cfg(debug_assertions)]
+        claim(&self.claimed, u, "StridedViews");
+        let o = u / self.inner;
+        let t = u % self.inner;
+        let stride = self.inner * self.width;
+        // SAFETY: row r of unit (o, t) covers flat indices
+        // [((o*rows + r)*inner + t)*width, +width). Two units agreeing on any
+        // index would need equal o (outer blocks are disjoint), equal r (rows
+        // within a block are disjoint runs of `stride`), and equal t (columns
+        // within a row are disjoint `width` runs) — i.e. be the same unit.
+        // o < outer and t < inner keep the base offset in bounds, and each
+        // unit is claimed at most once (checked in debug builds), so no two
+        // live views alias. Row bounds are checked in `StridedView::row`.
+        let base = unsafe { self.base.add(o * self.rows * stride + t * self.width) };
+        StridedView { base, rows: self.rows, stride, width: self.width, _marker: PhantomData }
+    }
+}
+
+/// One unit of a [`StridedViews`] carve: `rows` non-contiguous runs of
+/// `width` elements, `stride` apart. Not `Send`/`Sync` — it is constructed
+/// on the worker thread that owns it, via the `Sync` carve.
+pub struct StridedView<'a, T> {
+    base: *mut T,
+    rows: usize,
+    stride: usize,
+    width: usize,
+    _marker: PhantomData<&'a mut [T]>,
+}
+
+impl<T> StridedView<'_, T> {
+    /// Number of rows in this view.
+    pub fn rows(&self) -> usize {
+        self.rows
+    }
+
+    /// Row `r` of this view: `width` contiguous elements at offset
+    /// `r * stride` from the view base.
+    pub fn row(&mut self, r: usize) -> &mut [T] {
+        assert!(r < self.rows, "StridedView: row {r} out of range ({} rows)", self.rows);
+        // SAFETY: `base` points at flat index ((o*rows)*inner + t)*width of
+        // the original buffer (see `StridedViews::view`), so `base + r*stride`
+        // with r < rows starts a `width` run that stays inside the buffer
+        // (worst case ends at ((o*rows + rows - 1)*inner + t + 1)*width
+        // <= outer*rows*inner*width). The run lies wholly inside this unit's
+        // disjoint index set, and the `&mut self` receiver prevents two live
+        // row borrows from this view from coexisting.
+        unsafe { std::slice::from_raw_parts_mut(self.base.add(r * self.stride), self.width) }
+    }
+}
+
+/// Erase the scope lifetime of a worker-pool body so it can be stored in the
+/// pool's shared job slot.
+///
+/// This is the one lifetime transmute in the crate, relocated here from
+/// `util::pool` so that module can forbid `unsafe`. The contract is the
+/// pool's latch protocol (see `util::pool`): `parallel_for` publishes the
+/// body, wakes the workers, and does not return until every worker has
+/// signalled completion through the latch — so the `'static` view never
+/// outlives the real `'scope` borrow it was created from.
+///
+/// Callers must uphold exactly that: the erased reference must not be used
+/// after `parallel_for` returns. The pool clears the job slot before
+/// returning, which Miri checks on every run.
+pub(crate) fn erase_body_lifetime<'scope>(
+    body: &'scope (dyn Fn(usize) + Sync),
+) -> &'static (dyn Fn(usize) + Sync) {
+    // SAFETY: lifetime-only transmute (the pointee type is unchanged). The
+    // caller (util::pool::parallel_for) blocks on the completion latch until
+    // no worker can still hold this reference, and clears the shared job
+    // slot before returning, so the 'static alias is dead before 'scope ends.
+    unsafe {
+        std::mem::transmute::<&'scope (dyn Fn(usize) + Sync), &'static (dyn Fn(usize) + Sync)>(
+            body,
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn chunks_cover_exactly_once() {
+        let mut buf = vec![0u32; 10];
+        let views = DisjointChunks::new(&mut buf, 4);
+        assert_eq!(views.units(), 3);
+        for u in 0..views.units() {
+            for x in views.view(u).iter_mut() {
+                *x += 1 + u as u32;
+            }
+        }
+        assert_eq!(buf, vec![1, 1, 1, 1, 2, 2, 2, 2, 3, 3]);
+    }
+
+    #[test]
+    fn chunks_clamp_last() {
+        let mut buf = vec![0u8; 5];
+        let views = DisjointChunks::new(&mut buf, 3);
+        assert_eq!(views.view(0).len(), 3);
+        assert_eq!(views.view(1).len(), 2);
+    }
+
+    #[test]
+    fn empty_buffer_zero_units() {
+        let mut buf: Vec<u64> = Vec::new();
+        let views = DisjointChunks::new(&mut buf, 7);
+        assert_eq!(views.units(), 0);
+    }
+
+    #[cfg(debug_assertions)]
+    #[test]
+    #[should_panic(expected = "claimed twice")]
+    fn double_claim_panics() {
+        let mut buf = vec![0i32; 8];
+        let views = DisjointChunks::new(&mut buf, 4);
+        let _a = views.view(1);
+        let _b = views.view(1);
+    }
+
+    #[test]
+    fn strided_units_cover_exactly_once() {
+        let (outer, rows, inner, width) = (2, 3, 2, 4);
+        let mut buf = vec![0u32; outer * rows * inner * width];
+        let views = StridedViews::new(&mut buf, outer, rows, inner, width);
+        assert_eq!(views.units(), outer * inner);
+        for u in 0..views.units() {
+            let mut v = views.view(u);
+            for r in 0..v.rows() {
+                for x in v.row(r).iter_mut() {
+                    *x += 1;
+                }
+            }
+        }
+        assert!(buf.iter().all(|&x| x == 1), "every index written exactly once");
+    }
+
+    #[cfg(debug_assertions)]
+    #[test]
+    #[should_panic(expected = "claimed twice")]
+    fn strided_double_claim_panics() {
+        let mut buf = vec![0i64; 2 * 2 * 2 * 2];
+        let views = StridedViews::new(&mut buf, 2, 2, 2, 2);
+        let _a = views.view(3);
+        let _b = views.view(3);
+    }
+}

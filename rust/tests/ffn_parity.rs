@@ -96,24 +96,15 @@ fn moe_ffn_forward_and_backward_match_reference() {
             let pool = WorkerPool::new(workers);
             let mut out_t = vec![0.0f32; shape.x_len()];
             let mut partial = Vec::new();
-            ffn::fwd_tiled(&pool, shape, &x, &w1, &w2, &mut out_t, &mut partial);
+            let inputs = ffn::FfnInputs { x: &x, w1: &w1, w2: &w2 };
+            ffn::fwd_tiled(&pool, shape, inputs, &mut out_t, &mut partial);
             assert_close(&out_t, &want_out, &format!("{name}/fwd_tiled/W{workers}"));
 
             let mut dw1 = vec![0.0f32; shape.w1_len()];
             let mut dw2 = vec![0.0f32; shape.w2_len()];
             let mut dx = vec![0.0f32; shape.x_len()];
-            ffn::bwd_tiled(
-                &pool,
-                shape,
-                &x,
-                &w1,
-                &w2,
-                &g,
-                &mut dw1,
-                &mut dw2,
-                Some(&mut dx),
-                &mut partial,
-            );
+            let grads = ffn::FfnGrads { dw1: &mut dw1, dw2: &mut dw2, dx: Some(&mut dx) };
+            ffn::bwd_tiled(&pool, shape, inputs, &g, grads, &mut partial);
             assert_close(&dx, &want_dx, &format!("{name}/dx/W{workers}"));
             assert_close(&dw1, &want_dw1, &format!("{name}/dw1/W{workers}"));
             assert_close(&dw2, &want_dw2, &format!("{name}/dw2/W{workers}"));

@@ -1,0 +1,167 @@
+//! Property tests for `util::shard`, the crate's single audited unsafe
+//! module: every flat index is covered by exactly one view, overlapping
+//! unit claims panic in debug builds, and the strided carve agrees with
+//! a naive index-set oracle. The cross-thread cases run the real
+//! `WorkerPool`, so the Miri and ThreadSanitizer CI jobs exercise the
+//! same claim/write paths the kernels use (sizes shrink under Miri).
+
+use m6t::util::pool::WorkerPool;
+use m6t::util::shard::{DisjointChunks, StridedViews};
+
+#[test]
+fn chunks_cover_every_index_exactly_once() {
+    let cases: &[(usize, usize)] = &[(0, 3), (1, 3), (10, 4), (12, 4), (5, 9), (257, 16)];
+    for &(len, chunk) in cases {
+        let mut buf = vec![0u32; len];
+        let views = DisjointChunks::new(&mut buf, chunk);
+        assert_eq!(views.units(), len.div_ceil(chunk), "unit count for len {len} chunk {chunk}");
+        for u in 0..views.units() {
+            for x in views.view(u).iter_mut() {
+                *x += 1;
+            }
+        }
+        drop(views);
+        assert!(buf.iter().all(|&x| x == 1), "len {len} chunk {chunk}: every index exactly once");
+    }
+}
+
+#[test]
+fn chunk_views_map_to_their_ranges() {
+    let mut buf = vec![0usize; 11];
+    let views = DisjointChunks::new(&mut buf, 4);
+    for u in 0..views.units() {
+        for x in views.view(u).iter_mut() {
+            *x = u + 1;
+        }
+    }
+    drop(views);
+    let want: Vec<usize> = (0..11).map(|i| i / 4 + 1).collect();
+    assert_eq!(buf, want, "view u must own exactly [u * chunk, (u + 1) * chunk)");
+}
+
+/// The naive oracle: the flat indices unit `u = o * inner + t` owns in an
+/// `outer x rows x inner x width` carve.
+fn strided_unit_indices(rows: usize, inner: usize, width: usize, u: usize) -> Vec<usize> {
+    let (o, t) = (u / inner, u % inner);
+    let mut idx = Vec::new();
+    for r in 0..rows {
+        let start = ((o * rows + r) * inner + t) * width;
+        idx.extend(start..start + width);
+    }
+    idx
+}
+
+#[test]
+fn strided_views_match_the_naive_index_oracle() {
+    let geoms: &[(usize, usize, usize, usize)] =
+        &[(1, 1, 1, 1), (2, 3, 2, 4), (3, 1, 4, 2), (4, 16, 2, 8)];
+    for &(outer, rows, inner, width) in geoms {
+        let mut buf = vec![usize::MAX; outer * rows * inner * width];
+        let views = StridedViews::new(&mut buf, outer, rows, inner, width);
+        assert_eq!(views.units(), outer * inner);
+        for u in 0..views.units() {
+            let mut v = views.view(u);
+            assert_eq!(v.rows(), rows);
+            for r in 0..v.rows() {
+                for x in v.row(r).iter_mut() {
+                    *x = u;
+                }
+            }
+        }
+        drop(views);
+        for u in 0..outer * inner {
+            for i in strided_unit_indices(rows, inner, width, u) {
+                assert_eq!(buf[i], u, "flat index {i} must be owned by unit {u}");
+            }
+        }
+        // and nothing outside the per-unit index sets was left unwritten,
+        // so the sets partition the buffer exactly
+        assert!(buf.iter().all(|&x| x != usize::MAX), "no index may be uncovered");
+    }
+}
+
+#[test]
+fn cross_thread_chunk_writes_are_deterministic() {
+    let len = if cfg!(miri) { 1024 } else { 65536 };
+    let chunk = 256;
+    let mut golden: Option<Vec<u64>> = None;
+    for workers in [0usize, 1, 2, 4] {
+        let pool = WorkerPool::new(workers);
+        let mut buf = vec![0u64; len];
+        let views = DisjointChunks::new(&mut buf, chunk);
+        pool.parallel_for(views.units(), &|u| {
+            for (j, x) in views.view(u).iter_mut().enumerate() {
+                *x = ((u as u64) << 32) | j as u64;
+            }
+        });
+        drop(views);
+        match &golden {
+            None => golden = Some(buf),
+            Some(g) => assert_eq!(g, &buf, "chunk writes diverged at {workers} workers"),
+        }
+    }
+}
+
+#[test]
+fn cross_thread_strided_writes_are_deterministic() {
+    let (outer, inner, width) = (4usize, 4usize, 8usize);
+    let rows = if cfg!(miri) { 4 } else { 32 };
+    let mut golden: Option<Vec<u64>> = None;
+    for workers in [0usize, 2, 4] {
+        let pool = WorkerPool::new(workers);
+        let mut buf = vec![0u64; outer * rows * inner * width];
+        let views = StridedViews::new(&mut buf, outer, rows, inner, width);
+        pool.parallel_for(views.units(), &|u| {
+            let mut v = views.view(u);
+            for r in 0..v.rows() {
+                for (j, x) in v.row(r).iter_mut().enumerate() {
+                    *x = ((u as u64) << 32) | ((r as u64) << 16) | j as u64;
+                }
+            }
+        });
+        drop(views);
+        match &golden {
+            None => golden = Some(buf),
+            Some(g) => assert_eq!(g, &buf, "strided writes diverged at {workers} workers"),
+        }
+    }
+}
+
+#[test]
+#[should_panic(expected = "out of range")]
+fn chunk_unit_out_of_range_panics() {
+    let mut buf = vec![0u8; 8];
+    let views = DisjointChunks::new(&mut buf, 4);
+    let _ = views.view(2);
+}
+
+#[test]
+#[should_panic(expected = "out of range")]
+fn strided_row_out_of_range_panics() {
+    let mut buf = vec![0u8; 8];
+    let views = StridedViews::new(&mut buf, 2, 2, 1, 2);
+    let mut v = views.view(0);
+    let _ = v.row(2);
+}
+
+// The runtime overlap checker only exists in debug builds (the release
+// contract is the compile-time audit + these debug runs in CI).
+#[cfg(debug_assertions)]
+#[test]
+#[should_panic(expected = "claimed twice")]
+fn overlapping_chunk_claims_panic_in_debug() {
+    let mut buf = vec![0u8; 16];
+    let views = DisjointChunks::new(&mut buf, 8);
+    let _a = views.view(0);
+    let _b = views.view(0);
+}
+
+#[cfg(debug_assertions)]
+#[test]
+#[should_panic(expected = "claimed twice")]
+fn overlapping_strided_claims_panic_in_debug() {
+    let mut buf = vec![0u16; 2 * 3 * 2 * 2];
+    let views = StridedViews::new(&mut buf, 2, 3, 2, 2);
+    let _a = views.view(1);
+    let _b = views.view(1);
+}
