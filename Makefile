@@ -1,6 +1,6 @@
 # Convenience targets; tier-1 verify is `cargo build --release && cargo test -q`.
 
-.PHONY: build test fmt lint lint-unsafe miri tsan run report artifacts smoke bench-step bench-overlap bench-ffn
+.PHONY: build test fmt lint lint-unsafe miri tsan run report artifacts smoke bench-step bench-overlap bench-ffn sweep sweep-gc
 
 build:
 	cargo build --release
@@ -60,6 +60,21 @@ bench-overlap:
 # baseline, written to BENCH_ffn.json (see DESIGN.md on how to read it).
 bench-ffn:
 	cargo run --release -- bench --ffn
+
+# Run every builtin bench family through the sweep engine's
+# content-addressed store (results/store): completed cells are served from
+# the store, so a re-run after an interruption only executes what's
+# missing. See DESIGN.md §"Sweep driver & experiment store".
+sweep:
+	cargo run --release -- sweep dispatch
+	cargo run --release -- sweep step
+	cargo run --release -- sweep overlap
+	cargo run --release -- sweep ffn
+
+# Prune store cells whose address no longer appears in any builtin spec
+# (training runs are never scanned by a bench-only gc).
+sweep-gc:
+	cargo run --release -- sweep gc
 
 # `artifacts` is a documented no-op stub. The AOT pipeline
 # (python/compile/aot.py -> HLO text + artifacts/manifest.json) feeds the

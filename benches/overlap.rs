@@ -8,10 +8,12 @@
 //! `min_overlap_speedup` field is the CI regression gate.
 
 use m6t::runtime::overlap_bench;
+use m6t::sweep::Engine;
 
 fn main() -> anyhow::Result<()> {
     let steps: usize = std::env::args().skip(1).find_map(|a| a.parse().ok()).unwrap_or(12);
-    let rows = overlap_bench::run_suite(steps)?;
+    // timing benches always re-measure; the store still records each cell
+    let (rows, _outcome) = overlap_bench::run_suite(&Engine::new("results").force(true), steps)?;
     print!("{}", overlap_bench::render_table(&rows, steps).render());
     overlap_bench::write_json(&rows, steps, "BENCH_overlap.json")?;
     eprintln!(

@@ -8,10 +8,12 @@
 //! perf trajectory is pinned in one place.
 
 use m6t::runtime::step_bench;
+use m6t::sweep::Engine;
 
 fn main() -> anyhow::Result<()> {
     let steps: usize = std::env::args().skip(1).find_map(|a| a.parse().ok()).unwrap_or(12);
-    let rows = step_bench::run_suite(steps)?;
+    // timing benches always re-measure; the store still records each cell
+    let (rows, _outcome) = step_bench::run_suite(&Engine::new("results").force(true), steps)?;
     print!("{}", step_bench::render_table(&rows, steps).render());
     step_bench::write_json(&rows, steps, "BENCH_step.json")?;
     eprintln!(

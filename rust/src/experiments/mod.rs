@@ -1,7 +1,9 @@
 //! Experiment drivers — one per table/figure of the paper's evaluation
 //! (DESIGN.md §3 maps each to its modules). All drivers print the same
 //! rows/series the paper reports and drop machine-readable CSVs under
-//! `results/`.
+//! `results/`. Training runs are cached in the sweep engine's
+//! content-addressed store via [`Runner`] (DESIGN.md §"Sweep driver &
+//! experiment store"), so figures and tables share identical runs.
 
 pub mod fig1;
 pub mod fig3;
@@ -13,4 +15,4 @@ pub mod table1;
 pub mod table2;
 pub mod table34;
 
-pub use runner::{CachedRun, Runner};
+pub use runner::{CachedRun, Runner, TrainCellRunner};

@@ -1,16 +1,27 @@
 //! Cached experiment runner: trains a variant once and persists the loss
-//! curve / c_v series / eval points to `results/runs/*.json`; figure and
-//! table drivers share runs (e.g. Fig 3 curves and Table 3 PPLs come from
-//! the same training).
+//! curve / c_v series / eval points; figure and table drivers share runs
+//! (e.g. Fig 3 curves and Table 3 PPLs come from the same training).
+//!
+//! Training runs live in the sweep engine's content-addressed store
+//! (`<results>/store/train/<key>/`), keyed by the *fully resolved* model
+//! config — not just the `(variant, steps, seed)` filename the old
+//! `results/runs/` cache used. That filename key had a stale-cache bug:
+//! editing a registry variant's config silently reused the old curve.
+//! Under the store, a config edit changes the address and forces a
+//! re-train (pinned by `runner_rebuilds_when_the_variant_config_changes`
+//! in `rust/tests/sweep_store.rs`).
 
-use std::fs;
 use std::path::{Path, PathBuf};
 
-use anyhow::{anyhow, Context, Result};
+use anyhow::{anyhow, Result};
 
 use crate::coordinator::{TrainOptions, Trainer};
 use crate::runtime::{Backend as _, BackendProvider};
-use crate::util::json::{self, arr, num, obj, s, Value};
+use crate::sweep::{self, Cell, CellRunner, Engine, ParamValue};
+use crate::util::json::{arr, num, obj, s, Value};
+
+/// Code-relevant version tag in every training cell's store address.
+pub const STORE_VERSION: &str = "train-v1";
 
 /// The persisted essence of one training run.
 #[derive(Debug, Clone)]
@@ -137,7 +148,87 @@ impl CachedRun {
     }
 }
 
-/// Runner with a file-backed cache, generic over the execution backend.
+/// Sweep-engine executor for training cells (`kind = "train"`). The
+/// resolve step folds the variant's full [`ModelConfig`] into the cell,
+/// which is exactly the stale-cache fix: two cells agree in address only
+/// when every config field agrees.
+///
+/// [`ModelConfig`]: crate::config::ModelConfig
+pub struct TrainCellRunner<'e> {
+    provider: &'e dyn BackendProvider,
+    verbose: bool,
+}
+
+impl<'e> TrainCellRunner<'e> {
+    pub fn new(provider: &'e dyn BackendProvider, verbose: bool) -> Self {
+        Self { provider, verbose }
+    }
+}
+
+impl CellRunner for TrainCellRunner<'_> {
+    fn kind(&self) -> &'static str {
+        "train"
+    }
+
+    fn version(&self) -> &'static str {
+        STORE_VERSION
+    }
+
+    fn resolve(&self, cell: &Cell) -> Result<Cell> {
+        let variant = cell.req_str("variant")?;
+        let info = self.provider.info(variant)?;
+        let mut resolved = cell.clone();
+        resolved.merge(&sweep::config_cell(&info.config));
+        Ok(resolved)
+    }
+
+    fn run(&self, cell: &Cell) -> Result<Value> {
+        let variant = cell.req_str("variant")?;
+        let steps = cell.req_usize("steps")? as i64;
+        let seed = cell.req_u64("seed")?;
+        let backend = self.provider.load(variant)?;
+        if self.verbose {
+            let info = backend.info();
+            eprintln!(
+                "[runner] {variant}: training {steps} steps ({:.1}M params, C={})",
+                info.param_count as f64 / 1e6,
+                info.capacity
+            );
+        }
+        let opts = TrainOptions {
+            steps,
+            seed,
+            eval_every: (steps / 4).max(1),
+            eval_batches: 8,
+            verbose: self.verbose,
+            ..Default::default()
+        };
+        let trainer = Trainer::new(backend, opts);
+        let (outcome, _state) = trainer.train()?;
+
+        let n = outcome.log.records.len().max(1) as f64;
+        let run = CachedRun {
+            variant: variant.to_string(),
+            steps,
+            seed,
+            curve: outcome.log.loss_curve(),
+            cv: outcome
+                .log
+                .records
+                .iter()
+                .map(|r| (r.step, r.cv_per_layer.clone()))
+                .collect(),
+            evals: outcome.evals.clone(),
+            final_ppl: outcome.evals.last().map(|&(_, p)| p).unwrap_or(f64::NAN),
+            mean_ms: outcome.log.records.iter().map(|r| r.ms_per_step).sum::<f64>() / n,
+            dropped_per_step: outcome.log.records.iter().map(|r| r.dropped).sum::<f64>() / n,
+        };
+        Ok(run.to_json())
+    }
+}
+
+/// Runner over the content-addressed store, generic over the execution
+/// backend.
 pub struct Runner<'e> {
     pub provider: &'e dyn BackendProvider,
     pub results_dir: PathBuf,
@@ -159,70 +250,25 @@ impl<'e> Runner<'e> {
         }
     }
 
-    fn cache_path(&self, variant: &str, steps: i64) -> PathBuf {
-        self.results_dir
-            .join("runs")
-            .join(format!("{variant}-s{steps}-seed{}.json", self.seed))
+    fn engine(&self) -> Engine {
+        Engine::new(&self.results_dir).force(self.force).verbose(self.verbose)
     }
 
-    /// Train (or load from cache) one variant for `steps` steps.
-    pub fn run(&self, variant: &str, steps: i64) -> Result<CachedRun> {
-        let path = self.cache_path(variant, steps);
-        if !self.force {
-            if let Ok(text) = fs::read_to_string(&path) {
-                if let Ok(doc) = json::parse(&text) {
-                    if let Ok(run) = CachedRun::from_json(&doc) {
-                        if self.verbose {
-                            eprintln!("[runner] {variant}: cached ({} steps)", run.steps);
-                        }
-                        return Ok(run);
-                    }
-                }
-            }
-        }
-        let backend = self.provider.load(variant)?;
-        if self.verbose {
-            let info = backend.info();
-            eprintln!(
-                "[runner] {variant}: training {steps} steps ({:.1}M params, C={})",
-                info.param_count as f64 / 1e6,
-                info.capacity
-            );
-        }
-        let opts = TrainOptions {
-            steps,
-            seed: self.seed,
-            eval_every: (steps / 4).max(1),
-            eval_batches: 8,
-            verbose: self.verbose,
-            ..Default::default()
-        };
-        let trainer = Trainer::new(backend, opts);
-        let (outcome, _state) = trainer.train()?;
+    /// Train (or recall from the store) one variant for `steps` steps,
+    /// reporting whether the store served it.
+    pub fn run_traced(&self, variant: &str, steps: i64) -> Result<(CachedRun, bool)> {
+        let mut cell = Cell::new();
+        cell.set("variant", ParamValue::Str(variant.to_string()));
+        cell.set("steps", ParamValue::Num(steps as f64));
+        cell.set("seed", ParamValue::Num(self.seed as f64));
+        let runner = TrainCellRunner::new(self.provider, self.verbose);
+        let outcome = self.engine().run_cell(&runner, &cell, variant)?;
+        Ok((CachedRun::from_json(&outcome.result)?, outcome.cached))
+    }
 
-        let n = outcome.log.records.len().max(1) as f64;
-        let run = CachedRun {
-            variant: variant.to_string(),
-            steps,
-            seed: self.seed,
-            curve: outcome.log.loss_curve(),
-            cv: outcome
-                .log
-                .records
-                .iter()
-                .map(|r| (r.step, r.cv_per_layer.clone()))
-                .collect(),
-            evals: outcome.evals.clone(),
-            final_ppl: outcome.evals.last().map(|&(_, p)| p).unwrap_or(f64::NAN),
-            mean_ms: outcome.log.records.iter().map(|r| r.ms_per_step).sum::<f64>() / n,
-            dropped_per_step: outcome.log.records.iter().map(|r| r.dropped).sum::<f64>() / n,
-        };
-        if let Some(parent) = path.parent() {
-            fs::create_dir_all(parent)?;
-        }
-        fs::write(&path, json::write(&run.to_json()))
-            .with_context(|| format!("writing cache {path:?}"))?;
-        Ok(run)
+    /// Train (or recall from the store) one variant for `steps` steps.
+    pub fn run(&self, variant: &str, steps: i64) -> Result<CachedRun> {
+        Ok(self.run_traced(variant, steps)?.0)
     }
 
     /// Run with the runner's default step budget.

@@ -40,5 +40,6 @@ pub mod metrics;
 pub mod moe;
 pub mod runtime;
 pub mod scaling;
+pub mod sweep;
 pub mod testing;
 pub mod util;

@@ -12,6 +12,8 @@
 //!   bench                   measured vs simulated ms/step per strategy;
 //!                           --routing / --dispatch / --step / --overlap / --ffn
 //!                           run the tracked suites (BENCH_*.json)
+//!   sweep                   declarative grid sweeps over the content-addressed
+//!                           experiment store; `m6t sweep gc` prunes dead cells
 //!   flops                   Table 1 (analytical per-GPU GFLOPs)
 //!   simulate                Table 2 (calibrated cluster simulator)
 //!   figure fig1|fig3|fig4|fig5|fig6
@@ -29,7 +31,9 @@ use m6t::config::paper;
 use m6t::coordinator::{Checkpoint, TrainOptions, Trainer};
 use m6t::experiments::{self, Runner};
 use m6t::runtime::{measure_step_ms, Backend as _, BackendProvider, NativeProvider};
+use m6t::sweep::{self, report, Engine, OutputFormat, SweepSpec};
 use m6t::util::cli::Command;
+use m6t::util::json::Value;
 use m6t::util::table::{f1, f2, Table};
 
 fn main() -> ExitCode {
@@ -52,7 +56,8 @@ fn main() -> ExitCode {
 
 const USAGE: &str = "m6t — M6-T sparse-expert reproduction
 subcommands:
-  list | run | train | eval | bench | flops | simulate | figure | tables | report | lint-unsafe
+  list | run | train | eval | bench | sweep | flops | simulate | figure | tables | report
+  | lint-unsafe
 run `m6t <subcommand> --help` for options";
 
 fn common(cmd: Command) -> Command {
@@ -81,6 +86,7 @@ fn dispatch(sub: &str, rest: &[String]) -> Result<()> {
         "train" => cmd_train(rest),
         "eval" => cmd_eval(rest),
         "bench" => cmd_bench(rest),
+        "sweep" => cmd_sweep(rest),
         "flops" => cmd_flops(rest),
         "simulate" => cmd_simulate(rest),
         "figure" => cmd_figure(rest),
@@ -97,6 +103,10 @@ fn dispatch(sub: &str, rest: &[String]) -> Result<()> {
 
 fn parse(cmd: Command, rest: &[String]) -> Result<m6t::util::cli::Args> {
     cmd.parse(rest).map_err(|e| anyhow::anyhow!("{e}"))
+}
+
+fn out_format(args: &m6t::util::cli::Args) -> Result<OutputFormat> {
+    OutputFormat::parse(args.get("output-format").unwrap())
 }
 
 fn cmd_list(rest: &[String]) -> Result<()> {
@@ -360,7 +370,9 @@ fn cmd_bench(rest: &[String]) -> Result<()> {
             "ffn",
             "run the expert-FFN kernel suite instead (writes BENCH_ffn.json)",
         )
-        .opt_default("ffn-out", "BENCH_ffn.json", "--ffn: output JSON path");
+        .opt_default("ffn-out", "BENCH_ffn.json", "--ffn: output JSON path")
+        .flag("force", "re-run sweep cells even when the store already has them")
+        .opt_default("output-format", "stream", "stream|json|markdown summary output");
     let args = parse(cmd, rest)?;
     if args.flag("routing") {
         return cmd_bench_routing(&args);
@@ -393,9 +405,15 @@ fn cmd_bench(rest: &[String]) -> Result<()> {
             stats.sim_step_ms
         );
     }
-    print!("{}", t.render());
+    report::emit(out_format(&args)?, &t, None);
     t.save_csv(format!("{}/bench_native.csv", args.get("results").unwrap()))?;
     Ok(())
+}
+
+/// The `Engine` behind the `m6t bench --*` modes: the shared store under
+/// `<results>/store`, re-measuring only under `--force`.
+fn bench_engine(args: &m6t::util::cli::Args) -> Engine {
+    Engine::new(args.get("results").unwrap()).force(args.flag("force"))
 }
 
 /// `m6t bench --routing` — tokens/sec of the allocation-free RoutingEngine
@@ -408,7 +426,7 @@ fn cmd_bench_routing(args: &m6t::util::cli::Args) -> Result<()> {
     let out_path = args.get("out").unwrap().to_string();
     eprintln!("[bench] routing engine vs reference, {tokens} tokens per route call");
     let rows = microbench::run_suite(tokens);
-    print!("{}", microbench::render_table(&rows, tokens).render());
+    report::emit(out_format(args)?, &microbench::render_table(&rows, tokens), None);
     microbench::write_json(&rows, tokens, &out_path)?;
     eprintln!("[bench] wrote {out_path}");
     Ok(())
@@ -424,9 +442,11 @@ fn cmd_bench_dispatch(args: &m6t::util::cli::Args) -> Result<()> {
     let steps: usize = args.get_or("steps", 12usize).map_err(anyhow::Error::msg)?;
     let out_path = args.get("dispatch-out").unwrap().to_string();
     eprintln!("[bench] sharded dispatch suite, {steps} steps per cell");
-    let rows = dispatch_bench::run_suite(steps)?;
-    print!("{}", dispatch_bench::render_table(&rows).render());
-    dispatch_bench::write_json(&rows, steps, &out_path)?;
+    let (rows, outcome) = dispatch_bench::run_suite(&bench_engine(args), steps)?;
+    let mut doc = dispatch_bench::to_json(&rows, steps);
+    sweep::attach_provenance(&mut doc, &outcome);
+    report::emit(out_format(args)?, &dispatch_bench::render_table(&rows), Some(&doc));
+    report::write_doc(&doc, &out_path)?;
     eprintln!("[bench] wrote {out_path}");
     Ok(())
 }
@@ -443,9 +463,11 @@ fn cmd_bench_step(args: &m6t::util::cli::Args) -> Result<()> {
     let steps: usize = args.get_or("steps", 12usize).map_err(anyhow::Error::msg)?;
     let out_path = args.get("step-out").unwrap().to_string();
     eprintln!("[bench] fused vs two-pass sharded step, {steps} steps per cell and mode");
-    let rows = step_bench::run_suite(steps)?;
-    print!("{}", step_bench::render_table(&rows, steps).render());
-    step_bench::write_json(&rows, steps, &out_path)?;
+    let (rows, outcome) = step_bench::run_suite(&bench_engine(args), steps)?;
+    let mut doc = step_bench::to_json(&rows, steps);
+    sweep::attach_provenance(&mut doc, &outcome);
+    report::emit(out_format(args)?, &step_bench::render_table(&rows, steps), Some(&doc));
+    report::write_doc(&doc, &out_path)?;
     eprintln!(
         "[bench] xlarge-sim min speedup at D>=4: {:.2}x",
         step_bench::xlarge_min_speedup(&rows)
@@ -466,9 +488,11 @@ fn cmd_bench_overlap(args: &m6t::util::cli::Args) -> Result<()> {
     let steps: usize = args.get_or("steps", 12usize).map_err(anyhow::Error::msg)?;
     let out_path = args.get("overlap-out").unwrap().to_string();
     eprintln!("[bench] overlap/topology suite, {steps} steps per cell");
-    let rows = overlap_bench::run_suite(steps)?;
-    print!("{}", overlap_bench::render_table(&rows, steps).render());
-    overlap_bench::write_json(&rows, steps, &out_path)?;
+    let (rows, outcome) = overlap_bench::run_suite(&bench_engine(args), steps)?;
+    let mut doc = overlap_bench::to_json(&rows, steps);
+    sweep::attach_provenance(&mut doc, &outcome);
+    report::emit(out_format(args)?, &overlap_bench::render_table(&rows, steps), Some(&doc));
+    report::write_doc(&doc, &out_path)?;
     eprintln!(
         "[bench] min overlap speedup: {:.2}x, max bottleneck link share: {:.2}",
         overlap_bench::min_overlap_speedup(&rows),
@@ -490,11 +514,155 @@ fn cmd_bench_ffn(args: &m6t::util::cli::Args) -> Result<()> {
     let reps: usize = args.get_or("steps", 8usize).map_err(anyhow::Error::msg)?;
     let out_path = args.get("ffn-out").unwrap().to_string();
     eprintln!("[bench] expert-FFN kernel suite, {reps} reps per cell");
-    let rows = ffn_bench::run_suite(reps)?;
-    print!("{}", ffn_bench::render_table(&rows, reps).render());
-    ffn_bench::write_json(&rows, reps, &out_path)?;
+    let (rows, outcome) = ffn_bench::run_suite(&bench_engine(args), reps)?;
+    let mut doc = ffn_bench::to_json(&rows, reps);
+    sweep::attach_provenance(&mut doc, &outcome);
+    report::emit(out_format(args)?, &ffn_bench::render_table(&rows, reps), Some(&doc));
+    report::write_doc(&doc, &out_path)?;
     eprintln!("[bench] min tiled speedup: {:.2}x", ffn_bench::min_tiled_speedup(&rows));
     eprintln!("[bench] wrote {out_path}");
+    Ok(())
+}
+
+/// `m6t sweep <dispatch|step|overlap|ffn|spec.json>` — run a declarative
+/// grid through the content-addressed experiment store: cells whose
+/// address already holds a completed result are served from the store, so
+/// re-invoking an identical sweep performs zero re-runs and an
+/// interrupted sweep resumes by skipping finished cells. `m6t sweep gc`
+/// prunes store entries whose address no longer appears in any live spec.
+fn cmd_sweep(rest: &[String]) -> Result<()> {
+    let cmd = Command::new("sweep", "declarative sweeps over the content-addressed store")
+        .opt_default("results", "results", "results directory (store lives at <results>/store)")
+        .opt_default("steps", "12", "measured steps (reps) per cell; default 12 (ffn: 8)")
+        .opt_default("output-format", "stream", "stream|json|markdown summary output")
+        .opt("out", "also write the full document (rows + provenance) here")
+        .opt_repeated("spec", "gc: extra spec file(s) whose cells stay alive")
+        .flag("force", "re-run cells even when the store already has them")
+        .flag("dry-run", "gc: report what would be pruned without deleting")
+        .flag("quiet", "suppress per-cell progress lines");
+    let args = parse(cmd, rest)?;
+    let which = args
+        .positional
+        .first()
+        .ok_or_else(|| {
+            anyhow::anyhow!("usage: m6t sweep <dispatch|step|overlap|ffn|spec.json|gc>")
+        })?
+        .clone();
+    if which == "gc" {
+        return cmd_sweep_gc(&args);
+    }
+    let spec = load_spec(&which, steps_override(&args)?)?;
+    let runner = sweep::runner_for(&spec.kind)?;
+    let engine = Engine::new(args.get("results").unwrap())
+        .force(args.flag("force"))
+        .verbose(!args.flag("quiet"));
+    let outcome = engine.run_spec(&spec, runner.as_ref())?;
+    let (table, mut doc) = render_outcome(&outcome)?;
+    sweep::attach_provenance(&mut doc, &outcome);
+    report::emit(out_format(&args)?, &table, Some(&doc));
+    if let Some(path) = args.get("out") {
+        report::write_doc(&doc, path)?;
+        eprintln!("[sweep] wrote {path}");
+    }
+    Ok(())
+}
+
+/// `--steps` only overrides a spec's cell budget when explicitly passed.
+fn steps_override(args: &m6t::util::cli::Args) -> Result<Option<usize>> {
+    if args.flag("steps") {
+        Ok(Some(args.get_or("steps", 12usize).map_err(anyhow::Error::msg)?))
+    } else {
+        Ok(None)
+    }
+}
+
+/// Resolve a sweep name: a builtin bench family or a spec-file path.
+fn load_spec(which: &str, steps: Option<usize>) -> Result<SweepSpec> {
+    if sweep::BUILTIN_SPECS.contains(&which) {
+        return sweep::builtin_spec(which, steps);
+    }
+    let text = std::fs::read_to_string(which)
+        .map_err(|e| anyhow::anyhow!("reading sweep spec {which:?}: {e}"))?;
+    let mut spec = SweepSpec::parse(&text)?;
+    if let Some(s) = steps {
+        spec.steps = s;
+    }
+    Ok(spec)
+}
+
+/// Per-kind summary table + machine document for a finished sweep — the
+/// document is the same BENCH_*.json body `m6t bench --<kind>` writes.
+fn render_outcome(outcome: &sweep::SweepOutcome) -> Result<(Table, Value)> {
+    use m6t::runtime::{dispatch_bench, ffn_bench, overlap_bench, step_bench};
+    let steps = cell_steps(outcome);
+    match outcome.kind.as_str() {
+        "dispatch" => {
+            let rows = dispatch_bench::rows_from(outcome)?;
+            Ok((dispatch_bench::render_table(&rows), dispatch_bench::to_json(&rows, steps)))
+        }
+        "step" => {
+            let rows = step_bench::rows_from(outcome)?;
+            Ok((step_bench::render_table(&rows, steps), step_bench::to_json(&rows, steps)))
+        }
+        "overlap" => {
+            let rows = overlap_bench::rows_from(outcome)?;
+            Ok((overlap_bench::render_table(&rows, steps), overlap_bench::to_json(&rows, steps)))
+        }
+        "ffn" => {
+            let rows = ffn_bench::rows_from(outcome)?;
+            Ok((ffn_bench::render_table(&rows, steps), ffn_bench::to_json(&rows, steps)))
+        }
+        other => anyhow::bail!("no summary renderer for sweep kind {other:?}"),
+    }
+}
+
+/// Every cell in a sweep carries the same reserved `steps` param; recover
+/// it for the document header.
+fn cell_steps(outcome: &sweep::SweepOutcome) -> usize {
+    outcome.outcomes.first().and_then(|o| o.cell.req_usize("steps").ok()).unwrap_or(12)
+}
+
+/// `m6t sweep gc` — the liveness set is every cell of the builtin bench
+/// specs (at their defaults and, when passed, the `--steps` override)
+/// plus any `--spec` files; store kinds no spec mentions are never
+/// scanned, so training runs survive a bench-only gc.
+fn cmd_sweep_gc(args: &m6t::util::cli::Args) -> Result<()> {
+    use std::collections::BTreeSet;
+
+    let steps = steps_override(args)?;
+    let mut specs: Vec<SweepSpec> = Vec::new();
+    for name in sweep::BUILTIN_SPECS {
+        specs.push(sweep::builtin_spec(name, None)?);
+        if steps.is_some() {
+            specs.push(sweep::builtin_spec(name, steps)?);
+        }
+    }
+    for path in args.get_all("spec") {
+        let text = std::fs::read_to_string(path)
+            .map_err(|e| anyhow::anyhow!("reading sweep spec {path:?}: {e}"))?;
+        specs.push(SweepSpec::parse(&text)?);
+    }
+    let mut live: BTreeSet<(String, String)> = BTreeSet::new();
+    let mut kinds: BTreeSet<String> = BTreeSet::new();
+    for spec in &specs {
+        let runner = sweep::runner_for(&spec.kind)?;
+        live.extend(sweep::live_keys(spec, runner.as_ref())?);
+        kinds.insert(spec.kind.clone());
+    }
+    let engine = Engine::new(args.get("results").unwrap());
+    let dry = args.flag("dry-run");
+    let gc = engine.store().gc(&live, &kinds, dry)?;
+    let verb = if dry { "would prune" } else { "pruned" };
+    for path in &gc.pruned {
+        eprintln!("[sweep] {verb} {}", path.display());
+    }
+    println!(
+        "sweep gc: {} cell(s) scanned, {} live, {} {}",
+        gc.scanned,
+        gc.kept,
+        gc.pruned.len(),
+        if dry { "prunable (dry-run)" } else { "pruned" }
+    );
     Ok(())
 }
 
@@ -527,12 +695,13 @@ fn cmd_lint_unsafe(rest: &[String]) -> Result<()> {
 fn cmd_flops(rest: &[String]) -> Result<()> {
     let cmd = Command::new("flops", "Table 1: analytical per-GPU GFLOPs")
         .opt_default("model", "base", "paper preset: base|10B|100B|250B|1T")
-        .opt_default("results", "results", "results directory");
+        .opt_default("results", "results", "results directory")
+        .opt_default("output-format", "stream", "stream|json|markdown summary output");
     let args = parse(cmd, rest)?;
     let preset = paper::by_name(args.get("model").unwrap())
         .ok_or_else(|| anyhow::anyhow!("unknown preset {:?}", args.get("model")))?;
     let t = experiments::table1::run(Some(preset));
-    print!("{}", t.render());
+    report::emit(out_format(&args)?, &t, None);
     t.save_csv(format!("{}/table1.csv", args.get("results").unwrap()))?;
     Ok(())
 }
@@ -540,14 +709,16 @@ fn cmd_flops(rest: &[String]) -> Result<()> {
 fn cmd_simulate(rest: &[String]) -> Result<()> {
     let cmd = Command::new("simulate", "Table 2: cluster-simulated ms/step")
         .opt_default("results", "results", "results directory")
+        .opt_default("output-format", "stream", "stream|json|markdown summary output")
         .flag("compare", "also print paper-vs-simulated deltas");
     let args = parse(cmd, rest)?;
+    let format = out_format(&args)?;
     let t = experiments::table2::run();
-    print!("{}", t.render());
+    report::emit(format, &t, None);
     t.save_csv(format!("{}/table2.csv", args.get("results").unwrap()))?;
     if args.flag("compare") {
         let c = experiments::table2::comparison();
-        print!("{}", c.render());
+        report::emit(format, &c, None);
         c.save_csv(format!("{}/table2_comparison.csv", args.get("results").unwrap()))?;
     }
     Ok(())
@@ -567,8 +738,10 @@ fn cmd_figure(rest: &[String]) -> Result<()> {
     let cmd = common(Command::new("figure", "reproduce a paper figure"))
         .opt_default("steps", "200", "steps per training run")
         .opt_default("side", "left", "fig3/fig4: left|right")
+        .opt_default("output-format", "stream", "stream|json|markdown summary output")
         .flag("force", "ignore the run cache");
     let args = parse(cmd, rest)?;
+    let format = out_format(&args)?;
     let which = args
         .positional
         .first()
@@ -581,33 +754,33 @@ fn cmd_figure(rest: &[String]) -> Result<()> {
     match which.as_str() {
         "fig1" => {
             let out = experiments::fig1::run(&runner, steps)?;
-            print!("{}", out.summary.render());
+            report::emit(format, &out.summary, None);
             out.series.save_csv(format!("{results}/fig1_series.csv"))?;
             out.summary.save_csv(format!("{results}/fig1_summary.csv"))?;
         }
         "fig3" => {
             let side = args.get("side").unwrap();
             let out = experiments::fig3::run(&runner, steps, side)?;
-            print!("{}", out.summary.render());
+            report::emit(format, &out.summary, None);
             out.curves.save_csv(format!("{results}/fig3_{side}_curves.csv"))?;
             out.summary.save_csv(format!("{results}/fig3_{side}_summary.csv"))?;
         }
         "fig4" => {
             let side = args.get("side").unwrap();
             let out = experiments::fig4::run(&runner, steps, side)?;
-            print!("{}", out.summary.render());
+            report::emit(format, &out.summary, None);
             out.curves.save_csv(format!("{results}/fig4_{side}_curves.csv"))?;
             out.summary.save_csv(format!("{results}/fig4_{side}_summary.csv"))?;
         }
         "fig5" => {
             let out = experiments::fig5::run(&runner, steps)?;
-            print!("{}", out.summary.render());
+            report::emit(format, &out.summary, None);
             out.curves.save_csv(format!("{results}/fig5_curves.csv"))?;
             out.summary.save_csv(format!("{results}/fig5_summary.csv"))?;
         }
         "fig6" => {
             let out = experiments::fig6::run(&runner, steps)?;
-            print!("{}", out.summary.render());
+            report::emit(format, &out.summary, None);
             println!("modelled convergence speedup: {:.2}x (paper: ~5x)", out.speedup);
             out.curves.save_csv(format!("{results}/fig6_curves.csv"))?;
             out.summary.save_csv(format!("{results}/fig6_summary.csv"))?;
@@ -620,17 +793,19 @@ fn cmd_figure(rest: &[String]) -> Result<()> {
 fn cmd_tables(rest: &[String]) -> Result<()> {
     let cmd = common(Command::new("tables", "Tables 3 & 4: downstream PPL"))
         .opt_default("steps", "200", "steps per training run")
+        .opt_default("output-format", "stream", "stream|json|markdown summary output")
         .flag("force", "ignore the run cache");
     let args = parse(cmd, rest)?;
+    let format = out_format(&args)?;
     let provider = make_provider(args.get("artifacts").unwrap())?;
     let runner = runner_from(&args, provider.as_ref())?;
     let steps: i64 = args.get_or("steps", 200i64).map_err(anyhow::Error::msg)?;
     let results = args.get("results").unwrap().to_string();
     let t3 = experiments::table34::table3(&runner, steps)?;
-    print!("{}", t3.render());
+    report::emit(format, &t3, None);
     t3.save_csv(format!("{results}/table3.csv"))?;
     let t4 = experiments::table34::table4(&runner, steps)?;
-    print!("{}", t4.render());
+    report::emit(format, &t4, None);
     t4.save_csv(format!("{results}/table4.csv"))?;
     Ok(())
 }
@@ -638,56 +813,58 @@ fn cmd_tables(rest: &[String]) -> Result<()> {
 fn cmd_report(rest: &[String]) -> Result<()> {
     let cmd = common(Command::new("report", "run every table and figure"))
         .opt_default("steps", "200", "steps per training run")
+        .opt_default("output-format", "stream", "stream|json|markdown summary output")
         .flag("force", "ignore the run cache");
     let args = parse(cmd, rest)?;
+    let format = out_format(&args)?;
     let provider = make_provider(args.get("artifacts").unwrap())?;
     let runner = runner_from(&args, provider.as_ref())?;
     let steps: i64 = args.get_or("steps", 200i64).map_err(anyhow::Error::msg)?;
     let results = args.get("results").unwrap().to_string();
 
     let t1 = experiments::table1::run(None);
-    print!("{}", t1.render());
+    report::emit(format, &t1, None);
     t1.save_csv(format!("{results}/table1.csv"))?;
     let t2 = experiments::table2::run();
-    print!("{}", t2.render());
+    report::emit(format, &t2, None);
     t2.save_csv(format!("{results}/table2.csv"))?;
     let t2c = experiments::table2::comparison();
-    print!("{}", t2c.render());
+    report::emit(format, &t2c, None);
     t2c.save_csv(format!("{results}/table2_comparison.csv"))?;
 
     let f1 = experiments::fig1::run(&runner, steps)?;
-    print!("{}", f1.summary.render());
+    report::emit(format, &f1.summary, None);
     f1.series.save_csv(format!("{results}/fig1_series.csv"))?;
     f1.summary.save_csv(format!("{results}/fig1_summary.csv"))?;
 
     for side in ["left", "right"] {
         let f3 = experiments::fig3::run(&runner, steps, side)?;
-        print!("{}", f3.summary.render());
+        report::emit(format, &f3.summary, None);
         f3.curves.save_csv(format!("{results}/fig3_{side}_curves.csv"))?;
         f3.summary.save_csv(format!("{results}/fig3_{side}_summary.csv"))?;
     }
     for side in ["left", "right"] {
         let f4 = experiments::fig4::run(&runner, steps, side)?;
-        print!("{}", f4.summary.render());
+        report::emit(format, &f4.summary, None);
         f4.curves.save_csv(format!("{results}/fig4_{side}_curves.csv"))?;
         f4.summary.save_csv(format!("{results}/fig4_{side}_summary.csv"))?;
     }
     let f5 = experiments::fig5::run(&runner, steps)?;
-    print!("{}", f5.summary.render());
+    report::emit(format, &f5.summary, None);
     f5.curves.save_csv(format!("{results}/fig5_curves.csv"))?;
     f5.summary.save_csv(format!("{results}/fig5_summary.csv"))?;
 
     let f6 = experiments::fig6::run(&runner, steps)?;
-    print!("{}", f6.summary.render());
+    report::emit(format, &f6.summary, None);
     println!("modelled convergence speedup: {:.2}x (paper: ~5x)", f6.speedup);
     f6.curves.save_csv(format!("{results}/fig6_curves.csv"))?;
     f6.summary.save_csv(format!("{results}/fig6_summary.csv"))?;
 
     let t3 = experiments::table34::table3(&runner, steps)?;
-    print!("{}", t3.render());
+    report::emit(format, &t3, None);
     t3.save_csv(format!("{results}/table3.csv"))?;
     let t4 = experiments::table34::table4(&runner, steps)?;
-    print!("{}", t4.render());
+    report::emit(format, &t4, None);
     t4.save_csv(format!("{results}/table4.csv"))?;
 
     eprintln!("[m6t] report complete — CSVs in {results}/");

@@ -15,6 +15,7 @@ use anyhow::Result;
 use super::manifest::VariantInfo;
 use crate::data::{Batch, Batcher, Split};
 use crate::moe::DispatchSummary;
+use crate::util::stats::{p50, timing_series};
 
 /// Scalar + load statistics returned by one train step.
 #[derive(Debug, Clone)]
@@ -130,8 +131,7 @@ pub fn measure_step_series(
         state = next;
         last_stats = Some(stats);
     }
-    ms.sort_by(f64::total_cmp);
-    Ok((ms, last_stats.expect("at least one sample")))
+    Ok((timing_series(ms, 0), last_stats.expect("at least one sample")))
 }
 
 /// Median wall-clock ms of `samples` bare `step()` calls after `warmup`
@@ -143,7 +143,7 @@ pub fn measure_step_ms(
     samples: usize,
 ) -> Result<(f64, StepStats)> {
     let (ms, stats) = measure_step_series(backend, seed, warmup, samples)?;
-    Ok((ms[ms.len() / 2], stats))
+    Ok((p50(&ms), stats))
 }
 
 /// A source of runnable variants: resolves names to [`VariantInfo`] and

@@ -7,14 +7,24 @@
 //! idealization cannot see: cross-worker load c_v, per-shard drop rates,
 //! measured all-to-all bytes, and the cluster model's analytic-vs-
 //! observed step-time gap.
+//!
+//! The grid is declared as a [`SweepSpec`] and driven through the
+//! [`Engine`]'s content-addressed store: a cell whose resolved config has
+//! already completed is recalled instead of re-run (`--force` opts out).
 
-use anyhow::{Context as _, Result};
+use anyhow::{bail, Context as _, Result};
 
 use crate::config::{CapacityMode, ComputeMode, ModelConfig, Routing};
 use crate::metrics::RunLog;
 use crate::runtime::shard::ShardedRun;
+use crate::sweep::{self, Cell, Engine, SweepOutcome, SweepSpec};
 use crate::util::json::{arr, num, obj, s, write as json_write, Value};
+use crate::util::stats::{p50, timing_series};
 use crate::util::table::{f1, f2, Table};
+
+/// Code-relevant version tag baked into every dispatch cell's store
+/// address — bump when the measurement or row semantics change.
+pub const STORE_VERSION: &str = "dispatch-v1";
 
 /// Sim-scale twin of the paper's Base geometry (Table 5: 5 layers,
 /// E = 32) — small hidden sizes so a cell runs in milliseconds.
@@ -57,28 +67,48 @@ pub fn ten_b_twin() -> ModelConfig {
     c
 }
 
-/// The benched strategies: the paper's three headline routing regimes.
-fn strategies() -> Vec<(Routing, CapacityMode)> {
-    vec![
-        (Routing::TopK(1), CapacityMode::TimesK),
-        (Routing::TopK(2), CapacityMode::Times1),
-        (Routing::Prototype(2), CapacityMode::Times1),
-    ]
+/// The benched grid as a declarative spec: {base, 10B twins} x
+/// {top1@kx, top2@1x, 2top1@1x} x D in {1, 4, 8}, last axis fastest —
+/// the same cell order the hand-rolled loop produced.
+pub fn spec(steps: usize) -> SweepSpec {
+    SweepSpec::new("dispatch", "dispatch")
+        .steps(steps)
+        .axis("model", sweep::strs(&["base-twin", "10B-twin"]))
+        .axis("strategy", sweep::strs(&["top1@kx", "top2@1x", "2top1@1x"]))
+        .axis("workers", sweep::nums(&[1, 4, 8]))
 }
 
-/// The benched grid: {base, 10B twins} x {top1, top2, 2top1} x D in {1,4,8}.
+/// Materialize a spec-level cell into the config the runtime consumes.
+fn cell_config(cell: &Cell) -> Result<(ModelConfig, usize)> {
+    let base = match cell.req_str("model")? {
+        "base-twin" => base_twin(),
+        "10B-twin" => ten_b_twin(),
+        other => bail!("dispatch cell: unknown model {other:?}"),
+    };
+    let (routing, mode) = sweep::parse_strategy(cell.req_str("strategy")?)?;
+    let workers = cell.req_usize("workers")?;
+    let mut cfg = base;
+    cfg.name = format!("{}-{}", cfg.name, routing.name());
+    cfg.routing = routing;
+    cfg.capacity_mode = mode;
+    Ok((cfg, workers))
+}
+
+/// Fold the fully-resolved model config into the cell before hashing —
+/// an edit to the twin geometries re-addresses every affected cell.
+pub fn resolve_cell(cell: &Cell) -> Result<Cell> {
+    let (cfg, _) = cell_config(cell)?;
+    let mut resolved = cell.clone();
+    resolved.merge(&sweep::config_cell(&cfg));
+    Ok(resolved)
+}
+
+/// The benched grid in legacy form; kept as the oracle the spec-based
+/// expansion is tested against.
 pub fn cases() -> Vec<(ModelConfig, usize)> {
     let mut out = Vec::new();
-    for model in [base_twin(), ten_b_twin()] {
-        for (routing, mode) in strategies() {
-            for workers in [1usize, 4, 8] {
-                let mut cfg = model.clone();
-                cfg.name = format!("{}-{}", model.name, routing.name());
-                cfg.routing = routing;
-                cfg.capacity_mode = mode;
-                out.push((cfg, workers));
-            }
-        }
+    for cell in spec(12).expand().expect("builtin dispatch spec expands") {
+        out.push(cell_config(&cell).expect("builtin dispatch cell resolves"));
     }
     out
 }
@@ -105,53 +135,63 @@ pub struct DispatchBenchRow {
     pub observed_ms: f64,
 }
 
-/// Run the full grid, `steps` measured sharded steps per cell. Each cell
-/// is driven through [`ShardedRun::train`] — the same stepping loop (and
-/// the same worker-batch consumption order) the real runs use, so the
-/// bench can never silently measure a different data stream.
-pub fn run_suite(steps: usize) -> Result<Vec<DispatchBenchRow>> {
-    let steps = steps.max(1);
-    let mut rows = Vec::new();
-    for (cfg, workers) in cases() {
-        let run = ShardedRun::new(&cfg, workers)?;
-        let mut log = RunLog::new(format!("{}-d{workers}", cfg.name));
-        // one extra leading step, excluded from the median: it carries the
-        // cold scratch/pool allocations, and the other two measurement
-        // harnesses (measure_step_series, step_bench) discard a warmup
-        // step too — the three suites must report comparable numbers
-        run.train(steps as i64 + 1, 42, &mut log, false)?;
-        let mut ms: Vec<f64> = log.records.iter().skip(1).map(|r| r.ms_per_step).collect();
-        ms.sort_by(f64::total_cmp);
-        let host_ms = ms[ms.len() / 2];
-        let last = log.last().expect("at least one recorded step");
-        let dsp = last.dispatch.as_ref().expect("sharded records carry dispatch");
-        let row = DispatchBenchRow {
-            model: cfg.name.clone(),
-            strategy: cfg.routing.name(),
-            workers,
-            tokens_per_worker: cfg.tokens_per_batch(),
-            capacity: run.info().capacity,
-            host_ms,
-            shard_cv: dsp.shard_load_cv,
-            drop_rate: dsp.drop_fraction,
-            a2a_mb_step: dsp.a2a_bytes_step / 1e6,
-            analytic_ms: last.sim_ms,
-            observed_ms: dsp.observed_ms,
-        };
-        eprintln!(
-            "[bench] {} D={}: host {:.2} ms, shard-cv {:.3}, drop {:.3}, a2a {:.2} MB, cluster {:.1} -> {:.1} ms",
-            row.model,
-            row.workers,
-            row.host_ms,
-            row.shard_cv,
-            row.drop_rate,
-            row.a2a_mb_step,
-            row.analytic_ms,
-            row.observed_ms
-        );
-        rows.push(row);
-    }
-    Ok(rows)
+/// Execute one cell: `steps` measured sharded steps driven through
+/// [`ShardedRun::train`] — the same stepping loop (and the same
+/// worker-batch consumption order) the real runs use, so the bench can
+/// never silently measure a different data stream.
+pub fn run_cell(cell: &Cell) -> Result<Value> {
+    let (cfg, workers) = cell_config(cell)?;
+    let steps = cell.req_usize("steps")?.max(1);
+    let seed = cell.req_u64("seed")?;
+    let run = ShardedRun::new(&cfg, workers)?;
+    let mut log = RunLog::new(format!("{}-d{workers}", cfg.name));
+    // one extra leading step, excluded from the median: it carries the
+    // cold scratch/pool allocations, and the other two measurement
+    // harnesses (measure_step_series, step_bench) discard a warmup
+    // step too — the three suites must report comparable numbers
+    run.train(steps as i64 + 1, seed, &mut log, false)?;
+    let ms = timing_series(log.records.iter().map(|r| r.ms_per_step), 1);
+    let host_ms = p50(&ms);
+    let last = log.last().expect("at least one recorded step");
+    let dsp = last.dispatch.as_ref().expect("sharded records carry dispatch");
+    let row = DispatchBenchRow {
+        model: cfg.name.clone(),
+        strategy: cfg.routing.name(),
+        workers,
+        tokens_per_worker: cfg.tokens_per_batch(),
+        capacity: run.info().capacity,
+        host_ms,
+        shard_cv: dsp.shard_load_cv,
+        drop_rate: dsp.drop_fraction,
+        a2a_mb_step: dsp.a2a_bytes_step / 1e6,
+        analytic_ms: last.sim_ms,
+        observed_ms: dsp.observed_ms,
+    };
+    eprintln!(
+        "[bench] {} D={}: host {:.2} ms, shard-cv {:.3}, drop {:.3}, a2a {:.2} MB, cluster {:.1} -> {:.1} ms",
+        row.model,
+        row.workers,
+        row.host_ms,
+        row.shard_cv,
+        row.drop_rate,
+        row.a2a_mb_step,
+        row.analytic_ms,
+        row.observed_ms
+    );
+    Ok(row_json(&row))
+}
+
+/// Run the full grid through the sweep engine, `steps` measured sharded
+/// steps per cell; previously-completed cells come back from the store.
+pub fn run_suite(engine: &Engine, steps: usize) -> Result<(Vec<DispatchBenchRow>, SweepOutcome)> {
+    let outcome = engine.run_spec(&spec(steps), &sweep::DispatchRunner)?;
+    let rows = rows_from(&outcome)?;
+    Ok((rows, outcome))
+}
+
+/// Rebuild the typed rows from a sweep outcome's stored documents.
+pub fn rows_from(outcome: &SweepOutcome) -> Result<Vec<DispatchBenchRow>> {
+    outcome.outcomes.iter().map(|o| row_from_json(&o.result)).collect()
 }
 
 /// Human-readable table over the suite.
@@ -188,26 +228,45 @@ pub fn render_table(rows: &[DispatchBenchRow]) -> Table {
     t
 }
 
+/// One row as its stored (and emitted) JSON object. This is the per-cell
+/// result document in the experiment store, and the element of the
+/// `rows` array in `BENCH_dispatch.json` — one serialization for both.
+fn row_json(r: &DispatchBenchRow) -> Value {
+    obj(vec![
+        ("model", s(r.model.clone())),
+        ("strategy", s(r.strategy.clone())),
+        ("workers", num(r.workers as f64)),
+        ("tokens_per_worker", num(r.tokens_per_worker as f64)),
+        ("capacity", num(r.capacity as f64)),
+        ("host_ms_per_step", num(r.host_ms)),
+        ("shard_load_cv", num(r.shard_cv)),
+        ("drop_rate", num(r.drop_rate)),
+        ("a2a_mb_per_step", num(r.a2a_mb_step)),
+        ("cluster_analytic_ms", num(r.analytic_ms)),
+        ("cluster_observed_ms", num(r.observed_ms)),
+    ])
+}
+
+/// Inverse of `row_json`, for rows recalled from the store.
+pub fn row_from_json(v: &Value) -> Result<DispatchBenchRow> {
+    Ok(DispatchBenchRow {
+        model: v.req_str("model")?.to_string(),
+        strategy: v.req_str("strategy")?.to_string(),
+        workers: v.req_usize("workers")?,
+        tokens_per_worker: v.req_usize("tokens_per_worker")?,
+        capacity: v.req_usize("capacity")?,
+        host_ms: v.req_f64("host_ms_per_step")?,
+        shard_cv: v.req_f64("shard_load_cv")?,
+        drop_rate: v.req_f64("drop_rate")?,
+        a2a_mb_step: v.req_f64("a2a_mb_per_step")?,
+        analytic_ms: v.req_f64("cluster_analytic_ms")?,
+        observed_ms: v.req_f64("cluster_observed_ms")?,
+    })
+}
+
 /// Serialize the suite to the tracked trajectory JSON.
 pub fn to_json(rows: &[DispatchBenchRow], steps: usize) -> Value {
-    let items: Vec<Value> = rows
-        .iter()
-        .map(|r| {
-            obj(vec![
-                ("model", s(r.model.clone())),
-                ("strategy", s(r.strategy.clone())),
-                ("workers", num(r.workers as f64)),
-                ("tokens_per_worker", num(r.tokens_per_worker as f64)),
-                ("capacity", num(r.capacity as f64)),
-                ("host_ms_per_step", num(r.host_ms)),
-                ("shard_load_cv", num(r.shard_cv)),
-                ("drop_rate", num(r.drop_rate)),
-                ("a2a_mb_per_step", num(r.a2a_mb_step)),
-                ("cluster_analytic_ms", num(r.analytic_ms)),
-                ("cluster_observed_ms", num(r.observed_ms)),
-            ])
-        })
-        .collect();
+    let items: Vec<Value> = rows.iter().map(row_json).collect();
     obj(vec![
         ("bench", s("dispatch")),
         ("steps_per_cell", num(steps as f64)),
@@ -235,6 +294,39 @@ mod tests {
         }
         assert!(cs.iter().any(|(c, d)| c.name == "10B-twin-2top1" && *d == 8));
         assert!(cs.iter().any(|(c, d)| c.name == "base-twin-top2" && *d == 1));
+    }
+
+    #[test]
+    fn spec_cells_resolve_and_address_uniquely() {
+        let spec = spec(4);
+        let cells = spec.expand().unwrap();
+        assert_eq!(cells.len(), 18);
+        let mut keys = std::collections::BTreeSet::new();
+        for cell in &cells {
+            let resolved = resolve_cell(cell).unwrap();
+            assert_eq!(resolved.req_usize("steps").unwrap(), 4);
+            assert!(resolved.req_str("cfg.name").is_ok(), "resolved cell carries the config");
+            assert!(keys.insert(resolved.canonical()), "duplicate cell address");
+        }
+    }
+
+    #[test]
+    fn rows_round_trip_through_the_store_document() {
+        let row = DispatchBenchRow {
+            model: "base-twin-top1".into(),
+            strategy: "top1".into(),
+            workers: 4,
+            tokens_per_worker: 512,
+            capacity: 20,
+            host_ms: 1.5,
+            shard_cv: 0.3,
+            drop_rate: 0.01,
+            a2a_mb_step: 2.5,
+            analytic_ms: 100.0,
+            observed_ms: 80.0,
+        };
+        let back = row_from_json(&row_json(&row)).unwrap();
+        assert_eq!(format!("{back:?}"), format!("{row:?}"));
     }
 
     #[test]

@@ -11,17 +11,24 @@
 //! naive-vs-tiled speedup. The JSON's `min_tiled_speedup` field is the
 //! CI regression gate (>= 1.0 is structural — the tiled kernel exists
 //! to beat the textbook loop order).
+//!
+//! The grid is declared as a [`SweepSpec`] and driven through the
+//! [`Engine`]'s content-addressed store. Each cell is self-contained:
+//! the naive baseline is re-measured per cell (it ignores the pool), so
+//! a cell recalled from the store carries its own speedup denominator.
 
-use std::time::Instant;
-
-use anyhow::{ensure, Context as _, Result};
+use anyhow::{bail, ensure, Context as _, Result};
 
 use crate::moe::ffn::{self, FfnShape};
+use crate::sweep::{self, Cell, Engine, ParamValue, SweepOutcome, SweepSpec};
 use crate::util::json::{arr, num, obj, s, write as json_write, Value};
 use crate::util::pool::{self, WorkerPool};
 use crate::util::rng::Rng;
-use crate::util::stats::percentile;
+use crate::util::stats::{measure_fn_ms, p50};
 use crate::util::table::{f2, Table};
+
+/// Code-relevant version tag in every ffn cell's store address.
+pub const STORE_VERSION: &str = "ffn-v1";
 
 /// One benched FFN geometry (E, C, M, I).
 #[derive(Debug, Clone, Copy)]
@@ -50,9 +57,47 @@ pub fn pool_sizes() -> Vec<usize> {
     v
 }
 
-/// One measured (geometry, pool size) cell. The naive baseline is
-/// measured once per geometry (it ignores the pool) and repeated on
-/// every row so each row's speedup is self-contained.
+/// The benched grid as a declarative spec: 3 geometries x the host's
+/// pool sizes, last axis fastest. `reps` rides in the spec's `steps`.
+pub fn spec(reps: usize) -> SweepSpec {
+    let names: Vec<&str> = GEOMETRIES.iter().map(|g| g.name).collect();
+    SweepSpec::new("ffn", "ffn")
+        .steps(reps)
+        .axis("geometry", sweep::strs(&names))
+        .axis("workers", sweep::nums(&pool_sizes()))
+}
+
+/// Materialize a spec-level cell: the geometry, its registry index (the
+/// data-seed discriminator), and the pool size.
+fn cell_config(cell: &Cell) -> Result<(FfnGeometry, usize, usize)> {
+    let name = cell.req_str("geometry")?;
+    let Some(gi) = GEOMETRIES.iter().position(|g| g.name == name) else {
+        bail!("ffn cell: unknown geometry {name:?}");
+    };
+    let workers = cell.req_usize("workers")?;
+    Ok((GEOMETRIES[gi], gi, workers))
+}
+
+/// Fold the resolved geometry (including the code-derived tiling) into
+/// the cell before hashing — a change to the slab shapes or the tile
+/// sizing re-addresses every affected cell.
+pub fn resolve_cell(cell: &Cell) -> Result<Cell> {
+    let (geo, gi, _) = cell_config(cell)?;
+    let shape = FfnShape::new(geo.experts, geo.capacity, geo.hidden, geo.intermediate)?;
+    let mut resolved = cell.clone();
+    resolved.set("ffn.experts", ParamValue::Num(geo.experts as f64));
+    resolved.set("ffn.capacity", ParamValue::Num(geo.capacity as f64));
+    resolved.set("ffn.hidden", ParamValue::Num(geo.hidden as f64));
+    resolved.set("ffn.intermediate", ParamValue::Num(geo.intermediate as f64));
+    resolved.set("ffn.i_block", ParamValue::Num(shape.i_block as f64));
+    resolved.set("ffn.tiles_per_expert", ParamValue::Num(shape.n_tiles() as f64));
+    resolved.set("ffn.seed_index", ParamValue::Num(gi as f64));
+    Ok(resolved)
+}
+
+/// One measured (geometry, pool size) cell. The naive baseline ignores
+/// the pool but is measured in-cell, so each row's speedup is
+/// self-contained.
 #[derive(Debug, Clone)]
 pub struct FfnBenchRow {
     pub geometry: String,
@@ -96,97 +141,94 @@ impl FfnBenchRow {
     }
 }
 
-/// p50 wall-clock ms of `reps` calls after one warmup call.
-fn p50_ms(reps: usize, mut f: impl FnMut()) -> f64 {
-    f();
-    let mut ms = Vec::with_capacity(reps);
-    for _ in 0..reps {
-        let t0 = Instant::now();
-        f();
-        ms.push(t0.elapsed().as_secs_f64() * 1e3);
-    }
-    percentile(&ms, 50.0)
-}
-
 fn fill(rng: &mut Rng, n: usize, scale: f32) -> Vec<f32> {
     (0..n).map(|_| (rng.normal() as f32) * scale).collect()
 }
 
-/// Run the full grid, `reps` measured calls per (cell, kernel).
-pub fn run_suite(reps: usize) -> Result<Vec<FfnBenchRow>> {
-    let reps = reps.max(1);
-    let mut rows = Vec::new();
-    for (gi, geo) in GEOMETRIES.iter().enumerate() {
-        let shape = FfnShape::new(geo.experts, geo.capacity, geo.hidden, geo.intermediate)?;
-        let mut rng = Rng::new(0x5EED ^ ((gi as u64 + 1) << 8));
-        let x = fill(&mut rng, shape.x_len(), 1.0);
-        let w1 = fill(&mut rng, shape.w1_len(), 0.05);
-        let w2 = fill(&mut rng, shape.w2_len(), 0.05);
-        let g = fill(&mut rng, shape.x_len(), 0.01);
+/// Execute one cell: parity-check tiled vs naive on this cell's data,
+/// then `reps` measured calls per kernel.
+pub fn run_cell(cell: &Cell) -> Result<Value> {
+    let (geo, gi, workers) = cell_config(cell)?;
+    let reps = cell.req_usize("steps")?.max(1);
+    let shape = FfnShape::new(geo.experts, geo.capacity, geo.hidden, geo.intermediate)?;
+    let mut rng = Rng::new(0x5EED ^ ((gi as u64 + 1) << 8));
+    let x = fill(&mut rng, shape.x_len(), 1.0);
+    let w1 = fill(&mut rng, shape.w1_len(), 0.05);
+    let w2 = fill(&mut rng, shape.w2_len(), 0.05);
+    let g = fill(&mut rng, shape.x_len(), 0.01);
 
-        let mut out_naive = vec![0.0f32; shape.x_len()];
-        let mut h_scratch = Vec::new();
-        let naive_ms = p50_ms(reps, || {
-            ffn::fwd_naive(shape, &x, &w1, &w2, &mut out_naive, &mut h_scratch);
-        });
+    let mut out_naive = vec![0.0f32; shape.x_len()];
+    let mut h_scratch = Vec::new();
+    let naive_ms = p50(&measure_fn_ms(reps, || {
+        ffn::fwd_naive(shape, &x, &w1, &w2, &mut out_naive, &mut h_scratch);
+    }));
 
-        for workers in pool_sizes() {
-            let pool = WorkerPool::new(workers);
-            let mut out = vec![0.0f32; shape.x_len()];
-            let mut partial = Vec::new();
-            let fwd_ms = p50_ms(reps, || {
-                let inputs = ffn::FfnInputs { x: &x, w1: &w1, w2: &w2 };
-                ffn::fwd_tiled(&pool, shape, inputs, &mut out, &mut partial);
-            });
-            let max_rel_diff = out
-                .iter()
-                .zip(&out_naive)
-                .map(|(&a, &b)| ((a - b).abs() / b.abs().max(1.0)) as f64)
-                .fold(0.0, f64::max);
-            ensure!(
-                max_rel_diff < 1e-4,
-                "tiled vs naive forward diverged on {} at {} workers: {max_rel_diff}",
-                geo.name,
-                workers
-            );
-            let mut dw1 = vec![0.0f32; shape.w1_len()];
-            let mut dw2 = vec![0.0f32; shape.w2_len()];
-            let train_ms = p50_ms(reps, || {
-                let inputs = ffn::FfnInputs { x: &x, w1: &w1, w2: &w2 };
-                ffn::fwd_tiled(&pool, shape, inputs, &mut out, &mut partial);
-                let grads = ffn::FfnGrads { dw1: &mut dw1, dw2: &mut dw2, dx: None };
-                ffn::bwd_tiled(&pool, shape, inputs, &g, grads, &mut partial);
-            });
-            let row = FfnBenchRow {
-                geometry: geo.name.to_string(),
-                experts: geo.experts,
-                capacity: geo.capacity,
-                hidden: geo.hidden,
-                intermediate: geo.intermediate,
-                i_block: shape.i_block,
-                tiles_per_expert: shape.n_tiles(),
-                workers,
-                naive_p50_ms: naive_ms,
-                tiled_fwd_p50_ms: fwd_ms,
-                tiled_train_p50_ms: train_ms,
-                max_rel_diff,
-            };
-            eprintln!(
-                "[bench] ffn {} W={}: naive {:.3} ms, tiled {:.3} ms ({:.2}x, {:.1} GFLOP/s), \
-                 train {:.3} ms ({:.0} tok/s)",
-                row.geometry,
-                row.workers,
-                row.naive_p50_ms,
-                row.tiled_fwd_p50_ms,
-                row.speedup(),
-                row.gflops(),
-                row.tiled_train_p50_ms,
-                row.tokens_per_sec()
-            );
-            rows.push(row);
-        }
-    }
-    Ok(rows)
+    let pool = WorkerPool::new(workers);
+    let mut out = vec![0.0f32; shape.x_len()];
+    let mut partial = Vec::new();
+    let fwd_ms = p50(&measure_fn_ms(reps, || {
+        let inputs = ffn::FfnInputs { x: &x, w1: &w1, w2: &w2 };
+        ffn::fwd_tiled(&pool, shape, inputs, &mut out, &mut partial);
+    }));
+    let max_rel_diff = out
+        .iter()
+        .zip(&out_naive)
+        .map(|(&a, &b)| ((a - b).abs() / b.abs().max(1.0)) as f64)
+        .fold(0.0, f64::max);
+    ensure!(
+        max_rel_diff < 1e-4,
+        "tiled vs naive forward diverged on {} at {} workers: {max_rel_diff}",
+        geo.name,
+        workers
+    );
+    let mut dw1 = vec![0.0f32; shape.w1_len()];
+    let mut dw2 = vec![0.0f32; shape.w2_len()];
+    let train_ms = p50(&measure_fn_ms(reps, || {
+        let inputs = ffn::FfnInputs { x: &x, w1: &w1, w2: &w2 };
+        ffn::fwd_tiled(&pool, shape, inputs, &mut out, &mut partial);
+        let grads = ffn::FfnGrads { dw1: &mut dw1, dw2: &mut dw2, dx: None };
+        ffn::bwd_tiled(&pool, shape, inputs, &g, grads, &mut partial);
+    }));
+    let row = FfnBenchRow {
+        geometry: geo.name.to_string(),
+        experts: geo.experts,
+        capacity: geo.capacity,
+        hidden: geo.hidden,
+        intermediate: geo.intermediate,
+        i_block: shape.i_block,
+        tiles_per_expert: shape.n_tiles(),
+        workers,
+        naive_p50_ms: naive_ms,
+        tiled_fwd_p50_ms: fwd_ms,
+        tiled_train_p50_ms: train_ms,
+        max_rel_diff,
+    };
+    eprintln!(
+        "[bench] ffn {} W={}: naive {:.3} ms, tiled {:.3} ms ({:.2}x, {:.1} GFLOP/s), \
+         train {:.3} ms ({:.0} tok/s)",
+        row.geometry,
+        row.workers,
+        row.naive_p50_ms,
+        row.tiled_fwd_p50_ms,
+        row.speedup(),
+        row.gflops(),
+        row.tiled_train_p50_ms,
+        row.tokens_per_sec()
+    );
+    Ok(row_json(&row))
+}
+
+/// Run the full grid through the sweep engine, `reps` measured calls per
+/// (cell, kernel); previously-completed cells come back from the store.
+pub fn run_suite(engine: &Engine, reps: usize) -> Result<(Vec<FfnBenchRow>, SweepOutcome)> {
+    let outcome = engine.run_spec(&spec(reps), &sweep::FfnRunner)?;
+    let rows = rows_from(&outcome)?;
+    Ok((rows, outcome))
+}
+
+/// Rebuild the typed rows from a sweep outcome's stored documents.
+pub fn rows_from(outcome: &SweepOutcome) -> Result<Vec<FfnBenchRow>> {
+    outcome.outcomes.iter().map(|o| row_from_json(&o.result)).collect()
 }
 
 /// Minimum tiled-vs-naive speedup over the whole grid — the regression
@@ -233,30 +275,50 @@ pub fn render_table(rows: &[FfnBenchRow], reps: usize) -> Table {
     t
 }
 
+/// One row as its stored (and emitted) JSON object: the per-cell result
+/// document in the experiment store and the element of `rows` in
+/// `BENCH_ffn.json`.
+fn row_json(r: &FfnBenchRow) -> Value {
+    obj(vec![
+        ("geometry", s(r.geometry.clone())),
+        ("experts", num(r.experts as f64)),
+        ("capacity", num(r.capacity as f64)),
+        ("hidden", num(r.hidden as f64)),
+        ("intermediate", num(r.intermediate as f64)),
+        ("i_block", num(r.i_block as f64)),
+        ("tiles_per_expert", num(r.tiles_per_expert as f64)),
+        ("workers", num(r.workers as f64)),
+        ("naive_p50_ms", num(r.naive_p50_ms)),
+        ("tiled_fwd_p50_ms", num(r.tiled_fwd_p50_ms)),
+        ("tiled_train_p50_ms", num(r.tiled_train_p50_ms)),
+        ("gflops", num(r.gflops())),
+        ("speedup", num(r.speedup())),
+        ("tokens_per_sec", num(r.tokens_per_sec())),
+        ("max_rel_diff", num(r.max_rel_diff)),
+    ])
+}
+
+/// Inverse of `row_json`, for rows recalled from the store.
+pub fn row_from_json(v: &Value) -> Result<FfnBenchRow> {
+    Ok(FfnBenchRow {
+        geometry: v.req_str("geometry")?.to_string(),
+        experts: v.req_usize("experts")?,
+        capacity: v.req_usize("capacity")?,
+        hidden: v.req_usize("hidden")?,
+        intermediate: v.req_usize("intermediate")?,
+        i_block: v.req_usize("i_block")?,
+        tiles_per_expert: v.req_usize("tiles_per_expert")?,
+        workers: v.req_usize("workers")?,
+        naive_p50_ms: v.req_f64("naive_p50_ms")?,
+        tiled_fwd_p50_ms: v.req_f64("tiled_fwd_p50_ms")?,
+        tiled_train_p50_ms: v.req_f64("tiled_train_p50_ms")?,
+        max_rel_diff: v.req_f64("max_rel_diff")?,
+    })
+}
+
 /// Serialize the suite to the tracked trajectory JSON.
 pub fn to_json(rows: &[FfnBenchRow], reps: usize) -> Value {
-    let items: Vec<Value> = rows
-        .iter()
-        .map(|r| {
-            obj(vec![
-                ("geometry", s(r.geometry.clone())),
-                ("experts", num(r.experts as f64)),
-                ("capacity", num(r.capacity as f64)),
-                ("hidden", num(r.hidden as f64)),
-                ("intermediate", num(r.intermediate as f64)),
-                ("i_block", num(r.i_block as f64)),
-                ("tiles_per_expert", num(r.tiles_per_expert as f64)),
-                ("workers", num(r.workers as f64)),
-                ("naive_p50_ms", num(r.naive_p50_ms)),
-                ("tiled_fwd_p50_ms", num(r.tiled_fwd_p50_ms)),
-                ("tiled_train_p50_ms", num(r.tiled_train_p50_ms)),
-                ("gflops", num(r.gflops())),
-                ("speedup", num(r.speedup())),
-                ("tokens_per_sec", num(r.tokens_per_sec())),
-                ("max_rel_diff", num(r.max_rel_diff)),
-            ])
-        })
-        .collect();
+    let items: Vec<Value> = rows.iter().map(row_json).collect();
     obj(vec![
         ("bench", s("ffn")),
         ("reps_per_cell", num(reps as f64)),
@@ -296,6 +358,39 @@ mod tests {
         let mut sorted = sizes.clone();
         sorted.dedup();
         assert_eq!(sorted, sizes, "pool sizes must be unique");
+    }
+
+    #[test]
+    fn spec_covers_every_geometry_and_pool_size() {
+        let cells = spec(4).expand().unwrap();
+        assert_eq!(cells.len(), GEOMETRIES.len() * pool_sizes().len());
+        for cell in &cells {
+            let resolved = resolve_cell(cell).unwrap();
+            assert!(resolved.req_usize("ffn.i_block").unwrap() >= 1);
+            let (geo, gi, _) = cell_config(cell).unwrap();
+            assert_eq!(GEOMETRIES[gi].name, geo.name);
+        }
+    }
+
+    #[test]
+    fn rows_round_trip_through_the_store_document() {
+        let row = FfnBenchRow {
+            geometry: "mid".into(),
+            experts: 8,
+            capacity: 64,
+            hidden: 256,
+            intermediate: 1024,
+            i_block: 512,
+            tiles_per_expert: 2,
+            workers: 2,
+            naive_p50_ms: 4.0,
+            tiled_fwd_p50_ms: 1.0,
+            tiled_train_p50_ms: 3.0,
+            max_rel_diff: 1e-7,
+        };
+        let back = row_from_json(&row_json(&row)).unwrap();
+        assert_eq!(format!("{back:?}"), format!("{row:?}"));
+        assert_eq!(back.speedup(), row.speedup());
     }
 
     #[test]

@@ -13,6 +13,10 @@
 //! `--no-overlap` baseline can never silently drift from the pre-overlap
 //! model.
 //!
+//! The grid is declared as a [`SweepSpec`] and driven through the
+//! [`Engine`]'s content-addressed store (the timing bench binary forces
+//! re-measurement).
+//!
 //! The two top-level regression fields:
 //!  * `min_overlap_speedup` — minimum serial/overlapped ratio over every
 //!    cell; the model guarantees >= 1.0 (the serial schedule is always
@@ -20,15 +24,20 @@
 //!  * `max_bottleneck_link_share` — how concentrated the worst cell's
 //!    exchange is on a single link (1.0 = one link is the whole story).
 
-use anyhow::{ensure, Context as _, Result};
+use anyhow::{bail, ensure, Context as _, Result};
 
 use crate::cluster::{simulate_step_observed, table2_hardware, ObservedTraffic};
 use crate::config::{CapacityMode, ModelConfig, Routing};
 use crate::metrics::RunLog;
 use crate::runtime::native::registry;
 use crate::runtime::shard::ShardedRun;
+use crate::sweep::{self, Cell, Engine, SweepOutcome, SweepSpec};
 use crate::util::json::{arr, num, obj, s, write as json_write, Value};
+use crate::util::stats::{p50, timing_series};
 use crate::util::table::{f2, Table};
+
+/// Code-relevant version tag in every overlap cell's store address.
+pub const STORE_VERSION: &str = "overlap-v1";
 
 /// The benched geometries: the sim-scale E = 16 / 32 / 64 twins.
 const GEOMETRIES: [&str; 3] = ["base-sim", "large-sim", "xlarge-sim"];
@@ -36,36 +45,48 @@ const GEOMETRIES: [&str; 3] = ["base-sim", "large-sim", "xlarge-sim"];
 /// Workers per node in the hierarchical cells (the flat cells use 1).
 pub const HIER_WORKERS_PER_NODE: usize = 4;
 
-fn geometry(name: &str) -> ModelConfig {
-    registry().into_iter().find(|c| c.name == name).expect("registry geometry")
+/// The benched grid as a declarative spec: 3 geometries x 3 strategies x
+/// D in {4, 8, 16} x workers-per-node in {1, 4} — 54 cells, last axis
+/// fastest.
+pub fn spec(steps: usize) -> SweepSpec {
+    SweepSpec::new("overlap", "overlap")
+        .steps(steps)
+        .axis("model", sweep::strs(&GEOMETRIES))
+        .axis("strategy", sweep::strs(&["top1@kx", "top2@1x", "2top1@1x"]))
+        .axis("workers", sweep::nums(&[4, 8, 16]))
+        .axis("workers_per_node", sweep::nums(&[1, HIER_WORKERS_PER_NODE]))
 }
 
-/// The benched strategies: the paper's three headline routing regimes.
-fn strategies() -> Vec<(Routing, CapacityMode)> {
-    vec![
-        (Routing::TopK(1), CapacityMode::TimesK),
-        (Routing::TopK(2), CapacityMode::Times1),
-        (Routing::Prototype(2), CapacityMode::Times1),
-    ]
+/// Materialize a spec-level cell into the config the runtime consumes.
+fn cell_config(cell: &Cell) -> Result<(ModelConfig, usize, usize)> {
+    let geo = cell.req_str("model")?;
+    let Some(base) = registry().into_iter().find(|c| c.name == geo) else {
+        bail!("overlap cell: unknown geometry {geo:?}");
+    };
+    let (routing, mode) = sweep::parse_strategy(cell.req_str("strategy")?)?;
+    let workers = cell.req_usize("workers")?;
+    let wpn = cell.req_usize("workers_per_node")?;
+    let mut cfg = base;
+    cfg.name = format!("{geo}-{}", routing.name());
+    cfg.routing = routing;
+    cfg.capacity_mode = mode;
+    Ok((cfg, workers, wpn))
 }
 
-/// The benched grid: 3 geometries x 3 strategies x D in {4, 8, 16} x
-/// {flat, hierarchical} — 54 cells.
+/// Fold the fully-resolved model config into the cell before hashing.
+pub fn resolve_cell(cell: &Cell) -> Result<Cell> {
+    let (cfg, _, _) = cell_config(cell)?;
+    let mut resolved = cell.clone();
+    resolved.merge(&sweep::config_cell(&cfg));
+    Ok(resolved)
+}
+
+/// The benched grid in legacy form; kept as the oracle the spec-based
+/// expansion is tested against.
 pub fn cases() -> Vec<(ModelConfig, usize, usize)> {
     let mut out = Vec::new();
-    for geo in GEOMETRIES {
-        let model = geometry(geo);
-        for (routing, mode) in strategies() {
-            for workers in [4usize, 8, 16] {
-                for wpn in [1usize, HIER_WORKERS_PER_NODE] {
-                    let mut cfg = model.clone();
-                    cfg.name = format!("{geo}-{}", routing.name());
-                    cfg.routing = routing;
-                    cfg.capacity_mode = mode;
-                    out.push((cfg, workers, wpn));
-                }
-            }
-        }
+    for cell in spec(12).expand().expect("builtin overlap spec expands") {
+        out.push(cell_config(&cell).expect("builtin overlap cell resolves"));
     }
     out
 }
@@ -110,83 +131,94 @@ impl OverlapBenchRow {
     }
 }
 
-/// Run the full grid, `steps` measured sharded steps per cell.
-pub fn run_suite(steps: usize) -> Result<Vec<OverlapBenchRow>> {
-    let steps = steps.max(1);
+/// Execute one cell: `steps` measured sharded steps plus the bitwise
+/// serial-oracle and overlap-monotonicity checks.
+pub fn run_cell(cell: &Cell) -> Result<Value> {
+    let (cfg, workers, wpn) = cell_config(cell)?;
+    let steps = cell.req_usize("steps")?.max(1);
+    let seed = cell.req_u64("seed")?;
     let hw = table2_hardware();
-    let mut rows = Vec::new();
-    for (cfg, workers, wpn) in cases() {
-        let mut run = ShardedRun::new(&cfg, workers)?;
-        run.set_workers_per_node(wpn);
-        let topo = run.topology();
-        let mut log = RunLog::new(format!("{}-d{workers}-{}", cfg.name, topo.name()));
-        // one extra leading step carries the cold allocations, matching
-        // the other bench harnesses' warmup discard
-        run.train(steps as i64 + 1, 42, &mut log, false)?;
-        let mut ms: Vec<f64> = log.records.iter().skip(1).map(|r| r.ms_per_step).collect();
-        ms.sort_by(f64::total_cmp);
-        let host_ms = ms[ms.len() / 2];
-        let last = log.last().expect("at least one recorded step");
-        let dsp = last.dispatch.as_ref().expect("sharded records carry dispatch");
+    let mut run = ShardedRun::new(&cfg, workers)?;
+    run.set_workers_per_node(wpn);
+    let topo = run.topology();
+    let mut log = RunLog::new(format!("{}-d{workers}-{}", cfg.name, topo.name()));
+    // one extra leading step carries the cold allocations, matching
+    // the other bench harnesses' warmup discard
+    run.train(steps as i64 + 1, seed, &mut log, false)?;
+    let ms = timing_series(log.records.iter().map(|r| r.ms_per_step), 1);
+    let host_ms = p50(&ms);
+    let last = log.last().expect("at least one recorded step");
+    let dsp = last.dispatch.as_ref().expect("sharded records carry dispatch");
 
-        // the serial baseline must BE the pre-overlap observed model
-        // (the run's own config carries workers = D, which the simulator
-        // reads for the latency hop count)
-        let run_cfg = run.info().config.clone();
-        let oracle = simulate_step_observed(
-            &run_cfg,
-            cfg.routing,
-            cfg.capacity_mode,
-            &hw,
-            &ObservedTraffic {
-                a2a_bytes_per_layer: dsp.a2a_bytes_per_layer,
-                shard_balance: dsp.shard_balance,
-            },
-        )
-        .total_ms();
-        ensure!(
-            dsp.observed_ms.to_bits() == oracle.to_bits(),
-            "{} D={workers} {}: serial baseline drifted from simulate_step_observed",
-            cfg.name,
-            topo.name()
-        );
-        ensure!(
-            dsp.observed_overlap_ms <= dsp.observed_ms,
-            "{} D={workers} {}: overlap made the step slower",
-            cfg.name,
-            topo.name()
-        );
+    // the serial baseline must BE the pre-overlap observed model
+    // (the run's own config carries workers = D, which the simulator
+    // reads for the latency hop count)
+    let run_cfg = run.info().config.clone();
+    let oracle = simulate_step_observed(
+        &run_cfg,
+        cfg.routing,
+        cfg.capacity_mode,
+        &hw,
+        &ObservedTraffic {
+            a2a_bytes_per_layer: dsp.a2a_bytes_per_layer,
+            shard_balance: dsp.shard_balance,
+        },
+    )
+    .total_ms();
+    ensure!(
+        dsp.observed_ms.to_bits() == oracle.to_bits(),
+        "{} D={workers} {}: serial baseline drifted from simulate_step_observed",
+        cfg.name,
+        topo.name()
+    );
+    ensure!(
+        dsp.observed_overlap_ms <= dsp.observed_ms,
+        "{} D={workers} {}: overlap made the step slower",
+        cfg.name,
+        topo.name()
+    );
 
-        let row = OverlapBenchRow {
-            model: cfg.name.clone(),
-            strategy: cfg.routing.name(),
-            workers,
-            topology: topo.name(),
-            workers_per_node: wpn,
-            tokens_per_worker: cfg.tokens_per_batch(),
-            a2a_mb_step: dsp.a2a_bytes_step / 1e6,
-            bottleneck_link_share: dsp.bottleneck_link_share(),
-            bottleneck_src: dsp.bottleneck_src,
-            bottleneck_dst: dsp.bottleneck_dst,
-            serial_ms: dsp.observed_ms,
-            overlapped_ms: dsp.observed_overlap_ms,
-            overlap_efficiency: dsp.overlap_efficiency,
-            host_ms,
-        };
-        eprintln!(
-            "[bench] {} D={} {}: serial {:.1} ms -> overlapped {:.1} ms ({:.2}x, eff {:.2}), link share {:.2}",
-            row.model,
-            row.workers,
-            row.topology,
-            row.serial_ms,
-            row.overlapped_ms,
-            row.overlap_speedup(),
-            row.overlap_efficiency,
-            row.bottleneck_link_share
-        );
-        rows.push(row);
-    }
-    Ok(rows)
+    let row = OverlapBenchRow {
+        model: cfg.name.clone(),
+        strategy: cfg.routing.name(),
+        workers,
+        topology: topo.name(),
+        workers_per_node: wpn,
+        tokens_per_worker: cfg.tokens_per_batch(),
+        a2a_mb_step: dsp.a2a_bytes_step / 1e6,
+        bottleneck_link_share: dsp.bottleneck_link_share(),
+        bottleneck_src: dsp.bottleneck_src,
+        bottleneck_dst: dsp.bottleneck_dst,
+        serial_ms: dsp.observed_ms,
+        overlapped_ms: dsp.observed_overlap_ms,
+        overlap_efficiency: dsp.overlap_efficiency,
+        host_ms,
+    };
+    eprintln!(
+        "[bench] {} D={} {}: serial {:.1} ms -> overlapped {:.1} ms ({:.2}x, eff {:.2}), link share {:.2}",
+        row.model,
+        row.workers,
+        row.topology,
+        row.serial_ms,
+        row.overlapped_ms,
+        row.overlap_speedup(),
+        row.overlap_efficiency,
+        row.bottleneck_link_share
+    );
+    Ok(row_json(&row))
+}
+
+/// Run the full grid through the sweep engine, `steps` measured sharded
+/// steps per cell; previously-completed cells come back from the store.
+pub fn run_suite(engine: &Engine, steps: usize) -> Result<(Vec<OverlapBenchRow>, SweepOutcome)> {
+    let outcome = engine.run_spec(&spec(steps), &sweep::OverlapRunner)?;
+    let rows = rows_from(&outcome)?;
+    Ok((rows, outcome))
+}
+
+/// Rebuild the typed rows from a sweep outcome's stored documents.
+pub fn rows_from(outcome: &SweepOutcome) -> Result<Vec<OverlapBenchRow>> {
+    outcome.outcomes.iter().map(|o| row_from_json(&o.result)).collect()
 }
 
 /// Minimum overlap speedup over every cell — the CI gate's floor (1.0 is
@@ -238,30 +270,52 @@ pub fn render_table(rows: &[OverlapBenchRow], steps: usize) -> Table {
     t
 }
 
+/// One row as its stored (and emitted) JSON object: the per-cell result
+/// document in the experiment store and the element of `rows` in
+/// `BENCH_overlap.json`.
+fn row_json(r: &OverlapBenchRow) -> Value {
+    obj(vec![
+        ("model", s(r.model.clone())),
+        ("strategy", s(r.strategy.clone())),
+        ("workers", num(r.workers as f64)),
+        ("topology", s(r.topology.clone())),
+        ("workers_per_node", num(r.workers_per_node as f64)),
+        ("tokens_per_worker", num(r.tokens_per_worker as f64)),
+        ("a2a_mb_per_step", num(r.a2a_mb_step)),
+        ("bottleneck_link_share", num(r.bottleneck_link_share)),
+        ("bottleneck_src", num(r.bottleneck_src as f64)),
+        ("bottleneck_dst", num(r.bottleneck_dst as f64)),
+        ("serial_ms", num(r.serial_ms)),
+        ("overlapped_ms", num(r.overlapped_ms)),
+        ("overlap_speedup", num(r.overlap_speedup())),
+        ("overlap_efficiency", num(r.overlap_efficiency)),
+        ("host_ms_per_step", num(r.host_ms)),
+    ])
+}
+
+/// Inverse of `row_json`, for rows recalled from the store.
+pub fn row_from_json(v: &Value) -> Result<OverlapBenchRow> {
+    Ok(OverlapBenchRow {
+        model: v.req_str("model")?.to_string(),
+        strategy: v.req_str("strategy")?.to_string(),
+        workers: v.req_usize("workers")?,
+        topology: v.req_str("topology")?.to_string(),
+        workers_per_node: v.req_usize("workers_per_node")?,
+        tokens_per_worker: v.req_usize("tokens_per_worker")?,
+        a2a_mb_step: v.req_f64("a2a_mb_per_step")?,
+        bottleneck_link_share: v.req_f64("bottleneck_link_share")?,
+        bottleneck_src: v.req_usize("bottleneck_src")?,
+        bottleneck_dst: v.req_usize("bottleneck_dst")?,
+        serial_ms: v.req_f64("serial_ms")?,
+        overlapped_ms: v.req_f64("overlapped_ms")?,
+        overlap_efficiency: v.req_f64("overlap_efficiency")?,
+        host_ms: v.req_f64("host_ms_per_step")?,
+    })
+}
+
 /// Serialize the suite to the tracked trajectory JSON.
 pub fn to_json(rows: &[OverlapBenchRow], steps: usize) -> Value {
-    let items: Vec<Value> = rows
-        .iter()
-        .map(|r| {
-            obj(vec![
-                ("model", s(r.model.clone())),
-                ("strategy", s(r.strategy.clone())),
-                ("workers", num(r.workers as f64)),
-                ("topology", s(r.topology.clone())),
-                ("workers_per_node", num(r.workers_per_node as f64)),
-                ("tokens_per_worker", num(r.tokens_per_worker as f64)),
-                ("a2a_mb_per_step", num(r.a2a_mb_step)),
-                ("bottleneck_link_share", num(r.bottleneck_link_share)),
-                ("bottleneck_src", num(r.bottleneck_src as f64)),
-                ("bottleneck_dst", num(r.bottleneck_dst as f64)),
-                ("serial_ms", num(r.serial_ms)),
-                ("overlapped_ms", num(r.overlapped_ms)),
-                ("overlap_speedup", num(r.overlap_speedup())),
-                ("overlap_efficiency", num(r.overlap_efficiency)),
-                ("host_ms_per_step", num(r.host_ms)),
-            ])
-        })
-        .collect();
+    let items: Vec<Value> = rows.iter().map(row_json).collect();
     obj(vec![
         ("bench", s("overlap")),
         ("steps_per_cell", num(steps as f64)),
@@ -292,6 +346,28 @@ mod tests {
         }
         assert!(cs.iter().any(|(c, d, w)| c.name == "xlarge-sim-2top1" && *d == 16 && *w == 4));
         assert!(cs.iter().any(|(c, d, w)| c.name == "base-sim-top1" && *d == 4 && *w == 1));
+    }
+
+    #[test]
+    fn rows_round_trip_through_the_store_document() {
+        let row = OverlapBenchRow {
+            model: "xlarge-sim-top1".into(),
+            strategy: "top1".into(),
+            workers: 8,
+            topology: "nodes4".into(),
+            workers_per_node: 4,
+            tokens_per_worker: 512,
+            a2a_mb_step: 3.5,
+            bottleneck_link_share: 0.25,
+            bottleneck_src: 2,
+            bottleneck_dst: 5,
+            serial_ms: 200.0,
+            overlapped_ms: 160.0,
+            overlap_efficiency: 0.9,
+            host_ms: 1.5,
+        };
+        let back = row_from_json(&row_json(&row)).unwrap();
+        assert_eq!(format!("{back:?}"), format!("{row:?}"));
     }
 
     #[test]

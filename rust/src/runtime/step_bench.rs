@@ -11,52 +11,70 @@
 //! latency, steps/sec, routed-tokens/sec, the baseline-vs-fused speedup
 //! (the machine-readable regression signal), and the gate-matrix bytes
 //! per step the fused path never materializes.
+//!
+//! The grid is declared as a [`SweepSpec`] and driven through the
+//! [`Engine`]'s content-addressed store; the timing bench binary passes
+//! a `force` engine because a timing tool must re-measure.
 
 use std::time::Instant;
 
-use anyhow::{ensure, Context as _, Result};
+use anyhow::{bail, ensure, Context as _, Result};
 
 use crate::config::{CapacityMode, ModelConfig, Routing};
 use crate::data::{Batch, Batcher, Split};
 use crate::runtime::native::registry;
 use crate::runtime::shard::{ShardedRun, StepMode};
+use crate::sweep::{self, Cell, Engine, SweepOutcome, SweepSpec};
 use crate::util::json::{arr, num, obj, s, write as json_write, Value};
-use crate::util::stats::percentile;
+use crate::util::stats::{p50, p95, timing_series};
 use crate::util::table::{f2, Table};
+
+/// Code-relevant version tag in every step cell's store address.
+pub const STORE_VERSION: &str = "step-v1";
 
 /// The benched geometries: the sim-scale E = 16 / 32 / 64 twins from the
 /// native registry (xlarge-sim is the acceptance gate's E = 64 row).
 const GEOMETRIES: [&str; 3] = ["base-sim", "large-sim", "xlarge-sim"];
 
-fn geometry(name: &str) -> ModelConfig {
-    registry().into_iter().find(|c| c.name == name).expect("registry geometry")
+/// The benched grid as a declarative spec: 3 geometries x 4 strategies x
+/// D in {1, 4, 8}, last axis fastest.
+pub fn spec(steps: usize) -> SweepSpec {
+    SweepSpec::new("step", "step")
+        .steps(steps)
+        .axis("model", sweep::strs(&GEOMETRIES))
+        .axis("strategy", sweep::strs(&["top1@kx", "top2@1x", "2top1@1x", "4top1@1x"]))
+        .axis("workers", sweep::nums(&[1, 4, 8]))
 }
 
-/// The benched strategies: the paper's headline routing regimes at their
-/// usual capacity modes.
-fn strategies() -> Vec<(Routing, CapacityMode)> {
-    vec![
-        (Routing::TopK(1), CapacityMode::TimesK),
-        (Routing::TopK(2), CapacityMode::Times1),
-        (Routing::Prototype(2), CapacityMode::Times1),
-        (Routing::Prototype(4), CapacityMode::Times1),
-    ]
+/// Materialize a spec-level cell into the config the runtime consumes.
+fn cell_config(cell: &Cell) -> Result<(ModelConfig, usize)> {
+    let geo = cell.req_str("model")?;
+    let Some(base) = registry().into_iter().find(|c| c.name == geo) else {
+        bail!("step cell: unknown geometry {geo:?}");
+    };
+    let (routing, mode) = sweep::parse_strategy(cell.req_str("strategy")?)?;
+    let workers = cell.req_usize("workers")?;
+    let mut cfg = base;
+    cfg.name = format!("{geo}-{}", routing.name());
+    cfg.routing = routing;
+    cfg.capacity_mode = mode;
+    Ok((cfg, workers))
 }
 
-/// The benched grid: 3 geometries x 4 strategies x D in {1, 4, 8}.
+/// Fold the fully-resolved model config into the cell before hashing.
+pub fn resolve_cell(cell: &Cell) -> Result<Cell> {
+    let (cfg, _) = cell_config(cell)?;
+    let mut resolved = cell.clone();
+    resolved.merge(&sweep::config_cell(&cfg));
+    Ok(resolved)
+}
+
+/// The benched grid in legacy form; kept as the oracle the spec-based
+/// expansion is tested against.
 pub fn cases() -> Vec<(ModelConfig, usize)> {
     let mut out = Vec::new();
-    for geo in GEOMETRIES {
-        let model = geometry(geo);
-        for (routing, mode) in strategies() {
-            for workers in [1usize, 4, 8] {
-                let mut cfg = model.clone();
-                cfg.name = format!("{geo}-{}", routing.name());
-                cfg.routing = routing;
-                cfg.capacity_mode = mode;
-                out.push((cfg, workers));
-            }
-        }
+    for cell in spec(12).expand().expect("builtin step spec expands") {
+        out.push(cell_config(&cell).expect("builtin step cell resolves"));
     }
     out
 }
@@ -103,7 +121,8 @@ impl StepBenchRow {
 }
 
 /// Time `steps` sharded steps in `mode` (after one warmup step), on the
-/// exact batch stream `ShardedRun::train` would consume.
+/// exact batch stream `ShardedRun::train` would consume. Returns the
+/// sorted series (feed to [`p50`] / [`p95`]).
 fn measure(run: &ShardedRun, mode: StepMode, steps: usize, seed: u64) -> Result<Vec<f64>> {
     let cfg = run.info().config.clone();
     let d = run.workers();
@@ -122,7 +141,7 @@ fn measure(run: &ShardedRun, mode: StepMode, steps: usize, seed: u64) -> Result<
         }
         state = next;
     }
-    Ok(ms)
+    Ok(timing_series(ms, 0))
 }
 
 /// Parity smoke: one step in each mode from the same state and batches
@@ -149,44 +168,55 @@ fn assert_modes_agree(run: &ShardedRun, seed: u64) -> Result<()> {
     Ok(())
 }
 
-/// Run the full grid, `steps` measured steps per (cell, mode).
-pub fn run_suite(steps: usize) -> Result<Vec<StepBenchRow>> {
-    let steps = steps.max(1);
-    let mut rows = Vec::new();
-    for (cfg, workers) in cases() {
-        let run = ShardedRun::new(&cfg, workers)?;
-        assert_modes_agree(&run, 42)?;
-        let fused = measure(&run, StepMode::Fused, steps, 42)?;
-        let baseline = measure(&run, StepMode::TwoPass, steps, 42)?;
-        let tokens = cfg.tokens_per_batch();
-        let k_eff = cfg.routing.k().min(cfg.num_experts as u32).max(1) as usize;
-        let row = StepBenchRow {
-            model: cfg.name.clone(),
-            strategy: cfg.routing.name(),
-            workers,
-            layers: cfg.layers,
-            experts: cfg.num_experts,
-            tokens_per_worker: tokens,
-            routed_per_step: (workers * cfg.layers * tokens * k_eff) as u64,
-            gate_bytes_avoided: (workers * cfg.layers * tokens * cfg.num_experts * 4) as u64,
-            fused_p50_ms: percentile(&fused, 50.0),
-            fused_p95_ms: percentile(&fused, 95.0),
-            baseline_p50_ms: percentile(&baseline, 50.0),
-            baseline_p95_ms: percentile(&baseline, 95.0),
-        };
-        eprintln!(
-            "[bench] {} D={}: fused {:.3} ms (p95 {:.3}), baseline {:.3} ms, {:.2}x, {:.2} Mtok/s routed",
-            row.model,
-            row.workers,
-            row.fused_p50_ms,
-            row.fused_p95_ms,
-            row.baseline_p50_ms,
-            row.speedup(),
-            row.fused_routed_tokens_per_sec() / 1e6
-        );
-        rows.push(row);
-    }
-    Ok(rows)
+/// Execute one cell: parity-check, then `steps` measured steps per mode.
+pub fn run_cell(cell: &Cell) -> Result<Value> {
+    let (cfg, workers) = cell_config(cell)?;
+    let steps = cell.req_usize("steps")?.max(1);
+    let seed = cell.req_u64("seed")?;
+    let run = ShardedRun::new(&cfg, workers)?;
+    assert_modes_agree(&run, seed)?;
+    let fused = measure(&run, StepMode::Fused, steps, seed)?;
+    let baseline = measure(&run, StepMode::TwoPass, steps, seed)?;
+    let tokens = cfg.tokens_per_batch();
+    let k_eff = cfg.routing.k().min(cfg.num_experts as u32).max(1) as usize;
+    let row = StepBenchRow {
+        model: cfg.name.clone(),
+        strategy: cfg.routing.name(),
+        workers,
+        layers: cfg.layers,
+        experts: cfg.num_experts,
+        tokens_per_worker: tokens,
+        routed_per_step: (workers * cfg.layers * tokens * k_eff) as u64,
+        gate_bytes_avoided: (workers * cfg.layers * tokens * cfg.num_experts * 4) as u64,
+        fused_p50_ms: p50(&fused),
+        fused_p95_ms: p95(&fused),
+        baseline_p50_ms: p50(&baseline),
+        baseline_p95_ms: p95(&baseline),
+    };
+    eprintln!(
+        "[bench] {} D={}: fused {:.3} ms (p95 {:.3}), baseline {:.3} ms, {:.2}x, {:.2} Mtok/s routed",
+        row.model,
+        row.workers,
+        row.fused_p50_ms,
+        row.fused_p95_ms,
+        row.baseline_p50_ms,
+        row.speedup(),
+        row.fused_routed_tokens_per_sec() / 1e6
+    );
+    Ok(row_json(&row))
+}
+
+/// Run the full grid through the sweep engine, `steps` measured steps per
+/// (cell, mode); previously-completed cells come back from the store.
+pub fn run_suite(engine: &Engine, steps: usize) -> Result<(Vec<StepBenchRow>, SweepOutcome)> {
+    let outcome = engine.run_spec(&spec(steps), &sweep::StepRunner)?;
+    let rows = rows_from(&outcome)?;
+    Ok((rows, outcome))
+}
+
+/// Rebuild the typed rows from a sweep outcome's stored documents.
+pub fn rows_from(outcome: &SweepOutcome) -> Result<Vec<StepBenchRow>> {
+    outcome.outcomes.iter().map(|o| row_from_json(&o.result)).collect()
 }
 
 /// Minimum fused speedup over the acceptance slice: xlarge-sim (E = 64)
@@ -235,32 +265,53 @@ pub fn render_table(rows: &[StepBenchRow], steps: usize) -> Table {
     t
 }
 
+/// One row as its stored (and emitted) JSON object: the per-cell result
+/// document in the experiment store and the element of `rows` in
+/// `BENCH_step.json`. Derived rates are serialized too (the historical
+/// schema carries them), and recomputed on read.
+fn row_json(r: &StepBenchRow) -> Value {
+    obj(vec![
+        ("model", s(r.model.clone())),
+        ("strategy", s(r.strategy.clone())),
+        ("workers", num(r.workers as f64)),
+        ("layers", num(r.layers as f64)),
+        ("experts", num(r.experts as f64)),
+        ("tokens_per_worker", num(r.tokens_per_worker as f64)),
+        ("routed_tokens_per_step", num(r.routed_per_step as f64)),
+        ("gate_bytes_avoided_per_step", num(r.gate_bytes_avoided as f64)),
+        ("fused_p50_ms", num(r.fused_p50_ms)),
+        ("fused_p95_ms", num(r.fused_p95_ms)),
+        ("baseline_p50_ms", num(r.baseline_p50_ms)),
+        ("baseline_p95_ms", num(r.baseline_p95_ms)),
+        ("fused_steps_per_sec", num(r.fused_steps_per_sec())),
+        ("baseline_steps_per_sec", num(r.baseline_steps_per_sec())),
+        ("fused_routed_tokens_per_sec", num(r.fused_routed_tokens_per_sec())),
+        ("baseline_routed_tokens_per_sec", num(r.baseline_routed_tokens_per_sec())),
+        ("speedup", num(r.speedup())),
+    ])
+}
+
+/// Inverse of `row_json`, for rows recalled from the store.
+pub fn row_from_json(v: &Value) -> Result<StepBenchRow> {
+    Ok(StepBenchRow {
+        model: v.req_str("model")?.to_string(),
+        strategy: v.req_str("strategy")?.to_string(),
+        workers: v.req_usize("workers")?,
+        layers: v.req_usize("layers")?,
+        experts: v.req_usize("experts")?,
+        tokens_per_worker: v.req_usize("tokens_per_worker")?,
+        routed_per_step: v.req_u64("routed_tokens_per_step")?,
+        gate_bytes_avoided: v.req_u64("gate_bytes_avoided_per_step")?,
+        fused_p50_ms: v.req_f64("fused_p50_ms")?,
+        fused_p95_ms: v.req_f64("fused_p95_ms")?,
+        baseline_p50_ms: v.req_f64("baseline_p50_ms")?,
+        baseline_p95_ms: v.req_f64("baseline_p95_ms")?,
+    })
+}
+
 /// Serialize the suite to the tracked trajectory JSON.
 pub fn to_json(rows: &[StepBenchRow], steps: usize) -> Value {
-    let items: Vec<Value> = rows
-        .iter()
-        .map(|r| {
-            obj(vec![
-                ("model", s(r.model.clone())),
-                ("strategy", s(r.strategy.clone())),
-                ("workers", num(r.workers as f64)),
-                ("layers", num(r.layers as f64)),
-                ("experts", num(r.experts as f64)),
-                ("tokens_per_worker", num(r.tokens_per_worker as f64)),
-                ("routed_tokens_per_step", num(r.routed_per_step as f64)),
-                ("gate_bytes_avoided_per_step", num(r.gate_bytes_avoided as f64)),
-                ("fused_p50_ms", num(r.fused_p50_ms)),
-                ("fused_p95_ms", num(r.fused_p95_ms)),
-                ("baseline_p50_ms", num(r.baseline_p50_ms)),
-                ("baseline_p95_ms", num(r.baseline_p95_ms)),
-                ("fused_steps_per_sec", num(r.fused_steps_per_sec())),
-                ("baseline_steps_per_sec", num(r.baseline_steps_per_sec())),
-                ("fused_routed_tokens_per_sec", num(r.fused_routed_tokens_per_sec())),
-                ("baseline_routed_tokens_per_sec", num(r.baseline_routed_tokens_per_sec())),
-                ("speedup", num(r.speedup())),
-            ])
-        })
-        .collect();
+    let items: Vec<Value> = rows.iter().map(row_json).collect();
     obj(vec![
         ("bench", s("step")),
         ("steps_per_cell", num(steps as f64)),
@@ -295,11 +346,33 @@ mod tests {
 
     #[test]
     fn modes_agree_on_a_sharded_cell() {
-        let mut cfg = geometry("base-sim");
+        let mut cfg =
+            registry().into_iter().find(|c| c.name == "base-sim").expect("registry geometry");
         cfg.routing = Routing::TopK(2);
         cfg.capacity_mode = CapacityMode::Times1;
         let run = ShardedRun::new(&cfg, 4).unwrap();
         assert_modes_agree(&run, 7).unwrap();
+    }
+
+    #[test]
+    fn rows_round_trip_through_the_store_document() {
+        let row = StepBenchRow {
+            model: "xlarge-sim-top1".into(),
+            strategy: "top1".into(),
+            workers: 4,
+            layers: 8,
+            experts: 64,
+            tokens_per_worker: 512,
+            routed_per_step: 4 * 8 * 512,
+            gate_bytes_avoided: 4 * 8 * 512 * 64 * 4,
+            fused_p50_ms: 2.0,
+            fused_p95_ms: 2.5,
+            baseline_p50_ms: 4.0,
+            baseline_p95_ms: 5.0,
+        };
+        let back = row_from_json(&row_json(&row)).unwrap();
+        assert_eq!(format!("{back:?}"), format!("{row:?}"));
+        assert_eq!(back.speedup(), row.speedup());
     }
 
     #[test]

@@ -1,0 +1,112 @@
+//! Cell executors: the bridge between a kind-agnostic [`Cell`] and the
+//! machinery that actually runs it.
+//!
+//! A [`CellRunner`] does two jobs. `resolve` expands a spec-level cell
+//! (e.g. `model=base-twin, strategy=top2@1x, workers=4`) into the fully
+//! resolved form the store hashes — folding in every `cfg.*` field via
+//! [`crate::sweep::spec::config_cell`], so a registry edit changes the
+//! address instead of aliasing a stale result. `run` executes the cell
+//! and returns its result document (one BENCH row, one training curve).
+//!
+//! `version` is the code-relevant tag baked into every address: bump it
+//! when the measurement or its semantics change, and every old result
+//! becomes unreachable (and gc-able) instead of silently wrong.
+
+use anyhow::{bail, Result};
+
+use crate::experiments;
+use crate::runtime::{dispatch_bench, ffn_bench, overlap_bench, step_bench};
+use crate::sweep::spec::Cell;
+use crate::util::json::Value;
+
+pub trait CellRunner {
+    fn kind(&self) -> &'static str;
+    fn version(&self) -> &'static str;
+    fn resolve(&self, cell: &Cell) -> Result<Cell>;
+    fn run(&self, cell: &Cell) -> Result<Value>;
+}
+
+pub struct DispatchRunner;
+
+impl CellRunner for DispatchRunner {
+    fn kind(&self) -> &'static str {
+        "dispatch"
+    }
+    fn version(&self) -> &'static str {
+        dispatch_bench::STORE_VERSION
+    }
+    fn resolve(&self, cell: &Cell) -> Result<Cell> {
+        dispatch_bench::resolve_cell(cell)
+    }
+    fn run(&self, cell: &Cell) -> Result<Value> {
+        dispatch_bench::run_cell(cell)
+    }
+}
+
+pub struct StepRunner;
+
+impl CellRunner for StepRunner {
+    fn kind(&self) -> &'static str {
+        "step"
+    }
+    fn version(&self) -> &'static str {
+        step_bench::STORE_VERSION
+    }
+    fn resolve(&self, cell: &Cell) -> Result<Cell> {
+        step_bench::resolve_cell(cell)
+    }
+    fn run(&self, cell: &Cell) -> Result<Value> {
+        step_bench::run_cell(cell)
+    }
+}
+
+pub struct OverlapRunner;
+
+impl CellRunner for OverlapRunner {
+    fn kind(&self) -> &'static str {
+        "overlap"
+    }
+    fn version(&self) -> &'static str {
+        overlap_bench::STORE_VERSION
+    }
+    fn resolve(&self, cell: &Cell) -> Result<Cell> {
+        overlap_bench::resolve_cell(cell)
+    }
+    fn run(&self, cell: &Cell) -> Result<Value> {
+        overlap_bench::run_cell(cell)
+    }
+}
+
+pub struct FfnRunner;
+
+impl CellRunner for FfnRunner {
+    fn kind(&self) -> &'static str {
+        "ffn"
+    }
+    fn version(&self) -> &'static str {
+        ffn_bench::STORE_VERSION
+    }
+    fn resolve(&self, cell: &Cell) -> Result<Cell> {
+        ffn_bench::resolve_cell(cell)
+    }
+    fn run(&self, cell: &Cell) -> Result<Value> {
+        ffn_bench::run_cell(cell)
+    }
+}
+
+/// The built-in executor for a spec `kind`. Training cells
+/// ([`experiments::Runner`]) need a backend provider and are constructed
+/// directly rather than through this registry.
+pub fn runner_for(kind: &str) -> Result<Box<dyn CellRunner>> {
+    match kind {
+        "dispatch" => Ok(Box::new(DispatchRunner)),
+        "step" => Ok(Box::new(StepRunner)),
+        "overlap" => Ok(Box::new(OverlapRunner)),
+        "ffn" => Ok(Box::new(FfnRunner)),
+        "train" => bail!(
+            "train sweeps need a backend provider; use `m6t run` / experiments::Runner ({})",
+            experiments::runner::STORE_VERSION
+        ),
+        other => bail!("no executor for sweep kind {other:?} (dispatch, step, overlap, ffn)"),
+    }
+}

@@ -1,0 +1,208 @@
+//! The sweep engine: one declarative grid driver behind every bench
+//! harness, figure/table driver, and training-run cache in the repo.
+//!
+//! A [`SweepSpec`] names a cell family (`kind`), fixed params, and axes;
+//! [`Engine::run_spec`] expands it, resolves each cell through its
+//! [`CellRunner`], and serves each from the content-addressed [`Store`]
+//! — executing only cells whose address has never completed. Re-invoking
+//! an identical sweep is therefore zero re-runs, an interrupted sweep
+//! resumes by skipping finished cells, and editing any config field or
+//! bumping a runner's version tag re-runs exactly the affected cells.
+//! See DESIGN.md §"Sweep driver & experiment store".
+
+pub mod exec;
+pub mod report;
+pub mod spec;
+pub mod store;
+
+use std::collections::BTreeSet;
+use std::path::Path;
+
+use anyhow::{bail, ensure, Result};
+
+use crate::util::json::{arr, obj, s, Value};
+
+pub use exec::{runner_for, CellRunner, DispatchRunner, FfnRunner, OverlapRunner, StepRunner};
+pub use report::OutputFormat;
+pub use spec::{
+    config_cell, nums, parse_strategy, strategy_name, strs, Axis, Cell, ParamValue, SweepSpec,
+    RESERVED_KEYS,
+};
+pub use store::{cell_key, GcReport, Store};
+
+/// Engine-wide version tag folded into every address (alongside the
+/// per-runner tag): bump to invalidate the whole store at once.
+pub const ENGINE_VERSION: &str = "sweep-v1";
+
+/// One executed-or-cached cell from a sweep.
+#[derive(Debug)]
+pub struct CellOutcome {
+    pub cell: Cell,
+    pub key: String,
+    pub cached: bool,
+    pub result: Value,
+}
+
+/// Everything a finished sweep knows about itself.
+#[derive(Debug)]
+pub struct SweepOutcome {
+    pub spec_name: String,
+    pub kind: String,
+    pub outcomes: Vec<CellOutcome>,
+}
+
+impl SweepOutcome {
+    pub fn hits(&self) -> usize {
+        self.outcomes.iter().filter(|o| o.cached).count()
+    }
+
+    pub fn executed(&self) -> usize {
+        self.outcomes.len() - self.hits()
+    }
+}
+
+/// Store-backed sweep executor.
+pub struct Engine {
+    store: Store,
+    force: bool,
+    verbose: bool,
+}
+
+impl Engine {
+    /// The store lives at `<results>/store`, next to the run artifacts
+    /// the experiment drivers already write under `results/`.
+    pub fn new(results_dir: impl AsRef<Path>) -> Self {
+        Self { store: Store::new(results_dir.as_ref().join("store")), force: false, verbose: true }
+    }
+
+    /// Re-execute cells even when their address has a completed result
+    /// (timing tools that must re-measure set this).
+    pub fn force(mut self, force: bool) -> Self {
+        self.force = force;
+        self
+    }
+
+    pub fn verbose(mut self, verbose: bool) -> Self {
+        self.verbose = verbose;
+        self
+    }
+
+    pub fn store(&self) -> &Store {
+        &self.store
+    }
+
+    /// Resolve, address, and run (or recall) one cell.
+    pub fn run_cell(
+        &self,
+        runner: &dyn CellRunner,
+        cell: &Cell,
+        label: &str,
+    ) -> Result<CellOutcome> {
+        let resolved = runner.resolve(cell)?;
+        let key = combined_key(runner, &resolved);
+        if !self.force {
+            if let Some(result) = self.store.lookup(runner.kind(), &key) {
+                if self.verbose {
+                    eprintln!("[sweep] {} {}: cached ({})", runner.kind(), label, &key[..12]);
+                }
+                return Ok(CellOutcome { cell: resolved, key, cached: true, result });
+            }
+        }
+        let result = runner.run(cell)?;
+        self.store.insert(runner.kind(), &key, &resolved, &result)?;
+        Ok(CellOutcome { cell: resolved, key, cached: false, result })
+    }
+
+    /// Expand `spec` and run every cell through `runner`.
+    pub fn run_spec(&self, spec: &SweepSpec, runner: &dyn CellRunner) -> Result<SweepOutcome> {
+        ensure!(
+            spec.kind == runner.kind(),
+            "spec {:?} has kind {:?} but the executor runs {:?}",
+            spec.name,
+            spec.kind,
+            runner.kind()
+        );
+        let cells = spec.expand()?;
+        let mut outcomes = Vec::with_capacity(cells.len());
+        for cell in &cells {
+            outcomes.push(self.run_cell(runner, cell, &spec.label(cell))?);
+        }
+        let outcome =
+            SweepOutcome { spec_name: spec.name.clone(), kind: spec.kind.clone(), outcomes };
+        if self.verbose {
+            eprintln!(
+                "[sweep] {}: {} cells — {} cached, {} executed (store {})",
+                outcome.spec_name,
+                outcome.outcomes.len(),
+                outcome.hits(),
+                outcome.executed(),
+                self.store.root().display()
+            );
+        }
+        Ok(outcome)
+    }
+}
+
+/// The full store address of a cell: engine version, runner version,
+/// kind, and the resolved cell content.
+fn combined_key(runner: &dyn CellRunner, resolved: &Cell) -> String {
+    cell_key(runner.kind(), &format!("{ENGINE_VERSION}/{}", runner.version()), resolved)
+}
+
+/// Address a spec-level cell without running it.
+pub fn address(runner: &dyn CellRunner, cell: &Cell) -> Result<String> {
+    Ok(combined_key(runner, &runner.resolve(cell)?))
+}
+
+/// Every `(kind, key)` a spec can produce — the liveness set for gc.
+pub fn live_keys(spec: &SweepSpec, runner: &dyn CellRunner) -> Result<BTreeSet<(String, String)>> {
+    ensure!(
+        spec.kind == runner.kind(),
+        "spec {:?} has kind {:?} but the executor runs {:?}",
+        spec.name,
+        spec.kind,
+        runner.kind()
+    );
+    let mut live = BTreeSet::new();
+    for cell in spec.expand()? {
+        live.insert((spec.kind.clone(), address(runner, &cell)?));
+    }
+    Ok(live)
+}
+
+/// Append the engine's provenance block to a bench document. It rides as
+/// one *extra* top-level key, so every historical field keeps its exact
+/// name and meaning for the CI regression gate.
+pub fn attach_provenance(doc: &mut Value, outcome: &SweepOutcome) {
+    let cells: Vec<Value> = outcome
+        .outcomes
+        .iter()
+        .map(|o| obj(vec![("key", s(o.key.clone())), ("cached", Value::Bool(o.cached))]))
+        .collect();
+    let block = obj(vec![
+        ("engine", s(ENGINE_VERSION)),
+        ("kind", s(outcome.kind.clone())),
+        ("spec", s(outcome.spec_name.clone())),
+        ("cells", arr(cells)),
+    ]);
+    if let Value::Object(m) = doc {
+        m.insert("provenance".to_string(), block);
+    }
+}
+
+/// Names accepted by `m6t sweep <name>` without a spec file.
+pub const BUILTIN_SPECS: [&str; 4] = ["dispatch", "step", "overlap", "ffn"];
+
+/// The builtin spec behind each `m6t bench --*` mode. `steps` overrides
+/// the per-family default (12 measured steps; 8 reps for ffn).
+pub fn builtin_spec(name: &str, steps: Option<usize>) -> Result<SweepSpec> {
+    use crate::runtime::{dispatch_bench, ffn_bench, overlap_bench, step_bench};
+    let spec = match name {
+        "dispatch" => dispatch_bench::spec(steps.unwrap_or(12)),
+        "step" => step_bench::spec(steps.unwrap_or(12)),
+        "overlap" => overlap_bench::spec(steps.unwrap_or(12)),
+        "ffn" => ffn_bench::spec(steps.unwrap_or(8)),
+        other => bail!("unknown builtin sweep {other:?} (dispatch, step, overlap, ffn)"),
+    };
+    Ok(spec)
+}

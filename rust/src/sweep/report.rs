@@ -1,0 +1,141 @@
+//! Shared output reporter: every sweep-backed subcommand renders its
+//! summary through one of three formats (`stream` keeps the historical
+//! aligned-table stdout, `json` emits the machine document, `markdown`
+//! emits a pipe table), so adding a format is one match arm here instead
+//! of five per-harness printf forks.
+
+use std::fmt::Write as _;
+use std::fs;
+use std::path::Path;
+
+use anyhow::{bail, Context, Result};
+
+use crate::util::json::{self, arr, obj, s, Value};
+use crate::util::table::Table;
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum OutputFormat {
+    /// Historical behavior: aligned monospace table on stdout.
+    Stream,
+    /// The full machine-readable document (or the table if none).
+    Json,
+    /// GitHub-flavored pipe table.
+    Markdown,
+}
+
+impl OutputFormat {
+    pub fn parse(text: &str) -> Result<OutputFormat> {
+        match text {
+            "stream" => Ok(OutputFormat::Stream),
+            "json" => Ok(OutputFormat::Json),
+            "markdown" | "md" => Ok(OutputFormat::Markdown),
+            other => bail!("unknown output format {other:?} (stream, json, markdown)"),
+        }
+    }
+}
+
+/// Render a [`Table`] as a GitHub-flavored markdown pipe table.
+pub fn markdown_table(table: &Table) -> String {
+    let mut out = String::new();
+    if !table.title.is_empty() {
+        let _ = writeln!(out, "### {}", table.title);
+        let _ = writeln!(out);
+    }
+    let _ = writeln!(out, "| {} |", table.header.join(" | "));
+    let _ = writeln!(
+        out,
+        "|{}|",
+        table.header.iter().map(|h| "-".repeat(h.len().max(3) + 2)).collect::<Vec<_>>().join("|")
+    );
+    for row in &table.rows {
+        let _ = writeln!(out, "| {} |", row.join(" | "));
+    }
+    out
+}
+
+/// A [`Table`] as a JSON document (for subcommands that have no richer
+/// native document to emit under `--output-format json`).
+pub fn table_json(table: &Table) -> Value {
+    let rows: Vec<Value> = table
+        .rows
+        .iter()
+        .map(|row| {
+            Value::Object(
+                table
+                    .header
+                    .iter()
+                    .zip(row)
+                    .map(|(h, c)| (h.clone(), Value::String(c.clone())))
+                    .collect(),
+            )
+        })
+        .collect();
+    obj(vec![("title", s(table.title.clone())), ("rows", arr(rows))])
+}
+
+/// Print `table` in `format`. Under `Json`, `doc` (the subcommand's
+/// native machine document, e.g. the full BENCH_*.json) wins over the
+/// table projection when present.
+pub fn emit(format: OutputFormat, table: &Table, doc: Option<&Value>) {
+    match format {
+        OutputFormat::Stream => print!("{}", table.render()),
+        OutputFormat::Markdown => print!("{}", markdown_table(table)),
+        OutputFormat::Json => {
+            let fallback;
+            let v = match doc {
+                Some(d) => d,
+                None => {
+                    fallback = table_json(table);
+                    &fallback
+                }
+            };
+            println!("{}", json::write(v));
+        }
+    }
+}
+
+/// Write a JSON document (newline-terminated) to `path`.
+pub fn write_doc(doc: &Value, path: impl AsRef<Path>) -> Result<()> {
+    let path = path.as_ref();
+    if let Some(parent) = path.parent() {
+        if !parent.as_os_str().is_empty() {
+            fs::create_dir_all(parent).with_context(|| format!("creating {}", parent.display()))?;
+        }
+    }
+    fs::write(path, format!("{}\n", json::write(doc)))
+        .with_context(|| format!("writing {}", path.display()))?;
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn format_parse() {
+        assert_eq!(OutputFormat::parse("stream").unwrap(), OutputFormat::Stream);
+        assert_eq!(OutputFormat::parse("md").unwrap(), OutputFormat::Markdown);
+        assert_eq!(OutputFormat::parse("json").unwrap(), OutputFormat::Json);
+        assert!(OutputFormat::parse("yaml").is_err());
+    }
+
+    #[test]
+    fn markdown_shape() {
+        let mut t = Table::new("demo", &["name", "x"]);
+        t.row(vec!["a".into(), "1".into()]);
+        let md = markdown_table(&t);
+        assert!(md.starts_with("### demo"));
+        assert!(md.contains("| name | x |"));
+        assert!(md.contains("| a | 1 |"));
+    }
+
+    #[test]
+    fn table_projects_to_json() {
+        let mut t = Table::new("demo", &["name", "x"]);
+        t.row(vec!["a".into(), "1".into()]);
+        let v = table_json(&t);
+        let rows = v.get("rows").and_then(|r| r.as_array()).unwrap();
+        assert_eq!(rows.len(), 1);
+        assert_eq!(rows[0].get("name").and_then(Value::as_str), Some("a"));
+    }
+}

@@ -1,0 +1,524 @@
+//! Declarative sweep specifications: a named param grid (`fixed` values
+//! plus the cartesian product of `axes`) that expands into flat [`Cell`]s.
+//!
+//! Cells are ordered maps so their canonical serialization — and therefore
+//! the store's content address — is independent of spec field order. The
+//! executor's `resolve` step folds the *fully resolved* model config into
+//! each cell before hashing (see [`config_cell`]), so editing a registry
+//! variant changes every affected address instead of silently reusing
+//! stale results.
+
+use std::collections::{BTreeMap, BTreeSet};
+use std::fmt;
+
+use anyhow::{anyhow, bail, ensure, Result};
+
+use crate::config::{CapacityMode, ModelConfig, Routing};
+use crate::util::json::{self, arr, num, obj, s, Value};
+
+/// One scalar parameter value. Numbers stay `f64` (matching the JSON
+/// layer), which round-trips bit-exactly through the canonical form.
+#[derive(Debug, Clone, PartialEq)]
+pub enum ParamValue {
+    Str(String),
+    Num(f64),
+    Bool(bool),
+}
+
+impl ParamValue {
+    pub fn to_json(&self) -> Value {
+        match self {
+            ParamValue::Str(x) => s(x.clone()),
+            ParamValue::Num(n) => num(*n),
+            ParamValue::Bool(b) => Value::Bool(*b),
+        }
+    }
+
+    pub fn from_json(v: &Value) -> Result<ParamValue> {
+        match v {
+            Value::String(x) => Ok(ParamValue::Str(x.clone())),
+            Value::Number(n) => Ok(ParamValue::Num(*n)),
+            Value::Bool(b) => Ok(ParamValue::Bool(*b)),
+            other => bail!("param values must be scalars, got {other:?}"),
+        }
+    }
+}
+
+impl fmt::Display for ParamValue {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            ParamValue::Str(x) => write!(f, "{x}"),
+            ParamValue::Num(n) if n.fract() == 0.0 && n.abs() < 9.0e15 => {
+                write!(f, "{}", *n as i64)
+            }
+            ParamValue::Num(n) => write!(f, "{n}"),
+            ParamValue::Bool(b) => write!(f, "{b}"),
+        }
+    }
+}
+
+/// String axis values for spec builders.
+pub fn strs(xs: &[&str]) -> Vec<ParamValue> {
+    xs.iter().map(|x| ParamValue::Str((*x).to_string())).collect()
+}
+
+/// Integer axis values for spec builders.
+pub fn nums(xs: &[usize]) -> Vec<ParamValue> {
+    xs.iter().map(|&x| ParamValue::Num(x as f64)).collect()
+}
+
+/// One fully-expanded grid point: a flat, ordered param map.
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct Cell(pub BTreeMap<String, ParamValue>);
+
+impl Cell {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn set(&mut self, key: &str, v: ParamValue) {
+        self.0.insert(key.to_string(), v);
+    }
+
+    pub fn get(&self, key: &str) -> Option<&ParamValue> {
+        self.0.get(key)
+    }
+
+    pub fn contains(&self, key: &str) -> bool {
+        self.0.contains_key(key)
+    }
+
+    /// Fold `other`'s entries in (overwriting on collision).
+    pub fn merge(&mut self, other: &Cell) {
+        for (k, v) in &other.0 {
+            self.0.insert(k.clone(), v.clone());
+        }
+    }
+
+    pub fn req_str(&self, key: &str) -> Result<&str> {
+        match self.get(key) {
+            Some(ParamValue::Str(x)) => Ok(x),
+            Some(other) => bail!("cell param {key:?} is not a string: {other}"),
+            None => bail!("cell is missing param {key:?}"),
+        }
+    }
+
+    pub fn req_f64(&self, key: &str) -> Result<f64> {
+        match self.get(key) {
+            Some(ParamValue::Num(n)) => Ok(*n),
+            Some(other) => bail!("cell param {key:?} is not a number: {other}"),
+            None => bail!("cell is missing param {key:?}"),
+        }
+    }
+
+    pub fn req_usize(&self, key: &str) -> Result<usize> {
+        let n = self.req_f64(key)?;
+        ensure!(
+            n >= 0.0 && n.fract() == 0.0,
+            "cell param {key:?} is not a non-negative integer: {n}"
+        );
+        Ok(n as usize)
+    }
+
+    pub fn req_u64(&self, key: &str) -> Result<u64> {
+        Ok(self.req_usize(key)? as u64)
+    }
+
+    pub fn to_json(&self) -> Value {
+        Value::Object(self.0.iter().map(|(k, v)| (k.clone(), v.to_json())).collect())
+    }
+
+    pub fn from_json(v: &Value) -> Result<Cell> {
+        let m = v.as_object().ok_or_else(|| anyhow!("cell must be a JSON object"))?;
+        let mut out = BTreeMap::new();
+        for (k, x) in m {
+            out.insert(k.clone(), ParamValue::from_json(x)?);
+        }
+        Ok(Cell(out))
+    }
+
+    /// The canonical serialized form (sorted keys, shortest-roundtrip
+    /// floats) — the exact byte string the store's content address hashes.
+    pub fn canonical(&self) -> String {
+        json::write(&self.to_json())
+    }
+}
+
+/// One swept dimension.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Axis {
+    pub name: String,
+    pub values: Vec<ParamValue>,
+}
+
+/// Keys the expansion owns; specs may not sweep or fix them.
+pub const RESERVED_KEYS: [&str; 2] = ["steps", "seed"];
+
+/// A declarative parameter grid: `fixed` params plus the cartesian
+/// product of `axes` (last axis fastest, matching the nesting order of
+/// the hand-rolled loops this engine replaced), with `steps` and `seed`
+/// folded into every cell.
+#[derive(Debug, Clone, PartialEq)]
+pub struct SweepSpec {
+    pub name: String,
+    /// Cell family — selects the executor (`dispatch`, `step`, ...).
+    pub kind: String,
+    /// Measured steps (or reps) per cell.
+    pub steps: usize,
+    pub seed: u64,
+    pub fixed: Cell,
+    pub axes: Vec<Axis>,
+}
+
+impl SweepSpec {
+    pub fn new(name: &str, kind: &str) -> Self {
+        Self {
+            name: name.to_string(),
+            kind: kind.to_string(),
+            steps: 12,
+            seed: 42,
+            fixed: Cell::new(),
+            axes: Vec::new(),
+        }
+    }
+
+    pub fn steps(mut self, steps: usize) -> Self {
+        self.steps = steps;
+        self
+    }
+
+    pub fn seed(mut self, seed: u64) -> Self {
+        self.seed = seed;
+        self
+    }
+
+    pub fn fix(mut self, key: &str, v: ParamValue) -> Self {
+        self.fixed.set(key, v);
+        self
+    }
+
+    pub fn axis(mut self, name: &str, values: Vec<ParamValue>) -> Self {
+        self.axes.push(Axis { name: name.to_string(), values });
+        self
+    }
+
+    pub fn validate(&self) -> Result<()> {
+        ensure!(!self.name.is_empty(), "sweep spec needs a non-empty name");
+        ensure!(!self.kind.is_empty(), "sweep spec {:?} needs a non-empty kind", self.name);
+        ensure!(self.steps >= 1, "sweep spec {:?}: steps must be >= 1", self.name);
+        for key in RESERVED_KEYS {
+            ensure!(
+                !self.fixed.contains(key),
+                "sweep spec {:?}: fixed param {key:?} shadows a reserved key",
+                self.name
+            );
+        }
+        let mut seen = BTreeSet::new();
+        for axis in &self.axes {
+            ensure!(!axis.name.is_empty(), "sweep spec {:?}: axis with empty name", self.name);
+            ensure!(
+                !axis.values.is_empty(),
+                "sweep spec {:?}: axis {:?} has no values",
+                self.name,
+                axis.name
+            );
+            ensure!(
+                seen.insert(axis.name.as_str()),
+                "sweep spec {:?}: duplicate axis {:?}",
+                self.name,
+                axis.name
+            );
+            ensure!(
+                !self.fixed.contains(&axis.name),
+                "sweep spec {:?}: axis {:?} collides with a fixed param",
+                self.name,
+                axis.name
+            );
+            ensure!(
+                !RESERVED_KEYS.contains(&axis.name.as_str()),
+                "sweep spec {:?}: axis {:?} shadows a reserved key",
+                self.name,
+                axis.name
+            );
+        }
+        Ok(())
+    }
+
+    /// Expand to the full cartesian grid, last axis fastest.
+    pub fn expand(&self) -> Result<Vec<Cell>> {
+        self.validate()?;
+        let mut base = self.fixed.clone();
+        base.set("steps", ParamValue::Num(self.steps as f64));
+        base.set("seed", ParamValue::Num(self.seed as f64));
+        let mut cells = vec![base];
+        for axis in &self.axes {
+            let mut next = Vec::with_capacity(cells.len() * axis.values.len());
+            for cell in &cells {
+                for v in &axis.values {
+                    let mut c = cell.clone();
+                    c.set(&axis.name, v.clone());
+                    next.push(c);
+                }
+            }
+            cells = next;
+        }
+        Ok(cells)
+    }
+
+    /// Compact per-cell progress label over the axis coordinates.
+    pub fn label(&self, cell: &Cell) -> String {
+        if self.axes.is_empty() {
+            return self.name.clone();
+        }
+        self.axes
+            .iter()
+            .map(|a| match cell.get(&a.name) {
+                Some(v) => format!("{v}"),
+                None => "?".to_string(),
+            })
+            .collect::<Vec<_>>()
+            .join("/")
+    }
+
+    pub fn to_json(&self) -> Value {
+        let axes: Vec<Value> = self
+            .axes
+            .iter()
+            .map(|a| {
+                obj(vec![
+                    ("name", s(a.name.clone())),
+                    ("values", arr(a.values.iter().map(ParamValue::to_json).collect())),
+                ])
+            })
+            .collect();
+        obj(vec![
+            ("name", s(self.name.clone())),
+            ("kind", s(self.kind.clone())),
+            ("steps", num(self.steps as f64)),
+            ("seed", num(self.seed as f64)),
+            ("fixed", self.fixed.to_json()),
+            ("axes", arr(axes)),
+        ])
+    }
+
+    /// Strict deserialization: unknown keys, non-scalar values, empty or
+    /// duplicate axes, and reserved-key collisions are all rejected — a
+    /// typo in a spec file must fail loudly, not silently drop an axis.
+    pub fn from_json(v: &Value) -> Result<SweepSpec> {
+        let m = v.as_object().ok_or_else(|| anyhow!("sweep spec must be a JSON object"))?;
+        for key in m.keys() {
+            ensure!(
+                matches!(key.as_str(), "name" | "kind" | "steps" | "seed" | "fixed" | "axes"),
+                "sweep spec has unknown key {key:?}"
+            );
+        }
+        let name = m
+            .get("name")
+            .and_then(Value::as_str)
+            .ok_or_else(|| anyhow!("sweep spec needs a string \"name\""))?;
+        let kind = m
+            .get("kind")
+            .and_then(Value::as_str)
+            .ok_or_else(|| anyhow!("sweep spec {name:?} needs a string \"kind\""))?;
+        let steps = match m.get("steps") {
+            None => 12,
+            Some(x) => x
+                .as_usize()
+                .ok_or_else(|| anyhow!("sweep spec {name:?}: \"steps\" must be an integer"))?,
+        };
+        let seed = match m.get("seed") {
+            None => 42,
+            Some(x) => x
+                .as_usize()
+                .ok_or_else(|| anyhow!("sweep spec {name:?}: \"seed\" must be an integer"))?
+                as u64,
+        };
+        let fixed = match m.get("fixed") {
+            None => Cell::new(),
+            Some(x) => Cell::from_json(x)?,
+        };
+        let mut axes = Vec::new();
+        if let Some(av) = m.get("axes") {
+            let list = av
+                .as_array()
+                .ok_or_else(|| anyhow!("sweep spec {name:?}: \"axes\" must be an array"))?;
+            for a in list {
+                let am = a
+                    .as_object()
+                    .ok_or_else(|| anyhow!("sweep spec {name:?}: each axis must be an object"))?;
+                let axis_name = am
+                    .get("name")
+                    .and_then(Value::as_str)
+                    .ok_or_else(|| anyhow!("sweep spec {name:?}: axis needs a string \"name\""))?;
+                for key in am.keys() {
+                    ensure!(
+                        matches!(key.as_str(), "name" | "values"),
+                        "sweep spec {name:?}: axis {axis_name:?} has unknown key {key:?}"
+                    );
+                }
+                let values = am
+                    .get("values")
+                    .and_then(|x| x.as_array())
+                    .ok_or_else(|| {
+                        anyhow!("sweep spec {name:?}: axis {axis_name:?} needs a \"values\" array")
+                    })?
+                    .iter()
+                    .map(ParamValue::from_json)
+                    .collect::<Result<Vec<_>>>()?;
+                axes.push(Axis { name: axis_name.to_string(), values });
+            }
+        }
+        let spec = SweepSpec {
+            name: name.to_string(),
+            kind: kind.to_string(),
+            steps,
+            seed,
+            fixed,
+            axes,
+        };
+        spec.validate()?;
+        Ok(spec)
+    }
+
+    pub fn parse(text: &str) -> Result<SweepSpec> {
+        let doc = json::parse(text).map_err(|e| anyhow!("sweep spec: {e}"))?;
+        Self::from_json(&doc)
+    }
+}
+
+/// Parse a routing-strategy coordinate like `top2@1x` or `2top1@kx` into
+/// the (routing, capacity-mode) pair it names. Every spec coordinate is
+/// explicit about capacity so a cell's address can never depend on an
+/// implicit default.
+pub fn parse_strategy(text: &str) -> Result<(Routing, CapacityMode)> {
+    let (r, c) = text
+        .split_once('@')
+        .ok_or_else(|| anyhow!("strategy {text:?} must look like \"top1@kx\" or \"2top1@1x\""))?;
+    let routing =
+        Routing::parse(r).ok_or_else(|| anyhow!("strategy {text:?}: unknown routing {r:?}"))?;
+    let mode = match c {
+        "kx" | "k" => CapacityMode::TimesK,
+        "1x" | "1" => CapacityMode::Times1,
+        other => bail!("strategy {text:?}: unknown capacity mode {other:?} (kx or 1x)"),
+    };
+    Ok((routing, mode))
+}
+
+/// The canonical spelling [`parse_strategy`] round-trips.
+pub fn strategy_name(routing: Routing, mode: CapacityMode) -> String {
+    format!("{}@{}", routing.name(), mode.name())
+}
+
+/// Flatten a fully-resolved [`ModelConfig`] into `cfg.*` cell params, so
+/// a cell's content address covers every field that shapes its
+/// computation. The exhaustive destructuring is deliberate: adding a
+/// config field without extending the fingerprint is a compile error —
+/// exactly the stale-cache bug class the store exists to kill.
+pub fn config_cell(cfg: &ModelConfig) -> Cell {
+    let ModelConfig {
+        name,
+        vocab_size,
+        hidden,
+        intermediate,
+        layers,
+        heads,
+        head_dim,
+        patch_dim,
+        num_experts,
+        routing,
+        capacity_factor,
+        capacity_mode,
+        aux_loss_coef,
+        moe_attention,
+        attn_num_experts,
+        batch,
+        patches,
+        text_len,
+        optimizer,
+        lr,
+        warmup,
+        init_std,
+        weight_decay,
+        compute,
+        workers,
+    } = cfg;
+    let mut c = Cell::new();
+    c.set("cfg.name", ParamValue::Str(name.clone()));
+    c.set("cfg.vocab_size", ParamValue::Num(*vocab_size as f64));
+    c.set("cfg.hidden", ParamValue::Num(*hidden as f64));
+    c.set("cfg.intermediate", ParamValue::Num(*intermediate as f64));
+    c.set("cfg.layers", ParamValue::Num(*layers as f64));
+    c.set("cfg.heads", ParamValue::Num(*heads as f64));
+    c.set("cfg.head_dim", ParamValue::Num(*head_dim as f64));
+    c.set("cfg.patch_dim", ParamValue::Num(*patch_dim as f64));
+    c.set("cfg.num_experts", ParamValue::Num(*num_experts as f64));
+    c.set("cfg.routing", ParamValue::Str(routing.name()));
+    c.set("cfg.capacity_factor", ParamValue::Num(*capacity_factor));
+    c.set("cfg.capacity_mode", ParamValue::Str(capacity_mode.name().to_string()));
+    c.set("cfg.aux_loss_coef", ParamValue::Num(*aux_loss_coef));
+    c.set("cfg.moe_attention", ParamValue::Bool(*moe_attention));
+    c.set("cfg.attn_num_experts", ParamValue::Num(*attn_num_experts as f64));
+    c.set("cfg.batch", ParamValue::Num(*batch as f64));
+    c.set("cfg.patches", ParamValue::Num(*patches as f64));
+    c.set("cfg.text_len", ParamValue::Num(*text_len as f64));
+    c.set("cfg.optimizer", ParamValue::Str(optimizer.clone()));
+    c.set("cfg.lr", ParamValue::Num(*lr));
+    c.set("cfg.warmup", ParamValue::Num(*warmup as f64));
+    c.set("cfg.init_std", ParamValue::Num(*init_std));
+    c.set("cfg.weight_decay", ParamValue::Num(*weight_decay));
+    c.set("cfg.compute", ParamValue::Str(compute.name().to_string()));
+    c.set("cfg.workers", ParamValue::Num(*workers as f64));
+    c
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn expansion_is_last_axis_fastest() {
+        let spec = SweepSpec::new("t", "k")
+            .steps(2)
+            .axis("outer", strs(&["a", "b"]))
+            .axis("inner", nums(&[1, 2, 3]));
+        let cells = spec.expand().unwrap();
+        assert_eq!(cells.len(), 6);
+        assert_eq!(cells[0].req_str("outer").unwrap(), "a");
+        assert_eq!(cells[0].req_usize("inner").unwrap(), 1);
+        assert_eq!(cells[2].req_usize("inner").unwrap(), 3);
+        assert_eq!(cells[3].req_str("outer").unwrap(), "b");
+        for c in &cells {
+            assert_eq!(c.req_usize("steps").unwrap(), 2);
+            assert_eq!(c.req_u64("seed").unwrap(), 42);
+        }
+    }
+
+    #[test]
+    fn strategy_names_round_trip() {
+        for text in ["top1@kx", "top2@1x", "2top1@1x", "4top1@kx"] {
+            let (routing, mode) = parse_strategy(text).unwrap();
+            assert_eq!(strategy_name(routing, mode), text);
+        }
+        assert!(parse_strategy("top1").is_err());
+        assert!(parse_strategy("top1@2x").is_err());
+        assert!(parse_strategy("nope@kx").is_err());
+    }
+
+    #[test]
+    fn config_cell_sees_every_field() {
+        let base = crate::runtime::dispatch_bench::base_twin();
+        let a = config_cell(&base);
+        let mut edited = base.clone();
+        edited.capacity_factor = 2.0;
+        let b = config_cell(&edited);
+        assert_ne!(a.canonical(), b.canonical());
+        assert_eq!(a.canonical(), config_cell(&base).canonical());
+    }
+
+    #[test]
+    fn labels_follow_axis_order() {
+        let spec = SweepSpec::new("t", "k").axis("m", strs(&["x"])).axis("d", nums(&[4]));
+        let cells = spec.expand().unwrap();
+        assert_eq!(spec.label(&cells[0]), "x/4");
+    }
+}

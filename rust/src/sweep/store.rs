@@ -1,0 +1,167 @@
+//! Content-addressed experiment store.
+//!
+//! Layout: `<results>/store/<kind>/<key>/{cell.json, result.json}` where
+//! `key` is a 128-bit digest over `"{kind}\n{version}\n{canonical cell}"`.
+//! `result.json` is written last (via temp + rename), so its presence is
+//! the completion marker: a cell directory without a parseable result is
+//! treated as absent, which is exactly what makes interrupted sweeps
+//! resumable — re-running the spec skips finished cells and re-executes
+//! the partial one.
+//!
+//! `gc` prunes directories whose keys no longer appear in any supplied
+//! spec, and only scans the kinds those specs cover, so a bench-only gc
+//! can never touch training runs. Modeled on repx's lab/run/gc design.
+
+use std::collections::BTreeSet;
+use std::fs;
+use std::path::{Path, PathBuf};
+
+use anyhow::{Context, Result};
+
+use crate::sweep::spec::Cell;
+use crate::util::json::{self, Value};
+
+/// 64-bit FNV-1a over `bytes`, seeded with `basis`. The store key runs
+/// two passes with independent bases for a 128-bit address — FNV because
+/// the vendored dependency set has no hash crates, and collision
+/// resistance against *accidental* config aliasing (not adversaries) is
+/// all a local experiment cache needs.
+fn fnv1a(bytes: &[u8], basis: u64) -> u64 {
+    let mut h = basis;
+    for &b in bytes {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x0000_0100_0000_01b3);
+    }
+    h
+}
+
+/// Content address for a resolved cell: 32 hex chars over kind, code
+/// version tag, and the canonical (sorted-key) cell serialization.
+pub fn cell_key(kind: &str, version: &str, resolved: &Cell) -> String {
+    let payload = format!("{kind}\n{version}\n{}", resolved.canonical());
+    let a = fnv1a(payload.as_bytes(), 0xcbf2_9ce4_8422_2325);
+    let b = fnv1a(payload.as_bytes(), 0x9e37_79b9_7f4a_7c15);
+    format!("{a:016x}{b:016x}")
+}
+
+/// What a `gc` pass saw and did (or would do, under `--dry-run`).
+#[derive(Debug)]
+pub struct GcReport {
+    pub scanned: usize,
+    pub kept: usize,
+    pub pruned: Vec<PathBuf>,
+    pub dry_run: bool,
+}
+
+/// On-disk store handle rooted at `<results>/store`.
+#[derive(Debug, Clone)]
+pub struct Store {
+    root: PathBuf,
+}
+
+impl Store {
+    pub fn new(root: impl Into<PathBuf>) -> Self {
+        Self { root: root.into() }
+    }
+
+    pub fn root(&self) -> &Path {
+        &self.root
+    }
+
+    pub fn cell_dir(&self, kind: &str, key: &str) -> PathBuf {
+        self.root.join(kind).join(key)
+    }
+
+    /// Completed result for `key`, or `None` if the cell was never run,
+    /// was interrupted mid-write, or left an unparseable file behind.
+    pub fn lookup(&self, kind: &str, key: &str) -> Option<Value> {
+        let path = self.cell_dir(kind, key).join("result.json");
+        let text = fs::read_to_string(path).ok()?;
+        json::parse(&text).ok()
+    }
+
+    /// Record a completed cell. `cell.json` (provenance: the resolved
+    /// params behind the key) lands first; `result.json` lands last and
+    /// atomically, because it doubles as the completion marker.
+    pub fn insert(&self, kind: &str, key: &str, resolved: &Cell, result: &Value) -> Result<()> {
+        let dir = self.cell_dir(kind, key);
+        fs::create_dir_all(&dir).with_context(|| format!("creating {}", dir.display()))?;
+        write_atomic(&dir.join("cell.json"), &format!("{}\n", resolved.canonical()))?;
+        write_atomic(&dir.join("result.json"), &format!("{}\n", json::write(result)))?;
+        Ok(())
+    }
+
+    /// Prune cell directories whose `(kind, key)` is not in `live`.
+    /// Only the kinds named in `kinds` are scanned at all: a key can only
+    /// be declared dead by a spec set that actually covers its family.
+    pub fn gc(
+        &self,
+        live: &BTreeSet<(String, String)>,
+        kinds: &BTreeSet<String>,
+        dry_run: bool,
+    ) -> Result<GcReport> {
+        let mut report = GcReport { scanned: 0, kept: 0, pruned: Vec::new(), dry_run };
+        for kind in kinds {
+            let kind_dir = self.root.join(kind);
+            let entries = match fs::read_dir(&kind_dir) {
+                Ok(e) => e,
+                Err(_) => continue,
+            };
+            for entry in entries {
+                let entry = entry.with_context(|| format!("scanning {}", kind_dir.display()))?;
+                if !entry.path().is_dir() {
+                    continue;
+                }
+                report.scanned += 1;
+                let key = entry.file_name().to_string_lossy().into_owned();
+                if live.contains(&(kind.clone(), key)) {
+                    report.kept += 1;
+                } else {
+                    if !dry_run {
+                        fs::remove_dir_all(entry.path())
+                            .with_context(|| format!("pruning {}", entry.path().display()))?;
+                    }
+                    report.pruned.push(entry.path());
+                }
+            }
+        }
+        Ok(report)
+    }
+}
+
+/// Write via sibling temp file + rename so a crash mid-write can never
+/// leave a truncated-but-parseable file where a completed one should be.
+fn write_atomic(path: &Path, text: &str) -> Result<()> {
+    let tmp = path.with_extension("json.tmp");
+    fs::write(&tmp, text).with_context(|| format!("writing {}", tmp.display()))?;
+    fs::rename(&tmp, path)
+        .with_context(|| format!("renaming {} -> {}", tmp.display(), path.display()))?;
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sweep::spec::ParamValue;
+
+    fn cell(pairs: &[(&str, f64)]) -> Cell {
+        let mut c = Cell::new();
+        for (k, v) in pairs {
+            c.set(k, ParamValue::Num(*v));
+        }
+        c
+    }
+
+    #[test]
+    fn keys_depend_on_kind_version_and_content() {
+        let a = cell(&[("x", 1.0), ("y", 2.0)]);
+        let b = cell(&[("y", 2.0), ("x", 1.0)]);
+        assert_eq!(cell_key("k", "v1", &a), cell_key("k", "v1", &b));
+        assert_ne!(cell_key("k", "v1", &a), cell_key("k", "v2", &a));
+        assert_ne!(cell_key("k", "v1", &a), cell_key("j", "v1", &a));
+        assert_ne!(cell_key("k", "v1", &a), cell_key("k", "v1", &cell(&[("x", 1.0), ("y", 3.0)])));
+        let key = cell_key("k", "v1", &a);
+        assert_eq!(key.len(), 32);
+        assert!(key.chars().all(|c| c.is_ascii_hexdigit()));
+    }
+}

@@ -8,6 +8,8 @@
 
 use std::time::{Duration, Instant};
 
+use crate::util::stats::percentile;
+
 #[derive(Debug, Clone)]
 pub struct BenchResult {
     pub name: String,
@@ -82,14 +84,12 @@ fn bench_config<F: FnMut()>(
         }
         per_iter.push(t0.elapsed().as_nanos() as f64 / iters as f64);
     }
-    per_iter.sort_by(f64::total_cmp);
-    let pick = |p: f64| per_iter[((p * (per_iter.len() - 1) as f64).round()) as usize];
     BenchResult {
         name: name.to_string(),
         iters,
-        median_ns: pick(0.5),
-        p10_ns: pick(0.1),
-        p90_ns: pick(0.9),
+        median_ns: percentile(&per_iter, 50.0),
+        p10_ns: percentile(&per_iter, 10.0),
+        p90_ns: percentile(&per_iter, 90.0),
     }
 }
 

@@ -67,6 +67,28 @@ impl Value {
         self.get(key)
             .ok_or_else(|| JsonError::new(format!("missing required key {key:?}"), 0))
     }
+    /// Required string field — for rebuilding rows from stored documents.
+    pub fn req_str(&self, key: &str) -> Result<&str, JsonError> {
+        self.req(key)?
+            .as_str()
+            .ok_or_else(|| JsonError::new(format!("key {key:?} is not a string"), 0))
+    }
+    /// Required numeric field; see [`Value::req_str`].
+    pub fn req_f64(&self, key: &str) -> Result<f64, JsonError> {
+        self.req(key)?
+            .as_f64()
+            .ok_or_else(|| JsonError::new(format!("key {key:?} is not a number"), 0))
+    }
+    /// Required non-negative integer field; see [`Value::req_str`].
+    pub fn req_usize(&self, key: &str) -> Result<usize, JsonError> {
+        self.req(key)?
+            .as_usize()
+            .ok_or_else(|| JsonError::new(format!("key {key:?} is not a non-negative integer"), 0))
+    }
+    /// Required u64 field; see [`Value::req_str`].
+    pub fn req_u64(&self, key: &str) -> Result<u64, JsonError> {
+        Ok(self.req_usize(key)? as u64)
+    }
 }
 
 #[derive(Debug)]

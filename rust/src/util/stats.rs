@@ -91,6 +91,38 @@ pub fn percentile(xs: &[f64], p: f64) -> f64 {
     v[rank.min(v.len() - 1)]
 }
 
+/// Median of a timing series. Thin [`percentile`] wrapper so every
+/// harness spells "p50" the same way (nearest-rank, NaN-tolerant).
+pub fn p50(xs: &[f64]) -> f64 {
+    percentile(xs, 50.0)
+}
+
+/// Tail latency of a timing series; see [`p50`].
+pub fn p95(xs: &[f64]) -> f64 {
+    percentile(xs, 95.0)
+}
+
+/// Normalize a raw per-step timing series for percentile reads: drop the
+/// first `warmup` samples (cold caches, lazy init) and sort ascending.
+/// Every bench harness used to hand-roll this skip-sort pair.
+pub fn timing_series(samples: impl IntoIterator<Item = f64>, warmup: usize) -> Vec<f64> {
+    let mut ms: Vec<f64> = samples.into_iter().skip(warmup).collect();
+    ms.sort_by(f64::total_cmp);
+    ms
+}
+
+/// Time `f` with one untimed warmup call followed by `reps` timed calls;
+/// returns the sorted per-call milliseconds (feed to [`p50`] / [`p95`]).
+pub fn measure_fn_ms(reps: usize, mut f: impl FnMut()) -> Vec<f64> {
+    f();
+    let raw = (0..reps).map(|_| {
+        let t0 = std::time::Instant::now();
+        f();
+        t0.elapsed().as_secs_f64() * 1e3
+    });
+    timing_series(raw, 0)
+}
+
 /// Least-squares fit of y = a + b x. Returns (a, b).
 pub fn linear_fit(xs: &[f64], ys: &[f64]) -> (f64, f64) {
     assert_eq!(xs.len(), ys.len());
@@ -171,6 +203,23 @@ mod tests {
         assert!(percentile(&xs, 100.0).is_nan(), "NaN occupies the top rank");
         // all-NaN input still must not panic
         assert!(percentile(&[f64::NAN, f64::NAN], 50.0).is_nan());
+    }
+
+    #[test]
+    fn timing_series_skips_warmup_and_sorts() {
+        let ms = timing_series([9.0, 3.0, 1.0, 2.0], 1);
+        assert_eq!(ms, vec![1.0, 2.0, 3.0]);
+        assert_eq!(p50(&ms), 2.0);
+        assert!(timing_series([5.0], 1).is_empty());
+    }
+
+    #[test]
+    fn measure_fn_ms_calls_warmup_plus_reps() {
+        let mut calls = 0;
+        let ms = measure_fn_ms(4, || calls += 1);
+        assert_eq!(calls, 5, "one warmup call plus four timed reps");
+        assert_eq!(ms.len(), 4);
+        assert!(ms.windows(2).all(|w| w[0] <= w[1]));
     }
 
     #[test]

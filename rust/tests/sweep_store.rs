@@ -1,0 +1,275 @@
+//! Sweep-engine integration tests: spec parse/expand round-trips (and
+//! loud rejection of malformed specs), content-address stability across
+//! field ordering, resume-skips-completed-cells, gc never deleting a
+//! live cell, and the `experiments::Runner` stale-cache regression — a
+//! config edit must change the address and force a re-train.
+
+use std::collections::BTreeSet;
+use std::fs;
+use std::path::PathBuf;
+use std::sync::atomic::{AtomicUsize, Ordering};
+
+use anyhow::{ensure, Result};
+
+use m6t::config::ModelConfig;
+use m6t::experiments::Runner;
+use m6t::runtime::native::{registry, variant_info};
+use m6t::runtime::{Backend, BackendProvider, NativeBackend, VariantInfo};
+use m6t::sweep::{self, cell_key, nums, Cell, CellRunner, Engine, ParamValue, SweepSpec};
+use m6t::util::json::{self, num, obj, Value};
+
+/// A fresh per-test results dir under the system temp root.
+fn temp_results(tag: &str) -> PathBuf {
+    let dir = std::env::temp_dir().join(format!("m6t-sweep-{tag}-{}", std::process::id()));
+    let _ = fs::remove_dir_all(&dir);
+    dir
+}
+
+/// Deterministic fake executor: doubles `x`, counting real executions so
+/// tests can distinguish store hits from re-runs.
+struct CountingRunner {
+    runs: AtomicUsize,
+}
+
+impl CountingRunner {
+    fn new() -> Self {
+        Self { runs: AtomicUsize::new(0) }
+    }
+}
+
+impl CellRunner for CountingRunner {
+    fn kind(&self) -> &'static str {
+        "fake"
+    }
+
+    fn version(&self) -> &'static str {
+        "fake-v1"
+    }
+
+    fn resolve(&self, cell: &Cell) -> Result<Cell> {
+        Ok(cell.clone())
+    }
+
+    fn run(&self, cell: &Cell) -> Result<Value> {
+        self.runs.fetch_add(1, Ordering::SeqCst);
+        let x = cell.req_f64("x")?;
+        Ok(obj(vec![("doubled", num(x * 2.0))]))
+    }
+}
+
+fn fake_spec() -> SweepSpec {
+    SweepSpec::new("fake-sweep", "fake").steps(1).axis("x", nums(&[1, 2, 3]))
+}
+
+#[test]
+fn spec_json_roundtrip_and_expansion() {
+    let spec = SweepSpec::new("demo", "fake")
+        .steps(3)
+        .seed(7)
+        .fix("model", ParamValue::Str("base".into()))
+        .axis("x", nums(&[1, 2]))
+        .axis("y", nums(&[10, 20, 30]));
+    let back = SweepSpec::parse(&json::write(&spec.to_json())).expect("round-trip");
+    assert_eq!(back, spec);
+    let cells = back.expand().expect("expand");
+    assert_eq!(cells.len(), 6);
+    // last axis fastest; every cell carries the fixed + reserved params
+    assert_eq!(cells[0].req_usize("y").unwrap(), 10);
+    assert_eq!(cells[1].req_usize("y").unwrap(), 20);
+    assert_eq!(cells[3].req_usize("x").unwrap(), 2);
+    for c in &cells {
+        assert_eq!(c.req_str("model").unwrap(), "base");
+        assert_eq!(c.req_usize("steps").unwrap(), 3);
+        assert_eq!(c.req_u64("seed").unwrap(), 7);
+    }
+}
+
+#[test]
+fn malformed_specs_are_rejected() {
+    // a minimal valid spec, to guard the harness itself
+    assert!(SweepSpec::parse(r#"{"name": "d", "kind": "f"}"#).is_ok());
+    let cases = [
+        ("missing name", r#"{"kind": "f"}"#),
+        ("missing kind", r#"{"name": "d"}"#),
+        ("unknown top-level key", r#"{"name": "d", "kind": "f", "grid": []}"#),
+        ("zero steps", r#"{"name": "d", "kind": "f", "steps": 0}"#),
+        ("axes not an array", r#"{"name": "d", "kind": "f", "axes": {}}"#),
+        ("axis missing values", r#"{"name": "d", "kind": "f", "axes": [{"name": "x"}]}"#),
+        ("empty axis", r#"{"name": "d", "kind": "f", "axes": [{"name": "x", "values": []}]}"#),
+        (
+            "duplicate axis",
+            r#"{"name": "d", "kind": "f",
+                "axes": [{"name": "x", "values": [1]}, {"name": "x", "values": [2]}]}"#,
+        ),
+        (
+            "axis shadows reserved key",
+            r#"{"name": "d", "kind": "f", "axes": [{"name": "steps", "values": [1]}]}"#,
+        ),
+        (
+            "fixed shadows reserved key",
+            r#"{"name": "d", "kind": "f", "fixed": {"seed": 1}}"#,
+        ),
+        (
+            "fixed collides with axis",
+            r#"{"name": "d", "kind": "f", "fixed": {"x": 1},
+                "axes": [{"name": "x", "values": [1]}]}"#,
+        ),
+        (
+            "non-scalar axis value",
+            r#"{"name": "d", "kind": "f", "axes": [{"name": "x", "values": [[1]]}]}"#,
+        ),
+        (
+            "unknown axis key",
+            r#"{"name": "d", "kind": "f", "axes": [{"name": "x", "values": [1], "step": 2}]}"#,
+        ),
+    ];
+    for (what, text) in cases {
+        assert!(SweepSpec::parse(text).is_err(), "{what} should be rejected");
+    }
+}
+
+#[test]
+fn store_keys_ignore_field_order_but_see_values() {
+    let cell = |text: &str| Cell::from_json(&json::parse(text).expect("json")).expect("cell");
+    let a = cell(r#"{"a": 1, "b": "x", "c": true}"#);
+    let b = cell(r#"{"c": true, "b": "x", "a": 1}"#);
+    assert_eq!(cell_key("k", "v1", &a), cell_key("k", "v1", &b), "field order must not matter");
+    let edited = cell(r#"{"a": 2, "b": "x", "c": true}"#);
+    assert_ne!(cell_key("k", "v1", &a), cell_key("k", "v1", &edited));
+    assert_ne!(cell_key("k", "v1", &a), cell_key("k", "v2", &a), "version tag is part of the key");
+    assert_ne!(cell_key("k", "v1", &a), cell_key("other", "v1", &a), "kind is part of the key");
+}
+
+#[test]
+fn resume_skips_completed_cells() {
+    let results = temp_results("resume");
+    let engine = Engine::new(&results).verbose(false);
+    let runner = CountingRunner::new();
+    let spec = fake_spec();
+
+    let first = engine.run_spec(&spec, &runner).expect("first run");
+    assert_eq!(first.executed(), 3);
+    assert_eq!(first.hits(), 0);
+    assert_eq!(runner.runs.load(Ordering::SeqCst), 3);
+
+    let second = engine.run_spec(&spec, &runner).expect("second run");
+    assert_eq!(second.executed(), 0);
+    assert_eq!(second.hits(), 3);
+    assert_eq!(runner.runs.load(Ordering::SeqCst), 3, "identical sweep must be zero re-runs");
+    for (f, s) in first.outcomes.iter().zip(&second.outcomes) {
+        assert_eq!(f.key, s.key);
+        assert_eq!(json::write(&f.result), json::write(&s.result));
+    }
+
+    // deleting one completion marker re-runs exactly that cell
+    let victim = engine.store().cell_dir("fake", &first.outcomes[1].key);
+    fs::remove_file(victim.join("result.json")).expect("remove completion marker");
+    let third = engine.run_spec(&spec, &runner).expect("third run");
+    assert_eq!(third.executed(), 1);
+    assert_eq!(third.hits(), 2);
+    assert_eq!(runner.runs.load(Ordering::SeqCst), 4);
+    let _ = fs::remove_dir_all(&results);
+}
+
+#[test]
+fn gc_prunes_only_dead_cells() {
+    let results = temp_results("gc");
+    let engine = Engine::new(&results).verbose(false);
+    let runner = CountingRunner::new();
+    let spec = fake_spec();
+    engine.run_spec(&spec, &runner).expect("seed the store");
+
+    // an orphan cell in the covered kind, and a foreign kind no spec covers
+    let store = engine.store();
+    let mut orphan = Cell::new();
+    orphan.set("x", ParamValue::Num(99.0));
+    let orphan_key = cell_key("fake", "fake-v1", &orphan);
+    let doubled = obj(vec![("doubled", num(198.0))]);
+    store.insert("fake", &orphan_key, &orphan, &doubled).expect("insert orphan");
+    let loss = obj(vec![("loss", num(1.0))]);
+    store.insert("train", "00aa", &orphan, &loss).expect("insert foreign kind");
+
+    let live = sweep::live_keys(&spec, &runner).expect("live keys");
+    let kinds: BTreeSet<String> = ["fake".to_string()].into_iter().collect();
+
+    let dry = store.gc(&live, &kinds, true).expect("dry run");
+    assert_eq!(dry.scanned, 4);
+    assert_eq!(dry.kept, 3);
+    assert_eq!(dry.pruned.len(), 1);
+    assert!(store.lookup("fake", &orphan_key).is_some(), "dry-run must not delete");
+
+    let real = store.gc(&live, &kinds, false).expect("gc");
+    assert_eq!(real.kept, 3);
+    assert_eq!(real.pruned.len(), 1);
+    assert!(store.lookup("fake", &orphan_key).is_none(), "orphan must be pruned");
+    assert!(store.lookup("train", "00aa").is_some(), "foreign kind untouched");
+
+    // every live cell still serves from the store afterwards
+    let after = engine.run_spec(&spec, &runner).expect("after gc");
+    assert_eq!(after.hits(), 3);
+    assert_eq!(runner.runs.load(Ordering::SeqCst), 3);
+    let _ = fs::remove_dir_all(&results);
+}
+
+#[test]
+fn builtin_specs_expand_and_resolve() {
+    let mut addresses = BTreeSet::new();
+    for name in sweep::BUILTIN_SPECS {
+        let spec = sweep::builtin_spec(name, Some(2)).expect("builtin spec");
+        assert_eq!(spec.kind, name);
+        let runner = sweep::runner_for(&spec.kind).expect("runner");
+        let cells = spec.expand().expect("expand");
+        assert!(!cells.is_empty(), "{name} expands to no cells");
+        for cell in &cells {
+            let key = sweep::address(runner.as_ref(), cell).expect("address");
+            assert!(addresses.insert(key), "duplicate address in {name}");
+        }
+    }
+}
+
+/// A provider over one mutable config — the knob the old filename cache
+/// could not see.
+struct OneVariantProvider {
+    cfg: ModelConfig,
+}
+
+impl BackendProvider for OneVariantProvider {
+    fn names(&self) -> Vec<String> {
+        vec![self.cfg.name.clone()]
+    }
+
+    fn info(&self, name: &str) -> Result<VariantInfo> {
+        ensure!(name == self.cfg.name, "unknown variant {name:?}");
+        Ok(variant_info(&self.cfg))
+    }
+
+    fn load(&self, name: &str) -> Result<Box<dyn Backend>> {
+        ensure!(name == self.cfg.name, "unknown variant {name:?}");
+        Ok(Box::new(NativeBackend::new(&self.cfg)))
+    }
+}
+
+#[test]
+fn runner_rebuilds_when_the_variant_config_changes() {
+    let results = temp_results("runner");
+    let cfg = registry().into_iter().find(|c| c.name == "base-sim").expect("registry geometry");
+
+    let provider = OneVariantProvider { cfg: cfg.clone() };
+    let mut runner = Runner::new(&provider, &results);
+    runner.verbose = false;
+    let (_, cached) = runner.run_traced("base-sim", 2).expect("first train");
+    assert!(!cached, "fresh store must train");
+    let (_, cached) = runner.run_traced("base-sim", 2).expect("second train");
+    assert!(cached, "identical config must be a store hit");
+
+    // the old filename cache keyed only (variant, steps, seed); the
+    // content address must see this config edit and re-train
+    let mut edited = cfg;
+    edited.capacity_factor = 2.0;
+    let provider = OneVariantProvider { cfg: edited };
+    let mut runner = Runner::new(&provider, &results);
+    runner.verbose = false;
+    let (_, cached) = runner.run_traced("base-sim", 2).expect("train after config edit");
+    assert!(!cached, "stale cache: a config edit did not change the address");
+    let _ = fs::remove_dir_all(&results);
+}
