@@ -1,6 +1,6 @@
 # Convenience targets; tier-1 verify is `cargo build --release && cargo test -q`.
 
-.PHONY: build test fmt lint lint-unsafe miri tsan run report artifacts smoke bench-step bench-overlap bench-ffn sweep sweep-gc
+.PHONY: build test fmt lint lint-unsafe miri tsan run report artifacts smoke bench-step bench-overlap bench-ffn bench-elastic bench-placement sweep sweep-gc
 
 build:
 	cargo build --release
@@ -61,6 +61,19 @@ bench-overlap:
 bench-ffn:
 	cargo run --release -- bench --ffn
 
+# Elastic-capacity grid (skewed base-twin x D in {4, 8}): static vs
+# elastic drop rates at the same slot budget. Rides in the dispatch
+# suite's BENCH_dispatch.json (`elastic_rows`, `max_elastic_drop_delta`).
+bench-elastic:
+	cargo run --release -- sweep elastic
+
+# Topology-aware placement grid ({base, large-sim} x D in {4, 8},
+# hierarchical): greedy+swap search vs the identity layout. Rides in the
+# overlap suite's BENCH_overlap.json (`placement_rows`,
+# `min_placement_gain`, `max_placement_share_delta`).
+bench-placement:
+	cargo run --release -- sweep placement
+
 # Run every builtin bench family through the sweep engine's
 # content-addressed store (results/store): completed cells are served from
 # the store, so a re-run after an interruption only executes what's
@@ -70,6 +83,8 @@ sweep:
 	cargo run --release -- sweep step
 	cargo run --release -- sweep overlap
 	cargo run --release -- sweep ffn
+	cargo run --release -- sweep elastic
+	cargo run --release -- sweep placement
 
 # Prune store cells whose address no longer appears in any builtin spec
 # (training runs are never scanned by a bench-only gc).

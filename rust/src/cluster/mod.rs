@@ -23,8 +23,10 @@ use anyhow::{bail, Result};
 use crate::config::{CapacityMode, ModelConfig, Routing};
 use crate::flops::forward_flops;
 
+pub mod placement;
 pub mod topology;
 
+pub use placement::PlacementStrategy;
 pub use topology::{simulate_step_overlapped, OverlapOutcome, Topology};
 
 /// Hardware + framework constants of one simulated worker.

@@ -151,19 +151,12 @@ impl ModelConfig {
     pub fn tokens_per_batch(&self) -> usize {
         self.batch * self.seq_len()
     }
-    /// Per-expert capacity C (Eq. 2) under the configured policy.
-    pub fn capacity(&self) -> usize {
-        let k_eff = match self.capacity_mode {
-            CapacityMode::TimesK => self.routing.k() as f64,
-            CapacityMode::Times1 => 1.0,
-        };
-        let c = k_eff * self.tokens_per_batch() as f64 / self.num_experts as f64
-            * self.capacity_factor;
-        (c.ceil() as usize).max(1)
-    }
-    /// Capacity with an explicit override of routing/capacity-mode — used by
-    /// the FLOPs/simulator sweeps so one preset covers all five strategies.
-    pub fn capacity_for(&self, routing: Routing, mode: CapacityMode) -> usize {
+    /// Eq. 2 evaluated once: `C = ceil(k_eff · T / E · γ)`, floored at one
+    /// slot. The single static baseline every capacity consumer shares —
+    /// the two public entry points below both route through here, and the
+    /// elastic controller (`moe::capacity`) diverges from exactly this
+    /// value, so the formula can no longer drift between call sites.
+    fn eq2_capacity(&self, routing: Routing, mode: CapacityMode) -> usize {
         let k_eff = match mode {
             CapacityMode::TimesK => routing.k() as f64,
             CapacityMode::Times1 => 1.0,
@@ -171,6 +164,15 @@ impl ModelConfig {
         let c = k_eff * self.tokens_per_batch() as f64 / self.num_experts as f64
             * self.capacity_factor;
         (c.ceil() as usize).max(1)
+    }
+    /// Per-expert capacity C (Eq. 2) under the configured policy.
+    pub fn capacity(&self) -> usize {
+        self.eq2_capacity(self.routing, self.capacity_mode)
+    }
+    /// Capacity with an explicit override of routing/capacity-mode — used by
+    /// the FLOPs/simulator sweeps so one preset covers all five strategies.
+    pub fn capacity_for(&self, routing: Routing, mode: CapacityMode) -> usize {
+        self.eq2_capacity(routing, mode)
     }
     /// Exact parameter count — mirrors `ModelConfig.param_count()` in python
     /// (asserted equal in the integration tests via the manifest).

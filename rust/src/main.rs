@@ -139,13 +139,30 @@ fn cmd_run(rest: &[String]) -> Result<()> {
             "node grouping for the hierarchical link model (1 = flat)",
         )
         .flag("no-overlap", "report only the serial (pre-overlap) cluster model")
+        .flag(
+            "elastic-capacity",
+            "adapt per-shard expert capacity to measured demand at a fixed slot budget \
+             (simulated compute only)",
+        )
+        .opt_default(
+            "placement",
+            "identity",
+            "expert-shard placement search over measured traffic: identity|greedy|swap",
+        )
         .flag("quiet", "suppress progress lines");
     let args = parse(cmd, rest)?;
     let workers: usize = args.get_or("workers", 1usize).map_err(anyhow::Error::msg)?;
     if workers == 0 {
         anyhow::bail!("--workers must be at least 1");
     }
-    if workers > 1 {
+    let placement = m6t::cluster::PlacementStrategy::parse(args.get("placement").unwrap())?;
+    // Elastic capacity and placement both live in the sharded runtime;
+    // at D=1 the sharded path is bitwise-equal to the native backend, so
+    // routing through it is a pure superset.
+    if workers > 1
+        || args.flag("elastic-capacity")
+        || placement != m6t::cluster::PlacementStrategy::Identity
+    {
         return cmd_run_sharded(&args, workers);
     }
     let provider = NativeProvider::new();
@@ -206,6 +223,12 @@ fn cmd_run_sharded(args: &m6t::util::cli::Args, workers: usize) -> Result<()> {
     }
     let mut run = ShardedRun::new(&cfg, workers)?;
     run.set_workers_per_node(wpn);
+    let elastic = args.flag("elastic-capacity");
+    if elastic {
+        run.set_elastic_capacity(true)?;
+    }
+    let placement = m6t::cluster::PlacementStrategy::parse(args.get("placement").unwrap())?;
+    run.set_placement(placement);
     let topo = run.topology();
     eprintln!(
         "[m6t] {} — sharded: D={} workers, E={} ({} experts/shard), C={} per worker, {} routing, {} topology",
@@ -217,6 +240,13 @@ fn cmd_run_sharded(args: &m6t::util::cli::Args, workers: usize) -> Result<()> {
         cfg.routing.name(),
         topo.name(),
     );
+    if elastic || placement != m6t::cluster::PlacementStrategy::Identity {
+        eprintln!(
+            "[m6t] elastic capacity: {}, placement: {}",
+            if elastic { "on" } else { "off" },
+            placement.name(),
+        );
+    }
     let steps: i64 = args.get_or("steps", 40i64).map_err(anyhow::Error::msg)?;
     let seed: u64 = args.get_or("seed", 42u64).map_err(anyhow::Error::msg)?;
     let mut log = RunLog::new(format!("{name}-d{workers}"));
@@ -237,6 +267,23 @@ fn cmd_run_sharded(args: &m6t::util::cli::Args, workers: usize) -> Result<()> {
             .zip(&dsp.per_shard_dropped)
             .map(|(&recv, &drop)| format!("{:.3}", drop / (recv + drop).max(1.0)))
             .collect();
+        if dsp.elastic {
+            println!(
+                "elastic capacity:            C in [{}, {}] per (layer, shard), budget {} slots/layer",
+                dsp.capacity_min,
+                dsp.capacity_max,
+                workers * run.info().capacity
+            );
+        }
+        if placement != m6t::cluster::PlacementStrategy::Identity {
+            println!(
+                "expert placement:            {} search, {:.2}x bottleneck gain, placed link share {:.3} (identity {:.3})",
+                placement.name(),
+                dsp.placement_gain,
+                dsp.placed_link_share,
+                dsp.bottleneck_link_share()
+            );
+        }
         println!("cross-worker load c_v:       {:.3}", dsp.shard_load_cv);
         println!("per-worker dropped tokens:   [{}]", fmt0(&dsp.per_worker_dropped));
         println!("per-shard recv tokens:       [{}]", fmt0(&dsp.per_shard_recv));
@@ -436,17 +483,28 @@ fn cmd_bench_routing(args: &m6t::util::cli::Args) -> Result<()> {
 /// {base, 10B geometry twins} x {top1, top2, 2top1} x D in {1, 4, 8}:
 /// measured host ms/step, cross-worker load c_v, drop rates, measured
 /// all-to-all bytes, and the cluster model's analytic-vs-observed gap.
-/// Writes BENCH_dispatch.json at the repo root by default.
+/// Also runs the elastic-capacity grid (skewed base-twin x D in {4, 8}):
+/// static-vs-elastic drop rates at the same slot budget, whose
+/// `max_elastic_drop_delta` field is a CI regression gate (<= 0.0 —
+/// elastic must never drop more tokens than static). Writes
+/// BENCH_dispatch.json at the repo root by default.
 fn cmd_bench_dispatch(args: &m6t::util::cli::Args) -> Result<()> {
     use m6t::runtime::dispatch_bench;
     let steps: usize = args.get_or("steps", 12usize).map_err(anyhow::Error::msg)?;
     let out_path = args.get("dispatch-out").unwrap().to_string();
     eprintln!("[bench] sharded dispatch suite, {steps} steps per cell");
-    let (rows, outcome) = dispatch_bench::run_suite(&bench_engine(args), steps)?;
-    let mut doc = dispatch_bench::to_json(&rows, steps);
+    let engine = bench_engine(args);
+    let (rows, outcome) = dispatch_bench::run_suite(&engine, steps)?;
+    let (erows, _elastic_outcome) = dispatch_bench::run_elastic_suite(&engine, steps)?;
+    let mut doc = dispatch_bench::to_json(&rows, &erows, steps);
     sweep::attach_provenance(&mut doc, &outcome);
     report::emit(out_format(args)?, &dispatch_bench::render_table(&rows), Some(&doc));
+    report::emit(out_format(args)?, &dispatch_bench::render_elastic_table(&erows), None);
     report::write_doc(&doc, &out_path)?;
+    eprintln!(
+        "[bench] max elastic drop delta: {:+.4}",
+        erows.iter().map(|r| r.drop_delta).fold(f64::NEG_INFINITY, f64::max)
+    );
     eprintln!("[bench] wrote {out_path}");
     Ok(())
 }
@@ -482,21 +540,34 @@ fn cmd_bench_step(args: &m6t::util::cli::Args) -> Result<()> {
 /// overlap efficiency, and per-cell bottleneck-link concentration.
 /// Writes BENCH_overlap.json at the repo root by default; its
 /// `min_overlap_speedup` field is a CI regression gate (>= 1.0 is
-/// structural — below it the cost model broke).
+/// structural — below it the cost model broke). Also runs the
+/// topology-aware placement grid ({base, large-sim} x D in {4, 8},
+/// hierarchical): greedy+swap search vs the identity layout, whose
+/// `min_placement_gain` (>= 1.0) and `max_placement_share_delta`
+/// (<= 0.0) fields are CI regression gates — both structural, since the
+/// search falls back to identity when no dominating assignment exists.
 fn cmd_bench_overlap(args: &m6t::util::cli::Args) -> Result<()> {
     use m6t::runtime::overlap_bench;
     let steps: usize = args.get_or("steps", 12usize).map_err(anyhow::Error::msg)?;
     let out_path = args.get("overlap-out").unwrap().to_string();
     eprintln!("[bench] overlap/topology suite, {steps} steps per cell");
-    let (rows, outcome) = overlap_bench::run_suite(&bench_engine(args), steps)?;
-    let mut doc = overlap_bench::to_json(&rows, steps);
+    let engine = bench_engine(args);
+    let (rows, outcome) = overlap_bench::run_suite(&engine, steps)?;
+    let (prows, _placement_outcome) = overlap_bench::run_placement_suite(&engine, steps)?;
+    let mut doc = overlap_bench::to_json(&rows, &prows, steps);
     sweep::attach_provenance(&mut doc, &outcome);
     report::emit(out_format(args)?, &overlap_bench::render_table(&rows, steps), Some(&doc));
+    report::emit(out_format(args)?, &overlap_bench::render_placement_table(&prows), None);
     report::write_doc(&doc, &out_path)?;
     eprintln!(
         "[bench] min overlap speedup: {:.2}x, max bottleneck link share: {:.2}",
         overlap_bench::min_overlap_speedup(&rows),
         overlap_bench::max_bottleneck_link_share(&rows)
+    );
+    eprintln!(
+        "[bench] min placement gain: {:.2}x, max placement share delta: {:+.4}",
+        overlap_bench::min_placement_gain(&prows),
+        overlap_bench::max_placement_share_delta(&prows)
     );
     eprintln!("[bench] wrote {out_path}");
     Ok(())
@@ -524,7 +595,8 @@ fn cmd_bench_ffn(args: &m6t::util::cli::Args) -> Result<()> {
     Ok(())
 }
 
-/// `m6t sweep <dispatch|step|overlap|ffn|spec.json>` — run a declarative
+/// `m6t sweep <dispatch|step|overlap|ffn|elastic|placement|spec.json>` —
+/// run a declarative
 /// grid through the content-addressed experiment store: cells whose
 /// address already holds a completed result are served from the store, so
 /// re-invoking an identical sweep performs zero re-runs and an
@@ -545,7 +617,9 @@ fn cmd_sweep(rest: &[String]) -> Result<()> {
         .positional
         .first()
         .ok_or_else(|| {
-            anyhow::anyhow!("usage: m6t sweep <dispatch|step|overlap|ffn|spec.json|gc>")
+            anyhow::anyhow!(
+                "usage: m6t sweep <dispatch|step|overlap|ffn|elastic|placement|spec.json|gc>"
+            )
         })?
         .clone();
     if which == "gc" {
@@ -598,7 +672,14 @@ fn render_outcome(outcome: &sweep::SweepOutcome) -> Result<(Table, Value)> {
     match outcome.kind.as_str() {
         "dispatch" => {
             let rows = dispatch_bench::rows_from(outcome)?;
-            Ok((dispatch_bench::render_table(&rows), dispatch_bench::to_json(&rows, steps)))
+            Ok((dispatch_bench::render_table(&rows), dispatch_bench::to_json(&rows, &[], steps)))
+        }
+        "elastic" => {
+            let rows = dispatch_bench::elastic_rows_from(outcome)?;
+            Ok((
+                dispatch_bench::render_elastic_table(&rows),
+                dispatch_bench::to_json(&[], &rows, steps),
+            ))
         }
         "step" => {
             let rows = step_bench::rows_from(outcome)?;
@@ -606,7 +687,17 @@ fn render_outcome(outcome: &sweep::SweepOutcome) -> Result<(Table, Value)> {
         }
         "overlap" => {
             let rows = overlap_bench::rows_from(outcome)?;
-            Ok((overlap_bench::render_table(&rows, steps), overlap_bench::to_json(&rows, steps)))
+            Ok((
+                overlap_bench::render_table(&rows, steps),
+                overlap_bench::to_json(&rows, &[], steps),
+            ))
+        }
+        "placement" => {
+            let rows = overlap_bench::placement_rows_from(outcome)?;
+            Ok((
+                overlap_bench::render_placement_table(&rows),
+                overlap_bench::to_json(&[], &rows, steps),
+            ))
         }
         "ffn" => {
             let rows = ffn_bench::rows_from(outcome)?;

@@ -152,6 +152,14 @@ impl RunLog {
                 fields.push(("observed_ms", num(dsp.observed_ms)));
                 fields.push(("overlap_ms", num(dsp.observed_overlap_ms)));
                 fields.push(("overlap_eff", num(dsp.overlap_efficiency)));
+                // elastic-capacity + placement series: the capacity span
+                // the controller assigned this step and how the placed
+                // layout priced against the identity layout
+                fields.push(("elastic", num(if dsp.elastic { 1.0 } else { 0.0 })));
+                fields.push(("cap_min", num(dsp.capacity_min as f64)));
+                fields.push(("cap_max", num(dsp.capacity_max as f64)));
+                fields.push(("placement_gain", num(dsp.placement_gain)));
+                fields.push(("placed_link_share", num(dsp.placed_link_share)));
                 fields.push((
                     "worker_dropped",
                     arr(dsp.per_worker_dropped.iter().map(|&x| num(x)).collect()),
@@ -432,6 +440,7 @@ mod tests {
             per_shard_recv: vec![10.0, 20.0, 30.0, 40.0],
             per_shard_dropped: vec![0.0; 4],
             a2a_bytes_per_layer: 1024.0,
+            a2a_bytes_total: 1024.0,
             a2a_bytes_step: 4096.0,
             cross_fraction: 0.75,
             drop_fraction: 0.1,
@@ -441,6 +450,11 @@ mod tests {
             observed_ms: 123.0,
             observed_overlap_ms: 100.0,
             overlap_efficiency: 0.8,
+            elastic: true,
+            capacity_min: 12,
+            capacity_max: 28,
+            placement_gain: 1.25,
+            placed_link_share: 0.4,
         });
         let mut log = RunLog::new("dsp").with_sink(&dir).unwrap();
         log.push(0, &s, 1.0).unwrap();
@@ -455,6 +469,11 @@ mod tests {
             "\"overlap_ms\":100",
             "\"overlap_eff\":0.8",
             "\"max_link_bytes\":512",
+            "\"elastic\":1",
+            "\"cap_min\":12",
+            "\"cap_max\":28",
+            "\"placement_gain\":1.25",
+            "\"placed_link_share\":0.4",
             "\"worker_dropped\"",
             "\"shard_recv\"",
         ];

@@ -1,0 +1,374 @@
+//! Elastic per-(layer, shard) expert capacity under a fixed slot budget.
+//!
+//! The static runtime prices every expert with one Eq.-2 capacity
+//! `C = ceil(k_eff·T/E·γ)` ([`ModelConfig::capacity`]): hot experts drop
+//! the demand above `C` while cold experts pad their unused slots — the
+//! drop/padding trade Switch Transformers measures empirically with the
+//! capacity *factor*. This module makes the knob adaptive per (layer,
+//! shard) without spending any extra compute: a controller consumes the
+//! exact per-expert demand histograms the dispatch plan already emits,
+//! and reallocates whole slots from padding-dominated shards to
+//! drop-dominated ones under the hard budget
+//!
+//! ```text
+//!   Σ_s caps[l][s] = D · C      (every layer l, caps[l][s] >= 1)
+//! ```
+//!
+//! so the per-worker slot total `Σ_e caps[shard(e)] = E·C` — and with it
+//! the padded expert-compute cost — is exactly the static path's.
+//!
+//! **Controller law.** Per (layer, expert) the controller tracks an EMA
+//! (β = 0.5) of the worst-case demand across workers, and takes the
+//! conservative estimate `est = ceil(max(ema, last))` (growth is
+//! immediate, shrink is EMA-gradual). Each layer's capacities are then
+//! re-derived from scratch by greedy water-filling, warm-started at the
+//! static `C`: repeatedly move one slot from the shard where removing it
+//! strands the fewest estimated tokens (`loss = #{e in s : est_e >=
+//! cap_s}`) to the shard where adding it recovers the most (`gain =
+//! #{e in s : est_e >= cap_s + 1}`), while `gain > loss`. Every move
+//! strictly reduces estimated drops, so — with demand estimated exactly —
+//! elastic drops are never worse than static drops; ties break on the
+//! lowest shard index and the procedure is single-threaded, so the caps
+//! are a deterministic pure function of the (seeded) demand history.
+//!
+//! The controller is *off* by default: [`runtime::shard::ShardedRun`]
+//! (`crate::runtime::shard`) only consults it behind
+//! `set_elastic_capacity(true)`, and the static path stays the bitwise
+//! oracle every determinism test pins.
+#![forbid(unsafe_code)]
+
+use anyhow::{bail, Result};
+
+/// EMA decay of the per-expert worst-case demand tracker. 0.5 keeps the
+/// controller responsive within a handful of steps (benches run tens of
+/// steps) while still smoothing single-step routing noise.
+pub const DEMAND_EMA_BETA: f64 = 0.5;
+
+/// Per-(layer, shard) capacity controller. See the module docs for the
+/// law; [`ElasticCapacity::observe`] ingests one step's demand,
+/// [`ElasticCapacity::caps_layer`] exposes the capacities to apply on the
+/// *next* step (capacities are always derived from strictly earlier
+/// steps, so applying them is causal and replay-deterministic).
+#[derive(Debug, Clone)]
+pub struct ElasticCapacity {
+    layers: usize,
+    experts: usize,
+    shards: usize,
+    experts_per_shard: usize,
+    base_capacity: usize,
+    /// L x E: EMA of the per-step max-over-workers demand
+    ema: Vec<f64>,
+    /// L x E: conservative working estimate ceil(max(ema, last))
+    est: Vec<u32>,
+    /// L x S: current per-shard capacities (sum = shards * base per layer)
+    caps: Vec<u32>,
+    steps_observed: u64,
+}
+
+impl ElasticCapacity {
+    /// Controller over `layers` x `shards` with the static Eq.-2
+    /// `base_capacity` as both the warm start and the per-layer budget
+    /// (`shards * base_capacity` slots).
+    pub fn new(
+        layers: usize,
+        experts: usize,
+        shards: usize,
+        base_capacity: usize,
+    ) -> Result<ElasticCapacity> {
+        if layers == 0 || experts == 0 || shards == 0 {
+            bail!("elastic capacity needs non-empty layers/experts/shards");
+        }
+        if experts % shards != 0 {
+            bail!("experts {experts} not divisible into {shards} equal shards");
+        }
+        if base_capacity == 0 {
+            bail!("elastic capacity needs a positive static baseline");
+        }
+        Ok(ElasticCapacity {
+            layers,
+            experts,
+            shards,
+            experts_per_shard: experts / shards,
+            base_capacity,
+            ema: vec![0.0; layers * experts],
+            est: vec![0; layers * experts],
+            caps: vec![base_capacity as u32; layers * shards],
+            steps_observed: 0,
+        })
+    }
+
+    /// True once at least one step's demand has been observed — before
+    /// that the controller has no history and the caller must run the
+    /// static capacity.
+    pub fn ready(&self) -> bool {
+        self.steps_observed > 0
+    }
+
+    /// Per-shard capacities for layer `l` (length = shard count).
+    pub fn caps_layer(&self, l: usize) -> &[u32] {
+        &self.caps[l * self.shards..(l + 1) * self.shards]
+    }
+
+    /// Smallest per-(layer, shard) capacity currently assigned.
+    pub fn min_cap(&self) -> usize {
+        self.caps.iter().copied().min().unwrap_or(1) as usize
+    }
+
+    /// Largest per-(layer, shard) capacity currently assigned — what the
+    /// real-compute slabs must be sized for.
+    pub fn max_cap(&self) -> usize {
+        self.caps.iter().copied().max().unwrap_or(1) as usize
+    }
+
+    /// Per-layer slot budget the allocation always sums to.
+    pub fn slot_budget(&self) -> usize {
+        self.shards * self.base_capacity
+    }
+
+    /// Ingest one step's per-(layer, expert) worst-case demand (max over
+    /// workers, length L x E) and re-derive every layer's capacities for
+    /// the next step.
+    pub fn observe(&mut self, demand_max: &[u32]) {
+        assert_eq!(
+            demand_max.len(),
+            self.layers * self.experts,
+            "demand histogram must be layers x experts"
+        );
+        for (i, &d) in demand_max.iter().enumerate() {
+            let df = d as f64;
+            self.ema[i] = if self.steps_observed == 0 {
+                df
+            } else {
+                DEMAND_EMA_BETA * self.ema[i] + (1.0 - DEMAND_EMA_BETA) * df
+            };
+            self.est[i] = self.ema[i].max(df).ceil() as u32;
+        }
+        for l in 0..self.layers {
+            self.reallocate_layer(l);
+        }
+        self.steps_observed += 1;
+    }
+
+    /// Greedy water-filling for one layer, warm-started at the static
+    /// baseline (see the module docs). O(budget · E) worst case.
+    fn reallocate_layer(&mut self, l: usize) {
+        let s_at = l * self.shards;
+        let e_at = l * self.experts;
+        let eps = self.experts_per_shard;
+        let est = &self.est[e_at..e_at + self.experts];
+        let caps = &mut self.caps[s_at..s_at + self.shards];
+        caps.fill(self.base_capacity as u32);
+        // #{e in shard : est_e >= cap} — tokens a one-slot shrink strands /
+        // a one-slot grow recovers (at cap, resp. cap + 1)
+        let over = |s: usize, cap: u32| -> usize {
+            est[s * eps..(s + 1) * eps].iter().filter(|&&d| d >= cap).count()
+        };
+        // each move strictly reduces estimated drops, so the loop is
+        // bounded by the layer's estimated static drops; the explicit cap
+        // is a safety net only
+        let max_moves = self.shards * self.base_capacity;
+        for _ in 0..max_moves {
+            let mut best_gain = 0usize;
+            let mut recipient = usize::MAX;
+            for s in 0..self.shards {
+                let g = over(s, caps[s] + 1);
+                if g > best_gain {
+                    best_gain = g;
+                    recipient = s;
+                }
+            }
+            if recipient == usize::MAX {
+                break;
+            }
+            let mut best_loss = usize::MAX;
+            let mut donor = usize::MAX;
+            for s in 0..self.shards {
+                if s == recipient || caps[s] <= 1 {
+                    continue;
+                }
+                let loss = over(s, caps[s]);
+                if loss < best_loss {
+                    best_loss = loss;
+                    donor = s;
+                }
+            }
+            if donor == usize::MAX || best_gain <= best_loss {
+                break;
+            }
+            caps[donor] -= 1;
+            caps[recipient] += 1;
+        }
+    }
+}
+
+/// Re-clamp one worker-layer's kept counts under per-shard capacities:
+/// `load_e = min(demand_e, caps[shard(e)])`, returning the dropped total.
+/// The per-shard generalization of `fused::counts_from_demand` — with
+/// every cap equal to the static `C` it reproduces that kernel exactly.
+pub fn apply_caps(demand: &[u32], caps: &[u32], experts_per_shard: usize, load: &mut [u32]) -> u32 {
+    assert_eq!(demand.len(), load.len(), "demand/load histograms must match");
+    assert_eq!(
+        demand.len(),
+        caps.len() * experts_per_shard,
+        "caps must cover every expert shard"
+    );
+    let mut dropped = 0u32;
+    for (e, (&d, slot)) in demand.iter().zip(load.iter_mut()).enumerate() {
+        let kept = d.min(caps[e / experts_per_shard]);
+        *slot = kept;
+        dropped += d - kept;
+    }
+    dropped
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn drops(est: &[u32], caps: &[u32], eps: usize) -> u64 {
+        est.iter()
+            .enumerate()
+            .map(|(e, &d)| d.saturating_sub(caps[e / eps]) as u64)
+            .sum()
+    }
+
+    #[test]
+    fn rejects_bad_geometry() {
+        assert!(ElasticCapacity::new(0, 8, 4, 5).is_err());
+        assert!(ElasticCapacity::new(2, 9, 4, 5).is_err(), "9 % 4 != 0");
+        assert!(ElasticCapacity::new(2, 8, 4, 0).is_err());
+        assert!(ElasticCapacity::new(2, 8, 4, 5).is_ok());
+    }
+
+    #[test]
+    fn cold_controller_is_not_ready_and_stays_static() {
+        let el = ElasticCapacity::new(2, 8, 4, 5).unwrap();
+        assert!(!el.ready());
+        assert_eq!(el.caps_layer(0), &[5, 5, 5, 5]);
+        assert_eq!(el.min_cap(), 5);
+        assert_eq!(el.max_cap(), 5);
+    }
+
+    #[test]
+    fn uniform_demand_is_a_fixed_point_at_the_static_allocation() {
+        // every expert at or below C: no move has positive gain; every
+        // expert above C uniformly: gain == loss everywhere — either way
+        // the static allocation survives
+        for demand in [3u32, 5, 9] {
+            let mut el = ElasticCapacity::new(2, 8, 4, 5).unwrap();
+            el.observe(&vec![demand; 16]);
+            assert!(el.ready());
+            assert_eq!(el.caps_layer(0), &[5, 5, 5, 5], "uniform demand {demand}");
+            assert_eq!(el.caps_layer(1), &[5, 5, 5, 5]);
+        }
+    }
+
+    #[test]
+    fn skewed_demand_moves_slots_and_conserves_the_budget() {
+        // shard 0 holds a hot expert (demand 20 >> C = 5), the rest idle
+        let mut el = ElasticCapacity::new(1, 8, 4, 5).unwrap();
+        let demand = [20u32, 1, 1, 1, 1, 1, 1, 1];
+        el.observe(&demand);
+        let caps = el.caps_layer(0);
+        assert_eq!(caps.iter().sum::<u32>() as usize, el.slot_budget());
+        assert!(caps.iter().all(|&c| c >= 1));
+        assert!(caps[0] > 5, "hot shard must grow, got {caps:?}");
+        assert!(caps[1..].iter().all(|&c| c < 5), "cold shards shrink: {caps:?}");
+        // cold shards floor at one slot, so the hot shard absorbs every
+        // other spare slot: caps = [17, 1, 1, 1] under budget 20
+        assert_eq!(caps, &[17, 1, 1, 1]);
+        // estimated drops fall strictly below the static allocation's
+        let est: Vec<u32> = demand.to_vec();
+        assert!(drops(&est, caps, 2) < drops(&est, &[5, 5, 5, 5], 2));
+        assert_eq!(drops(&est, caps, 2), 3, "only the un-fundable 20 - 17 remains");
+    }
+
+    #[test]
+    fn water_filling_never_estimates_worse_than_static() {
+        // pseudo-random persistent skews: elastic estimated drops must be
+        // <= static estimated drops for every one (the structural
+        // guarantee behind the bench's drop-delta floor)
+        let mut x = 0x2545_F491_4F6C_DD1Du64;
+        for trial in 0..50 {
+            let layers = 1 + trial % 3;
+            let shards = [2usize, 4, 8][trial % 3];
+            let eps = [4usize, 2, 3][(trial / 3) % 3];
+            let experts = shards * eps;
+            let base = 4 + trial % 7;
+            let mut el = ElasticCapacity::new(layers, experts, shards, base).unwrap();
+            let demand: Vec<u32> = (0..layers * experts)
+                .map(|_| {
+                    x ^= x << 13;
+                    x ^= x >> 7;
+                    x ^= x << 17;
+                    (x % (3 * base as u64 + 1)) as u32
+                })
+                .collect();
+            // persistent skew: same histogram for a few steps
+            for _ in 0..3 {
+                el.observe(&demand);
+            }
+            let static_caps = vec![base as u32; shards];
+            for l in 0..layers {
+                let est = &demand[l * experts..(l + 1) * experts];
+                let caps = el.caps_layer(l);
+                assert_eq!(caps.iter().sum::<u32>() as usize, el.slot_budget());
+                assert!(caps.iter().all(|&c| c >= 1));
+                assert!(
+                    drops(est, caps, eps) <= drops(est, &static_caps, eps),
+                    "trial {trial} layer {l}: {caps:?} vs static {base}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn controller_is_deterministic() {
+        let demand: Vec<u32> = (0..24).map(|i| (i * 7 % 13) as u32).collect();
+        let run = || {
+            let mut el = ElasticCapacity::new(2, 12, 4, 3).unwrap();
+            for step in 0..5 {
+                let d: Vec<u32> = demand.iter().map(|&x| x + step % 2).collect();
+                el.observe(&d);
+            }
+            el.caps.clone()
+        };
+        assert_eq!(run(), run());
+    }
+
+    #[test]
+    fn growth_is_immediate_and_shrink_is_gradual() {
+        let mut el = ElasticCapacity::new(1, 4, 2, 5).unwrap();
+        // a demand spike on expert 0 grows shard 0 the very next step:
+        // the donor shard floors at one slot, so shard 0 takes 9 of 10
+        el.observe(&[18, 0, 0, 0]);
+        assert_eq!(el.caps_layer(0), &[9, 1]);
+        // after the spike passes, the estimate decays with the EMA
+        // instead of snapping back: 18 -> est 10 (held), est 6, then the
+        // sub-C regime where the static allocation returns
+        el.observe(&[2, 0, 0, 0]);
+        assert_eq!(el.caps_layer(0), &[9, 1], "conservative hold one step after the spike");
+        el.observe(&[2, 0, 0, 0]);
+        assert_eq!(el.caps_layer(0), &[6, 4], "shrink begins, not all the way at once");
+        for _ in 0..8 {
+            el.observe(&[2, 0, 0, 0]);
+        }
+        assert_eq!(el.caps_layer(0), &[5, 5], "fully decayed demand is sub-C: static");
+    }
+
+    #[test]
+    fn apply_caps_matches_the_static_kernel_and_conserves_tokens() {
+        let demand = [7u32, 2, 9, 0, 4, 4];
+        let mut load = [0u32; 6];
+        // uniform caps == static C reproduces counts_from_demand
+        let dropped = apply_caps(&demand, &[5, 5, 5], 2, &mut load);
+        let mut oracle = [0u32; 6];
+        let oracle_dropped = crate::moe::fused::counts_from_demand(&demand, 5, &mut oracle);
+        assert_eq!(load, oracle);
+        assert_eq!(dropped, oracle_dropped);
+        // per-shard caps: kept + dropped == demand, kept <= cap
+        let dropped = apply_caps(&demand, &[9, 1, 5], 2, &mut load);
+        assert_eq!(load, [7, 2, 1, 0, 4, 4]);
+        assert_eq!(dropped + load.iter().sum::<u32>(), demand.iter().sum::<u32>());
+    }
+}

@@ -201,6 +201,46 @@ impl DispatchPlan {
         }
     }
 
+    /// Accumulate the *full* D x D kept-byte matrix — like
+    /// [`DispatchPlan::add_bytes_matrix_into`] but including the diagonal
+    /// (tokens for locally hosted experts). The placement search
+    /// (`cluster::placement`) needs the local column too: under a
+    /// non-identity shard→worker assignment, traffic that is local today
+    /// becomes a network flow, so the zero-diagonal matrix understates
+    /// the cost of moving a shard off its co-resident worker.
+    pub fn add_full_bytes_matrix_into(&self, out: &mut [u64]) {
+        let d = self.workers;
+        assert_eq!(out.len(), d * d, "link-byte buffer must be D x D");
+        let per_token = token_bytes(self.hidden);
+        for w in 0..d {
+            for e in 0..self.num_experts {
+                let v = self.shard_of(e);
+                out[w * d + v] += self.send[w * self.num_experts + e] as u64 * per_token;
+            }
+        }
+    }
+
+    /// Accumulate the zero-diagonal link-byte matrix under an explicit
+    /// shard→worker assignment: `assign[s]` is the worker hosting expert
+    /// shard `s`, and bytes from worker `w` toward shard `s` land on link
+    /// `(w, assign[s])` — local (free) exactly when `assign[s] == w`. With
+    /// the identity assignment this is bitwise
+    /// [`DispatchPlan::add_bytes_matrix_into`].
+    pub fn add_placed_bytes_matrix_into(&self, assign: &[usize], out: &mut [u64]) {
+        let d = self.workers;
+        assert_eq!(assign.len(), d, "assignment must cover every shard");
+        assert_eq!(out.len(), d * d, "link-byte buffer must be D x D");
+        let per_token = token_bytes(self.hidden);
+        for w in 0..d {
+            for e in 0..self.num_experts {
+                let v = assign[self.shard_of(e)];
+                if v != w {
+                    out[w * d + v] += self.send[w * self.num_experts + e] as u64 * per_token;
+                }
+            }
+        }
+    }
+
     /// Measured all-to-all payload, one direction, this layer.
     pub fn dispatch_bytes(&self) -> u64 {
         self.cross_tokens() * token_bytes(self.hidden)
@@ -239,6 +279,10 @@ pub struct DispatchSummary {
     /// measured all-to-all payload bytes per layer per direction (mean
     /// over layers) — the analytic model's O(ECM) replacement
     pub a2a_bytes_per_layer: f64,
+    /// exact one-direction cross-worker byte total for the whole step
+    /// (the integer sum of the per-layer `dispatch_bytes`, not the mean
+    /// re-multiplied) — the denominator of `bottleneck_link_share`
+    pub a2a_bytes_total: f64,
     /// measured bytes for the whole step: dispatch + combine forward and
     /// their backward transposes (4 transfers per layer)
     pub a2a_bytes_step: f64,
@@ -266,6 +310,23 @@ pub struct DispatchSummary {
     /// fraction of link-model comm hidden behind compute, in [0, 1];
     /// 0 until the driver fills it in
     pub overlap_efficiency: f64,
+    /// true when the elastic capacity controller reshaped this step's
+    /// per-(layer, shard) capacities (`moe::capacity`); false on the
+    /// static path, whose numbers stay the bitwise oracle
+    pub elastic: bool,
+    /// smallest effective per-(layer, shard) capacity this step — equals
+    /// the static Eq.-2 `C` when the controller is off
+    pub capacity_min: usize,
+    /// largest effective per-(layer, shard) capacity this step
+    pub capacity_max: usize,
+    /// identity-layout / placed-layout bottleneck seconds over the
+    /// step-summed traffic (`cluster::placement`); 1.0 under the identity
+    /// assignment (structurally >= 1.0: the search falls back to identity)
+    pub placement_gain: f64,
+    /// `bottleneck_link_share` of the placed layout, same denominator as
+    /// the identity share — equals `bottleneck_link_share()` when the
+    /// placement search is off
+    pub placed_link_share: f64,
 }
 
 impl DispatchSummary {
@@ -325,6 +386,11 @@ impl DispatchSummary {
                 }
             }
         }
+        let capacity_min = plans.iter().map(|p| p.capacity).min().unwrap_or(1);
+        let capacity_max = plans.iter().map(|p| p.capacity).max().unwrap_or(1);
+        let a2a_bytes_total = bytes_one_direction as f64;
+        let identity_share =
+            if bytes_one_direction > 0 { max_link_bytes as f64 / a2a_bytes_total } else { 0.0 };
         DispatchSummary {
             workers,
             layers,
@@ -334,6 +400,7 @@ impl DispatchSummary {
             per_shard_recv: recv_f,
             per_shard_dropped: per_shard_dropped.iter().map(|&x| x as f64).collect(),
             a2a_bytes_per_layer: bytes_one_direction as f64 / layers as f64,
+            a2a_bytes_total,
             a2a_bytes_step: bytes_one_direction as f64 * 4.0,
             cross_fraction: cross as f64 / (kept as f64).max(1.0),
             drop_fraction: dropped as f64 / ((kept + dropped) as f64).max(1.0),
@@ -343,19 +410,25 @@ impl DispatchSummary {
             observed_ms: 0.0,
             observed_overlap_ms: 0.0,
             overlap_efficiency: 0.0,
+            elastic: false,
+            capacity_min,
+            capacity_max,
+            placement_gain: 1.0,
+            placed_link_share: identity_share,
         }
     }
 
     /// Share of the step's cross-worker bytes carried by the single
     /// most-loaded link — 0 when nothing crossed. The bench's
     /// `bottleneck_link_share` field: at 1.0 one link is the whole story,
-    /// at ~1/(D·(D-1)) the exchange is perfectly spread.
+    /// at ~1/(D·(D-1)) the exchange is perfectly spread. The denominator
+    /// is the exact integer byte total carried through `from_plans`
+    /// (`a2a_bytes_total`), not the per-layer mean re-multiplied by L —
+    /// the old reconstruction could land an ULP below the true sum when
+    /// L is not a power of two and needed a clamp to stay in [0, 1].
     pub fn bottleneck_link_share(&self) -> f64 {
-        // clamp: reconstructing the total from the per-layer mean can
-        // land an ULP below the true sum when L is not a power of two
-        let total = self.a2a_bytes_per_layer * self.layers as f64;
-        if total > 0.0 {
-            (self.max_link_bytes / total).clamp(0.0, 1.0)
+        if self.a2a_bytes_total > 0.0 {
+            self.max_link_bytes / self.a2a_bytes_total
         } else {
             0.0
         }
@@ -464,8 +537,14 @@ mod tests {
         assert_eq!(s.workers, 2);
         assert_eq!(s.layers, 2);
         let bytes = (l0.dispatch_bytes() + l1.dispatch_bytes()) as f64;
+        assert_eq!(s.a2a_bytes_total, bytes, "step total is the exact integer sum");
         assert_eq!(s.a2a_bytes_per_layer, bytes / 2.0);
         assert_eq!(s.a2a_bytes_step, bytes * 4.0);
+        assert_eq!(s.capacity_min, 20);
+        assert_eq!(s.capacity_max, 20);
+        assert!(!s.elastic);
+        assert_eq!(s.placement_gain, 1.0);
+        assert_eq!(s.placed_link_share, s.bottleneck_link_share());
         assert!(s.shard_balance >= 1.0);
         assert!((0.0..=1.0).contains(&s.cross_fraction));
         assert!((0.0..=1.0).contains(&s.drop_fraction));
@@ -486,12 +565,74 @@ mod tests {
 
     #[test]
     fn single_worker_summary_has_no_bottleneck_link() {
+        // regression pin: at D = 1 every token is local, the exact byte
+        // total is zero, and the share must be exactly 0.0 (no 0/0)
         let routes = worker_routes(1, 64, 8, Routing::TopK(2), 20, 9);
         let plan = DispatchPlan::from_worker_routes(8, 20, 32, &routes);
         let s = DispatchSummary::from_plans(&[plan]);
         assert_eq!(s.max_link_bytes, 0.0);
+        assert_eq!(s.a2a_bytes_total, 0.0);
         assert_eq!(s.bottleneck_link_share(), 0.0);
         assert_eq!((s.bottleneck_src, s.bottleneck_dst), (0, 0));
+    }
+
+    #[test]
+    fn link_share_uses_the_exact_total_over_odd_layer_counts() {
+        // three layers (not a power of two): the old mean * L
+        // reconstruction could sit an ULP off the integer sum; the share
+        // must now be exactly max_link / sum with no clamp in the way
+        let layers: Vec<DispatchPlan> = (0..3)
+            .map(|i| {
+                DispatchPlan::from_worker_routes(
+                    16,
+                    18,
+                    64,
+                    &worker_routes(4, 96, 16, Routing::TopK(2), 18, 100 + i),
+                )
+            })
+            .collect();
+        let s = DispatchSummary::from_plans(&layers);
+        let exact: u64 = layers.iter().map(|p| p.dispatch_bytes()).sum();
+        assert_eq!(s.a2a_bytes_total, exact as f64);
+        assert_eq!(s.bottleneck_link_share(), s.max_link_bytes / exact as f64);
+        assert!((0.0..=1.0).contains(&s.bottleneck_link_share()));
+    }
+
+    #[test]
+    fn full_matrix_restores_the_diagonal_and_identity_placement_matches() {
+        let routes = worker_routes(4, 96, 8, Routing::Prototype(2), 30, 11);
+        let plan = DispatchPlan::from_worker_routes(8, 30, 32, &routes);
+        let d = plan.workers;
+        let mut full = vec![0u64; d * d];
+        plan.add_full_bytes_matrix_into(&mut full);
+        // full total = every kept token, cross or local
+        let full_total: u64 = full.iter().sum();
+        assert_eq!(full_total, plan.kept_total() * 32 * 4);
+        // zeroing the diagonal recovers the network-only matrix
+        let m = plan.bytes_matrix();
+        for w in 0..d {
+            for v in 0..d {
+                if w == v {
+                    assert!(full[w * d + v] >= m[w * d + v]);
+                } else {
+                    assert_eq!(full[w * d + v], m[w * d + v]);
+                }
+            }
+        }
+        // identity assignment reproduces bytes_matrix bitwise
+        let assign: Vec<usize> = (0..d).collect();
+        let mut placed = vec![0u64; d * d];
+        plan.add_placed_bytes_matrix_into(&assign, &mut placed);
+        assert_eq!(placed, m);
+        // any permutation conserves the full total minus its new diagonal
+        let rotated: Vec<usize> = (0..d).map(|s| (s + 1) % d).collect();
+        let mut rot = vec![0u64; d * d];
+        plan.add_placed_bytes_matrix_into(&rotated, &mut rot);
+        let rot_local: u64 = (0..d).map(|w| full[w * d + (d + w - 1) % d]).sum();
+        assert_eq!(rot.iter().sum::<u64>(), full_total - rot_local);
+        for w in 0..d {
+            assert_eq!(rot[w * d + w], 0, "placed matrix keeps a zero diagonal");
+        }
     }
 
     #[test]

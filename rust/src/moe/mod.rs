@@ -34,6 +34,13 @@
 //! kernels (tiled forward/backward GEMMs) that turn routed counts into
 //! real per-expert compute for the `ComputeMode::Real` variants.
 
+//! [`capacity`] closes the measurement loop: an elastic per-(layer,
+//! shard) capacity controller that feeds the dispatch plans' exact
+//! demand histograms back into next step's capacities under a constant
+//! slot budget (off by default; the static path stays the bitwise
+//! oracle).
+
+pub mod capacity;
 pub mod dispatch;
 pub mod engine;
 pub mod ffn;
@@ -41,6 +48,7 @@ pub mod fused;
 pub mod microbench;
 pub mod router;
 
+pub use capacity::ElasticCapacity;
 pub use dispatch::{DispatchPlan, DispatchSummary};
 pub use engine::{RouterScratch, RoutingEngine};
 pub use fused::FusedScratch;

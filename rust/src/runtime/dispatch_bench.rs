@@ -26,6 +26,10 @@ use crate::util::table::{f1, f2, Table};
 /// address — bump when the measurement or row semantics change.
 pub const STORE_VERSION: &str = "dispatch-v1";
 
+/// Store version for the elastic-capacity cells (the `elastic` sweep
+/// kind) — bump when the controller law or the row semantics change.
+pub const ELASTIC_STORE_VERSION: &str = "elastic-v1";
+
 /// Sim-scale twin of the paper's Base geometry (Table 5: 5 layers,
 /// E = 32) — small hidden sizes so a cell runs in milliseconds.
 pub fn base_twin() -> ModelConfig {
@@ -76,6 +80,36 @@ pub fn spec(steps: usize) -> SweepSpec {
         .axis("model", sweep::strs(&["base-twin", "10B-twin"]))
         .axis("strategy", sweep::strs(&["top1@kx", "top2@1x", "2top1@1x"]))
         .axis("workers", sweep::nums(&[1, 4, 8]))
+}
+
+/// The elastic-capacity grid: the skewed base twin (top1@kx, aux = 0 so
+/// the router bias — and with it the hot experts — persists) at D in
+/// {4, 8}. The saturated strategies (top2@1x and friends) are excluded:
+/// with every expert at or over capacity there is no padding to harvest,
+/// so elastic is a no-op there by construction.
+pub fn elastic_spec(steps: usize) -> SweepSpec {
+    SweepSpec::new("elastic", "elastic")
+        .steps(steps)
+        .axis("model", sweep::strs(&["base-twin"]))
+        .axis("workers", sweep::nums(&[4, 8]))
+}
+
+/// Materialize an elastic cell into its config (top1@kx base twin).
+fn elastic_cell_config(cell: &Cell) -> Result<(ModelConfig, usize)> {
+    let cfg = match cell.req_str("model")? {
+        "base-twin" => base_twin(),
+        other => bail!("elastic cell: unknown model {other:?}"),
+    };
+    let workers = cell.req_usize("workers")?;
+    Ok((cfg, workers))
+}
+
+/// Fold the resolved config into an elastic cell before hashing.
+pub fn resolve_elastic_cell(cell: &Cell) -> Result<Cell> {
+    let (cfg, _) = elastic_cell_config(cell)?;
+    let mut resolved = cell.clone();
+    resolved.merge(&sweep::config_cell(&cfg));
+    Ok(resolved)
 }
 
 /// Materialize a spec-level cell into the config the runtime consumes.
@@ -133,6 +167,117 @@ pub struct DispatchBenchRow {
     pub analytic_ms: f64,
     /// cluster model, observed traffic + shard imbalance
     pub observed_ms: f64,
+}
+
+/// One measured elastic-vs-static cell: the same model, seed, and data
+/// stream stepped twice — once under the static Eq.-2 capacity, once
+/// under the elastic controller at the identical slot budget.
+#[derive(Debug, Clone)]
+pub struct ElasticBenchRow {
+    pub model: String,
+    pub workers: usize,
+    /// static Eq.-2 per-expert capacity (and the elastic budget's base)
+    pub capacity: usize,
+    /// mean dropped/demanded over the measured steps, static capacities
+    pub static_drop_rate: f64,
+    /// same steps, elastic capacities — the equal-budget comparison
+    pub elastic_drop_rate: f64,
+    /// elastic − static; the CI gate floors this at <= 0
+    pub drop_delta: f64,
+    /// mean unused-slot fraction, static
+    pub static_padding: f64,
+    /// mean unused-slot fraction, elastic (same slot total per layer)
+    pub elastic_padding: f64,
+    /// capacity span the controller settled on (last measured step)
+    pub cap_min: usize,
+    pub cap_max: usize,
+}
+
+/// Mean drop fraction over the measured records (the cold leading step
+/// is excluded: the controller has no history there, so both twins run
+/// the static capacities and the comparison would be diluted).
+fn mean_drop(log: &RunLog) -> f64 {
+    let measured: Vec<f64> = log
+        .records
+        .iter()
+        .skip(1)
+        .filter_map(|r| r.dispatch.as_ref().map(|d| d.drop_fraction))
+        .collect();
+    if measured.is_empty() {
+        return 0.0;
+    }
+    measured.iter().sum::<f64>() / measured.len() as f64
+}
+
+/// Unused-slot fraction from a mean drop rate: kept tokens fill
+/// `routed · (1 − drop)` of the `L·D·E·C` slots — the slot total both
+/// twins share, which is what makes the padding numbers comparable.
+fn padding_from_drop(cfg: &ModelConfig, workers: usize, capacity: usize, drop: f64) -> f64 {
+    let routed =
+        (cfg.layers * cfg.tokens_per_batch() * cfg.routing.k().max(1) as usize * workers) as f64;
+    let slots = (cfg.layers * workers * cfg.num_experts * capacity) as f64;
+    (1.0 - routed * (1.0 - drop) / slots).max(0.0)
+}
+
+/// Execute one elastic cell: static and elastic [`ShardedRun::train`]
+/// over the identical seed and batch stream, `steps` measured steps each.
+pub fn run_elastic_cell(cell: &Cell) -> Result<Value> {
+    let (cfg, workers) = elastic_cell_config(cell)?;
+    let steps = cell.req_usize("steps")?.max(2);
+    let seed = cell.req_u64("seed")?;
+
+    let static_run = ShardedRun::new(&cfg, workers)?;
+    let mut static_log = RunLog::new(format!("{}-static-d{workers}", cfg.name));
+    static_run.train(steps as i64 + 1, seed, &mut static_log, false)?;
+
+    let mut elastic_run = ShardedRun::new(&cfg, workers)?;
+    elastic_run.set_elastic_capacity(true)?;
+    let mut elastic_log = RunLog::new(format!("{}-elastic-d{workers}", cfg.name));
+    elastic_run.train(steps as i64 + 1, seed, &mut elastic_log, false)?;
+
+    let capacity = static_run.info().capacity;
+    let static_drop = mean_drop(&static_log);
+    let elastic_drop = mean_drop(&elastic_log);
+    let last = elastic_log.last().and_then(|r| r.dispatch.clone()).expect("dispatch series");
+    let row = ElasticBenchRow {
+        model: cfg.name.clone(),
+        workers,
+        capacity,
+        static_drop_rate: static_drop,
+        elastic_drop_rate: elastic_drop,
+        drop_delta: elastic_drop - static_drop,
+        static_padding: padding_from_drop(&cfg, workers, capacity, static_drop),
+        elastic_padding: padding_from_drop(&cfg, workers, capacity, elastic_drop),
+        cap_min: last.capacity_min,
+        cap_max: last.capacity_max,
+    };
+    eprintln!(
+        "[bench] {} D={} elastic: drop {:.3} -> {:.3} (delta {:+.3}), caps {}..{} (C={})",
+        row.model,
+        row.workers,
+        row.static_drop_rate,
+        row.elastic_drop_rate,
+        row.drop_delta,
+        row.cap_min,
+        row.cap_max,
+        row.capacity
+    );
+    Ok(elastic_row_json(&row))
+}
+
+/// Run the elastic grid through the sweep engine.
+pub fn run_elastic_suite(
+    engine: &Engine,
+    steps: usize,
+) -> Result<(Vec<ElasticBenchRow>, SweepOutcome)> {
+    let outcome = engine.run_spec(&elastic_spec(steps), &sweep::ElasticRunner)?;
+    let rows = elastic_rows_from(&outcome)?;
+    Ok((rows, outcome))
+}
+
+/// Rebuild the typed elastic rows from a sweep outcome.
+pub fn elastic_rows_from(outcome: &SweepOutcome) -> Result<Vec<ElasticBenchRow>> {
+    outcome.outcomes.iter().map(|o| elastic_row_from_json(&o.result)).collect()
 }
 
 /// Execute one cell: `steps` measured sharded steps driven through
@@ -228,6 +373,70 @@ pub fn render_table(rows: &[DispatchBenchRow]) -> Table {
     t
 }
 
+/// Human-readable table over the elastic suite.
+pub fn render_elastic_table(rows: &[ElasticBenchRow]) -> Table {
+    let mut t = Table::new(
+        "elastic capacity: drop/padding vs the static Eq.-2 allocation (equal slot budget)",
+        &[
+            "model",
+            "D",
+            "C",
+            "drop static",
+            "drop elastic",
+            "delta",
+            "pad static",
+            "pad elastic",
+            "caps",
+        ],
+    );
+    for r in rows {
+        t.row(vec![
+            r.model.clone(),
+            r.workers.to_string(),
+            r.capacity.to_string(),
+            f2(r.static_drop_rate),
+            f2(r.elastic_drop_rate),
+            f2(r.drop_delta),
+            f2(r.static_padding),
+            f2(r.elastic_padding),
+            format!("{}..{}", r.cap_min, r.cap_max),
+        ]);
+    }
+    t
+}
+
+/// One elastic row as its stored (and emitted) JSON object.
+fn elastic_row_json(r: &ElasticBenchRow) -> Value {
+    obj(vec![
+        ("model", s(r.model.clone())),
+        ("workers", num(r.workers as f64)),
+        ("capacity", num(r.capacity as f64)),
+        ("static_drop_rate", num(r.static_drop_rate)),
+        ("elastic_drop_rate", num(r.elastic_drop_rate)),
+        ("drop_delta", num(r.drop_delta)),
+        ("static_padding", num(r.static_padding)),
+        ("elastic_padding", num(r.elastic_padding)),
+        ("cap_min", num(r.cap_min as f64)),
+        ("cap_max", num(r.cap_max as f64)),
+    ])
+}
+
+/// Inverse of `elastic_row_json`, for rows recalled from the store.
+pub fn elastic_row_from_json(v: &Value) -> Result<ElasticBenchRow> {
+    Ok(ElasticBenchRow {
+        model: v.req_str("model")?.to_string(),
+        workers: v.req_usize("workers")?,
+        capacity: v.req_usize("capacity")?,
+        static_drop_rate: v.req_f64("static_drop_rate")?,
+        elastic_drop_rate: v.req_f64("elastic_drop_rate")?,
+        drop_delta: v.req_f64("drop_delta")?,
+        static_padding: v.req_f64("static_padding")?,
+        elastic_padding: v.req_f64("elastic_padding")?,
+        cap_min: v.req_usize("cap_min")?,
+        cap_max: v.req_usize("cap_max")?,
+    })
+}
+
 /// One row as its stored (and emitted) JSON object. This is the per-cell
 /// result document in the experiment store, and the element of the
 /// `rows` array in `BENCH_dispatch.json` — one serialization for both.
@@ -264,19 +473,34 @@ pub fn row_from_json(v: &Value) -> Result<DispatchBenchRow> {
     })
 }
 
-/// Serialize the suite to the tracked trajectory JSON.
-pub fn to_json(rows: &[DispatchBenchRow], steps: usize) -> Value {
+/// Serialize the suite to the tracked trajectory JSON. The top-level
+/// `max_elastic_drop_delta` (worst elastic − static drop-rate delta over
+/// the elastic cells) is the number the CI gate floors at <= 0: elastic
+/// must never drop more tokens than static at the same slot budget.
+pub fn to_json(rows: &[DispatchBenchRow], elastic: &[ElasticBenchRow], steps: usize) -> Value {
     let items: Vec<Value> = rows.iter().map(row_json).collect();
-    obj(vec![
+    let elastic_items: Vec<Value> = elastic.iter().map(elastic_row_json).collect();
+    let max_delta = elastic.iter().map(|r| r.drop_delta).fold(f64::NEG_INFINITY, f64::max);
+    let mut fields = vec![
         ("bench", s("dispatch")),
         ("steps_per_cell", num(steps as f64)),
         ("rows", arr(items)),
-    ])
+        ("elastic_rows", arr(elastic_items)),
+    ];
+    if !elastic.is_empty() {
+        fields.push(("max_elastic_drop_delta", num(max_delta)));
+    }
+    obj(fields)
 }
 
 /// Write `BENCH_dispatch.json` (or wherever `path` points).
-pub fn write_json(rows: &[DispatchBenchRow], steps: usize, path: &str) -> Result<()> {
-    let text = json_write(&to_json(rows, steps)) + "\n";
+pub fn write_json(
+    rows: &[DispatchBenchRow],
+    elastic: &[ElasticBenchRow],
+    steps: usize,
+    path: &str,
+) -> Result<()> {
+    let text = json_write(&to_json(rows, elastic, steps)) + "\n";
     std::fs::write(path, text).with_context(|| format!("writing {path}"))?;
     Ok(())
 }
@@ -329,6 +553,21 @@ mod tests {
         assert_eq!(format!("{back:?}"), format!("{row:?}"));
     }
 
+    fn sample_elastic_row() -> ElasticBenchRow {
+        ElasticBenchRow {
+            model: "base-twin".into(),
+            workers: 4,
+            capacity: 20,
+            static_drop_rate: 0.2,
+            elastic_drop_rate: 0.05,
+            drop_delta: -0.15,
+            static_padding: 0.5,
+            elastic_padding: 0.4,
+            cap_min: 3,
+            cap_max: 61,
+        }
+    }
+
     #[test]
     fn json_shape_is_stable() {
         let rows = vec![DispatchBenchRow {
@@ -344,7 +583,7 @@ mod tests {
             analytic_ms: 100.0,
             observed_ms: 80.0,
         }];
-        let v = to_json(&rows, 4);
+        let v = to_json(&rows, &[sample_elastic_row()], 4);
         assert_eq!(v.get("bench").and_then(|b| b.as_str()), Some("dispatch"));
         let items = v.get("rows").and_then(|r| r.as_array()).unwrap();
         assert_eq!(items.len(), 1);
@@ -353,5 +592,49 @@ mod tests {
             items[0].get("cluster_observed_ms").and_then(|w| w.as_f64()),
             Some(80.0)
         );
+        // the elastic rows and the gated top-level floor ride along
+        let el = v.get("elastic_rows").and_then(|r| r.as_array()).unwrap();
+        assert_eq!(el.len(), 1);
+        assert_eq!(
+            v.get("max_elastic_drop_delta").and_then(|x| x.as_f64()),
+            Some(-0.15)
+        );
+        // without elastic cells the floor is absent, not a fake -inf
+        let bare = to_json(&rows, &[], 4);
+        assert!(bare.get("max_elastic_drop_delta").is_none());
+        assert_eq!(bare.get("elastic_rows").and_then(|r| r.as_array()).map(|a| a.len()), Some(0));
+    }
+
+    #[test]
+    fn elastic_spec_is_two_skewed_cells() {
+        let cells = elastic_spec(4).expand().unwrap();
+        assert_eq!(cells.len(), 2, "base-twin x D in {{4, 8}}");
+        let mut keys = std::collections::BTreeSet::new();
+        for cell in &cells {
+            let (cfg, workers) = elastic_cell_config(cell).unwrap();
+            assert_eq!(cfg.aux_loss_coef, 0.0, "the skew must persist for elastic to act on");
+            assert_eq!(cfg.num_experts % workers, 0);
+            let resolved = resolve_elastic_cell(cell).unwrap();
+            assert!(resolved.req_str("cfg.name").is_ok());
+            assert!(keys.insert(resolved.canonical()), "duplicate elastic cell address");
+        }
+    }
+
+    #[test]
+    fn elastic_rows_round_trip_through_the_store_document() {
+        let row = sample_elastic_row();
+        let back = elastic_row_from_json(&elastic_row_json(&row)).unwrap();
+        assert_eq!(format!("{back:?}"), format!("{row:?}"));
+    }
+
+    #[test]
+    fn padding_accounts_the_shared_slot_total() {
+        let cfg = base_twin(); // T = 512, E = 32, k = 1, C = 20, L = 5
+        // zero drops: 512 of E*C = 640 slots used per (worker, layer)
+        let pad = padding_from_drop(&cfg, 4, 20, 0.0);
+        assert!((pad - 0.2).abs() < 1e-12, "1 - 512/640, got {pad}");
+        // dropping 25% leaves 384 used slots
+        let pad = padding_from_drop(&cfg, 4, 20, 0.25);
+        assert!((pad - 0.4).abs() < 1e-12, "1 - 384/640, got {pad}");
     }
 }

@@ -44,6 +44,7 @@ use super::manifest::{DType, TensorSpec, VariantInfo};
 use crate::cluster::{simulate_step, table2_hardware};
 use crate::config::{paper, CapacityMode, ComputeMode, ModelConfig, Routing};
 use crate::data::Batch;
+use crate::moe::capacity;
 use crate::moe::ffn::{self, FfnGrads, FfnInputs, FfnShape};
 use crate::moe::fused;
 use crate::runtime::optim;
@@ -367,6 +368,11 @@ pub(crate) fn route_grid_counts(
     // exact merge: per (worker, layer), sum the tile histograms in tile
     // order, then capacity-clamp — kept_e = min(demand_e, C), so the
     // merged counts equal what routing the whole layer at once produces.
+    // The clamp goes through the per-shard kernel with one uniform
+    // all-experts shard: bitwise the same counts as
+    // `fused::counts_from_demand` (pinned in `moe::capacity`'s tests),
+    // and the exact static oracle the elastic controller's re-clamp in
+    // `runtime::shard` is measured against.
     for w in 0..d {
         for l in 0..layers {
             let at = (w * layers + l) * experts;
@@ -381,9 +387,10 @@ pub(crate) fn route_grid_counts(
                     }
                 }
             }
-            wl_dropped[w * layers + l] = fused::counts_from_demand(
+            wl_dropped[w * layers + l] = capacity::apply_caps(
                 &wl_demand[at..at + experts],
-                capacity,
+                &[capacity as u32],
+                experts,
                 &mut wl_load[at..at + experts],
             );
         }

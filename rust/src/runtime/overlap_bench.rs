@@ -39,6 +39,10 @@ use crate::util::table::{f2, Table};
 /// Code-relevant version tag in every overlap cell's store address.
 pub const STORE_VERSION: &str = "overlap-v1";
 
+/// Store version for the placement cells (the `placement` sweep kind) —
+/// bump when the search or the row semantics change.
+pub const PLACEMENT_STORE_VERSION: &str = "placement-v1";
+
 /// The benched geometries: the sim-scale E = 16 / 32 / 64 twins.
 const GEOMETRIES: [&str; 3] = ["base-sim", "large-sim", "xlarge-sim"];
 
@@ -55,6 +59,36 @@ pub fn spec(steps: usize) -> SweepSpec {
         .axis("strategy", sweep::strs(&["top1@kx", "top2@1x", "2top1@1x"]))
         .axis("workers", sweep::nums(&[4, 8, 16]))
         .axis("workers_per_node", sweep::nums(&[1, HIER_WORKERS_PER_NODE]))
+}
+
+/// The placement grid: skewed sim geometries on the hierarchical nodes4
+/// topology at D in {4, 8}, full greedy+swap search. Flat topologies are
+/// excluded — with every link priced equally the search can still
+/// localize traffic, but the tiered testbed is where the co-location
+/// question the bench answers actually arises.
+pub fn placement_spec(steps: usize) -> SweepSpec {
+    SweepSpec::new("placement", "placement")
+        .steps(steps)
+        .axis("model", sweep::strs(&["base-sim", "large-sim"]))
+        .axis("workers", sweep::nums(&[4, 8]))
+}
+
+/// Materialize a placement cell into its config.
+fn placement_cell_config(cell: &Cell) -> Result<(ModelConfig, usize)> {
+    let geo = cell.req_str("model")?;
+    let Some(cfg) = registry().into_iter().find(|c| c.name == geo) else {
+        bail!("placement cell: unknown geometry {geo:?}");
+    };
+    let workers = cell.req_usize("workers")?;
+    Ok((cfg, workers))
+}
+
+/// Fold the resolved config into a placement cell before hashing.
+pub fn resolve_placement_cell(cell: &Cell) -> Result<Cell> {
+    let (cfg, _) = placement_cell_config(cell)?;
+    let mut resolved = cell.clone();
+    resolved.merge(&sweep::config_cell(&cfg));
+    Ok(resolved)
 }
 
 /// Materialize a spec-level cell into the config the runtime consumes.
@@ -208,6 +242,78 @@ pub fn run_cell(cell: &Cell) -> Result<Value> {
     Ok(row_json(&row))
 }
 
+/// One measured placement cell: the greedy+swap search against the
+/// identity layout on the hierarchical topology, same step, same traffic.
+#[derive(Debug, Clone)]
+pub struct PlacementBenchRow {
+    pub model: String,
+    pub workers: usize,
+    pub workers_per_node: usize,
+    /// identity-layout bottleneck share of the exact byte total
+    pub identity_share: f64,
+    /// placed-layout bottleneck share (same denominator)
+    pub placed_share: f64,
+    /// placed − identity; the CI gate floors this at <= 0
+    pub share_delta: f64,
+    /// identity / placed bottleneck seconds on the step-summed traffic
+    /// (>= 1.0 structurally: the search falls back to identity)
+    pub placement_gain: f64,
+    /// link-level pipelined cluster ms under the placed layout
+    pub overlapped_ms: f64,
+}
+
+/// Execute one placement cell: one sharded run on nodes4 with the full
+/// greedy+swap search active, recording how the placed layout priced
+/// against identity on the run's own measured traffic.
+pub fn run_placement_cell(cell: &Cell) -> Result<Value> {
+    let (cfg, workers) = placement_cell_config(cell)?;
+    let steps = cell.req_usize("steps")?.max(1);
+    let seed = cell.req_u64("seed")?;
+    let mut run = ShardedRun::new(&cfg, workers)?;
+    run.set_workers_per_node(HIER_WORKERS_PER_NODE);
+    run.set_placement(crate::cluster::PlacementStrategy::Swap);
+    let mut log = RunLog::new(format!("{}-placed-d{workers}", cfg.name));
+    run.train(steps as i64 + 1, seed, &mut log, false)?;
+    let last = log.last().expect("at least one recorded step");
+    let dsp = last.dispatch.as_ref().expect("sharded records carry dispatch");
+    let identity_share = dsp.bottleneck_link_share();
+    let row = PlacementBenchRow {
+        model: cfg.name.clone(),
+        workers,
+        workers_per_node: HIER_WORKERS_PER_NODE,
+        identity_share,
+        placed_share: dsp.placed_link_share,
+        share_delta: dsp.placed_link_share - identity_share,
+        placement_gain: dsp.placement_gain,
+        overlapped_ms: dsp.observed_overlap_ms,
+    };
+    eprintln!(
+        "[bench] {} D={} placement: gain {:.3}x, link share {:.3} -> {:.3} (delta {:+.3})",
+        row.model,
+        row.workers,
+        row.placement_gain,
+        row.identity_share,
+        row.placed_share,
+        row.share_delta
+    );
+    Ok(placement_row_json(&row))
+}
+
+/// Run the placement grid through the sweep engine.
+pub fn run_placement_suite(
+    engine: &Engine,
+    steps: usize,
+) -> Result<(Vec<PlacementBenchRow>, SweepOutcome)> {
+    let outcome = engine.run_spec(&placement_spec(steps), &sweep::PlacementRunner)?;
+    let rows = placement_rows_from(&outcome)?;
+    Ok((rows, outcome))
+}
+
+/// Rebuild the typed placement rows from a sweep outcome.
+pub fn placement_rows_from(outcome: &SweepOutcome) -> Result<Vec<PlacementBenchRow>> {
+    outcome.outcomes.iter().map(|o| placement_row_from_json(&o.result)).collect()
+}
+
 /// Run the full grid through the sweep engine, `steps` measured sharded
 /// steps per cell; previously-completed cells come back from the store.
 pub fn run_suite(engine: &Engine, steps: usize) -> Result<(Vec<OverlapBenchRow>, SweepOutcome)> {
@@ -236,6 +342,78 @@ pub fn min_overlap_speedup(rows: &[OverlapBenchRow]) -> f64 {
 /// Worst-cell bottleneck concentration.
 pub fn max_bottleneck_link_share(rows: &[OverlapBenchRow]) -> f64 {
     rows.iter().map(|r| r.bottleneck_link_share).fold(0.0f64, f64::max)
+}
+
+/// Minimum placement gain over the placement cells — the CI gate floors
+/// this at 1.0 (structural: the search falls back to identity). 0 when
+/// there are no rows, so an empty suite fails the gate.
+pub fn min_placement_gain(rows: &[PlacementBenchRow]) -> f64 {
+    let min = rows.iter().map(|r| r.placement_gain).fold(f64::INFINITY, f64::min);
+    if min.is_finite() {
+        min
+    } else {
+        0.0
+    }
+}
+
+/// Worst placed − identity bottleneck-share delta — the CI gate floors
+/// this at <= 0. 1 (a failing delta) when there are no rows.
+pub fn max_placement_share_delta(rows: &[PlacementBenchRow]) -> f64 {
+    let max = rows.iter().map(|r| r.share_delta).fold(f64::NEG_INFINITY, f64::max);
+    if max.is_finite() {
+        max
+    } else {
+        1.0
+    }
+}
+
+/// Human-readable table over the placement suite.
+pub fn render_placement_table(rows: &[PlacementBenchRow]) -> Table {
+    let mut t = Table::new(
+        "topology-aware placement vs identity layout (nodes4, greedy+swap)",
+        &["model", "D", "wpn", "gain", "share id", "share placed", "delta", "overlap ms"],
+    );
+    for r in rows {
+        t.row(vec![
+            r.model.clone(),
+            r.workers.to_string(),
+            r.workers_per_node.to_string(),
+            format!("{}x", f2(r.placement_gain)),
+            f2(r.identity_share),
+            f2(r.placed_share),
+            f2(r.share_delta),
+            f2(r.overlapped_ms),
+        ]);
+    }
+    t
+}
+
+/// One placement row as its stored (and emitted) JSON object.
+fn placement_row_json(r: &PlacementBenchRow) -> Value {
+    obj(vec![
+        ("model", s(r.model.clone())),
+        ("workers", num(r.workers as f64)),
+        ("workers_per_node", num(r.workers_per_node as f64)),
+        ("identity_share", num(r.identity_share)),
+        ("placed_share", num(r.placed_share)),
+        ("share_delta", num(r.share_delta)),
+        ("placement_gain", num(r.placement_gain)),
+        ("overlapped_ms", num(r.overlapped_ms)),
+    ])
+}
+
+/// Inverse of `placement_row_json`, for rows recalled from the store.
+pub fn placement_row_from_json(v: &Value) -> Result<PlacementBenchRow> {
+    Ok(PlacementBenchRow {
+        model: v.req_str("model")?.to_string(),
+        workers: v.req_usize("workers")?,
+        workers_per_node: v.req_usize("workers_per_node")?,
+        identity_share: v.req_f64("identity_share")?,
+        placed_share: v.req_f64("placed_share")?,
+        share_delta: v.req_f64("share_delta")?,
+        placement_gain: v.req_f64("placement_gain")?,
+        overlapped_ms: v.req_f64("overlapped_ms")?,
+    })
 }
 
 /// Human-readable table over the suite.
@@ -313,21 +491,36 @@ pub fn row_from_json(v: &Value) -> Result<OverlapBenchRow> {
     })
 }
 
-/// Serialize the suite to the tracked trajectory JSON.
-pub fn to_json(rows: &[OverlapBenchRow], steps: usize) -> Value {
+/// Serialize the suite to the tracked trajectory JSON. The placement
+/// regression fields (`min_placement_gain` >= 1.0,
+/// `max_placement_share_delta` <= 0.0) only appear when placement cells
+/// ran, so the overlap-only path keeps its document shape.
+pub fn to_json(rows: &[OverlapBenchRow], placement: &[PlacementBenchRow], steps: usize) -> Value {
     let items: Vec<Value> = rows.iter().map(row_json).collect();
-    obj(vec![
+    let placed_items: Vec<Value> = placement.iter().map(placement_row_json).collect();
+    let mut fields = vec![
         ("bench", s("overlap")),
         ("steps_per_cell", num(steps as f64)),
         ("min_overlap_speedup", num(min_overlap_speedup(rows))),
         ("max_bottleneck_link_share", num(max_bottleneck_link_share(rows))),
         ("rows", arr(items)),
-    ])
+        ("placement_rows", arr(placed_items)),
+    ];
+    if !placement.is_empty() {
+        fields.push(("min_placement_gain", num(min_placement_gain(placement))));
+        fields.push(("max_placement_share_delta", num(max_placement_share_delta(placement))));
+    }
+    obj(fields)
 }
 
 /// Write `BENCH_overlap.json` (or wherever `path` points).
-pub fn write_json(rows: &[OverlapBenchRow], steps: usize, path: &str) -> Result<()> {
-    let text = json_write(&to_json(rows, steps)) + "\n";
+pub fn write_json(
+    rows: &[OverlapBenchRow],
+    placement: &[PlacementBenchRow],
+    steps: usize,
+    path: &str,
+) -> Result<()> {
+    let text = json_write(&to_json(rows, placement, steps)) + "\n";
     std::fs::write(path, text).with_context(|| format!("writing {path}"))?;
     Ok(())
 }
@@ -388,18 +581,63 @@ mod tests {
             overlap_efficiency: 0.9,
             host_ms: 1.5,
         }];
-        let v = to_json(&rows, 4);
+        let v = to_json(&rows, &[sample_placement_row()], 4);
         assert_eq!(v.get("bench").and_then(|b| b.as_str()), Some("overlap"));
         assert_eq!(v.get("min_overlap_speedup").and_then(|x| x.as_f64()), Some(1.25));
         assert_eq!(v.get("max_bottleneck_link_share").and_then(|x| x.as_f64()), Some(0.25));
         let items = v.get("rows").and_then(|r| r.as_array()).unwrap();
         assert_eq!(items[0].get("overlap_speedup").and_then(|x| x.as_f64()), Some(1.25));
         assert_eq!(items[0].get("topology").and_then(|x| x.as_str()), Some("nodes4"));
+        // the placement rows and both gated floors ride along
+        let placed = v.get("placement_rows").and_then(|r| r.as_array()).unwrap();
+        assert_eq!(placed.len(), 1);
+        assert_eq!(v.get("min_placement_gain").and_then(|x| x.as_f64()), Some(1.3));
+        assert_eq!(v.get("max_placement_share_delta").and_then(|x| x.as_f64()), Some(-0.1));
+        // without placement cells the floors stay absent
+        let bare = to_json(&rows, &[], 4);
+        assert!(bare.get("min_placement_gain").is_none());
+        assert!(bare.get("max_placement_share_delta").is_none());
+    }
+
+    fn sample_placement_row() -> PlacementBenchRow {
+        PlacementBenchRow {
+            model: "large-sim".into(),
+            workers: 8,
+            workers_per_node: 4,
+            identity_share: 0.35,
+            placed_share: 0.25,
+            share_delta: -0.1,
+            placement_gain: 1.3,
+            overlapped_ms: 150.0,
+        }
+    }
+
+    #[test]
+    fn placement_spec_is_four_hierarchical_cells() {
+        let cells = placement_spec(4).expand().unwrap();
+        assert_eq!(cells.len(), 4, "2 geometries x D in {{4, 8}}");
+        let mut keys = std::collections::BTreeSet::new();
+        for cell in &cells {
+            let (cfg, workers) = placement_cell_config(cell).unwrap();
+            assert_eq!(cfg.num_experts % workers, 0);
+            let resolved = resolve_placement_cell(cell).unwrap();
+            assert!(resolved.req_str("cfg.name").is_ok());
+            assert!(keys.insert(resolved.canonical()), "duplicate placement cell address");
+        }
+    }
+
+    #[test]
+    fn placement_rows_round_trip_through_the_store_document() {
+        let row = sample_placement_row();
+        let back = placement_row_from_json(&placement_row_json(&row)).unwrap();
+        assert_eq!(format!("{back:?}"), format!("{row:?}"));
     }
 
     #[test]
     fn empty_suite_fails_the_gate() {
         assert_eq!(min_overlap_speedup(&[]), 0.0);
         assert_eq!(max_bottleneck_link_share(&[]), 0.0);
+        assert_eq!(min_placement_gain(&[]), 0.0, "empty placement suite must fail the floor");
+        assert_eq!(max_placement_share_delta(&[]), 1.0);
     }
 }

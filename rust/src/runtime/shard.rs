@@ -41,6 +41,7 @@ use super::native::{
     GridCountsOut, GridSpec, NativeBackend, RealScratch, RoutedLoads, LAYER_SEED_MIX,
     NOISE_SEED_MIX, STEP_SEED_MIX,
 };
+use crate::cluster::placement::{self, PlacementStrategy};
 use crate::cluster::topology::layer_bottleneck_seconds;
 use crate::cluster::{
     simulate_step_observed, simulate_step_overlapped, table2_hardware, HardwareModel,
@@ -49,6 +50,7 @@ use crate::cluster::{
 use crate::config::{ComputeMode, ModelConfig};
 use crate::data::{Batch, Batcher, Split};
 use crate::metrics::RunLog;
+use crate::moe::capacity::{self, ElasticCapacity};
 use crate::moe::{DispatchPlan, DispatchSummary, RouteOutput, RouterSpec, RoutingEngine};
 use crate::util::pool::{self, WorkerPool};
 use crate::util::rng::Rng;
@@ -104,6 +106,14 @@ struct ShardScratch {
     /// recycled `DispatchPlan`s: [`ShardedRun::step`] returns each step's
     /// plans here so the next step reuses their send/demand vectors
     plan_pool: Vec<DispatchPlan>,
+    /// elastic per-(layer, shard) capacity controller (None = static Eq.-2
+    /// capacities, the bitwise-pinned default path)
+    elastic: Option<ElasticCapacity>,
+    /// L x E max-over-workers demand scratch the controller observes
+    demand_max: Vec<u32>,
+    /// D x D step-summed *full* (diagonal included) byte matrix the
+    /// placement search optimizes over
+    full_step: Vec<u64>,
     /// real-compute slabs/grads (empty for simulated variants)
     real: RealScratch,
 }
@@ -118,6 +128,9 @@ pub struct ShardedRun {
     /// workers-per-node grouping for the link-level comm model; defaults
     /// to the hardware model's grouping (flat on the paper's testbed)
     topology: Topology,
+    /// expert-shard -> worker assignment strategy for the comm model
+    /// (Identity = shard s lives on worker s, the pinned default)
+    placement: PlacementStrategy,
     scratch: Mutex<ShardScratch>,
 }
 
@@ -163,6 +176,7 @@ impl ShardedRun {
             pool,
             hw,
             topology,
+            placement: PlacementStrategy::Identity,
             scratch: Mutex::new(ShardScratch { engine, ..ShardScratch::default() }),
         })
     }
@@ -188,6 +202,44 @@ impl ShardedRun {
     pub fn set_workers_per_node(&mut self, wpn: usize) {
         self.hw.workers_per_node = wpn.max(1);
         self.topology = Topology::new(self.workers, self.hw.workers_per_node);
+    }
+
+    /// Switch the per-(layer, shard) capacities from static Eq.-2 to the
+    /// elastic controller (or back). While the controller is cold the
+    /// step stays bitwise identical to the static path; once it has
+    /// observed a step it re-clamps demand under the same global slot
+    /// budget (`D x E x C` slots per layer). Only the simulated-compute
+    /// variants are supported: the real-compute FFN slabs are sized for
+    /// the static Eq.-2 capacity.
+    pub fn set_elastic_capacity(&mut self, on: bool) -> Result<()> {
+        let info = self.native.info();
+        let mut guard = self.scratch.lock().expect("shard scratch poisoned");
+        if !on {
+            guard.elastic = None;
+            return Ok(());
+        }
+        if info.config.compute == ComputeMode::Real {
+            bail!(
+                "elastic capacity is simulated-compute only: the real FFN slabs \
+                 are sized for the static Eq.-2 capacity"
+            );
+        }
+        guard.elastic = Some(ElasticCapacity::new(
+            info.config.layers,
+            info.config.num_experts,
+            self.workers,
+            info.capacity,
+        )?);
+        Ok(())
+    }
+
+    /// Set the expert-shard -> worker assignment strategy the comm model
+    /// prices the all-to-all under. Routing, dispatch accounting, and
+    /// every StepStats series are placement-independent — only
+    /// `layer_comm_ms`, the overlap model, and the placement fields of
+    /// the [`DispatchSummary`] change.
+    pub fn set_placement(&mut self, strategy: PlacementStrategy) {
+        self.placement = strategy;
     }
 
     /// Analytic (pre-observation) cluster prediction for one step at this
@@ -339,6 +391,49 @@ impl ShardedRun {
             }
         }
 
+        // elastic capacity: re-clamp this step's demand under last step's
+        // per-(layer, shard) capacities, then feed the controller this
+        // step's demand. Applying before observing keeps the loop causal
+        // (capacities derive only from strictly earlier steps), and a
+        // cold controller leaves the static counts untouched — bitwise.
+        let mut elastic_applied = false;
+        let mut cap_min = capacity;
+        let mut cap_max = capacity;
+        if scratch.elastic.is_some() {
+            let ShardScratch { elastic, wl_load, wl_demand, wl_dropped, demand_max, .. } =
+                &mut *scratch;
+            let el = elastic.as_mut().expect("elastic checked Some");
+            let eps = experts / d;
+            if el.ready() {
+                elastic_applied = true;
+                cap_min = el.min_cap();
+                cap_max = el.max_cap();
+                for w in 0..d {
+                    for l in 0..layers {
+                        let at = (w * layers + l) * experts;
+                        wl_dropped[w * layers + l] = capacity::apply_caps(
+                            &wl_demand[at..at + experts],
+                            el.caps_layer(l),
+                            eps,
+                            &mut wl_load[at..at + experts],
+                        );
+                    }
+                }
+            }
+            demand_max.clear();
+            demand_max.resize(layers * experts, 0);
+            for w in 0..d {
+                for l in 0..layers {
+                    let at = (w * layers + l) * experts;
+                    for e in 0..experts {
+                        let i = l * experts + e;
+                        demand_max[i] = demand_max[i].max(wl_demand[at + e]);
+                    }
+                }
+            }
+            el.observe(demand_max);
+        }
+
         // drop totals + per-worker loss noise, in worker order — the
         // exact accumulation order (and RNG streams) of both modes
         let mut total_dropped = 0u64;
@@ -427,6 +522,25 @@ impl ShardedRun {
             }
             plans.push(DispatchPlan::new(d, experts, capacity, cfg.hidden, send, demand));
         }
+        // topology-aware placement: search the step-summed *full* byte
+        // matrix (diagonal included — local traffic goes remote under a
+        // permutation) for an expert-shard -> worker assignment, then
+        // price every layer under it. Identity short-circuits to the
+        // pinned default path verbatim.
+        let assign: Option<Vec<usize>> = if self.placement != PlacementStrategy::Identity && d > 1
+        {
+            if scratch.full_step.len() < d * d {
+                scratch.full_step.resize(d * d, 0);
+            }
+            let full = &mut scratch.full_step[..d * d];
+            full.fill(0);
+            for plan in &plans {
+                plan.add_full_bytes_matrix_into(full);
+            }
+            Some(placement::search(full, d, &self.topology, &self.hw, self.placement))
+        } else {
+            None
+        };
         // per-layer link-bottleneck comm for the overlap model: each
         // layer's byte matrix priced on its own (every layer synchronizes
         // at its own all-to-all, so layer matrices are never summed here)
@@ -437,11 +551,31 @@ impl ShardedRun {
         for plan in &plans {
             let link = &mut scratch.link_layer[..d * d];
             link.fill(0);
-            plan.add_bytes_matrix_into(link);
+            match &assign {
+                Some(a) => plan.add_placed_bytes_matrix_into(a, link),
+                None => plan.add_bytes_matrix_into(link),
+            }
             let ms = layer_bottleneck_seconds(link, &self.topology, &self.hw) * 1e3;
             scratch.layer_comm_ms.push(ms);
         }
         let mut summary = DispatchSummary::from_plans(&plans);
+        if scratch.elastic.is_some() {
+            summary.elastic = elastic_applied;
+            summary.capacity_min = cap_min;
+            summary.capacity_max = cap_max;
+        }
+        if let Some(a) = &assign {
+            let full = &scratch.full_step[..d * d];
+            let identity = placement::identity(d);
+            let (id_cost, _) = placement::assignment_cost(full, &identity, &self.topology, &self.hw);
+            let (pl_cost, pl_bytes) = placement::assignment_cost(full, a, &self.topology, &self.hw);
+            summary.placement_gain = if pl_cost > 0.0 { id_cost / pl_cost } else { 1.0 };
+            summary.placed_link_share = if summary.a2a_bytes_total > 0.0 {
+                pl_bytes as f64 / summary.a2a_bytes_total
+            } else {
+                0.0
+            };
+        }
         let observed = ObservedTraffic {
             a2a_bytes_per_layer: summary.a2a_bytes_per_layer,
             shard_balance: summary.shard_balance,
@@ -645,6 +779,147 @@ mod tests {
         assert!(summary.overlap_speedup() >= 1.0);
         assert!((0.0..=1.0).contains(&summary.overlap_efficiency));
         assert!((0.0..=1.0).contains(&summary.bottleneck_link_share()));
+    }
+
+    /// Drive `steps` global steps by hand (same batch stream as `train`),
+    /// returning the summed drop count and every step's stats.
+    fn drive_steps(
+        run: &ShardedRun,
+        cfg: &ModelConfig,
+        seed: u64,
+        steps: usize,
+    ) -> (f64, Vec<StepStats>) {
+        let d = run.workers();
+        let mut state = run.init_state(seed).unwrap();
+        let mut batcher = Batcher::for_config(cfg, Split::Train, seed);
+        let mut all = Vec::with_capacity(steps);
+        let mut drops = 0.0;
+        for _ in 0..steps {
+            let batches: Vec<Batch> = (0..d).map(|_| batcher.next_batch()).collect();
+            let (next, stats) = run.step(state, &batches).unwrap();
+            state = next;
+            drops += stats.total_dropped();
+            all.push(stats);
+        }
+        (drops, all)
+    }
+
+    #[test]
+    fn elastic_capacity_rejects_real_compute() {
+        let cfg = sim_cfg("base-sim-real");
+        let mut run = ShardedRun::new(&cfg, 4).unwrap();
+        let err = run.set_elastic_capacity(true);
+        assert!(err.is_err(), "elastic capacity must bail on ComputeMode::Real");
+    }
+
+    #[test]
+    fn cold_elastic_controller_is_bitwise_static() {
+        // step 1: the controller has observed nothing, so the elastic run
+        // must reproduce the static step bit for bit
+        let cfg = sim_cfg("base-sim"); // aux = 0: persistent router bias
+        let d = 4;
+        let static_run = ShardedRun::new(&cfg, d).unwrap();
+        let mut elastic_run = ShardedRun::new(&cfg, d).unwrap();
+        elastic_run.set_elastic_capacity(true).unwrap();
+        let (_, s) = drive_steps(&static_run, &cfg, 21, 1);
+        let (_, e) = drive_steps(&elastic_run, &cfg, 21, 1);
+        assert_eq!(s[0].loss.to_bits(), e[0].loss.to_bits());
+        let (ds, de) = (s[0].dispatch.as_ref().unwrap(), e[0].dispatch.as_ref().unwrap());
+        assert_eq!(ds.a2a_bytes_step, de.a2a_bytes_step);
+        assert!(!de.elastic, "cold controller must not claim to have reshaped");
+        assert_eq!(de.capacity_min, de.capacity_max, "cold step stays at static C");
+    }
+
+    #[test]
+    fn elastic_capacity_cuts_drops_at_equal_budget() {
+        // base-sim's router bias never decays (aux = 0), so the same
+        // experts stay hot every step: the controller must harvest cold
+        // shards' slots and strictly cut the realized drop count
+        let cfg = sim_cfg("base-sim");
+        let d = 4;
+        let steps = 6;
+        let static_run = ShardedRun::new(&cfg, d).unwrap();
+        let mut elastic_run = ShardedRun::new(&cfg, d).unwrap();
+        elastic_run.set_elastic_capacity(true).unwrap();
+        let (static_drops, s) = drive_steps(&static_run, &cfg, 33, steps);
+        let (elastic_drops, e) = drive_steps(&elastic_run, &cfg, 33, steps);
+        assert!(static_drops > 0.0, "the skewed twin must overflow the static capacity");
+        assert!(
+            elastic_drops < static_drops,
+            "elastic must strictly cut drops: {elastic_drops} vs {static_drops}"
+        );
+        let c = static_run.info().capacity;
+        for (i, stats) in e.iter().enumerate().skip(1) {
+            let sum = stats.dispatch.as_ref().unwrap();
+            assert!(sum.elastic, "warm controller reshapes from step 2 on");
+            assert!(sum.capacity_min >= 1 && sum.capacity_min <= c);
+            assert!(sum.capacity_max >= c, "the hot shard grows, step {i}");
+            assert!(sum.capacity_max > sum.capacity_min, "slots actually moved");
+        }
+        // the static twin never sets the elastic fields
+        for stats in &s {
+            let sum = stats.dispatch.as_ref().unwrap();
+            assert!(!sum.elastic);
+            assert_eq!(sum.capacity_min, c);
+            assert_eq!(sum.capacity_max, c);
+        }
+    }
+
+    #[test]
+    fn placement_changes_comm_pricing_only() {
+        let cfg = sim_cfg("large-sim"); // E = 32, 8 layers
+        let d = 8;
+        let step_once = |strategy: PlacementStrategy| {
+            let mut run = ShardedRun::new(&cfg, d).unwrap();
+            run.set_workers_per_node(4);
+            run.set_placement(strategy);
+            let state = run.init_state(17).unwrap();
+            let mut batcher = Batcher::for_config(&cfg, Split::Train, 17);
+            let batches: Vec<Batch> = (0..d).map(|_| batcher.next_batch()).collect();
+            let (_, stats) = run.step(state, &batches).unwrap();
+            stats
+        };
+        let id = step_once(PlacementStrategy::Identity);
+        let sw = step_once(PlacementStrategy::Swap);
+        // routing, dispatch accounting, and the loss are placement-free
+        assert_eq!(id.loss.to_bits(), sw.loss.to_bits());
+        let (di, ds) = (id.dispatch.as_ref().unwrap(), sw.dispatch.as_ref().unwrap());
+        assert_eq!(di.a2a_bytes_step, ds.a2a_bytes_step);
+        // identity reports the trivial placement
+        assert_eq!(di.placement_gain, 1.0);
+        assert_eq!(di.placed_link_share, di.bottleneck_link_share());
+        // the search's dominance rule makes both bounds structural
+        assert!(ds.placement_gain >= 1.0, "search never loses to identity");
+        assert!(
+            ds.placed_link_share <= di.bottleneck_link_share(),
+            "placed bottleneck share never exceeds identity's"
+        );
+    }
+
+    #[test]
+    fn placement_is_deterministic_across_pool_sizes() {
+        // the search runs single-threaded on merged counts, so the pool
+        // size cannot leak into the assignment or its pricing
+        let cfg = sim_cfg("large-sim");
+        let d = 8;
+        let step_once = |threads: usize| {
+            let pool = Arc::new(WorkerPool::new(threads));
+            let mut run = ShardedRun::with_pool(&cfg, d, pool).unwrap();
+            run.set_workers_per_node(4);
+            run.set_placement(PlacementStrategy::Swap);
+            let state = run.init_state(29).unwrap();
+            let mut batcher = Batcher::for_config(&cfg, Split::Train, 29);
+            let batches: Vec<Batch> = (0..d).map(|_| batcher.next_batch()).collect();
+            let (_, stats) = run.step(state, &batches).unwrap();
+            stats
+        };
+        let a = step_once(1);
+        let b = step_once(3);
+        assert_eq!(a.loss.to_bits(), b.loss.to_bits());
+        let (da, db) = (a.dispatch.as_ref().unwrap(), b.dispatch.as_ref().unwrap());
+        assert_eq!(da.placement_gain.to_bits(), db.placement_gain.to_bits());
+        assert_eq!(da.placed_link_share.to_bits(), db.placed_link_share.to_bits());
+        assert_eq!(da.observed_overlap_ms.to_bits(), db.observed_overlap_ms.to_bits());
     }
 
     #[test]

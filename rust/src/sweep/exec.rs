@@ -77,6 +77,40 @@ impl CellRunner for OverlapRunner {
     }
 }
 
+pub struct ElasticRunner;
+
+impl CellRunner for ElasticRunner {
+    fn kind(&self) -> &'static str {
+        "elastic"
+    }
+    fn version(&self) -> &'static str {
+        dispatch_bench::ELASTIC_STORE_VERSION
+    }
+    fn resolve(&self, cell: &Cell) -> Result<Cell> {
+        dispatch_bench::resolve_elastic_cell(cell)
+    }
+    fn run(&self, cell: &Cell) -> Result<Value> {
+        dispatch_bench::run_elastic_cell(cell)
+    }
+}
+
+pub struct PlacementRunner;
+
+impl CellRunner for PlacementRunner {
+    fn kind(&self) -> &'static str {
+        "placement"
+    }
+    fn version(&self) -> &'static str {
+        overlap_bench::PLACEMENT_STORE_VERSION
+    }
+    fn resolve(&self, cell: &Cell) -> Result<Cell> {
+        overlap_bench::resolve_placement_cell(cell)
+    }
+    fn run(&self, cell: &Cell) -> Result<Value> {
+        overlap_bench::run_placement_cell(cell)
+    }
+}
+
 pub struct FfnRunner;
 
 impl CellRunner for FfnRunner {
@@ -103,10 +137,14 @@ pub fn runner_for(kind: &str) -> Result<Box<dyn CellRunner>> {
         "step" => Ok(Box::new(StepRunner)),
         "overlap" => Ok(Box::new(OverlapRunner)),
         "ffn" => Ok(Box::new(FfnRunner)),
+        "elastic" => Ok(Box::new(ElasticRunner)),
+        "placement" => Ok(Box::new(PlacementRunner)),
         "train" => bail!(
             "train sweeps need a backend provider; use `m6t run` / experiments::Runner ({})",
             experiments::runner::STORE_VERSION
         ),
-        other => bail!("no executor for sweep kind {other:?} (dispatch, step, overlap, ffn)"),
+        other => bail!(
+            "no executor for sweep kind {other:?} (dispatch, step, overlap, ffn, elastic, placement)"
+        ),
     }
 }

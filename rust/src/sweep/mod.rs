@@ -22,7 +22,10 @@ use anyhow::{bail, ensure, Result};
 
 use crate::util::json::{arr, obj, s, Value};
 
-pub use exec::{runner_for, CellRunner, DispatchRunner, FfnRunner, OverlapRunner, StepRunner};
+pub use exec::{
+    runner_for, CellRunner, DispatchRunner, ElasticRunner, FfnRunner, OverlapRunner,
+    PlacementRunner, StepRunner,
+};
 pub use report::OutputFormat;
 pub use spec::{
     config_cell, nums, parse_strategy, strategy_name, strs, Axis, Cell, ParamValue, SweepSpec,
@@ -191,7 +194,8 @@ pub fn attach_provenance(doc: &mut Value, outcome: &SweepOutcome) {
 }
 
 /// Names accepted by `m6t sweep <name>` without a spec file.
-pub const BUILTIN_SPECS: [&str; 4] = ["dispatch", "step", "overlap", "ffn"];
+pub const BUILTIN_SPECS: [&str; 6] =
+    ["dispatch", "step", "overlap", "ffn", "elastic", "placement"];
 
 /// The builtin spec behind each `m6t bench --*` mode. `steps` overrides
 /// the per-family default (12 measured steps; 8 reps for ffn).
@@ -202,7 +206,11 @@ pub fn builtin_spec(name: &str, steps: Option<usize>) -> Result<SweepSpec> {
         "step" => step_bench::spec(steps.unwrap_or(12)),
         "overlap" => overlap_bench::spec(steps.unwrap_or(12)),
         "ffn" => ffn_bench::spec(steps.unwrap_or(8)),
-        other => bail!("unknown builtin sweep {other:?} (dispatch, step, overlap, ffn)"),
+        "elastic" => dispatch_bench::elastic_spec(steps.unwrap_or(12)),
+        "placement" => overlap_bench::placement_spec(steps.unwrap_or(12)),
+        other => bail!(
+            "unknown builtin sweep {other:?} (dispatch, step, overlap, ffn, elastic, placement)"
+        ),
     };
     Ok(spec)
 }
