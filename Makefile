@@ -1,6 +1,6 @@
 # Convenience targets; tier-1 verify is `cargo build --release && cargo test -q`.
 
-.PHONY: build test fmt lint lint-unsafe miri tsan run report artifacts smoke bench-step bench-overlap bench-ffn bench-elastic bench-placement sweep sweep-gc
+.PHONY: build test fmt lint lint-unsafe miri tsan run report artifacts smoke bench-step bench-overlap bench-ffn bench-elastic bench-placement bench-serve sweep sweep-gc
 
 build:
 	cargo build --release
@@ -74,6 +74,15 @@ bench-elastic:
 bench-placement:
 	cargo run --release -- sweep placement
 
+# Open-loop serving simulation: seeded arrival traces ({poisson, bursty,
+# diurnal} x D in {1, 4, 8} x load x skew x drain) through the
+# continuous-batching admission loop, priced by the profiled sharded
+# engine. Writes BENCH_serve.json (`max_p99_over_slo`,
+# `min_goodput_share`; see DESIGN.md §"Serving runtime & open-loop
+# simulation").
+bench-serve:
+	cargo run --release -- serve-sim
+
 # Run every builtin bench family through the sweep engine's
 # content-addressed store (results/store): completed cells are served from
 # the store, so a re-run after an interruption only executes what's
@@ -85,6 +94,7 @@ sweep:
 	cargo run --release -- sweep ffn
 	cargo run --release -- sweep elastic
 	cargo run --release -- sweep placement
+	cargo run --release -- sweep serve
 
 # Prune store cells whose address no longer appears in any builtin spec
 # (training runs are never scanned by a bench-only gc).

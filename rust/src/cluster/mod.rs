@@ -27,7 +27,7 @@ pub mod placement;
 pub mod topology;
 
 pub use placement::PlacementStrategy;
-pub use topology::{simulate_step_overlapped, OverlapOutcome, Topology};
+pub use topology::{OverlapOutcome, Topology};
 
 /// Hardware + framework constants of one simulated worker.
 #[derive(Debug, Clone)]
@@ -150,7 +150,7 @@ impl HardwareModel {
 
 /// Measured expert-parallel traffic from an executed
 /// [`DispatchPlan`](crate::moe::DispatchPlan) step — what
-/// [`simulate_step_observed`] consumes in place of the analytic O(ECM)
+/// [`StepInputs::observed`] consumes in place of the analytic O(ECM)
 /// all-to-all estimate.
 #[derive(Debug, Clone, Copy)]
 pub struct ObservedTraffic {
@@ -189,29 +189,132 @@ impl StepTime {
     }
 }
 
+/// The unified inputs of one step simulation — the single entry point
+/// behind `m6t simulate`, the sharded runtime's observed pricing, the
+/// overlap benches, and serve-sim. It replaces the positional sprawl of
+/// the old `simulate_step_observed` / `simulate_step_overlapped` pair:
+/// grow the model by adding a field here, and [`StepInputs::run`]'s
+/// exhaustive destructure (mirroring [`crate::sweep::config_cell`])
+/// makes every un-priced field a compile error instead of a silently
+/// widening argument list.
+///
+/// Builder-style defaults: [`StepInputs::new`] prices the analytic
+/// serial model under `cfg`'s own routing/capacity; `.observed(..)`
+/// swaps in measured dispatch traffic; `.layer_comm_ms(..)` additionally
+/// runs the overlap pipeline ([`topology`]).
+#[derive(Debug, Clone, Copy)]
+pub struct StepInputs<'a> {
+    /// model geometry (its `workers` field is the expert-parallel D)
+    pub cfg: &'a ModelConfig,
+    /// routing strategy (defaults to `cfg.routing`)
+    pub routing: Routing,
+    /// capacity mode (defaults to `cfg.capacity_mode`)
+    pub capacity_mode: CapacityMode,
+    /// worker hardware + framework constants
+    pub hw: &'a HardwareModel,
+    /// measured dispatch traffic; `None` keeps the analytic O(ECM)
+    /// all-to-all estimate and a perfectly balanced exchange
+    pub observed: Option<&'a ObservedTraffic>,
+    /// each MoE layer's one-direction per-link bottleneck time in ms
+    /// ([`topology::layer_bottleneck_seconds`] x 1e3); `Some` runs the
+    /// overlap pipeline on top of the serial model
+    pub per_layer_comm_ms: Option<&'a [f64]>,
+}
+
+impl<'a> StepInputs<'a> {
+    /// Analytic serial pricing of `cfg` under its own routing/capacity.
+    pub fn new(cfg: &'a ModelConfig, hw: &'a HardwareModel) -> Self {
+        Self {
+            cfg,
+            routing: cfg.routing,
+            capacity_mode: cfg.capacity_mode,
+            hw,
+            observed: None,
+            per_layer_comm_ms: None,
+        }
+    }
+
+    /// Override the routing strategy (calibration sweeps strategies that
+    /// differ from `cfg.routing`).
+    pub fn routing(mut self, routing: Routing) -> Self {
+        self.routing = routing;
+        self
+    }
+
+    /// Override the capacity mode.
+    pub fn capacity_mode(mut self, mode: CapacityMode) -> Self {
+        self.capacity_mode = mode;
+        self
+    }
+
+    /// Price with *measured* dispatch traffic: the observed all-to-all
+    /// byte volume replaces the analytic per-layer O(ECM) estimate, and
+    /// the observed shard imbalance stretches expert compute (the
+    /// most-loaded shard paces the exchange).
+    pub fn observed(mut self, observed: &'a ObservedTraffic) -> Self {
+        self.observed = Some(observed);
+        self
+    }
+
+    /// Also run the compute/dispatch overlap pipeline over these
+    /// per-layer link-bottleneck comm times.
+    pub fn layer_comm_ms(mut self, per_layer_comm_ms: &'a [f64]) -> Self {
+        self.per_layer_comm_ms = Some(per_layer_comm_ms);
+        self
+    }
+
+    /// Run the simulation. The serial decomposition is bitwise the old
+    /// `simulate_step_observed` output, and the overlap verdict (when
+    /// `per_layer_comm_ms` is set) is bitwise the old
+    /// `simulate_step_overlapped` — the determinism pins in
+    /// `rust/tests/topology_model.rs` ride through this call.
+    pub fn run(&self) -> StepOutcome {
+        // exhaustive destructure: a new field that nothing prices is a
+        // compile error, not a latent default
+        let StepInputs { cfg, routing, capacity_mode, hw, observed, per_layer_comm_ms } = *self;
+        let serial = simulate(cfg, routing, capacity_mode, hw, observed);
+        let overlap =
+            per_layer_comm_ms.map(|comm| topology::overlap_outcome(&serial, cfg.layers, hw, comm));
+        StepOutcome { serial, overlap }
+    }
+}
+
+/// What one [`StepInputs::run`] produced: the per-phase serial
+/// decomposition, plus the overlap pipeline's verdict when per-layer
+/// comm was supplied.
+#[derive(Debug, Clone)]
+pub struct StepOutcome {
+    /// per-phase serial step time — the `--no-overlap` baseline/oracle
+    pub serial: StepTime,
+    /// overlap pipeline verdict; `None` when the inputs carried no
+    /// per-layer comm decomposition
+    pub overlap: Option<OverlapOutcome>,
+}
+
+impl StepOutcome {
+    /// Total serial step milliseconds.
+    pub fn serial_ms(&self) -> f64 {
+        self.serial.total_ms()
+    }
+
+    /// The step time this simulation stands behind: overlapped when the
+    /// pipeline ran, serial otherwise. Never exceeds [`Self::serial_ms`].
+    pub fn step_ms(&self) -> f64 {
+        self.overlap.map_or_else(|| self.serial.total_ms(), |o| o.overlapped_ms)
+    }
+}
+
 /// Simulate one training step of `cfg` with the given routing strategy,
-/// using the analytic O(ECM) all-to-all estimate.
+/// using the analytic O(ECM) all-to-all estimate. Thin positional
+/// convenience over [`StepInputs`] for the calibration/Table-2 paths
+/// that sweep routing strategies against a fixed config.
 pub fn simulate_step(
     cfg: &ModelConfig,
     routing: Routing,
     mode: CapacityMode,
     hw: &HardwareModel,
 ) -> StepTime {
-    simulate(cfg, routing, mode, hw, None)
-}
-
-/// Simulate one training step with *measured* dispatch traffic: the
-/// observed all-to-all byte volume replaces the analytic per-layer O(ECM)
-/// estimate, and the observed shard imbalance stretches expert compute
-/// (the most-loaded shard paces the exchange).
-pub fn simulate_step_observed(
-    cfg: &ModelConfig,
-    routing: Routing,
-    mode: CapacityMode,
-    hw: &HardwareModel,
-    observed: &ObservedTraffic,
-) -> StepTime {
-    simulate(cfg, routing, mode, hw, Some(observed))
+    StepInputs::new(cfg, hw).routing(routing).capacity_mode(mode).run().serial
 }
 
 fn simulate(
@@ -383,19 +486,24 @@ mod tests {
             .a2a_bytes_per_layer
             / 2.0;
         let obs = ObservedTraffic { a2a_bytes_per_layer: half, shard_balance: 1.0 };
-        let observed =
-            simulate_step_observed(&base, Routing::TopK(2), CapacityMode::Times1, &hw, &obs);
+        let observe = |traffic: &ObservedTraffic| {
+            StepInputs::new(&base, &hw)
+                .routing(Routing::TopK(2))
+                .capacity_mode(CapacityMode::Times1)
+                .observed(traffic)
+                .run()
+                .serial
+        };
+        let observed = observe(&obs);
         assert!(observed.a2a_ms < analytic.a2a_ms, "less traffic must cost less");
         assert_eq!(observed.expert_ms, analytic.expert_ms, "balanced: no straggler stretch");
         // a 2x-imbalanced exchange doubles the expert critical path
         let skewed = ObservedTraffic { a2a_bytes_per_layer: half, shard_balance: 2.0 };
-        let stretched =
-            simulate_step_observed(&base, Routing::TopK(2), CapacityMode::Times1, &hw, &skewed);
+        let stretched = observe(&skewed);
         assert!((stretched.expert_ms - 2.0 * analytic.expert_ms).abs() < 1e-9);
         // zero observed traffic kills the bandwidth term but not latency
         let silent = ObservedTraffic { a2a_bytes_per_layer: 0.0, shard_balance: 1.0 };
-        let quiet =
-            simulate_step_observed(&base, Routing::TopK(2), CapacityMode::Times1, &hw, &silent);
+        let quiet = observe(&silent);
         assert!(quiet.a2a_ms < analytic.a2a_ms * 0.2, "quiet {}", quiet.a2a_ms);
     }
 
@@ -419,6 +527,24 @@ mod tests {
             .unwrap();
         let got = simulate_step(&base, Routing::TopK(2), CapacityMode::Times1, &ok).total_ms();
         assert!((got - 218.2).abs() < 1e-6);
+    }
+
+    #[test]
+    fn step_inputs_defaults_mirror_config_and_positional_wrapper() {
+        let base = paper::base();
+        let hw = table2_hardware();
+        let inputs = StepInputs::new(&base, &hw);
+        assert_eq!(inputs.routing, base.routing);
+        assert_eq!(inputs.capacity_mode, base.capacity_mode);
+        assert!(inputs.observed.is_none() && inputs.per_layer_comm_ms.is_none());
+        // without per-layer comm there is no overlap verdict, and the
+        // step time the outcome stands behind is the serial total
+        let out = inputs.run();
+        assert!(out.overlap.is_none());
+        assert_eq!(out.step_ms().to_bits(), out.serial_ms().to_bits());
+        // the positional wrapper is the same simulation, bit for bit
+        let wrapped = simulate_step(&base, base.routing, base.capacity_mode, &hw).total_ms();
+        assert_eq!(out.serial_ms().to_bits(), wrapped.to_bits());
     }
 
     #[test]

@@ -1,9 +1,9 @@
 //! Link-level, topology-aware, overlap-capable all-to-all model.
 //!
-//! The aggregate observed model ([`simulate_step_observed`]) prices a
-//! layer's exchange as *total cross bytes through one NIC*, fully
-//! serialized behind compute — a deliberate upper bound. This module
-//! refines both halves:
+//! The aggregate observed model (a [`StepInputs`] run with measured
+//! traffic but no per-layer comm) prices a layer's exchange as *total
+//! cross bytes through one NIC*, fully serialized behind compute — a
+//! deliberate upper bound. This module refines both halves:
 //!
 //!  * **Per-link bottleneck.** A [`DispatchPlan`]'s zero-diagonal D x D
 //!    `bytes_matrix` maps each ordered worker pair onto a link whose tier
@@ -17,23 +17,24 @@
 //!    *every* worker's bytes through a single NIC) — the invariant
 //!    `rust/tests/topology_model.rs` pins.
 //!
-//!  * **Compute/dispatch overlap.** [`simulate_step_overlapped`] reworks
-//!    the serial step into a two-resource pipeline: a compute engine
-//!    (attention + gating + expert FFN + per-layer framework cost) and a
-//!    comm engine (each layer's 4 all-to-all transfers) process layers in
-//!    order, with layer ℓ's dispatch overlapping layer ℓ±1's expert
-//!    compute (overlap depth 1: compute of layer ℓ waits only on comm of
-//!    layer ℓ-2, the double-buffering window). The serial schedule is
-//!    always admissible, so the overlapped time is clamped to never
-//!    exceed it — `overlap_speedup >= 1.0` is structural, not empirical.
+//!  * **Compute/dispatch overlap.** [`overlap_outcome`] (run whenever a
+//!    [`StepInputs`] carries per-layer comm) reworks the serial step into
+//!    a two-resource pipeline: a compute engine (attention + gating +
+//!    expert FFN + per-layer framework cost) and a comm engine (each
+//!    layer's 4 all-to-all transfers) process layers in order, with layer
+//!    ℓ's dispatch overlapping layer ℓ±1's expert compute (overlap depth
+//!    1: compute of layer ℓ waits only on comm of layer ℓ-2, the
+//!    double-buffering window). The serial schedule is always admissible,
+//!    so the overlapped time is clamped to never exceed it —
+//!    `overlap_speedup >= 1.0` is structural, not empirical.
 //!
 //! The `--no-overlap` path is not an approximation of the old model: it
-//! *is* the old model ([`OverlapOutcome::serial_ms`] comes from the same
-//! [`simulate_step_observed`] call, bit for bit).
+//! *is* the old model ([`OverlapOutcome::serial_ms`] is the total of the
+//! very [`StepTime`] the serial simulation produced, bit for bit).
+//!
+//! [`StepInputs`]: super::StepInputs
 
-use crate::config::{CapacityMode, ModelConfig, Routing};
-
-use super::{simulate_step_observed, HardwareModel, ObservedTraffic, StepTime};
+use super::{HardwareModel, StepTime};
 
 /// A workers-per-node grouping of D expert-parallel workers. Worker `w`
 /// lives on node `w / workers_per_node`; links between same-node workers
@@ -137,13 +138,13 @@ pub fn layer_bottleneck_seconds(link_bytes: &[u64], topo: &Topology, hw: &Hardwa
 }
 
 /// The overlap model's verdict on one step: the serial baseline (bitwise
-/// the pre-overlap `simulate_step_observed` total), the pipelined time,
-/// and the decomposition both are built from.
+/// the pre-overlap aggregate-serial total), the pipelined time, and the
+/// decomposition both are built from.
 #[derive(Debug, Clone, Copy)]
 pub struct OverlapOutcome {
     /// today's aggregate-serial observed step time — the `--no-overlap`
-    /// baseline/oracle, produced by the same [`simulate_step_observed`]
-    /// call as before this model existed (bit for bit)
+    /// baseline/oracle, the total of the same serial [`StepTime`] as
+    /// before this model existed (bit for bit)
     pub serial_ms: f64,
     /// two-resource pipeline step time; never exceeds `serial_ms`
     pub overlapped_ms: f64,
@@ -206,27 +207,26 @@ fn decompose(t: &StepTime, layers: usize, hw: &HardwareModel) -> (f64, f64) {
     (compute_layer, tail)
 }
 
-/// Overlap-aware observed step time. `per_layer_comm_ms` is each MoE
-/// layer's **one-direction** per-link bottleneck time in ms
+/// Overlap-aware repricing of an already-simulated serial step — the
+/// pipeline half of a [`StepInputs`](super::StepInputs) run that carries
+/// per-layer comm. `per_layer_comm_ms` is each MoE layer's
+/// **one-direction** per-link bottleneck time in ms
 /// ([`layer_bottleneck_seconds`] x 1e3); the pipeline charges 4 transfers
-/// per layer, exactly like the serial model. The serial baseline is
-/// computed by the unchanged [`simulate_step_observed`] (so `--no-overlap`
+/// per layer, exactly like the serial model. The serial baseline is the
+/// total of the `serial` decomposition handed in (so `--no-overlap`
 /// reproduces pre-overlap numbers bitwise), and the overlapped time is
 /// clamped to it: the serial schedule is always admissible, so modelling
 /// overlap can only help.
-pub fn simulate_step_overlapped(
-    cfg: &ModelConfig,
-    routing: Routing,
-    mode: CapacityMode,
+pub(crate) fn overlap_outcome(
+    serial: &StepTime,
+    layers: usize,
     hw: &HardwareModel,
-    observed: &ObservedTraffic,
     per_layer_comm_ms: &[f64],
 ) -> OverlapOutcome {
-    assert_eq!(per_layer_comm_ms.len(), cfg.layers, "one comm entry per layer");
-    let serial = simulate_step_observed(cfg, routing, mode, hw, observed);
+    assert_eq!(per_layer_comm_ms.len(), layers, "one comm entry per layer");
     let serial_ms = serial.total_ms();
-    let (compute_layer, tail_ms) = decompose(&serial, cfg.layers, hw);
-    let compute_ms = compute_layer * cfg.layers as f64;
+    let (compute_layer, tail_ms) = decompose(serial, layers, hw);
+    let compute_ms = compute_layer * layers as f64;
 
     // one comm-engine job per layer: its 4 transfers at the link-model
     // bottleneck rate (dispatch + combine, forward + backward)
@@ -265,8 +265,8 @@ pub fn simulate_step_overlapped(
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::cluster::table2_hardware;
-    use crate::config::paper;
+    use crate::cluster::{table2_hardware, ObservedTraffic, StepInputs};
+    use crate::config::{paper, CapacityMode, Routing};
 
     #[test]
     fn topology_grouping() {
@@ -355,21 +355,24 @@ mod tests {
         let obs = ObservedTraffic { a2a_bytes_per_layer: 2.0e6, shard_balance: 1.3 };
         // per-link comm strictly cheaper than the aggregate serial charge
         let comm: Vec<f64> = (0..base.layers).map(|l| 0.01 + l as f64 * 0.001).collect();
-        let out = simulate_step_overlapped(
-            &base,
-            Routing::TopK(2),
-            CapacityMode::Times1,
-            &hw,
-            &obs,
-            &comm,
-        );
+        let outcome = StepInputs::new(&base, &hw)
+            .routing(Routing::TopK(2))
+            .capacity_mode(CapacityMode::Times1)
+            .observed(&obs)
+            .layer_comm_ms(&comm)
+            .run();
+        let out = outcome.overlap.expect("comm supplied, pipeline must run");
         assert!(out.overlapped_ms <= out.serial_ms);
         assert!(out.overlap_speedup() >= 1.0);
         assert!((0.0..=1.0).contains(&out.overlap_efficiency));
+        assert_eq!(outcome.step_ms().to_bits(), out.overlapped_ms.to_bits());
         // the serial baseline is the unchanged observed model, bit for bit
-        let oracle =
-            simulate_step_observed(&base, Routing::TopK(2), CapacityMode::Times1, &hw, &obs)
-                .total_ms();
+        let oracle = StepInputs::new(&base, &hw)
+            .routing(Routing::TopK(2))
+            .capacity_mode(CapacityMode::Times1)
+            .observed(&obs)
+            .run()
+            .serial_ms();
         assert_eq!(out.serial_ms.to_bits(), oracle.to_bits());
     }
 
@@ -379,14 +382,14 @@ mod tests {
         let hw = table2_hardware();
         let obs = ObservedTraffic { a2a_bytes_per_layer: 0.0, shard_balance: 1.0 };
         let comm = vec![0.0; base.layers];
-        let out = simulate_step_overlapped(
-            &base,
-            Routing::TopK(1),
-            CapacityMode::TimesK,
-            &hw,
-            &obs,
-            &comm,
-        );
+        let out = StepInputs::new(&base, &hw)
+            .routing(Routing::TopK(1))
+            .capacity_mode(CapacityMode::TimesK)
+            .observed(&obs)
+            .layer_comm_ms(&comm)
+            .run()
+            .overlap
+            .expect("comm supplied, pipeline must run");
         assert_eq!(out.overlap_efficiency, 1.0);
         assert_eq!(out.comm_link_ms, 0.0);
         assert!(out.overlapped_ms <= out.serial_ms);

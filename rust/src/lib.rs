@@ -40,6 +40,7 @@ pub mod metrics;
 pub mod moe;
 pub mod runtime;
 pub mod scaling;
+pub mod serve;
 pub mod sweep;
 pub mod testing;
 pub mod util;

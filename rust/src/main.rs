@@ -14,6 +14,9 @@
 //!                           run the tracked suites (BENCH_*.json)
 //!   sweep                   declarative grid sweeps over the content-addressed
 //!                           experiment store; `m6t sweep gc` prunes dead cells
+//!   serve-sim               open-loop serving simulation over the sharded
+//!                           engine (arrivals x load x skew x drain; writes
+//!                           BENCH_serve.json)
 //!   flops                   Table 1 (analytical per-GPU GFLOPs)
 //!   simulate                Table 2 (calibrated cluster simulator)
 //!   figure fig1|fig3|fig4|fig5|fig6
@@ -56,8 +59,8 @@ fn main() -> ExitCode {
 
 const USAGE: &str = "m6t — M6-T sparse-expert reproduction
 subcommands:
-  list | run | train | eval | bench | sweep | flops | simulate | figure | tables | report
-  | lint-unsafe
+  list | run | train | eval | bench | sweep | serve-sim | flops | simulate | figure | tables
+  | report | lint-unsafe
 run `m6t <subcommand> --help` for options";
 
 fn common(cmd: Command) -> Command {
@@ -87,6 +90,7 @@ fn dispatch(sub: &str, rest: &[String]) -> Result<()> {
         "eval" => cmd_eval(rest),
         "bench" => cmd_bench(rest),
         "sweep" => cmd_sweep(rest),
+        "serve-sim" => cmd_serve_sim(rest),
         "flops" => cmd_flops(rest),
         "simulate" => cmd_simulate(rest),
         "figure" => cmd_figure(rest),
@@ -595,8 +599,43 @@ fn cmd_bench_ffn(args: &m6t::util::cli::Args) -> Result<()> {
     Ok(())
 }
 
-/// `m6t sweep <dispatch|step|overlap|ffn|elastic|placement|spec.json>` —
-/// run a declarative
+/// `m6t serve-sim` — open-loop traffic over the sharded engine: seeded
+/// arrival traces (poisson, bursty, diurnal) through the
+/// continuous-batching admission loop, every batch priced by the
+/// overlap-aware cluster model over traffic profiled from real sharded
+/// steps. Sweeps mode x D in {1, 4, 8} x offered load x hot-expert skew
+/// x worker drain through the `serve` sweep kind and writes
+/// BENCH_serve.json, whose `max_p99_over_slo` (< 1.0) and
+/// `min_goodput_share` (>= 0.9) fields are CI regression gates over the
+/// calm-poisson gate rows.
+fn cmd_serve_sim(rest: &[String]) -> Result<()> {
+    use m6t::serve::bench as serve_bench;
+    let cmd = Command::new("serve-sim", "open-loop serving simulation over the sharded engine")
+        .opt_default("steps", "6", "profiling steps per cell")
+        .opt_default("results", "results", "results directory")
+        .opt_default("out", "BENCH_serve.json", "output JSON path")
+        .flag("force", "re-run sweep cells even when the store already has them")
+        .opt_default("output-format", "stream", "stream|json|markdown summary output");
+    let args = parse(cmd, rest)?;
+    let steps: usize = args.get_or("steps", 6usize).map_err(anyhow::Error::msg)?;
+    let out_path = args.get("out").unwrap().to_string();
+    eprintln!("[bench] open-loop serve sim, {steps} profiling steps per cell");
+    let (rows, outcome) = serve_bench::run_suite(&bench_engine(&args), steps)?;
+    let mut doc = serve_bench::to_json(&rows, steps);
+    sweep::attach_provenance(&mut doc, &outcome);
+    report::emit(out_format(&args)?, &serve_bench::render_table(&rows, steps), Some(&doc));
+    report::write_doc(&doc, &out_path)?;
+    eprintln!(
+        "[bench] gate rows: max p99/SLO {:.3} (ceiling 1.0), min goodput share {:.3} (floor 0.9)",
+        serve_bench::max_p99_over_slo(&rows),
+        serve_bench::min_goodput_share(&rows)
+    );
+    eprintln!("[bench] wrote {out_path}");
+    Ok(())
+}
+
+/// `m6t sweep <dispatch|step|overlap|ffn|elastic|placement|serve|spec.json>`
+/// — run a declarative
 /// grid through the content-addressed experiment store: cells whose
 /// address already holds a completed result are served from the store, so
 /// re-invoking an identical sweep performs zero re-runs and an
@@ -618,7 +657,7 @@ fn cmd_sweep(rest: &[String]) -> Result<()> {
         .first()
         .ok_or_else(|| {
             anyhow::anyhow!(
-                "usage: m6t sweep <dispatch|step|overlap|ffn|elastic|placement|spec.json|gc>"
+                "usage: m6t sweep <dispatch|step|overlap|ffn|elastic|placement|serve|spec.json|gc>"
             )
         })?
         .clone();
@@ -702,6 +741,11 @@ fn render_outcome(outcome: &sweep::SweepOutcome) -> Result<(Table, Value)> {
         "ffn" => {
             let rows = ffn_bench::rows_from(outcome)?;
             Ok((ffn_bench::render_table(&rows, steps), ffn_bench::to_json(&rows, steps)))
+        }
+        "serve" => {
+            use m6t::serve::bench as serve_bench;
+            let rows = serve_bench::rows_from(outcome)?;
+            Ok((serve_bench::render_table(&rows, steps), serve_bench::to_json(&rows, steps)))
         }
         other => anyhow::bail!("no summary renderer for sweep kind {other:?}"),
     }

@@ -298,13 +298,13 @@ pub struct DispatchSummary {
     pub bottleneck_src: usize,
     /// destination shard of the most-loaded link
     pub bottleneck_dst: usize,
-    /// cluster-model step time over the observed traffic
-    /// ([`cluster::simulate_step_observed`](crate::cluster::simulate_step_observed));
-    /// 0 until the driver fills it in
+    /// cluster-model step time over the observed traffic (the serial
+    /// half of a [`cluster::StepInputs`](crate::cluster::StepInputs)
+    /// run); 0 until the driver fills it in
     pub observed_ms: f64,
     /// overlap-aware cluster step time (per-link bottleneck comm
-    /// pipelined against expert compute,
-    /// [`cluster::simulate_step_overlapped`](crate::cluster::simulate_step_overlapped));
+    /// pipelined against expert compute — the overlap half of the same
+    /// [`cluster::StepInputs`](crate::cluster::StepInputs) run);
     /// never exceeds `observed_ms`; 0 until the driver fills it in
     pub observed_overlap_ms: f64,
     /// fraction of link-model comm hidden behind compute, in [0, 1];

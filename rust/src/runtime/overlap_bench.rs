@@ -8,8 +8,8 @@
 //! few [`ShardedRun`] steps and records the serial-vs-overlapped cluster
 //! step time, the overlap efficiency (fraction of link-model comm hidden
 //! behind compute), and the bottleneck link (which worker pair carries
-//! the exchange). Every cell also re-derives the serial number through
-//! [`simulate_step_observed`] and insists on bitwise equality — the
+//! the exchange). Every cell also re-derives the serial number through a
+//! [`StepInputs`] run and insists on bitwise equality — the
 //! `--no-overlap` baseline can never silently drift from the pre-overlap
 //! model.
 //!
@@ -26,7 +26,7 @@
 
 use anyhow::{bail, ensure, Context as _, Result};
 
-use crate::cluster::{simulate_step_observed, table2_hardware, ObservedTraffic};
+use crate::cluster::{table2_hardware, ObservedTraffic, StepInputs};
 use crate::config::{CapacityMode, ModelConfig, Routing};
 use crate::metrics::RunLog;
 use crate::runtime::native::registry;
@@ -188,20 +188,19 @@ pub fn run_cell(cell: &Cell) -> Result<Value> {
     // (the run's own config carries workers = D, which the simulator
     // reads for the latency hop count)
     let run_cfg = run.info().config.clone();
-    let oracle = simulate_step_observed(
-        &run_cfg,
-        cfg.routing,
-        cfg.capacity_mode,
-        &hw,
-        &ObservedTraffic {
-            a2a_bytes_per_layer: dsp.a2a_bytes_per_layer,
-            shard_balance: dsp.shard_balance,
-        },
-    )
-    .total_ms();
+    let observed = ObservedTraffic {
+        a2a_bytes_per_layer: dsp.a2a_bytes_per_layer,
+        shard_balance: dsp.shard_balance,
+    };
+    let oracle = StepInputs::new(&run_cfg, &hw)
+        .routing(cfg.routing)
+        .capacity_mode(cfg.capacity_mode)
+        .observed(&observed)
+        .run()
+        .serial_ms();
     ensure!(
         dsp.observed_ms.to_bits() == oracle.to_bits(),
-        "{} D={workers} {}: serial baseline drifted from simulate_step_observed",
+        "{} D={workers} {}: serial baseline drifted from the StepInputs serial oracle",
         cfg.name,
         topo.name()
     );

@@ -25,8 +25,8 @@
 //!
 //! Each step also emits a [`DispatchSummary`]: per-worker drop counts,
 //! per-shard received/dropped tokens, the cross-worker load c_v, and the
-//! *measured* all-to-all bytes that [`simulate_step_observed`] consumes
-//! in place of the cluster model's analytic O(ECM) estimate.
+//! *measured* all-to-all bytes that the cluster model's [`StepInputs`]
+//! run consumes in place of the analytic O(ECM) estimate.
 #![forbid(unsafe_code)]
 
 use std::sync::{Arc, Mutex};
@@ -43,10 +43,7 @@ use super::native::{
 };
 use crate::cluster::placement::{self, PlacementStrategy};
 use crate::cluster::topology::layer_bottleneck_seconds;
-use crate::cluster::{
-    simulate_step_observed, simulate_step_overlapped, table2_hardware, HardwareModel,
-    ObservedTraffic, Topology,
-};
+use crate::cluster::{table2_hardware, HardwareModel, ObservedTraffic, StepInputs, Topology};
 use crate::config::{ComputeMode, ModelConfig};
 use crate::data::{Batch, Batcher, Split};
 use crate::metrics::RunLog;
@@ -580,17 +577,12 @@ impl ShardedRun {
             a2a_bytes_per_layer: summary.a2a_bytes_per_layer,
             shard_balance: summary.shard_balance,
         };
-        summary.observed_ms =
-            simulate_step_observed(cfg, cfg.routing, cfg.capacity_mode, &self.hw, &observed)
-                .total_ms();
-        let overlap = simulate_step_overlapped(
-            cfg,
-            cfg.routing,
-            cfg.capacity_mode,
-            &self.hw,
-            &observed,
-            &scratch.layer_comm_ms,
-        );
+        let priced = StepInputs::new(cfg, &self.hw)
+            .observed(&observed)
+            .layer_comm_ms(&scratch.layer_comm_ms)
+            .run();
+        let overlap = priced.overlap.expect("layer comm supplied, pipeline must run");
+        summary.observed_ms = priced.serial_ms();
         summary.observed_overlap_ms = overlap.overlapped_ms;
         summary.overlap_efficiency = overlap.overlap_efficiency;
         drop(guard);

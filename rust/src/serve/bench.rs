@@ -1,0 +1,625 @@
+//! Serve bench: open-loop traffic over the sharded engine, swept over
+//! {poisson, bursty, diurnal} x D in {1, 4, 8} x offered load x
+//! hot-expert skew x worker drain — 108 cells, driven through the sweep
+//! engine's content-addressed store as the `serve` kind.
+//!
+//! Shared by `m6t serve-sim` (and the CI smoke + regression gate);
+//! writes the tracked trajectory `BENCH_serve.json`.
+//!
+//! Each cell builds a [`ServiceModel`] by profiling a few real
+//! [`ShardedRun`] steps (routing, all-to-all bytes, per-layer link
+//! bottlenecks — the exact traffic the training-side overlap model
+//! prices), then replays a seeded arrival trace through the
+//! continuous-batching admission loop, pricing every batch size with a
+//! [`StepInputs`] run over that profiled traffic. Skew and drain are
+//! *axes of the same harness*, not separate tools: skew stretches the
+//! straggler shard the way correlated prompts concentrate hot experts,
+//! drain removes workers from the denominator the way a draining host
+//! concentrates traffic on the survivors.
+//!
+//! Every row is a pure function of its cell params — no wall-clock
+//! numbers ride along — so the JSON is seed-pinned bit for bit across
+//! hosts and thread-pool sizes.
+//!
+//! The two gated regression fields (over the `gate` rows: poisson, no
+//! skew, no drain, load <= 0.7 — the regime the policy must handle):
+//!  * `max_p99_over_slo` — worst p99 / SLO; the CI floor keeps it < 1.0;
+//!  * `min_goodput_share` — worst SLO attainment; floored at >= 0.9.
+
+use std::sync::Arc;
+
+use anyhow::{bail, ensure, Context as _, Result};
+
+use crate::cluster::topology::layer_bottleneck_seconds;
+use crate::cluster::{table2_hardware, ObservedTraffic, StepInputs};
+use crate::config::ModelConfig;
+use crate::data::{Batch, Batcher, Split};
+use crate::runtime::native::registry;
+use crate::runtime::shard::ShardedRun;
+use crate::serve::admission::{self, AdmissionPolicy};
+use crate::serve::arrivals::{self, ArrivalMode, ArrivalSpec};
+use crate::sweep::{self, Cell, Engine, ParamValue, SweepOutcome, SweepSpec};
+use crate::util::json::{arr, num, obj, s, write as json_write, Value};
+use crate::util::pool::WorkerPool;
+use crate::util::table::{f2, Table};
+
+/// Code-relevant version tag in every serve cell's store address.
+pub const STORE_VERSION: &str = "serve-v1";
+
+/// SLO as a multiple of the full-batch service time: generous enough
+/// that a healthy cell clears it with one queued batch in flight, tight
+/// enough that overload (load > 1) visibly blows through it.
+pub const SLO_FACTOR: f64 = 6.0;
+
+/// Arrival-trace length per cell — long enough for a stable p99 and for
+/// overload to actually back the queue up.
+pub const REQUESTS_PER_CELL: usize = 512;
+
+/// Gate rows are the cells the CI floors apply to: poisson arrivals, no
+/// skew, no drain, offered load at or below this — the regime where the
+/// admission policy has no excuse.
+pub const GATE_MAX_LOAD: f64 = 0.7;
+
+/// The benched geometry (the E = 16 sim twin every other bench anchors
+/// on).
+const GEOMETRY: &str = "base-sim";
+
+/// The benched grid as a declarative spec: 3 arrival modes x D in
+/// {1, 4, 8} x load in {0.55, 0.9, 1.25} x skew in {0, 0.6} x drain in
+/// {0, 1} — 108 cells, last axis fastest.
+pub fn spec(steps: usize) -> SweepSpec {
+    SweepSpec::new("serve", "serve")
+        .steps(steps)
+        .fix("model", ParamValue::Str(GEOMETRY.to_string()))
+        .fix("requests", ParamValue::Num(REQUESTS_PER_CELL as f64))
+        .axis("mode", sweep::strs(&["poisson", "bursty", "diurnal"]))
+        .axis("workers", sweep::nums(&[1, 4, 8]))
+        .axis("load", vec![ParamValue::Num(0.55), ParamValue::Num(0.9), ParamValue::Num(1.25)])
+        .axis("skew", vec![ParamValue::Num(0.0), ParamValue::Num(0.6)])
+        .axis("drain", sweep::nums(&[0, 1]))
+}
+
+/// Parsed serve cell.
+struct ServeCellParams {
+    cfg: ModelConfig,
+    mode: ArrivalMode,
+    workers: usize,
+    load: f64,
+    skew: f64,
+    drain: usize,
+    requests: usize,
+    steps: usize,
+    seed: u64,
+}
+
+fn cell_params(cell: &Cell) -> Result<ServeCellParams> {
+    let name = cell.req_str("model")?;
+    let Some(cfg) = registry().into_iter().find(|c| c.name == name) else {
+        bail!("serve cell: unknown model {name:?}");
+    };
+    let mode = ArrivalMode::parse(cell.req_str("mode")?)?;
+    let workers = cell.req_usize("workers")?;
+    ensure!(workers >= 1, "serve cell: workers must be >= 1");
+    let load = cell.req_f64("load")?;
+    ensure!(load > 0.0 && load.is_finite(), "serve cell: load must be positive, got {load}");
+    let skew = cell.req_f64("skew")?;
+    ensure!(skew >= 0.0, "serve cell: skew must be non-negative, got {skew}");
+    let drain = cell.req_usize("drain")?;
+    ensure!(drain < workers.max(2), "serve cell: drain {drain} leaves no worker at D={workers}");
+    let requests = cell.req_usize("requests")?;
+    ensure!(requests >= 1, "serve cell: requests must be >= 1");
+    let steps = cell.req_usize("steps")?.max(1);
+    let seed = cell.req_u64("seed")?;
+    Ok(ServeCellParams { cfg, mode, workers, load, skew, drain, requests, steps, seed })
+}
+
+/// Fold the fully-resolved model config into the cell before hashing.
+pub fn resolve_cell(cell: &Cell) -> Result<Cell> {
+    let p = cell_params(cell)?;
+    let mut resolved = cell.clone();
+    resolved.merge(&sweep::config_cell(&p.cfg));
+    Ok(resolved)
+}
+
+/// Batch-size -> service-time model for one (geometry, D, skew, drain)
+/// point, profiled once per cell and then consulted by the admission
+/// loop as a pure lookup.
+///
+/// Requests pack `ceil(n / D)` per worker (data parallel), so service
+/// time is piecewise constant in the request count; each per-worker
+/// batch size is priced by a [`StepInputs`] run with the profiled
+/// traffic scaled to that batch fraction.
+#[derive(Debug, Clone)]
+pub struct ServiceModel {
+    workers: usize,
+    batch_per_worker: usize,
+    per_worker_ms: Vec<f64>,
+}
+
+impl ServiceModel {
+    /// Largest batch one engine step absorbs: per-worker batch x D.
+    pub fn full_batch(&self) -> usize {
+        self.workers * self.batch_per_worker
+    }
+
+    /// The per-worker-batch-size pricing table (index = batch - 1); the
+    /// determinism tests pin these bits across thread-pool sizes.
+    pub fn per_worker_ms(&self) -> &[f64] {
+        &self.per_worker_ms
+    }
+
+    /// Service time of one batch of `requests` requests, milliseconds.
+    pub fn ms(&self, requests: usize) -> f64 {
+        assert!(requests >= 1, "service time of an empty batch");
+        let per_worker = requests.div_ceil(self.workers).min(self.batch_per_worker);
+        self.per_worker_ms[per_worker - 1]
+    }
+}
+
+/// Profile the engine and build the cell's [`ServiceModel`]: run `steps`
+/// real sharded steps, take the final step's dispatch accounting and
+/// per-layer link bottlenecks (the same matrices `runtime::shard` prices
+/// for the training-side overlap model), fold in skew and drain, and
+/// price every per-worker batch size through [`StepInputs`].
+///
+/// `pool` threads an explicit worker pool through (tests use it to pin
+/// the pricing table bitwise across pool sizes); `None` uses the global.
+pub fn profile(
+    cfg: &ModelConfig,
+    workers: usize,
+    steps: usize,
+    seed: u64,
+    skew: f64,
+    drain: usize,
+    pool: Option<Arc<WorkerPool>>,
+) -> Result<ServiceModel> {
+    ensure!(workers >= 1, "serve profile needs at least one worker");
+    let run = match pool {
+        Some(p) => ShardedRun::with_pool(cfg, workers, p)?,
+        None => ShardedRun::new(cfg, workers)?,
+    };
+    let hw = table2_hardware();
+    let topo = run.topology();
+    let d = workers;
+    let mut state = run.init_state(seed)?;
+    let mut batcher = Batcher::for_config(cfg, Split::Train, seed);
+    let mut observed = ObservedTraffic { a2a_bytes_per_layer: 0.0, shard_balance: 1.0 };
+    let mut plans_last = Vec::new();
+    for _ in 0..steps.max(1) {
+        let batches: Vec<Batch> = (0..d).map(|_| batcher.next_batch()).collect();
+        let (next, stats, plans) = run.step_detailed(state, &batches)?;
+        state = next;
+        let dsp =
+            stats.dispatch.as_ref().context("sharded step must carry dispatch accounting")?;
+        observed = ObservedTraffic {
+            a2a_bytes_per_layer: dsp.a2a_bytes_per_layer,
+            shard_balance: dsp.shard_balance,
+        };
+        plans_last = plans;
+    }
+    let mut layer_comm_ms = Vec::with_capacity(plans_last.len());
+    let mut link = vec![0u64; d * d];
+    for plan in &plans_last {
+        link.fill(0);
+        plan.add_bytes_matrix_into(&mut link);
+        layer_comm_ms.push(layer_bottleneck_seconds(&link, &topo, &hw) * 1e3);
+    }
+    let run_cfg = run.info().config.clone();
+    ensure!(
+        layer_comm_ms.len() == run_cfg.layers,
+        "profiled {} layer plans for a {}-layer config",
+        layer_comm_ms.len(),
+        run_cfg.layers
+    );
+    // a draining worker concentrates the survivors' compute and traffic;
+    // hot-expert skew from correlated prompts stretches the straggler
+    // shard beyond what the profiled batch showed
+    let drained = drain.min(d - 1);
+    let drain_stretch = d as f64 / (d - drained) as f64;
+    let mut per_worker_ms = Vec::with_capacity(run_cfg.batch);
+    for per_worker in 1..=run_cfg.batch {
+        let frac = per_worker as f64 / run_cfg.batch as f64;
+        let mut cfg_b = run_cfg.clone();
+        cfg_b.batch = per_worker;
+        let obs_b = ObservedTraffic {
+            a2a_bytes_per_layer: observed.a2a_bytes_per_layer * frac * drain_stretch,
+            shard_balance: observed.shard_balance * (1.0 + skew) * drain_stretch,
+        };
+        let comm_b: Vec<f64> =
+            layer_comm_ms.iter().map(|ms| ms * frac * drain_stretch).collect();
+        let priced = StepInputs::new(&cfg_b, &hw).observed(&obs_b).layer_comm_ms(&comm_b).run();
+        let ms = priced.step_ms();
+        ensure!(ms > 0.0 && ms.is_finite(), "service model priced batch {per_worker} at {ms}");
+        per_worker_ms.push(ms);
+    }
+    Ok(ServiceModel { workers: d, batch_per_worker: run_cfg.batch, per_worker_ms })
+}
+
+/// One measured (mode, D, load, skew, drain) cell.
+#[derive(Debug, Clone)]
+pub struct ServeBenchRow {
+    pub model: String,
+    pub mode: String,
+    pub workers: usize,
+    /// Offered load as a fraction of full-batch engine capacity.
+    pub load: f64,
+    pub skew: f64,
+    pub drain: usize,
+    pub requests: usize,
+    /// Engine full batch (per-worker batch x D) = admission max_batch.
+    pub max_batch: usize,
+    pub service_full_ms: f64,
+    pub max_wait_ms: f64,
+    pub slo_ms: f64,
+    /// Offered requests per second.
+    pub offered_rps: f64,
+    /// Offered rate x SLO attainment — the goodput-vs-offered-load curve.
+    pub goodput_rps: f64,
+    pub p50_ms: f64,
+    pub p99_ms: f64,
+    pub p999_ms: f64,
+    pub mean_queue_ms: f64,
+    pub mean_batch: f64,
+    pub slo_attainment: f64,
+    /// Whether the CI floors apply to this row.
+    pub gate: bool,
+}
+
+impl ServeBenchRow {
+    /// p99 latency as a multiple of the SLO — the per-row regression
+    /// field the CI gate ceilings at 1.0 over the gate rows.
+    pub fn p99_over_slo(&self) -> f64 {
+        self.p99_ms / self.slo_ms
+    }
+}
+
+/// Execute one cell end to end. `pool` is the test hook for pinning rows
+/// bitwise across thread-pool sizes; the runner passes `None`.
+pub fn compute_row(cell: &Cell, pool: Option<Arc<WorkerPool>>) -> Result<ServeBenchRow> {
+    let p = cell_params(cell)?;
+    let service = profile(&p.cfg, p.workers, p.steps, p.seed, p.skew, p.drain, pool)?;
+    let full = service.full_batch();
+    let service_full_ms = service.ms(full);
+    let slo_ms = SLO_FACTOR * service_full_ms;
+    let max_wait_ms = service_full_ms;
+    let rate_per_ms = p.load * full as f64 / service_full_ms;
+    let trace = arrivals::generate(&ArrivalSpec {
+        mode: p.mode,
+        rate_per_ms,
+        requests: p.requests,
+        seed: p.seed,
+    });
+    let policy = AdmissionPolicy { max_batch: full, max_wait_ms };
+    let ledger = admission::simulate(&trace, &policy, |b| service.ms(b));
+    ensure!(
+        ledger.requests.len() == p.requests,
+        "admission served {} of {} requests",
+        ledger.requests.len(),
+        p.requests
+    );
+    let sum = ledger.summary(slo_ms);
+    ensure!(
+        sum.p50_ms <= sum.p99_ms && sum.p99_ms <= sum.p999_ms,
+        "percentiles must be monotone: p50 {} p99 {} p99.9 {}",
+        sum.p50_ms,
+        sum.p99_ms,
+        sum.p999_ms
+    );
+    let gate =
+        p.mode == ArrivalMode::Poisson && p.skew == 0.0 && p.drain == 0 && p.load <= GATE_MAX_LOAD;
+    let offered_rps = rate_per_ms * 1e3;
+    Ok(ServeBenchRow {
+        model: p.cfg.name.clone(),
+        mode: p.mode.name().to_string(),
+        workers: p.workers,
+        load: p.load,
+        skew: p.skew,
+        drain: p.drain,
+        requests: p.requests,
+        max_batch: full,
+        service_full_ms,
+        max_wait_ms,
+        slo_ms,
+        offered_rps,
+        goodput_rps: offered_rps * sum.slo_attainment,
+        p50_ms: sum.p50_ms,
+        p99_ms: sum.p99_ms,
+        p999_ms: sum.p999_ms,
+        mean_queue_ms: sum.mean_queue_ms,
+        mean_batch: sum.mean_batch,
+        slo_attainment: sum.slo_attainment,
+        gate,
+    })
+}
+
+/// The sweep executor's entry point for one cell.
+pub fn run_cell(cell: &Cell) -> Result<Value> {
+    let row = compute_row(cell, None)?;
+    eprintln!(
+        "[bench] serve {} D={} load {:.2} skew {:.1} drain {}: p50 {:.1} / p99 {:.1} / p99.9 {:.1} ms (SLO {:.1}, attain {:.2}, batch {:.1})",
+        row.mode,
+        row.workers,
+        row.load,
+        row.skew,
+        row.drain,
+        row.p50_ms,
+        row.p99_ms,
+        row.p999_ms,
+        row.slo_ms,
+        row.slo_attainment,
+        row.mean_batch
+    );
+    Ok(row_json(&row))
+}
+
+/// Run the full grid through the sweep engine; previously-completed
+/// cells come back from the store.
+pub fn run_suite(engine: &Engine, steps: usize) -> Result<(Vec<ServeBenchRow>, SweepOutcome)> {
+    let outcome = engine.run_spec(&spec(steps), &sweep::ServeRunner)?;
+    let rows = rows_from(&outcome)?;
+    Ok((rows, outcome))
+}
+
+/// Rebuild the typed rows from a sweep outcome's stored documents.
+pub fn rows_from(outcome: &SweepOutcome) -> Result<Vec<ServeBenchRow>> {
+    outcome.outcomes.iter().map(|o| row_from_json(&o.result)).collect()
+}
+
+/// Worst p99 / SLO over the gate rows — the CI gate ceilings this below
+/// 1.0. A huge failing value when no gate rows exist, so an empty or
+/// gate-less JSON fails the gate instead of passing it.
+pub fn max_p99_over_slo(rows: &[ServeBenchRow]) -> f64 {
+    let max = rows
+        .iter()
+        .filter(|r| r.gate)
+        .map(ServeBenchRow::p99_over_slo)
+        .fold(f64::NEG_INFINITY, f64::max);
+    if max.is_finite() {
+        max
+    } else {
+        1e9
+    }
+}
+
+/// Worst SLO attainment over the gate rows — the CI gate floors this at
+/// 0.9. 0 when no gate rows exist, failing the floor.
+pub fn min_goodput_share(rows: &[ServeBenchRow]) -> f64 {
+    let min =
+        rows.iter().filter(|r| r.gate).map(|r| r.slo_attainment).fold(f64::INFINITY, f64::min);
+    if min.is_finite() {
+        min
+    } else {
+        0.0
+    }
+}
+
+/// Human-readable table over the suite.
+pub fn render_table(rows: &[ServeBenchRow], steps: usize) -> Table {
+    let mut t = Table::new(
+        format!(
+            "open-loop serving over the sharded engine, {steps} profile steps/cell, SLO = {SLO_FACTOR}x full-batch service"
+        ),
+        &[
+            "mode", "D", "load", "skew", "drain", "batch", "svc ms", "p50", "p99", "p99.9",
+            "attain", "goodput/s", "gate",
+        ],
+    );
+    for r in rows {
+        t.row(vec![
+            r.mode.clone(),
+            r.workers.to_string(),
+            f2(r.load),
+            f2(r.skew),
+            r.drain.to_string(),
+            f2(r.mean_batch),
+            f2(r.service_full_ms),
+            f2(r.p50_ms),
+            f2(r.p99_ms),
+            f2(r.p999_ms),
+            f2(r.slo_attainment),
+            f2(r.goodput_rps),
+            if r.gate { "*".to_string() } else { String::new() },
+        ]);
+    }
+    t
+}
+
+/// One row as its stored (and emitted) JSON object.
+fn row_json(r: &ServeBenchRow) -> Value {
+    obj(vec![
+        ("model", s(r.model.clone())),
+        ("mode", s(r.mode.clone())),
+        ("workers", num(r.workers as f64)),
+        ("load", num(r.load)),
+        ("skew", num(r.skew)),
+        ("drain", num(r.drain as f64)),
+        ("requests", num(r.requests as f64)),
+        ("max_batch", num(r.max_batch as f64)),
+        ("service_full_ms", num(r.service_full_ms)),
+        ("max_wait_ms", num(r.max_wait_ms)),
+        ("slo_ms", num(r.slo_ms)),
+        ("offered_rps", num(r.offered_rps)),
+        ("goodput_rps", num(r.goodput_rps)),
+        ("p50_ms", num(r.p50_ms)),
+        ("p99_ms", num(r.p99_ms)),
+        ("p999_ms", num(r.p999_ms)),
+        ("p99_over_slo", num(r.p99_over_slo())),
+        ("mean_queue_ms", num(r.mean_queue_ms)),
+        ("mean_batch", num(r.mean_batch)),
+        ("slo_attainment", num(r.slo_attainment)),
+        ("gate", Value::Bool(r.gate)),
+    ])
+}
+
+/// Inverse of `row_json`, for rows recalled from the store.
+pub fn row_from_json(v: &Value) -> Result<ServeBenchRow> {
+    let gate = match v.get("gate") {
+        Some(Value::Bool(b)) => *b,
+        other => bail!("serve row: \"gate\" must be a bool, got {other:?}"),
+    };
+    Ok(ServeBenchRow {
+        model: v.req_str("model")?.to_string(),
+        mode: v.req_str("mode")?.to_string(),
+        workers: v.req_usize("workers")?,
+        load: v.req_f64("load")?,
+        skew: v.req_f64("skew")?,
+        drain: v.req_usize("drain")?,
+        requests: v.req_usize("requests")?,
+        max_batch: v.req_usize("max_batch")?,
+        service_full_ms: v.req_f64("service_full_ms")?,
+        max_wait_ms: v.req_f64("max_wait_ms")?,
+        slo_ms: v.req_f64("slo_ms")?,
+        offered_rps: v.req_f64("offered_rps")?,
+        goodput_rps: v.req_f64("goodput_rps")?,
+        p50_ms: v.req_f64("p50_ms")?,
+        p99_ms: v.req_f64("p99_ms")?,
+        p999_ms: v.req_f64("p999_ms")?,
+        mean_queue_ms: v.req_f64("mean_queue_ms")?,
+        mean_batch: v.req_f64("mean_batch")?,
+        slo_attainment: v.req_f64("slo_attainment")?,
+        gate,
+    })
+}
+
+/// Serialize the suite to the tracked trajectory JSON.
+pub fn to_json(rows: &[ServeBenchRow], steps: usize) -> Value {
+    let items: Vec<Value> = rows.iter().map(row_json).collect();
+    let gate_rows = rows.iter().filter(|r| r.gate).count();
+    obj(vec![
+        ("bench", s("serve")),
+        ("steps_per_cell", num(steps as f64)),
+        ("slo_factor", num(SLO_FACTOR)),
+        ("requests_per_cell", num(REQUESTS_PER_CELL as f64)),
+        ("gate_rows", num(gate_rows as f64)),
+        ("max_p99_over_slo", num(max_p99_over_slo(rows))),
+        ("min_goodput_share", num(min_goodput_share(rows))),
+        ("rows", arr(items)),
+    ])
+}
+
+/// Write `BENCH_serve.json` (or wherever `path` points).
+pub fn write_json(rows: &[ServeBenchRow], steps: usize, path: &str) -> Result<()> {
+    let text = json_write(&to_json(rows, steps)) + "\n";
+    std::fs::write(path, text).with_context(|| format!("writing {path}"))?;
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn grid_covers_the_issue_matrix() {
+        let cells = spec(2).expand().unwrap();
+        assert_eq!(cells.len(), 108, "3 modes x 3 D x 3 loads x 2 skews x 2 drains");
+        let mut keys = std::collections::BTreeSet::new();
+        for cell in &cells {
+            let p = cell_params(cell).unwrap();
+            assert_eq!(p.cfg.name, GEOMETRY);
+            assert_eq!(p.requests, REQUESTS_PER_CELL);
+            let resolved = resolve_cell(cell).unwrap();
+            assert!(resolved.req_str("cfg.name").is_ok(), "config fingerprint folded in");
+            assert!(keys.insert(resolved.canonical()), "duplicate serve cell address");
+        }
+        // the acceptance matrix: {poisson, bursty} x D in {1, 4, 8}
+        for mode in ["poisson", "bursty"] {
+            for d in [1usize, 4, 8] {
+                assert!(
+                    cells.iter().any(|c| c.req_str("mode").unwrap() == mode
+                        && c.req_usize("workers").unwrap() == d),
+                    "grid missing {mode} at D={d}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn gate_rows_are_the_calm_poisson_cells() {
+        let cells = spec(2).expand().unwrap();
+        let gated = cells
+            .iter()
+            .filter(|c| {
+                c.req_str("mode").unwrap() == "poisson"
+                    && c.req_f64("skew").unwrap() == 0.0
+                    && c.req_usize("drain").unwrap() == 0
+                    && c.req_f64("load").unwrap() <= GATE_MAX_LOAD
+            })
+            .count();
+        assert_eq!(gated, 3, "one gate cell per D");
+    }
+
+    fn sample_row(gate: bool) -> ServeBenchRow {
+        ServeBenchRow {
+            model: "base-sim".into(),
+            mode: "poisson".into(),
+            workers: 4,
+            load: 0.55,
+            skew: 0.0,
+            drain: 0,
+            requests: 512,
+            max_batch: 32,
+            service_full_ms: 100.0,
+            max_wait_ms: 100.0,
+            slo_ms: 600.0,
+            offered_rps: 176.0,
+            goodput_rps: 176.0,
+            p50_ms: 150.0,
+            p99_ms: 240.0,
+            p999_ms: 260.0,
+            mean_queue_ms: 90.0,
+            mean_batch: 17.6,
+            slo_attainment: 1.0,
+            gate,
+        }
+    }
+
+    #[test]
+    fn rows_round_trip_through_the_store_document() {
+        for gate in [true, false] {
+            let row = sample_row(gate);
+            let back = row_from_json(&row_json(&row)).unwrap();
+            assert_eq!(format!("{back:?}"), format!("{row:?}"));
+        }
+    }
+
+    #[test]
+    fn json_shape_is_stable() {
+        let rows = vec![sample_row(true)];
+        let v = to_json(&rows, 2);
+        assert_eq!(v.get("bench").and_then(|b| b.as_str()), Some("serve"));
+        assert_eq!(v.get("slo_factor").and_then(|x| x.as_f64()), Some(SLO_FACTOR));
+        assert_eq!(v.get("gate_rows").and_then(|x| x.as_f64()), Some(1.0));
+        assert_eq!(v.get("max_p99_over_slo").and_then(|x| x.as_f64()), Some(0.4));
+        assert_eq!(v.get("min_goodput_share").and_then(|x| x.as_f64()), Some(1.0));
+        let items = v.get("rows").and_then(|r| r.as_array()).unwrap();
+        assert_eq!(items[0].get("p99_over_slo").and_then(|x| x.as_f64()), Some(0.4));
+        assert_eq!(items[0].get("gate").and_then(|x| x.as_bool()), Some(true));
+    }
+
+    #[test]
+    fn empty_or_gateless_suites_fail_the_gate() {
+        assert!(max_p99_over_slo(&[]) >= 1.0, "empty suite must fail the p99 ceiling");
+        assert_eq!(min_goodput_share(&[]), 0.0, "empty suite must fail the goodput floor");
+        // rows exist but none are gated: same failure, the floors can
+        // never silently pass on a grid that dropped its gate cells
+        let ungated = vec![sample_row(false)];
+        assert!(max_p99_over_slo(&ungated) >= 1.0);
+        assert_eq!(min_goodput_share(&ungated), 0.0);
+    }
+
+    #[test]
+    fn service_model_lookup_clamps_and_packs() {
+        let m = ServiceModel {
+            workers: 4,
+            batch_per_worker: 2,
+            per_worker_ms: vec![10.0, 16.0],
+        };
+        assert_eq!(m.full_batch(), 8);
+        assert_eq!(m.ms(1), 10.0, "one request packs one per worker");
+        assert_eq!(m.ms(4), 10.0);
+        assert_eq!(m.ms(5), 16.0, "fifth request spills to a second row");
+        assert_eq!(m.ms(8), 16.0);
+        assert_eq!(m.ms(100), 16.0, "oversized asks clamp to the full batch");
+        assert_eq!(m.per_worker_ms().len(), 2);
+    }
+}

@@ -1,0 +1,144 @@
+//! Per-request latency accounting for the serving simulation.
+//!
+//! The admission loop records every request's full timeline (arrival,
+//! batch launch, completion) plus the per-batch schedule; the
+//! [`Ledger::summary`] fold turns those into the tail-latency and SLO
+//! fields `BENCH_serve.json` reports. Percentiles come from
+//! [`crate::util::stats`]'s interpolated `p50`/`p99`/`p999`, so the p99.9
+//! of a 512-request cell is a real interpolated order statistic, not a
+//! nearest-rank rounding artifact.
+
+use crate::util::stats::{p50, p99, p999};
+
+/// One served request's timeline, all in simulated milliseconds.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct RequestRecord {
+    /// Index into the arrival trace (admission is FIFO, so ids ascend).
+    pub id: usize,
+    pub arrival_ms: f64,
+    /// When the batch carrying this request launched.
+    pub start_ms: f64,
+    /// When that batch completed; the whole batch finishes together.
+    pub done_ms: f64,
+    /// Size of the batch this request rode in.
+    pub batch: usize,
+}
+
+impl RequestRecord {
+    /// Time spent queued before the batch launched.
+    pub fn queue_ms(&self) -> f64 {
+        self.start_ms - self.arrival_ms
+    }
+
+    /// End-to-end latency: queueing plus service.
+    pub fn latency_ms(&self) -> f64 {
+        self.done_ms - self.arrival_ms
+    }
+}
+
+/// One engine batch as scheduled by admission.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct BatchRecord {
+    pub start_ms: f64,
+    pub done_ms: f64,
+    pub size: usize,
+}
+
+/// Everything one simulated run recorded.
+#[derive(Debug, Clone, Default)]
+pub struct Ledger {
+    pub requests: Vec<RequestRecord>,
+    pub batches: Vec<BatchRecord>,
+}
+
+/// The latency distribution of one run against one SLO.
+#[derive(Debug, Clone, Copy)]
+pub struct LatencySummary {
+    pub requests: usize,
+    pub p50_ms: f64,
+    pub p99_ms: f64,
+    pub p999_ms: f64,
+    pub max_ms: f64,
+    pub mean_queue_ms: f64,
+    /// Requests per batch: how much continuous batching actually packed.
+    pub mean_batch: f64,
+    /// Fraction of requests whose end-to-end latency met the SLO.
+    pub slo_attainment: f64,
+    /// When the last batch drained.
+    pub makespan_ms: f64,
+}
+
+impl Ledger {
+    /// Fold the ledger into its latency summary. Panics on an empty
+    /// ledger — a cell with zero requests is a driver bug, not a result.
+    pub fn summary(&self, slo_ms: f64) -> LatencySummary {
+        assert!(!self.requests.is_empty(), "summary over an empty ledger");
+        assert!(slo_ms > 0.0, "the SLO must be positive");
+        let lat: Vec<f64> = self.requests.iter().map(RequestRecord::latency_ms).collect();
+        let n = lat.len() as f64;
+        let within = lat.iter().filter(|&&l| l <= slo_ms).count();
+        LatencySummary {
+            requests: self.requests.len(),
+            p50_ms: p50(&lat),
+            p99_ms: p99(&lat),
+            p999_ms: p999(&lat),
+            max_ms: lat.iter().copied().fold(f64::NEG_INFINITY, f64::max),
+            mean_queue_ms: self.requests.iter().map(RequestRecord::queue_ms).sum::<f64>() / n,
+            mean_batch: n / self.batches.len() as f64,
+            slo_attainment: within as f64 / n,
+            makespan_ms: self.batches.last().map_or(0.0, |b| b.done_ms),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample() -> Ledger {
+        let mut ledger = Ledger::default();
+        // two batches: [0, 1] served 2..5, [2] served 5..9
+        for (id, arrival_ms) in [(0usize, 0.0f64), (1, 1.0)] {
+            ledger.requests.push(RequestRecord {
+                id,
+                arrival_ms,
+                start_ms: 2.0,
+                done_ms: 5.0,
+                batch: 2,
+            });
+        }
+        ledger.requests.push(RequestRecord {
+            id: 2,
+            arrival_ms: 4.0,
+            start_ms: 5.0,
+            done_ms: 9.0,
+            batch: 1,
+        });
+        ledger.batches.push(BatchRecord { start_ms: 2.0, done_ms: 5.0, size: 2 });
+        ledger.batches.push(BatchRecord { start_ms: 5.0, done_ms: 9.0, size: 1 });
+        ledger
+    }
+
+    #[test]
+    fn summary_folds_the_timeline() {
+        let sum = sample().summary(5.0);
+        assert_eq!(sum.requests, 3);
+        // latencies: 5.0, 4.0, 5.0
+        assert_eq!(sum.p50_ms, 5.0);
+        assert_eq!(sum.max_ms, 5.0);
+        assert_eq!(sum.slo_attainment, 1.0);
+        assert!((sum.mean_batch - 1.5).abs() < 1e-12);
+        assert!((sum.mean_queue_ms - 4.0 / 3.0).abs() < 1e-12);
+        assert_eq!(sum.makespan_ms, 9.0);
+        // a tighter SLO drops the two 5 ms requests
+        let tight = sample().summary(4.5);
+        assert!((tight.slo_attainment - 1.0 / 3.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn record_accessors_decompose_latency() {
+        let r = RequestRecord { id: 0, arrival_ms: 1.0, start_ms: 3.0, done_ms: 7.0, batch: 4 };
+        assert_eq!(r.queue_ms(), 2.0);
+        assert_eq!(r.latency_ms(), 6.0);
+    }
+}

@@ -1,0 +1,30 @@
+//! Serving runtime: open-loop traffic simulation over the sharded
+//! engine.
+//!
+//! Training benches ask "how fast is a step"; serving asks "what latency
+//! does a *request* see when steps are shared". This module answers the
+//! second question without any new measurement machinery: a seeded
+//! open-loop arrival generator ([`arrivals`]) feeds a continuous-batching
+//! admission loop ([`admission`]), every request's timeline lands in a
+//! [`ledger::Ledger`], and the per-batch service time comes from the same
+//! overlap-aware cluster model the training side prices steps with — a
+//! [`crate::cluster::StepInputs`] run over traffic profiled from a few
+//! real [`crate::runtime::ShardedRun`] steps ([`bench::ServiceModel`]).
+//!
+//! Everything downstream of the profiled traffic is a pure function of
+//! the cell params, so `BENCH_serve.json` is seed-pinned: same seed, same
+//! rows, bit for bit, regardless of host speed or thread-pool size. The
+//! grid itself ([`bench::spec`]) runs as the `serve` kind of the sweep
+//! engine, so cells cache content-addressed like every other bench.
+//!
+//! See DESIGN.md §"Serving runtime & open-loop simulation".
+
+pub mod admission;
+pub mod arrivals;
+pub mod bench;
+pub mod ledger;
+
+pub use admission::AdmissionPolicy;
+pub use arrivals::{ArrivalMode, ArrivalSpec};
+pub use bench::{ServeBenchRow, ServiceModel};
+pub use ledger::{LatencySummary, Ledger};

@@ -16,6 +16,7 @@ use anyhow::{bail, Result};
 
 use crate::experiments;
 use crate::runtime::{dispatch_bench, ffn_bench, overlap_bench, step_bench};
+use crate::serve::bench as serve_bench;
 use crate::sweep::spec::Cell;
 use crate::util::json::Value;
 
@@ -128,6 +129,23 @@ impl CellRunner for FfnRunner {
     }
 }
 
+pub struct ServeRunner;
+
+impl CellRunner for ServeRunner {
+    fn kind(&self) -> &'static str {
+        "serve"
+    }
+    fn version(&self) -> &'static str {
+        serve_bench::STORE_VERSION
+    }
+    fn resolve(&self, cell: &Cell) -> Result<Cell> {
+        serve_bench::resolve_cell(cell)
+    }
+    fn run(&self, cell: &Cell) -> Result<Value> {
+        serve_bench::run_cell(cell)
+    }
+}
+
 /// The built-in executor for a spec `kind`. Training cells
 /// ([`experiments::Runner`]) need a backend provider and are constructed
 /// directly rather than through this registry.
@@ -139,12 +157,13 @@ pub fn runner_for(kind: &str) -> Result<Box<dyn CellRunner>> {
         "ffn" => Ok(Box::new(FfnRunner)),
         "elastic" => Ok(Box::new(ElasticRunner)),
         "placement" => Ok(Box::new(PlacementRunner)),
+        "serve" => Ok(Box::new(ServeRunner)),
         "train" => bail!(
             "train sweeps need a backend provider; use `m6t run` / experiments::Runner ({})",
             experiments::runner::STORE_VERSION
         ),
         other => bail!(
-            "no executor for sweep kind {other:?} (dispatch, step, overlap, ffn, elastic, placement)"
+            "no executor for sweep kind {other:?} (dispatch, step, overlap, ffn, elastic, placement, serve)"
         ),
     }
 }

@@ -24,7 +24,7 @@ use crate::util::json::{arr, obj, s, Value};
 
 pub use exec::{
     runner_for, CellRunner, DispatchRunner, ElasticRunner, FfnRunner, OverlapRunner,
-    PlacementRunner, StepRunner,
+    PlacementRunner, ServeRunner, StepRunner,
 };
 pub use report::OutputFormat;
 pub use spec::{
@@ -194,11 +194,12 @@ pub fn attach_provenance(doc: &mut Value, outcome: &SweepOutcome) {
 }
 
 /// Names accepted by `m6t sweep <name>` without a spec file.
-pub const BUILTIN_SPECS: [&str; 6] =
-    ["dispatch", "step", "overlap", "ffn", "elastic", "placement"];
+pub const BUILTIN_SPECS: [&str; 7] =
+    ["dispatch", "step", "overlap", "ffn", "elastic", "placement", "serve"];
 
-/// The builtin spec behind each `m6t bench --*` mode. `steps` overrides
-/// the per-family default (12 measured steps; 8 reps for ffn).
+/// The builtin spec behind each `m6t bench --*` mode (and `m6t
+/// serve-sim`). `steps` overrides the per-family default (12 measured
+/// steps; 8 reps for ffn; 6 profile steps for serve).
 pub fn builtin_spec(name: &str, steps: Option<usize>) -> Result<SweepSpec> {
     use crate::runtime::{dispatch_bench, ffn_bench, overlap_bench, step_bench};
     let spec = match name {
@@ -208,8 +209,9 @@ pub fn builtin_spec(name: &str, steps: Option<usize>) -> Result<SweepSpec> {
         "ffn" => ffn_bench::spec(steps.unwrap_or(8)),
         "elastic" => dispatch_bench::elastic_spec(steps.unwrap_or(12)),
         "placement" => overlap_bench::placement_spec(steps.unwrap_or(12)),
+        "serve" => crate::serve::bench::spec(steps.unwrap_or(6)),
         other => bail!(
-            "unknown builtin sweep {other:?} (dispatch, step, overlap, ffn, elastic, placement)"
+            "unknown builtin sweep {other:?} (dispatch, step, overlap, ffn, elastic, placement, serve)"
         ),
     };
     Ok(spec)

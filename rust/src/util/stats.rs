@@ -77,7 +77,14 @@ impl Ema {
     }
 }
 
-/// Percentile over a scratch copy (nearest-rank). p in [0, 100].
+/// Percentile over a scratch copy, linearly interpolated between the two
+/// bracketing order statistics (the "linear"/type-7 rule). p in [0, 100].
+///
+/// The pre-serving-runtime version rounded to the nearest rank, which on
+/// tiny samples biased tails by up to half a sample gap (e.g. the median
+/// of `[1, 2]` came out as 2.0, and a 12-step timing series could not
+/// distinguish p95 from p100); interpolation makes small-sample
+/// percentiles exact and monotone in `p`.
 ///
 /// NaN-tolerant: `f64::total_cmp` sorts NaNs to the end instead of
 /// panicking the way `partial_cmp().unwrap()` used to — a NaN-poisoned
@@ -87,12 +94,19 @@ pub fn percentile(xs: &[f64], p: f64) -> f64 {
     assert!(!xs.is_empty());
     let mut v = xs.to_vec();
     v.sort_by(f64::total_cmp);
-    let rank = ((p / 100.0) * (v.len() as f64 - 1.0)).round() as usize;
-    v[rank.min(v.len() - 1)]
+    let rank = (p / 100.0).clamp(0.0, 1.0) * (v.len() as f64 - 1.0);
+    let lo = rank.floor() as usize;
+    let hi = (lo + 1).min(v.len() - 1);
+    let frac = rank - lo as f64;
+    if frac == 0.0 {
+        v[lo]
+    } else {
+        v[lo] + frac * (v[hi] - v[lo])
+    }
 }
 
 /// Median of a timing series. Thin [`percentile`] wrapper so every
-/// harness spells "p50" the same way (nearest-rank, NaN-tolerant).
+/// harness spells "p50" the same way (interpolated, NaN-tolerant).
 pub fn p50(xs: &[f64]) -> f64 {
     percentile(xs, 50.0)
 }
@@ -100,6 +114,19 @@ pub fn p50(xs: &[f64]) -> f64 {
 /// Tail latency of a timing series; see [`p50`].
 pub fn p95(xs: &[f64]) -> f64 {
     percentile(xs, 95.0)
+}
+
+/// Tail latency of a latency series (serve-sim's SLO percentile); see
+/// [`p50`].
+pub fn p99(xs: &[f64]) -> f64 {
+    percentile(xs, 99.0)
+}
+
+/// Extreme-tail latency (p99.9); see [`p50`]. Only meaningful once the
+/// series holds on the order of a thousand samples — below that it
+/// interpolates between the top two order statistics.
+pub fn p999(xs: &[f64]) -> f64 {
+    percentile(xs, 99.9)
 }
 
 /// Normalize a raw per-step timing series for percentile reads: drop the
@@ -192,6 +219,36 @@ mod tests {
         assert_eq!(percentile(&xs, 0.0), 1.0);
         assert_eq!(percentile(&xs, 50.0), 3.0);
         assert_eq!(percentile(&xs, 100.0), 5.0);
+        // off-rank percentiles interpolate: p25 of five samples sits a
+        // quarter of the way between the 1st and 2nd order statistics
+        assert!((percentile(&xs, 25.0) - 2.0).abs() < 1e-12);
+        assert!((percentile(&xs, 90.0) - 4.6).abs() < 1e-12);
+    }
+
+    #[test]
+    fn percentile_interpolates_tiny_samples() {
+        // regression: nearest-rank rounded the median of [1, 2] up to 2.0
+        assert_eq!(percentile(&[1.0, 2.0], 50.0), 1.5);
+        assert_eq!(percentile(&[10.0, 20.0, 30.0, 40.0], 50.0), 25.0);
+        assert_eq!(percentile(&[7.0], 99.9), 7.0);
+        // out-of-range p clamps instead of indexing out of bounds
+        assert_eq!(percentile(&[1.0, 2.0], -5.0), 1.0);
+        assert_eq!(percentile(&[1.0, 2.0], 120.0), 2.0);
+    }
+
+    #[test]
+    fn tail_percentiles_pin_exact_values_on_known_series() {
+        // 1..=100: rank r maps to value r+1, so p99 = 99 + 0.01 * 99
+        let xs: Vec<f64> = (1..=100).map(f64::from).collect();
+        assert!((p99(&xs) - 99.01).abs() < 1e-9, "p99 {}", p99(&xs));
+        assert!((p999(&xs) - 99.901).abs() < 1e-9, "p999 {}", p999(&xs));
+        assert_eq!(p50(&xs), 50.5);
+        // 0..=1000: the ranks land exactly on order statistics
+        let ys: Vec<f64> = (0..=1000).map(f64::from).collect();
+        assert!((p99(&ys) - 990.0).abs() < 1e-9);
+        assert!((p999(&ys) - 999.0).abs() < 1e-9);
+        // percentiles are monotone in p
+        assert!(p50(&ys) <= p95(&ys) && p95(&ys) <= p99(&ys) && p99(&ys) <= p999(&ys));
     }
 
     #[test]
@@ -199,8 +256,9 @@ mod tests {
         // regression: partial_cmp().unwrap() panicked on NaN input
         let xs = [f64::NAN, 1.0, 3.0, 2.0];
         assert_eq!(percentile(&xs, 0.0), 1.0, "finite values sort below NaN");
-        assert_eq!(percentile(&xs, 50.0), 3.0);
+        assert_eq!(percentile(&xs, 50.0), 2.5, "median interpolates the finite middle");
         assert!(percentile(&xs, 100.0).is_nan(), "NaN occupies the top rank");
+        assert!(percentile(&xs, 99.0).is_nan(), "interpolating against NaN degrades");
         // all-NaN input still must not panic
         assert!(percentile(&[f64::NAN, f64::NAN], 50.0).is_nan());
     }

@@ -1,0 +1,206 @@
+//! Serving-runtime invariants (`serve::*`):
+//!
+//! * arrival generation is a pure function of its spec — same seed, same
+//!   trace, bit for bit, and the modes are genuinely different processes;
+//! * the admission loop's two policy bounds hold on random traces: no
+//!   batch exceeds `max_batch`, and no batch starts later than
+//!   `max(engine_free, oldest + max_wait)` — a request is never parked
+//!   past its deadline while the engine idles;
+//! * the profiled service model and the full bench row are bitwise
+//!   independent of the worker-pool size — `BENCH_serve.json` is
+//!   seed-pinned, not host-pinned;
+//! * the calm poisson gate cells actually clear the CI floors, and
+//!   overload visibly degrades latency the way the goodput curve claims.
+
+use std::sync::Arc;
+
+use m6t::runtime::native::registry;
+use m6t::serve::admission::{self, AdmissionPolicy};
+use m6t::serve::arrivals::{self, ArrivalMode, ArrivalSpec};
+use m6t::serve::bench;
+use m6t::sweep::{Cell, ParamValue};
+use m6t::testing::{check, gen};
+use m6t::util::json::write as json_write;
+use m6t::util::pool::WorkerPool;
+
+fn base_sim() -> m6t::config::ModelConfig {
+    registry().into_iter().find(|c| c.name == "base-sim").unwrap()
+}
+
+fn serve_cell(workers: usize, mode: &str, load: f64, requests: usize) -> Cell {
+    let mut c = Cell::new();
+    c.set("model", ParamValue::Str("base-sim".into()));
+    c.set("mode", ParamValue::Str(mode.into()));
+    c.set("workers", ParamValue::Num(workers as f64));
+    c.set("load", ParamValue::Num(load));
+    c.set("skew", ParamValue::Num(0.0));
+    c.set("drain", ParamValue::Num(0.0));
+    c.set("requests", ParamValue::Num(requests as f64));
+    c.set("steps", ParamValue::Num(2.0));
+    c.set("seed", ParamValue::Num(7.0));
+    c
+}
+
+#[test]
+fn arrival_traces_are_seed_pinned_and_mode_distinct() {
+    for mode in ArrivalMode::all() {
+        let spec = ArrivalSpec { mode, rate_per_ms: 0.5, requests: 400, seed: 11 };
+        let a = arrivals::generate(&spec);
+        let b = arrivals::generate(&spec);
+        assert_eq!(a.len(), 400);
+        for (x, y) in a.iter().zip(&b) {
+            assert_eq!(x.to_bits(), y.to_bits(), "{} trace drifted", mode.name());
+        }
+    }
+    let p = arrivals::generate(&ArrivalSpec {
+        mode: ArrivalMode::Poisson,
+        rate_per_ms: 0.5,
+        requests: 400,
+        seed: 11,
+    });
+    let burst = arrivals::generate(&ArrivalSpec {
+        mode: ArrivalMode::Bursty,
+        rate_per_ms: 0.5,
+        requests: 400,
+        seed: 11,
+    });
+    assert_ne!(p, burst, "modes must be different processes, not relabelings");
+}
+
+#[test]
+fn prop_admission_respects_batch_and_wait_bounds() {
+    check("serve-admission-bounds", 80, |rng, _b| {
+        let mode = ArrivalMode::all()[gen::usize_in(rng, 0, 2)];
+        let rate = 0.05 + rng.uniform() * 2.0;
+        let requests = 20 + gen::usize_in(rng, 0, 280);
+        let trace = arrivals::generate(&ArrivalSpec {
+            mode,
+            rate_per_ms: rate,
+            requests,
+            seed: rng.next_u64(),
+        });
+        let max_batch = 1 + gen::usize_in(rng, 0, 15);
+        let max_wait_ms = rng.uniform() * 20.0;
+        let svc = 0.5 + rng.uniform() * 10.0;
+        let policy = AdmissionPolicy { max_batch, max_wait_ms };
+        let ledger = admission::simulate(&trace, &policy, |b| svc * (1.0 + b as f64 / 8.0));
+        if ledger.requests.len() != requests {
+            return Err(format!("served {} of {requests}", ledger.requests.len()));
+        }
+        let mut engine_free = 0.0f64;
+        let mut next = 0usize;
+        for batch in &ledger.batches {
+            if batch.size == 0 || batch.size > max_batch {
+                return Err(format!("batch size {} vs max {max_batch}", batch.size));
+            }
+            let oldest = trace[next];
+            if oldest > batch.start_ms {
+                return Err("batch launched before its oldest request arrived".into());
+            }
+            // the max-wait property: once the engine is free, the batch
+            // may not sit past the oldest request's deadline
+            let bound = engine_free.max(oldest + max_wait_ms);
+            if batch.start_ms > bound + 1e-9 {
+                return Err(format!(
+                    "batch start {} after bound {bound} (engine_free {engine_free}, oldest {oldest})",
+                    batch.start_ms
+                ));
+            }
+            if batch.start_ms + 1e-12 < engine_free {
+                return Err("batches overlap on the engine".into());
+            }
+            next += batch.size;
+            engine_free = batch.done_ms;
+        }
+        if next != requests {
+            return Err(format!("batches partition {next} of {requests} requests"));
+        }
+        for r in &ledger.requests {
+            if r.arrival_ms > r.start_ms + 1e-12 {
+                return Err(format!("request {} served before it arrived", r.id));
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn service_pricing_is_bitwise_identical_across_pool_sizes() {
+    let cfg = base_sim();
+    for workers in [1usize, 4] {
+        let a = bench::profile(&cfg, workers, 2, 7, 0.0, 0, Some(Arc::new(WorkerPool::new(1))))
+            .unwrap();
+        let b = bench::profile(&cfg, workers, 2, 7, 0.0, 0, Some(Arc::new(WorkerPool::new(3))))
+            .unwrap();
+        assert_eq!(a.full_batch(), b.full_batch());
+        for (x, y) in a.per_worker_ms().iter().zip(b.per_worker_ms()) {
+            assert_eq!(
+                x.to_bits(),
+                y.to_bits(),
+                "D={workers}: service pricing depends on the thread pool"
+            );
+        }
+    }
+}
+
+#[test]
+fn rows_are_pure_functions_of_the_cell() {
+    let cell = serve_cell(4, "bursty", 0.9, 96);
+    let a = bench::compute_row(&cell, Some(Arc::new(WorkerPool::new(1)))).unwrap();
+    let b = bench::compute_row(&cell, Some(Arc::new(WorkerPool::new(3)))).unwrap();
+    assert_eq!(format!("{a:?}"), format!("{b:?}"), "row depends on the thread pool");
+    assert!(a.p50_ms <= a.p99_ms && a.p99_ms <= a.p999_ms);
+    assert!((0.0..=1.0).contains(&a.slo_attainment));
+    assert!(a.goodput_rps <= a.offered_rps + 1e-9);
+    assert!(a.mean_batch >= 1.0 && a.mean_batch <= a.max_batch as f64);
+}
+
+#[test]
+fn run_cell_documents_are_seed_pinned() {
+    let cell = serve_cell(1, "poisson", 0.55, 64);
+    let a = bench::run_cell(&cell).unwrap();
+    let b = bench::run_cell(&cell).unwrap();
+    assert_eq!(json_write(&a), json_write(&b), "stored document must be reproducible");
+}
+
+#[test]
+fn calm_poisson_gate_cells_clear_the_ci_floors() {
+    // the local twin of the BENCH_serve.json regression gate: at the
+    // gated load the policy has no excuse, on every benched D
+    for workers in [1usize, 4, 8] {
+        let row = bench::compute_row(&serve_cell(workers, "poisson", 0.55, 256), None).unwrap();
+        assert!(row.gate, "calm poisson cell must be gated");
+        assert!(
+            row.p99_over_slo() < 1.0,
+            "D={workers}: p99 {} ms blows the {} ms SLO",
+            row.p99_ms,
+            row.slo_ms
+        );
+        assert!(
+            row.slo_attainment >= 0.9,
+            "D={workers}: goodput share {} under the 0.9 floor",
+            row.slo_attainment
+        );
+    }
+}
+
+#[test]
+fn overload_degrades_latency_and_goodput() {
+    let calm = bench::compute_row(&serve_cell(1, "poisson", 0.55, 192), None).unwrap();
+    let hot = bench::compute_row(&serve_cell(1, "poisson", 1.25, 192), None).unwrap();
+    assert!(!hot.gate, "overloaded cells are never gate rows");
+    assert!(hot.p99_ms > calm.p99_ms, "overload must back the queue up");
+    assert!(hot.slo_attainment < calm.slo_attainment);
+    assert!(hot.mean_batch >= calm.mean_batch, "pressure should pack bigger batches");
+}
+
+#[test]
+fn skew_and_drain_stretch_the_service_model() {
+    let cfg = base_sim();
+    let base = bench::profile(&cfg, 4, 2, 7, 0.0, 0, None).unwrap();
+    let skewed = bench::profile(&cfg, 4, 2, 7, 0.6, 0, None).unwrap();
+    let drained = bench::profile(&cfg, 4, 2, 7, 0.0, 1, None).unwrap();
+    let full = base.full_batch();
+    assert!(skewed.ms(full) > base.ms(full), "hot-expert skew must cost something");
+    assert!(drained.ms(full) > base.ms(full), "a draining worker must cost something");
+}

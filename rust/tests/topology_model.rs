@@ -11,13 +11,12 @@
 //!   exchange above flat;
 //! * D = 1 has zero links and zero comm time;
 //! * the `--no-overlap` serial baseline is bitwise the pre-overlap
-//!   `simulate_step_observed` output, and the overlapped time never
-//!   exceeds it (`overlap_speedup >= 1.0` is structural).
+//!   serial model (re-derived through a `StepInputs` run), and the
+//!   overlapped time never exceeds it (`overlap_speedup >= 1.0` is
+//!   structural).
 
 use m6t::cluster::topology::layer_bottleneck_seconds;
-use m6t::cluster::{
-    simulate_step_observed, table2_hardware, HardwareModel, ObservedTraffic, Topology,
-};
+use m6t::cluster::{table2_hardware, HardwareModel, ObservedTraffic, StepInputs, Topology};
 use m6t::config::Routing;
 use m6t::data::{Batch, Batcher, Split};
 use m6t::moe::dispatch::{DispatchPlan, DispatchSummary};
@@ -146,7 +145,8 @@ fn single_worker_has_zero_comm_everywhere() {
 }
 
 /// The `--no-overlap` oracle: the sharded runtime's serial observed-ms
-/// series must be bitwise what the pre-overlap `simulate_step_observed`
+/// series must be bitwise what the pre-overlap serial model (a
+/// `StepInputs` run with observed traffic and no per-layer comm)
 /// produces from the same aggregate traffic — the overlap refactor may
 /// only *add* numbers, never move the old ones.
 #[test]
@@ -162,21 +162,16 @@ fn serial_observed_ms_is_bitwise_the_pre_overlap_model() {
             let (next, stats) = run.step(state, &batches).unwrap();
             state = next;
             let dsp = stats.dispatch.as_ref().unwrap();
-            let oracle = simulate_step_observed(
-                &run_cfg,
-                run_cfg.routing,
-                run_cfg.capacity_mode,
-                &table2_hardware(),
-                &ObservedTraffic {
-                    a2a_bytes_per_layer: dsp.a2a_bytes_per_layer,
-                    shard_balance: dsp.shard_balance,
-                },
-            )
-            .total_ms();
+            let hw = table2_hardware();
+            let observed = ObservedTraffic {
+                a2a_bytes_per_layer: dsp.a2a_bytes_per_layer,
+                shard_balance: dsp.shard_balance,
+            };
+            let oracle = StepInputs::new(&run_cfg, &hw).observed(&observed).run().serial_ms();
             assert_eq!(
                 dsp.observed_ms.to_bits(),
                 oracle.to_bits(),
-                "{name} D={d} step {step}: serial path drifted from simulate_step_observed"
+                "{name} D={d} step {step}: serial path drifted from the StepInputs oracle"
             );
         }
     }
